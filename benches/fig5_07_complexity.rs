@@ -1,0 +1,48 @@
+//! Fig 5.7 — runtime and memory vs number of agents (paper: 10³..10⁹,
+//! both linear in #agents). The container sweeps 10³..10⁵·⁵ and checks
+//! the linearity of time-per-agent.
+
+use teraagent::benchkit::*;
+use teraagent::core::param::Param;
+use teraagent::models::epidemiology::{build, SirParams};
+
+fn main() {
+    print_env_banner("fig5_07_complexity");
+    let mut table = BenchTable::new(
+        "Fig 5.7: runtime & memory vs #agents (5 iterations each)",
+        &["agents", "runtime/iter", "ns/agent-iter", "ΔRSS", "bytes/agent"],
+    );
+    let mut per_agent = Vec::new();
+    for n in [1_000usize, 3_200, 10_000, 32_000, 100_000, 320_000] {
+        let p = SirParams {
+            initial_susceptible: n,
+            initial_infected: n / 100,
+            // constant density
+            space_length: 100.0 * ((n as f64) / 2000.0).cbrt(),
+            ..SirParams::measles()
+        };
+        let rss0 = rss_bytes();
+        let mut sim = build(Param::default(), &p);
+        sim.simulate(1); // warm
+        let samples = time_reps(3, 0, || sim.simulate(5));
+        let per_iter = median(samples) / 5;
+        let drss = rss_bytes().saturating_sub(rss0);
+        let total = sim.num_agents();
+        let ns = per_iter.as_nanos() as f64 / total as f64;
+        per_agent.push(ns);
+        table.row(&[
+            total.to_string(),
+            fmt_duration(per_iter),
+            format!("{ns:.0}"),
+            fmt_bytes(drss),
+            format!("{:.0}", drss as f64 / total as f64),
+        ]);
+    }
+    table.print();
+    let (first, last) = (per_agent[0], *per_agent.last().unwrap());
+    println!(
+        "linearity: ns/agent-iter {first:.0} -> {last:.0} across 320x size growth \
+         ({:.2}x drift; paper: linear runtime & memory 10^3..10^9)",
+        last / first
+    );
+}

@@ -1,0 +1,94 @@
+//! Fig 5.9/5.10 — optimization overview: speedup and memory as the
+//! §5.3-§5.5 optimizations are switched on progressively, across the
+//! benchmark models. Paper: 33.1x-524x (median 159x) over the
+//! everything-off standard implementation (which on their baseline
+//! includes the serial engine); here the "all off" configuration is
+//! the engine with every optional optimization disabled.
+
+use teraagent::benchkit::*;
+use teraagent::core::param::Param;
+use teraagent::models::*;
+
+struct Config {
+    label: &'static str,
+    env: teraagent::core::param::EnvironmentKind,
+    sort: u64,
+    detect_static: bool,
+}
+
+fn main() {
+    print_env_banner("fig5_09_opt_overview");
+    use teraagent::core::param::EnvironmentKind::*;
+    let configs = [
+        Config { label: "kd-tree env (reference)", env: KdTree, sort: 0, detect_static: false },
+        Config { label: "+ optimized uniform grid", env: UniformGrid, sort: 0, detect_static: false },
+        Config { label: "+ morton sort+balance", env: UniformGrid, sort: 10, detect_static: false },
+        Config { label: "+ static-agent skip", env: UniformGrid, sort: 10, detect_static: true },
+    ];
+
+    for (model_name, builder) in [
+        (
+            "cell growth & division",
+            Box::new(|p: Param| {
+                cell_growth::build(p, &cell_growth::CellGrowthParams {
+                    cells_per_dim: 12,
+                    ..Default::default()
+                })
+            }) as Box<dyn Fn(Param) -> teraagent::Simulation>,
+        ),
+        (
+            "cell sorting",
+            Box::new(|p: Param| {
+                cell_sorting::build(p, &cell_sorting::CellSortingParams {
+                    num_cells: 8000,
+                    space_length: 220.0,
+                    ..Default::default()
+                })
+            }),
+        ),
+        (
+            "epidemiology",
+            Box::new(|p: Param| {
+                epidemiology::build(
+                    p,
+                    &epidemiology::SirParams {
+                        initial_susceptible: 20_000,
+                        initial_infected: 200,
+                        space_length: 215.0,
+                        ..epidemiology::SirParams::measles()
+                    },
+                )
+            }),
+        ),
+    ] {
+        let mut table = BenchTable::new(
+            &format!("Fig 5.9 ({model_name}): progressive optimizations, 10 iterations"),
+            &["configuration", "runtime", "speedup vs reference", "ΔRSS"],
+        );
+        let mut reference = None;
+        for cfg in &configs {
+            let mut param = Param::default();
+            param.environment = cfg.env;
+            param.sort_frequency = cfg.sort;
+            param.detect_static_agents = cfg.detect_static;
+            let rss0 = rss_bytes();
+            let mut sim = builder(param);
+            sim.simulate(2);
+            let samples = time_reps(2, 0, || sim.simulate(5));
+            let per = median(samples);
+            let base = *reference.get_or_insert(per);
+            table.row(&[
+                cfg.label.into(),
+                fmt_duration(per),
+                format!("{:.2}x", base.as_secs_f64() / per.as_secs_f64()),
+                fmt_bytes(rss_bytes().saturating_sub(rss0)),
+            ]);
+        }
+        table.print();
+    }
+    println!(
+        "paper: 33.1x-524x (median 159x) vs the all-off standard implementation on 72\n\
+         cores; single-core shape: each optimization is neutral-or-better per model,\n\
+         with the grid and static-detection dominating where the workload allows."
+    );
+}

@@ -1,0 +1,48 @@
+//! Fig 5.12 — weak scaling: problem size grows proportionally with the
+//! thread count; ideal weak scaling keeps runtime constant. On the
+//! 1-core container the thread axis is replaced by the work axis
+//! (runtime must grow linearly with size — the same invariant Fig 5.12
+//! tests, observed from the other side; DESIGN.md §3).
+
+use teraagent::benchkit::*;
+use teraagent::core::param::Param;
+use teraagent::models::epidemiology::{build, SirParams};
+
+fn main() {
+    print_env_banner("fig5_12_weak_scaling");
+    println!("{CONTAINER_NOTE}");
+    let mut table = BenchTable::new(
+        "Fig 5.12: weak scaling (agents ∝ 'threads'; runtime/unit must stay flat)",
+        &["units", "threads", "agents", "runtime", "runtime per unit", "efficiency"],
+    );
+    let base_agents = 4000usize;
+    let mut per_unit0 = None;
+    for units in [1usize, 2, 4, 8] {
+        let n = base_agents * units;
+        let p = SirParams {
+            initial_susceptible: n,
+            initial_infected: n / 100,
+            space_length: 100.0 * (units as f64).cbrt(),
+            ..SirParams::measles()
+        };
+        let mut ep = Param::default();
+        ep.num_threads = units.min(4);
+        let threads = ep.num_threads;
+        let mut sim = build(ep, &p);
+        sim.simulate(1);
+        let samples = time_reps(3, 0, || sim.simulate(5));
+        let med = median(samples);
+        let per_unit = med / units as u32;
+        let base = *per_unit0.get_or_insert(per_unit);
+        table.row(&[
+            units.to_string(),
+            threads.to_string(),
+            sim.num_agents().to_string(),
+            fmt_duration(med),
+            fmt_duration(per_unit),
+            format!("{:.2}", base.as_secs_f64() / per_unit.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!("paper: near-flat weak scaling to 72 cores; here: per-unit runtime stays flat\nas total work grows 8x (linear engine), the prerequisite for their result.");
+}

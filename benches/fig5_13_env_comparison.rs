@@ -1,0 +1,67 @@
+//! Fig 5.13 — neighbor-search algorithm comparison: optimized uniform
+//! grid vs kd-tree vs octree, split into build ("update") and search
+//! phases, across agent densities. Paper: the grid wins for the
+//! agent-based workload (fixed-radius search, rebuild every iteration).
+
+use teraagent::benchkit::*;
+use teraagent::core::parallel::ThreadPool;
+use teraagent::core::random::Rng;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::core::agent::SphericalAgent;
+use teraagent::env::{Environment, KdTreeEnvironment, OctreeEnvironment, UniformGridEnvironment};
+
+fn population(n: usize, space: f64) -> ResourceManager {
+    let mut rm = ResourceManager::new(1);
+    let mut rng = Rng::new(5);
+    for _ in 0..n {
+        rm.add_agent(Box::new(SphericalAgent::with_diameter(
+            rng.uniform3(0.0, space),
+            10.0,
+        )));
+    }
+    rm
+}
+
+fn main() {
+    print_env_banner("fig5_13_env_comparison");
+    for (n, space, label) in [
+        (10_000usize, 215.0, "dense (10k in 215³)"),
+        (50_000, 800.0, "sparse (50k in 800³)"),
+    ] {
+        let rm = population(n, space);
+        let pool = ThreadPool::new(1);
+        let mut table = BenchTable::new(
+            &format!("Fig 5.13 ({label}): build + 1 full search round (radius 15)"),
+            &["environment", "build", "search all agents", "neighbors found"],
+        );
+        let envs: Vec<Box<dyn Environment>> = vec![
+            // box length = search radius: the paper's auto-sizing rule
+            // ("determined automatically ... to ensure all mechanical
+            // interactions are taken into account") -> 27-box scan
+            Box::new(UniformGridEnvironment::new(Some(15.0))),
+            Box::new(KdTreeEnvironment::new()),
+            Box::new(OctreeEnvironment::new()),
+        ];
+        for mut env in envs {
+            let build_time = median(time_reps(3, 1, || env.update(&rm, &pool)));
+            let handles = rm.handles();
+            let mut found = 0u64;
+            let search_time = {
+                let t = std::time::Instant::now();
+                for &h in &handles {
+                    let pos = rm.get(h).position();
+                    env.for_each_neighbor(pos, 15.0, &rm, &mut |_, _, _| found += 1);
+                }
+                t.elapsed()
+            };
+            table.row(&[
+                env.name().into(),
+                fmt_duration(build_time),
+                fmt_duration(search_time),
+                found.to_string(),
+            ]);
+        }
+        table.print();
+    }
+    println!("paper: the uniform grid's O(#agents) build + direct box lookup beats the\ntree structures for this workload; all must return identical neighbor counts.");
+}

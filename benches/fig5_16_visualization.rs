@@ -1,0 +1,58 @@
+//! Fig 5.16 — visualization performance: export throughput for the
+//! ASCII VTK path vs the binary path vs sharded parallel writers,
+//! over growing agent counts.
+
+use teraagent::benchkit::*;
+use teraagent::core::agent::SphericalAgent;
+use teraagent::core::parallel::ThreadPool;
+use teraagent::core::random::Rng;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::vis::{export_agents_binary, export_agents_sharded, export_agents_vtk};
+
+fn population(n: usize) -> ResourceManager {
+    let mut rm = ResourceManager::new(1);
+    let mut rng = Rng::new(8);
+    for _ in 0..n {
+        rm.add_agent(Box::new(SphericalAgent::new(rng.uniform3(0.0, 500.0))));
+    }
+    rm
+}
+
+fn main() {
+    print_env_banner("fig5_16_visualization");
+    let dir = std::env::temp_dir().join(format!("ta_visbench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pool = ThreadPool::new(4);
+    let mut table = BenchTable::new(
+        "Fig 5.16: visualization export throughput",
+        &["agents", "format", "time", "agents/s", "speedup vs vtk"],
+    );
+    for n in [10_000usize, 100_000] {
+        let rm = population(n);
+        let vtk = median(time_reps(2, 1, || {
+            export_agents_vtk(&rm, &dir.join("a.vtk")).unwrap();
+        }));
+        let binary = median(time_reps(2, 1, || {
+            export_agents_binary(&rm, &dir.join("a.tab")).unwrap();
+        }));
+        let sharded = median(time_reps(2, 1, || {
+            export_agents_sharded(&rm, &pool, &dir, 4).unwrap();
+        }));
+        for (fmtname, t) in [("vtk ascii", vtk), ("binary", binary), ("binary sharded x4", sharded)] {
+            table.row(&[
+                n.to_string(),
+                fmtname.into(),
+                fmt_duration(t),
+                format!("{:.2e}", n as f64 / t.as_secs_f64()),
+                format!("{:.1}x", vtk.as_secs_f64() / t.as_secs_f64()),
+            ]);
+        }
+    }
+    table.print();
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "paper (Fig 5.16 + §6.3.6): binary + distributed writers dominate the ASCII\n\
+         single-writer path; TeraAgent's in-situ pipeline reaches 39x with rank-parallel\n\
+         writers (fig6_07 measures that configuration)."
+    );
+}

@@ -1,0 +1,90 @@
+//! §6.3.10 — tailored serialization vs the reflection (ROOT-IO-class)
+//! baseline: serialize up to 296x faster (median 110x), deserialize up
+//! to 73x (median 37x), in the paper. The reflection stand-in here
+//! reproduces the work profile (per-field tags, name strings, schema
+//! walk) — expect one-to-two orders, not exact factors.
+
+use teraagent::benchkit::*;
+use teraagent::core::agent::{Agent, SphericalAgent};
+use teraagent::core::random::Rng;
+use teraagent::distributed::serialize::{reflection, tailored, AgentRegistry};
+use teraagent::models::epidemiology::{Person, State};
+use teraagent::Real3;
+
+fn populations() -> Vec<(&'static str, Vec<Box<dyn Agent>>)> {
+    let mut rng = Rng::new(3);
+    let spheres: Vec<Box<dyn Agent>> = (0..20_000)
+        .map(|i| {
+            let mut a = SphericalAgent::with_diameter(rng.uniform3(0.0, 500.0), 8.0);
+            a.base.uid = i + 1;
+            Box::new(a) as Box<dyn Agent>
+        })
+        .collect();
+    let persons: Vec<Box<dyn Agent>> = (0..20_000)
+        .map(|i| {
+            let mut p = Person::new(rng.uniform3(0.0, 500.0), State::Susceptible);
+            p.base.uid = i + 1;
+            Box::new(p) as Box<dyn Agent>
+        })
+        .collect();
+    let neurites: Vec<Box<dyn Agent>> = (0..20_000)
+        .map(|i| {
+            let a = rng.uniform3(0.0, 500.0);
+            let mut n = teraagent::neuro::NeuriteElement::for_test(a, a + Real3::new(0.0, 0.0, 5.0), 1.5);
+            n.base.uid = i + 1;
+            n.daughters = vec![1, 2];
+            Box::new(n) as Box<dyn Agent>
+        })
+        .collect();
+    vec![("SphericalAgent", spheres), ("Person", persons), ("NeuriteElement", neurites)]
+}
+
+fn main() {
+    print_env_banner("fig6_10_serialization");
+    AgentRegistry::register_builtins();
+    let mut table = BenchTable::new(
+        "§6.3.10: tailored vs reflection serialization (20k agents per type)",
+        &["type", "direction", "reflection", "tailored", "speedup", "bytes refl/tailored"],
+    );
+    for (name, agents) in populations() {
+        // --- serialize ---
+        let t_ser = median(time_reps(3, 1, || {
+            std::hint::black_box(tailored::serialize_batch(agents.iter().map(|a| &**a)));
+        }));
+        let r_ser = median(time_reps(3, 1, || {
+            std::hint::black_box(reflection::serialize_batch(agents.iter().map(|a| &**a)));
+        }));
+        let t_buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+        let r_buf = reflection::serialize_batch(agents.iter().map(|a| &**a));
+        table.row(&[
+            name.into(),
+            "serialize".into(),
+            fmt_duration(r_ser),
+            fmt_duration(t_ser),
+            format!("{:.1}x", r_ser.as_secs_f64() / t_ser.as_secs_f64()),
+            format!("{}/{}", r_buf.len(), t_buf.len()),
+        ]);
+        // --- deserialize ---
+        let t_de = median(time_reps(3, 1, || {
+            std::hint::black_box(tailored::deserialize_batch(&t_buf).unwrap());
+        }));
+        let r_de = median(time_reps(3, 1, || {
+            std::hint::black_box(reflection::deserialize_batch(&r_buf).unwrap());
+        }));
+        table.row(&[
+            name.into(),
+            "deserialize".into(),
+            fmt_duration(r_de),
+            fmt_duration(t_de),
+            format!("{:.1}x", r_de.as_secs_f64() / t_de.as_secs_f64()),
+            "-".into(),
+        ]);
+    }
+    table.print();
+    println!(
+        "paper vs ROOT IO: ser up to 296x (median 110x), deser up to 73x (median 37x).\n\
+         The reflection stand-in lacks ROOT's dictionary lookups and versioning, so the\n\
+         measured factors bound the reproduction from below; the direction and the\n\
+         size advantage of the tailored format are the transferable results."
+    );
+}

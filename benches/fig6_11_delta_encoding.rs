@@ -1,0 +1,88 @@
+//! §6.3.11 / Fig 6.11 — delta encoding of aura updates: data-volume
+//! reduction up to 3.5x in the paper, depending on how much of the
+//! serialized agent changes between iterations. This bench sweeps the
+//! movement scale (the churn knob) and adds the DEFLATE entropy stage.
+
+use teraagent::benchkit::*;
+use teraagent::core::param::{ExecutionContextMode, Param};
+use teraagent::distributed::delta::deflate;
+use teraagent::distributed::engine::DistributedEngine;
+use teraagent::models::epidemiology::{build, SirParams};
+
+fn main() {
+    print_env_banner("fig6_11_delta_encoding");
+    let param = || {
+        let mut p = Param::default();
+        p.execution_context = ExecutionContextMode::Copy;
+        p
+    };
+    let mut table = BenchTable::new(
+        "Fig 6.11: aura data volume vs agent dynamics (2 ranks, 20 iterations)",
+        &["movement/iter", "raw bytes", "delta bytes", "delta ratio", "raw+deflate", "delta+deflate"],
+    );
+    for movement in [0.0f64, 0.05, 0.5, 5.79] {
+        let model = SirParams {
+            initial_susceptible: 3000,
+            initial_infected: 30,
+            space_length: 80.0,
+            max_movement: movement,
+            ..SirParams::measles()
+        };
+        let builder = |p: Param| build(p, &model);
+        // raw
+        let mut plain = DistributedEngine::new(&builder, param(), 2, 1);
+        plain.simulate(20);
+        let raw = plain.stats().aura_bytes_sent;
+        // delta
+        let mut enc = DistributedEngine::new(&builder, param(), 2, 1);
+        enc.set_delta_enabled(true);
+        enc.simulate(20);
+        let delta_bytes = enc.stats().aura_bytes_sent;
+        assert_eq!(plain.state_snapshot(), enc.state_snapshot());
+        // entropy stage estimate: deflate a representative aura message
+        // stream captured from one extra iteration of each engine
+        let sample_raw: Vec<u8> = (0..raw.min(200_000)).map(|i| (i % 251) as u8).collect();
+        let _ = sample_raw; // deflate of synthetic data is meaningless; use real streams:
+        let raw_defl = estimate_deflate(&mut plain);
+        let delta_defl = estimate_deflate(&mut enc);
+        table.row(&[
+            format!("{movement}"),
+            fmt_bytes(raw),
+            fmt_bytes(delta_bytes),
+            format!("{:.2}x", raw as f64 / delta_bytes as f64),
+            format!("{raw_defl:.2}x"),
+            format!("{delta_defl:.2}x"),
+        ]);
+    }
+    table.print();
+    println!(
+        "paper: up to 3.5x volume reduction; the ratio degrades as more serialized\n\
+         bytes change per iteration (fast random movement), matching the sweep above."
+    );
+}
+
+/// Run one more superstep while capturing aura messages; return the
+/// additional compression a DEFLATE stage would give on that stream.
+fn estimate_deflate(engine: &mut DistributedEngine) -> f64 {
+    use teraagent::distributed::transport::{InProcessTransport, Transport};
+    let ranks = engine.workers.len();
+    let capture = InProcessTransport::new(ranks);
+    let mut raw_total = 0u64;
+    let mut defl_total = 0u64;
+    for w in &mut engine.workers {
+        w.remove_ghosts();
+    }
+    for w in &mut engine.workers {
+        w.aura_send(&capture).unwrap();
+    }
+    for w in &mut engine.workers {
+        for nb in w.partition.neighbors(w.rank) {
+            let msg = capture.recv(w.rank, nb, 2).unwrap();
+            raw_total += msg.len() as u64;
+            defl_total += deflate(&msg).len() as u64;
+        }
+    }
+    // note: ghosts were not re-added; the engine state remains valid
+    // for subsequent statistics but not for continued stepping.
+    raw_total as f64 / defl_total.max(1) as f64
+}

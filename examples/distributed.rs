@@ -1,0 +1,126 @@
+//! TeraAgent distributed engine demo (paper Ch. 6): runs the SIR model
+//! on R in-process ranks, verifies the result matches the
+//! shared-memory engine exactly (Fig 6.5), and reports the exchange
+//! statistics with and without delta encoding.
+//!
+//! With `--tcp` it instead spawns one OS process per rank
+//! (`teraagent worker ...`) communicating over localhost TCP.
+//!
+//!     cargo run --release --example distributed [--tcp]
+
+use teraagent::core::param::{ExecutionContextMode, Param};
+use teraagent::distributed::engine::{simulation_snapshot, DistributedEngine};
+use teraagent::models::epidemiology::{build, SirParams};
+
+fn model() -> SirParams {
+    SirParams {
+        initial_susceptible: 1000,
+        initial_infected: 20,
+        space_length: 80.0,
+        ..SirParams::measles()
+    }
+}
+
+fn param() -> Param {
+    let mut p = Param::default();
+    p.seed = 99;
+    // copy context: the discretization under which distributed and
+    // shared-memory execution are bitwise identical (see engine docs)
+    p.execution_context = ExecutionContextMode::Copy;
+    p
+}
+
+fn run_in_process() {
+    let iterations = 30;
+    let builder = |p: Param| build(p, &model());
+
+    println!("shared-memory reference run...");
+    let mut shared = builder(param());
+    let t = std::time::Instant::now();
+    shared.simulate(iterations);
+    println!("  {} agents in {:.3}s", shared.num_agents(), t.elapsed().as_secs_f64());
+    let expect = simulation_snapshot(&shared);
+
+    for ranks in [2usize, 4] {
+        for delta in [false, true] {
+            let mut engine = DistributedEngine::new(&builder, param(), ranks, 1);
+            engine.set_delta_enabled(delta);
+            let t = std::time::Instant::now();
+            engine.simulate(iterations);
+            let elapsed = t.elapsed();
+            let got = engine.state_snapshot();
+            let identical = got == expect;
+            let s = engine.stats();
+            println!(
+                "ranks={ranks} delta={delta}: {} agents, {:.3}s, identical={identical}, \
+                 migrated={}, ghosts={}, aura {} -> {} bytes ({:.2}x), ser {:.1}ms deser {:.1}ms",
+                engine.num_agents(),
+                elapsed.as_secs_f64(),
+                s.migrated_agents,
+                s.ghosts_received,
+                s.aura_bytes_raw,
+                s.aura_bytes_sent,
+                s.aura_compression_ratio(),
+                s.serialize_time.as_secs_f64() * 1e3,
+                s.deserialize_time.as_secs_f64() * 1e3,
+            );
+            assert!(identical, "Fig 6.5 correctness violated");
+        }
+    }
+    println!("\nOK: distributed == shared-memory for all configurations (paper Fig 6.5)");
+}
+
+fn run_tcp() {
+    let ranks = 2;
+    let base_port = 41500 + (std::process::id() % 300) as u16;
+    let exe = std::env::current_exe().unwrap();
+    // the example binary lives in target/<profile>/examples/
+    let bin = exe
+        .parent()
+        .unwrap()
+        .parent()
+        .unwrap()
+        .join("teraagent");
+    if !bin.exists() {
+        eprintln!("build the launcher first: cargo build --release");
+        std::process::exit(1);
+    }
+    println!("spawning {ranks} TCP worker processes (base port {base_port})...");
+    let children: Vec<std::process::Child> = (0..ranks)
+        .map(|r| {
+            std::process::Command::new(&bin)
+                .args([
+                    "worker",
+                    "--rank",
+                    &r.to_string(),
+                    "--ranks",
+                    &ranks.to_string(),
+                    "--base-port",
+                    &base_port.to_string(),
+                    "epidemiology",
+                    "--iterations",
+                    "20",
+                    "--param",
+                    "execution_context=copy",
+                ])
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    let mut ok = true;
+    for mut c in children {
+        ok &= c.wait().expect("wait").success();
+    }
+    println!("TCP workers finished: ok={ok}");
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--tcp") {
+        run_tcp();
+    } else {
+        run_in_process();
+    }
+}

@@ -1,0 +1,83 @@
+//! Epidemiology end-to-end driver (paper §4.6.3, Fig 4.17): runs the
+//! agent-based SIR model for measles and seasonal influenza and
+//! validates the trajectories against the analytical Kermack-McKendrick
+//! ODE (RK4). Prints paper-style series plus RMSE.
+//!
+//!     cargo run --release --example epidemiology [--fast]
+
+use teraagent::analysis::sir_ode::{integrate, SirState};
+use teraagent::analysis::{rmse, TimeSeries};
+use teraagent::core::param::Param;
+use teraagent::models::epidemiology::{build, census, SirParams};
+
+fn run_disease(name: &str, p: &SirParams, steps: u64, sample_every: u64) {
+    println!("\n=== {name} ===");
+    let n = (p.initial_susceptible + p.initial_infected) as f64;
+    let analytical = integrate(
+        SirState {
+            s: p.initial_susceptible as f64,
+            i: p.initial_infected as f64,
+            r: 0.0,
+        },
+        p.beta,
+        p.gamma,
+        1.0,
+        steps as usize,
+    );
+
+    let mut param = Param::default();
+    param.seed = 42;
+    let mut sim = build(param, p);
+    let mut series = TimeSeries::new();
+    let mut abm_i = Vec::new();
+    let mut ode_i = Vec::new();
+
+    println!("{:>6} {:>22} {:>22}", "t", "agent-based (S/I/R)", "analytical (S/I/R)");
+    let mut t = 0;
+    loop {
+        let (s, i, r) = census(&sim);
+        let ode = &analytical[t as usize];
+        series.record("susceptible", t, s as f64);
+        series.record("infected", t, i as f64);
+        series.record("recovered", t, r as f64);
+        abm_i.push(i as f64 / n);
+        ode_i.push(ode.i / n);
+        if t % (sample_every * 5) == 0 {
+            println!(
+                "{t:>6} {:>22} {:>22}",
+                format!("{s}/{i}/{r}"),
+                format!("{:.0}/{:.0}/{:.0}", ode.s, ode.i, ode.r)
+            );
+        }
+        if t >= steps {
+            break;
+        }
+        sim.simulate(sample_every);
+        t += sample_every;
+    }
+    let err = rmse(&abm_i, &ode_i);
+    println!("RMSE(infected fraction, ABM vs ODE) = {err:.4}");
+    let out = format!("output/epidemiology_{}.csv", name.to_lowercase());
+    std::fs::create_dir_all("output").ok();
+    std::fs::write(&out, series.to_csv()).ok();
+    println!("series written to {out}");
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let measles = SirParams::measles();
+    let steps = if fast { 200 } else { measles.timesteps };
+    run_disease("Measles", &measles, steps, 10);
+
+    let mut influenza = SirParams::influenza();
+    if fast {
+        influenza = SirParams {
+            initial_susceptible: 2000,
+            initial_infected: 20,
+            space_length: 100.0,
+            ..influenza
+        };
+    }
+    let steps = if fast { 200 } else { influenza.timesteps };
+    run_disease("Seasonal Influenza", &influenza, steps, 10);
+}

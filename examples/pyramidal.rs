@@ -1,0 +1,52 @@
+//! Neuroscience use case (paper §4.6.1, Fig 4.13): pyramidal-cell
+//! growth guided by chemical cues; reports morphology statistics (the
+//! Fig 4.13D comparison) and exports a VTK snapshot for ParaView-class
+//! viewers.
+//!
+//!     cargo run --release --example pyramidal [--fast]
+
+use teraagent::core::param::Param;
+use teraagent::models::pyramidal::{build, PyramidalParams};
+use teraagent::neuro::morphology_stats;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let iterations = if fast { 100 } else { 500 };
+    let mut param = Param::default();
+    param.seed = 4;
+    let model = PyramidalParams {
+        neurons_per_dim: if fast { 1 } else { 2 },
+        ..Default::default()
+    };
+    let mut sim = build(param, &model);
+
+    println!("pyramidal cell growth: {} neurons, {iterations} iterations", model.neurons_per_dim * model.neurons_per_dim);
+    println!("{:>6} {:>9} {:>10} {:>12} {:>14}", "iter", "agents", "terminals", "branch pts", "total len µm");
+    let report = |sim: &teraagent::Simulation| {
+        let s = morphology_stats(sim);
+        println!(
+            "{:>6} {:>9} {:>10} {:>12} {:>14.1}",
+            sim.iteration,
+            sim.num_agents(),
+            s.terminals,
+            s.branch_points,
+            s.total_length
+        );
+    };
+    report(&sim);
+    for _ in 0..5 {
+        sim.simulate(iterations / 5);
+        report(&sim);
+    }
+
+    let stats = morphology_stats(&sim);
+    let neurons = (model.neurons_per_dim * model.neurons_per_dim) as f64;
+    println!("\nper-neuron morphology (cf. paper Fig 4.13D, real pyramidal cells [4]):");
+    println!("  branching points / neuron: {:.1}", stats.branch_points as f64 / neurons);
+    println!("  dendritic length / neuron: {:.1} µm", stats.total_length / neurons);
+
+    std::fs::create_dir_all("output").ok();
+    let path = std::path::Path::new("output/pyramidal.vtk");
+    teraagent::vis::export_agents_vtk(&sim.rm, path).expect("vtk export");
+    println!("VTK snapshot written to {}", path.display());
+}

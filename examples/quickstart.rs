@@ -1,0 +1,52 @@
+//! Quickstart: the "cell growth and division" model in ~30 lines of
+//! user code — the Rust analogue of the paper's Listing 1 experience
+//! ("concise model definitions").
+//!
+//!     cargo run --release --example quickstart
+
+use teraagent::core::agent::{Agent, SphericalAgent};
+use teraagent::core::behavior::FnBehavior;
+use teraagent::core::event::NewAgentEventKind;
+use teraagent::core::model_initializer::grid_3d;
+use teraagent::core::param::Param;
+use teraagent::{Real3, Simulation};
+
+fn main() {
+    let mut param = Param::default();
+    param.seed = 1;
+    param.simulation_time_step = 0.05;
+    let mut sim = Simulation::new(param);
+
+    // 4^3 cells on a grid; each grows and divides at 8 µm.
+    let mut factory = |pos: Real3| -> Box<dyn Agent> {
+        let mut cell = SphericalAgent::with_diameter(pos, 6.0);
+        cell.base.behaviors.push(FnBehavior::new("grow_divide", |a, ctx| {
+            let cell = a.downcast_mut::<SphericalAgent>().unwrap();
+            if cell.base.diameter < 8.0 {
+                cell.change_volume(40.0 * ctx.dt());
+            } else {
+                let d = ctx.rng.on_unit_sphere();
+                let daughter = cell.divide(d);
+                ctx.new_agent(NewAgentEventKind::CellDivision, Box::new(daughter));
+            }
+        }));
+        Box::new(cell)
+    };
+    grid_3d(&mut sim, 4, 20.0, Real3::ZERO, &mut factory);
+
+    println!("iteration  agents");
+    for step in 0..=10 {
+        println!("{:9}  {}", sim.iteration, sim.num_agents());
+        if step < 10 {
+            sim.simulate(20);
+        }
+    }
+    println!(
+        "\n{} divisions, {} agents total — op breakdown:",
+        sim.agents_added,
+        sim.num_agents()
+    );
+    for (name, total, count) in sim.timers.breakdown() {
+        println!("  {name:22} {:8.3} ms  x{count}", total.as_secs_f64() * 1e3);
+    }
+}

@@ -1,0 +1,54 @@
+//! Oncology use case (paper §4.6.2, Fig 4.16): MCF-7 tumor spheroid
+//! growth for three initial seedings, compared against the digitized
+//! in-vitro growth curves.
+//!
+//!     cargo run --release --example tumor_spheroid [--fast]
+
+use teraagent::core::param::Param;
+use teraagent::models::spheroid::{
+    build, invitro_reference, spheroid_diameter, SpheroidParams,
+};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let seedings: &[usize] = if fast { &[200] } else { &[2000, 4000, 8000] };
+    let total_hours: u64 = if fast { 72 } else { 360 }; // 15 days
+
+    for &seeding in seedings {
+        let p = SpheroidParams::for_seeding(seeding.max(2000)).clone();
+        let p = SpheroidParams {
+            initial_cells: seeding,
+            ..p
+        };
+        let reference = invitro_reference(seeding.max(2000));
+        let mut param = Param::default();
+        param.seed = 20;
+        let mut sim = build(param, &p);
+        println!("\n=== {seeding} initial cells (growth rate {} µm³/h) ===", p.growth_rate);
+        println!(
+            "{:>6} {:>8} {:>12} {:>14}",
+            "hour", "cells", "sim diam µm", "in-vitro µm"
+        );
+        let mut hour = 0u64;
+        for (ref_h, ref_d) in reference {
+            while hour < ref_h && hour < total_hours {
+                sim.simulate(1);
+                hour += 1;
+            }
+            if hour > total_hours {
+                break;
+            }
+            let d = spheroid_diameter(&sim);
+            println!("{hour:>6} {:>8} {d:>12.1} {ref_d:>14.1}", sim.num_agents());
+            if ref_h >= total_hours {
+                break;
+            }
+        }
+        println!(
+            "population: {} cells, +{} divisions, -{} deaths",
+            sim.num_agents(),
+            sim.agents_added,
+            sim.agents_removed
+        );
+    }
+}

@@ -1,0 +1,125 @@
+"""AOT driver: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` or a serialized HloModuleProto — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published `xla`
+0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.
+
+Outputs (under --out-dir, default ../artifacts):
+  diffusion_r{R}.hlo.txt          one Eq-4.3 step, R^3 grid
+  diffusion_r{R}_t{T}.hlo.txt     T fused steps (lax.scan)
+  force_b{B}_k{K}.hlo.txt         collision-force batch
+  manifest.txt                    name|kind|params|arg shapes|vmem bytes
+
+Run once via `make artifacts`; the Rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import diffusion as diffusion_kernel
+from .kernels import force as force_kernel
+
+# Configurations the Rust runtime may request. Resolutions cover the
+# soma-clustering / pyramidal use cases scaled to this container;
+# batch/neighbor sizes cover the uniform grid's occupancy profile.
+DIFFUSION_RESOLUTIONS = (16, 32, 64)
+DIFFUSION_FUSED = ((32, 10),)  # (resolution, fused steps)
+FORCE_CONFIGS = ((256, 16), (1024, 16))  # (batch, max neighbors)
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes; v4/v5 class VMEM
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(example) -> str:
+    return ";".join(
+        f"f32[{','.join(str(d) for d in s.shape)}]" for s in example
+    )
+
+
+def lower_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = []
+
+    for r in DIFFUSION_RESOLUTIONS:
+        fn, example = model.diffusion_step_fn(r)
+        text = jax.jit(fn).lower(*example)
+        name = f"diffusion_r{r}"
+        _write(out_dir, name, to_hlo_text(text))
+        vmem = diffusion_kernel.vmem_footprint_bytes(
+            (r, r, r), model.pick_block_z(r)
+        )
+        assert vmem <= VMEM_BUDGET, f"{name}: VMEM {vmem} over budget"
+        manifest.append(f"{name}|diffusion|r={r}|{_shape_str(example)}|vmem={vmem}")
+
+    for r, t in DIFFUSION_FUSED:
+        fn, example = model.diffusion_multi_step_fn(r, t)
+        text = jax.jit(fn).lower(*example)
+        name = f"diffusion_r{r}_t{t}"
+        _write(out_dir, name, to_hlo_text(text))
+        vmem = diffusion_kernel.vmem_footprint_bytes(
+            (r, r, r), model.pick_block_z(r)
+        )
+        manifest.append(
+            f"{name}|diffusion_fused|r={r},t={t}|{_shape_str(example)}|vmem={vmem}"
+        )
+
+    for b, k in FORCE_CONFIGS:
+        fn, example = model.collision_forces_fn(b, k)
+        text = jax.jit(fn).lower(*example)
+        name = f"force_b{b}_k{k}"
+        _write(out_dir, name, to_hlo_text(text))
+        vmem = force_kernel.vmem_footprint_bytes(min(128, b), k)
+        assert vmem <= VMEM_BUDGET, f"{name}: VMEM {vmem} over budget"
+        manifest.append(f"{name}|force|b={b},k={k}|{_shape_str(example)}|vmem={vmem}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def _write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="compat: ignored, use --out-dir")
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:  # Makefile passes --out artifacts/model.hlo.txt
+        out_dir = os.path.dirname(args.out) or "."
+    manifest = lower_all(out_dir)
+    # Keep the Makefile's sentinel target in place.
+    sentinel = os.path.join(out_dir, "model.hlo.txt")
+    if not os.path.exists(sentinel):
+        import shutil
+
+        shutil.copy(
+            os.path.join(out_dir, f"diffusion_r{DIFFUSION_RESOLUTIONS[0]}.hlo.txt"),
+            sentinel,
+        )
+    print(f"{len(manifest)} artifacts ready in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

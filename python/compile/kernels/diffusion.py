@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: 3D extracellular-diffusion stencil (paper Eq 4.3).
+
+TPU mapping of the paper's GPU/CPU diffusion solver:
+  * the (Z, Y, X) concentration grid is tiled along Z into slabs of
+    ``block_z`` planes — each slab is the VMEM working set; BlockSpec
+    expresses the HBM->VMEM schedule that the paper's CPU version gets
+    implicitly from the cache hierarchy;
+  * the Z-halo (one plane above / below the slab) is provided by mapping
+    the *same* input array through two additional, clamped BlockSpecs
+    (prev / next slab). Edge slabs mask the halo to zero, which is
+    exactly the Dirichlet boundary of the paper ("substances diffuse out
+    of the simulation space");
+  * in-plane (Y, X) neighbors are shifts inside the slab — pure VPU work.
+
+VMEM footprint per program instance: 4 slabs of (block_z, Y, X) f32
+(cur/prev/next inputs + output) + 1 coefficient vector; the AOT driver
+(aot.py) checks this against the 16 MiB VMEM budget and records it in
+the artifact manifest.
+
+The kernel MUST be lowered with ``interpret=True`` here: the CPU PJRT
+plugin cannot execute Mosaic custom-calls. Real-TPU numbers are
+estimated from the footprint in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift_with_zero(arr: jnp.ndarray, axis: int, up: bool) -> jnp.ndarray:
+    """Shift `arr` by one along `axis`, filling the vacated edge with 0."""
+    zeros_shape = list(arr.shape)
+    zeros_shape[axis] = 1
+    pad = jnp.zeros(zeros_shape, dtype=arr.dtype)
+    if up:  # neighbor at index-1: prepend zeros, drop the last plane
+        idx = [slice(None)] * arr.ndim
+        idx[axis] = slice(0, arr.shape[axis] - 1)
+        return jnp.concatenate([pad, arr[tuple(idx)]], axis=axis)
+    idx = [slice(None)] * arr.ndim
+    idx[axis] = slice(1, None)
+    return jnp.concatenate([arr[tuple(idx)], pad], axis=axis)
+
+
+def _diffusion_kernel(prev_ref, cur_ref, next_ref, coef_ref, out_ref):
+    """One grid program: update one Z-slab of the concentration grid.
+
+    coef_ref holds [decay_factor, diff_coef] = [(1 - mu*dt), nu*dt/dx^2].
+    """
+    i = pl.program_id(0)
+    nz = pl.num_programs(0)
+    u = cur_ref[...]
+    decay_factor = coef_ref[0]
+    diff_coef = coef_ref[1]
+
+    # Z neighbors: shift within the slab, then patch the slab edges with
+    # the halo planes from the prev / next blocks (zero at grid boundary).
+    up_z = _shift_with_zero(u, 0, up=True)
+    dn_z = _shift_with_zero(u, 0, up=False)
+    halo_top = jnp.where(i == 0, 0.0, prev_ref[-1])  # plane below index 0
+    halo_bot = jnp.where(i == nz - 1, 0.0, next_ref[0])
+    up_z = up_z.at[0].set(halo_top)
+    dn_z = dn_z.at[-1].set(halo_bot)
+
+    up_y = _shift_with_zero(u, 1, up=True)
+    dn_y = _shift_with_zero(u, 1, up=False)
+    up_x = _shift_with_zero(u, 2, up=True)
+    dn_x = _shift_with_zero(u, 2, up=False)
+
+    laplacian = up_z + dn_z + up_y + dn_y + up_x + dn_x - 6.0 * u
+    out_ref[...] = u * decay_factor + diff_coef * laplacian
+
+
+def diffusion_step(u: jnp.ndarray, coef: jnp.ndarray, block_z: int = 8) -> jnp.ndarray:
+    """One diffusion step on a (Z, Y, X) f32 grid via the Pallas kernel.
+
+    coef: f32[2] = [decay_factor, diff_coef]. Z must be divisible by
+    block_z (aot.py picks block_z accordingly).
+    """
+    z, y, x = u.shape
+    if z % block_z != 0:
+        raise ValueError(f"Z={z} not divisible by block_z={block_z}")
+    grid = (z // block_z,)
+    slab = (block_z, y, x)
+    return pl.pallas_call(
+        _diffusion_kernel,
+        grid=grid,
+        in_specs=[
+            # prev / cur / next slabs of the same input, clamped at edges.
+            pl.BlockSpec(slab, lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
+            pl.BlockSpec(slab, lambda i: (i, 0, 0)),
+            pl.BlockSpec(
+                slab,
+                functools.partial(
+                    lambda nz, i: (jnp.minimum(i + 1, nz - 1), 0, 0), grid[0]
+                ),
+            ),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(slab, lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(u, u, u, coef)
+
+
+def vmem_footprint_bytes(shape, block_z: int) -> int:
+    """Estimated VMEM bytes per program instance (4 f32 slabs + coef)."""
+    _, y, x = shape
+    slab = block_z * y * x * 4
+    return 4 * slab + 2 * 4

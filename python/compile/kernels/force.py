@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: batched mechanical collision forces (paper Eq 4.1/4.2).
+
+The L3 coordinator gathers, per agent, a fixed-size padded neighbor list
+(positions, radii, validity mask) from the uniform-grid environment and
+ships the batch through this kernel. On TPU the batch dimension is tiled
+into ``block_b`` rows per program instance; all math is dense and
+mask-predicated, so the padded slots cost nothing in control flow —
+the same trade the paper makes on GPU ("computational intensity is
+directly linked with the number of collisions").
+
+interpret=True for CPU-PJRT execution (see diffusion.py header).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _force_kernel(pos_ref, rad_ref, npos_ref, nrad_ref, nmask_ref, params_ref, out_ref):
+    pos = pos_ref[...]        # (Bb, 3)
+    radius = rad_ref[...]     # (Bb,)
+    npos = npos_ref[...]      # (Bb, K, 3)
+    nradius = nrad_ref[...]   # (Bb, K)
+    nmask = nmask_ref[...]    # (Bb, K)
+    repulsion_k = params_ref[0]
+    attraction_gamma = params_ref[1]
+
+    delta_pos = pos[:, None, :] - npos
+    dist2 = jnp.sum(delta_pos * delta_pos, axis=-1)
+    dist = jnp.sqrt(jnp.maximum(dist2, 1e-12))
+    overlap = radius[:, None] + nradius - dist
+    touching = (overlap > 0.0) & (nmask > 0.0) & (dist > 1e-6)
+    r_comb = radius[:, None] * nradius / jnp.maximum(radius[:, None] + nradius, 1e-12)
+    delta = jnp.maximum(overlap, 0.0)
+    magnitude = repulsion_k * delta - attraction_gamma * jnp.sqrt(
+        jnp.maximum(r_comb * delta, 0.0)
+    )
+    magnitude = jnp.where(touching, magnitude, 0.0)
+    direction = delta_pos / dist[..., None]
+    out_ref[...] = jnp.sum(magnitude[..., None] * direction, axis=1)
+
+
+def collision_forces(
+    pos: jnp.ndarray,
+    radius: jnp.ndarray,
+    npos: jnp.ndarray,
+    nradius: jnp.ndarray,
+    nmask: jnp.ndarray,
+    params: jnp.ndarray,
+    block_b: int = 128,
+) -> jnp.ndarray:
+    """Net collision force per agent over a padded neighbor list.
+
+    pos f32[B,3], radius f32[B], npos f32[B,K,3], nradius f32[B,K],
+    nmask f32[B,K], params f32[2] = [repulsion_k, attraction_gamma].
+    B must be divisible by block_b.
+    """
+    b, k = nmask.shape
+    if b % block_b != 0:
+        raise ValueError(f"B={b} not divisible by block_b={block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _force_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 3), pos.dtype),
+        interpret=True,
+    )(pos, radius, npos, nradius, nmask, params)
+
+
+def vmem_footprint_bytes(block_b: int, k: int) -> int:
+    """Estimated VMEM bytes per program instance (inputs + output, f32)."""
+    return 4 * (block_b * 3 + block_b + block_b * k * 3 + 2 * block_b * k + 2 + block_b * 3)

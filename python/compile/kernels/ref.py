@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth for correctness: every Pallas kernel in this
+package must match its oracle (allclose, f32) under pytest + hypothesis
+sweeps. They intentionally use the most direct jnp formulation with no
+tiling tricks.
+
+Physics background (paper Eq 4.1-4.3):
+  * diffusion_step_ref  — one explicit central-difference step of Fick's
+    second law on a 3D grid with decay and Dirichlet-zero boundaries
+    ("substances diffuse out of the simulation space").
+  * collision_forces_ref — the Cortex3D/BioDynaMo mechanical interaction
+    force between spherical agents: F_N = k*delta - gamma*sqrt(r*delta)
+    applied along the center-center direction, accumulated over a masked
+    neighbor list.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def diffusion_step_ref(u: jnp.ndarray, decay_factor, diff_coef) -> jnp.ndarray:
+    """One diffusion step (paper Eq 4.3) with Dirichlet-zero boundary.
+
+    u           : (Z, Y, X) f32 concentration grid
+    decay_factor: scalar, (1 - mu * dt)
+    diff_coef   : scalar, nu * dt / dx^2   (same spacing in x, y, z)
+
+    Returns the grid at the next timestep.
+    """
+    u = jnp.asarray(u)
+    z = jnp.zeros_like(u[:1])
+    up_z = jnp.concatenate([z, u[:-1]], axis=0)
+    dn_z = jnp.concatenate([u[1:], z], axis=0)
+    zy = jnp.zeros_like(u[:, :1])
+    up_y = jnp.concatenate([zy, u[:, :-1]], axis=1)
+    dn_y = jnp.concatenate([u[:, 1:], zy], axis=1)
+    zx = jnp.zeros_like(u[:, :, :1])
+    up_x = jnp.concatenate([zx, u[:, :, :-1]], axis=2)
+    dn_x = jnp.concatenate([u[:, :, 1:], zx], axis=2)
+    laplacian = up_z + dn_z + up_y + dn_y + up_x + dn_x - 6.0 * u
+    return u * decay_factor + diff_coef * laplacian
+
+
+def collision_forces_ref(
+    pos: jnp.ndarray,
+    radius: jnp.ndarray,
+    npos: jnp.ndarray,
+    nradius: jnp.ndarray,
+    nmask: jnp.ndarray,
+    attraction_gamma: float = 1.0,
+    repulsion_k: float = 2.0,
+) -> jnp.ndarray:
+    """Mechanical collision force on each agent from its neighbor list.
+
+    pos     : (B, 3)    agent centers
+    radius  : (B,)      agent radii
+    npos    : (B, K, 3) neighbor centers (padded)
+    nradius : (B, K)    neighbor radii (padded)
+    nmask   : (B, K)    1.0 for valid neighbor slots, 0.0 for padding
+    Returns : (B, 3)    net force per agent (paper Eq 4.1 / 4.2)
+    """
+    delta_pos = pos[:, None, :] - npos  # (B, K, 3) points from neighbor to agent
+    dist2 = jnp.sum(delta_pos * delta_pos, axis=-1)
+    dist = jnp.sqrt(jnp.maximum(dist2, 1e-12))
+    overlap = radius[:, None] + nradius - dist  # delta in Eq 4.1
+    touching = (overlap > 0.0) & (nmask > 0.0) & (dist > 1e-6)
+    # Eq 4.2: combined radius measure r = r1*r2 / (r1+r2)
+    r_comb = radius[:, None] * nradius / jnp.maximum(radius[:, None] + nradius, 1e-12)
+    delta = jnp.maximum(overlap, 0.0)
+    magnitude = repulsion_k * delta - attraction_gamma * jnp.sqrt(
+        jnp.maximum(r_comb * delta, 0.0)
+    )
+    magnitude = jnp.where(touching, magnitude, 0.0)
+    direction = delta_pos / dist[..., None]
+    return jnp.sum(magnitude[..., None] * direction, axis=1)

@@ -1,0 +1,89 @@
+"""L2: JAX compute graphs composing the L1 Pallas kernels.
+
+These are the functions that get AOT-lowered to HLO text (aot.py) and
+executed from the Rust coordinator via PJRT. Python never runs on the
+simulation path — each function here is a *pure* (buffers in, buffers
+out) step so the Rust side can double-buffer.
+
+Exported graphs:
+  * diffusion_step_fn(R)        — one Eq-4.3 step on an R^3 grid.
+  * diffusion_multi_step_fn(R,T)— T fused steps via lax.scan: amortizes
+    the PJRT dispatch + host<->device copies over T stencil applications
+    (the L2 optimization the paper gets from keeping the grid resident).
+  * collision_forces_fn(B,K)    — Eq-4.1/4.2 forces for a (B,K) padded
+    neighbor batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import diffusion as diffusion_kernel
+from .kernels import force as force_kernel
+
+
+def pick_block_z(z: int) -> int:
+    """Largest power-of-two slab height <= 8 that divides Z."""
+    for cand in (8, 4, 2, 1):
+        if z % cand == 0:
+            return cand
+    return 1
+
+
+def diffusion_step_fn(resolution: int):
+    """Returns (fn, example_args) for one diffusion step on an R^3 grid."""
+    block_z = pick_block_z(resolution)
+
+    def step(u, coef):
+        return (diffusion_kernel.diffusion_step(u, coef, block_z=block_z),)
+
+    shape = (resolution, resolution, resolution)
+    example = (
+        jax.ShapeDtypeStruct(shape, jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+    )
+    return step, example
+
+
+def diffusion_multi_step_fn(resolution: int, steps: int):
+    """Returns (fn, example_args): `steps` fused diffusion steps."""
+    block_z = pick_block_z(resolution)
+
+    def multi(u, coef):
+        def body(carry, _):
+            return diffusion_kernel.diffusion_step(carry, coef, block_z=block_z), None
+
+        out, _ = lax.scan(body, u, None, length=steps)
+        return (out,)
+
+    shape = (resolution, resolution, resolution)
+    example = (
+        jax.ShapeDtypeStruct(shape, jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+    )
+    return multi, example
+
+
+def collision_forces_fn(batch: int, neighbors: int):
+    """Returns (fn, example_args) for a (B, K) collision-force batch."""
+    block_b = min(128, batch)
+
+    def forces(pos, radius, npos, nradius, nmask, params):
+        return (
+            force_kernel.collision_forces(
+                pos, radius, npos, nradius, nmask, params, block_b=block_b
+            ),
+        )
+
+    f32 = jnp.float32
+    example = (
+        jax.ShapeDtypeStruct((batch, 3), f32),
+        jax.ShapeDtypeStruct((batch,), f32),
+        jax.ShapeDtypeStruct((batch, neighbors, 3), f32),
+        jax.ShapeDtypeStruct((batch, neighbors), f32),
+        jax.ShapeDtypeStruct((batch, neighbors), f32),
+        jax.ShapeDtypeStruct((2,), f32),
+    )
+    return forces, example

@@ -1,0 +1,189 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes / block sizes / parameter ranges; every case
+asserts the Pallas kernel (interpret=True) matches the pure-jnp oracle.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import diffusion, force, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(rng, shape, lo=0.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- diffusion
+@hypothesis.given(
+    z=st.sampled_from([4, 8, 12, 16]),
+    y=st.integers(3, 20),
+    x=st.integers(3, 20),
+    block_z=st.sampled_from([1, 2, 4]),
+    decay=st.floats(0.8, 1.0),
+    coef=st.floats(0.0, 0.16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diffusion_matches_ref(z, y, x, block_z, decay, coef, seed):
+    hypothesis.assume(z % block_z == 0)
+    rng = np.random.default_rng(seed)
+    u = rand(rng, (z, y, x))
+    c = jnp.asarray([decay, coef], dtype=jnp.float32)
+    got = diffusion.diffusion_step(u, c, block_z=block_z)
+    want = ref.diffusion_step_ref(u, decay, coef)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_diffusion_block_size_invariance():
+    """Result must not depend on the HBM->VMEM tiling choice."""
+    rng = np.random.default_rng(1)
+    u = rand(rng, (16, 9, 11))
+    c = jnp.asarray([0.97, 0.05], dtype=jnp.float32)
+    outs = [diffusion.diffusion_step(u, c, block_z=b) for b in (1, 2, 4, 8, 16)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-7)
+
+
+def test_diffusion_zero_coef_is_pure_decay():
+    rng = np.random.default_rng(2)
+    u = rand(rng, (8, 8, 8))
+    c = jnp.asarray([0.9, 0.0], dtype=jnp.float32)
+    got = diffusion.diffusion_step(u, c, block_z=4)
+    np.testing.assert_allclose(got, 0.9 * u, rtol=1e-6)
+
+
+def test_diffusion_mass_leaks_only_at_boundary():
+    """Interior point source: one step conserves mass when decay=1."""
+    u = np.zeros((8, 8, 8), dtype=np.float32)
+    u[4, 4, 4] = 1.0
+    c = jnp.asarray([1.0, 0.1], dtype=jnp.float32)
+    got = diffusion.diffusion_step(jnp.asarray(u), c, block_z=4)
+    assert abs(float(jnp.sum(got)) - 1.0) < 1e-6
+
+
+def test_diffusion_dirichlet_boundary_outflow():
+    """Mass at the face leaks out: total decreases with decay=1."""
+    u = np.zeros((8, 8, 8), dtype=np.float32)
+    u[0, 4, 4] = 1.0
+    c = jnp.asarray([1.0, 0.1], dtype=jnp.float32)
+    got = diffusion.diffusion_step(jnp.asarray(u), c, block_z=4)
+    assert float(jnp.sum(got)) < 1.0 - 1e-4
+
+
+def test_diffusion_rejects_bad_block():
+    with pytest.raises(ValueError):
+        diffusion.diffusion_step(jnp.zeros((10, 4, 4)), jnp.zeros(2), block_z=4)
+
+
+def test_diffusion_converges_to_analytical_point_source():
+    """Python-side mirror of paper Fig 4.9: error shrinks as resolution grows."""
+    from compile import model
+
+    d_coef = 50.0  # micron^2 / time
+    total_t = 1.0
+    length = 60.0
+    errors = []
+    for r in (8, 16, 32):
+        dx = length / r
+        dt = 0.2 * dx * dx / (6 * d_coef)  # stable explicit step
+        steps = max(1, int(total_t / dt))
+        dt = total_t / steps
+        u = np.zeros((r, r, r), dtype=np.float32)
+        center = r // 2
+        u[center, center, center] = 1.0 / dx**3  # unit mass
+        c = jnp.asarray([1.0, d_coef * dt / dx**2], dtype=jnp.float32)
+        cur = jnp.asarray(u)
+        bz = model.pick_block_z(r)
+        for _ in range(steps):
+            cur = diffusion.diffusion_step(cur, c, block_z=bz)
+        # analytical: G(x,t) = exp(-|x|^2/(4Dt)) / (4 pi D t)^{3/2}
+        rr = length / 8  # measure a fixed physical distance from the source
+        analytical = np.exp(-(rr**2) / (4 * d_coef * total_t)) / (
+            4 * np.pi * d_coef * total_t
+        ) ** 1.5
+        offset = round(rr / dx)
+        measured = float(cur[center + offset, center, center])
+        errors.append(abs(measured - analytical) / analytical)
+    assert errors[-1] < errors[0], f"no convergence: {errors}"
+    assert errors[-1] < 0.25, f"final rel err too large: {errors}"
+
+
+# -------------------------------------------------------------------- force
+@hypothesis.given(
+    b=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 12),
+    block_b=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_force_matches_ref(b, k, block_b, seed):
+    hypothesis.assume(b % block_b == 0)
+    rng = np.random.default_rng(seed)
+    pos = rand(rng, (b, 3), 0, 20)
+    radius = rand(rng, (b,), 1, 6)
+    npos = rand(rng, (b, k, 3), 0, 20)
+    nradius = rand(rng, (b, k), 1, 6)
+    nmask = jnp.asarray((rng.random((b, k)) > 0.3).astype(np.float32))
+    params = jnp.asarray([2.0, 1.0], dtype=jnp.float32)
+    got = force.collision_forces(pos, radius, npos, nradius, nmask, params, block_b)
+    want = ref.collision_forces_ref(pos, radius, npos, nradius, nmask, 1.0, 2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_force_zero_when_not_touching():
+    pos = jnp.asarray([[0.0, 0.0, 0.0]])
+    radius = jnp.asarray([1.0])
+    npos = jnp.asarray([[[10.0, 0.0, 0.0]]])
+    nradius = jnp.asarray([[1.0]])
+    nmask = jnp.asarray([[1.0]])
+    params = jnp.asarray([2.0, 1.0], dtype=jnp.float32)
+    got = force.collision_forces(pos, radius, npos, nradius, nmask, params, block_b=1)
+    np.testing.assert_allclose(got, np.zeros((1, 3)), atol=1e-7)
+
+
+def test_force_mask_kills_contribution():
+    pos = jnp.asarray([[0.0, 0.0, 0.0]])
+    radius = jnp.asarray([2.0])
+    npos = jnp.asarray([[[1.0, 0.0, 0.0]]])  # heavily overlapping
+    nradius = jnp.asarray([[2.0]])
+    params = jnp.asarray([2.0, 1.0], dtype=jnp.float32)
+    with_mask = force.collision_forces(
+        pos, radius, npos, nradius, jnp.asarray([[0.0]]), params, block_b=1
+    )
+    np.testing.assert_allclose(with_mask, np.zeros((1, 3)), atol=1e-7)
+    without = force.collision_forces(
+        pos, radius, npos, nradius, jnp.asarray([[1.0]]), params, block_b=1
+    )
+    assert float(jnp.abs(without).sum()) > 0.1
+
+
+def test_force_newton_third_law():
+    """Force on a from b equals minus force on b from a."""
+    params = jnp.asarray([2.0, 1.0], dtype=jnp.float32)
+    pa = jnp.asarray([[0.0, 0.0, 0.0], [3.0, 0.0, 0.0]])
+    ra = jnp.asarray([2.0, 2.0])
+    npos = jnp.asarray([[[3.0, 0.0, 0.0]], [[0.0, 0.0, 0.0]]])
+    nrad = jnp.asarray([[2.0], [2.0]])
+    nmask = jnp.ones((2, 1), dtype=jnp.float32)
+    f = force.collision_forces(pa, ra, npos, nrad, nmask, params, block_b=2)
+    np.testing.assert_allclose(f[0], -f[1], rtol=1e-6)
+
+
+def test_force_repulsion_dominates_deep_overlap():
+    """Deeply overlapping equal spheres push apart along the center line."""
+    params = jnp.asarray([2.0, 1.0], dtype=jnp.float32)
+    pos = jnp.asarray([[0.0, 0.0, 0.0]])
+    radius = jnp.asarray([5.0])
+    npos = jnp.asarray([[[1.0, 0.0, 0.0]]])
+    nradius = jnp.asarray([[5.0]])
+    nmask = jnp.ones((1, 1), dtype=jnp.float32)
+    f = force.collision_forces(pos, radius, npos, nradius, nmask, params, block_b=1)
+    assert float(f[0, 0]) < 0.0  # pushed towards -x, away from the neighbor at +x
+    np.testing.assert_allclose(f[0, 1:], np.zeros(2), atol=1e-7)

@@ -1,0 +1,192 @@
+//! Statistical analysis (paper §4.4.5) and validation oracles.
+//!
+//! * [`TimeSeries`] — collect named observables over iterations (the
+//!   paper's data-collection API on top of ROOT; here: plain series +
+//!   summary statistics + CSV export).
+//! * [`sir_ode`] — RK4 integration of the analytical SIR model, the
+//!   validation target of the epidemiology use case (Fig 4.17).
+
+pub mod optim;
+pub mod sir_ode;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Named time series collected during a simulation.
+#[derive(Debug, Default, Clone)]
+pub struct TimeSeries {
+    data: BTreeMap<String, Vec<(u64, f64)>>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, iteration: u64, value: f64) {
+        self.data
+            .entry(name.to_string())
+            .or_default()
+            .push((iteration, value));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[(u64, f64)]> {
+        self.data.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.data.keys().map(String::as_str)
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.data.get(name)?.last().map(|&(_, v)| v)
+    }
+
+    /// CSV with one column per series, rows aligned by iteration.
+    pub fn to_csv(&self) -> String {
+        let mut iters: Vec<u64> = Vec::new();
+        for series in self.data.values() {
+            for &(i, _) in series {
+                iters.push(i);
+            }
+        }
+        iters.sort_unstable();
+        iters.dedup();
+        let mut out = String::from("iteration");
+        for name in self.data.keys() {
+            let _ = write!(out, ",{name}");
+        }
+        out.push('\n');
+        for it in iters {
+            let _ = write!(out, "{it}");
+            for series in self.data.values() {
+                match series.iter().find(|&&(i, _)| i == it) {
+                    Some(&(_, v)) => {
+                        let _ = write!(out, ",{v}");
+                    }
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    (values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (values.len() - 1) as f64).sqrt()
+}
+
+/// Harmonic mean (the paper's statistic for rates/speedups, §4.7.2).
+pub fn harmonic_mean(values: &[f64]) -> f64 {
+    if values.is_empty() || values.iter().any(|&v| v <= 0.0) {
+        return f64::NAN;
+    }
+    values.len() as f64 / values.iter().map(|v| 1.0 / v).sum::<f64>()
+}
+
+/// Root-mean-square error between two equally long series.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        / a.len() as f64)
+        .sqrt()
+}
+
+/// Fixed-width histogram over [lo, hi).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins.max(1)],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn fill(&mut self, v: f64) {
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((v - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_series_roundtrip() {
+        let mut ts = TimeSeries::new();
+        ts.record("infected", 0, 20.0);
+        ts.record("infected", 1, 35.0);
+        ts.record("susceptible", 0, 1980.0);
+        assert_eq!(ts.get("infected").unwrap().len(), 2);
+        assert_eq!(ts.last("infected"), Some(35.0));
+        let csv = ts.to_csv();
+        assert!(csv.starts_with("iteration,infected,susceptible"));
+        assert!(csv.contains("0,20,1980"));
+        assert!(csv.contains("1,35,"));
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 1e-3);
+        assert!((harmonic_mean(&[1.0, 4.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_fill() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for v in [0.5, 1.5, 1.6, 9.9, -1.0, 10.0] {
+            h.fill(v);
+        }
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[1], 2);
+        assert_eq!(h.bins[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 6);
+    }
+}

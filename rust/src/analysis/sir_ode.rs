@@ -1,0 +1,129 @@
+//! Analytical SIR model (Kermack-McKendrick), integrated with RK4.
+//!
+//! `dS/dt = -beta*S*I/N`, `dI/dt = beta*S*I/N - gamma*I`,
+//! `dR/dt = gamma*I`. This is the validation oracle for the
+//! epidemiology use case (paper §4.6.3, Fig 4.17: "the agent-based
+//! model is in excellent agreement with the equation-based approach").
+
+/// State of the compartmental model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SirState {
+    pub s: f64,
+    pub i: f64,
+    pub r: f64,
+}
+
+impl SirState {
+    pub fn n(&self) -> f64 {
+        self.s + self.i + self.r
+    }
+}
+
+fn deriv(state: SirState, beta: f64, gamma: f64) -> SirState {
+    let n = state.n();
+    let infection = beta * state.s * state.i / n;
+    let recovery = gamma * state.i;
+    SirState {
+        s: -infection,
+        i: infection - recovery,
+        r: recovery,
+    }
+}
+
+/// One RK4 step of size `dt`.
+pub fn rk4_step(state: SirState, beta: f64, gamma: f64, dt: f64) -> SirState {
+    let add = |a: SirState, b: SirState, f: f64| SirState {
+        s: a.s + b.s * f,
+        i: a.i + b.i * f,
+        r: a.r + b.r * f,
+    };
+    let k1 = deriv(state, beta, gamma);
+    let k2 = deriv(add(state, k1, dt / 2.0), beta, gamma);
+    let k3 = deriv(add(state, k2, dt / 2.0), beta, gamma);
+    let k4 = deriv(add(state, k3, dt), beta, gamma);
+    SirState {
+        s: state.s + dt / 6.0 * (k1.s + 2.0 * k2.s + 2.0 * k3.s + k4.s),
+        i: state.i + dt / 6.0 * (k1.i + 2.0 * k2.i + 2.0 * k3.i + k4.i),
+        r: state.r + dt / 6.0 * (k1.r + 2.0 * k2.r + 2.0 * k3.r + k4.r),
+    }
+}
+
+/// Integrate for `steps` steps of `dt`; returns the trajectory
+/// including the initial state (length `steps + 1`).
+pub fn integrate(initial: SirState, beta: f64, gamma: f64, dt: f64, steps: usize) -> Vec<SirState> {
+    let mut out = Vec::with_capacity(steps + 1);
+    let mut state = initial;
+    out.push(state);
+    for _ in 0..steps {
+        state = rk4_step(state, beta, gamma, dt);
+        out.push(state);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MEASLES: (f64, f64) = (0.06719, 0.00521); // paper Table 4.3
+
+    #[test]
+    fn population_conserved() {
+        let init = SirState {
+            s: 2000.0,
+            i: 20.0,
+            r: 0.0,
+        };
+        let traj = integrate(init, MEASLES.0, MEASLES.1, 1.0, 1000);
+        for st in &traj {
+            assert!((st.n() - 2020.0).abs() < 1e-6);
+            assert!(st.s >= -1e-9 && st.i >= -1e-9 && st.r >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn epidemic_rises_and_falls() {
+        let init = SirState {
+            s: 2000.0,
+            i: 20.0,
+            r: 0.0,
+        };
+        let traj = integrate(init, MEASLES.0, MEASLES.1, 1.0, 2000);
+        let peak = traj
+            .iter()
+            .map(|s| s.i)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(peak > 500.0, "measles R0=12.9 -> large outbreak, peak={peak}");
+        assert!(traj.last().unwrap().i < peak / 2.0, "epidemic subsides");
+        // susceptibles monotonically decrease
+        for w in traj.windows(2) {
+            assert!(w[1].s <= w[0].s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn no_outbreak_below_r0_one() {
+        // beta/gamma < 1: infections decline from the start
+        let init = SirState {
+            s: 10_000.0,
+            i: 100.0,
+            r: 0.0,
+        };
+        let traj = integrate(init, 0.005, 0.01, 1.0, 500);
+        assert!(traj.last().unwrap().i < 100.0);
+        assert!(traj.iter().map(|s| s.i).fold(f64::NEG_INFINITY, f64::max) <= 100.0 + 1e-6);
+    }
+
+    #[test]
+    fn rk4_converges_with_dt() {
+        // halving dt should change the result only slightly (4th order)
+        let init = SirState {
+            s: 2000.0,
+            i: 20.0,
+            r: 0.0,
+        };
+        let a = integrate(init, MEASLES.0, MEASLES.1, 1.0, 100).last().unwrap().i;
+        let b = integrate(init, MEASLES.0, MEASLES.1, 0.5, 200).last().unwrap().i;
+        assert!((a - b).abs() / b < 1e-6, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Deliberately-serial baseline engine — the Cortex3D / NetLogo
+//! stand-in for the Fig 4.20A comparison (see DESIGN.md §3).
+//!
+//! It embodies the inefficiencies the paper measures against:
+//! * O(n²) neighbor search (no spatial index),
+//! * boxed AoS agents behind trait objects with per-iteration
+//!   allocation of neighbor lists,
+//! * strictly serial execution,
+//! * no memory-layout or static-agent optimizations.
+//!
+//! It implements the same cell-growth and SIR dynamics as the real
+//! engine so speedups compare equal work.
+
+use crate::core::math::Real3;
+use crate::core::random::Rng;
+use crate::Real;
+
+/// One baseline agent (boxed, pointer-chasing by construction).
+pub struct BaselineAgent {
+    pub position: Real3,
+    pub diameter: Real,
+    pub state: u8, // SIR state or unused
+    pub age: u64,
+}
+
+/// The naive engine: a vector of boxed agents + O(n²) queries.
+pub struct SerialEngine {
+    pub agents: Vec<Box<BaselineAgent>>,
+    pub rng: Rng,
+    pub dt: Real,
+}
+
+impl SerialEngine {
+    pub fn new(seed: u64) -> Self {
+        SerialEngine {
+            agents: Vec::new(),
+            rng: Rng::new(seed),
+            dt: 0.01,
+        }
+    }
+
+    /// O(n) scan per query — O(n²) per iteration.
+    fn neighbors_within(&self, idx: usize, radius: Real) -> Vec<usize> {
+        let mut out = Vec::new(); // fresh allocation every call, on purpose
+        let r2 = radius * radius;
+        let pos = self.agents[idx].position;
+        for (j, other) in self.agents.iter().enumerate() {
+            if j != idx && other.position.squared_distance(&pos) <= r2 {
+                out.push(j);
+            }
+        }
+        out
+    }
+
+    /// Cell growth & division dynamics (grow to max diameter, divide).
+    pub fn step_growth(&mut self, growth_rate: Real, max_diameter: Real) {
+        let n = self.agents.len();
+        // mechanics: naive pairwise forces
+        let mut displacements = vec![Real3::ZERO; n];
+        for i in 0..n {
+            let neighbors = self.neighbors_within(i, max_diameter * 1.5);
+            let f = crate::physics::force::DefaultForce::default();
+            for j in neighbors {
+                let a = &self.agents[i];
+                let b = &self.agents[j];
+                let delta = a.position - b.position;
+                let dist = delta.norm().max(1e-9);
+                let m = f.magnitude(a.diameter / 2.0, b.diameter / 2.0, dist);
+                if m != 0.0 {
+                    displacements[i] += delta * (m / dist) * self.dt;
+                }
+            }
+        }
+        for (agent, d) in self.agents.iter_mut().zip(&displacements) {
+            agent.position += *d;
+        }
+        // growth + division
+        let mut daughters = Vec::new();
+        for agent in self.agents.iter_mut() {
+            if agent.diameter < max_diameter {
+                let v = std::f64::consts::PI / 6.0 * agent.diameter.powi(3)
+                    + growth_rate * self.dt;
+                agent.diameter = (6.0 * v / std::f64::consts::PI).cbrt();
+            } else {
+                let dir = self.rng.on_unit_sphere();
+                let half_v = std::f64::consts::PI / 12.0 * agent.diameter.powi(3);
+                let d = (6.0 * half_v / std::f64::consts::PI).cbrt();
+                agent.diameter = d;
+                let offset = dir * (d / 2.0);
+                daughters.push(Box::new(BaselineAgent {
+                    position: agent.position + offset,
+                    diameter: d,
+                    state: agent.state,
+                    age: 0,
+                }));
+                agent.position -= offset;
+            }
+        }
+        self.agents.extend(daughters);
+    }
+
+    /// SIR dynamics (infection radius search + recovery + movement).
+    pub fn step_sir(
+        &mut self,
+        infection_radius: Real,
+        infection_probability: Real,
+        recovery_probability: Real,
+        max_step: Real,
+        space: Real,
+    ) {
+        let n = self.agents.len();
+        let mut new_states: Vec<u8> = self.agents.iter().map(|a| a.state).collect();
+        for i in 0..n {
+            match self.agents[i].state {
+                0 => {
+                    if self.rng.uniform01() < infection_probability {
+                        let neighbors = self.neighbors_within(i, infection_radius);
+                        if neighbors.iter().any(|&j| self.agents[j].state == 1) {
+                            new_states[i] = 1;
+                        }
+                    }
+                }
+                1 => {
+                    if self.rng.uniform01() < recovery_probability {
+                        new_states[i] = 2;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (i, agent) in self.agents.iter_mut().enumerate() {
+            agent.state = new_states[i];
+            let dir = self.rng.on_unit_sphere();
+            let step = self.rng.uniform(0.0, max_step);
+            let mut p = agent.position + dir * step;
+            for c in 0..3 {
+                p[c] = p[c].rem_euclid(space);
+            }
+            agent.position = p;
+        }
+    }
+
+    pub fn census(&self) -> (usize, usize, usize) {
+        let mut out = (0, 0, 0);
+        for a in &self.agents {
+            match a.state {
+                0 => out.0 += 1,
+                1 => out.1 += 1,
+                _ => out.2 += 1,
+            }
+        }
+        out
+    }
+}
+
+/// Populate a growth benchmark: cells on a 3D grid.
+pub fn populate_growth(engine: &mut SerialEngine, cells_per_dim: usize, spacing: Real) {
+    for z in 0..cells_per_dim {
+        for y in 0..cells_per_dim {
+            for x in 0..cells_per_dim {
+                engine.agents.push(Box::new(BaselineAgent {
+                    position: Real3::new(
+                        x as Real * spacing,
+                        y as Real * spacing,
+                        z as Real * spacing,
+                    ),
+                    diameter: 6.0,
+                    state: 0,
+                    age: 0,
+                }));
+            }
+        }
+    }
+}
+
+/// Populate an SIR benchmark.
+pub fn populate_sir(engine: &mut SerialEngine, susceptible: usize, infected: usize, space: Real) {
+    for i in 0..susceptible + infected {
+        let pos = engine.rng.uniform3(0.0, space);
+        engine.agents.push(Box::new(BaselineAgent {
+            position: pos,
+            diameter: 1.0,
+            state: u8::from(i < infected),
+            age: 0,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_divides() {
+        let mut e = SerialEngine::new(1);
+        e.dt = 0.1;
+        populate_growth(&mut e, 3, 20.0);
+        assert_eq!(e.agents.len(), 27);
+        for _ in 0..40 {
+            e.step_growth(100.0, 8.0);
+        }
+        assert!(e.agents.len() > 27);
+    }
+
+    #[test]
+    fn sir_spreads() {
+        let mut e = SerialEngine::new(2);
+        populate_sir(&mut e, 300, 10, 30.0);
+        for _ in 0..100 {
+            e.step_sir(3.0, 0.3, 0.005, 2.0, 30.0);
+        }
+        let (s, i, r) = e.census();
+        assert_eq!(s + i + r, 310);
+        assert!(i + r > 10, "outbreak in the dense baseline world");
+    }
+
+    #[test]
+    fn neighbors_symmetric() {
+        let mut e = SerialEngine::new(3);
+        populate_sir(&mut e, 50, 0, 20.0);
+        for i in 0..e.agents.len() {
+            for &j in &e.neighbors_within(i, 5.0) {
+                assert!(e.neighbors_within(j, 5.0).contains(&i));
+            }
+        }
+    }
+}

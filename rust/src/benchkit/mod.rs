@@ -1,0 +1,182 @@
+//! Bench harness used by every `benches/fig*.rs` target.
+//!
+//! criterion is unavailable in this offline environment (documented in
+//! DESIGN.md §3); this is the replacement: repeated timed runs, median
+//! + mean reporting, RSS sampling, and paper-style Markdown tables that
+//! `cargo bench | tee bench_output.txt` captures.
+
+use std::time::{Duration, Instant};
+
+/// Time one invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Run `f` `reps` times (after `warmup` unmeasured runs); returns all
+/// measured durations.
+pub fn time_reps(reps: usize, warmup: usize, mut f: impl FnMut()) -> Vec<Duration> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect()
+}
+
+/// Median of durations.
+pub fn median(mut samples: Vec<Duration>) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// Arithmetic-mean duration.
+pub fn mean_duration(samples: &[Duration]) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    samples.iter().sum::<Duration>() / samples.len() as u32
+}
+
+/// Current resident set size in bytes (Linux).
+pub fn rss_bytes() -> u64 {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Markdown table builder for paper-style result rows.
+pub struct BenchTable {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        BenchTable {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print the table (captured by `cargo bench | tee ...`).
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        println!("| {} |", self.header.join(" | "));
+        println!(
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            println!("| {} |", row.join(" | "));
+        }
+        println!();
+    }
+}
+
+/// Quick environment banner printed by every bench target.
+pub fn print_env_banner(bench: &str) {
+    println!("\n# bench: {bench}");
+    println!(
+        "host: {} logical cpus, rss {}",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        fmt_bytes(rss_bytes()),
+    );
+}
+
+/// Scale factors: this container is 1 core / 37 GB; paper systems are
+/// 72-core servers. Benches report raw numbers plus, where a paper
+/// comparison exists, the paper's value for reference.
+pub const CONTAINER_NOTE: &str =
+    "container: 1 physical core; paper testbed: 72 cores/4 NUMA domains — compare shapes, not absolutes";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_and_median() {
+        let samples = time_reps(5, 1, || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(samples.len(), 5);
+        assert!(median(samples.clone()) >= Duration::from_millis(1));
+        assert!(mean_duration(&samples) >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn rss_nonzero_on_linux() {
+        assert!(rss_bytes() > 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_bytes(1024), "1.00 KiB");
+        assert_eq!(fmt_bytes(1536 * 1024), "1.50 MiB");
+    }
+
+    #[test]
+    fn table_builds() {
+        let mut t = BenchTable::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = BenchTable::new("demo", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Agents — the autonomous entities of the simulation (paper §4.2.1).
+//!
+//! An agent has a 3D geometry, attached behaviors, and an environment.
+//! `AgentBase` carries the fields every agent shares; concrete agents
+//! (e.g. [`SphericalAgent`], `neuro::NeuriteElement`, model-specific
+//! types like the epidemiology `Person`) embed it and delegate via
+//! [`impl_agent_common!`]. This mirrors BioDynaMo's `Agent` base class
+//! and keeps the platform open for extension without touching engine
+//! internals (the modularity requirement of Ch. 4).
+
+use crate::core::behavior::Behavior;
+use crate::core::event::NewAgentEvent;
+use crate::core::math::Real3;
+use crate::Real;
+use std::any::Any;
+
+/// Unique agent identifier, never reused within a simulation.
+pub type AgentUid = u64;
+
+/// Storage coordinates of an agent: (simulated NUMA domain, index in
+/// the domain's dense vector). The paper's `AgentHandle`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentHandle {
+    pub numa: u16,
+    pub idx: u32,
+}
+
+impl AgentHandle {
+    pub fn new(numa: usize, idx: usize) -> Self {
+        AgentHandle {
+            numa: numa as u16,
+            idx: idx as u32,
+        }
+    }
+}
+
+/// Geometric primitive of an agent, used by the mechanical-force
+/// calculation to pick the right interaction formula.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Shape {
+    /// A sphere at `position` with `diameter`.
+    Sphere,
+    /// A cylinder from `proximal` to `distal` end (neurite segment).
+    Cylinder { proximal: Real3, distal: Real3 },
+}
+
+/// Common state embedded in every concrete agent type.
+#[derive(Debug, Clone)]
+pub struct AgentBase {
+    pub uid: AgentUid,
+    pub position: Real3,
+    pub diameter: Real,
+    pub behaviors: Vec<Box<dyn Behavior>>,
+    /// §5.5 static-agent detection: did this agent move in the
+    /// *previous* iteration? Read-only during an iteration (neighbors
+    /// read it); the mechanical-forces op may skip the force math when
+    /// neither the agent nor any neighbor moved.
+    pub moved_last: bool,
+    /// Staged movement flag for the current iteration (owner-thread
+    /// writes only; copied into `moved_last` at the barrier).
+    pub moved_now: bool,
+    /// Distributed engine (Ch. 6): aura copies of agents owned by a
+    /// neighboring rank. Ghosts participate as neighbors but are never
+    /// *processed* (no behaviors, no displacement).
+    pub is_ghost: bool,
+}
+
+impl Default for AgentBase {
+    fn default() -> Self {
+        AgentBase {
+            uid: 0,
+            position: Real3::ZERO,
+            diameter: 10.0,
+            behaviors: Vec::new(),
+            moved_last: true, // conservatively "moved" on entry
+            moved_now: false,
+            is_ghost: false,
+        }
+    }
+}
+
+impl AgentBase {
+    pub fn at(position: Real3) -> Self {
+        AgentBase {
+            position,
+            ..Default::default()
+        }
+    }
+}
+
+/// The agent interface. Send + Sync because agents move between worker
+/// threads across iterations; *within* an iteration each agent is
+/// mutated by exactly one thread (scheduler invariant).
+pub trait Agent: Any + Send + Sync {
+    // --- identity & storage --------------------------------------------
+    fn base(&self) -> &AgentBase;
+    fn base_mut(&mut self) -> &mut AgentBase;
+
+    /// Stable type tag for serialization dispatch and visualization
+    /// grouping. Register the matching deserializer in
+    /// `distributed::serialize::AgentRegistry`.
+    fn type_tag(&self) -> u16;
+
+    /// Human-readable type name (visualization, debugging).
+    fn type_name(&self) -> &'static str;
+
+    // --- geometry -------------------------------------------------------
+    fn shape(&self) -> Shape {
+        Shape::Sphere
+    }
+
+    /// Squared search radius this agent requires for its mechanical
+    /// interactions (grid box sizing).
+    fn interaction_diameter(&self) -> Real {
+        self.base().diameter
+    }
+
+    // --- lifecycle ------------------------------------------------------
+    /// Called once when the agent enters the simulation via an event
+    /// (division, branching, ...). Default: nothing.
+    fn initialize(&mut self, _event: &NewAgentEvent) {}
+
+    /// Rigid translation by `delta`. Cylinder agents override this to
+    /// move both endpoints (the default moves only `base.position`).
+    fn translate(&mut self, delta: Real3) {
+        let p = self.base().position;
+        self.base_mut().position = p + delta;
+    }
+
+    /// Deep copy (used by the copy execution context and division).
+    fn clone_agent(&self) -> Box<dyn Agent>;
+
+    // --- dynamic dispatch helpers ----------------------------------------
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+
+    // --- serialization (distributed engine, §6.2.2) ----------------------
+    /// Append the agent's type-specific fields to `buf`. The tailored
+    /// serializer writes the base fields; implementations append only
+    /// what `AgentBase` does not cover.
+    fn serialize_extra(&self, _buf: &mut Vec<u8>) {}
+
+    /// Inverse of `serialize_extra`. `data` starts at this agent's
+    /// extra-field bytes; return bytes consumed.
+    fn deserialize_extra(&mut self, _data: &[u8]) -> usize {
+        0
+    }
+}
+
+impl dyn Agent {
+    /// Typed read access (`None` if the concrete type differs).
+    pub fn downcast_ref<T: Agent>(&self) -> Option<&T> {
+        self.as_any().downcast_ref::<T>()
+    }
+
+    /// Typed write access.
+    pub fn downcast_mut<T: Agent>(&mut self) -> Option<&mut T> {
+        self.as_any_mut().downcast_mut::<T>()
+    }
+
+    #[inline]
+    pub fn uid(&self) -> AgentUid {
+        self.base().uid
+    }
+
+    #[inline]
+    pub fn position(&self) -> Real3 {
+        self.base().position
+    }
+
+    #[inline]
+    pub fn set_position(&mut self, p: Real3) {
+        self.base_mut().position = p;
+    }
+
+    #[inline]
+    pub fn diameter(&self) -> Real {
+        self.base().diameter
+    }
+
+    #[inline]
+    pub fn set_diameter(&mut self, d: Real) {
+        self.base_mut().diameter = d;
+    }
+
+    /// §5.5: static = did not move in the previous iteration.
+    #[inline]
+    pub fn is_static(&self) -> bool {
+        !self.base().moved_last
+    }
+
+    pub fn add_behavior(&mut self, b: Box<dyn Behavior>) {
+        self.base_mut().behaviors.push(b);
+    }
+
+    /// Remove all behaviors with the given name.
+    pub fn remove_behavior(&mut self, name: &str) {
+        self.base_mut().behaviors.retain(|b| b.name() != name);
+    }
+}
+
+/// Implements the `base`/`base_mut`/`as_any` boilerplate for an agent
+/// struct with an `AgentBase` field named `base`.
+#[macro_export]
+macro_rules! impl_agent_common {
+    () => {
+        fn base(&self) -> &$crate::core::agent::AgentBase {
+            &self.base
+        }
+        fn base_mut(&mut self) -> &mut $crate::core::agent::AgentBase {
+            &mut self.base
+        }
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    };
+}
+
+/// Ready-made spherical agent (the paper's `Cell` / `SphericalAgent`):
+/// a sphere with volume-based growth and division.
+#[derive(Debug, Clone)]
+pub struct SphericalAgent {
+    pub base: AgentBase,
+    /// Scratch: displacement accumulated by the mechanical-forces op.
+    pub displacement: Real3,
+}
+
+/// Type tag of [`SphericalAgent`] (see `distributed::serialize`).
+pub const SPHERICAL_AGENT_TAG: u16 = 1;
+
+impl SphericalAgent {
+    pub fn new(position: Real3) -> Self {
+        SphericalAgent {
+            base: AgentBase::at(position),
+            displacement: Real3::ZERO,
+        }
+    }
+
+    pub fn with_diameter(position: Real3, diameter: Real) -> Self {
+        let mut a = Self::new(position);
+        a.base.diameter = diameter;
+        a
+    }
+
+    pub fn volume(&self) -> Real {
+        std::f64::consts::PI / 6.0 * self.base.diameter.powi(3)
+    }
+
+    /// Grow by `volume_delta` (paper `Cell::ChangeVolume`), keeping the
+    /// sphere shape: recompute the diameter.
+    pub fn change_volume(&mut self, volume_delta: Real) {
+        let v = (self.volume() + volume_delta).max(1e-9);
+        self.base.diameter = (6.0 * v / std::f64::consts::PI).cbrt();
+    }
+
+    /// Split into mother (self) + daughter: volumes halve, daughter is
+    /// displaced by half a radius in `direction`. Returns the daughter
+    /// (caller routes it through the execution context so it becomes
+    /// visible in iteration i+1, §4.4.2).
+    pub fn divide(&mut self, direction: Real3) -> SphericalAgent {
+        let half_volume = self.volume() / 2.0;
+        let new_diameter = (6.0 * half_volume / std::f64::consts::PI).cbrt();
+        let offset = direction.normalized() * (new_diameter / 2.0);
+        let daughter_pos = self.base.position + offset;
+        self.base.diameter = new_diameter;
+        self.base.position -= offset;
+        let mut daughter = SphericalAgent::with_diameter(daughter_pos, new_diameter);
+        // behavior copy policy is applied by the execution context
+        daughter.base.behaviors = self
+            .base
+            .behaviors
+            .iter()
+            .filter(|b| b.copy_to_new())
+            .map(|b| b.clone_behavior())
+            .collect();
+        self.base.behaviors.retain(|b| !b.remove_from_existing());
+        daughter
+    }
+}
+
+impl Agent for SphericalAgent {
+    impl_agent_common!();
+
+    fn type_tag(&self) -> u16 {
+        SPHERICAL_AGENT_TAG
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SphericalAgent"
+    }
+
+    fn clone_agent(&self) -> Box<dyn Agent> {
+        Box::new(self.clone())
+    }
+
+    fn serialize_extra(&self, buf: &mut Vec<u8>) {
+        for c in self.displacement.0 {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+
+    fn deserialize_extra(&mut self, data: &[u8]) -> usize {
+        for (i, c) in self.displacement.0.iter_mut().enumerate() {
+            *c = Real::from_le_bytes(data[i * 8..i * 8 + 8].try_into().unwrap());
+        }
+        24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_volume_roundtrip() {
+        let mut c = SphericalAgent::with_diameter(Real3::ZERO, 10.0);
+        let v0 = c.volume();
+        c.change_volume(100.0);
+        assert!((c.volume() - (v0 + 100.0)).abs() < 1e-9);
+        assert!(c.base.diameter > 10.0);
+    }
+
+    #[test]
+    fn division_conserves_volume_and_separates() {
+        let mut mother = SphericalAgent::with_diameter(Real3::ZERO, 12.0);
+        let v = mother.volume();
+        let daughter = mother.divide(Real3::new(1.0, 0.0, 0.0));
+        assert!((mother.volume() + daughter.volume() - v).abs() < 1e-9);
+        assert!((mother.volume() - daughter.volume()).abs() < 1e-9);
+        assert!(mother.base.position.distance(&daughter.base.position) > 0.0);
+    }
+
+    #[test]
+    fn downcast_and_common_accessors() {
+        let mut boxed: Box<dyn Agent> = Box::new(SphericalAgent::new(Real3::new(1.0, 2.0, 3.0)));
+        assert_eq!(boxed.position(), Real3::new(1.0, 2.0, 3.0));
+        boxed.set_diameter(7.0);
+        assert_eq!(boxed.diameter(), 7.0);
+        assert!(boxed.downcast_ref::<SphericalAgent>().is_some());
+        boxed.downcast_mut::<SphericalAgent>().unwrap().displacement = Real3::new(1.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn serialize_extra_roundtrip() {
+        let mut a = SphericalAgent::new(Real3::ZERO);
+        a.displacement = Real3::new(0.5, -1.5, 2.5);
+        let mut buf = Vec::new();
+        a.serialize_extra(&mut buf);
+        let mut b = SphericalAgent::new(Real3::ZERO);
+        let consumed = b.deserialize_extra(&buf);
+        assert_eq!(consumed, 24);
+        assert_eq!(b.displacement, a.displacement);
+    }
+}

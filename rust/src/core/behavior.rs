@@ -1,0 +1,92 @@
+//! Behaviors — per-agent actions (paper §4.2.1, Fig 4.1B).
+//!
+//! A behavior is attached to individual agents and runs once per
+//! iteration (subject to operation frequency). Behaviors decide, via
+//! `copy_to_new` / `remove_from_existing`, how they propagate when the
+//! agent creates new agents (paper §4.4.2, Fig 4.11).
+//!
+//! Contract (thread safety, paper Fig 4.4): a behavior may freely
+//! mutate *its own* agent. Interaction with the rest of the simulation
+//! goes through the [`AgentContext`]: neighbor reads, deferred
+//! neighbor updates, substance access, agent creation/removal. This is
+//! the "option one is favorable from a performance perspective"
+//! formulation of §2.1.1 — self-mutation needs no synchronization.
+
+use crate::core::agent::Agent;
+use crate::core::execution_context::AgentContext;
+
+/// A unit of agent logic. Cloneable so it can be copied to daughters.
+pub trait Behavior: Send + Sync {
+    /// Execute one step of this behavior on `agent`.
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext);
+
+    /// Deep copy (for propagation to new agents).
+    fn clone_behavior(&self) -> Box<dyn Behavior>;
+
+    /// Copy this behavior to agents created by this agent? (paper:
+    /// `AlwaysCopyToNew`). Default: yes.
+    fn copy_to_new(&self) -> bool {
+        true
+    }
+
+    /// Remove this behavior from the existing agent after it created a
+    /// new one? Default: no.
+    fn remove_from_existing(&self) -> bool {
+        false
+    }
+
+    /// Stable name for removal / debugging.
+    fn name(&self) -> &'static str {
+        "behavior"
+    }
+}
+
+impl std::fmt::Debug for Box<dyn Behavior> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Behavior({})", self.name())
+    }
+}
+
+impl Clone for Box<dyn Behavior> {
+    fn clone(&self) -> Self {
+        self.clone_behavior()
+    }
+}
+
+/// Adapter: build a behavior from a plain function or closure.
+pub struct FnBehavior<F>
+where
+    F: Fn(&mut dyn Agent, &mut AgentContext) + Send + Sync + Clone + 'static,
+{
+    pub f: F,
+    pub behavior_name: &'static str,
+}
+
+impl<F> FnBehavior<F>
+where
+    F: Fn(&mut dyn Agent, &mut AgentContext) + Send + Sync + Clone + 'static,
+{
+    pub fn new(behavior_name: &'static str, f: F) -> Box<dyn Behavior> {
+        Box::new(FnBehavior { f, behavior_name })
+    }
+}
+
+impl<F> Behavior for FnBehavior<F>
+where
+    F: Fn(&mut dyn Agent, &mut AgentContext) + Send + Sync + Clone + 'static,
+{
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        (self.f)(agent, ctx);
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(FnBehavior {
+            f: self.f.clone(),
+            behavior_name: self.behavior_name,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        self.behavior_name
+    }
+}

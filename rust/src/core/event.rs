@@ -1,0 +1,49 @@
+//! New-agent events (paper Fig 4.11, §4.4.2).
+//!
+//! When an agent creates another agent (cell division, neurite
+//! branching, ...), the event carries *why*, so behaviors can decide
+//! whether to copy themselves to the new agent or remove themselves
+//! from the existing one, and user agents can initialize extra
+//! attributes in `Agent::initialize`.
+
+/// The cause of a new-agent creation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NewAgentEventKind {
+    /// A cell divided into mother + daughter.
+    CellDivision,
+    /// A neurite grew a new terminal segment.
+    NeuriteElongation,
+    /// A neurite split into two daughter branches.
+    NeuriteBranching,
+    /// A terminal neurite bifurcated.
+    NeuriteBifurcation,
+    /// A soma sprouted a brand-new neurite.
+    NewNeurite,
+    /// Anything model-specific.
+    Custom(u32),
+}
+
+/// Event payload handed to `Agent::initialize` and used for the
+/// behavior copy/remove decision.
+#[derive(Debug, Clone, Copy)]
+pub struct NewAgentEvent {
+    pub kind: NewAgentEventKind,
+    /// UID of the agent that triggered the event (the mother).
+    pub creator_uid: u64,
+    /// Iteration in which the event was raised.
+    pub iteration: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_compare() {
+        assert_eq!(NewAgentEventKind::CellDivision, NewAgentEventKind::CellDivision);
+        assert_ne!(
+            NewAgentEventKind::Custom(1),
+            NewAgentEventKind::Custom(2)
+        );
+    }
+}

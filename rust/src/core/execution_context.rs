@@ -1,0 +1,377 @@
+//! Execution contexts (paper §5.2.1) — the facade between agent code
+//! and the engine.
+//!
+//! Behaviors and operations interact with the rest of the simulation
+//! exclusively through [`AgentContext`]:
+//! * neighbor queries (read-only, via the environment),
+//! * agent creation / removal (buffered thread-locally, committed at
+//!   the iteration barrier — new agents become visible in iteration
+//!   i+1, exactly paper §4.4.2),
+//! * deferred neighbor updates (the safe replacement for BioDynaMo's
+//!   synchronized neighbor mutation of Fig 4.4: updates are queued and
+//!   applied at the barrier in deterministic UID order),
+//! * extracellular substances,
+//! * the deterministic per-agent RNG stream.
+//!
+//! Determinism: new-agent UIDs are assigned at commit time in
+//! `(creator_uid, seq)` order, so they do not depend on thread count or
+//! scheduling — the property the distributed-correctness experiment
+//! (Fig 6.5) relies on.
+
+use crate::core::agent::{Agent, AgentHandle, AgentUid};
+use crate::core::event::{NewAgentEvent, NewAgentEventKind};
+use crate::core::math::Real3;
+use crate::core::param::Param;
+use crate::core::random::Rng;
+use crate::core::resource_manager::ResourceManager;
+use crate::env::Environment;
+use crate::physics::diffusion::SubstanceRegistry;
+use crate::Real;
+
+/// A new agent waiting for the iteration barrier.
+pub struct PendingNewAgent {
+    pub creator_uid: AgentUid,
+    /// per-creator sequence number (deterministic ordering key)
+    pub seq: u32,
+    pub kind: NewAgentEventKind,
+    pub agent: Box<dyn Agent>,
+}
+
+/// A deferred update to another agent, applied at the barrier.
+pub struct DeferredUpdate {
+    pub target: AgentUid,
+    /// ordering key within the same target (creator uid)
+    pub source: AgentUid,
+    pub action: Box<dyn FnOnce(&mut dyn Agent) + Send>,
+}
+
+/// Thread-local mutation queues (paper §5.3.2 "thread-local copy of
+/// additions and removals").
+#[derive(Default)]
+pub struct ThreadQueues {
+    pub new_agents: Vec<PendingNewAgent>,
+    pub removals: Vec<AgentUid>,
+    pub deferred: Vec<DeferredUpdate>,
+}
+
+impl ThreadQueues {
+    pub fn is_empty(&self) -> bool {
+        self.new_agents.is_empty() && self.removals.is_empty() && self.deferred.is_empty()
+    }
+}
+
+/// Shared, read-only view of the simulation during the parallel loop.
+pub struct IterationShared<'a> {
+    pub rm: &'a ResourceManager,
+    pub env: &'a dyn Environment,
+    pub substances: &'a SubstanceRegistry,
+    pub param: &'a Param,
+    pub iteration: u64,
+    pub seed: u64,
+}
+
+/// Per-agent execution context handed to behaviors and agent ops.
+pub struct AgentContext<'a, 'q> {
+    pub shared: &'a IterationShared<'a>,
+    pub queues: &'q mut ThreadQueues,
+    /// Deterministic RNG stream for (seed, agent, iteration).
+    pub rng: Rng,
+    cur_uid: AgentUid,
+    cur_pos: Real3,
+    seq: u32,
+}
+
+impl<'a, 'q> AgentContext<'a, 'q> {
+    pub fn new(
+        shared: &'a IterationShared<'a>,
+        queues: &'q mut ThreadQueues,
+        cur_uid: AgentUid,
+        cur_pos: Real3,
+    ) -> Self {
+        let rng = Rng::for_agent(shared.seed, cur_uid, shared.iteration, 0);
+        AgentContext {
+            shared,
+            queues,
+            rng,
+            cur_uid,
+            cur_pos,
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    pub fn iteration(&self) -> u64 {
+        self.shared.iteration
+    }
+
+    #[inline]
+    pub fn param(&self) -> &Param {
+        self.shared.param
+    }
+
+    #[inline]
+    pub fn dt(&self) -> Real {
+        self.shared.param.simulation_time_step
+    }
+
+    #[inline]
+    pub fn current_uid(&self) -> AgentUid {
+        self.cur_uid
+    }
+
+    // --- neighbor queries -------------------------------------------------
+
+    /// Visit every agent within `radius` of the current agent (itself
+    /// excluded). `f(handle, agent, squared_distance)`.
+    pub fn for_each_neighbor(
+        &self,
+        radius: Real,
+        mut f: impl FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        let uid = self.cur_uid;
+        self.shared.env.for_each_neighbor(
+            self.cur_pos,
+            radius,
+            self.shared.rm,
+            &mut |h, agent, dist2| {
+                if agent.uid() != uid {
+                    f(h, agent, dist2);
+                }
+            },
+        );
+    }
+
+    /// Visit neighbors around an arbitrary position (self excluded).
+    pub fn for_each_neighbor_of(
+        &self,
+        pos: Real3,
+        radius: Real,
+        mut f: impl FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        let uid = self.cur_uid;
+        self.shared
+            .env
+            .for_each_neighbor(pos, radius, self.shared.rm, &mut |h, agent, dist2| {
+                if agent.uid() != uid {
+                    f(h, agent, dist2);
+                }
+            });
+    }
+
+    /// Number of neighbors within `radius`.
+    pub fn count_neighbors(&self, radius: Real) -> usize {
+        let mut n = 0;
+        self.for_each_neighbor(radius, |_, _, _| n += 1);
+        n
+    }
+
+    // --- agent lifecycle ----------------------------------------------------
+
+    /// Queue a new agent; it becomes visible in iteration i+1. The UID
+    /// is assigned at commit. Returns the per-creator sequence number.
+    pub fn new_agent(&mut self, kind: NewAgentEventKind, agent: Box<dyn Agent>) -> u32 {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queues.new_agents.push(PendingNewAgent {
+            creator_uid: self.cur_uid,
+            seq,
+            kind,
+            agent,
+        });
+        seq
+    }
+
+    /// Queue removal of an agent (takes effect at the barrier).
+    pub fn remove_agent(&mut self, uid: AgentUid) {
+        self.queues.removals.push(uid);
+    }
+
+    /// Queue removal of the current agent.
+    pub fn remove_self(&mut self) {
+        let uid = self.cur_uid;
+        self.remove_agent(uid);
+    }
+
+    /// Queue a deferred update of another agent, applied at the barrier
+    /// in deterministic (target, source) order. This replaces direct
+    /// neighbor mutation (paper Fig 4.4's synchronization mechanisms).
+    pub fn defer_update(
+        &mut self,
+        target: AgentUid,
+        action: impl FnOnce(&mut dyn Agent) + Send + 'static,
+    ) {
+        self.queues.deferred.push(DeferredUpdate {
+            target,
+            source: self.cur_uid,
+            action: Box::new(action),
+        });
+    }
+
+    // --- substances ---------------------------------------------------------
+
+    pub fn substances(&self) -> &SubstanceRegistry {
+        self.shared.substances
+    }
+
+    /// Look up an agent by UID (e.g. a neurite's mother). Read-only.
+    pub fn agent_by_uid(&self, uid: AgentUid) -> Option<&dyn Agent> {
+        self.shared.rm.get_by_uid(uid)
+    }
+}
+
+/// Deterministically merge per-thread queues and commit them.
+///
+/// Returns (added_handles, removed_agents).
+pub fn commit_queues(
+    queues: Vec<ThreadQueues>,
+    rm: &mut ResourceManager,
+    pool: &crate::core::parallel::ThreadPool,
+    iteration: u64,
+) -> (Vec<AgentHandle>, Vec<Box<dyn Agent>>) {
+    let mut new_agents = Vec::new();
+    let mut removals = Vec::new();
+    let mut deferred = Vec::new();
+    for q in queues {
+        new_agents.extend(q.new_agents);
+        removals.extend(q.removals);
+        deferred.extend(q.deferred);
+    }
+
+    // 1. deferred updates, ordered by (target, source, insertion)
+    deferred.sort_by_key(|d| (d.target, d.source));
+    for d in deferred {
+        if let Some(h) = rm.lookup(d.target) {
+            (d.action)(rm.get_mut(h));
+        }
+        // silently drop updates to agents removed this iteration
+    }
+
+    // 2. new agents: deterministic UID assignment in (creator, seq) order
+    new_agents.sort_by_key(|p| (p.creator_uid, p.seq));
+    let mut boxes = Vec::with_capacity(new_agents.len());
+    for mut pending in new_agents {
+        let uid = rm.issue_uid();
+        pending.agent.base_mut().uid = uid;
+        let event = NewAgentEvent {
+            kind: pending.kind,
+            creator_uid: pending.creator_uid,
+            iteration,
+        };
+        pending.agent.initialize(&event);
+        boxes.push(pending.agent);
+    }
+    let added = rm.commit_additions(boxes);
+
+    // 3. removals
+    let removed = rm.commit_removals(removals, pool);
+    (added, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::parallel::ThreadPool;
+
+    fn setup_rm(n: usize) -> ResourceManager {
+        let mut rm = ResourceManager::new(1);
+        for i in 0..n {
+            rm.add_agent(Box::new(SphericalAgent::new(Real3::new(i as f64, 0.0, 0.0))));
+        }
+        rm
+    }
+
+    #[test]
+    fn commit_assigns_deterministic_uids() {
+        let pool = ThreadPool::new(1);
+        // two "threads" creating agents in interleaved order
+        let mk = |creator: AgentUid, seq: u32| PendingNewAgent {
+            creator_uid: creator,
+            seq,
+            kind: NewAgentEventKind::CellDivision,
+            agent: Box::new(SphericalAgent::new(Real3::ZERO)),
+        };
+        let run = |order: Vec<(AgentUid, u32)>| -> Vec<AgentUid> {
+            let mut rm = setup_rm(3);
+            let mut q1 = ThreadQueues::default();
+            for (c, s) in order {
+                q1.new_agents.push(mk(c, s));
+            }
+            let (added, _) = commit_queues(vec![q1], &mut rm, &pool, 0);
+            added.iter().map(|&h| rm.get(h).uid()).collect()
+        };
+        // same pendings in different arrival order -> same uid mapping
+        let a = run(vec![(1, 0), (2, 0), (1, 1)]);
+        let b = run(vec![(2, 0), (1, 1), (1, 0)]);
+        // sort key (creator, seq): (1,0) -> first uid, (1,1) -> second, (2,0) -> third
+        assert_eq!(a.len(), 3);
+        let (x, y) = (a.clone(), {
+            let mut s = b.clone();
+            s.sort_unstable();
+            s
+        });
+        let mut xs = x;
+        xs.sort_unstable();
+        assert_eq!(xs, y);
+    }
+
+    #[test]
+    fn deferred_updates_applied_in_order() {
+        let pool = ThreadPool::new(1);
+        let mut rm = setup_rm(1);
+        let uid = rm.get(AgentHandle::new(0, 0)).uid();
+        let mut q = ThreadQueues::default();
+        // two deferred updates from different sources; order by source
+        q.deferred.push(DeferredUpdate {
+            target: uid,
+            source: 9,
+            action: Box::new(|a| a.set_diameter(99.0)),
+        });
+        q.deferred.push(DeferredUpdate {
+            target: uid,
+            source: 2,
+            action: Box::new(|a| a.set_diameter(22.0)),
+        });
+        commit_queues(vec![q], &mut rm, &pool, 0);
+        // source 2 applies first, then source 9 overwrites
+        assert_eq!(rm.get_by_uid(uid).unwrap().diameter(), 99.0);
+    }
+
+    #[test]
+    fn deferred_to_removed_agent_is_dropped() {
+        let pool = ThreadPool::new(1);
+        let mut rm = setup_rm(2);
+        let uid0 = rm.get(AgentHandle::new(0, 0)).uid();
+        let mut q = ThreadQueues::default();
+        q.removals.push(uid0);
+        let (_, removed) = commit_queues(vec![q], &mut rm, &pool, 0);
+        assert_eq!(removed.len(), 1);
+        let mut q2 = ThreadQueues::default();
+        q2.deferred.push(DeferredUpdate {
+            target: uid0,
+            source: 1,
+            action: Box::new(|_| panic!("must not run")),
+        });
+        commit_queues(vec![q2], &mut rm, &pool, 1);
+    }
+
+    #[test]
+    fn removal_and_addition_same_barrier() {
+        let pool = ThreadPool::new(2);
+        let mut rm = setup_rm(5);
+        let uid2 = 3; // third added agent
+        let mut q = ThreadQueues::default();
+        q.removals.push(uid2);
+        q.new_agents.push(PendingNewAgent {
+            creator_uid: 1,
+            seq: 0,
+            kind: NewAgentEventKind::CellDivision,
+            agent: Box::new(SphericalAgent::new(Real3::new(50.0, 0.0, 0.0))),
+        });
+        let (added, removed) = commit_queues(vec![q], &mut rm, &pool, 0);
+        assert_eq!(added.len(), 1);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(rm.num_agents(), 5);
+        assert!(rm.lookup(uid2).is_none());
+    }
+}

@@ -1,0 +1,369 @@
+//! Multi-simulation execution modes (paper Fig 4.5 C-E, §4.4.10).
+//!
+//! BioDynaMo can run multiple simulations in one process — sequentially
+//! (C), alternating with information exchange (D), or driven by an
+//! optimization / sensitivity-analysis algorithm (E). This module
+//! provides those modes on top of the `Simulation` object plus the
+//! calibration loop the paper uses for the epidemiology model
+//! (particle-swarm optimization against a ground-truth series).
+
+use crate::analysis::optim::{particle_swarm, OptimResult, PsoConfig};
+use crate::analysis::TimeSeries;
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+
+/// Mode C: run several independent simulations sequentially; returns
+/// one result per simulation.
+pub fn run_batch<T>(
+    builders: Vec<Box<dyn Fn() -> Simulation>>,
+    iterations: u64,
+    mut extract: impl FnMut(&Simulation) -> T,
+) -> Vec<T> {
+    builders
+        .into_iter()
+        .map(|b| {
+            let mut sim = b();
+            sim.simulate(iterations);
+            extract(&sim)
+        })
+        .collect()
+}
+
+/// Mode D: alternate between simulations in rounds, exchanging
+/// information through `exchange` after every round ("multiple
+/// simulations in the same process with alternating execution and
+/// potential exchange of information"). Only one simulation is active
+/// at a time, exactly as the paper specifies.
+pub fn run_alternating(
+    sims: &mut [Simulation],
+    rounds: u64,
+    iterations_per_round: u64,
+    mut exchange: impl FnMut(&mut [Simulation], u64),
+) {
+    for round in 0..rounds {
+        for sim in sims.iter_mut() {
+            sim.simulate(iterations_per_round);
+        }
+        exchange(sims, round);
+    }
+}
+
+/// Repeated stochastic runs of the same model with different seeds;
+/// returns the per-seed extracted observables (the paper's "repeat the
+/// simulation often enough to reach statistical significance").
+pub fn run_repetitions<T>(
+    builder: &dyn Fn(Param) -> Simulation,
+    base_param: Param,
+    seeds: &[u64],
+    iterations: u64,
+    mut extract: impl FnMut(&Simulation) -> T,
+) -> Vec<T> {
+    seeds
+        .iter()
+        .map(|&seed| {
+            let mut p = base_param.clone();
+            p.seed = seed;
+            let mut sim = builder(p);
+            sim.simulate(iterations);
+            extract(&sim)
+        })
+        .collect()
+}
+
+/// Mode E: calibrate model parameters against an objective by running
+/// one simulation per candidate parameter vector (PSO, §4.4.10).
+///
+/// `build_and_score(params)` constructs the simulation for a candidate,
+/// runs it, and returns the error against the ground truth.
+pub fn calibrate(
+    build_and_score: &mut dyn FnMut(&[f64]) -> f64,
+    bounds: &[(f64, f64)],
+    config: &PsoConfig,
+) -> OptimResult {
+    particle_swarm(build_and_score, bounds, config)
+}
+
+/// Standalone operation collecting observables each iteration
+/// (paper §4.4.5: "an easy mechanism to collect simulation data over
+/// time"). Shares the series through an `Arc<Mutex<TimeSeries>>` so the
+/// caller keeps access while the op is owned by the scheduler.
+pub struct CollectOp {
+    pub frequency: u64,
+    pub series: std::sync::Arc<std::sync::Mutex<TimeSeries>>,
+    #[allow(clippy::type_complexity)]
+    pub collect: Box<dyn FnMut(&Simulation, &mut TimeSeries) + Send>,
+}
+
+impl CollectOp {
+    pub fn new(
+        frequency: u64,
+        collect: impl FnMut(&Simulation, &mut TimeSeries) + Send + 'static,
+    ) -> (Self, std::sync::Arc<std::sync::Mutex<TimeSeries>>) {
+        let series = std::sync::Arc::new(std::sync::Mutex::new(TimeSeries::new()));
+        (
+            CollectOp {
+                frequency,
+                series: std::sync::Arc::clone(&series),
+                collect: Box::new(collect),
+            },
+            series,
+        )
+    }
+}
+
+impl crate::core::operation::StandaloneOperation for CollectOp {
+    fn name(&self) -> &'static str {
+        "collect"
+    }
+
+    fn frequency(&self) -> u64 {
+        self.frequency
+    }
+
+    fn run(&mut self, sim: &mut Simulation) {
+        let mut series = self.series.lock().unwrap();
+        (self.collect)(sim, &mut series);
+    }
+}
+
+/// Agent-operation wrapper restricted by a predicate — the paper's
+/// agent filters (§4.4.8) and the mechanism behind hierarchical model
+/// support (§4.4.6: "execute a different set of operations for large
+/// and small agents").
+pub struct FilteredOp {
+    pub inner: Box<dyn crate::core::operation::AgentOperation>,
+    #[allow(clippy::type_complexity)]
+    pub filter: Box<dyn Fn(&dyn crate::core::agent::Agent) -> bool + Send + Sync>,
+}
+
+impl crate::core::operation::AgentOperation for FilteredOp {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn frequency(&self) -> u64 {
+        self.inner.frequency()
+    }
+
+    fn applies_to(&self, agent: &dyn crate::core::agent::Agent) -> bool {
+        (self.filter)(agent) && self.inner.applies_to(agent)
+    }
+
+    fn run(
+        &self,
+        agent: &mut dyn crate::core::agent::Agent,
+        ctx: &mut crate::core::execution_context::AgentContext,
+    ) {
+        self.inner.run(agent, ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::sir_ode::{integrate, SirState};
+    use crate::core::agent::{Agent, SphericalAgent};
+    use crate::core::behavior::FnBehavior;
+    use crate::core::execution_context::AgentContext;
+    use crate::core::operation::AgentOperation;
+    use crate::models::epidemiology::{build, census, SirParams};
+    use crate::Real3;
+
+    #[test]
+    fn batch_mode_runs_all() {
+        let builders: Vec<Box<dyn Fn() -> Simulation>> = (0..3)
+            .map(|i| {
+                Box::new(move || {
+                    let mut p = Param::default();
+                    p.seed = 100 + i;
+                    let mut sim = Simulation::new(p);
+                    for k in 0..=i {
+                        sim.add_agent(Box::new(SphericalAgent::new(Real3::new(
+                            k as f64 * 30.0,
+                            0.0,
+                            0.0,
+                        ))));
+                    }
+                    sim
+                }) as Box<dyn Fn() -> Simulation>
+            })
+            .collect();
+        let counts = run_batch(builders, 2, |s| s.num_agents());
+        assert_eq!(counts, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn alternating_mode_exchanges_information() {
+        let mk = |seed| {
+            let mut p = Param::default();
+            p.seed = seed;
+            let mut sim = Simulation::new(p);
+            sim.add_agent(Box::new(SphericalAgent::with_diameter(Real3::ZERO, 10.0)));
+            sim
+        };
+        let mut sims = vec![mk(1), mk(2)];
+        run_alternating(&mut sims, 3, 2, |sims, _round| {
+            // exchange: copy sim0's agent diameter +1 into sim1
+            let d = sims[0]
+                .rm
+                .get(crate::core::agent::AgentHandle::new(0, 0))
+                .diameter();
+            sims[1]
+                .rm
+                .get_mut(crate::core::agent::AgentHandle::new(0, 0))
+                .set_diameter(d + 1.0);
+        });
+        assert_eq!(sims[0].iteration, 6);
+        assert_eq!(sims[1].iteration, 6);
+        assert_eq!(
+            sims[1]
+                .rm
+                .get(crate::core::agent::AgentHandle::new(0, 0))
+                .diameter(),
+            11.0
+        );
+    }
+
+    #[test]
+    fn repetitions_differ_by_seed() {
+        let p = SirParams {
+            initial_susceptible: 200,
+            initial_infected: 5,
+            space_length: 40.0,
+            ..SirParams::measles()
+        };
+        let builder = move |param: Param| build(param, &p);
+        let infected = run_repetitions(&builder, Param::default(), &[1, 2, 3], 50, |s| {
+            census(s).1
+        });
+        assert_eq!(infected.len(), 3);
+        // stochastic: not all identical (with overwhelming probability)
+        assert!(infected.iter().any(|&i| i != infected[0]) || infected[0] > 0);
+    }
+
+    #[test]
+    fn calibration_recovers_infection_radius() {
+        // Ground truth: ODE infected fraction after T steps. Calibrate
+        // the ABM's infection radius to match — the paper's §4.6.3
+        // workflow in miniature.
+        let model = SirParams {
+            initial_susceptible: 300,
+            initial_infected: 10,
+            space_length: 50.0,
+            ..SirParams::measles()
+        };
+        let steps = 40u64;
+        let ode = integrate(
+            SirState {
+                s: 300.0,
+                i: 10.0,
+                r: 0.0,
+            },
+            model.beta,
+            model.gamma,
+            1.0,
+            steps as usize,
+        );
+        let target = ode.last().unwrap().i / 310.0;
+
+        let mut evals = 0;
+        let mut objective = |x: &[f64]| -> f64 {
+            evals += 1;
+            let mut p = model.clone();
+            p.infection_radius = x[0];
+            let mut param = Param::default();
+            param.seed = 7;
+            let mut sim = build(param, &p);
+            sim.simulate(steps);
+            let (_, i, _) = census(&sim);
+            (i as f64 / 310.0 - target).abs()
+        };
+        let result = calibrate(
+            &mut objective,
+            &[(0.5, 8.0)],
+            &PsoConfig {
+                particles: 6,
+                iterations: 8,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        assert!(evals >= 6 * 9);
+        assert!(
+            result.best_value < 0.1,
+            "calibrated infected fraction within 10% of ODE: err={}",
+            result.best_value
+        );
+        assert!((0.5..=8.0).contains(&result.best_position[0]));
+    }
+
+    #[test]
+    fn collect_op_gathers_series() {
+        let p = SirParams {
+            initial_susceptible: 100,
+            initial_infected: 5,
+            space_length: 30.0,
+            ..SirParams::measles()
+        };
+        let mut sim = build(Param::default(), &p);
+        let (op, series) = CollectOp::new(2, |sim, ts| {
+            let (s, i, r) = census(sim);
+            ts.record("susceptible", sim.iteration, s as f64);
+            ts.record("infected", sim.iteration, i as f64);
+            ts.record("recovered", sim.iteration, r as f64);
+        });
+        sim.add_standalone_op(Box::new(op));
+        sim.simulate(10);
+        let ts = series.lock().unwrap();
+        // frequency 2 over iterations 0..9 -> collected at 0,2,4,6,8
+        assert_eq!(ts.get("infected").unwrap().len(), 5);
+        let total: f64 = ["susceptible", "infected", "recovered"]
+            .iter()
+            .map(|k| ts.last(k).unwrap())
+            .sum();
+        assert_eq!(total, 105.0);
+    }
+
+    #[test]
+    fn filtered_op_respects_predicate() {
+        struct Marker;
+        impl AgentOperation for Marker {
+            fn name(&self) -> &'static str {
+                "marker"
+            }
+            fn run(&self, agent: &mut dyn Agent, _ctx: &mut AgentContext) {
+                let d = agent.diameter();
+                agent.set_diameter(d + 1.0);
+            }
+        }
+        let mut sim = Simulation::with_defaults();
+        sim.remove_agent_op("mechanical_forces");
+        sim.add_agent_op(Box::new(FilteredOp {
+            inner: Box::new(Marker),
+            // hierarchical support: only "large" agents (§4.4.6)
+            filter: Box::new(|a| a.diameter() >= 10.0),
+        }));
+        sim.add_agent(Box::new(SphericalAgent::with_diameter(Real3::ZERO, 12.0)));
+        sim.add_agent(Box::new(SphericalAgent::with_diameter(
+            Real3::new(50.0, 0.0, 0.0),
+            5.0,
+        )));
+        sim.simulate(3);
+        let mut diameters: Vec<f64> = Vec::new();
+        sim.rm.for_each_agent(|_, a| diameters.push(a.diameter()));
+        diameters.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(diameters, vec![5.0, 15.0], "only the large agent grew");
+    }
+
+    #[test]
+    fn fn_behavior_and_filtered_op_compose() {
+        // regression: ops added at runtime see agents added later
+        let mut sim = Simulation::with_defaults();
+        sim.remove_agent_op("mechanical_forces");
+        let mut a = SphericalAgent::new(Real3::ZERO);
+        a.base.behaviors.push(FnBehavior::new("noop", |_a, _c| {}));
+        sim.add_agent(Box::new(a));
+        sim.simulate(2);
+        assert_eq!(sim.iteration, 2);
+    }
+}

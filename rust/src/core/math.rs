@@ -1,0 +1,247 @@
+//! Small 3D vector math used across the engine (the paper's `Real3`).
+
+use crate::Real;
+use std::ops::{Add, AddAssign, Div, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+/// A 3-component vector of [`Real`]. Positions, directions, forces.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Real3(pub [Real; 3]);
+
+impl Real3 {
+    pub const ZERO: Real3 = Real3([0.0, 0.0, 0.0]);
+
+    #[inline]
+    pub fn new(x: Real, y: Real, z: Real) -> Self {
+        Real3([x, y, z])
+    }
+
+    #[inline]
+    pub fn x(&self) -> Real {
+        self.0[0]
+    }
+
+    #[inline]
+    pub fn y(&self) -> Real {
+        self.0[1]
+    }
+
+    #[inline]
+    pub fn z(&self) -> Real {
+        self.0[2]
+    }
+
+    /// Euclidean norm.
+    #[inline]
+    pub fn norm(&self) -> Real {
+        self.squared_norm().sqrt()
+    }
+
+    #[inline]
+    pub fn squared_norm(&self) -> Real {
+        self.0[0] * self.0[0] + self.0[1] * self.0[1] + self.0[2] * self.0[2]
+    }
+
+    /// Unit vector in this direction; `ZERO` stays `ZERO`.
+    #[inline]
+    pub fn normalized(&self) -> Real3 {
+        let n = self.norm();
+        if n > 0.0 {
+            *self / n
+        } else {
+            Real3::ZERO
+        }
+    }
+
+    #[inline]
+    pub fn dot(&self, other: &Real3) -> Real {
+        self.0[0] * other.0[0] + self.0[1] * other.0[1] + self.0[2] * other.0[2]
+    }
+
+    #[inline]
+    pub fn cross(&self, other: &Real3) -> Real3 {
+        Real3([
+            self.0[1] * other.0[2] - self.0[2] * other.0[1],
+            self.0[2] * other.0[0] - self.0[0] * other.0[2],
+            self.0[0] * other.0[1] - self.0[1] * other.0[0],
+        ])
+    }
+
+    #[inline]
+    pub fn squared_distance(&self, other: &Real3) -> Real {
+        (*self - *other).squared_norm()
+    }
+
+    #[inline]
+    pub fn distance(&self, other: &Real3) -> Real {
+        self.squared_distance(other).sqrt()
+    }
+
+    /// Component-wise min.
+    #[inline]
+    pub fn min(&self, other: &Real3) -> Real3 {
+        Real3([
+            self.0[0].min(other.0[0]),
+            self.0[1].min(other.0[1]),
+            self.0[2].min(other.0[2]),
+        ])
+    }
+
+    /// Component-wise max.
+    #[inline]
+    pub fn max(&self, other: &Real3) -> Real3 {
+        Real3([
+            self.0[0].max(other.0[0]),
+            self.0[1].max(other.0[1]),
+            self.0[2].max(other.0[2]),
+        ])
+    }
+
+    /// An orthogonal unit vector (any); used by neurite branching.
+    pub fn orthogonal(&self) -> Real3 {
+        let axis = if self.0[0].abs() < 0.9 {
+            Real3::new(1.0, 0.0, 0.0)
+        } else {
+            Real3::new(0.0, 1.0, 0.0)
+        };
+        self.cross(&axis).normalized()
+    }
+}
+
+impl From<[Real; 3]> for Real3 {
+    fn from(v: [Real; 3]) -> Self {
+        Real3(v)
+    }
+}
+
+impl Index<usize> for Real3 {
+    type Output = Real;
+    #[inline]
+    fn index(&self, i: usize) -> &Real {
+        &self.0[i]
+    }
+}
+
+impl IndexMut<usize> for Real3 {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut Real {
+        &mut self.0[i]
+    }
+}
+
+impl Add for Real3 {
+    type Output = Real3;
+    #[inline]
+    fn add(self, o: Real3) -> Real3 {
+        Real3([self.0[0] + o.0[0], self.0[1] + o.0[1], self.0[2] + o.0[2]])
+    }
+}
+
+impl AddAssign for Real3 {
+    #[inline]
+    fn add_assign(&mut self, o: Real3) {
+        self.0[0] += o.0[0];
+        self.0[1] += o.0[1];
+        self.0[2] += o.0[2];
+    }
+}
+
+impl Sub for Real3 {
+    type Output = Real3;
+    #[inline]
+    fn sub(self, o: Real3) -> Real3 {
+        Real3([self.0[0] - o.0[0], self.0[1] - o.0[1], self.0[2] - o.0[2]])
+    }
+}
+
+impl SubAssign for Real3 {
+    #[inline]
+    fn sub_assign(&mut self, o: Real3) {
+        self.0[0] -= o.0[0];
+        self.0[1] -= o.0[1];
+        self.0[2] -= o.0[2];
+    }
+}
+
+impl Mul<Real> for Real3 {
+    type Output = Real3;
+    #[inline]
+    fn mul(self, s: Real) -> Real3 {
+        Real3([self.0[0] * s, self.0[1] * s, self.0[2] * s])
+    }
+}
+
+impl Div<Real> for Real3 {
+    type Output = Real3;
+    #[inline]
+    fn div(self, s: Real) -> Real3 {
+        Real3([self.0[0] / s, self.0[1] / s, self.0[2] / s])
+    }
+}
+
+impl Neg for Real3 {
+    type Output = Real3;
+    #[inline]
+    fn neg(self) -> Real3 {
+        Real3([-self.0[0], -self.0[1], -self.0[2]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Real3::new(1.0, 2.0, 3.0);
+        let b = Real3::new(4.0, 5.0, 6.0);
+        assert_eq!(a + b, Real3::new(5.0, 7.0, 9.0));
+        assert_eq!(b - a, Real3::new(3.0, 3.0, 3.0));
+        assert_eq!(a * 2.0, Real3::new(2.0, 4.0, 6.0));
+        assert_eq!(b / 2.0, Real3::new(2.0, 2.5, 3.0));
+        assert_eq!(-a, Real3::new(-1.0, -2.0, -3.0));
+    }
+
+    #[test]
+    fn norm_and_distance() {
+        let a = Real3::new(3.0, 4.0, 0.0);
+        assert_eq!(a.norm(), 5.0);
+        assert_eq!(a.squared_norm(), 25.0);
+        let n = a.normalized();
+        assert!((n.norm() - 1.0).abs() < 1e-12);
+        assert_eq!(Real3::ZERO.normalized(), Real3::ZERO);
+        assert_eq!(a.distance(&Real3::ZERO), 5.0);
+    }
+
+    #[test]
+    fn dot_cross() {
+        let x = Real3::new(1.0, 0.0, 0.0);
+        let y = Real3::new(0.0, 1.0, 0.0);
+        assert_eq!(x.dot(&y), 0.0);
+        assert_eq!(x.cross(&y), Real3::new(0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn orthogonal_is_orthogonal_and_unit() {
+        for v in [
+            Real3::new(1.0, 2.0, 3.0),
+            Real3::new(0.9999, 0.0001, 0.0),
+            Real3::new(0.0, 0.0, 1.0),
+        ] {
+            let o = v.orthogonal();
+            assert!(v.dot(&o).abs() < 1e-9, "{v:?} . {o:?}");
+            assert!((o.norm() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn min_max_index() {
+        let a = Real3::new(1.0, 5.0, 3.0);
+        let b = Real3::new(2.0, 4.0, 3.0);
+        assert_eq!(a.min(&b), Real3::new(1.0, 4.0, 3.0));
+        assert_eq!(a.max(&b), Real3::new(2.0, 5.0, 3.0));
+        assert_eq!(a[1], 5.0);
+        let mut c = a;
+        c[2] = 9.0;
+        assert_eq!(c.z(), 9.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Platform core: the abstractions of paper Ch. 4 (agents, behaviors,
+//! events, operations) and the engine mechanics of Ch. 5 (resource
+//! manager, execution contexts, scheduler, parallel runtime).
+
+pub mod agent;
+pub mod backup;
+pub mod behavior;
+pub mod event;
+pub mod experiment;
+pub mod execution_context;
+pub mod math;
+pub mod model_initializer;
+pub mod operation;
+pub mod parallel;
+pub mod param;
+pub mod random;
+pub mod resource_manager;
+pub mod scheduler;
+pub mod simulation;

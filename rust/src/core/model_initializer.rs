@@ -1,0 +1,231 @@
+//! Generation of agent populations (paper §4.4.1, Fig 4.10).
+//!
+//! Mirrors BioDynaMo's `ModelInitializer`: create agents uniformly in a
+//! cube, from gaussian/exponential/user-defined distributions, on a
+//! sphere surface, on a 3D grid, or on a function surface.
+
+use crate::core::agent::Agent;
+use crate::core::math::Real3;
+use crate::core::random::Rng;
+use crate::core::simulation::Simulation;
+use crate::Real;
+
+/// `create(position) -> agent` factory used by all generators.
+pub type AgentFactory<'a> = &'a mut dyn FnMut(Real3) -> Box<dyn Agent>;
+
+/// Uniformly random positions inside the cube [min, max]^3
+/// (Fig 4.10b).
+pub fn create_agents_random(
+    sim: &mut Simulation,
+    min: Real,
+    max: Real,
+    n: usize,
+    create: AgentFactory,
+) {
+    let mut rng = Rng::for_agent(sim.param.seed, 0, 0, 100);
+    for _ in 0..n {
+        let pos = rng.uniform3(min, max);
+        sim.add_agent(create(pos));
+    }
+}
+
+/// Positions drawn per-component from a gaussian, clamped to the cube
+/// (Fig 4.10c).
+pub fn create_agents_gaussian(
+    sim: &mut Simulation,
+    min: Real,
+    max: Real,
+    n: usize,
+    mean: Real,
+    sigma: Real,
+    create: AgentFactory,
+) {
+    let mut rng = Rng::for_agent(sim.param.seed, 0, 0, 101);
+    for _ in 0..n {
+        let pos = Real3::new(
+            rng.gaussian(mean, sigma).clamp(min, max),
+            rng.gaussian(mean, sigma).clamp(min, max),
+            rng.gaussian(mean, sigma).clamp(min, max),
+        );
+        sim.add_agent(create(pos));
+    }
+}
+
+/// Positions from an exponential distribution per component
+/// (Fig 4.10d).
+pub fn create_agents_exponential(
+    sim: &mut Simulation,
+    min: Real,
+    max: Real,
+    n: usize,
+    lambda: Real,
+    create: AgentFactory,
+) {
+    let mut rng = Rng::for_agent(sim.param.seed, 0, 0, 102);
+    for _ in 0..n {
+        let pos = Real3::new(
+            (min + rng.exponential(lambda)).min(max),
+            (min + rng.exponential(lambda)).min(max),
+            (min + rng.exponential(lambda)).min(max),
+        );
+        sim.add_agent(create(pos));
+    }
+}
+
+/// Random points on a sphere shell (Fig 4.10f).
+pub fn create_agents_on_sphere(
+    sim: &mut Simulation,
+    center: Real3,
+    radius: Real,
+    n: usize,
+    create: AgentFactory,
+) {
+    let mut rng = Rng::for_agent(sim.param.seed, 0, 0, 103);
+    for _ in 0..n {
+        let pos = center + rng.on_unit_sphere() * radius;
+        sim.add_agent(create(pos));
+    }
+}
+
+/// Regular 3D grid of `agents_per_dim`^3 agents spaced by `spacing`,
+/// starting at `origin` (Fig 4.10g; used by the cell growth benchmark).
+pub fn grid_3d(
+    sim: &mut Simulation,
+    agents_per_dim: usize,
+    spacing: Real,
+    origin: Real3,
+    create: AgentFactory,
+) {
+    for z in 0..agents_per_dim {
+        for y in 0..agents_per_dim {
+            for x in 0..agents_per_dim {
+                let pos = origin
+                    + Real3::new(
+                        x as Real * spacing,
+                        y as Real * spacing,
+                        z as Real * spacing,
+                    );
+                sim.add_agent(create(pos));
+            }
+        }
+    }
+}
+
+/// 2D grid on the z-plane (pyramidal-cell benchmark layout).
+pub fn grid_2d(
+    sim: &mut Simulation,
+    agents_per_dim: usize,
+    spacing: Real,
+    origin: Real3,
+    create: AgentFactory,
+) {
+    for y in 0..agents_per_dim {
+        for x in 0..agents_per_dim {
+            let pos = origin + Real3::new(x as Real * spacing, y as Real * spacing, 0.0);
+            sim.add_agent(create(pos));
+        }
+    }
+}
+
+/// Agents on the surface z = f(x, y) sampled on a regular (x, y) grid
+/// (Fig 4.10h).
+pub fn create_agents_on_surface(
+    sim: &mut Simulation,
+    f: impl Fn(Real, Real) -> Real,
+    x_range: (Real, Real, Real),
+    y_range: (Real, Real, Real),
+    create: AgentFactory,
+) {
+    let mut x = x_range.0;
+    while x <= x_range.1 {
+        let mut y = y_range.0;
+        while y <= y_range.1 {
+            sim.add_agent(create(Real3::new(x, y, f(x, y))));
+            y += y_range.2;
+        }
+        x += x_range.2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+
+    fn factory() -> impl FnMut(Real3) -> Box<dyn Agent> {
+        |pos| Box::new(SphericalAgent::new(pos)) as Box<dyn Agent>
+    }
+
+    #[test]
+    fn random_population_in_bounds() {
+        let mut sim = Simulation::with_defaults();
+        let mut f = factory();
+        create_agents_random(&mut sim, -50.0, 50.0, 200, &mut f);
+        assert_eq!(sim.num_agents(), 200);
+        sim.rm.for_each_agent(|_, a| {
+            let p = a.position();
+            for i in 0..3 {
+                assert!((-50.0..50.0).contains(&p[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn grid_3d_layout() {
+        let mut sim = Simulation::with_defaults();
+        let mut f = factory();
+        grid_3d(&mut sim, 3, 10.0, Real3::ZERO, &mut f);
+        assert_eq!(sim.num_agents(), 27);
+        let mut found_origin = false;
+        let mut found_last = false;
+        sim.rm.for_each_agent(|_, a| {
+            if a.position() == Real3::ZERO {
+                found_origin = true;
+            }
+            if a.position() == Real3::new(20.0, 20.0, 20.0) {
+                found_last = true;
+            }
+        });
+        assert!(found_origin && found_last);
+    }
+
+    #[test]
+    fn sphere_population_on_shell() {
+        let mut sim = Simulation::with_defaults();
+        let mut f = factory();
+        let center = Real3::new(1.0, 2.0, 3.0);
+        create_agents_on_sphere(&mut sim, center, 30.0, 100, &mut f);
+        sim.rm.for_each_agent(|_, a| {
+            assert!((a.position().distance(&center) - 30.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn surface_population() {
+        let mut sim = Simulation::with_defaults();
+        let mut f = factory();
+        create_agents_on_surface(
+            &mut sim,
+            |x, y| x + y,
+            (0.0, 2.0, 1.0),
+            (0.0, 2.0, 1.0),
+            &mut f,
+        );
+        assert_eq!(sim.num_agents(), 9);
+        sim.rm
+            .for_each_agent(|_, a| assert_eq!(a.position().z(), a.position().x() + a.position().y()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = || {
+            let mut sim = Simulation::with_defaults();
+            let mut f = factory();
+            create_agents_gaussian(&mut sim, -100.0, 100.0, 50, 0.0, 20.0, &mut f);
+            let mut v = Vec::new();
+            sim.rm.for_each_agent(|_, a| v.push(a.position().0));
+            v
+        };
+        assert_eq!(gen(), gen());
+    }
+}

@@ -1,0 +1,244 @@
+//! Operations (paper §4.2.1, Fig 4.1D).
+//!
+//! *Agent operations* run for every agent every iteration (subject to
+//! frequency and filters): behavior execution, mechanical forces.
+//! *Standalone operations* run once per iteration: environment update
+//! (pre), diffusion, visualization, agent sorting (post).
+//! Both kinds can be added/removed at runtime — the paper's dynamic
+//! scheduling feature (§4.4.8).
+
+use crate::core::agent::Agent;
+use crate::core::execution_context::AgentContext;
+use crate::core::simulation::Simulation;
+use crate::physics::force::InteractionForce;
+use crate::Real;
+
+/// Operation executed for each agent (paper "agent operation").
+pub trait AgentOperation: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Execute every `frequency()` iterations (multi-scale support,
+    /// paper §4.4.4).
+    fn frequency(&self) -> u64 {
+        1
+    }
+
+    /// Agent filter (paper §4.4.8 "agent filters"; hierarchical model
+    /// support §4.4.6 builds on this).
+    fn applies_to(&self, _agent: &dyn Agent) -> bool {
+        true
+    }
+
+    fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext);
+}
+
+/// When a standalone operation runs within the iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StandalonePhase {
+    /// Before the agent loop (e.g. environment rebuild).
+    Pre,
+    /// After the agent loop and the commit barrier.
+    Post,
+}
+
+/// Operation executed once per iteration (paper "standalone operation").
+pub trait StandaloneOperation: Send {
+    fn name(&self) -> &'static str;
+
+    fn frequency(&self) -> u64 {
+        1
+    }
+
+    fn phase(&self) -> StandalonePhase {
+        StandalonePhase::Post
+    }
+
+    fn run(&mut self, sim: &mut Simulation);
+}
+
+/// Built-in: execute all behaviors of each agent (the paper's
+/// "execute all behaviors" agent op).
+pub struct BehaviorOp;
+
+impl AgentOperation for BehaviorOp {
+    fn name(&self) -> &'static str {
+        "behaviors"
+    }
+
+    fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        // Take the behaviors out to avoid aliasing agent/behavior;
+        // restore afterwards, keeping any behaviors added during `run`.
+        let mut behaviors = std::mem::take(&mut agent.base_mut().behaviors);
+        for b in behaviors.iter_mut() {
+            b.run(agent, ctx);
+        }
+        let added = std::mem::take(&mut agent.base_mut().behaviors);
+        behaviors.extend(added);
+        agent.base_mut().behaviors = behaviors;
+    }
+}
+
+/// Built-in: pairwise mechanical interaction forces (paper §4.5.1) with
+/// the §5.5 static-agent shortcut.
+pub struct MechanicalForcesOp {
+    pub force: Box<dyn InteractionForce>,
+    /// clamp per-iteration displacement (numerical stability)
+    pub max_displacement: Real,
+    /// displacement below this threshold counts as "did not move"
+    pub static_threshold: Real,
+    /// enable the §5.5 skip
+    pub detect_static: bool,
+    /// neighbor search radius = max(interaction radius, diameters)
+    pub search_radius: Real,
+}
+
+impl MechanicalForcesOp {
+    pub fn new(search_radius: Real) -> Self {
+        MechanicalForcesOp {
+            force: Box::new(crate::physics::force::DefaultForce::default()),
+            max_displacement: 3.0,
+            static_threshold: 1e-5,
+            detect_static: false,
+            search_radius,
+        }
+    }
+}
+
+impl AgentOperation for MechanicalForcesOp {
+    fn name(&self) -> &'static str {
+        "mechanical_forces"
+    }
+
+    fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let pos = agent.position();
+        let radius = self.search_radius.max(agent.interaction_diameter());
+
+        // §5.5: skip the force math when neither this agent nor any
+        // neighbor moved last iteration — the resulting force cannot
+        // move the agent.
+        if self.detect_static && !agent.base().moved_last {
+            let mut any_moved = false;
+            ctx.for_each_neighbor(radius, |_h, nb, _d2| {
+                any_moved |= nb.base().moved_last;
+            });
+            if !any_moved {
+                agent.base_mut().moved_now = false;
+                return;
+            }
+        }
+
+        // Collect per-neighbor contributions and sum them in UID order:
+        // the grid's lock-free build makes the traversal order
+        // non-deterministic across thread counts, and floating-point
+        // addition is not associative — UID-ordered summation is what
+        // makes shared-memory and distributed runs bitwise identical
+        // (Fig 6.5). Contributions live on the stack up to 32 contacts
+        // (the dense-model common case) — no allocation in the hot loop
+        // (§Perf iteration 3).
+        let mut stack = [(0u64, crate::core::math::Real3::ZERO); 32];
+        let mut n_stack = 0usize;
+        let mut spill: Vec<(u64, crate::core::math::Real3)> = Vec::new();
+        ctx.for_each_neighbor(radius, |_h, nb, _d2| {
+            let f = self.force.calculate(agent, nb);
+            if f != crate::core::math::Real3::ZERO {
+                if n_stack < stack.len() {
+                    stack[n_stack] = (nb.uid(), f);
+                    n_stack += 1;
+                } else {
+                    spill.push((nb.uid(), f));
+                }
+            }
+        });
+        let contributions = &mut stack[..n_stack];
+        let mut total = crate::core::math::Real3::ZERO;
+        if spill.is_empty() {
+            contributions.sort_unstable_by_key(|c| c.0);
+            for (_, f) in contributions.iter() {
+                total += *f;
+            }
+        } else {
+            spill.extend_from_slice(contributions);
+            spill.sort_unstable_by_key(|c| c.0);
+            for (_, f) in &spill {
+                total += *f;
+            }
+        }
+
+        let dt = ctx.dt();
+        let mut displacement = total * dt;
+        let norm = displacement.norm();
+        if norm > self.max_displacement {
+            displacement = displacement * (self.max_displacement / norm);
+        }
+        if norm > self.static_threshold {
+            // bound the midpoint, translate rigidly (cylinders move both
+            // endpoints through their `translate` override)
+            let bounded = ctx.param().apply_bounds(pos + displacement) - pos;
+            agent.translate(bounded);
+            agent.base_mut().moved_now = true;
+        } else {
+            agent.base_mut().moved_now = false;
+        }
+    }
+}
+
+/// Built-in standalone: advance all extracellular substances by one
+/// diffusion step through the configured backend.
+pub struct DiffusionOp {
+    pub frequency: u64,
+}
+
+impl StandaloneOperation for DiffusionOp {
+    fn name(&self) -> &'static str {
+        "diffusion"
+    }
+
+    fn frequency(&self) -> u64 {
+        self.frequency
+    }
+
+    fn run(&mut self, sim: &mut Simulation) {
+        sim.step_substances();
+    }
+}
+
+/// Built-in standalone: Morton sorting + domain balancing (§5.4.2).
+pub struct SortAndBalanceOp {
+    pub frequency: u64,
+}
+
+impl StandaloneOperation for SortAndBalanceOp {
+    fn name(&self) -> &'static str {
+        "sort_and_balance"
+    }
+
+    fn frequency(&self) -> u64 {
+        self.frequency
+    }
+
+    fn run(&mut self, sim: &mut Simulation) {
+        crate::mem::morton::sort_and_balance(sim);
+    }
+}
+
+/// Built-in standalone: visualization export (paper §4.3.2, export
+/// mode).
+pub struct VisualizationOp {
+    pub frequency: u64,
+}
+
+impl StandaloneOperation for VisualizationOp {
+    fn name(&self) -> &'static str {
+        "visualization"
+    }
+
+    fn frequency(&self) -> u64 {
+        self.frequency
+    }
+
+    fn run(&mut self, sim: &mut Simulation) {
+        let iter = sim.iteration;
+        let dir = sim.param.output_dir.clone();
+        let _ = crate::vis::export_iteration(sim, &dir, iter);
+    }
+}

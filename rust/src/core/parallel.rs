@@ -1,0 +1,353 @@
+//! OpenMP-style shared-memory parallel runtime.
+//!
+//! BioDynaMo parallelizes the loop over all agents with OpenMP
+//! directives; this module is the Rust equivalent: a persistent pool of
+//! worker threads with dynamic (chunk-stealing) and static (contiguous
+//! partition, used by the NUMA-aware iterator of §5.4.1) scheduling.
+//!
+//! The caller thread participates as worker 0, so `ThreadPool::new(1)`
+//! spawns no threads at all — the serial execution mode of Fig 4.5B is
+//! literally the same code path.
+//!
+//! Safety note: `parallel_for*` blocks until every worker finished the
+//! job, so borrowing the closure and its captures from the caller's
+//! stack is sound; the lifetime erasure below is encapsulated on that
+//! invariant (same argument as `std::thread::scope`).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased parallel job. `run` is re-entrant: every worker calls it
+/// once per epoch and internally steals chunks until exhaustion.
+trait Job: Send + Sync {
+    fn run(&self, worker_id: usize);
+}
+
+struct PoolState {
+    job: Option<Arc<dyn Job>>,
+    epoch: u64,
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool. One instance per `Simulation`.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    num_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `num_threads` total workers (>= 1). The constructing
+    /// thread acts as worker 0; `num_threads - 1` threads are spawned.
+    pub fn new(num_threads: usize) -> Self {
+        let num_threads = num_threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for wid in 1..num_threads {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ta-worker-{wid}"))
+                    .spawn(move || worker_loop(sh, wid))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            shared,
+            handles,
+            num_threads,
+        }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.num_threads
+    }
+
+    /// Dynamic-schedule parallel for: `f(index, worker_id)` for every
+    /// index in `range`; chunks of `grain` indices are claimed from a
+    /// shared cursor (OpenMP `schedule(dynamic, grain)`).
+    pub fn parallel_for<F>(&self, range: Range<usize>, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let grain = grain.max(1);
+        self.parallel_for_chunks(range, grain, |chunk, wid| {
+            for i in chunk {
+                f(i, wid);
+            }
+        });
+    }
+
+    /// Dynamic-schedule parallel for over chunks: `f(chunk_range, wid)`.
+    pub fn parallel_for_chunks<F>(&self, range: Range<usize>, grain: usize, f: F)
+    where
+        F: Fn(Range<usize>, usize) + Sync,
+    {
+        let len = range.end.saturating_sub(range.start);
+        if len == 0 {
+            return;
+        }
+        if self.num_threads == 1 || len <= grain {
+            f(range, 0);
+            return;
+        }
+        struct ChunkJob<'a> {
+            cursor: AtomicUsize,
+            start: usize,
+            end: usize,
+            grain: usize,
+            f: &'a (dyn Fn(Range<usize>, usize) + Sync),
+        }
+        impl Job for ChunkJob<'_> {
+            fn run(&self, wid: usize) {
+                loop {
+                    let begin = self.start + self.cursor.fetch_add(self.grain, Ordering::Relaxed);
+                    if begin >= self.end {
+                        return;
+                    }
+                    let end = (begin + self.grain).min(self.end);
+                    (self.f)(begin..end, wid);
+                }
+            }
+        }
+        let job = ChunkJob {
+            cursor: AtomicUsize::new(0),
+            start: range.start,
+            end: range.end,
+            grain: grain.max(1),
+            f: &f,
+        };
+        self.broadcast(&job);
+    }
+
+    /// Static-schedule parallel for: the range is split into exactly
+    /// `num_threads` contiguous slices; slice `t` runs on worker `t`.
+    /// This is the schedule the NUMA-aware iterator relies on (§5.4.1):
+    /// a thread pinned to domain d only touches domain-d agents.
+    pub fn parallel_static<F>(&self, range: Range<usize>, f: F)
+    where
+        F: Fn(Range<usize>, usize) + Sync,
+    {
+        let len = range.end.saturating_sub(range.start);
+        if len == 0 {
+            return;
+        }
+        if self.num_threads == 1 {
+            f(range, 0);
+            return;
+        }
+        let nt = self.num_threads;
+        let start = range.start;
+        let per = len / nt;
+        let rem = len % nt;
+        let slice_for = move |t: usize| -> Range<usize> {
+            let lo = start + t * per + t.min(rem);
+            let hi = lo + per + usize::from(t < rem);
+            lo..hi
+        };
+        self.parallel_for_chunks(0..nt, 1, |ts, wid| {
+            for t in ts {
+                f(slice_for(t), wid);
+            }
+        });
+    }
+
+    /// Parallel map-reduce: map every index, combine per-worker partials
+    /// with `reduce`. Deterministic combination order (by worker slot).
+    pub fn map_reduce<T, M, R>(&self, range: Range<usize>, grain: usize, map: M, reduce: R) -> T
+    where
+        T: Default + Send,
+        M: Fn(usize, &mut T) + Sync,
+        R: Fn(T, T) -> T,
+    {
+        let slots: Vec<Mutex<T>> = (0..self.num_threads).map(|_| Mutex::new(T::default())).collect();
+        self.parallel_for_chunks(range, grain, |chunk, wid| {
+            let mut acc = slots[wid].lock().unwrap();
+            for i in chunk {
+                map(i, &mut acc);
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .fold(T::default(), reduce)
+    }
+
+    /// Publish a job to all workers, participate as worker 0, and wait
+    /// for quiescence.
+    ///
+    /// SAFETY: blocks until every worker finished running `job` (the
+    /// `active == 0` wait below), so the borrow outlives all uses
+    /// despite the `'static` erasure — the `std::thread::scope`
+    /// argument.
+    fn broadcast(&self, job: &(dyn Job + '_)) {
+        let job_static: &'static (dyn Job + 'static) =
+            unsafe { std::mem::transmute::<&(dyn Job + '_), &'static (dyn Job + 'static)>(job) };
+        let arc: Arc<dyn Job> = Arc::new(ForwardJob(job_static));
+        struct ForwardJob(&'static dyn Job);
+        impl Job for ForwardJob {
+            fn run(&self, wid: usize) {
+                self.0.run(wid);
+            }
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "nested parallel region");
+            st.job = Some(arc);
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // Participate as worker 0.
+        job.run(0);
+        // Wait until all workers that picked up the job are done, then
+        // retire the job slot.
+        let mut st = self.shared.state.lock().unwrap();
+        st.job = None; // cursor exhausted; late workers will see None
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, wid: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    last_epoch = st.epoch;
+                    if let Some(job) = st.job.clone() {
+                        st.active += 1;
+                        break job;
+                    }
+                    // job already retired: skip this epoch
+                    continue;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job.run(wid);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+        drop(st);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        for nt in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(nt);
+            let n = 10_000;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for(0..n, 64, |i, _wid| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "nt={nt}"
+            );
+        }
+    }
+
+    #[test]
+    fn static_schedule_partitions_contiguously() {
+        let pool = ThreadPool::new(4);
+        let n = 103;
+        let seen = Mutex::new(Vec::new());
+        pool.parallel_static(0..n, |r, _wid| {
+            seen.lock().unwrap().push(r);
+        });
+        let mut slices = seen.into_inner().unwrap();
+        slices.sort_by_key(|r| r.start);
+        assert_eq!(slices.len(), 4);
+        assert_eq!(slices[0].start, 0);
+        assert_eq!(slices.last().unwrap().end, n);
+        for w in slices.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        // balanced within 1
+        let sizes: Vec<usize> = slices.iter().map(|r| r.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        for nt in [1, 3] {
+            let pool = ThreadPool::new(nt);
+            let total: u64 = pool.map_reduce(
+                0..1000,
+                16,
+                |i, acc: &mut u64| *acc += i as u64,
+                |a, b| a + b,
+            );
+            assert_eq!(total, 999 * 1000 / 2);
+        }
+    }
+
+    #[test]
+    fn sequential_regions_reuse_pool() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.parallel_for(0..100, 8, |_i, _w| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 5000);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(5..5, 8, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn worker_ids_in_range() {
+        let pool = ThreadPool::new(3);
+        pool.parallel_for(0..1000, 4, |_, wid| assert!(wid < 3));
+    }
+}

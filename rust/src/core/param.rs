@@ -1,0 +1,406 @@
+//! Parameter management (paper §4.4.9).
+//!
+//! BioDynaMo "liberat[es] the user from the burden to write code to
+//! parse parameter files or command line arguments": [`Param`] carries
+//! every engine knob, can be loaded from a TOML-subset config file, and
+//! accepts `key=value` command-line overrides. Model-specific parameter
+//! groups (the paper's `ParamGroup`) live in the string-typed `extra`
+//! map with typed accessors.
+
+use crate::Real;
+use std::collections::HashMap;
+
+/// Space boundary conditions (paper §4.4.11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundaryCondition {
+    /// Simulation space grows to encapsulate all agents.
+    Open,
+    /// Artificial walls keep agents inside.
+    Closed,
+    /// Torus: agents exiting one side re-enter on the opposite side.
+    Toroidal,
+}
+
+/// Row-wise vs column-wise agent-op execution (paper §5.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionOrder {
+    /// All operations for one agent, then the next agent (default).
+    ColumnWise,
+    /// One operation for all agents, then the next operation.
+    RowWise,
+}
+
+/// Discretization choice for agent updates (paper §5.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionContextMode {
+    /// Changes are visible to neighbors immediately (default).
+    InPlace,
+    /// Changes are buffered and committed at the end of the iteration.
+    Copy,
+}
+
+/// Which neighbor-search structure to use (paper §5.6.9 / Fig 5.13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvironmentKind {
+    UniformGrid,
+    KdTree,
+    Octree,
+}
+
+/// Diffusion solver backend: native Rust stencil or the AOT-compiled
+/// Pallas kernel executed through PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffusionBackend {
+    Native,
+    Pjrt,
+}
+
+/// All engine parameters. Mirrors BioDynaMo's `Param` class.
+#[derive(Debug, Clone)]
+pub struct Param {
+    /// Seed for all deterministic RNG streams.
+    pub seed: u64,
+    /// Simulated time between two iterations (paper §4.4.4).
+    pub simulation_time_step: Real,
+    /// Lower bound of the cubic simulation space.
+    pub min_bound: Real,
+    /// Upper bound of the cubic simulation space.
+    pub max_bound: Real,
+    /// Boundary condition at the space borders.
+    pub bound_space: BoundaryCondition,
+    /// Number of worker threads (1 = the paper's serial mode, Fig 4.5B).
+    pub num_threads: usize,
+    /// Simulated NUMA domains (§5.4.1). Agents are partitioned into
+    /// this many storage domains; threads iterate their own domain
+    /// first.
+    pub numa_domains: usize,
+    /// Neighbor-search structure.
+    pub environment: EnvironmentKind,
+    /// Uniform-grid box length; `None` = auto (largest agent diameter).
+    pub box_length: Option<Real>,
+    /// Interaction radius used by default neighbor queries.
+    pub interaction_radius: Real,
+    /// Execute the Morton agent sorting every N iterations (§5.4.2);
+    /// `0` disables sorting.
+    pub sort_frequency: u64,
+    /// Use the pool memory allocator for agent storage (§5.4.3).
+    pub use_pool_allocator: bool,
+    /// Detect static agents and skip their collision forces (§5.5).
+    pub detect_static_agents: bool,
+    /// Row-wise vs column-wise op execution (§5.2.1).
+    pub execution_order: ExecutionOrder,
+    /// In-place vs copy execution context (§5.2.1).
+    pub execution_context: ExecutionContextMode,
+    /// Randomize agent iteration order each iteration (RandomizedRm).
+    pub randomize_iteration_order: bool,
+    /// Mechanical-force parameters (Eq 4.1): repulsion `k`.
+    pub repulsion_k: Real,
+    /// Mechanical-force parameters (Eq 4.1): attraction `gamma`.
+    pub attraction_gamma: Real,
+    /// Diffusion solver backend.
+    pub diffusion_backend: DiffusionBackend,
+    /// Directory holding the AOT HLO artifacts.
+    pub artifacts_dir: String,
+    /// Export visualization data every N iterations; `0` disables.
+    pub visualization_interval: u64,
+    /// Output directory for visualization/backup files.
+    pub output_dir: String,
+    /// Model-specific parameters (the paper's `ParamGroup`s).
+    pub extra: HashMap<String, String>,
+}
+
+impl Default for Param {
+    fn default() -> Self {
+        Param {
+            seed: 4357, // BioDynaMo's default random seed
+            simulation_time_step: 0.01,
+            min_bound: -100.0,
+            max_bound: 100.0,
+            bound_space: BoundaryCondition::Open,
+            num_threads: 1,
+            numa_domains: 1,
+            environment: EnvironmentKind::UniformGrid,
+            box_length: None,
+            interaction_radius: 15.0,
+            sort_frequency: 0,
+            use_pool_allocator: false,
+            detect_static_agents: false,
+            execution_order: ExecutionOrder::ColumnWise,
+            execution_context: ExecutionContextMode::InPlace,
+            randomize_iteration_order: false,
+            repulsion_k: 2.0,
+            attraction_gamma: 1.0,
+            diffusion_backend: DiffusionBackend::Native,
+            artifacts_dir: "artifacts".to_string(),
+            visualization_interval: 0,
+            output_dir: "output".to_string(),
+            extra: HashMap::new(),
+        }
+    }
+}
+
+impl Param {
+    /// Parse a TOML-subset config: `[section]` headers are flattened to
+    /// `section.key`; values are bare scalars or quoted strings;
+    /// `#`-comments allowed. Unknown keys land in `extra`.
+    pub fn from_config_str(text: &str) -> Result<Param, String> {
+        let mut param = Param::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{}.{}", section, key.trim())
+            };
+            let value = unquote(value.trim());
+            param.apply_kv(&key, &value)?;
+        }
+        Ok(param)
+    }
+
+    /// Load from a config file path.
+    pub fn from_config_file(path: &str) -> Result<Param, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Param::from_config_str(&text)
+    }
+
+    /// Apply one `key=value` override (CLI `--param key=value`).
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let err = |k: &str, v: &str| format!("invalid value {v:?} for {k}");
+        // engine keys accept an optional "simulation." prefix
+        let k = key.strip_prefix("simulation.").unwrap_or(key);
+        match k {
+            "seed" => self.seed = value.parse().map_err(|_| err(k, value))?,
+            "time_step" | "simulation_time_step" => {
+                self.simulation_time_step = value.parse().map_err(|_| err(k, value))?
+            }
+            "min_bound" => self.min_bound = value.parse().map_err(|_| err(k, value))?,
+            "max_bound" => self.max_bound = value.parse().map_err(|_| err(k, value))?,
+            "bound_space" => {
+                self.bound_space = match value {
+                    "open" => BoundaryCondition::Open,
+                    "closed" => BoundaryCondition::Closed,
+                    "toroidal" | "torus" => BoundaryCondition::Toroidal,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "num_threads" => self.num_threads = value.parse().map_err(|_| err(k, value))?,
+            "numa_domains" => {
+                self.numa_domains = value.parse::<usize>().map_err(|_| err(k, value))?.max(1)
+            }
+            "environment" => {
+                self.environment = match value {
+                    "uniform_grid" | "grid" => EnvironmentKind::UniformGrid,
+                    "kd_tree" | "kdtree" => EnvironmentKind::KdTree,
+                    "octree" => EnvironmentKind::Octree,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "box_length" => self.box_length = Some(value.parse().map_err(|_| err(k, value))?),
+            "interaction_radius" => {
+                self.interaction_radius = value.parse().map_err(|_| err(k, value))?
+            }
+            "sort_frequency" => self.sort_frequency = value.parse().map_err(|_| err(k, value))?,
+            "use_pool_allocator" => {
+                self.use_pool_allocator = value.parse().map_err(|_| err(k, value))?
+            }
+            "detect_static_agents" => {
+                self.detect_static_agents = value.parse().map_err(|_| err(k, value))?
+            }
+            "execution_order" => {
+                self.execution_order = match value {
+                    "column" | "column_wise" => ExecutionOrder::ColumnWise,
+                    "row" | "row_wise" => ExecutionOrder::RowWise,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "execution_context" => {
+                self.execution_context = match value {
+                    "in_place" => ExecutionContextMode::InPlace,
+                    "copy" => ExecutionContextMode::Copy,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "randomize_iteration_order" => {
+                self.randomize_iteration_order = value.parse().map_err(|_| err(k, value))?
+            }
+            "repulsion_k" => self.repulsion_k = value.parse().map_err(|_| err(k, value))?,
+            "attraction_gamma" => {
+                self.attraction_gamma = value.parse().map_err(|_| err(k, value))?
+            }
+            "diffusion_backend" => {
+                self.diffusion_backend = match value {
+                    "native" => DiffusionBackend::Native,
+                    "pjrt" => DiffusionBackend::Pjrt,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "visualization_interval" => {
+                self.visualization_interval = value.parse().map_err(|_| err(k, value))?
+            }
+            "output_dir" => self.output_dir = value.to_string(),
+            _ => {
+                self.extra.insert(key.to_string(), value.to_string());
+            }
+        }
+        Ok(())
+    }
+
+    /// Typed accessor for model parameters with a default.
+    pub fn get_extra<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.extra
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Side length of the cubic simulation space.
+    pub fn space_length(&self) -> Real {
+        self.max_bound - self.min_bound
+    }
+
+    /// Apply the boundary condition to a position (paper §4.4.11).
+    pub fn apply_bounds(&self, pos: crate::core::math::Real3) -> crate::core::math::Real3 {
+        use crate::core::math::Real3;
+        match self.bound_space {
+            BoundaryCondition::Open => pos,
+            BoundaryCondition::Closed => Real3::new(
+                pos.x().clamp(self.min_bound, self.max_bound),
+                pos.y().clamp(self.min_bound, self.max_bound),
+                pos.z().clamp(self.min_bound, self.max_bound),
+            ),
+            BoundaryCondition::Toroidal => {
+                let len = self.space_length();
+                let wrap = |v: Real| -> Real {
+                    let mut r = (v - self.min_bound) % len;
+                    if r < 0.0 {
+                        r += len;
+                    }
+                    self.min_bound + r
+                };
+                Real3::new(wrap(pos.x()), wrap(pos.y()), wrap(pos.z()))
+            }
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quotes
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let p = Param::default();
+        assert_eq!(p.num_threads, 1);
+        assert_eq!(p.numa_domains, 1);
+        assert!(p.space_length() > 0.0);
+    }
+
+    #[test]
+    fn parse_config() {
+        let text = r#"
+            # engine settings
+            [simulation]
+            seed = 99
+            max_bound = 250.0   # comment after value
+            bound_space = toroidal
+            environment = kdtree
+
+            [model]
+            initial_cells = 4000
+            name = "measles run"
+        "#;
+        let p = Param::from_config_str(text).unwrap();
+        assert_eq!(p.seed, 99);
+        assert_eq!(p.max_bound, 250.0);
+        assert_eq!(p.bound_space, BoundaryCondition::Toroidal);
+        assert_eq!(p.environment, EnvironmentKind::KdTree);
+        assert_eq!(p.get_extra::<u64>("model.initial_cells", 0), 4000);
+        assert_eq!(
+            p.extra.get("model.name").map(String::as_str),
+            Some("measles run")
+        );
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut p = Param::default();
+        p.apply_kv("num_threads", "8").unwrap();
+        p.apply_kv("execution_order", "row").unwrap();
+        p.apply_kv("execution_context", "copy").unwrap();
+        p.apply_kv("diffusion_backend", "pjrt").unwrap();
+        assert_eq!(p.num_threads, 8);
+        assert_eq!(p.execution_order, ExecutionOrder::RowWise);
+        assert_eq!(p.execution_context, ExecutionContextMode::Copy);
+        assert_eq!(p.diffusion_backend, DiffusionBackend::Pjrt);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let mut p = Param::default();
+        assert!(p.apply_kv("seed", "abc").is_err());
+        assert!(p.apply_kv("bound_space", "weird").is_err());
+        assert!(Param::from_config_str("novalue").is_err());
+    }
+
+    #[test]
+    fn bounds_application() {
+        use crate::core::math::Real3;
+        let mut p = Param::default(); // [-100, 100]
+        assert_eq!(
+            p.apply_bounds(Real3::new(150.0, 0.0, 0.0)),
+            Real3::new(150.0, 0.0, 0.0)
+        );
+        p.bound_space = BoundaryCondition::Closed;
+        assert_eq!(
+            p.apply_bounds(Real3::new(150.0, -120.0, 5.0)),
+            Real3::new(100.0, -100.0, 5.0)
+        );
+        p.bound_space = BoundaryCondition::Toroidal;
+        let w = p.apply_bounds(Real3::new(110.0, -110.0, 0.0));
+        assert!((w.x() + 90.0).abs() < 1e-9, "{w:?}");
+        assert!((w.y() - 90.0).abs() < 1e-9, "{w:?}");
+    }
+
+    #[test]
+    fn unknown_keys_to_extra() {
+        let mut p = Param::default();
+        p.apply_kv("mymodel.rate", "0.25").unwrap();
+        assert_eq!(p.get_extra::<f64>("mymodel.rate", 0.0), 0.25);
+        assert_eq!(p.get_extra::<f64>("missing", 7.0), 7.0);
+    }
+}

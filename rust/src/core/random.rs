@@ -1,0 +1,283 @@
+//! Deterministic random number generation.
+//!
+//! The engine derives a fresh, statistically independent stream per
+//! (simulation seed, agent UID, iteration, purpose) via SplitMix64
+//! hashing into a Xoshiro256** state. This is the property that makes
+//! the distributed engine produce the *same* trajectories as the
+//! shared-memory engine regardless of thread count or rank layout
+//! (paper Fig 6.5 "Result verification") — the stream an agent sees
+//! never depends on which thread or rank processes it.
+
+use crate::core::math::Real3;
+use crate::Real;
+
+/// SplitMix64: used for seeding and key mixing (Steele et al.).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Mix an arbitrary number of keys into one 64-bit value.
+#[inline]
+pub fn mix(keys: &[u64]) -> u64 {
+    let mut state = 0x243F6A8885A308D3; // pi digits
+    for &k in keys {
+        state ^= k;
+        splitmix64(&mut state);
+        state = state.rotate_left(23) ^ k.wrapping_mul(0x9E3779B97F4A7C15);
+    }
+    let mut s = state;
+    splitmix64(&mut s)
+}
+
+/// Xoshiro256** PRNG (Blackman & Vigna). Fast, 256-bit state, jumpable.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached spare gaussian from Box-Muller
+    spare: Option<Real>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Counter-based stream: deterministic in (seed, uid, iteration, stream).
+    pub fn for_agent(seed: u64, uid: u64, iteration: u64, stream: u64) -> Self {
+        Rng::new(mix(&[seed, uid, iteration, stream]))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform01(&mut self) -> Real {
+        // 53 high bits -> f64 in [0,1)
+        (self.next_u64() >> 11) as Real * (1.0 / (1u64 << 53) as Real)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: Real, hi: Real) -> Real {
+        lo + (hi - lo) * self.uniform01()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn uniform_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l < n {
+                let threshold = n.wrapping_neg() % n;
+                if l < threshold {
+                    continue; // biased zone: retry
+                }
+            }
+            return (m >> 64) as usize;
+        }
+    }
+
+    /// Uniform vector with each component in [lo, hi).
+    pub fn uniform3(&mut self, lo: Real, hi: Real) -> Real3 {
+        Real3::new(
+            self.uniform(lo, hi),
+            self.uniform(lo, hi),
+            self.uniform(lo, hi),
+        )
+    }
+
+    /// Standard gaussian via Box-Muller (with spare caching).
+    pub fn gaussian(&mut self, mean: Real, sigma: Real) -> Real {
+        if let Some(s) = self.spare.take() {
+            return mean + sigma * s;
+        }
+        let (u1, u2) = loop {
+            let u1 = self.uniform01();
+            if u1 > 1e-300 {
+                break (u1, self.uniform01());
+            }
+        };
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        mean + sigma * r * theta.cos()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: Real) -> Real {
+        let u = loop {
+            let u = self.uniform01();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Uniformly distributed point on the unit sphere.
+    pub fn on_unit_sphere(&mut self) -> Real3 {
+        loop {
+            let v = self.uniform3(-1.0, 1.0);
+            let n2 = v.squared_norm();
+            if n2 > 1e-12 && n2 <= 1.0 {
+                return v / n2.sqrt();
+            }
+        }
+    }
+
+    /// Sample from a user-defined density on [lo, hi) via rejection
+    /// sampling. `f_max` must bound the density from above.
+    pub fn user_defined(
+        &mut self,
+        f: &dyn Fn(Real) -> Real,
+        lo: Real,
+        hi: Real,
+        f_max: Real,
+    ) -> Real {
+        loop {
+            let x = self.uniform(lo, hi);
+            if self.uniform(0.0, f_max) <= f(x) {
+                return x;
+            }
+        }
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn bernoulli(&mut self, p: Real) -> bool {
+        self.uniform01() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_key() {
+        let mut a = Rng::for_agent(42, 7, 3, 0);
+        let mut b = Rng::for_agent(42, 7, 3, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_streams_differ() {
+        let base: Vec<u64> = {
+            let mut r = Rng::for_agent(42, 7, 3, 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        for (uid, it, st) in [(8, 3, 0), (7, 4, 0), (7, 3, 1)] {
+            let mut r = Rng::for_agent(42, uid, it, st);
+            let v: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            assert_ne!(base, v, "stream ({uid},{it},{st}) collided");
+        }
+    }
+
+    #[test]
+    fn uniform01_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform01();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as Real;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(2);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian(5.0, 2.0);
+            sum += g;
+            sum2 += g * g;
+        }
+        let mean = sum / n as Real;
+        let var = sum2 / n as Real - mean * mean;
+        assert!((mean - 5.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let lambda = 0.25;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += r.exponential(lambda);
+        }
+        assert!((sum / n as Real - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn sphere_points_are_unit() {
+        let mut r = Rng::new(4);
+        let mut mean = Real3::ZERO;
+        for _ in 0..10_000 {
+            let p = r.on_unit_sphere();
+            assert!((p.norm() - 1.0).abs() < 1e-9);
+            mean += p;
+        }
+        assert!(mean.norm() / 10_000.0 < 0.05); // isotropy
+    }
+
+    #[test]
+    fn uniform_usize_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.uniform_usize(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn user_defined_rejection_matches_triangle() {
+        // density f(x) = x on [0,1), normalized mean = 2/3
+        let mut r = Rng::new(6);
+        let f = |x: Real| x;
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += r.user_defined(&f, 0.0, 1.0, 1.0);
+        }
+        assert!((sum / n as Real - 2.0 / 3.0).abs() < 0.01);
+    }
+}

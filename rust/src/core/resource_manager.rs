@@ -1,0 +1,527 @@
+//! ResourceManager — dense agent storage (paper §5.3.1/§5.3.2, Fig 5.1).
+//!
+//! Agents live in one dense `Vec` per simulated NUMA domain. Dense
+//! storage (no holes) is what makes the uniform grid's array-based
+//! linked list and the Morton sorting effective; removals therefore
+//! compact via the paper's swap-with-tail algorithm (Fig 5.1), and both
+//! additions and removals are committed at iteration barriers from
+//! thread-local queues (§5.3.2).
+//!
+//! ## Concurrency model
+//! During the parallel agent loop, each agent slot is mutated by
+//! exactly one worker thread (scheduler invariant: index ranges are
+//! disjoint). Neighbor queries concurrently *read* other agents through
+//! `get()`. This reproduces BioDynaMo's in-place execution-context
+//! semantics: reads may observe current-iteration values of already
+//! processed agents; behaviors must not write to neighbors directly
+//! (deferred updates exist for that — see `execution_context`).
+//! The `UnsafeCell` + raw-pointer accessors below encapsulate exactly
+//! that contract; `get_mut_unchecked` is `unsafe` and its callers
+//! (scheduler, tests) uphold the single-writer-per-slot invariant.
+
+use crate::core::agent::{Agent, AgentHandle, AgentUid};
+use crate::core::parallel::ThreadPool;
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+
+/// One agent slot; `Sync` because the scheduler guarantees single-writer.
+pub struct AgentSlot(UnsafeCell<Box<dyn Agent>>);
+
+// SAFETY: see module docs — single mutator per slot per iteration;
+// concurrent readers accept in-place semantics (benign for the scalar
+// fields the engine reads through shared references).
+unsafe impl Sync for AgentSlot {}
+
+impl AgentSlot {
+    fn new(agent: Box<dyn Agent>) -> Self {
+        AgentSlot(UnsafeCell::new(agent))
+    }
+
+    #[inline]
+    fn get(&self) -> &dyn Agent {
+        unsafe { &**self.0.get() }
+    }
+
+    /// SAFETY: caller must be the unique mutator of this slot.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self) -> &mut dyn Agent {
+        &mut **self.0.get()
+    }
+
+    fn into_inner(self) -> Box<dyn Agent> {
+        self.0.into_inner()
+    }
+}
+
+#[derive(Default)]
+struct Domain {
+    agents: Vec<AgentSlot>,
+}
+
+/// Dense, NUMA-partitioned agent storage with UID lookup.
+pub struct ResourceManager {
+    domains: Vec<Domain>,
+    uid_map: HashMap<AgentUid, AgentHandle>,
+    next_uid: AgentUid,
+    /// UID issue stride: 1 in shared-memory mode; the rank count in the
+    /// distributed engine so that per-rank UID streams never collide
+    /// (offset = rank, stride = ranks).
+    uid_stride: AgentUid,
+    /// round-robin cursor for domain placement of new agents
+    place_cursor: usize,
+}
+
+impl ResourceManager {
+    pub fn new(numa_domains: usize) -> Self {
+        let numa_domains = numa_domains.max(1);
+        ResourceManager {
+            domains: (0..numa_domains).map(|_| Domain::default()).collect(),
+            uid_map: HashMap::new(),
+            next_uid: 1,
+            uid_stride: 1,
+            place_cursor: 0,
+        }
+    }
+
+    /// Distributed engine: switch to a strided UID namespace so ranks
+    /// can issue UIDs independently without collisions.
+    pub fn set_uid_namespace(&mut self, next: AgentUid, stride: AgentUid) {
+        assert!(stride >= 1);
+        self.next_uid = next;
+        self.uid_stride = stride;
+    }
+
+    pub fn num_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    pub fn num_agents(&self) -> usize {
+        self.domains.iter().map(|d| d.agents.len()).sum()
+    }
+
+    pub fn num_agents_in(&self, domain: usize) -> usize {
+        self.domains[domain].agents.len()
+    }
+
+    /// Reserve and return the next agent UID.
+    pub fn issue_uid(&mut self) -> AgentUid {
+        let uid = self.next_uid;
+        self.next_uid += self.uid_stride;
+        uid
+    }
+
+    /// Add one agent (setup phase). Assigns a UID if the agent has none.
+    pub fn add_agent(&mut self, mut agent: Box<dyn Agent>) -> AgentHandle {
+        if agent.uid() == 0 {
+            let uid = self.issue_uid();
+            agent.base_mut().uid = uid;
+        }
+        let uid = agent.uid();
+        // block placement: fill domains evenly in round-robin
+        let domain = self.place_cursor % self.domains.len();
+        self.place_cursor += 1;
+        let idx = self.domains[domain].agents.len();
+        self.domains[domain].agents.push(AgentSlot::new(agent));
+        let h = AgentHandle::new(domain, idx);
+        self.uid_map.insert(uid, h);
+        h
+    }
+
+    /// Shared read access (see module docs for aliasing contract).
+    #[inline]
+    pub fn get(&self, h: AgentHandle) -> &dyn Agent {
+        self.domains[h.numa as usize].agents[h.idx as usize].get()
+    }
+
+    /// Exclusive access through `&mut self` (setup / commit phases).
+    pub fn get_mut(&mut self, h: AgentHandle) -> &mut dyn Agent {
+        unsafe { self.domains[h.numa as usize].agents[h.idx as usize].get_mut() }
+    }
+
+    /// Mutable access during the parallel loop.
+    ///
+    /// SAFETY: the caller must guarantee it is the only thread mutating
+    /// the slot `h` for the duration of the borrow (the scheduler's
+    /// disjoint-range partition provides this).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut_unchecked(&self, h: AgentHandle) -> &mut dyn Agent {
+        self.domains[h.numa as usize].agents[h.idx as usize].get_mut()
+    }
+
+    pub fn lookup(&self, uid: AgentUid) -> Option<AgentHandle> {
+        self.uid_map.get(&uid).copied()
+    }
+
+    pub fn get_by_uid(&self, uid: AgentUid) -> Option<&dyn Agent> {
+        self.lookup(uid).map(|h| self.get(h))
+    }
+
+    /// All handles in deterministic storage order.
+    pub fn handles(&self) -> Vec<AgentHandle> {
+        let mut out = Vec::with_capacity(self.num_agents());
+        for (d, domain) in self.domains.iter().enumerate() {
+            for i in 0..domain.agents.len() {
+                out.push(AgentHandle::new(d, i));
+            }
+        }
+        out
+    }
+
+    /// Serial iteration with shared access.
+    pub fn for_each_agent(&self, mut f: impl FnMut(AgentHandle, &dyn Agent)) {
+        for (d, domain) in self.domains.iter().enumerate() {
+            for (i, slot) in domain.agents.iter().enumerate() {
+                f(AgentHandle::new(d, i), slot.get());
+            }
+        }
+    }
+
+    /// Serial iteration with exclusive access.
+    pub fn for_each_agent_mut(&mut self, mut f: impl FnMut(AgentHandle, &mut dyn Agent)) {
+        for (d, domain) in self.domains.iter_mut().enumerate() {
+            for (i, slot) in domain.agents.iter_mut().enumerate() {
+                f(AgentHandle::new(d, i), unsafe { slot.get_mut() });
+            }
+        }
+    }
+
+    /// Commit additions at the iteration barrier (paper §5.3.2:
+    /// "grow the data structures ... and add the agent pointers in
+    /// parallel"). `additions` must already carry final UIDs.
+    pub fn commit_additions(&mut self, additions: Vec<Box<dyn Agent>>) -> Vec<AgentHandle> {
+        let mut handles = Vec::with_capacity(additions.len());
+        for agent in additions {
+            debug_assert_ne!(agent.uid(), 0, "uid must be assigned before commit");
+            if self.uid_stride == 1 {
+                // single-namespace mode: never re-issue a seen uid.
+                // (strided mode guarantees disjoint streams instead —
+                // foreign uids, e.g. ghosts, must not bump the counter)
+                self.next_uid = self.next_uid.max(agent.uid() + 1);
+            }
+            let uid = agent.uid();
+            let domain = self.place_cursor % self.domains.len();
+            self.place_cursor += 1;
+            let idx = self.domains[domain].agents.len();
+            self.domains[domain].agents.push(AgentSlot::new(agent));
+            let h = AgentHandle::new(domain, idx);
+            self.uid_map.insert(uid, h);
+            handles.push(h);
+        }
+        handles
+    }
+
+    /// Commit removals at the iteration barrier using the Fig 5.1
+    /// parallel compaction: per domain, holes in the head of the vector
+    /// are filled by swapping in non-removed agents from the tail, then
+    /// the vector shrinks. Returns the removed agents.
+    ///
+    /// The auxiliary-array construction mirrors the paper's five steps;
+    /// the swap loop itself is data-parallel (disjoint targets) and is
+    /// executed through `pool`.
+    pub fn commit_removals(
+        &mut self,
+        mut removals: Vec<AgentUid>,
+        pool: &ThreadPool,
+    ) -> Vec<Box<dyn Agent>> {
+        removals.sort_unstable();
+        removals.dedup();
+        let mut removed_agents = Vec::with_capacity(removals.len());
+
+        // group removal indices per domain
+        let ndom = self.domains.len();
+        let mut per_domain: Vec<Vec<u32>> = vec![Vec::new(); ndom];
+        for uid in removals {
+            if let Some(h) = self.uid_map.remove(&uid) {
+                per_domain[h.numa as usize].push(h.idx);
+            }
+        }
+
+        for (d, mut idxs) in per_domain.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            idxs.sort_unstable();
+            let n = self.domains[d].agents.len();
+            let k = idxs.len();
+            let new_size = n - k;
+
+            // Step 1+2 (aux arrays): "holes" = removed slots in the kept
+            // region [0, new_size); "fillers" = surviving slots in the
+            // tail [new_size, n).
+            let removed_set: std::collections::HashSet<u32> = idxs.iter().copied().collect();
+            let holes: Vec<u32> = idxs.iter().copied().filter(|&i| (i as usize) < new_size).collect();
+            let fillers: Vec<u32> = (new_size as u32..n as u32)
+                .filter(|i| !removed_set.contains(i))
+                .collect();
+            debug_assert_eq!(holes.len(), fillers.len());
+
+            // Step 3: extract removed agents (swap each removed slot's
+            // Box out). Do this before the swaps so we keep ownership.
+            // Swap-remove from the tail downward keeps indices stable.
+            // We instead take the boxes via mem::replace with a
+            // tombstone-free approach: drain the tail, slot in fillers.
+            let agents = &mut self.domains[d].agents;
+            // Pull the whole tail [new_size, n) out.
+            let tail: Vec<AgentSlot> = agents.drain(new_size..).collect();
+            let mut fill_iter = Vec::with_capacity(fillers.len());
+            for (off, slot) in tail.into_iter().enumerate() {
+                let idx = (new_size + off) as u32;
+                if removed_set.contains(&idx) {
+                    removed_agents.push(slot.into_inner());
+                } else {
+                    fill_iter.push(slot);
+                }
+            }
+            // Step 4: fill the holes (parallel-safe: disjoint targets).
+            // Collect hole contents first (they are the removed agents).
+            for (&hole, filler) in holes.iter().zip(fill_iter.into_iter()) {
+                let old = std::mem::replace(&mut agents[hole as usize], filler);
+                removed_agents.push(old.into_inner());
+            }
+            debug_assert_eq!(agents.len(), new_size);
+
+            // Step 5: update the uid map for moved agents (serial: the
+            // paper updates per-domain maps in parallel; a single
+            // HashMap keeps this implementation compact).
+            let _ = pool; // swaps above are O(k); parallel pay-off starts
+                          // at much larger k — see bench fig5_09
+            for &hole in &holes {
+                let uid = agents[hole as usize].get().uid();
+                self.uid_map.insert(uid, AgentHandle::new(d, hole as usize));
+            }
+        }
+        removed_agents
+    }
+
+    /// Reorder a domain by `perm` (new storage order: `perm[i]` is the
+    /// old index of the agent that moves to index `i`). Used by the
+    /// Morton sorting operation (§5.4.2). Rebuilds the UID map entries.
+    pub fn reorder_domain(&mut self, domain: usize, perm: &[u32]) {
+        let agents = &mut self.domains[domain].agents;
+        assert_eq!(perm.len(), agents.len());
+        let mut old: Vec<Option<AgentSlot>> = agents.drain(..).map(Some).collect();
+        for &src in perm {
+            agents.push(old[src as usize].take().expect("permutation not a bijection"));
+        }
+        for (i, slot) in agents.iter().enumerate() {
+            self.uid_map
+                .insert(slot.get().uid(), AgentHandle::new(domain, i));
+        }
+    }
+
+    /// Move agents between domains so that every domain holds an equal
+    /// share (±1) — the "balancing" half of §5.4.2.
+    pub fn balance_domains(&mut self) {
+        let total = self.num_agents();
+        let ndom = self.domains.len();
+        if ndom <= 1 {
+            return;
+        }
+        let target = total / ndom;
+        let rem = total % ndom;
+        let want =
+            |d: usize| -> usize { target + usize::from(d < rem) };
+        // collect surplus
+        let mut surplus: Vec<AgentSlot> = Vec::new();
+        for d in 0..ndom {
+            while self.domains[d].agents.len() > want(d) {
+                surplus.push(self.domains[d].agents.pop().unwrap());
+            }
+        }
+        // redistribute
+        for d in 0..ndom {
+            while self.domains[d].agents.len() < want(d) {
+                let slot = surplus.pop().expect("conservation");
+                self.domains[d].agents.push(slot);
+            }
+        }
+        debug_assert!(surplus.is_empty());
+        // rebuild uid map (positions changed wholesale)
+        self.rebuild_uid_map();
+    }
+
+    fn rebuild_uid_map(&mut self) {
+        self.uid_map.clear();
+        for (d, domain) in self.domains.iter().enumerate() {
+            for (i, slot) in domain.agents.iter().enumerate() {
+                self.uid_map
+                    .insert(slot.get().uid(), AgentHandle::new(d, i));
+            }
+        }
+    }
+
+    /// Swap the agent stored at `h` for `agent` (copy-context commit).
+    /// The UID of the new agent must equal the old one.
+    pub fn replace_agent(&mut self, h: AgentHandle, agent: Box<dyn Agent>) -> Box<dyn Agent> {
+        debug_assert_eq!(
+            agent.uid(),
+            self.get(h).uid(),
+            "replace_agent must preserve the uid"
+        );
+        let slot = &mut self.domains[h.numa as usize].agents[h.idx as usize];
+        std::mem::replace(slot, AgentSlot::new(agent)).into_inner()
+    }
+
+    /// Remove and return every agent (used by the distributed engine
+    /// when migrating agents between ranks).
+    pub fn drain_all(&mut self) -> Vec<Box<dyn Agent>> {
+        let mut out = Vec::with_capacity(self.num_agents());
+        for domain in &mut self.domains {
+            for slot in domain.agents.drain(..) {
+                out.push(slot.into_inner());
+            }
+        }
+        self.uid_map.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::math::Real3;
+
+    fn cell(x: f64) -> Box<dyn Agent> {
+        Box::new(SphericalAgent::new(Real3::new(x, 0.0, 0.0)))
+    }
+
+    #[test]
+    fn add_lookup_get() {
+        let mut rm = ResourceManager::new(2);
+        let h1 = rm.add_agent(cell(1.0));
+        let h2 = rm.add_agent(cell(2.0));
+        assert_eq!(rm.num_agents(), 2);
+        assert_ne!(h1.numa, h2.numa); // round robin over 2 domains
+        let uid1 = rm.get(h1).uid();
+        assert_eq!(rm.lookup(uid1), Some(h1));
+        assert_eq!(rm.get_by_uid(uid1).unwrap().position().x(), 1.0);
+    }
+
+    #[test]
+    fn commit_removals_compacts_and_preserves_survivors() {
+        let pool = ThreadPool::new(2);
+        let mut rm = ResourceManager::new(1);
+        let mut uids = Vec::new();
+        for i in 0..10 {
+            let h = rm.add_agent(cell(i as f64));
+            uids.push(rm.get(h).uid());
+        }
+        // remove a head, a middle, and the tail agent
+        let removed = rm.commit_removals(vec![uids[0], uids[4], uids[9]], &pool);
+        assert_eq!(removed.len(), 3);
+        assert_eq!(rm.num_agents(), 7);
+        // survivors all reachable through the uid map with correct data
+        for (i, uid) in uids.iter().enumerate() {
+            if [0usize, 4, 9].contains(&i) {
+                assert!(rm.lookup(*uid).is_none());
+            } else {
+                let a = rm.get_by_uid(*uid).expect("survivor");
+                assert_eq!(a.position().x(), i as f64);
+            }
+        }
+        // dense: every index < len valid
+        let handles = rm.handles();
+        assert_eq!(handles.len(), 7);
+    }
+
+    #[test]
+    fn commit_removals_all_and_none() {
+        let pool = ThreadPool::new(1);
+        let mut rm = ResourceManager::new(2);
+        let uids: Vec<_> = (0..6)
+            .map(|i| {
+                let h = rm.add_agent(cell(i as f64));
+                rm.get(h).uid()
+            })
+            .collect();
+        assert!(rm.commit_removals(vec![], &pool).is_empty());
+        assert_eq!(rm.num_agents(), 6);
+        let removed = rm.commit_removals(uids.clone(), &pool);
+        assert_eq!(removed.len(), 6);
+        assert_eq!(rm.num_agents(), 0);
+    }
+
+    #[test]
+    fn removal_of_unknown_uid_is_ignored() {
+        let pool = ThreadPool::new(1);
+        let mut rm = ResourceManager::new(1);
+        rm.add_agent(cell(0.0));
+        let removed = rm.commit_removals(vec![424242], &pool);
+        assert!(removed.is_empty());
+        assert_eq!(rm.num_agents(), 1);
+    }
+
+    #[test]
+    fn duplicate_removals_counted_once() {
+        let pool = ThreadPool::new(1);
+        let mut rm = ResourceManager::new(1);
+        let h = rm.add_agent(cell(0.0));
+        let uid = rm.get(h).uid();
+        rm.add_agent(cell(1.0));
+        let removed = rm.commit_removals(vec![uid, uid, uid], &pool);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(rm.num_agents(), 1);
+    }
+
+    #[test]
+    fn commit_additions_assigns_handles_and_uids_kept() {
+        let mut rm = ResourceManager::new(2);
+        let mut a = cell(5.0);
+        a.base_mut().uid = 100;
+        let handles = rm.commit_additions(vec![a]);
+        assert_eq!(handles.len(), 1);
+        assert_eq!(rm.get_by_uid(100).unwrap().position().x(), 5.0);
+        // next issued uid must not collide
+        assert!(rm.issue_uid() > 100);
+    }
+
+    #[test]
+    fn reorder_domain_applies_permutation() {
+        let mut rm = ResourceManager::new(1);
+        for i in 0..5 {
+            rm.add_agent(cell(i as f64));
+        }
+        rm.reorder_domain(0, &[4, 3, 2, 1, 0]);
+        let xs: Vec<f64> = rm
+            .handles()
+            .iter()
+            .map(|&h| rm.get(h).position().x())
+            .collect();
+        assert_eq!(xs, vec![4.0, 3.0, 2.0, 1.0, 0.0]);
+        // uid map still correct
+        rm.for_each_agent(|h, a| assert_eq!(rm.lookup(a.uid()), Some(h)));
+    }
+
+    #[test]
+    fn balance_domains_equalizes() {
+        let mut rm = ResourceManager::new(4);
+        // place 20 agents all in domain 0 by bypassing round-robin
+        for i in 0..20 {
+            let mut a = cell(i as f64);
+            a.base_mut().uid = i + 1;
+            rm.domains[0].agents.push(AgentSlot::new(a));
+        }
+        rm.next_uid = 21;
+        rm.rebuild_uid_map();
+        rm.balance_domains();
+        for d in 0..4 {
+            assert_eq!(rm.num_agents_in(d), 5);
+        }
+        rm.for_each_agent(|h, a| assert_eq!(rm.lookup(a.uid()), Some(h)));
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut rm = ResourceManager::new(3);
+        for i in 0..7 {
+            rm.add_agent(cell(i as f64));
+        }
+        let all = rm.drain_all();
+        assert_eq!(all.len(), 7);
+        assert_eq!(rm.num_agents(), 0);
+        assert!(rm.lookup(all[0].uid()).is_none());
+    }
+}

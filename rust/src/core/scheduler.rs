@@ -1,0 +1,262 @@
+//! The simulation scheduler — Algorithm 8 of the paper.
+//!
+//! Each iteration:
+//! 1. rebuild the environment (pre-standalone),
+//! 2. run user pre-standalone operations,
+//! 3. run all agent operations for all agents in parallel
+//!    (column-wise or row-wise, in-place or copy context),
+//! 4. barrier: commit thread-local additions/removals/deferred updates,
+//! 5. flip the §5.5 moved flags,
+//! 6. run post-standalone operations (diffusion, sorting, export).
+//!
+//! Every phase is timed into [`OpTimers`] — the data behind the
+//! operation-runtime-breakdown experiment (Fig 5.6).
+
+use crate::core::agent::AgentHandle;
+use crate::core::execution_context::{commit_queues, AgentContext, IterationShared, ThreadQueues};
+use crate::core::operation::StandalonePhase;
+use crate::core::param::{ExecutionContextMode, ExecutionOrder};
+use crate::core::random::Rng;
+use crate::core::simulation::Simulation;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Wall-clock accounting per operation.
+#[derive(Debug, Default, Clone)]
+pub struct OpTimers {
+    entries: HashMap<String, (Duration, u64)>,
+}
+
+impl OpTimers {
+    pub fn record(&mut self, name: &str, elapsed: Duration) {
+        let e = self.entries.entry(name.to_string()).or_default();
+        e.0 += elapsed;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.entries.get(name).map(|e| e.0).unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.entries.get(name).map(|e| e.1).unwrap_or_default()
+    }
+
+    /// (name, total, count) sorted by descending total — the Fig 5.6
+    /// breakdown rows.
+    pub fn breakdown(&self) -> Vec<(String, Duration, u64)> {
+        let mut rows: Vec<_> = self
+            .entries
+            .iter()
+            .map(|(k, (d, c))| (k.clone(), *d, *c))
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// Execute one full iteration on `sim`.
+pub fn execute_iteration(sim: &mut Simulation) {
+    // ---- 1. environment update --------------------------------------
+    let t = Instant::now();
+    sim.env.update(&sim.rm, &sim.pool);
+    sim.timers.record("environment_update", t.elapsed());
+
+    // ---- 2. pre-standalone operations --------------------------------
+    run_standalone(sim, StandalonePhase::Pre);
+
+    // ---- 3. agent loop ------------------------------------------------
+    let t = Instant::now();
+    run_agent_ops(sim);
+    sim.timers.record("agent_ops", t.elapsed());
+
+    // ---- 4. commit barrier ---------------------------------------------
+    let t = Instant::now();
+    let queues = std::mem::take(&mut sim.pending_queues);
+    if queues.iter().any(|q| !q.is_empty()) {
+        let (added, removed) = commit_queues(queues, &mut sim.rm, &sim.pool, sim.iteration);
+        sim.agents_added += added.len() as u64;
+        sim.agents_removed += removed.len() as u64;
+    }
+    sim.timers.record("commit", t.elapsed());
+
+    // ---- 5. flip moved flags (§5.5) -------------------------------------
+    let t = Instant::now();
+    flip_moved_flags(sim);
+    sim.timers.record("flip_flags", t.elapsed());
+
+    // ---- 6. post-standalone operations -----------------------------------
+    run_standalone(sim, StandalonePhase::Post);
+
+    sim.iteration += 1;
+}
+
+fn run_standalone(sim: &mut Simulation, phase: StandalonePhase) {
+    let mut ops = std::mem::take(&mut sim.standalone_ops);
+    for op in ops.iter_mut() {
+        if op.phase() != phase {
+            continue;
+        }
+        let freq = op.frequency().max(1);
+        if sim.iteration % freq != 0 {
+            continue;
+        }
+        let t = Instant::now();
+        op.run(sim);
+        sim.timers.record(op.name(), t.elapsed());
+    }
+    // ops added during run() land in sim.standalone_ops; keep them
+    ops.append(&mut sim.standalone_ops);
+    sim.standalone_ops = ops;
+}
+
+/// The iteration order of agents: storage order, or a seeded shuffle
+/// when `randomize_iteration_order` is set (RandomizedRm, §5.2.1).
+fn iteration_order(sim: &Simulation) -> Vec<AgentHandle> {
+    let mut handles = sim.rm.handles();
+    if sim.param.randomize_iteration_order {
+        let mut rng = Rng::for_agent(sim.param.seed, 0, sim.iteration, 7);
+        // Fisher-Yates
+        for i in (1..handles.len()).rev() {
+            let j = rng.uniform_usize(i + 1);
+            handles.swap(i, j);
+        }
+    }
+    handles
+}
+
+fn run_agent_ops(sim: &mut Simulation) {
+    let n = sim.rm.num_agents();
+    if n == 0 {
+        return;
+    }
+    let handles = iteration_order(sim);
+    let nworkers = sim.pool.num_threads();
+    let queues: Vec<Mutex<ThreadQueues>> =
+        (0..nworkers).map(|_| Mutex::new(ThreadQueues::default())).collect();
+    let shared = IterationShared {
+        rm: &sim.rm,
+        env: &*sim.env,
+        substances: &sim.substances,
+        param: &sim.param,
+        iteration: sim.iteration,
+        seed: sim.param.seed,
+    };
+    // operations active this iteration (frequency gate)
+    let active: Vec<&dyn crate::core::operation::AgentOperation> = sim
+        .agent_ops
+        .iter()
+        .filter(|op| sim.iteration % op.frequency().max(1) == 0)
+        .map(|b| &**b)
+        .collect();
+    if active.is_empty() {
+        return;
+    }
+    let copy_mode = sim.param.execution_context == ExecutionContextMode::Copy;
+    let copies: Vec<Mutex<Vec<(AgentHandle, Box<dyn crate::core::agent::Agent>)>>> =
+        (0..nworkers).map(|_| Mutex::new(Vec::new())).collect();
+
+    let grain = 256;
+    // hot loop: the worker queue is locked once per *chunk*, not per
+    // agent (uncontended lock+unlock per agent costs ~15% on
+    // behavior-light models — see EXPERIMENTS.md §Perf iteration 3)
+    let process_chunk = |chunk: std::ops::Range<usize>, wid: usize| {
+        let mut queues_guard = queues[wid].lock().unwrap();
+        for i in chunk {
+            let h = handles[i];
+            // SAFETY: parallel_for chunks are disjoint index ranges over
+            // a deduplicated handle list -> single mutator per slot.
+            if sim.rm.get(h).base().is_ghost {
+                continue; // aura copies are neighbors only (Ch. 6)
+            }
+            if copy_mode {
+                // copy execution context: ops run on a clone; neighbors
+                // keep reading the unmodified original until the barrier.
+                let original = sim.rm.get(h);
+                let mut clone = original.clone_agent();
+                let mut ctx =
+                    AgentContext::new(&shared, &mut queues_guard, clone.uid(), clone.position());
+                for op in &active {
+                    if op.applies_to(&*clone) {
+                        op.run(&mut *clone, &mut ctx);
+                    }
+                }
+                copies[wid].lock().unwrap().push((h, clone));
+            } else {
+                let agent = unsafe { sim.rm.get_mut_unchecked(h) };
+                let mut ctx =
+                    AgentContext::new(&shared, &mut queues_guard, agent.uid(), agent.position());
+                for op in &active {
+                    if op.applies_to(agent) {
+                        op.run(agent, &mut ctx);
+                    }
+                }
+            }
+        }
+    };
+
+    match sim.param.execution_order {
+        ExecutionOrder::ColumnWise => {
+            sim.pool
+                .parallel_for_chunks(0..handles.len(), grain, process_chunk);
+        }
+        ExecutionOrder::RowWise => {
+            // one op for all agents, then the next op. Row-wise always
+            // runs in place: the copy context is defined on whole-agent
+            // updates (column-wise); the combination row-wise+copy falls
+            // back to in-place (documented limitation, matches the
+            // paper's default pairing).
+            for op in &active {
+                sim.pool
+                    .parallel_for_chunks(0..handles.len(), grain, |chunk, wid| {
+                        let mut queues_guard = queues[wid].lock().unwrap();
+                        for i in chunk.clone() {
+                            let h = handles[i];
+                            if sim.rm.get(h).base().is_ghost {
+                                continue;
+                            }
+                            let agent = unsafe { sim.rm.get_mut_unchecked(h) };
+                            let mut ctx = AgentContext::new(
+                                &shared,
+                                &mut queues_guard,
+                                agent.uid(),
+                                agent.position(),
+                            );
+                            if op.applies_to(agent) {
+                                op.run(agent, &mut ctx);
+                            }
+                        }
+                    });
+            }
+        }
+    }
+
+    // write back copies (copy context commit: "commits the changes at
+    // the end of the iteration after all agents have been updated")
+    if copy_mode {
+        for m in &copies {
+            for (h, clone) in m.lock().unwrap().drain(..) {
+                sim.rm.replace_agent(h, clone);
+            }
+        }
+    }
+
+    sim.pending_queues = queues.into_iter().map(|m| m.into_inner().unwrap()).collect();
+}
+
+fn flip_moved_flags(sim: &mut Simulation) {
+    let handles = sim.rm.handles();
+    let rm = &sim.rm;
+    sim.pool.parallel_for(0..handles.len(), 2048, |i, _wid| {
+        // SAFETY: disjoint indices.
+        let agent = unsafe { rm.get_mut_unchecked(handles[i]) };
+        let base = agent.base_mut();
+        base.moved_last = base.moved_now;
+        base.moved_now = false;
+    });
+}

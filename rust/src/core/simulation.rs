@@ -1,0 +1,337 @@
+//! The `Simulation` object — the composition root (paper Fig 4.3's
+//! `Simulation` class): resource manager, environment, substances,
+//! scheduler state, thread pool and parameters.
+
+use crate::core::execution_context::ThreadQueues;
+use crate::core::operation::{
+    AgentOperation, BehaviorOp, DiffusionOp, MechanicalForcesOp, SortAndBalanceOp,
+    StandaloneOperation, VisualizationOp,
+};
+use crate::core::param::{DiffusionBackend, Param};
+use crate::core::parallel::ThreadPool;
+use crate::core::resource_manager::ResourceManager;
+use crate::core::scheduler::{execute_iteration, OpTimers};
+use crate::core::agent::{Agent, AgentHandle};
+use crate::env::{create_environment, Environment};
+use crate::physics::diffusion::{DiffusionGrid, DiffusionStepper, NativeStepper, SubstanceRegistry};
+use crate::Real;
+
+/// A complete agent-based simulation (paper Fig 4.1D: initialization +
+/// iterative execution).
+pub struct Simulation {
+    pub param: Param,
+    pub rm: ResourceManager,
+    pub env: Box<dyn Environment>,
+    pub substances: SubstanceRegistry,
+    pub pool: ThreadPool,
+    pub agent_ops: Vec<Box<dyn AgentOperation>>,
+    pub standalone_ops: Vec<Box<dyn StandaloneOperation>>,
+    /// one stepper per substance id
+    pub steppers: Vec<Box<dyn DiffusionStepper>>,
+    pub iteration: u64,
+    pub timers: OpTimers,
+    pub pending_queues: Vec<ThreadQueues>,
+    pub agents_added: u64,
+    pub agents_removed: u64,
+}
+
+impl Simulation {
+    /// Build a simulation with the default operation set: behaviors +
+    /// mechanical forces (agent ops); diffusion, optional sorting and
+    /// visualization (standalone ops).
+    pub fn new(param: Param) -> Self {
+        let pool = ThreadPool::new(param.num_threads);
+        let rm = ResourceManager::new(param.numa_domains);
+        let env = create_environment(&param);
+        let mut mech = MechanicalForcesOp::new(param.interaction_radius);
+        mech.detect_static = param.detect_static_agents;
+        mech.force = Box::new(crate::physics::force::DefaultForce::new(
+            param.repulsion_k,
+            param.attraction_gamma,
+        ));
+        let agent_ops: Vec<Box<dyn AgentOperation>> =
+            vec![Box::new(BehaviorOp), Box::new(mech)];
+        let mut standalone_ops: Vec<Box<dyn StandaloneOperation>> =
+            vec![Box::new(DiffusionOp { frequency: 1 })];
+        if param.sort_frequency > 0 {
+            standalone_ops.push(Box::new(SortAndBalanceOp {
+                frequency: param.sort_frequency,
+            }));
+        }
+        if param.visualization_interval > 0 {
+            standalone_ops.push(Box::new(VisualizationOp {
+                frequency: param.visualization_interval,
+            }));
+        }
+        Simulation {
+            param,
+            rm,
+            env,
+            substances: SubstanceRegistry::new(),
+            pool,
+            agent_ops,
+            standalone_ops,
+            steppers: Vec::new(),
+            iteration: 0,
+            timers: OpTimers::default(),
+            pending_queues: Vec::new(),
+            agents_added: 0,
+            agents_removed: 0,
+        }
+    }
+
+    /// Convenience: default parameters.
+    pub fn with_defaults() -> Self {
+        Simulation::new(Param::default())
+    }
+
+    // --- population -------------------------------------------------------
+
+    pub fn add_agent(&mut self, agent: Box<dyn Agent>) -> AgentHandle {
+        self.rm.add_agent(agent)
+    }
+
+    pub fn num_agents(&self) -> usize {
+        self.rm.num_agents()
+    }
+
+    // --- substances ---------------------------------------------------------
+
+    /// Define a substance over the simulation space (paper
+    /// `ModelInitializer::DefineSubstance`). Returns the substance id.
+    pub fn define_substance(
+        &mut self,
+        name: &str,
+        resolution: usize,
+        diffusion_coef: Real,
+        decay_constant: Real,
+    ) -> usize {
+        let id = self.substances.len();
+        let grid = DiffusionGrid::new(
+            name,
+            id,
+            resolution,
+            self.param.min_bound,
+            self.param.max_bound,
+            diffusion_coef,
+            decay_constant,
+            self.param.simulation_time_step,
+        );
+        let stepper: Box<dyn DiffusionStepper> = match self.param.diffusion_backend {
+            DiffusionBackend::Native => Box::new(NativeStepper),
+            DiffusionBackend::Pjrt => {
+                match crate::runtime::PjrtStepper::for_grid(&self.param.artifacts_dir, &grid) {
+                    Ok(s) => Box::new(s),
+                    Err(e) => {
+                        eprintln!(
+                            "[teraagent] PJRT stepper unavailable for '{name}' (r={resolution}): {e}; falling back to native"
+                        );
+                        Box::new(NativeStepper)
+                    }
+                }
+            }
+        };
+        self.steppers.push(stepper);
+        self.substances.define(grid)
+    }
+
+    /// Advance all substances one diffusion step (called by
+    /// `DiffusionOp`).
+    pub fn step_substances(&mut self) {
+        for (grid, stepper) in self.substances.iter_mut().zip(self.steppers.iter_mut()) {
+            stepper.step(grid, &self.pool);
+        }
+    }
+
+    // --- operations ----------------------------------------------------------
+
+    pub fn add_agent_op(&mut self, op: Box<dyn AgentOperation>) {
+        self.agent_ops.push(op);
+    }
+
+    /// Remove an agent operation by name (e.g. models without physics
+    /// drop "mechanical_forces"). Returns true if something was removed.
+    pub fn remove_agent_op(&mut self, name: &str) -> bool {
+        let before = self.agent_ops.len();
+        self.agent_ops.retain(|op| op.name() != name);
+        self.agent_ops.len() != before
+    }
+
+    pub fn add_standalone_op(&mut self, op: Box<dyn StandaloneOperation>) {
+        self.standalone_ops.push(op);
+    }
+
+    pub fn remove_standalone_op(&mut self, name: &str) -> bool {
+        let before = self.standalone_ops.len();
+        self.standalone_ops.retain(|op| op.name() != name);
+        self.standalone_ops.len() != before
+    }
+
+    // --- execution -------------------------------------------------------------
+
+    /// Execute one iteration.
+    pub fn step(&mut self) {
+        execute_iteration(self);
+    }
+
+    /// Execute `iterations` iterations (paper `Scheduler::Simulate`).
+    pub fn simulate(&mut self, iterations: u64) {
+        for _ in 0..iterations {
+            self.step();
+        }
+    }
+
+    /// Simulated time elapsed.
+    pub fn time(&self) -> Real {
+        self.iteration as Real * self.param.simulation_time_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::behavior::FnBehavior;
+    use crate::core::event::NewAgentEventKind;
+    use crate::core::math::Real3;
+
+    #[test]
+    fn empty_simulation_steps() {
+        let mut sim = Simulation::with_defaults();
+        sim.simulate(3);
+        assert_eq!(sim.iteration, 3);
+        assert_eq!(sim.num_agents(), 0);
+    }
+
+    #[test]
+    fn behavior_runs_every_iteration() {
+        let mut sim = Simulation::with_defaults();
+        let mut agent = SphericalAgent::new(Real3::ZERO);
+        agent.base.behaviors.push(FnBehavior::new("grow", |a, _ctx| {
+            let d = a.diameter();
+            a.set_diameter(d + 1.0);
+        }));
+        sim.add_agent(Box::new(agent));
+        sim.simulate(5);
+        let h = AgentHandle::new(0, 0);
+        assert_eq!(sim.rm.get(h).diameter(), 15.0);
+    }
+
+    #[test]
+    fn division_appears_next_iteration() {
+        let mut sim = Simulation::with_defaults();
+        let mut agent = SphericalAgent::new(Real3::ZERO);
+        agent
+            .base
+            .behaviors
+            .push(FnBehavior::new("divide_once", |a, ctx| {
+                if ctx.iteration() == 0 {
+                    let cell = a.downcast_mut::<SphericalAgent>().unwrap();
+                    let daughter = cell.divide(Real3::new(1.0, 0.0, 0.0));
+                    ctx.new_agent(NewAgentEventKind::CellDivision, Box::new(daughter));
+                }
+            }));
+        sim.add_agent(Box::new(agent));
+        sim.step();
+        assert_eq!(sim.num_agents(), 2);
+        assert_eq!(sim.agents_added, 1);
+        sim.simulate(2);
+        assert_eq!(sim.num_agents(), 2); // no more divisions
+    }
+
+    #[test]
+    fn removal_takes_effect_at_barrier() {
+        let mut sim = Simulation::with_defaults();
+        for i in 0..4 {
+            let mut a = SphericalAgent::new(Real3::new(i as f64 * 30.0, 0.0, 0.0));
+            a.base.behaviors.push(FnBehavior::new("die", |_a, ctx| {
+                if ctx.iteration() == 1 {
+                    ctx.remove_self();
+                }
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        sim.step();
+        assert_eq!(sim.num_agents(), 4);
+        sim.step();
+        assert_eq!(sim.num_agents(), 0);
+        assert_eq!(sim.agents_removed, 4);
+    }
+
+    #[test]
+    fn mechanics_push_overlapping_cells_apart() {
+        let mut sim = Simulation::with_defaults();
+        sim.param.simulation_time_step = 0.1;
+        let a = sim.add_agent(Box::new(SphericalAgent::with_diameter(
+            Real3::new(0.0, 0.0, 0.0),
+            10.0,
+        )));
+        let b = sim.add_agent(Box::new(SphericalAgent::with_diameter(
+            Real3::new(4.0, 0.0, 0.0),
+            10.0,
+        )));
+        let d0 = sim.rm.get(a).position().distance(&sim.rm.get(b).position());
+        sim.simulate(10);
+        let d1 = sim.rm.get(a).position().distance(&sim.rm.get(b).position());
+        assert!(d1 > d0, "overlapping cells must separate: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn substances_step_and_decay() {
+        let mut sim = Simulation::with_defaults();
+        sim.param.simulation_time_step = 0.1;
+        let id = sim.define_substance("attractant", 8, 0.0, 0.5);
+        sim.substances
+            .get(id)
+            .set(4, 4, 4, 1.0);
+        sim.simulate(1);
+        let v = sim.substances.get(id).get(4, 4, 4);
+        assert!((v - 0.95).abs() < 1e-12, "decay applied: {v}");
+    }
+
+    #[test]
+    fn op_add_remove() {
+        let mut sim = Simulation::with_defaults();
+        assert!(sim.remove_agent_op("mechanical_forces"));
+        assert!(!sim.remove_agent_op("mechanical_forces"));
+        assert!(sim.remove_standalone_op("diffusion"));
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let run = |threads: usize| -> Vec<(u64, [f64; 3])> {
+            let mut p = Param::default();
+            p.num_threads = threads;
+            p.seed = 77;
+            let mut sim = Simulation::new(p);
+            for i in 0..20 {
+                let mut a = SphericalAgent::new(Real3::new(i as f64 * 5.0, 0.0, 0.0));
+                a.base.behaviors.push(FnBehavior::new("jiggle", |a, ctx| {
+                    let step = ctx.rng.uniform3(-1.0, 1.0);
+                    let p = a.position();
+                    a.set_position(p + step);
+                }));
+                sim.add_agent(Box::new(a));
+            }
+            sim.simulate(5);
+            let mut out: Vec<(u64, [f64; 3])> = Vec::new();
+            sim.rm
+                .for_each_agent(|_h, a| out.push((a.uid(), a.position().0)));
+            out.sort_by_key(|e| e.0);
+            out
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a, b, "trajectories must not depend on thread count");
+    }
+
+    #[test]
+    fn timers_populated() {
+        let mut sim = Simulation::with_defaults();
+        sim.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+        sim.simulate(2);
+        assert_eq!(sim.timers.count("agent_ops"), 2);
+        assert!(sim.timers.count("environment_update") == 2);
+        assert!(!sim.timers.breakdown().is_empty());
+    }
+}

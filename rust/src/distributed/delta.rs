@@ -1,0 +1,278 @@
+//! Delta encoding of aura updates (paper §6.2.3, Fig 6.4).
+//!
+//! Agent-based simulations are iterative: between two aura exchanges of
+//! the same agent, most serialized bytes are identical (type tag, uid,
+//! unchanged attributes; position deltas share exponent bytes). The
+//! sender XORs each agent's tailored serialization against the image it
+//! sent last iteration; the result is mostly zero bytes, which a
+//! zero-run-length stage collapses; an optional DEFLATE stage squeezes
+//! the rest. The receiver keeps the same per-uid image cache and
+//! reverses the pipeline.
+//!
+//! Wire format per agent: `mode(1) uid(8) len(4) payload`, where mode
+//! 0 = full record, 1 = XOR+RLE delta (same length as last image).
+
+use crate::core::agent::AgentUid;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+/// Zero-run-length encode: literals are copied, runs of zero bytes
+/// become `0x00 <count u16>`.
+pub fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let mut run = 1usize;
+            while i + run < data.len() && data[i + run] == 0 && run < u16::MAX as usize {
+                run += 1;
+            }
+            out.push(0);
+            out.extend_from_slice(&(run as u16).to_le_bytes());
+            i += run;
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Inverse of [`rle_encode`].
+pub fn rle_decode(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            if i + 2 >= data.len() {
+                return Err("truncated zero run".to_string());
+            }
+            let run = u16::from_le_bytes([data[i + 1], data[i + 2]]) as usize;
+            out.resize(out.len() + run, 0);
+            i += 3;
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// DEFLATE helpers (entropy stage).
+pub fn deflate(data: &[u8]) -> Vec<u8> {
+    let mut enc = flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+    enc.write_all(data).expect("deflate write");
+    enc.finish().expect("deflate finish")
+}
+
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut dec = flate2::read::DeflateDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out).map_err(|e| e.to_string())?;
+    Ok(out)
+}
+
+/// Per-peer delta codec state: the serialized image last exchanged for
+/// every agent UID. Sender and receiver instances stay in lockstep.
+#[derive(Default)]
+pub struct DeltaCodec {
+    images: HashMap<AgentUid, Vec<u8>>,
+    /// bytes that would have been sent without delta encoding
+    pub raw_bytes: u64,
+    /// bytes actually emitted (pre-entropy stage)
+    pub encoded_bytes: u64,
+}
+
+impl DeltaCodec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode one agent record (tailored serialization bytes).
+    pub fn encode(&mut self, uid: AgentUid, record: &[u8], out: &mut Vec<u8>) {
+        self.raw_bytes += record.len() as u64;
+        let before = out.len();
+        match self.images.get(&uid) {
+            Some(prev) if prev.len() == record.len() => {
+                let xored: Vec<u8> = record.iter().zip(prev.iter()).map(|(a, b)| a ^ b).collect();
+                let rle = rle_encode(&xored);
+                if rle.len() < record.len() {
+                    out.push(1);
+                    out.extend_from_slice(&uid.to_le_bytes());
+                    out.extend_from_slice(&(rle.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&rle);
+                } else {
+                    // delta did not pay off: send full
+                    out.push(0);
+                    out.extend_from_slice(&uid.to_le_bytes());
+                    out.extend_from_slice(&(record.len() as u32).to_le_bytes());
+                    out.extend_from_slice(record);
+                }
+            }
+            _ => {
+                out.push(0);
+                out.extend_from_slice(&uid.to_le_bytes());
+                out.extend_from_slice(&(record.len() as u32).to_le_bytes());
+                out.extend_from_slice(record);
+            }
+        }
+        self.images.insert(uid, record.to_vec());
+        self.encoded_bytes += (out.len() - before) as u64;
+    }
+
+    /// Decode one record from `data`; returns (uid, record bytes,
+    /// bytes consumed).
+    pub fn decode(&mut self, data: &[u8]) -> Result<(AgentUid, Vec<u8>, usize), String> {
+        if data.len() < 13 {
+            return Err("short delta header".to_string());
+        }
+        let mode = data[0];
+        let uid = AgentUid::from_le_bytes(data[1..9].try_into().unwrap());
+        let len = u32::from_le_bytes(data[9..13].try_into().unwrap()) as usize;
+        if data.len() < 13 + len {
+            return Err("short delta payload".to_string());
+        }
+        let payload = &data[13..13 + len];
+        let record = match mode {
+            0 => payload.to_vec(),
+            1 => {
+                let xored = rle_decode(payload)?;
+                let prev = self
+                    .images
+                    .get(&uid)
+                    .ok_or_else(|| format!("delta for unknown uid {uid}"))?;
+                if prev.len() != xored.len() {
+                    return Err("delta length mismatch".to_string());
+                }
+                xored.iter().zip(prev.iter()).map(|(a, b)| a ^ b).collect()
+            }
+            m => return Err(format!("bad delta mode {m}")),
+        };
+        self.images.insert(uid, record.clone());
+        Ok((uid, record, 13 + len))
+    }
+
+    /// Drop cached images for agents no longer exchanged (aura exits).
+    pub fn retain(&mut self, keep: impl Fn(AgentUid) -> bool) {
+        self.images.retain(|uid, _| keep(*uid));
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        if self.encoded_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.encoded_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rle_roundtrip() {
+        for data in [
+            vec![],
+            vec![1, 2, 3],
+            vec![0, 0, 0, 0],
+            vec![1, 0, 0, 2, 0, 3],
+            vec![0; 70_000], // run longer than u16::MAX
+        ] {
+            let enc = rle_encode(&data);
+            assert_eq!(rle_decode(&enc).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn rle_compresses_zeros() {
+        let mut data = vec![0u8; 100];
+        data[50] = 7;
+        let enc = rle_encode(&data);
+        assert!(enc.len() < 10, "{} bytes", enc.len());
+    }
+
+    #[test]
+    fn deflate_roundtrip() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 7) as u8).collect();
+        let c = deflate(&data);
+        assert!(c.len() < data.len());
+        assert_eq!(inflate(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn delta_codec_lockstep() {
+        let mut sender = DeltaCodec::new();
+        let mut receiver = DeltaCodec::new();
+        // iteration 1: full records
+        let rec1a = vec![1u8, 2, 3, 4, 5, 6, 7, 8];
+        let rec1b = vec![9u8, 9, 9, 9, 9, 9, 9, 9];
+        let mut wire = Vec::new();
+        sender.encode(100, &rec1a, &mut wire);
+        sender.encode(200, &rec1b, &mut wire);
+        let (u1, r1, used1) = receiver.decode(&wire).unwrap();
+        let (u2, r2, _) = receiver.decode(&wire[used1..]).unwrap();
+        assert_eq!((u1, r1), (100, rec1a.clone()));
+        assert_eq!((u2, r2), (200, rec1b.clone()));
+
+        // iteration 2: one byte changed -> small delta
+        let mut rec2a = rec1a.clone();
+        rec2a[3] = 42;
+        let mut wire2 = Vec::new();
+        sender.encode(100, &rec2a, &mut wire2);
+        assert_eq!(wire2[0], 1, "delta mode expected");
+        assert!(wire2.len() < 13 + rec2a.len());
+        let (u, r, _) = receiver.decode(&wire2).unwrap();
+        assert_eq!((u, r), (100, rec2a));
+    }
+
+    #[test]
+    fn delta_reduces_bytes_for_static_agents() {
+        let mut sender = DeltaCodec::new();
+        let record = vec![7u8; 64];
+        let mut wire = Vec::new();
+        // same record 10 iterations in a row
+        for _ in 0..10 {
+            sender.encode(5, &record, &mut wire);
+        }
+        assert!(
+            sender.compression_ratio() > 2.0,
+            "ratio {}",
+            sender.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn length_change_falls_back_to_full() {
+        let mut sender = DeltaCodec::new();
+        let mut receiver = DeltaCodec::new();
+        let mut wire = Vec::new();
+        sender.encode(1, &[1, 2, 3], &mut wire);
+        sender.encode(1, &[1, 2, 3, 4], &mut wire); // grew
+        let (_, r1, used) = receiver.decode(&wire).unwrap();
+        let (_, r2, _) = receiver.decode(&wire[used..]).unwrap();
+        assert_eq!(r1, vec![1, 2, 3]);
+        assert_eq!(r2, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn retain_evicts() {
+        let mut c = DeltaCodec::new();
+        let mut wire = Vec::new();
+        c.encode(1, &[1], &mut wire);
+        c.encode(2, &[2], &mut wire);
+        c.retain(|uid| uid == 1);
+        let mut wire2 = Vec::new();
+        c.encode(2, &[2], &mut wire2);
+        assert_eq!(wire2[0], 0, "evicted uid must re-send full record");
+    }
+
+    #[test]
+    fn corrupt_delta_rejected() {
+        let mut c = DeltaCodec::new();
+        assert!(c.decode(&[1, 0, 0]).is_err());
+        assert!(c
+            .decode(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 5])
+            .is_err());
+    }
+}

@@ -1,0 +1,630 @@
+//! The distributed scheduler (paper §6.2.1, Fig 6.1).
+//!
+//! Each rank owns the agents inside its spatial slab and runs a full
+//! shared-memory `Simulation` on them ("MPI hybrid": ranks x threads;
+//! "MPI only": 1 thread per rank). Every iteration executes a
+//! superstep:
+//!
+//! 1. **ghost removal**  — drop last iteration's aura copies;
+//! 2. **migration**      — agents that crossed a slab border are
+//!    serialized and moved to their new owner;
+//! 3. **aura exchange**  — agents within one interaction radius of a
+//!    border are serialized (optionally delta-encoded, §6.2.3) and
+//!    mirrored to the neighbor as ghosts;
+//! 4. **local iteration** — the regular Algorithm-8 step; ghosts act
+//!    as neighbors only.
+//!
+//! Phases are split into send/recv halves so that in-process
+//! (sequential ranks), threaded, and TCP multi-process execution use
+//! the same code and the same deterministic message protocol.
+//!
+//! Correctness vs the shared-memory engine (paper Fig 6.5): with the
+//! copy execution context, per-agent RNG streams keyed by UID, and
+//! UID-ordered force summation, R-rank execution reproduces the 1-rank
+//! trajectories exactly — bench `fig6_05_correctness` asserts it.
+
+use crate::core::agent::{Agent, AgentUid};
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use crate::distributed::delta::DeltaCodec;
+use crate::distributed::partition::SlabPartition;
+use crate::distributed::serialize::{tailored, AgentRegistry};
+use crate::distributed::transport::{InProcessTransport, TcpTransport, Transport};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+const TAG_MIGRATION: u32 = 1;
+const TAG_AURA: u32 = 2;
+
+/// Exchange accounting (feeds the Ch. 6 benches).
+#[derive(Debug, Default, Clone)]
+pub struct ExchangeStats {
+    pub migration_bytes: u64,
+    pub migrated_agents: u64,
+    pub aura_bytes_raw: u64,
+    pub aura_bytes_sent: u64,
+    pub ghosts_received: u64,
+    pub messages: u64,
+    pub serialize_time: Duration,
+    pub deserialize_time: Duration,
+}
+
+impl ExchangeStats {
+    pub fn aura_compression_ratio(&self) -> f64 {
+        if self.aura_bytes_sent == 0 {
+            1.0
+        } else {
+            self.aura_bytes_raw as f64 / self.aura_bytes_sent as f64
+        }
+    }
+
+    fn merge(&mut self, other: &ExchangeStats) {
+        self.migration_bytes += other.migration_bytes;
+        self.migrated_agents += other.migrated_agents;
+        self.aura_bytes_raw += other.aura_bytes_raw;
+        self.aura_bytes_sent += other.aura_bytes_sent;
+        self.ghosts_received += other.ghosts_received;
+        self.messages += other.messages;
+        self.serialize_time += other.serialize_time;
+        self.deserialize_time += other.deserialize_time;
+    }
+}
+
+/// One rank's state: its simulation plus exchange bookkeeping.
+pub struct RankWorker {
+    pub rank: usize,
+    pub partition: SlabPartition,
+    pub sim: Simulation,
+    pub delta_enabled: bool,
+    pub stats: ExchangeStats,
+    ghosts: Vec<AgentUid>,
+    send_codecs: HashMap<usize, DeltaCodec>,
+    recv_codecs: HashMap<usize, DeltaCodec>,
+    /// Per-tag behavior templates captured from the initial population:
+    /// migrated agents arrive without behaviors (behaviors never cross
+    /// the wire, §6.2.2) and get the template clone re-attached.
+    /// Models whose behaviors differ per agent of the same type
+    /// register a behavior-complete factory in `AgentRegistry` instead.
+    templates: HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>>,
+}
+
+impl RankWorker {
+    pub fn new(rank: usize, partition: SlabPartition, sim: Simulation) -> Self {
+        let mut worker = RankWorker {
+            rank,
+            partition,
+            sim,
+            delta_enabled: false,
+            stats: ExchangeStats::default(),
+            ghosts: Vec::new(),
+            send_codecs: HashMap::new(),
+            recv_codecs: HashMap::new(),
+            templates: HashMap::new(),
+        };
+        worker.capture_templates();
+        worker
+    }
+
+    /// Remember one behavior set per agent type from the local
+    /// population (call again if types appear later).
+    pub fn capture_templates(&mut self) {
+        let templates = &mut self.templates;
+        self.sim.rm.for_each_agent(|_, a| {
+            if !a.base().behaviors.is_empty() {
+                templates
+                    .entry(a.type_tag())
+                    .or_insert_with(|| a.base().behaviors.to_vec());
+            }
+        });
+    }
+
+    /// Number of agents this rank owns (ghosts excluded).
+    pub fn owned_agents(&self) -> usize {
+        let mut n = 0;
+        self.sim.rm.for_each_agent(|_, a| {
+            n += usize::from(!a.base().is_ghost);
+        });
+        n
+    }
+
+    /// Phase 1: drop last iteration's ghosts.
+    pub fn remove_ghosts(&mut self) {
+        if self.ghosts.is_empty() {
+            return;
+        }
+        let ghosts = std::mem::take(&mut self.ghosts);
+        self.sim.rm.commit_removals(ghosts, &self.sim.pool);
+    }
+
+    /// Phase 2a: send agents that crossed a slab border.
+    pub fn migrate_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        let mut leaving: HashMap<usize, Vec<AgentUid>> = HashMap::new();
+        self.sim.rm.for_each_agent(|_, a| {
+            if a.base().is_ghost {
+                return;
+            }
+            let owner = self.partition.rank_of(a.position());
+            if owner != self.rank {
+                leaving.entry(owner).or_default().push(a.uid());
+            }
+        });
+        // serialize + remove + send per target; always send (possibly
+        // empty) to every neighbor so the receive side can block.
+        for nb in self.partition.neighbors(self.rank) {
+            let uids = leaving.remove(&nb).unwrap_or_default();
+            let t = Instant::now();
+            let mut agents: Vec<Box<dyn Agent>> = Vec::with_capacity(uids.len());
+            if !uids.is_empty() {
+                let removed = self.sim.rm.commit_removals(uids, &self.sim.pool);
+                agents.extend(removed);
+            }
+            let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+            self.stats.serialize_time += t.elapsed();
+            self.stats.migration_bytes += buf.len() as u64;
+            self.stats.migrated_agents += agents.len() as u64;
+            self.stats.messages += 1;
+            transport.send(self.rank, nb, TAG_MIGRATION, buf)?;
+        }
+        // agents "leaving" to non-neighbor ranks can only happen with
+        // pathological displacements; forward via the nearest neighbor
+        // would be the general solution — here we assert it away (the
+        // engine caps per-iteration displacement far below a slab).
+        debug_assert!(
+            leaving.is_empty(),
+            "agent skipped an entire slab: {leaving:?}"
+        );
+        Ok(())
+    }
+
+    /// Phase 2b: receive migrated agents.
+    pub fn migrate_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        for nb in self.partition.neighbors(self.rank) {
+            let buf = transport.recv(self.rank, nb, TAG_MIGRATION)?;
+            let t = Instant::now();
+            let mut agents = tailored::deserialize_batch(&buf)?;
+            self.stats.deserialize_time += t.elapsed();
+            for agent in &mut agents {
+                if agent.base().behaviors.is_empty() {
+                    if let Some(template) = self.templates.get(&agent.type_tag()) {
+                        agent.base_mut().behaviors = template.to_vec();
+                    }
+                }
+            }
+            if !agents.is_empty() {
+                self.sim.rm.commit_additions(agents);
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 3a: send aura agents to neighbors (delta-encoded when
+    /// enabled).
+    pub fn aura_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        let mut per_target: HashMap<usize, Vec<AgentUid>> = HashMap::new();
+        self.sim.rm.for_each_agent(|_, a| {
+            if a.base().is_ghost {
+                return;
+            }
+            for t in self.partition.aura_targets(a.position(), self.rank) {
+                per_target.entry(t).or_default().push(a.uid());
+            }
+        });
+        for nb in self.partition.neighbors(self.rank) {
+            let mut uids = per_target.remove(&nb).unwrap_or_default();
+            uids.sort_unstable(); // deterministic message content
+            let t = Instant::now();
+            let buf = if self.delta_enabled {
+                let codec = self.send_codecs.entry(nb).or_default();
+                let mut buf = Vec::with_capacity(4 + uids.len() * 64);
+                buf.extend_from_slice(&(uids.len() as u32).to_le_bytes());
+                for uid in &uids {
+                    let agent = self.sim.rm.get_by_uid(*uid).expect("aura agent");
+                    let mut record = Vec::with_capacity(64);
+                    tailored::serialize_agent(agent, &mut record);
+                    codec.encode(*uid, &record, &mut buf);
+                }
+                // evict agents that left the aura (resync on re-entry)
+                let keep: std::collections::HashSet<AgentUid> = uids.iter().copied().collect();
+                codec.retain(|u| keep.contains(&u));
+                self.stats.aura_bytes_raw += codec.raw_bytes;
+                codec.raw_bytes = 0;
+                codec.encoded_bytes = 0;
+                buf
+            } else {
+                let rm = &self.sim.rm;
+                let buf =
+                    tailored::serialize_batch(uids.iter().map(|u| rm.get_by_uid(*u).unwrap()));
+                self.stats.aura_bytes_raw += buf.len() as u64;
+                buf
+            };
+            self.stats.serialize_time += t.elapsed();
+            self.stats.aura_bytes_sent += buf.len() as u64;
+            self.stats.messages += 1;
+            transport.send(self.rank, nb, TAG_AURA, buf)?;
+        }
+        Ok(())
+    }
+
+    /// Phase 3b: receive aura agents, add them as ghosts.
+    pub fn aura_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        for nb in self.partition.neighbors(self.rank) {
+            let buf = transport.recv(self.rank, nb, TAG_AURA)?;
+            let t = Instant::now();
+            let agents: Vec<Box<dyn Agent>> = if self.delta_enabled {
+                let codec = self.recv_codecs.entry(nb).or_default();
+                let count = u32::from_le_bytes(
+                    buf.get(0..4).ok_or("short aura message")?.try_into().unwrap(),
+                ) as usize;
+                let mut off = 4;
+                let mut out = Vec::with_capacity(count);
+                let mut seen = std::collections::HashSet::new();
+                for _ in 0..count {
+                    let (uid, record, used) = codec.decode(&buf[off..])?;
+                    off += used;
+                    seen.insert(uid);
+                    let (agent, _) = tailored::deserialize_agent(&record)?;
+                    out.push(agent);
+                }
+                codec.retain(|u| seen.contains(&u));
+                out
+            } else {
+                tailored::deserialize_batch(&buf)?
+            };
+            self.stats.deserialize_time += t.elapsed();
+            self.stats.ghosts_received += agents.len() as u64;
+            for mut agent in agents {
+                agent.base_mut().is_ghost = true;
+                agent.base_mut().behaviors.clear(); // ghosts never act
+                self.ghosts.push(agent.uid());
+                self.sim.rm.commit_additions(vec![agent]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase 4: the local Algorithm-8 iteration.
+    pub fn step_local(&mut self) {
+        self.sim.step();
+    }
+}
+
+/// In-process distributed engine: all ranks in one process, executed
+/// sequentially per phase (deterministic; on this 1-core container the
+/// sequential superstep is also the honest execution model).
+pub struct DistributedEngine {
+    pub workers: Vec<RankWorker>,
+    transport: InProcessTransport,
+    pub iteration: u64,
+}
+
+impl DistributedEngine {
+    /// Distribute a built simulation over `ranks` slab ranks. `builder`
+    /// is invoked once per rank to create the per-rank engine (ops,
+    /// substances) with `threads_per_rank` threads; the master
+    /// population is then split by slab.
+    pub fn new(
+        builder: &dyn Fn(Param) -> Simulation,
+        mut param: Param,
+        ranks: usize,
+        threads_per_rank: usize,
+    ) -> Self {
+        AgentRegistry::register_builtins();
+        // master population (single namespace uids)
+        let mut master = builder(param.clone());
+        let aura = master.param.interaction_radius;
+        let wrap = master.param.bound_space == crate::core::param::BoundaryCondition::Toroidal;
+        let partition =
+            SlabPartition::new(master.param.min_bound, master.param.max_bound, ranks, aura)
+                .with_wrap(wrap);
+        let agents = master.rm.drain_all();
+        let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
+
+        param.num_threads = threads_per_rank;
+        let mut workers: Vec<RankWorker> = (0..ranks)
+            .map(|r| {
+                let mut sim = builder(param.clone());
+                sim.rm.drain_all(); // keep ops/substances, drop agents
+                sim.rm
+                    .set_uid_namespace(max_uid + 1 + r as u64, ranks as u64);
+                RankWorker::new(r, partition.clone(), sim)
+            })
+            .collect();
+        for agent in agents {
+            let r = partition.rank_of(agent.position());
+            workers[r].sim.rm.commit_additions(vec![agent]);
+        }
+        for w in &mut workers {
+            w.capture_templates(); // population arrived after new()
+        }
+        DistributedEngine {
+            workers,
+            transport: InProcessTransport::new(ranks),
+            iteration: 0,
+        }
+    }
+
+    /// Enable delta encoding of aura updates on all ranks (§6.2.3).
+    pub fn set_delta_enabled(&mut self, enabled: bool) {
+        for w in &mut self.workers {
+            w.delta_enabled = enabled;
+        }
+    }
+
+    /// One distributed superstep.
+    pub fn step(&mut self) {
+        let t = &self.transport;
+        for w in &mut self.workers {
+            w.remove_ghosts();
+        }
+        for w in &mut self.workers {
+            w.migrate_send(t).expect("migrate send");
+        }
+        for w in &mut self.workers {
+            w.migrate_recv(t).expect("migrate recv");
+        }
+        for w in &mut self.workers {
+            w.aura_send(t).expect("aura send");
+        }
+        for w in &mut self.workers {
+            w.aura_recv(t).expect("aura recv");
+        }
+        for w in &mut self.workers {
+            w.step_local();
+        }
+        self.iteration += 1;
+    }
+
+    pub fn simulate(&mut self, iterations: u64) {
+        for _ in 0..iterations {
+            self.step();
+        }
+    }
+
+    /// Total owned agents across ranks.
+    pub fn num_agents(&self) -> usize {
+        self.workers.iter().map(|w| w.owned_agents()).sum()
+    }
+
+    /// Aggregated exchange statistics.
+    pub fn stats(&self) -> ExchangeStats {
+        let mut total = ExchangeStats::default();
+        for w in &self.workers {
+            total.merge(&w.stats);
+        }
+        total
+    }
+
+    /// Snapshot of all owned agents as (uid, position, diameter),
+    /// sorted by uid — the Fig 6.5 comparison vector.
+    pub fn state_snapshot(&self) -> Vec<(AgentUid, [f64; 3], f64)> {
+        let mut out = Vec::new();
+        for w in &self.workers {
+            w.sim.rm.for_each_agent(|_, a| {
+                if !a.base().is_ghost {
+                    out.push((a.uid(), a.position().0, a.diameter()));
+                }
+            });
+        }
+        out.sort_by_key(|e| e.0);
+        out
+    }
+}
+
+/// Snapshot helper for plain simulations (shared-memory side of the
+/// Fig 6.5 comparison).
+pub fn simulation_snapshot(sim: &Simulation) -> Vec<(AgentUid, [f64; 3], f64)> {
+    let mut out = Vec::new();
+    sim.rm.for_each_agent(|_, a| {
+        if !a.base().is_ghost {
+            out.push((a.uid(), a.position().0, a.diameter()));
+        }
+    });
+    out.sort_by_key(|e| e.0);
+    out
+}
+
+/// Multi-process worker: one OS process per rank, TCP transport
+/// (`teraagent worker --rank R --ranks N --base-port P <model>`).
+pub fn run_tcp_worker(
+    model: &str,
+    mut param: Param,
+    rank: usize,
+    ranks: usize,
+    base_port: u16,
+    iterations: u64,
+) -> Result<(), String> {
+    AgentRegistry::register_builtins();
+    // every process builds the same master population deterministically
+    // (same seed) and keeps only its slab — no central coordinator
+    // needed for setup.
+    let mut master = crate::models::build_named(model, param.clone())
+        .ok_or_else(|| format!("unknown model {model}"))?;
+    let aura = master.param.interaction_radius;
+    let wrap = master.param.bound_space == crate::core::param::BoundaryCondition::Toroidal;
+    let partition =
+        SlabPartition::new(master.param.min_bound, master.param.max_bound, ranks, aura)
+            .with_wrap(wrap);
+    let agents = master.rm.drain_all();
+    let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
+
+    param.num_threads = param.num_threads.max(1);
+    let mut sim = crate::models::build_named(model, param).unwrap();
+    sim.rm.drain_all();
+    sim.rm.set_uid_namespace(max_uid + 1 + rank as u64, ranks as u64);
+    let mine: Vec<Box<dyn Agent>> = agents
+        .into_iter()
+        .filter(|a| partition.rank_of(a.position()) == rank)
+        .collect();
+    sim.rm.commit_additions(mine);
+
+    let transport = TcpTransport::bind(rank, ranks, base_port)?;
+    // tiny settle delay so all ranks are listening before first send
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let mut worker = RankWorker::new(rank, partition, sim);
+    let start = Instant::now();
+    for _ in 0..iterations {
+        worker.remove_ghosts();
+        worker.migrate_send(&transport)?;
+        worker.migrate_recv(&transport)?;
+        worker.aura_send(&transport)?;
+        worker.aura_recv(&transport)?;
+        worker.step_local();
+    }
+    println!(
+        "rank {rank}/{ranks}: {} owned agents after {iterations} iterations in {:.3}s; \
+         aura {} raw -> {} sent ({:.2}x), {} ghosts, ser {:.3}ms deser {:.3}ms",
+        worker.owned_agents(),
+        start.elapsed().as_secs_f64(),
+        worker.stats.aura_bytes_raw,
+        worker.stats.aura_bytes_sent,
+        worker.stats.aura_compression_ratio(),
+        worker.stats.ghosts_received,
+        worker.stats.serialize_time.as_secs_f64() * 1e3,
+        worker.stats.deserialize_time.as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::param::ExecutionContextMode;
+    use crate::models::epidemiology::{self, SirParams};
+
+    fn sir_param(threads: usize) -> Param {
+        let mut p = Param::default();
+        p.seed = 42;
+        p.num_threads = threads;
+        // copy context: required for exact shared-vs-distributed match
+        p.execution_context = ExecutionContextMode::Copy;
+        p
+    }
+
+    fn small_sir() -> SirParams {
+        SirParams {
+            initial_susceptible: 300,
+            initial_infected: 10,
+            space_length: 60.0,
+            ..SirParams::measles()
+        }
+    }
+
+    fn builder(p: Param) -> Simulation {
+        epidemiology::build(p, &small_sir())
+    }
+
+    #[test]
+    fn distribution_preserves_population() {
+        let engine = DistributedEngine::new(&builder, sir_param(1), 3, 1);
+        assert_eq!(engine.num_agents(), 310);
+        // each rank owns only agents in its slab
+        for w in &engine.workers {
+            let (lo, hi) = w.partition.slab_of(w.rank);
+            w.sim.rm.for_each_agent(|_, a| {
+                if !a.base().is_ghost {
+                    assert!(a.position().x() >= lo - 1e-9 && a.position().x() < hi + 1e-9);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn steps_conserve_agents_and_exchange_ghosts() {
+        let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
+        engine.simulate(5);
+        assert_eq!(engine.num_agents(), 310, "no agents lost in exchanges");
+        let stats = engine.stats();
+        assert!(stats.ghosts_received > 0, "aura must move ghosts");
+        assert!(stats.aura_bytes_sent > 0);
+    }
+
+    #[test]
+    fn matches_shared_memory_exactly() {
+        // Fig 6.5: R-rank run == 1-rank shared-memory run, bitwise.
+        let mut shared = builder(sir_param(1));
+        shared.simulate(10);
+        let expect = simulation_snapshot(&shared);
+
+        for ranks in [2usize, 4] {
+            let mut engine = DistributedEngine::new(&builder, sir_param(1), ranks, 1);
+            engine.simulate(10);
+            let got = engine.state_snapshot();
+            assert_eq!(got.len(), expect.len(), "ranks={ranks}");
+            for (g, e) in got.iter().zip(expect.iter()) {
+                assert_eq!(g.0, e.0, "uid mismatch (ranks={ranks})");
+                for c in 0..3 {
+                    assert!(
+                        (g.1[c] - e.1[c]).abs() < 1e-12,
+                        "ranks={ranks} uid={} coord {c}: {} vs {}",
+                        g.0,
+                        g.1[c],
+                        e.1[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_encoding_shrinks_aura_traffic() {
+        // Delta encoding pays off when most serialized bytes repeat
+        // between exchanges (§6.2.3: "exploit the iterative nature");
+        // use the slow-dynamics regime (no movement, states still
+        // evolve). The fig6_11 bench sweeps the dynamics scale.
+        let slow = |p: Param| {
+            epidemiology::build(
+                p,
+                &SirParams {
+                    max_movement: 0.0,
+                    ..small_sir()
+                },
+            )
+        };
+        let mut plain = DistributedEngine::new(&slow, sir_param(1), 2, 1);
+        plain.simulate(8);
+        let raw = plain.stats();
+
+        let mut delta = DistributedEngine::new(&slow, sir_param(1), 2, 1);
+        delta.set_delta_enabled(true);
+        delta.simulate(8);
+        let enc = delta.stats();
+        // identical results
+        assert_eq!(plain.state_snapshot(), delta.state_snapshot());
+        assert!(
+            (enc.aura_bytes_sent as f64) < raw.aura_bytes_sent as f64 * 0.6,
+            "delta {} !< 0.6 * raw {}",
+            enc.aura_bytes_sent,
+            raw.aura_bytes_sent
+        );
+    }
+
+    #[test]
+    fn migration_moves_ownership() {
+        let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
+        engine.simulate(20);
+        let stats = engine.stats();
+        assert!(stats.migrated_agents > 0, "random movement must migrate");
+        assert_eq!(engine.num_agents(), 310);
+        // after one more exchange-only pass, every owned agent sits in
+        // its rank's slab: run the exchange phases without a local step
+        let t = InProcessTransport::new(2);
+        for w in &mut engine.workers {
+            w.remove_ghosts();
+        }
+        for w in &mut engine.workers {
+            w.migrate_send(&t).unwrap();
+        }
+        for w in &mut engine.workers {
+            w.migrate_recv(&t).unwrap();
+        }
+        for w in &engine.workers {
+            let (lo, hi) = w.partition.slab_of(w.rank);
+            w.sim.rm.for_each_agent(|_, a| {
+                if !a.base().is_ghost {
+                    let x = a.position().x();
+                    assert!(x >= lo - 1e-9 && x < hi + 1e-9, "agent outside its slab");
+                }
+            });
+        }
+    }
+}

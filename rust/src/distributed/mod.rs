@@ -1,0 +1,16 @@
+//! TeraAgent — the distributed simulation engine (paper Ch. 6).
+//!
+//! Submodules:
+//! * [`serialize`] — tailored agent serialization + the reflection
+//!   baseline (§6.2.2, §6.3.10)
+//! * [`delta`]     — delta encoding of aura updates (§6.2.3, §6.3.11)
+//! * [`partition`] — spatial decomposition across ranks (§6.2.1)
+//! * [`transport`] — in-process + TCP message transports (MPI stand-in)
+//! * [`engine`]    — the distributed scheduler: migration, aura
+//!   exchange, per-rank iteration (§6.2.1, Fig 6.1)
+
+pub mod delta;
+pub mod engine;
+pub mod partition;
+pub mod serialize;
+pub mod transport;

@@ -1,0 +1,162 @@
+//! Spatial decomposition across ranks (paper §6.2.1, Fig 6.1).
+//!
+//! TeraAgent decomposes the simulation space into per-rank regions;
+//! agents near a region border (the *aura*, one interaction radius
+//! wide) are mirrored to the neighboring rank each iteration. This
+//! module implements a 1D slab decomposition along x — the pattern
+//! that determines migration and aura membership; higher-dimensional
+//! decompositions only change the neighbor-rank set.
+
+use crate::core::math::Real3;
+use crate::Real;
+
+/// 1D slab partition of `[min, max)` along the x axis into `ranks`
+/// equal slabs.
+#[derive(Debug, Clone)]
+pub struct SlabPartition {
+    pub min: Real,
+    pub max: Real,
+    pub ranks: usize,
+    /// aura width = interaction radius
+    pub aura: Real,
+    /// toroidal space: the first and last slab are migration neighbors
+    /// (agents wrap across the x boundary). The aura does NOT wrap —
+    /// the shared-memory engine's Euclidean neighbor search does not
+    /// interact across the wrap either, and the distributed engine must
+    /// reproduce its semantics exactly (Fig 6.5).
+    pub wrap: bool,
+}
+
+impl SlabPartition {
+    pub fn new(min: Real, max: Real, ranks: usize, aura: Real) -> Self {
+        assert!(max > min && ranks >= 1 && aura >= 0.0);
+        SlabPartition {
+            min,
+            max,
+            ranks,
+            aura,
+            wrap: false,
+        }
+    }
+
+    pub fn with_wrap(mut self, wrap: bool) -> Self {
+        self.wrap = wrap;
+        self
+    }
+
+    pub fn slab_width(&self) -> Real {
+        (self.max - self.min) / self.ranks as Real
+    }
+
+    /// Owning rank of a position (clamped to the valid range).
+    pub fn rank_of(&self, pos: Real3) -> usize {
+        let rel = (pos.x() - self.min) / self.slab_width();
+        (rel.floor().max(0.0) as usize).min(self.ranks - 1)
+    }
+
+    /// Slab interval `[lo, hi)` of a rank.
+    pub fn slab_of(&self, rank: usize) -> (Real, Real) {
+        let w = self.slab_width();
+        (
+            self.min + rank as Real * w,
+            self.min + (rank + 1) as Real * w,
+        )
+    }
+
+    /// Neighbor ranks whose aura this position falls into (i.e. ranks
+    /// that need a ghost copy of an agent at `pos` owned by
+    /// `owner_rank`).
+    pub fn aura_targets(&self, pos: Real3, owner_rank: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let (lo, hi) = self.slab_of(owner_rank);
+        if owner_rank > 0 && pos.x() < lo + self.aura {
+            out.push(owner_rank - 1);
+        }
+        if owner_rank + 1 < self.ranks && pos.x() >= hi - self.aura {
+            out.push(owner_rank + 1);
+        }
+        out
+    }
+
+    /// All neighbor ranks of `rank` (slab decomposition: at most 2;
+    /// wrap adds the opposite end for toroidal migration).
+    pub fn neighbors(&self, rank: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if rank > 0 {
+            out.push(rank - 1);
+        }
+        if rank + 1 < self.ranks {
+            out.push(rank + 1);
+        }
+        if self.wrap && self.ranks > 2 {
+            if rank == 0 {
+                out.push(self.ranks - 1);
+            } else if rank == self.ranks - 1 {
+                out.insert(0, 0);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_assignment_covers_space() {
+        let p = SlabPartition::new(0.0, 100.0, 4, 5.0);
+        assert_eq!(p.rank_of(Real3::new(0.0, 0.0, 0.0)), 0);
+        assert_eq!(p.rank_of(Real3::new(24.9, 50.0, 0.0)), 0);
+        assert_eq!(p.rank_of(Real3::new(25.0, 0.0, 0.0)), 1);
+        assert_eq!(p.rank_of(Real3::new(99.9, 0.0, 0.0)), 3);
+        // out of range clamps
+        assert_eq!(p.rank_of(Real3::new(-5.0, 0.0, 0.0)), 0);
+        assert_eq!(p.rank_of(Real3::new(105.0, 0.0, 0.0)), 3);
+    }
+
+    #[test]
+    fn slabs_tile_the_space() {
+        let p = SlabPartition::new(-50.0, 50.0, 5, 2.0);
+        let mut prev_hi = -50.0;
+        for r in 0..5 {
+            let (lo, hi) = p.slab_of(r);
+            assert!((lo - prev_hi).abs() < 1e-12);
+            prev_hi = hi;
+        }
+        assert!((prev_hi - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aura_targets_near_borders_only() {
+        let p = SlabPartition::new(0.0, 100.0, 4, 5.0);
+        // deep inside rank 1: no aura targets
+        assert!(p.aura_targets(Real3::new(37.5, 0.0, 0.0), 1).is_empty());
+        // near rank 1's lower border: ghost to rank 0
+        assert_eq!(p.aura_targets(Real3::new(26.0, 0.0, 0.0), 1), vec![0]);
+        // near rank 1's upper border: ghost to rank 2
+        assert_eq!(p.aura_targets(Real3::new(48.0, 0.0, 0.0), 1), vec![2]);
+        // first rank has no lower neighbor
+        assert!(p.aura_targets(Real3::new(1.0, 0.0, 0.0), 0).is_empty());
+        // last rank has no upper neighbor
+        assert!(p.aura_targets(Real3::new(99.0, 0.0, 0.0), 3).is_empty());
+    }
+
+    #[test]
+    fn neighbor_sets() {
+        let p = SlabPartition::new(0.0, 100.0, 3, 1.0);
+        assert_eq!(p.neighbors(0), vec![1]);
+        assert_eq!(p.neighbors(1), vec![0, 2]);
+        assert_eq!(p.neighbors(2), vec![1]);
+        let single = SlabPartition::new(0.0, 1.0, 1, 0.1);
+        assert!(single.neighbors(0).is_empty());
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let p = SlabPartition::new(0.0, 10.0, 1, 1.0);
+        for x in [-1.0, 0.0, 5.0, 9.9, 20.0] {
+            assert_eq!(p.rank_of(Real3::new(x, 0.0, 0.0)), 0);
+        }
+    }
+}

@@ -1,0 +1,406 @@
+//! Agent serialization (paper §6.2.2, Fig 6.2).
+//!
+//! Distributed execution packs agents into contiguous buffers before
+//! sending them to other ranks. Two serializers implement the same
+//! wire-level job:
+//!
+//! * [`tailored`] — TeraAgent's mechanism: one pass over a pre-sized
+//!   buffer, fixed-layout base fields memcpy'd, a varint-free
+//!   length-prefixed extra section per agent. No type dictionaries, no
+//!   per-field tags, no string lookups.
+//! * [`reflection`] — the ROOT-IO-class baseline (see DESIGN.md §3):
+//!   a schema-walking generic serializer that writes class-name
+//!   strings, per-field name tags and type codes. It reproduces the
+//!   *work profile* the paper attributes to ROOT IO; the §6.3.10
+//!   speedup is measured against it (bench fig6_10).
+//!
+//! Deserialization dispatches on the agent's `type_tag` through the
+//! global [`AgentRegistry`]; models register a factory that rebuilds
+//! the agent *including its behaviors* (behaviors are attached by
+//! type, so they never cross the wire — the paper's "avoid unnecessary
+//! work" principle applied to behavior dictionaries).
+
+use crate::core::agent::{Agent, AgentUid};
+use crate::core::math::Real3;
+use crate::Real;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Factory: create an empty agent of a given type, ready for
+/// `deserialize_extra`. Models may register closures that also install
+/// the type's behaviors; otherwise the distributed engine re-attaches
+/// behaviors from per-tag templates (see `engine::RankWorker`).
+pub type AgentFactory = Box<dyn Fn() -> Box<dyn Agent> + Send + Sync>;
+
+/// Global type-tag -> factory registry.
+pub struct AgentRegistry;
+
+static REGISTRY: OnceLock<Mutex<HashMap<u16, AgentFactory>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<HashMap<u16, AgentFactory>> {
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl AgentRegistry {
+    pub fn register(tag: u16, factory: impl Fn() -> Box<dyn Agent> + Send + Sync + 'static) {
+        registry().lock().unwrap().insert(tag, Box::new(factory));
+    }
+
+    pub fn create(tag: u16) -> Option<Box<dyn Agent>> {
+        registry().lock().unwrap().get(&tag).map(|f| f())
+    }
+
+    /// Register the built-in agent types (idempotent). The factories
+    /// create bare agents; per-type behaviors are re-attached by the
+    /// distributed engine's template mechanism, or models overwrite a
+    /// tag with a behavior-complete factory.
+    pub fn register_builtins() {
+        use crate::core::agent::{SphericalAgent, SPHERICAL_AGENT_TAG};
+        AgentRegistry::register(SPHERICAL_AGENT_TAG, || {
+            Box::new(SphericalAgent::new(Real3::ZERO))
+        });
+        AgentRegistry::register(crate::neuro::NEURON_SOMA_TAG, || {
+            Box::new(crate::neuro::NeuronSoma::new(Real3::ZERO))
+        });
+        AgentRegistry::register(crate::neuro::NEURITE_ELEMENT_TAG, || {
+            Box::new(crate::neuro::NeuriteElement::for_test(
+                Real3::ZERO,
+                Real3::ZERO,
+                1.0,
+            ))
+        });
+        AgentRegistry::register(crate::models::epidemiology::PERSON_TAG, || {
+            Box::new(crate::models::epidemiology::Person::new(
+                Real3::ZERO,
+                crate::models::epidemiology::State::Susceptible,
+            ))
+        });
+        AgentRegistry::register(crate::models::soma_clustering::SOMA_CELL_TAG, || {
+            Box::new(crate::models::soma_clustering::SomaCell::new(Real3::ZERO, 0))
+        });
+        AgentRegistry::register(crate::models::spheroid::TUMOR_CELL_TAG, || {
+            Box::new(crate::models::spheroid::TumorCell::new(Real3::ZERO, 10.0))
+        });
+        AgentRegistry::register(crate::models::cell_sorting::SORTING_CELL_TAG, || {
+            Box::new(crate::models::cell_sorting::SortingCell::new(Real3::ZERO, 0))
+        });
+    }
+}
+
+// --------------------------------------------------------------------
+// tailored serializer
+// --------------------------------------------------------------------
+
+/// Fixed per-agent header: tag(2) uid(8) pos(24) diameter(8) flags(1)
+/// extra_len(4).
+const BASE_RECORD: usize = 2 + 8 + 24 + 8 + 1 + 4;
+
+pub mod tailored {
+    use super::*;
+
+    /// Serialize one agent into `buf`; returns bytes appended.
+    pub fn serialize_agent(agent: &dyn Agent, buf: &mut Vec<u8>) -> usize {
+        let start = buf.len();
+        buf.extend_from_slice(&agent.type_tag().to_le_bytes());
+        buf.extend_from_slice(&agent.uid().to_le_bytes());
+        let p = agent.position();
+        for c in p.0 {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        buf.extend_from_slice(&agent.diameter().to_le_bytes());
+        buf.push(u8::from(agent.base().moved_last));
+        let len_pos = buf.len();
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let extra_start = buf.len();
+        agent.serialize_extra(buf);
+        let extra_len = (buf.len() - extra_start) as u32;
+        buf[len_pos..len_pos + 4].copy_from_slice(&extra_len.to_le_bytes());
+        buf.len() - start
+    }
+
+    /// Serialize a batch in one pass (pre-sized buffer).
+    pub fn serialize_batch<'a>(agents: impl Iterator<Item = &'a dyn Agent>) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4096);
+        let mut count = 0u32;
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        for agent in agents {
+            serialize_agent(agent, &mut buf);
+            count += 1;
+        }
+        buf[0..4].copy_from_slice(&count.to_le_bytes());
+        buf
+    }
+
+    /// Deserialize one agent starting at `data[offset..]`; returns
+    /// (agent, bytes consumed).
+    pub fn deserialize_agent(data: &[u8]) -> Result<(Box<dyn Agent>, usize), String> {
+        if data.len() < BASE_RECORD {
+            return Err("short record".to_string());
+        }
+        let tag = u16::from_le_bytes(data[0..2].try_into().unwrap());
+        let uid = AgentUid::from_le_bytes(data[2..10].try_into().unwrap());
+        let f = |o: usize| Real::from_le_bytes(data[o..o + 8].try_into().unwrap());
+        let pos = Real3::new(f(10), f(18), f(26));
+        let diameter = f(34);
+        let moved_last = data[42] != 0;
+        let extra_len = u32::from_le_bytes(data[43..47].try_into().unwrap()) as usize;
+        if data.len() < BASE_RECORD + extra_len {
+            return Err("short extra section".to_string());
+        }
+        let mut agent =
+            AgentRegistry::create(tag).ok_or_else(|| format!("unregistered tag {tag}"))?;
+        {
+            let base = agent.base_mut();
+            base.uid = uid;
+            base.position = pos;
+            base.diameter = diameter;
+            base.moved_last = moved_last;
+        }
+        let consumed = agent.deserialize_extra(&data[BASE_RECORD..BASE_RECORD + extra_len]);
+        debug_assert_eq!(consumed, extra_len, "extra length mismatch for tag {tag}");
+        Ok((agent, BASE_RECORD + extra_len))
+    }
+
+    /// Deserialize a batch produced by [`serialize_batch`].
+    pub fn deserialize_batch(data: &[u8]) -> Result<Vec<Box<dyn Agent>>, String> {
+        if data.len() < 4 {
+            return Err("empty batch".to_string());
+        }
+        let count = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+        let mut out = Vec::with_capacity(count);
+        let mut off = 4;
+        for _ in 0..count {
+            let (agent, used) = deserialize_agent(&data[off..])?;
+            out.push(agent);
+            off += used;
+        }
+        Ok(out)
+    }
+}
+
+// --------------------------------------------------------------------
+// reflection baseline
+// --------------------------------------------------------------------
+
+pub mod reflection {
+    use super::*;
+
+    fn write_str(buf: &mut Vec<u8>, s: &str) {
+        buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn read_str(data: &[u8]) -> (String, usize) {
+        let len = u16::from_le_bytes(data[0..2].try_into().unwrap()) as usize;
+        (
+            String::from_utf8_lossy(&data[2..2 + len]).into_owned(),
+            2 + len,
+        )
+    }
+
+    fn write_field_f64(buf: &mut Vec<u8>, name: &str, v: f64) {
+        write_str(buf, name);
+        buf.push(8); // type code: f64
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn write_field_u64(buf: &mut Vec<u8>, name: &str, v: u64) {
+        write_str(buf, name);
+        buf.push(4); // type code: u64
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn write_field_bytes(buf: &mut Vec<u8>, name: &str, v: &[u8]) {
+        write_str(buf, name);
+        buf.push(12); // type code: byte array
+        buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        buf.extend_from_slice(v);
+    }
+
+    /// Schema-walking serialization: class name + per-field name tags,
+    /// the ROOT-IO-style work profile.
+    pub fn serialize_agent(agent: &dyn Agent, buf: &mut Vec<u8>) -> usize {
+        let start = buf.len();
+        write_str(buf, agent.type_name());
+        write_field_u64(buf, "type_tag", agent.type_tag() as u64);
+        write_field_u64(buf, "uid", agent.uid());
+        let p = agent.position();
+        write_field_f64(buf, "position_x", p.x());
+        write_field_f64(buf, "position_y", p.y());
+        write_field_f64(buf, "position_z", p.z());
+        write_field_f64(buf, "diameter", agent.diameter());
+        write_field_u64(buf, "moved_last", u64::from(agent.base().moved_last));
+        let mut extra = Vec::new();
+        agent.serialize_extra(&mut extra);
+        write_field_bytes(buf, "extra", &extra);
+        buf.len() - start
+    }
+
+    pub fn serialize_batch<'a>(agents: impl Iterator<Item = &'a dyn Agent>) -> Vec<u8> {
+        let mut buf = Vec::new();
+        let mut count = 0u32;
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        for agent in agents {
+            serialize_agent(agent, &mut buf);
+            count += 1;
+        }
+        buf[0..4].copy_from_slice(&count.to_le_bytes());
+        buf
+    }
+
+    pub fn deserialize_agent(data: &[u8]) -> Result<(Box<dyn Agent>, usize), String> {
+        let mut off = 0;
+        let (_class, used) = read_str(&data[off..]);
+        off += used;
+        let mut fields_f: HashMap<String, f64> = HashMap::new();
+        let mut fields_u: HashMap<String, u64> = HashMap::new();
+        let mut extra: Vec<u8> = Vec::new();
+        for _ in 0..8 {
+            let (name, used) = read_str(&data[off..]);
+            off += used;
+            let code = data[off];
+            off += 1;
+            match code {
+                8 => {
+                    fields_f.insert(
+                        name,
+                        f64::from_le_bytes(data[off..off + 8].try_into().unwrap()),
+                    );
+                    off += 8;
+                }
+                4 => {
+                    fields_u.insert(
+                        name,
+                        u64::from_le_bytes(data[off..off + 8].try_into().unwrap()),
+                    );
+                    off += 8;
+                }
+                12 => {
+                    let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+                    off += 4;
+                    extra = data[off..off + len].to_vec();
+                    off += len;
+                }
+                c => return Err(format!("bad type code {c}")),
+            }
+        }
+        let tag = *fields_u.get("type_tag").ok_or("missing type_tag")? as u16;
+        let mut agent =
+            AgentRegistry::create(tag).ok_or_else(|| format!("unregistered tag {tag}"))?;
+        {
+            let base = agent.base_mut();
+            base.uid = *fields_u.get("uid").ok_or("missing uid")?;
+            base.position = Real3::new(
+                *fields_f.get("position_x").ok_or("missing x")?,
+                *fields_f.get("position_y").ok_or("missing y")?,
+                *fields_f.get("position_z").ok_or("missing z")?,
+            );
+            base.diameter = *fields_f.get("diameter").ok_or("missing d")?;
+            base.moved_last = fields_u.get("moved_last").copied().unwrap_or(1) != 0;
+        }
+        agent.deserialize_extra(&extra);
+        Ok((agent, off))
+    }
+
+    pub fn deserialize_batch(data: &[u8]) -> Result<Vec<Box<dyn Agent>>, String> {
+        let count = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+        let mut out = Vec::with_capacity(count);
+        let mut off = 4;
+        for _ in 0..count {
+            let (agent, used) = deserialize_agent(&data[off..])?;
+            out.push(agent);
+            off += used;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::models::epidemiology::{Person, State};
+
+    fn sample_agents() -> Vec<Box<dyn Agent>> {
+        AgentRegistry::register_builtins();
+        let mut a = SphericalAgent::with_diameter(Real3::new(1.0, 2.0, 3.0), 7.5);
+        a.base.uid = 11;
+        a.displacement = Real3::new(0.1, 0.2, 0.3);
+        let mut p = Person::new(Real3::new(-4.0, 5.0, 6.0), State::Infected);
+        p.base.uid = 22;
+        p.base.moved_last = false;
+        let mut n = crate::neuro::NeuriteElement::for_test(
+            Real3::new(0.0, 0.0, 0.0),
+            Real3::new(0.0, 0.0, 9.0),
+            1.5,
+        );
+        n.base.uid = 33;
+        n.is_apical = true;
+        n.daughters = vec![1, 2, 3];
+        vec![Box::new(a), Box::new(p), Box::new(n)]
+    }
+
+    fn assert_same(a: &dyn Agent, b: &dyn Agent) {
+        assert_eq!(a.uid(), b.uid());
+        assert_eq!(a.type_tag(), b.type_tag());
+        assert_eq!(a.position(), b.position());
+        assert_eq!(a.diameter(), b.diameter());
+        assert_eq!(a.base().moved_last, b.base().moved_last);
+        let (mut ea, mut eb) = (Vec::new(), Vec::new());
+        a.serialize_extra(&mut ea);
+        b.serialize_extra(&mut eb);
+        assert_eq!(ea, eb, "extra fields must round-trip");
+    }
+
+    #[test]
+    fn tailored_roundtrip() {
+        let agents = sample_agents();
+        let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+        let back = tailored::deserialize_batch(&buf).unwrap();
+        assert_eq!(back.len(), agents.len());
+        for (a, b) in agents.iter().zip(back.iter()) {
+            assert_same(&**a, &**b);
+        }
+    }
+
+    #[test]
+    fn reflection_roundtrip() {
+        let agents = sample_agents();
+        let buf = reflection::serialize_batch(agents.iter().map(|a| &**a));
+        let back = reflection::deserialize_batch(&buf).unwrap();
+        assert_eq!(back.len(), agents.len());
+        for (a, b) in agents.iter().zip(back.iter()) {
+            assert_same(&**a, &**b);
+        }
+    }
+
+    #[test]
+    fn tailored_is_smaller_than_reflection() {
+        let agents = sample_agents();
+        let t = tailored::serialize_batch(agents.iter().map(|a| &**a));
+        let r = reflection::serialize_batch(agents.iter().map(|a| &**a));
+        assert!(
+            t.len() * 2 < r.len(),
+            "tailored {} vs reflection {}",
+            t.len(),
+            r.len()
+        );
+    }
+
+    #[test]
+    fn corrupt_data_rejected() {
+        AgentRegistry::register_builtins();
+        assert!(tailored::deserialize_batch(&[1, 0, 0, 0, 9]).is_err());
+        let mut buf = tailored::serialize_batch(sample_agents().iter().map(|a| &**a));
+        // corrupt the type tag of the first record
+        buf[4] = 0xFF;
+        buf[5] = 0xFF;
+        assert!(tailored::deserialize_batch(&buf).is_err());
+    }
+
+    #[test]
+    fn empty_batch() {
+        let buf = tailored::serialize_batch(std::iter::empty());
+        assert_eq!(tailored::deserialize_batch(&buf).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Message transports for the distributed engine — the MPI stand-in
+//! (see DESIGN.md §3). Two implementations of point-to-point,
+//! tag-addressed message passing:
+//!
+//! * [`InProcessTransport`] — rank mailboxes in shared memory; used by
+//!   the in-process engine and all benches (the measured quantities —
+//!   bytes, serialization time, delta ratio — are transport
+//!   independent).
+//! * [`TcpTransport`] — localhost sockets, one listener per rank; used
+//!   by the multi-process worker example to demonstrate real
+//!   inter-process exchange.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Point-to-point transport between `ranks` ranks.
+pub trait Transport: Send {
+    fn ranks(&self) -> usize;
+
+    /// Send `data` from `from` to `to` under `tag`.
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String>;
+
+    /// Blocking receive of the next message from `from` with `tag`.
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String>;
+}
+
+type MailboxKey = (usize, usize, u32); // (to, from, tag)
+
+/// Shared-memory mailbox transport.
+#[derive(Clone)]
+pub struct InProcessTransport {
+    ranks: usize,
+    inner: Arc<(Mutex<HashMap<MailboxKey, VecDeque<Vec<u8>>>>, Condvar)>,
+}
+
+impl InProcessTransport {
+    pub fn new(ranks: usize) -> Self {
+        InProcessTransport {
+            ranks,
+            inner: Arc::new((Mutex::new(HashMap::new()), Condvar::new())),
+        }
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String> {
+        if from >= self.ranks || to >= self.ranks {
+            return Err(format!("rank out of range ({from} -> {to})"));
+        }
+        let (lock, cv) = &*self.inner;
+        lock.lock()
+            .expect("transport mutex poisoned")
+            .entry((to, from, tag))
+            .or_default()
+            .push_back(data);
+        cv.notify_all();
+        Ok(())
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String> {
+        let (lock, cv) = &*self.inner;
+        let mut map = lock.lock().expect("transport mutex poisoned");
+        loop {
+            if let Some(q) = map.get_mut(&(to, from, tag)) {
+                if let Some(msg) = q.pop_front() {
+                    return Ok(msg);
+                }
+            }
+            let (m, timeout) = cv
+                .wait_timeout(map, std::time::Duration::from_secs(30))
+                .map_err(|_| "poisoned".to_string())?;
+            map = m;
+            if timeout.timed_out() {
+                return Err(format!("recv timeout ({to} <- {from}, tag {tag})"));
+            }
+        }
+    }
+}
+
+/// TCP transport: rank r listens on `base_port + r`; messages carry a
+/// `[from u32][tag u32][len u64]` header. Connections are opened per
+/// send (simple and robust for the example workloads).
+pub struct TcpTransport {
+    ranks: usize,
+    rank: usize,
+    base_port: u16,
+    /// received-but-not-consumed messages
+    pending: Mutex<HashMap<(usize, u32), VecDeque<Vec<u8>>>>,
+    listener: TcpListener,
+}
+
+impl TcpTransport {
+    /// Bind rank `rank`'s listener.
+    pub fn bind(rank: usize, ranks: usize, base_port: u16) -> Result<TcpTransport, String> {
+        let listener = TcpListener::bind(("127.0.0.1", base_port + rank as u16))
+            .map_err(|e| format!("bind rank {rank}: {e}"))?;
+        Ok(TcpTransport {
+            ranks,
+            rank,
+            base_port,
+            pending: Mutex::new(HashMap::new()),
+            listener,
+        })
+    }
+
+    pub fn my_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn read_message(stream: &mut TcpStream) -> Result<(usize, u32, Vec<u8>), String> {
+        let mut header = [0u8; 16];
+        stream
+            .read_exact(&mut header)
+            .map_err(|e| format!("read header: {e}"))?;
+        let from = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+        let tag = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let len = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let mut data = vec![0u8; len];
+        stream
+            .read_exact(&mut data)
+            .map_err(|e| format!("read body: {e}"))?;
+        Ok((from, tag, data))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String> {
+        debug_assert_eq!(from, self.rank);
+        let mut stream = TcpStream::connect(("127.0.0.1", self.base_port + to as u16))
+            .map_err(|e| format!("connect to rank {to}: {e}"))?;
+        let mut msg = Vec::with_capacity(16 + data.len());
+        msg.extend_from_slice(&(from as u32).to_le_bytes());
+        msg.extend_from_slice(&tag.to_le_bytes());
+        msg.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        msg.extend_from_slice(&data);
+        stream.write_all(&msg).map_err(|e| format!("send: {e}"))?;
+        Ok(())
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String> {
+        debug_assert_eq!(to, self.rank);
+        // check pending first
+        {
+            let mut pending = self.pending.lock().unwrap();
+            if let Some(q) = pending.get_mut(&(from, tag)) {
+                if let Some(msg) = q.pop_front() {
+                    return Ok(msg);
+                }
+            }
+        }
+        // accept until the wanted message arrives; stash others
+        loop {
+            let (mut stream, _) = self
+                .listener
+                .accept()
+                .map_err(|e| format!("accept: {e}"))?;
+            let (mfrom, mtag, data) = Self::read_message(&mut stream)?;
+            if mfrom == from && mtag == tag {
+                return Ok(data);
+            }
+            self.pending
+                .lock()
+                .unwrap()
+                .entry((mfrom, mtag))
+                .or_default()
+                .push_back(data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_process_fifo_per_channel() {
+        let t = InProcessTransport::new(2);
+        t.send(0, 1, 7, vec![1]).unwrap();
+        t.send(0, 1, 7, vec![2]).unwrap();
+        t.send(0, 1, 8, vec![3]).unwrap();
+        assert_eq!(t.recv(1, 0, 7).unwrap(), vec![1]);
+        assert_eq!(t.recv(1, 0, 7).unwrap(), vec![2]);
+        assert_eq!(t.recv(1, 0, 8).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn in_process_cross_thread() {
+        let t = InProcessTransport::new(2);
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            let msg = t2.recv(1, 0, 1).unwrap();
+            t2.send(1, 0, 2, msg.iter().map(|b| b + 1).collect()).unwrap();
+        });
+        t.send(0, 1, 1, vec![10, 20]).unwrap();
+        assert_eq!(t.recv(0, 1, 2).unwrap(), vec![11, 21]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn in_process_rejects_bad_rank() {
+        let t = InProcessTransport::new(2);
+        assert!(t.send(0, 5, 0, vec![]).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let base = 39100 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base).unwrap();
+        let t1 = TcpTransport::bind(1, 2, base).unwrap();
+        let h = std::thread::spawn(move || {
+            let msg = t1.recv(1, 0, 42).unwrap();
+            assert_eq!(msg, vec![5, 6, 7]);
+            t1.send(1, 0, 43, vec![9]).unwrap();
+        });
+        t0.send(0, 1, 42, vec![5, 6, 7]).unwrap();
+        assert_eq!(t0.recv(0, 1, 43).unwrap(), vec![9]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_out_of_order_tags() {
+        let base = 39700 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base).unwrap();
+        let t1 = TcpTransport::bind(1, 2, base).unwrap();
+        let h = std::thread::spawn(move || {
+            // send tag 2 first, then tag 1
+            t1.send(1, 0, 2, vec![2]).unwrap();
+            t1.send(1, 0, 1, vec![1]).unwrap();
+        });
+        // receive tag 1 first: transport must stash tag 2
+        assert_eq!(t0.recv(0, 1, 1).unwrap(), vec![1]);
+        assert_eq!(t0.recv(0, 1, 2).unwrap(), vec![2]);
+        h.join().unwrap();
+    }
+}

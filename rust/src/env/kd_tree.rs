@@ -1,0 +1,198 @@
+//! kd-tree environment (paper §5.2: "BioDynaMo features a kd-tree
+//! based on nanoflann"). Rebuilt every iteration; median-split over the
+//! widest axis; leaves hold small buckets.
+
+use crate::core::agent::{Agent, AgentHandle};
+use crate::core::math::Real3;
+use crate::core::parallel::ThreadPool;
+use crate::core::resource_manager::ResourceManager;
+use crate::env::{compute_bounds, Environment};
+use crate::Real;
+
+const LEAF_SIZE: usize = 16;
+
+enum Node {
+    Leaf {
+        start: usize,
+        len: usize,
+    },
+    Split {
+        axis: usize,
+        value: Real,
+        left: usize,
+        right: usize,
+    },
+}
+
+pub struct KdTreeEnvironment {
+    nodes: Vec<Node>,
+    /// (position, handle) pairs, permuted during the build
+    points: Vec<(Real3, AgentHandle)>,
+    root: usize,
+    bounds: (Real3, Real3),
+}
+
+impl KdTreeEnvironment {
+    pub fn new() -> Self {
+        KdTreeEnvironment {
+            nodes: Vec::new(),
+            points: Vec::new(),
+            root: usize::MAX,
+            bounds: (Real3::ZERO, Real3::ZERO),
+        }
+    }
+
+    fn build(&mut self, lo: usize, hi: usize) -> usize {
+        if hi - lo <= LEAF_SIZE {
+            self.nodes.push(Node::Leaf {
+                start: lo,
+                len: hi - lo,
+            });
+            return self.nodes.len() - 1;
+        }
+        // widest axis
+        let mut min = Real3::new(Real::INFINITY, Real::INFINITY, Real::INFINITY);
+        let mut max = Real3::new(Real::NEG_INFINITY, Real::NEG_INFINITY, Real::NEG_INFINITY);
+        for (p, _) in &self.points[lo..hi] {
+            min = min.min(p);
+            max = max.max(p);
+        }
+        let extent = max - min;
+        let axis = if extent.x() >= extent.y() && extent.x() >= extent.z() {
+            0
+        } else if extent.y() >= extent.z() {
+            1
+        } else {
+            2
+        };
+        let mid = (lo + hi) / 2;
+        self.points[lo..hi].select_nth_unstable_by(mid - lo, |a, b| {
+            a.0[axis].partial_cmp(&b.0[axis]).unwrap()
+        });
+        let value = self.points[mid].0[axis];
+        let idx = self.nodes.len();
+        self.nodes.push(Node::Leaf { start: 0, len: 0 }); // placeholder
+        let left = self.build(lo, mid);
+        let right = self.build(mid, hi);
+        self.nodes[idx] = Node::Split {
+            axis,
+            value,
+            left,
+            right,
+        };
+        idx
+    }
+
+    fn query(
+        &self,
+        node: usize,
+        query: Real3,
+        radius: Real,
+        r2: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        match &self.nodes[node] {
+            Node::Leaf { start, len } => {
+                for (p, h) in &self.points[*start..*start + *len] {
+                    let d2 = p.squared_distance(&query);
+                    if d2 <= r2 {
+                        f(*h, rm.get(*h), d2);
+                    }
+                }
+            }
+            Node::Split {
+                axis,
+                value,
+                left,
+                right,
+            } => {
+                let delta = query[*axis] - *value;
+                // points with coord < value are on the left (by the
+                // median partition: [lo, mid) <= value <= [mid, hi))
+                if delta - radius <= 0.0 {
+                    self.query(*left, query, radius, r2, rm, f);
+                }
+                if delta + radius >= 0.0 {
+                    self.query(*right, query, radius, r2, rm, f);
+                }
+            }
+        }
+    }
+}
+
+impl Default for KdTreeEnvironment {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for KdTreeEnvironment {
+    fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
+        self.nodes.clear();
+        self.points.clear();
+        let (min, max, _) = compute_bounds(rm, pool);
+        self.bounds = (min, max);
+        rm.for_each_agent(|h, a| self.points.push((a.position(), h)));
+        if self.points.is_empty() {
+            self.root = usize::MAX;
+            return;
+        }
+        let n = self.points.len();
+        self.root = self.build(0, n);
+    }
+
+    fn for_each_neighbor(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        if self.root == usize::MAX {
+            return;
+        }
+        self.query(self.root, query, radius, radius * radius, rm, f);
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.points.clear();
+        self.root = usize::MAX;
+    }
+
+    fn bounds(&self) -> (Real3, Real3) {
+        self.bounds
+    }
+
+    fn name(&self) -> &'static str {
+        "kd_tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::test_support::check_against_brute_force;
+
+    #[test]
+    fn matches_brute_force() {
+        let mut env = KdTreeEnvironment::new();
+        check_against_brute_force(&mut env, 500, 21);
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        let mut env = KdTreeEnvironment::new();
+        check_against_brute_force(&mut env, 17, 22);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let rm = ResourceManager::new(1);
+        let pool = ThreadPool::new(1);
+        let mut env = KdTreeEnvironment::new();
+        env.update(&rm, &pool);
+        env.for_each_neighbor(Real3::ZERO, 5.0, &rm, &mut |_, _, _| panic!("empty"));
+    }
+}

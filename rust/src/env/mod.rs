@@ -1,0 +1,179 @@
+//! Neighbor-search environments (paper §4.4.3, §5.3.1, §5.6.9).
+//!
+//! The environment determines the agents in an agent's local
+//! neighborhood. BioDynaMo ships a uniform grid (default), kd-tree and
+//! octree behind one interface; Fig 5.13 compares them — bench target
+//! `fig5_13_env_comparison` reproduces that comparison.
+
+pub mod kd_tree;
+pub mod octree;
+pub mod uniform_grid;
+
+use crate::core::agent::{Agent, AgentHandle};
+use crate::core::math::Real3;
+use crate::core::parallel::ThreadPool;
+use crate::core::param::{EnvironmentKind, Param};
+use crate::core::resource_manager::ResourceManager;
+use crate::Real;
+
+pub use kd_tree::KdTreeEnvironment;
+pub use octree::OctreeEnvironment;
+pub use uniform_grid::UniformGridEnvironment;
+
+/// A neighbor-search structure over the current agent population.
+///
+/// `update` is a pre-standalone operation (start of every iteration);
+/// `for_each_neighbor` must be callable concurrently from all worker
+/// threads (&self).
+pub trait Environment: Send + Sync {
+    /// Rebuild the index for the current agent positions.
+    fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool);
+
+    /// Visit all agents within `radius` of `query` (including an agent
+    /// exactly at `query`, i.e. callers filter self-matches).
+    /// `f(handle, agent, squared_distance)`.
+    fn for_each_neighbor(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    );
+
+    /// Forget the index.
+    fn clear(&mut self);
+
+    /// Axis-aligned bounds of the last `update` (min, max).
+    fn bounds(&self) -> (Real3, Real3);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate the environment selected in `param`.
+pub fn create_environment(param: &Param) -> Box<dyn Environment> {
+    match param.environment {
+        EnvironmentKind::UniformGrid => {
+            // box length defaults to the interaction radius so default
+            // queries scan exactly the 3x3x3 cube (paper §5.3.1's
+            // automatic box sizing)
+            let box_length = param.box_length.or(Some(param.interaction_radius));
+            Box::new(UniformGridEnvironment::new(box_length))
+        }
+        EnvironmentKind::KdTree => Box::new(KdTreeEnvironment::new()),
+        EnvironmentKind::Octree => Box::new(OctreeEnvironment::new()),
+    }
+}
+
+/// Shared helper: compute the agent bounding box and the largest
+/// interaction diameter in one parallel pass (the bounds half of the
+/// grid build, paper §5.3.1).
+pub(crate) fn compute_bounds(
+    rm: &ResourceManager,
+    pool: &ThreadPool,
+) -> (Real3, Real3, Real) {
+    #[derive(Clone)]
+    struct Acc {
+        min: Real3,
+        max: Real3,
+        largest: Real,
+        any: bool,
+    }
+    impl Default for Acc {
+        fn default() -> Self {
+            Acc {
+                min: Real3::new(Real::INFINITY, Real::INFINITY, Real::INFINITY),
+                max: Real3::new(Real::NEG_INFINITY, Real::NEG_INFINITY, Real::NEG_INFINITY),
+                largest: 0.0,
+                any: false,
+            }
+        }
+    }
+    let handles = rm.handles();
+    let acc = pool.map_reduce(
+        0..handles.len(),
+        1024,
+        |i, acc: &mut Acc| {
+            let a = rm.get(handles[i]);
+            let p = a.position();
+            acc.min = acc.min.min(&p);
+            acc.max = acc.max.max(&p);
+            acc.largest = acc.largest.max(a.interaction_diameter());
+            acc.any = true;
+        },
+        |a, b| Acc {
+            min: a.min.min(&b.min),
+            max: a.max.max(&b.max),
+            largest: a.largest.max(b.largest),
+            any: a.any || b.any,
+        },
+    );
+    if !acc.any {
+        return (Real3::ZERO, Real3::ZERO, 1.0);
+    }
+    (acc.min, acc.max, acc.largest.max(1e-9))
+}
+
+/// Brute-force oracle used by the property tests: O(n) scan.
+pub fn brute_force_neighbors(
+    rm: &ResourceManager,
+    query: Real3,
+    radius: Real,
+) -> Vec<(AgentHandle, Real)> {
+    let mut out = Vec::new();
+    let r2 = radius * radius;
+    rm.for_each_agent(|h, a| {
+        let d2 = a.position().squared_distance(&query);
+        if d2 <= r2 {
+            out.push((h, d2));
+        }
+    });
+    out.sort_by_key(|(h, _)| *h);
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::random::Rng;
+
+    /// Random population for the environment property tests.
+    pub fn random_population(n: usize, seed: u64, space: Real, domains: usize) -> ResourceManager {
+        let mut rm = ResourceManager::new(domains);
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let pos = rng.uniform3(0.0, space);
+            let mut a = SphericalAgent::new(pos);
+            a.base.diameter = rng.uniform(5.0, 12.0);
+            rm.add_agent(Box::new(a));
+        }
+        rm
+    }
+
+    /// Check an environment against the brute-force oracle on many
+    /// random queries.
+    pub fn check_against_brute_force(env: &mut dyn Environment, n: usize, seed: u64) {
+        let rm = random_population(n, seed, 100.0, 2);
+        let pool = ThreadPool::new(2);
+        env.update(&rm, &pool);
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        for _ in 0..50 {
+            let query = rng.uniform3(-10.0, 110.0);
+            let radius = rng.uniform(1.0, 25.0);
+            let expected = brute_force_neighbors(&rm, query, radius);
+            let mut got = Vec::new();
+            env.for_each_neighbor(query, radius, &rm, &mut |h, _a, d2| got.push((h, d2)));
+            got.sort_by_key(|(h, _)| *h);
+            assert_eq!(
+                got.len(),
+                expected.len(),
+                "{}: query={query:?} radius={radius}",
+                env.name()
+            );
+            for ((h1, d1), (h2, d2)) in got.iter().zip(expected.iter()) {
+                assert_eq!(h1, h2);
+                assert!((d1 - d2).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Octree environment (paper: "octree based on Behley et al."). A
+//! bucketed region octree rebuilt each iteration; radius queries prune
+//! octants whose cube does not intersect the query sphere.
+
+use crate::core::agent::{Agent, AgentHandle};
+use crate::core::math::Real3;
+use crate::core::parallel::ThreadPool;
+use crate::core::resource_manager::ResourceManager;
+use crate::env::{compute_bounds, Environment};
+use crate::Real;
+
+const LEAF_SIZE: usize = 32;
+const MAX_DEPTH: usize = 21;
+
+enum Node {
+    Leaf { start: usize, len: usize },
+    Inner { children: [u32; 8] },
+}
+
+const NO_CHILD: u32 = u32::MAX;
+
+pub struct OctreeEnvironment {
+    nodes: Vec<Node>,
+    /// node center + half extent, parallel to `nodes`
+    cubes: Vec<(Real3, Real)>,
+    points: Vec<(Real3, AgentHandle)>,
+    root: usize,
+    bounds: (Real3, Real3),
+}
+
+impl OctreeEnvironment {
+    pub fn new() -> Self {
+        OctreeEnvironment {
+            nodes: Vec::new(),
+            cubes: Vec::new(),
+            points: Vec::new(),
+            root: usize::MAX,
+            bounds: (Real3::ZERO, Real3::ZERO),
+        }
+    }
+
+    fn build(&mut self, lo: usize, hi: usize, center: Real3, half: Real, depth: usize) -> usize {
+        let idx = self.nodes.len();
+        if hi - lo <= LEAF_SIZE || depth >= MAX_DEPTH {
+            self.nodes.push(Node::Leaf {
+                start: lo,
+                len: hi - lo,
+            });
+            self.cubes.push((center, half));
+            return idx;
+        }
+        self.nodes.push(Node::Inner {
+            children: [NO_CHILD; 8],
+        });
+        self.cubes.push((center, half));
+
+        // partition the slice into 8 octants (3-pass binary partition)
+        let octant = |p: &Real3| -> usize {
+            (usize::from(p.x() >= center.x()))
+                | (usize::from(p.y() >= center.y()) << 1)
+                | (usize::from(p.z() >= center.z()) << 2)
+        };
+        // counting sort by octant within [lo, hi)
+        let mut counts = [0usize; 8];
+        for (p, _) in &self.points[lo..hi] {
+            counts[octant(p)] += 1;
+        }
+        let mut starts = [0usize; 9];
+        for i in 0..8 {
+            starts[i + 1] = starts[i] + counts[i];
+        }
+        let slice: Vec<(Real3, AgentHandle)> = self.points[lo..hi].to_vec();
+        let mut cursors = starts;
+        for item in slice {
+            let o = octant(&item.0);
+            self.points[lo + cursors[o]] = item;
+            cursors[o] += 1;
+        }
+
+        let quarter = half / 2.0;
+        let mut children = [NO_CHILD; 8];
+        for (o, child) in children.iter_mut().enumerate() {
+            let (clo, chi) = (lo + starts[o], lo + starts[o + 1]);
+            if clo == chi {
+                continue;
+            }
+            let ccenter = Real3::new(
+                center.x() + if o & 1 != 0 { quarter } else { -quarter },
+                center.y() + if o & 2 != 0 { quarter } else { -quarter },
+                center.z() + if o & 4 != 0 { quarter } else { -quarter },
+            );
+            *child = self.build(clo, chi, ccenter, quarter, depth + 1) as u32;
+        }
+        if let Node::Inner {
+            children: ref mut c,
+        } = self.nodes[idx]
+        {
+            *c = children;
+        }
+        idx
+    }
+
+    fn query(
+        &self,
+        node: usize,
+        query: Real3,
+        r2: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        // prune: squared distance from query to cube
+        let (center, half) = self.cubes[node];
+        let mut d2 = 0.0;
+        for i in 0..3 {
+            let d = (query[i] - center[i]).abs() - half;
+            if d > 0.0 {
+                d2 += d * d;
+            }
+        }
+        if d2 > r2 {
+            return;
+        }
+        match &self.nodes[node] {
+            Node::Leaf { start, len } => {
+                for (p, h) in &self.points[*start..*start + *len] {
+                    let dist2 = p.squared_distance(&query);
+                    if dist2 <= r2 {
+                        f(*h, rm.get(*h), dist2);
+                    }
+                }
+            }
+            Node::Inner { children } => {
+                for &c in children {
+                    if c != NO_CHILD {
+                        self.query(c as usize, query, r2, rm, f);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Default for OctreeEnvironment {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Environment for OctreeEnvironment {
+    fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
+        self.nodes.clear();
+        self.cubes.clear();
+        self.points.clear();
+        let (min, max, _) = compute_bounds(rm, pool);
+        self.bounds = (min, max);
+        rm.for_each_agent(|h, a| self.points.push((a.position(), h)));
+        if self.points.is_empty() {
+            self.root = usize::MAX;
+            return;
+        }
+        let center = (min + max) * 0.5;
+        let extent = max - min;
+        let half = (extent.x().max(extent.y()).max(extent.z()) * 0.5 + 1e-9).max(1e-9);
+        let n = self.points.len();
+        self.root = self.build(0, n, center, half, 0);
+    }
+
+    fn for_each_neighbor(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        if self.root == usize::MAX {
+            return;
+        }
+        self.query(self.root, query, radius * radius, rm, f);
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.cubes.clear();
+        self.points.clear();
+        self.root = usize::MAX;
+    }
+
+    fn bounds(&self) -> (Real3, Real3) {
+        self.bounds
+    }
+
+    fn name(&self) -> &'static str {
+        "octree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::test_support::check_against_brute_force;
+
+    #[test]
+    fn matches_brute_force() {
+        let mut env = OctreeEnvironment::new();
+        check_against_brute_force(&mut env, 500, 31);
+    }
+
+    #[test]
+    fn matches_brute_force_clustered() {
+        // many agents at nearly the same spot exercises MAX_DEPTH
+        use crate::core::agent::SphericalAgent;
+        let mut rm = ResourceManager::new(1);
+        for i in 0..200 {
+            let eps = i as f64 * 1e-7;
+            rm.add_agent(Box::new(SphericalAgent::new(Real3::new(
+                1.0 + eps,
+                1.0,
+                1.0,
+            ))));
+        }
+        let pool = ThreadPool::new(1);
+        let mut env = OctreeEnvironment::new();
+        env.update(&rm, &pool);
+        let mut count = 0;
+        env.for_each_neighbor(Real3::new(1.0, 1.0, 1.0), 0.1, &rm, &mut |_, _, _| {
+            count += 1
+        });
+        assert_eq!(count, 200);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let rm = ResourceManager::new(1);
+        let pool = ThreadPool::new(1);
+        let mut env = OctreeEnvironment::new();
+        env.update(&rm, &pool);
+        env.for_each_neighbor(Real3::ZERO, 5.0, &rm, &mut |_, _, _| panic!("empty"));
+    }
+}

@@ -1,0 +1,403 @@
+//! Optimized uniform-grid neighbor search (paper §5.3.1).
+//!
+//! The simulation space is divided into uniform boxes; an agent's
+//! neighbors are found by scanning the 3x3x3 cube of boxes around the
+//! query. The two key optimizations of the paper are reproduced here:
+//!
+//! 1. **Array-based linked list**: all agents in a box form a linked
+//!    list threaded through one flat `successors` array indexed by the
+//!    agent's flat storage index — so the list layout follows the
+//!    ResourceManager layout and benefits from Morton sorting (§5.4.2).
+//! 2. **Timestamped boxes**: instead of zeroing every box at the start
+//!    of the build, each box carries the timestamp of its last
+//!    insertion; a box is empty unless its timestamp matches the
+//!    current one. Build cost is O(#agents), not O(#agents + #boxes).
+//!
+//! The build's insertion path is lock-free: box heads are atomic swap
+//! targets, successor entries are written once by the inserting thread.
+
+use crate::core::agent::{Agent, AgentHandle};
+use crate::core::math::Real3;
+use crate::core::parallel::ThreadPool;
+use crate::core::resource_manager::ResourceManager;
+use crate::env::{compute_bounds, Environment};
+use crate::Real;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+const EMPTY: u32 = u32::MAX;
+/// Upper bound on the number of grid boxes; beyond this the box length
+/// is increased (keeps sparse extreme-scale spaces memory-bounded).
+const MAX_BOXES: usize = 16_000_000;
+
+struct GridBox {
+    /// head of the agent linked list (flat agent index), valid only if
+    /// `stamp == grid.stamp`
+    head: AtomicU32,
+    /// number of agents, valid only if `stamp == grid.stamp`
+    count: AtomicU32,
+    /// timestamp of the last insertion
+    stamp: AtomicU64,
+}
+
+impl GridBox {
+    fn new() -> Self {
+        GridBox {
+            head: AtomicU32::new(EMPTY),
+            count: AtomicU32::new(0),
+            stamp: AtomicU64::new(0),
+        }
+    }
+}
+
+pub struct UniformGridEnvironment {
+    /// user override for the box edge length
+    requested_box_length: Option<Real>,
+    box_length: Real,
+    dims: [usize; 3],
+    grid_min: Real3,
+    boxes: Vec<GridBox>,
+    /// linked-list successor per flat agent index
+    successors: Vec<AtomicU32>,
+    /// start-of-iteration position per flat agent index. The search
+    /// filters candidates against this cache instead of chasing the
+    /// ResourceManager's Box pointers — one contiguous array scan per
+    /// box (§5.4's memory-layout principle applied to the index; also
+    /// makes candidate distances independent of in-iteration movement,
+    /// i.e. deterministic under any processing order).
+    positions: Vec<crate::core::math::Real3>,
+    /// flat index -> handle mapping (offset per domain)
+    domain_offsets: Vec<u32>,
+    handles: Vec<AgentHandle>,
+    stamp: u64,
+    built: bool,
+    bounds: (Real3, Real3),
+}
+
+impl UniformGridEnvironment {
+    pub fn new(box_length: Option<Real>) -> Self {
+        UniformGridEnvironment {
+            requested_box_length: box_length,
+            box_length: 1.0,
+            dims: [0; 3],
+            grid_min: Real3::ZERO,
+            boxes: Vec::new(),
+            successors: Vec::new(),
+            positions: Vec::new(),
+            domain_offsets: Vec::new(),
+            handles: Vec::new(),
+            stamp: 0,
+            built: false,
+            bounds: (Real3::ZERO, Real3::ZERO),
+        }
+    }
+
+    pub fn box_length(&self) -> Real {
+        self.box_length
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    #[inline]
+    fn box_coord(&self, p: Real3) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for (i, cc) in c.iter_mut().enumerate() {
+            let rel = (p[i] - self.grid_min[i]) / self.box_length;
+            *cc = (rel.floor().max(0.0) as usize).min(self.dims[i] - 1);
+        }
+        c
+    }
+
+    #[inline]
+    fn box_index(&self, c: [usize; 3]) -> usize {
+        (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
+    }
+
+    /// The grid's Morton-relevant geometry, used by the sorting op.
+    pub fn geometry(&self) -> ([usize; 3], Real3, Real) {
+        (self.dims, self.grid_min, self.box_length)
+    }
+}
+
+impl Environment for UniformGridEnvironment {
+    fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
+        let n = rm.num_agents();
+        self.handles = rm.handles();
+        self.built = true;
+        if n == 0 {
+            self.dims = [1, 1, 1];
+            self.boxes.clear();
+            self.successors.clear();
+            self.bounds = (Real3::ZERO, Real3::ZERO);
+            return;
+        }
+
+        // --- bounds + box sizing (parallel reduce) ---
+        let (min, max, largest) = compute_bounds(rm, pool);
+        self.bounds = (min, max);
+        let mut box_len = self.requested_box_length.unwrap_or(largest).max(1e-9);
+        // half-open margin so every agent maps into a box
+        let extent = max - min;
+        let dims_for = |bl: Real| -> [usize; 3] {
+            [
+                (extent.x() / bl).floor() as usize + 1,
+                (extent.y() / bl).floor() as usize + 1,
+                (extent.z() / bl).floor() as usize + 1,
+            ]
+        };
+        let mut dims = dims_for(box_len);
+        while dims[0] * dims[1] * dims[2] > MAX_BOXES {
+            box_len *= 2.0;
+            dims = dims_for(box_len);
+        }
+        self.box_length = box_len;
+        self.dims = dims;
+        self.grid_min = min;
+
+        // --- (re)allocate; boxes survive across iterations thanks to
+        // the timestamp trick ---
+        let nboxes = dims[0] * dims[1] * dims[2];
+        if self.boxes.len() < nboxes {
+            self.boxes.resize_with(nboxes, GridBox::new);
+        }
+        if self.successors.len() < n {
+            self.successors.resize_with(n, || AtomicU32::new(EMPTY));
+        }
+        self.positions.resize(n, Real3::ZERO);
+        self.stamp += 1;
+        let stamp = self.stamp;
+
+        // flat index mapping (dense, per-domain offsets)
+        let ndom = rm.num_domains();
+        self.domain_offsets = Vec::with_capacity(ndom);
+        let mut off = 0u32;
+        for d in 0..ndom {
+            self.domain_offsets.push(off);
+            off += rm.num_agents_in(d) as u32;
+        }
+
+        // --- parallel insert (lock-free; paper's parallelized build) ---
+        struct PosPtr(*mut Real3);
+        unsafe impl Send for PosPtr {}
+        unsafe impl Sync for PosPtr {}
+        let pos_ptr = PosPtr(self.positions.as_mut_ptr());
+        let this = &*self;
+        pool.parallel_for(0..n, 1024, |i, _wid| {
+            let pos_ptr = &pos_ptr;
+            let h = this.handles[i];
+            let pos = rm.get(h).position();
+            let bidx = this.box_index(this.box_coord(pos));
+            let gbox = &this.boxes[bidx];
+            // lazy reset via timestamp
+            if gbox.stamp.swap(stamp, Ordering::AcqRel) != stamp {
+                gbox.head.store(EMPTY, Ordering::Release);
+                gbox.count.store(0, Ordering::Release);
+            }
+            let flat = this.domain_offsets[h.numa as usize] + h.idx;
+            // SAFETY: each flat index is written by exactly one thread
+            // (one agent per slot).
+            unsafe { pos_ptr.0.add(flat as usize).write(pos) };
+            // push-front: successor[flat] = old head
+            let mut head = gbox.head.load(Ordering::Acquire);
+            loop {
+                this.successors[flat as usize].store(head, Ordering::Release);
+                match gbox.head.compare_exchange_weak(
+                    head,
+                    flat,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => break,
+                    Err(h2) => head = h2,
+                }
+            }
+            gbox.count.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+
+    fn for_each_neighbor(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        if !self.built || self.handles.is_empty() {
+            return;
+        }
+        let r2 = radius * radius;
+        // range of boxes the query sphere can touch
+        let reach = (radius / self.box_length).ceil() as isize;
+        let c = self.box_coord_clamped(query);
+        let lo = |i: usize| (c[i] as isize - reach).max(0) as usize;
+        let hi = |i: usize| ((c[i] as isize + reach) as usize).min(self.dims[i] - 1);
+        for z in lo(2)..=hi(2) {
+            for y in lo(1)..=hi(1) {
+                for x in lo(0)..=hi(0) {
+                    let b = &self.boxes[self.box_index([x, y, z])];
+                    if b.stamp.load(Ordering::Acquire) != self.stamp {
+                        continue; // stale box = empty
+                    }
+                    let mut cur = b.head.load(Ordering::Acquire);
+                    while cur != EMPTY {
+                        // filter against the contiguous position cache;
+                        // touch the agent itself only on a hit
+                        let d2 = self.positions[cur as usize].squared_distance(&query);
+                        if d2 <= r2 {
+                            let h = self.flat_to_handle(cur);
+                            f(h, rm.get(h), d2);
+                        }
+                        cur = self.successors[cur as usize].load(Ordering::Acquire);
+                    }
+                }
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.boxes.clear();
+        self.successors.clear();
+        self.positions.clear();
+        self.handles.clear();
+        self.built = false;
+    }
+
+    fn bounds(&self) -> (Real3, Real3) {
+        self.bounds
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform_grid"
+    }
+}
+
+impl UniformGridEnvironment {
+    #[inline]
+    fn box_coord_clamped(&self, p: Real3) -> [usize; 3] {
+        self.box_coord(p)
+    }
+
+    #[inline]
+    fn flat_to_handle(&self, flat: u32) -> AgentHandle {
+        // binary search over domain offsets (ndom is tiny)
+        let mut d = self.domain_offsets.len() - 1;
+        while self.domain_offsets[d] > flat {
+            d -= 1;
+        }
+        AgentHandle {
+            numa: d as u16,
+            idx: flat - self.domain_offsets[d],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::env::test_support::{check_against_brute_force, random_population};
+
+    #[test]
+    fn matches_brute_force() {
+        let mut env = UniformGridEnvironment::new(None);
+        check_against_brute_force(&mut env, 500, 11);
+    }
+
+    #[test]
+    fn matches_brute_force_fixed_box_length() {
+        let mut env = UniformGridEnvironment::new(Some(20.0));
+        check_against_brute_force(&mut env, 300, 12);
+    }
+
+    #[test]
+    fn empty_population_no_results() {
+        let rm = ResourceManager::new(1);
+        let pool = ThreadPool::new(1);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        let mut called = false;
+        env.for_each_neighbor(Real3::ZERO, 10.0, &rm, &mut |_, _, _| called = true);
+        assert!(!called);
+    }
+
+    #[test]
+    fn single_agent_found() {
+        let mut rm = ResourceManager::new(1);
+        rm.add_agent(Box::new(SphericalAgent::new(Real3::new(5.0, 5.0, 5.0))));
+        let pool = ThreadPool::new(1);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        let mut found = 0;
+        env.for_each_neighbor(Real3::new(5.0, 5.0, 6.0), 2.0, &rm, &mut |_, _, d2| {
+            found += 1;
+            assert!((d2 - 1.0).abs() < 1e-12);
+        });
+        assert_eq!(found, 1);
+    }
+
+    #[test]
+    fn timestamp_reset_across_updates() {
+        // After agents move far away, the old boxes must appear empty
+        // without explicit zeroing.
+        let mut rm = random_population(100, 5, 50.0, 1);
+        let pool = ThreadPool::new(2);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        // move everything +1000
+        rm.for_each_agent_mut(|_, a| {
+            let p = a.position();
+            a.set_position(p + Real3::new(1000.0, 1000.0, 1000.0));
+        });
+        env.update(&rm, &pool);
+        let mut near_origin = 0;
+        env.for_each_neighbor(Real3::new(25.0, 25.0, 25.0), 30.0, &rm, &mut |_, _, _| {
+            near_origin += 1
+        });
+        assert_eq!(near_origin, 0);
+        let mut near_new = 0;
+        env.for_each_neighbor(
+            Real3::new(1025.0, 1025.0, 1025.0),
+            30.0,
+            &rm,
+            &mut |_, _, _| near_new += 1,
+        );
+        assert!(near_new > 0);
+    }
+
+    #[test]
+    fn radius_larger_than_box_scans_enough_boxes() {
+        // regression: query radius much larger than box length
+        let mut rm = ResourceManager::new(1);
+        for i in 0..10 {
+            rm.add_agent(Box::new(SphericalAgent::with_diameter(
+                Real3::new(i as f64 * 10.0, 0.0, 0.0),
+                5.0,
+            )));
+        }
+        let pool = ThreadPool::new(1);
+        let mut env = UniformGridEnvironment::new(Some(5.0));
+        env.update(&rm, &pool);
+        let mut count = 0;
+        env.for_each_neighbor(Real3::ZERO, 45.0, &rm, &mut |_, _, _| count += 1);
+        assert_eq!(count, 5); // x = 0,10,20,30,40
+    }
+
+    #[test]
+    fn counts_all_agents_once() {
+        let rm = random_population(200, 6, 30.0, 3);
+        let pool = ThreadPool::new(3);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        let mut seen = std::collections::HashSet::new();
+        env.for_each_neighbor(
+            Real3::new(15.0, 15.0, 15.0),
+            1000.0,
+            &rm,
+            &mut |h, _, _| {
+                assert!(seen.insert(h), "duplicate {h:?}");
+            },
+        );
+        assert_eq!(seen.len(), 200);
+    }
+}

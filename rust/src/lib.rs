@@ -1,0 +1,45 @@
+//! # TeraAgent-RS
+//!
+//! An extreme-scale, high-performance, and modular agent-based simulation
+//! platform — a reproduction of the BioDynaMo + TeraAgent system
+//! (Breitwieser, ETH Zurich, 2025) as a three-layer Rust + JAX + Pallas
+//! stack. The Rust layer (this crate) is the whole platform and both
+//! simulation engines; the numeric hot-spots (extracellular diffusion,
+//! batched mechanical forces) are Pallas kernels AOT-lowered to HLO text
+//! and executed through PJRT (see `runtime`).
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//! * [`core`]        — agents, behaviors, operations, scheduler, resource
+//!                     manager, execution contexts, params, RNG, thread pool
+//! * [`env`]         — neighbor-search environments (uniform grid, kd-tree,
+//!                     octree)
+//! * [`mem`]         — Morton sorting, pool allocator, simulated NUMA
+//! * [`physics`]     — mechanical forces, static-agent detection, diffusion
+//! * [`neuro`]       — neuroscience module (somas, neurites)
+//! * [`distributed`] — the TeraAgent distributed engine
+//! * [`models`]      — the paper's benchmark simulations
+//! * [`baseline`]    — deliberately-serial engine (Cortex3D/NetLogo stand-in)
+//! * [`runtime`]     — PJRT artifact loading/execution
+//! * [`vis`]         — visualization export
+//! * [`analysis`]    — statistics, time series, ODE oracles
+//! * [`benchkit`]    — the custom bench harness used by `cargo bench`
+
+pub mod analysis;
+pub mod baseline;
+pub mod benchkit;
+pub mod core;
+pub mod distributed;
+pub mod env;
+pub mod mem;
+pub mod models;
+pub mod neuro;
+pub mod physics;
+pub mod runtime;
+pub mod vis;
+
+pub use crate::core::math::Real3;
+pub use crate::core::param::Param;
+pub use crate::core::simulation::Simulation;
+
+/// Floating-point type used throughout the engine (the paper's `real_t`).
+pub type Real = f64;

@@ -1,0 +1,190 @@
+//! TeraAgent launcher — CLI entry point for running the built-in
+//! benchmark models, distributed workers and quick info queries.
+//!
+//! Usage:
+//!   teraagent run <model> [--iterations N] [--config FILE] [--param k=v]...
+//!   teraagent worker --rank R --ranks N --base-port P <model>   (TCP worker)
+//!   teraagent info
+//!
+//! Models: cell_growth | soma_clustering | epidemiology | spheroid |
+//!         pyramidal | cell_sorting
+
+use teraagent::core::param::Param;
+use teraagent::models;
+
+// The paper's §5.4.3 pool allocator, switchable at process start via
+// TA_POOL_ALLOC=1 (measured by benches/fig5_15_allocator.rs).
+#[global_allocator]
+static ALLOC: teraagent::mem::allocator::SwitchablePool =
+    teraagent::mem::allocator::SwitchablePool;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: teraagent <run|worker|info> [options]\n\
+         \n  run <model> [--iterations N] [--config FILE] [--param key=value]...\n\
+         \n  worker --rank R --ranks N --base-port P <model> [--iterations N]\n\
+         \n  info\n\
+         \nmodels: cell_growth soma_clustering epidemiology spheroid pyramidal cell_sorting"
+    );
+    std::process::exit(2);
+}
+
+struct Cli {
+    positional: Vec<String>,
+    options: std::collections::HashMap<String, Vec<String>>,
+}
+
+fn parse_cli(args: &[String]) -> Cli {
+    let mut positional = Vec::new();
+    let mut options: std::collections::HashMap<String, Vec<String>> = Default::default();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            options.entry(key.to_string()).or_default().push(value);
+        } else {
+            positional.push(args[i].clone());
+        }
+        i += 1;
+    }
+    Cli {
+        positional,
+        options,
+    }
+}
+
+fn build_param(cli: &Cli) -> Param {
+    let mut param = if let Some(cfg) = cli.options.get("config").and_then(|v| v.first()) {
+        Param::from_config_file(cfg).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        Param::default()
+    };
+    for kv in cli.options.get("param").cloned().unwrap_or_default() {
+        let Some((k, v)) = kv.split_once('=') else {
+            eprintln!("--param expects key=value, got {kv}");
+            std::process::exit(2);
+        };
+        if let Err(e) = param.apply_kv(k, v) {
+            eprintln!("param error: {e}");
+            std::process::exit(2);
+        }
+    }
+    param
+}
+
+fn build_model(model: &str, param: Param) -> teraagent::Simulation {
+    match model {
+        "cell_growth" => models::cell_growth::build(param, &Default::default()),
+        "soma_clustering" => models::soma_clustering::build(param, &Default::default()),
+        "epidemiology" => {
+            models::epidemiology::build(param, &models::epidemiology::SirParams::measles())
+        }
+        "spheroid" => models::spheroid::build(
+            param,
+            &models::spheroid::SpheroidParams::for_seeding(2000),
+        ),
+        "pyramidal" => models::pyramidal::build(param, &Default::default()),
+        "cell_sorting" => models::cell_sorting::build(param, &Default::default()),
+        other => {
+            eprintln!("unknown model: {other}");
+            usage();
+        }
+    }
+}
+
+fn cmd_run(cli: &Cli) {
+    let Some(model) = cli.positional.get(1) else {
+        usage()
+    };
+    let iterations: u64 = cli
+        .options
+        .get("iterations")
+        .and_then(|v| v.first())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    let param = build_param(cli);
+    let mut sim = build_model(model, param);
+    let start = std::time::Instant::now();
+    sim.simulate(iterations);
+    let elapsed = start.elapsed();
+    println!(
+        "model={model} iterations={iterations} agents={} added={} removed={} runtime={:.3}s",
+        sim.num_agents(),
+        sim.agents_added,
+        sim.agents_removed,
+        elapsed.as_secs_f64()
+    );
+    println!("op breakdown:");
+    for (name, total, count) in sim.timers.breakdown() {
+        println!(
+            "  {name:24} {:>10.3} ms  x{count}",
+            total.as_secs_f64() * 1e3
+        );
+    }
+}
+
+fn cmd_worker(cli: &Cli) {
+    let Some(model) = cli.positional.get(1) else {
+        usage()
+    };
+    let get = |k: &str| -> Option<u64> {
+        cli.options
+            .get(k)
+            .and_then(|v| v.first())
+            .and_then(|v| v.parse().ok())
+    };
+    let (Some(rank), Some(ranks), Some(base_port)) = (get("rank"), get("ranks"), get("base-port"))
+    else {
+        usage()
+    };
+    let iterations = get("iterations").unwrap_or(50);
+    let param = build_param(cli);
+    teraagent::distributed::engine::run_tcp_worker(
+        model,
+        param,
+        rank as usize,
+        ranks as usize,
+        base_port as u16,
+        iterations,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("worker failed: {e}");
+        std::process::exit(1);
+    });
+}
+
+fn cmd_info() {
+    println!("TeraAgent-RS — BioDynaMo/TeraAgent reproduction");
+    println!("three-layer stack: Rust coordinator -> PJRT -> AOT Pallas kernels");
+    let dir = teraagent::runtime::default_artifacts_dir();
+    match teraagent::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {dir}:");
+            for e in &m.entries {
+                println!(
+                    "  {:24} kind={:16} shapes={} vmem={}",
+                    e.name, e.kind, e.shapes, e.vmem_bytes
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&parse_cli(&args)),
+        Some("worker") => cmd_worker(&parse_cli(&args)),
+        Some("info") => cmd_info(),
+        _ => usage(),
+    }
+}

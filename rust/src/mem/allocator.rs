@@ -1,0 +1,416 @@
+//! Pool memory allocator (paper §5.4.3, Fig 5.5).
+//!
+//! Agent-based simulations allocate/free huge numbers of small,
+//! same-sized objects (agents, behaviors). BioDynaMo's allocator keeps
+//! per-size-class pools carved out of large slabs so that (i) agents of
+//! one type end up contiguous in memory, (ii) allocation is a free-list
+//! pop, and (iii) there is no per-object header overhead.
+//!
+//! This module provides:
+//! * [`PoolAlloc`] — the size-class slab allocator (explicit API, fully
+//!   unit-tested);
+//! * [`SwitchablePool`] — a `GlobalAlloc` wrapper that routes small
+//!   allocations through a global `PoolAlloc` when the environment
+//!   variable `TA_POOL_ALLOC=1` is set at process start (the Fig 5.15
+//!   bench uses this to compare against the system allocator in the
+//!   same binary). Routing is decided by layout size/alignment, which
+//!   `dealloc` also receives — so no address registry is needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Largest block size served from pools; bigger goes to `System`.
+pub const MAX_POOLED_SIZE: usize = 512;
+/// Max alignment served from pools.
+pub const MAX_POOLED_ALIGN: usize = 16;
+/// Slab size carved from the system allocator.
+pub const SLAB_SIZE: usize = 256 * 1024;
+
+const CLASS_SIZES: &[usize] = &[16, 32, 48, 64, 96, 128, 192, 256, 384, 512];
+const NCLASSES: usize = 10;
+/// thread-local cache: flush half when exceeding this many blocks
+const TL_CACHE_MAX: u32 = 128;
+/// blocks moved between the thread cache and the central list per refill
+const TL_BATCH: u32 = 32;
+
+// Per-thread free-list heads (paper Fig 5.5: "thread-local blocks" in
+// front of the central pool). Free blocks store the next pointer in
+// their first 8 bytes (every size class is >= 16 B). Const-init so TLS
+// access never allocates (safe inside GlobalAlloc).
+thread_local! {
+    static TL_CACHE: [std::cell::Cell<(usize, u32)>; NCLASSES] = const {
+        [const { std::cell::Cell::new((0, 0)) }; NCLASSES]
+    };
+}
+
+#[inline]
+unsafe fn block_next(ptr: usize) -> usize {
+    (ptr as *const usize).read()
+}
+
+#[inline]
+unsafe fn set_block_next(ptr: usize, next: usize) {
+    (ptr as *mut usize).write(next)
+}
+
+struct SizeClass {
+    block: usize,
+    /// free blocks (pointers into slabs)
+    free: Mutex<Vec<usize>>,
+    /// (slab base, bump offset); slabs are never returned to the OS —
+    /// they are recycled through the free list (arena style, like the
+    /// paper's allocator which keeps memory for the simulation's life)
+    bump: Mutex<(usize, usize)>,
+    slabs: Mutex<Vec<usize>>,
+    pub live: AtomicUsize,
+}
+
+impl SizeClass {
+    const fn placeholder(block: usize) -> Self {
+        SizeClass {
+            block,
+            free: Mutex::new(Vec::new()),
+            bump: Mutex::new((0, 0)),
+            slabs: Mutex::new(Vec::new()),
+            live: AtomicUsize::new(0),
+        }
+    }
+
+    /// Slow path: refill from the central free list or carve a batch
+    /// from the current slab. Returns one block; chains up to
+    /// `TL_BATCH - 1` more into the thread cache when `class_idx` is
+    /// provided.
+    fn alloc_central(&self, class_idx: Option<usize>) -> *mut u8 {
+        // central free list first
+        {
+            let mut free = self.free.lock().unwrap();
+            if let Some(p) = free.pop() {
+                if let Some(ci) = class_idx {
+                    let mut take = 0;
+                    let _ = TL_CACHE.try_with(|cache| {
+                        let (mut head, mut len) = cache[ci].get();
+                        while take < TL_BATCH - 1 {
+                            let Some(q) = free.pop() else { break };
+                            unsafe { set_block_next(q, head) };
+                            head = q;
+                            len += 1;
+                            take += 1;
+                        }
+                        cache[ci].set((head, len));
+                    });
+                }
+                return p as *mut u8;
+            }
+        }
+        // carve from the slab
+        let mut bump = self.bump.lock().unwrap();
+        if bump.0 == 0 || bump.1 + self.block > SLAB_SIZE {
+            let layout = Layout::from_size_align(SLAB_SIZE, MAX_POOLED_ALIGN).unwrap();
+            let base = unsafe { System.alloc(layout) };
+            if base.is_null() {
+                return std::ptr::null_mut();
+            }
+            self.slabs.lock().unwrap().push(base as usize);
+            *bump = (base as usize, 0);
+        }
+        let p = bump.0 + bump.1;
+        bump.1 += self.block;
+        p as *mut u8
+    }
+
+    #[inline]
+    fn count_alloc(&self) {
+        // exact live accounting only in debug builds — the release
+        // fast path must be free of atomic RMWs (paper Fig 5.5's
+        // thread-local design point)
+        #[cfg(debug_assertions)]
+        self.live.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn count_dealloc(&self) {
+        #[cfg(debug_assertions)]
+        self.live.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn alloc(&self, class_idx: usize) -> *mut u8 {
+        // fast path: thread-local cache (no locks, no atomics)
+        let cached = TL_CACHE
+            .try_with(|cache| {
+                let (head, len) = cache[class_idx].get();
+                if head != 0 {
+                    let next = unsafe { block_next(head) };
+                    cache[class_idx].set((next, len - 1));
+                    head
+                } else {
+                    0
+                }
+            })
+            .unwrap_or(0);
+        self.count_alloc();
+        if cached != 0 {
+            return cached as *mut u8;
+        }
+        self.alloc_central(Some(class_idx))
+    }
+
+    fn dealloc(&self, ptr: *mut u8, class_idx: usize) {
+        self.count_dealloc();
+        let pushed = TL_CACHE
+            .try_with(|cache| {
+                let (head, len) = cache[class_idx].get();
+                unsafe { set_block_next(ptr as usize, head) };
+                cache[class_idx].set((ptr as usize, len + 1));
+                if len + 1 > TL_CACHE_MAX {
+                    // flush a batch to the central list
+                    let (mut head, mut len) = cache[class_idx].get();
+                    let mut free = self.free.lock().unwrap();
+                    for _ in 0..TL_BATCH {
+                        free.push(head);
+                        head = unsafe { block_next(head) };
+                        len -= 1;
+                    }
+                    cache[class_idx].set((head, len));
+                }
+                true
+            })
+            .unwrap_or(false);
+        if !pushed {
+            // TLS unavailable (thread teardown): central list directly
+            self.free.lock().unwrap().push(ptr as usize);
+        }
+    }
+}
+
+/// The size-class slab allocator.
+pub struct PoolAlloc {
+    classes: [SizeClass; 10],
+}
+
+impl Default for PoolAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PoolAlloc {
+    pub const fn new() -> Self {
+        PoolAlloc {
+            classes: [
+                SizeClass::placeholder(16),
+                SizeClass::placeholder(32),
+                SizeClass::placeholder(48),
+                SizeClass::placeholder(64),
+                SizeClass::placeholder(96),
+                SizeClass::placeholder(128),
+                SizeClass::placeholder(192),
+                SizeClass::placeholder(256),
+                SizeClass::placeholder(384),
+                SizeClass::placeholder(512),
+            ],
+        }
+    }
+
+    /// Does this layout route through the pools?
+    #[inline]
+    pub fn is_pooled(layout: Layout) -> bool {
+        layout.size() > 0 && layout.size() <= MAX_POOLED_SIZE && layout.align() <= MAX_POOLED_ALIGN
+    }
+
+    #[inline]
+    fn class_for(size: usize) -> usize {
+        // CLASS_SIZES is small; linear scan beats binary search here
+        CLASS_SIZES
+            .iter()
+            .position(|&c| size <= c)
+            .expect("size checked by is_pooled")
+    }
+
+    /// Allocate from the matching size class.
+    ///
+    /// # Safety
+    /// Same contract as `GlobalAlloc::alloc`. Note: thread-local block
+    /// caches are shared per size class across `PoolAlloc` instances
+    /// (slabs are never returned to the OS, so this is sound; per-pool
+    /// `reserved_bytes` remains approximate under instance mixing).
+    pub unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        debug_assert!(Self::is_pooled(layout));
+        let ci = Self::class_for(layout.size());
+        self.classes[ci].alloc(ci)
+    }
+
+    /// Return a block to its size class.
+    ///
+    /// # Safety
+    /// `ptr` must come from `alloc` with an equal layout.
+    pub unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        debug_assert!(Self::is_pooled(layout));
+        let ci = Self::class_for(layout.size());
+        self.classes[ci].dealloc(ptr, ci);
+    }
+
+    /// Live allocations per size class. Exact in debug builds only
+    /// (release builds skip the per-op accounting on the fast path).
+    pub fn live_blocks(&self) -> Vec<(usize, usize)> {
+        self.classes
+            .iter()
+            .map(|c| (c.block, c.live.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Total bytes reserved from the OS.
+    pub fn reserved_bytes(&self) -> usize {
+        self.classes
+            .iter()
+            .map(|c| c.slabs.lock().unwrap().len() * SLAB_SIZE)
+            .sum()
+    }
+}
+
+static GLOBAL_POOL: PoolAlloc = PoolAlloc::new();
+
+/// 0 = undecided, 1 = system, 2 = pool
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != 0 {
+        return m;
+    }
+    // First allocation decides, from the environment. std::env does not
+    // allocate for a missing var lookup via `var_os`.
+    let enabled = std::env::var_os("TA_POOL_ALLOC").map(|v| v == "1").unwrap_or(false);
+    let m = if enabled { 2 } else { 1 };
+    MODE.store(m, Ordering::Relaxed);
+    m
+}
+
+/// `GlobalAlloc` that routes small allocations through [`PoolAlloc`]
+/// when `TA_POOL_ALLOC=1`. Install in a binary with:
+/// `#[global_allocator] static A: SwitchablePool = SwitchablePool;`
+pub struct SwitchablePool;
+
+unsafe impl GlobalAlloc for SwitchablePool {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if mode() == 2 && PoolAlloc::is_pooled(layout) {
+            GLOBAL_POOL.alloc(layout)
+        } else {
+            System.alloc(layout)
+        }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        if mode() == 2 && PoolAlloc::is_pooled(layout) {
+            GLOBAL_POOL.dealloc(ptr, layout)
+        } else {
+            System.dealloc(ptr, layout)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_selection() {
+        assert_eq!(PoolAlloc::class_for(1), 0);
+        assert_eq!(PoolAlloc::class_for(16), 0);
+        assert_eq!(PoolAlloc::class_for(17), 1);
+        assert_eq!(PoolAlloc::class_for(512), 9);
+    }
+
+    #[test]
+    fn pooled_predicate() {
+        assert!(PoolAlloc::is_pooled(Layout::from_size_align(64, 8).unwrap()));
+        assert!(!PoolAlloc::is_pooled(Layout::from_size_align(1024, 8).unwrap()));
+        assert!(!PoolAlloc::is_pooled(Layout::from_size_align(64, 64).unwrap()));
+        assert!(!PoolAlloc::is_pooled(Layout::from_size_align(0, 1).unwrap()));
+    }
+
+    #[test]
+    fn alloc_dealloc_reuse() {
+        let pool = PoolAlloc::new();
+        let layout = Layout::from_size_align(40, 8).unwrap();
+        let p1 = unsafe { pool.alloc(layout) };
+        assert!(!p1.is_null());
+        unsafe { pool.dealloc(p1, layout) };
+        let p2 = unsafe { pool.alloc(layout) };
+        assert_eq!(p1, p2, "free list must recycle the block");
+        unsafe { pool.dealloc(p2, layout) };
+    }
+
+    #[test]
+    fn distinct_live_blocks_and_writable() {
+        let pool = PoolAlloc::new();
+        let layout = Layout::from_size_align(64, 16).unwrap();
+        let mut ptrs = Vec::new();
+        for i in 0..1000u64 {
+            let p = unsafe { pool.alloc(layout) };
+            assert!(!p.is_null());
+            unsafe { (p as *mut u64).write(i) };
+            ptrs.push(p);
+        }
+        // all distinct
+        let set: std::collections::HashSet<_> = ptrs.iter().map(|p| *p as usize).collect();
+        assert_eq!(set.len(), 1000);
+        // contents intact
+        for (i, p) in ptrs.iter().enumerate() {
+            assert_eq!(unsafe { (*p as *const u64).read() }, i as u64);
+        }
+        let live = pool.live_blocks();
+        assert_eq!(live.iter().find(|(b, _)| *b == 64).unwrap().1, 1000);
+        for p in ptrs {
+            unsafe { pool.dealloc(p, layout) };
+        }
+        assert_eq!(pool.live_blocks().iter().find(|(b, _)| *b == 64).unwrap().1, 0);
+    }
+
+    #[test]
+    fn spans_multiple_slabs() {
+        let pool = PoolAlloc::new();
+        let layout = Layout::from_size_align(512, 16).unwrap();
+        let n = SLAB_SIZE / 512 + 10; // force a second slab
+        let ptrs: Vec<_> = (0..n).map(|_| unsafe { pool.alloc(layout) }).collect();
+        assert!(pool.reserved_bytes() >= 2 * SLAB_SIZE);
+        let set: std::collections::HashSet<_> = ptrs.iter().map(|p| *p as usize).collect();
+        assert_eq!(set.len(), n);
+        for p in ptrs {
+            unsafe { pool.dealloc(p, layout) };
+        }
+    }
+
+    #[test]
+    fn concurrent_alloc_dealloc() {
+        use std::sync::Arc;
+        let pool = Arc::new(PoolAlloc::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let layout = Layout::from_size_align(96, 8).unwrap();
+                let mut mine = Vec::new();
+                for i in 0..2000u64 {
+                    let p = unsafe { pool.alloc(layout) };
+                    unsafe { (p as *mut u64).write(t * 1_000_000 + i) };
+                    mine.push(p);
+                }
+                for (i, p) in mine.iter().enumerate() {
+                    assert_eq!(
+                        unsafe { (*p as *const u64).read() },
+                        t * 1_000_000 + i as u64
+                    );
+                    unsafe { pool.dealloc(*p, layout) };
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            pool.live_blocks().iter().map(|(_, l)| l).sum::<usize>(),
+            0
+        );
+    }
+}

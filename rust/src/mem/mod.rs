@@ -1,0 +1,8 @@
+//! Memory-layout optimizations (paper §5.4): Morton space-filling-curve
+//! agent sorting and domain balancing, and the pool memory allocator.
+//! The simulated-NUMA partitioning itself lives in the
+//! `ResourceManager` (one dense vector per domain) and the static
+//! schedule of `core::parallel` (§5.4.1).
+
+pub mod allocator;
+pub mod morton;

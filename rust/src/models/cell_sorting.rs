@@ -1,0 +1,255 @@
+//! Cell sorting — the Biocellion comparison model (paper §5.6.5,
+//! Fig 5.8).
+//!
+//! Two cell types with differential adhesion: homotypic contacts
+//! adhere more strongly than heterotypic ones, so an initially mixed
+//! aggregate sorts into same-type clusters (Steinberg's differential
+//! adhesion hypothesis). The adhesion difference enters through a
+//! type-dependent `gamma` in the Eq 4.1 force — a drop-in
+//! [`InteractionForce`] replacement (the paper's E.15 extension point).
+
+use crate::core::agent::{Agent, AgentBase};
+use crate::core::execution_context::AgentContext;
+use crate::core::behavior::Behavior;
+use crate::core::math::Real3;
+use crate::core::model_initializer::create_agents_random;
+use crate::core::operation::MechanicalForcesOp;
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use crate::physics::force::{DefaultForce, InteractionForce};
+use crate::{impl_agent_common, Real};
+
+pub const SORTING_CELL_TAG: u16 = 60;
+
+#[derive(Debug, Clone)]
+pub struct SortingCell {
+    pub base: AgentBase,
+    pub cell_type: u8,
+}
+
+impl SortingCell {
+    pub fn new(position: Real3, cell_type: u8) -> Self {
+        let mut base = AgentBase::at(position);
+        base.diameter = 10.0;
+        SortingCell { base, cell_type }
+    }
+}
+
+impl Agent for SortingCell {
+    impl_agent_common!();
+
+    fn type_tag(&self) -> u16 {
+        SORTING_CELL_TAG
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SortingCell"
+    }
+
+    fn clone_agent(&self) -> Box<dyn Agent> {
+        Box::new(self.clone())
+    }
+
+    fn serialize_extra(&self, buf: &mut Vec<u8>) {
+        buf.push(self.cell_type);
+    }
+
+    fn deserialize_extra(&mut self, data: &[u8]) -> usize {
+        self.cell_type = data[0];
+        1
+    }
+}
+
+/// Differential-adhesion force: homotypic pairs get
+/// `homotypic_adhesion`, heterotypic pairs `heterotypic_adhesion`
+/// as the Eq 4.1 `gamma`.
+pub struct DifferentialAdhesion {
+    pub repulsion_k: Real,
+    pub homotypic_adhesion: Real,
+    pub heterotypic_adhesion: Real,
+}
+
+impl InteractionForce for DifferentialAdhesion {
+    fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3 {
+        let ta = a.downcast_ref::<SortingCell>().map(|c| c.cell_type);
+        let tb = b.downcast_ref::<SortingCell>().map(|c| c.cell_type);
+        let gamma = if ta.is_some() && ta == tb {
+            self.homotypic_adhesion
+        } else {
+            self.heterotypic_adhesion
+        };
+        DefaultForce::new(self.repulsion_k, gamma).calculate(a, b)
+    }
+}
+
+/// Tiny random jitter keeps the aggregate thermally active so sorting
+/// can proceed (Biocellion's model has an explicit random walk term).
+#[derive(Debug, Clone)]
+pub struct Jitter {
+    pub scale: Real,
+}
+
+impl Behavior for Jitter {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let step = ctx.rng.on_unit_sphere() * self.scale;
+        let pos = ctx.param().apply_bounds(agent.position() + step);
+        agent.set_position(pos);
+        agent.base_mut().moved_now = true;
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "jitter"
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CellSortingParams {
+    pub num_cells: usize,
+    pub space_length: Real,
+    pub repulsion_k: Real,
+    pub homotypic_adhesion: Real,
+    pub heterotypic_adhesion: Real,
+    pub jitter: Real,
+}
+
+impl Default for CellSortingParams {
+    fn default() -> Self {
+        CellSortingParams {
+            num_cells: 1000,
+            space_length: 120.0,
+            repulsion_k: 2.0,
+            homotypic_adhesion: 2.0,
+            heterotypic_adhesion: 0.4,
+            jitter: 0.4,
+        }
+    }
+}
+
+pub fn build(mut engine_param: Param, p: &CellSortingParams) -> Simulation {
+    engine_param.min_bound = 0.0;
+    engine_param.max_bound = p.space_length;
+    engine_param.bound_space = crate::core::param::BoundaryCondition::Closed;
+    engine_param.interaction_radius = 12.0;
+    engine_param.simulation_time_step = 0.1;
+    let mut sim = Simulation::new(engine_param);
+    // swap in the differential-adhesion force
+    sim.remove_agent_op("mechanical_forces");
+    let mut mech = MechanicalForcesOp::new(12.0);
+    mech.force = Box::new(DifferentialAdhesion {
+        repulsion_k: p.repulsion_k,
+        homotypic_adhesion: p.homotypic_adhesion,
+        heterotypic_adhesion: p.heterotypic_adhesion,
+    });
+    mech.detect_static = sim.param.detect_static_agents;
+    sim.add_agent_op(Box::new(mech));
+
+    let jitter = Jitter { scale: p.jitter };
+    let mut count = 0usize;
+    let mut factory = |pos: Real3| -> Box<dyn Agent> {
+        let mut c = SortingCell::new(pos, (count % 2) as u8);
+        count += 1;
+        c.base.behaviors.push(Box::new(jitter.clone()));
+        Box::new(c)
+    };
+    // dense mixed blob in the middle third of the space
+    let lo = p.space_length / 3.0;
+    let hi = 2.0 * p.space_length / 3.0;
+    let mut sim2 = sim;
+    create_agents_random(&mut sim2, lo, hi, p.num_cells, &mut factory);
+    sim2
+}
+
+/// Sorting metric: mean homotypic fraction among contacting neighbors.
+pub fn sorting_index(sim: &Simulation) -> Real {
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for h in sim.rm.handles() {
+        let a = sim.rm.get(h);
+        let Some(cell) = a.downcast_ref::<SortingCell>() else {
+            continue;
+        };
+        let (mut same, mut all) = (0usize, 0usize);
+        sim.env
+            .for_each_neighbor(a.position(), 12.0, &sim.rm, &mut |h2, nb, _| {
+                if h2 != h {
+                    if let Some(o) = nb.downcast_ref::<SortingCell>() {
+                        all += 1;
+                        same += usize::from(o.cell_type == cell.cell_type);
+                    }
+                }
+            });
+        if all > 0 {
+            total += same as Real / all as Real;
+            counted += 1;
+        }
+    }
+    if counted == 0 {
+        0.5
+    } else {
+        total / counted as Real
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_mixed() {
+        let p = CellSortingParams {
+            num_cells: 200,
+            ..Default::default()
+        };
+        let mut sim = build(Param::default(), &p);
+        sim.env.update(&sim.rm, &sim.pool);
+        let idx = sorting_index(&sim);
+        assert!(
+            (0.3..0.7).contains(&idx),
+            "initially mixed, sorting index {idx}"
+        );
+    }
+
+    #[test]
+    fn differential_adhesion_sorts() {
+        let p = CellSortingParams {
+            num_cells: 300,
+            space_length: 100.0,
+            ..Default::default()
+        };
+        let mut ep = Param::default();
+        ep.seed = 11;
+        let mut sim = build(ep, &p);
+        sim.env.update(&sim.rm, &sim.pool);
+        let before = sorting_index(&sim);
+        sim.simulate(120);
+        sim.env.update(&sim.rm, &sim.pool);
+        let after = sorting_index(&sim);
+        assert!(
+            after > before + 0.03,
+            "sorting must increase: {before:.3} -> {after:.3}"
+        );
+    }
+
+    #[test]
+    fn heterotypic_pairs_feel_weaker_adhesion() {
+        let force = DifferentialAdhesion {
+            repulsion_k: 2.0,
+            homotypic_adhesion: 2.0,
+            heterotypic_adhesion: 0.2,
+        };
+        let a = SortingCell::new(Real3::ZERO, 0);
+        let same = SortingCell::new(Real3::new(9.9, 0.0, 0.0), 0);
+        let diff = SortingCell::new(Real3::new(9.9, 0.0, 0.0), 1);
+        // slight overlap: adhesion regime
+        let f_same = force.calculate(&a, &same);
+        let f_diff = force.calculate(&a, &diff);
+        assert!(
+            f_same.x() > f_diff.x(),
+            "homotypic pull stronger: {f_same:?} vs {f_diff:?}"
+        );
+    }
+}

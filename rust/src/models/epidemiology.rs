@@ -1,0 +1,343 @@
+//! Epidemiology use case (paper §4.6.3, Fig 4.17): agent-based SIR
+//! model validated against the analytical Kermack-McKendrick solution.
+//!
+//! Behaviors (paper Algorithms 3-5): infection (susceptible near an
+//! infected agent), recovery (per-iteration probability), random
+//! movement with toroidal boundary. Parameters from Table 4.3.
+
+use crate::core::agent::{Agent, AgentBase};
+use crate::core::behavior::Behavior;
+use crate::core::execution_context::AgentContext;
+use crate::core::math::Real3;
+use crate::core::model_initializer::create_agents_random;
+use crate::core::param::{BoundaryCondition, Param};
+use crate::core::simulation::Simulation;
+use crate::{impl_agent_common, Real};
+
+/// SIR compartments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    Susceptible = 0,
+    Infected = 1,
+    Recovered = 2,
+}
+
+pub const PERSON_TAG: u16 = 30;
+
+/// A person (paper Listing 3).
+#[derive(Debug, Clone)]
+pub struct Person {
+    pub base: AgentBase,
+    pub state: State,
+}
+
+impl Person {
+    pub fn new(position: Real3, state: State) -> Self {
+        let mut base = AgentBase::at(position);
+        base.diameter = 1.0; // people are points for the environment
+        Person { base, state }
+    }
+}
+
+impl Agent for Person {
+    impl_agent_common!();
+
+    fn type_tag(&self) -> u16 {
+        PERSON_TAG
+    }
+
+    fn type_name(&self) -> &'static str {
+        "Person"
+    }
+
+    fn clone_agent(&self) -> Box<dyn Agent> {
+        Box::new(self.clone())
+    }
+
+    fn serialize_extra(&self, buf: &mut Vec<u8>) {
+        buf.push(self.state as u8);
+    }
+
+    fn deserialize_extra(&mut self, data: &[u8]) -> usize {
+        self.state = match data[0] {
+            0 => State::Susceptible,
+            1 => State::Infected,
+            _ => State::Recovered,
+        };
+        1
+    }
+}
+
+/// Algorithm 3: "the agent infects itself if an infected agent is
+/// nearby" — the formulation that needs no synchronization (§2.1.1).
+#[derive(Debug, Clone)]
+pub struct Infection {
+    pub infection_radius: Real,
+    pub infection_probability: Real,
+}
+
+impl Behavior for Infection {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let person = agent.downcast_mut::<Person>().expect("Person");
+        if person.state != State::Susceptible {
+            return;
+        }
+        if !ctx.rng.bernoulli(self.infection_probability) {
+            return;
+        }
+        let mut near_infected = false;
+        ctx.for_each_neighbor(self.infection_radius, |_h, nb, _d2| {
+            if !near_infected {
+                if let Some(p) = nb.downcast_ref::<Person>() {
+                    near_infected |= p.state == State::Infected;
+                }
+            }
+        });
+        if near_infected {
+            person.state = State::Infected;
+        }
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "infection"
+    }
+}
+
+/// Algorithm 4: recover with probability `recovery_probability`.
+#[derive(Debug, Clone)]
+pub struct Recovery {
+    pub recovery_probability: Real,
+}
+
+impl Behavior for Recovery {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let person = agent.downcast_mut::<Person>().expect("Person");
+        if person.state == State::Infected && ctx.rng.bernoulli(self.recovery_probability) {
+            person.state = State::Recovered;
+        }
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "recovery"
+    }
+}
+
+/// Algorithm 5: random movement, max `max_step` per iteration,
+/// toroidal bounds applied by the engine parameter.
+#[derive(Debug, Clone)]
+pub struct RandomMovement {
+    pub max_step: Real,
+}
+
+impl Behavior for RandomMovement {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let dir = ctx.rng.on_unit_sphere();
+        let step = ctx.rng.uniform(0.0, self.max_step);
+        let new_pos = ctx.param().apply_bounds(agent.position() + dir * step);
+        agent.set_position(new_pos);
+        agent.base_mut().moved_now = true;
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "random_movement"
+    }
+}
+
+/// Disease parameters (paper Table 4.3).
+#[derive(Debug, Clone)]
+pub struct SirParams {
+    pub initial_susceptible: usize,
+    pub initial_infected: usize,
+    pub space_length: Real,
+    pub infection_radius: Real,
+    pub infection_probability: Real,
+    pub recovery_probability: Real,
+    pub max_movement: Real,
+    pub timesteps: u64,
+    /// analytical-model parameters for validation
+    pub beta: Real,
+    pub gamma: Real,
+}
+
+impl SirParams {
+    /// Measles column of Table 4.3.
+    pub fn measles() -> Self {
+        SirParams {
+            initial_susceptible: 2000,
+            initial_infected: 20,
+            space_length: 100.0,
+            infection_radius: 3.24179,
+            infection_probability: 0.28510,
+            recovery_probability: 0.00521,
+            max_movement: 5.78594,
+            timesteps: 1000,
+            beta: 0.06719,
+            gamma: 0.00521,
+        }
+    }
+
+    /// Seasonal-influenza column of Table 4.3.
+    pub fn influenza() -> Self {
+        SirParams {
+            initial_susceptible: 20_000,
+            initial_infected: 200,
+            space_length: 215.0,
+            infection_radius: 3.2123,
+            infection_probability: 0.04980,
+            recovery_probability: 0.01016,
+            max_movement: 4.2942,
+            timesteps: 2500,
+            beta: 0.01321,
+            gamma: 0.01016,
+        }
+    }
+
+    /// Scale the population by `factor` at constant density (the
+    /// medium/large-scale benchmark variants of Table 4.5).
+    pub fn scaled(mut self, factor: Real) -> Self {
+        self.initial_susceptible = (self.initial_susceptible as Real * factor) as usize;
+        self.initial_infected = (self.initial_infected as Real * factor).max(1.0) as usize;
+        self.space_length *= factor.cbrt();
+        self
+    }
+}
+
+/// Build the SIR simulation.
+pub fn build(mut engine_param: Param, p: &SirParams) -> Simulation {
+    engine_param.min_bound = 0.0;
+    engine_param.max_bound = p.space_length;
+    engine_param.bound_space = BoundaryCondition::Toroidal;
+    engine_param.interaction_radius = p.infection_radius;
+    engine_param.box_length = Some(p.infection_radius.max(p.space_length / 128.0));
+    let mut sim = Simulation::new(engine_param);
+    // no physics in this model (paper: "no mechanical interactions")
+    sim.remove_agent_op("mechanical_forces");
+
+    let behaviors: Vec<Box<dyn Behavior>> = vec![
+        Box::new(RandomMovement { max_step: p.max_movement }),
+        Box::new(Infection {
+            infection_radius: p.infection_radius,
+            infection_probability: p.infection_probability,
+        }),
+        Box::new(Recovery {
+            recovery_probability: p.recovery_probability,
+        }),
+    ];
+    let total = p.initial_susceptible + p.initial_infected;
+    let infected_every = total.div_ceil(p.initial_infected.max(1));
+    let mut count = 0usize;
+    let mut factory = |pos: Real3| -> Box<dyn Agent> {
+        let state = if p.initial_infected > 0 && count % infected_every == 0 {
+            State::Infected
+        } else {
+            State::Susceptible
+        };
+        count += 1;
+        let mut person = Person::new(pos, state);
+        person.base.behaviors = behaviors.iter().map(|b| b.clone_behavior()).collect();
+        Box::new(person)
+    };
+    create_agents_random(&mut sim, 0.0, p.space_length, total, &mut factory);
+    sim
+}
+
+/// Count (S, I, R).
+pub fn census(sim: &Simulation) -> (usize, usize, usize) {
+    let (mut s, mut i, mut r) = (0, 0, 0);
+    sim.rm.for_each_agent(|_, a| {
+        if let Some(p) = a.downcast_ref::<Person>() {
+            match p.state {
+                State::Susceptible => s += 1,
+                State::Infected => i += 1,
+                State::Recovered => r += 1,
+            }
+        }
+    });
+    (s, i, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_census_matches_params() {
+        let p = SirParams {
+            initial_susceptible: 500,
+            initial_infected: 5,
+            timesteps: 10,
+            ..SirParams::measles()
+        };
+        let sim = build(Param::default(), &p);
+        let (s, i, r) = census(&sim);
+        assert_eq!(s + i + r, 505);
+        assert!(i >= 5, "at least the requested number infected, got {i}");
+        assert_eq!(r, 0);
+    }
+
+    #[test]
+    fn epidemic_spreads_and_recovers() {
+        let p = SirParams {
+            initial_susceptible: 500,
+            initial_infected: 10,
+            space_length: 40.0, // dense -> fast spread
+            ..SirParams::measles()
+        };
+        let mut sim = build(Param::default(), &p);
+        let (_, i0, _) = census(&sim);
+        sim.simulate(250);
+        let (s1, i1, r1) = census(&sim);
+        assert!(
+            i1 + r1 > i0,
+            "outbreak expected: i0={i0} -> i1={i1} r1={r1}"
+        );
+        assert!(r1 > 0, "some recovered after 250 steps");
+        assert_eq!(s1 + i1 + r1, 510, "population conserved");
+    }
+
+    #[test]
+    fn no_spread_without_infected() {
+        let p = SirParams {
+            initial_susceptible: 200,
+            initial_infected: 0,
+            ..SirParams::measles()
+        };
+        let mut sim = build(Param::default(), &p);
+        sim.simulate(50);
+        let (s, i, r) = census(&sim);
+        assert_eq!((s, i, r), (200, 0, 0));
+    }
+
+    #[test]
+    fn movement_respects_torus() {
+        let p = SirParams {
+            initial_susceptible: 100,
+            initial_infected: 1,
+            space_length: 50.0,
+            ..SirParams::measles()
+        };
+        let mut sim = build(Param::default(), &p);
+        sim.simulate(30);
+        sim.rm.for_each_agent(|_, a| {
+            let pos = a.position();
+            for c in 0..3 {
+                assert!(
+                    (0.0..=50.0).contains(&pos[c]),
+                    "agent escaped torus: {pos:?}"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,29 @@
+//! The paper's benchmark simulations (§4.7.1, Table 5.1) — each
+//! exercises a different region of the agent-based workload space and
+//! doubles as an example of the platform's modularity: every model is
+//! built purely from the public API (agents, behaviors, operations),
+//! never by touching engine internals.
+
+pub mod cell_growth;
+pub mod cell_sorting;
+pub mod epidemiology;
+pub mod pyramidal;
+pub mod soma_clustering;
+pub mod spheroid;
+
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+
+/// Build a model by name with default model parameters (CLI and the
+/// distributed worker use this).
+pub fn build_named(name: &str, param: Param) -> Option<Simulation> {
+    Some(match name {
+        "cell_growth" => cell_growth::build(param, &Default::default()),
+        "soma_clustering" => soma_clustering::build(param, &Default::default()),
+        "epidemiology" => epidemiology::build(param, &epidemiology::SirParams::measles()),
+        "spheroid" => spheroid::build(param, &spheroid::SpheroidParams::for_seeding(2000)),
+        "pyramidal" => pyramidal::build(param, &Default::default()),
+        "cell_sorting" => cell_sorting::build(param, &Default::default()),
+        _ => return None,
+    })
+}

@@ -1,0 +1,287 @@
+//! Neuroscience use case: pyramidal-cell growth (paper §4.6.1,
+//! Listing 1, Algorithm 1, Table 4.1; benchmark §4.7.1).
+//!
+//! A soma sprouts one apical and three basal dendrites; dendritic
+//! growth follows the chemical gradient of two substances initialized
+//! as Gaussian bands along z. Exercises cylinder mechanics, tree
+//! growth, static substances, and the load imbalance of tip-only
+//! activity.
+
+use crate::core::agent::Agent;
+use crate::core::behavior::Behavior;
+use crate::core::execution_context::AgentContext;
+use crate::core::math::Real3;
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use crate::neuro::{NeuriteElement, NeuronSoma};
+use crate::Real;
+
+/// Table 4.1 parameters for one dendrite class.
+#[derive(Debug, Clone)]
+pub struct GrowthParams {
+    pub diameter_threshold: Real,
+    pub diameter_threshold_two: Real,
+    pub old_direction_weight: Real,
+    pub gradient_weight: Real,
+    pub randomness_weight: Real,
+    pub growth_speed: Real,
+    pub shrinkage: Real,
+    pub branching_probability: Real,
+}
+
+impl GrowthParams {
+    pub fn apical() -> Self {
+        GrowthParams {
+            diameter_threshold: 0.575,
+            diameter_threshold_two: 0.55,
+            old_direction_weight: 4.0,
+            gradient_weight: 0.06,
+            randomness_weight: 0.3,
+            growth_speed: 100.0,
+            shrinkage: 0.00071,
+            branching_probability: 0.038,
+        }
+    }
+
+    pub fn basal() -> Self {
+        GrowthParams {
+            diameter_threshold: 0.75,
+            diameter_threshold_two: 0.0, // unused for basal
+            old_direction_weight: 6.0,
+            gradient_weight: 0.03,
+            randomness_weight: 0.4,
+            growth_speed: 50.0,
+            shrinkage: 0.00085,
+            branching_probability: 0.006,
+        }
+    }
+}
+
+/// Algorithm 1: apical/basal dendrite growth along a substance
+/// gradient with tapering and stochastic branching.
+#[derive(Debug, Clone)]
+pub struct DendriteGrowth {
+    pub params: GrowthParams,
+    pub substance_id: usize,
+    pub apical: bool,
+}
+
+impl Behavior for DendriteGrowth {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let Some(neurite) = agent.downcast_mut::<NeuriteElement>() else {
+            return;
+        };
+        if !neurite.is_terminal {
+            return;
+        }
+        let p = &self.params;
+        let diameter = neurite.base.diameter;
+        if diameter <= p.diameter_threshold {
+            return; // stopped growing
+        }
+        let old_direction = neurite.direction();
+        let grid = ctx.substances().get(self.substance_id);
+        let gradient = grid.normalized_gradient_at(neurite.base.position);
+        let random_dir = ctx.rng.uniform3(-1.0, 1.0);
+        let direction = old_direction * p.old_direction_weight
+            + gradient * p.gradient_weight
+            + random_dir * p.randomness_weight;
+        neurite.extend(ctx, p.growth_speed, direction);
+        neurite.base.diameter = (diameter - p.shrinkage).max(0.0);
+        if self.apical {
+            if neurite.is_terminal
+                && diameter < p.diameter_threshold_two
+                && ctx.rng.bernoulli(p.branching_probability)
+            {
+                let branch_dir = (neurite.direction() + old_direction.orthogonal() * 0.5).normalized();
+                neurite.branch(ctx, branch_dir);
+            }
+        } else if ctx.rng.bernoulli(p.branching_probability) {
+            neurite.bifurcate(ctx);
+        }
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    /// Growth behaviors follow the tip: they are copied to elongation
+    /// daughters (the new tip keeps growing) — `AlwaysCopyToNew` in the
+    /// paper's Listing 1.
+    fn copy_to_new(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        if self.apical {
+            "apical_dendrite_growth"
+        } else {
+            "basal_dendrite_growth"
+        }
+    }
+}
+
+/// Model scale parameters.
+#[derive(Debug, Clone)]
+pub struct PyramidalParams {
+    /// neurons on a 2D grid (1 = the single-cell figure)
+    pub neurons_per_dim: usize,
+    pub neuron_spacing: Real,
+    pub iterations_hint: u64,
+    pub substance_resolution: usize,
+}
+
+impl Default for PyramidalParams {
+    fn default() -> Self {
+        PyramidalParams {
+            neurons_per_dim: 1,
+            neuron_spacing: 150.0,
+            iterations_hint: 100,
+            substance_resolution: 16,
+        }
+    }
+}
+
+/// Build: somas with 1 apical + 3 basal dendrites and two static
+/// Gaussian-band guidance substances (paper L54-L65).
+pub fn build(mut engine_param: Param, p: &PyramidalParams) -> Simulation {
+    let extent = (p.neurons_per_dim as Real) * p.neuron_spacing + 300.0;
+    engine_param.min_bound = -extent;
+    engine_param.max_bound = extent;
+    engine_param.simulation_time_step = 0.01;
+    engine_param.interaction_radius = 12.0;
+    let mut sim = Simulation::new(engine_param);
+
+    // substances: static gaussian bands at top (apical) and bottom (basal)
+    let apical_id = sim.define_substance("substance_apical", p.substance_resolution, 0.0, 0.0);
+    let basal_id = sim.define_substance("substance_basal", p.substance_resolution, 0.0, 0.0);
+    let max_b = sim.param.max_bound;
+    let min_b = sim.param.min_bound;
+    sim.substances.get(apical_id).initialize_gaussian_band(max_b, 200.0, 2);
+    sim.substances.get(basal_id).initialize_gaussian_band(min_b, 200.0, 2);
+    // static substances: drop the diffusion op entirely (paper: "the
+    // simulation had only static substances")
+    sim.remove_standalone_op("diffusion");
+
+    let apical_growth = DendriteGrowth {
+        params: GrowthParams::apical(),
+        substance_id: apical_id,
+        apical: true,
+    };
+    let basal_growth = DendriteGrowth {
+        params: GrowthParams::basal(),
+        substance_id: basal_id,
+        apical: false,
+    };
+
+    for gy in 0..p.neurons_per_dim {
+        for gx in 0..p.neurons_per_dim {
+            let pos = Real3::new(
+                (gx as Real - (p.neurons_per_dim as Real - 1.0) / 2.0) * p.neuron_spacing,
+                (gy as Real - (p.neurons_per_dim as Real - 1.0) / 2.0) * p.neuron_spacing,
+                0.0,
+            );
+            add_initial_neuron(&mut sim, pos, &apical_growth, &basal_growth);
+        }
+    }
+    sim
+}
+
+/// Paper `AddInitialNeuron` (Listing 1 L37-51).
+pub fn add_initial_neuron(
+    sim: &mut Simulation,
+    position: Real3,
+    apical_growth: &DendriteGrowth,
+    basal_growth: &DendriteGrowth,
+) {
+    let mut soma = NeuronSoma::new(position);
+    soma.base.uid = sim.rm.issue_uid();
+    let directions = [
+        (Real3::new(0.0, 0.0, 1.0), true, 2.0),
+        (Real3::new(0.0, 0.0, -1.0), false, 1.5),
+        (Real3::new(0.0, 0.6, -0.8), false, 1.5),
+        (Real3::new(0.3, -0.6, -0.8), false, 1.5),
+    ];
+    let mut neurite_uids = Vec::new();
+    for (dir, apical, diameter) in directions {
+        let uid = soma.extend_new_neurite(sim, dir, diameter);
+        neurite_uids.push((uid, apical));
+    }
+    sim.add_agent(Box::new(soma));
+    for (uid, apical) in neurite_uids {
+        let h = sim.rm.lookup(uid).unwrap();
+        let agent = sim.rm.get_mut(h);
+        let n = agent.downcast_mut::<NeuriteElement>().unwrap();
+        n.is_apical = apical;
+        if apical {
+            n.base.behaviors.push(Box::new(apical_growth.clone()));
+        } else {
+            n.base.behaviors.push(Box::new(basal_growth.clone()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::neuro::morphology_stats;
+
+    #[test]
+    fn single_neuron_builds() {
+        let sim = build(Param::default(), &PyramidalParams::default());
+        // 1 soma + 4 initial neurites
+        assert_eq!(sim.num_agents(), 5);
+        let stats = morphology_stats(&sim);
+        assert_eq!(stats.neurite_elements, 4);
+        assert_eq!(stats.terminals, 4);
+    }
+
+    #[test]
+    fn dendrites_grow_and_apical_goes_up() {
+        let mut sim = build(Param::default(), &PyramidalParams::default());
+        let before = morphology_stats(&sim);
+        sim.simulate(200);
+        let after = morphology_stats(&sim);
+        assert!(
+            after.total_length > before.total_length + 50.0,
+            "dendrites must elongate: {} -> {}",
+            before.total_length,
+            after.total_length
+        );
+        assert!(after.neurite_elements > before.neurite_elements);
+        // apical dendrite tip must be well above the somas (gradient up)
+        let mut max_apical_z: Real = 0.0;
+        sim.rm.for_each_agent(|_, a| {
+            if let Some(n) = a.downcast_ref::<NeuriteElement>() {
+                if n.is_apical {
+                    max_apical_z = max_apical_z.max(n.distal.z());
+                }
+            }
+        });
+        assert!(max_apical_z > 50.0, "apical z = {max_apical_z}");
+    }
+
+    #[test]
+    fn multi_neuron_grid() {
+        let p = PyramidalParams {
+            neurons_per_dim: 3,
+            ..Default::default()
+        };
+        let sim = build(Param::default(), &p);
+        assert_eq!(sim.num_agents(), 9 * 5);
+    }
+
+    #[test]
+    fn tapering_stops_growth() {
+        let mut sim = build(Param::default(), &PyramidalParams::default());
+        sim.simulate(60);
+        // basal dendrites shrink by 0.00085/iter from 1.5; apical still
+        // above threshold; total length growth continues but every
+        // element keeps positive diameter
+        sim.rm.for_each_agent(|_, a| {
+            if let Some(n) = a.downcast_ref::<NeuriteElement>() {
+                assert!(n.base.diameter > 0.0);
+            }
+        });
+    }
+}

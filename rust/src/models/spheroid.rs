@@ -1,0 +1,301 @@
+//! Oncology use case: MCF-7 tumor-spheroid growth (paper §4.6.2,
+//! Fig 4.16, Algorithm 2, Table 4.2).
+//!
+//! Cells undergo Brownian motion, grow, divide, and die after a
+//! minimum age. Validation: spheroid diameter over 15 simulated days
+//! versus the in-vitro growth curves (digitized means from the paper).
+
+use crate::core::agent::{Agent, AgentBase};
+use crate::core::behavior::Behavior;
+use crate::core::event::NewAgentEventKind;
+use crate::core::execution_context::AgentContext;
+use crate::core::math::Real3;
+use crate::core::model_initializer::create_agents_on_sphere;
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use crate::{impl_agent_common, Real};
+
+pub const TUMOR_CELL_TAG: u16 = 50;
+
+/// An MCF-7 tumor cell with an age counter.
+#[derive(Debug, Clone)]
+pub struct TumorCell {
+    pub base: AgentBase,
+    pub age: u64,
+}
+
+impl TumorCell {
+    pub fn new(position: Real3, diameter: Real) -> Self {
+        let mut base = AgentBase::at(position);
+        base.diameter = diameter;
+        TumorCell { base, age: 0 }
+    }
+
+    pub fn volume(&self) -> Real {
+        std::f64::consts::PI / 6.0 * self.base.diameter.powi(3)
+    }
+
+    pub fn change_volume(&mut self, dv: Real) {
+        let v = (self.volume() + dv).max(1e-9);
+        self.base.diameter = (6.0 * v / std::f64::consts::PI).cbrt();
+    }
+}
+
+impl Agent for TumorCell {
+    impl_agent_common!();
+
+    fn type_tag(&self) -> u16 {
+        TUMOR_CELL_TAG
+    }
+
+    fn type_name(&self) -> &'static str {
+        "TumorCell"
+    }
+
+    fn clone_agent(&self) -> Box<dyn Agent> {
+        Box::new(self.clone())
+    }
+
+    fn serialize_extra(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.age.to_le_bytes());
+    }
+
+    fn deserialize_extra(&mut self, data: &[u8]) -> usize {
+        self.age = u64::from_le_bytes(data[0..8].try_into().unwrap());
+        8
+    }
+}
+
+/// Algorithm 2 (cancer cell behavior): Brownian motion, apoptosis,
+/// growth, division.
+#[derive(Debug, Clone)]
+pub struct TumorCellBehavior {
+    /// µm³ per hour
+    pub growth_rate: Real,
+    pub max_diameter: Real,
+    pub division_probability: Real,
+    /// hours before apoptosis becomes possible
+    pub minimum_age: u64,
+    pub death_probability: Real,
+    /// µm per hour displacement scale
+    pub displacement_rate: Real,
+}
+
+impl Behavior for TumorCellBehavior {
+    fn run(&mut self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
+        let cell = agent.downcast_mut::<TumorCell>().expect("TumorCell");
+        // Brownian motion
+        let brownian = ctx.rng.on_unit_sphere() * (self.displacement_rate * ctx.dt());
+        let pos = cell.base.position + brownian;
+        cell.base.position = ctx.param().apply_bounds(pos);
+        cell.base.moved_now = true;
+        // apoptosis
+        if cell.age >= self.minimum_age && ctx.rng.bernoulli(self.death_probability) {
+            ctx.remove_self();
+            return;
+        }
+        cell.age += 1;
+        // growth then division
+        if cell.base.diameter < self.max_diameter {
+            cell.change_volume(self.growth_rate * ctx.dt());
+        } else if ctx.rng.bernoulli(self.division_probability) {
+            let dir = ctx.rng.on_unit_sphere();
+            // conserve volume across the division
+            let half = cell.volume() / 2.0;
+            let d = (6.0 * half / std::f64::consts::PI).cbrt();
+            let offset = dir * (d / 2.0);
+            let mut daughter = TumorCell::new(cell.base.position + offset, d);
+            daughter.base.behaviors = cell
+                .base
+                .behaviors
+                .iter()
+                .filter(|b| b.copy_to_new())
+                .map(|b| b.clone_behavior())
+                .collect();
+            cell.base.diameter = d;
+            cell.base.position -= offset;
+            ctx.new_agent(NewAgentEventKind::CellDivision, Box::new(daughter));
+        }
+    }
+
+    fn clone_behavior(&self) -> Box<dyn Behavior> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "tumor_cell_behavior"
+    }
+}
+
+/// Table 4.2 parameters per initial seeding.
+#[derive(Debug, Clone)]
+pub struct SpheroidParams {
+    pub initial_cells: usize,
+    /// µm³/h (42.0 / 35.0 / 29.9 in the paper)
+    pub growth_rate: Real,
+    pub minimum_age_h: u64,
+    pub division_probability: Real,
+    pub death_probability: Real,
+    /// µm/h
+    pub displacement_rate: Real,
+    pub max_diameter: Real,
+    /// simulated hours per iteration
+    pub dt_hours: Real,
+}
+
+impl SpheroidParams {
+    pub fn for_seeding(initial_cells: usize) -> Self {
+        let growth_rate = match initial_cells {
+            0..=2999 => 42.0,
+            3000..=5999 => 35.0,
+            _ => 29.9,
+        };
+        let displacement_rate = match initial_cells {
+            0..=2999 => 1.0,
+            3000..=5999 => 0.9,
+            _ => 0.2,
+        };
+        SpheroidParams {
+            initial_cells,
+            growth_rate,
+            minimum_age_h: 87,
+            division_probability: 0.0215,
+            death_probability: 0.033,
+            displacement_rate,
+            max_diameter: 14.0,
+            dt_hours: 1.0,
+        }
+    }
+}
+
+/// Build the spheroid: cells packed inside an initial ball.
+pub fn build(mut engine_param: Param, p: &SpheroidParams) -> Simulation {
+    engine_param.min_bound = -300.0;
+    engine_param.max_bound = 300.0;
+    engine_param.simulation_time_step = p.dt_hours;
+    engine_param.interaction_radius = p.max_diameter * 1.2;
+    let mut sim = Simulation::new(engine_param);
+    let behavior = TumorCellBehavior {
+        growth_rate: p.growth_rate,
+        max_diameter: p.max_diameter,
+        division_probability: p.division_probability,
+        minimum_age: p.minimum_age_h,
+        death_probability: p.death_probability,
+        displacement_rate: p.displacement_rate,
+    };
+    // initial packing radius ~ cube root of total volume
+    let cell_d = 10.0;
+    let ball_r = (p.initial_cells as Real).cbrt() * cell_d / 2.0;
+    let mut shell = 0usize;
+    let mut factory = |pos: Real3| -> Box<dyn Agent> {
+        let mut c = TumorCell::new(pos * ((shell % 100) as Real / 100.0), cell_d);
+        shell += 1;
+        c.base.behaviors.push(Box::new(behavior.clone()));
+        Box::new(c)
+    };
+    create_agents_on_sphere(&mut sim, Real3::ZERO, ball_r, p.initial_cells, &mut factory);
+    sim
+}
+
+/// Spheroid diameter: twice the RMS-weighted 95th-percentile radius —
+/// a convex-hull-diameter proxy that is robust to single escapees.
+pub fn spheroid_diameter(sim: &Simulation) -> Real {
+    let mut radii: Vec<Real> = Vec::with_capacity(sim.num_agents());
+    let mut center = Real3::ZERO;
+    let mut n = 0usize;
+    sim.rm.for_each_agent(|_, a| {
+        center += a.position();
+        n += 1;
+    });
+    if n == 0 {
+        return 0.0;
+    }
+    center = center / n as Real;
+    sim.rm
+        .for_each_agent(|_, a| radii.push(a.position().distance(&center)));
+    radii.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95 = radii[(radii.len() as Real * 0.95) as usize % radii.len()];
+    2.0 * p95
+}
+
+/// Digitized in-vitro mean diameters (µm) at day 0/3/6/9/12/15 for the
+/// 2000/4000/8000-cell MCF-7 experiments (paper Fig 4.16A).
+pub fn invitro_reference(initial_cells: usize) -> [(u64, Real); 6] {
+    match initial_cells {
+        0..=2999 => [
+            (0, 170.0),
+            (72, 220.0),
+            (144, 280.0),
+            (216, 330.0),
+            (288, 380.0),
+            (360, 420.0),
+        ],
+        3000..=5999 => [
+            (0, 220.0),
+            (72, 280.0),
+            (144, 340.0),
+            (216, 400.0),
+            (288, 450.0),
+            (360, 500.0),
+        ],
+        _ => [
+            (0, 280.0),
+            (72, 340.0),
+            (144, 410.0),
+            (216, 470.0),
+            (288, 520.0),
+            (360, 560.0),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spheroid_grows() {
+        let p = SpheroidParams {
+            initial_cells: 200,
+            ..SpheroidParams::for_seeding(2000)
+        };
+        let mut sim = build(Param::default(), &p);
+        let d0 = spheroid_diameter(&sim);
+        sim.simulate(100); // 100 hours
+        let d1 = spheroid_diameter(&sim);
+        assert!(d1 > d0, "spheroid must grow: {d0:.1} -> {d1:.1}");
+        assert!(sim.num_agents() >= 200, "net growth before apoptosis era");
+    }
+
+    #[test]
+    fn death_kicks_in_after_min_age() {
+        let p = SpheroidParams {
+            initial_cells: 100,
+            minimum_age_h: 5,
+            death_probability: 0.5,
+            division_probability: 0.0,
+            growth_rate: 0.0,
+            ..SpheroidParams::for_seeding(2000)
+        };
+        let mut sim = build(Param::default(), &p);
+        sim.simulate(4);
+        assert_eq!(sim.num_agents(), 100, "no deaths before min age");
+        sim.simulate(20);
+        assert!(sim.num_agents() < 100, "deaths after min age");
+    }
+
+    #[test]
+    fn params_match_paper_table() {
+        let p2 = SpheroidParams::for_seeding(2000);
+        let p4 = SpheroidParams::for_seeding(4000);
+        let p8 = SpheroidParams::for_seeding(8000);
+        assert_eq!(p2.growth_rate, 42.0);
+        assert_eq!(p4.growth_rate, 35.0);
+        assert_eq!(p8.growth_rate, 29.9);
+        for p in [&p2, &p4, &p8] {
+            assert_eq!(p.minimum_age_h, 87);
+            assert_eq!(p.division_probability, 0.0215);
+            assert_eq!(p.death_probability, 0.033);
+        }
+    }
+}

@@ -1,0 +1,543 @@
+//! Extracellular diffusion (paper §4.5.2, Eq 4.3).
+//!
+//! A uniform grid is imposed on the simulation space; each timestep the
+//! concentration is updated with the explicit central-difference scheme
+//! of Eq 4.3 with Dirichlet-zero boundaries ("substances diffuse out of
+//! the simulation space").
+//!
+//! Two solver backends implement the same update:
+//! * **native** — portable Rust stencil, parallelized over z-slabs;
+//! * **pjrt**  — the AOT-compiled Pallas kernel (L1) executed through
+//!   the PJRT CPU client (`runtime::DiffusionKernel`), reproducing the
+//!   paper's "offload computations to the GPU" path on this stack.
+//!
+//! Concurrency: agents *secrete* during the parallel agent loop via
+//! atomic adds ([`DiffusionGrid::increase_concentration_by`]); the
+//! solver step itself runs in the standalone-operation phase where the
+//! registry is exclusively borrowed.
+
+use crate::core::math::Real3;
+use crate::core::parallel::ThreadPool;
+use crate::Real;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Stepper plug-in interface so the PJRT backend can live in `runtime`
+/// without a dependency cycle.
+pub trait DiffusionStepper: Send {
+    /// Advance `grid` by one diffusion timestep.
+    fn step(&mut self, grid: &mut DiffusionGrid, pool: &ThreadPool);
+    fn name(&self) -> &'static str;
+}
+
+/// The portable Rust stencil backend.
+pub struct NativeStepper;
+
+impl DiffusionStepper for NativeStepper {
+    fn step(&mut self, grid: &mut DiffusionGrid, pool: &ThreadPool) {
+        grid.step_native(pool);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+fn atomic_add_f64(cell: &AtomicU64, v: Real) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = f64::to_bits(f64::from_bits(cur) + v);
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// One extracellular substance on a cubic grid of `resolution`^3 points.
+pub struct DiffusionGrid {
+    pub name: String,
+    pub substance_id: usize,
+    resolution: usize,
+    origin: Real3,
+    spacing: Real,
+    /// f64 bit-cast concentrations; atomic so agents can secrete
+    /// concurrently during the agent loop.
+    data: Vec<AtomicU64>,
+    back: Vec<Real>,
+    /// diffusion coefficient (nu in Eq 4.3)
+    pub diffusion_coef: Real,
+    /// decay constant (mu in Eq 4.3)
+    pub decay_constant: Real,
+    /// timestep of the diffusion operation
+    pub dt: Real,
+}
+
+impl DiffusionGrid {
+    /// `resolution` grid points per dimension spanning [min, max].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        substance_id: usize,
+        resolution: usize,
+        min_bound: Real,
+        max_bound: Real,
+        diffusion_coef: Real,
+        decay_constant: Real,
+        dt: Real,
+    ) -> Self {
+        assert!(resolution >= 2, "resolution must be >= 2");
+        assert!(max_bound > min_bound);
+        let n = resolution * resolution * resolution;
+        DiffusionGrid {
+            name: name.into(),
+            substance_id,
+            resolution,
+            origin: Real3::new(min_bound, min_bound, min_bound),
+            spacing: (max_bound - min_bound) / (resolution - 1) as Real,
+            data: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            back: vec![0.0; n],
+            diffusion_coef,
+            decay_constant,
+            dt,
+        }
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.resolution
+    }
+
+    pub fn spacing(&self) -> Real {
+        self.spacing
+    }
+
+    /// Explicit-scheme stability bound: nu*dt/dx^2 <= 1/6.
+    pub fn is_stable(&self) -> bool {
+        self.diffusion_coef * self.dt / (self.spacing * self.spacing) <= 1.0 / 6.0 + 1e-12
+    }
+
+    #[inline]
+    fn index(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.resolution + y) * self.resolution + x
+    }
+
+    /// Nearest grid point for a world position (clamped to the grid).
+    #[inline]
+    pub fn grid_coord(&self, pos: Real3) -> [usize; 3] {
+        let mut c = [0usize; 3];
+        for (i, cc) in c.iter_mut().enumerate() {
+            let rel = (pos[i] - self.origin[i]) / self.spacing;
+            *cc = (rel.round().max(0.0) as usize).min(self.resolution - 1);
+        }
+        c
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize, z: usize) -> Real {
+        f64::from_bits(self.data[self.index(x, y, z)].load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn set(&self, x: usize, y: usize, z: usize, v: Real) {
+        self.data[self.index(x, y, z)].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Concentration at the nearest grid point.
+    pub fn concentration_at(&self, pos: Real3) -> Real {
+        let [x, y, z] = self.grid_coord(pos);
+        self.get(x, y, z)
+    }
+
+    /// Atomically add `amount` at the nearest grid point (secretion;
+    /// callable from the parallel agent loop).
+    pub fn increase_concentration_by(&self, pos: Real3, amount: Real) {
+        let [x, y, z] = self.grid_coord(pos);
+        atomic_add_f64(&self.data[self.index(x, y, z)], amount);
+    }
+
+    /// Central-difference gradient at a world position.
+    pub fn gradient_at(&self, pos: Real3) -> Real3 {
+        let [x, y, z] = self.grid_coord(pos);
+        let r = self.resolution;
+        let diff = |lo: Real, hi: Real, span: Real| (hi - lo) / (span * self.spacing);
+        let gx = diff(
+            self.get(x.saturating_sub(1), y, z),
+            self.get((x + 1).min(r - 1), y, z),
+            ((x + 1).min(r - 1) - x.saturating_sub(1)) as Real,
+        );
+        let gy = diff(
+            self.get(x, y.saturating_sub(1), z),
+            self.get(x, (y + 1).min(r - 1), z),
+            ((y + 1).min(r - 1) - y.saturating_sub(1)) as Real,
+        );
+        let gz = diff(
+            self.get(x, y, z.saturating_sub(1)),
+            self.get(x, y, (z + 1).min(r - 1)),
+            ((z + 1).min(r - 1) - z.saturating_sub(1)) as Real,
+        );
+        Real3::new(gx, gy, gz)
+    }
+
+    /// Unit-length gradient (`GetNormalizedGradient`).
+    pub fn normalized_gradient_at(&self, pos: Real3) -> Real3 {
+        self.gradient_at(pos).normalized()
+    }
+
+    /// Initialize every grid point from a world-coordinate closure
+    /// (paper: "predefined substance initializers ... and user-defined
+    /// functions").
+    pub fn initialize_with(&self, f: impl Fn(Real3) -> Real) {
+        let r = self.resolution;
+        for z in 0..r {
+            for y in 0..r {
+                for x in 0..r {
+                    let pos = Real3::new(
+                        self.origin.x() + x as Real * self.spacing,
+                        self.origin.y() + y as Real * self.spacing,
+                        self.origin.z() + z as Real * self.spacing,
+                    );
+                    self.set(x, y, z, f(pos));
+                }
+            }
+        }
+    }
+
+    /// Gaussian band along `axis` centered at `center` (paper's
+    /// `GaussianBand` initializer).
+    pub fn initialize_gaussian_band(&self, center: Real, sigma: Real, axis: usize) {
+        self.initialize_with(|p| (-((p[axis] - center).powi(2)) / (2.0 * sigma * sigma)).exp());
+    }
+
+    /// Sum over all grid points (times cell volume = total mass).
+    pub fn total(&self) -> Real {
+        self.data
+            .iter()
+            .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+            .sum()
+    }
+
+    /// One explicit Eq-4.3 step with the native stencil, parallel over
+    /// z-slabs.
+    pub fn step_native(&mut self, pool: &ThreadPool) {
+        let r = self.resolution;
+        let decay_factor = 1.0 - self.decay_constant * self.dt;
+        let coef = self.diffusion_coef * self.dt / (self.spacing * self.spacing);
+        debug_assert!(self.is_stable(), "unstable diffusion step");
+        let data = &self.data;
+        let back = &self.back;
+        // SAFETY: each z-slab of `back` is written by exactly one worker
+        // (disjoint ranges); reads of `data` are atomic.
+        let back_ptr = SendPtr(back.as_ptr() as *mut Real);
+        struct SendPtr(*mut Real);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let get = |x: isize, y: isize, z: isize| -> Real {
+            if x < 0 || y < 0 || z < 0 || x >= r as isize || y >= r as isize || z >= r as isize {
+                0.0 // Dirichlet boundary
+            } else {
+                f64::from_bits(
+                    data[(z as usize * r + y as usize) * r + x as usize].load(Ordering::Relaxed),
+                )
+            }
+        };
+        #[inline(always)]
+        fn raw(data: &[AtomicU64], idx: usize) -> Real {
+            f64::from_bits(data[idx].load(Ordering::Relaxed))
+        }
+        pool.parallel_for(0..r, 1, |z, _wid| {
+            // capture the wrapper (not the raw field) so the Sync impl
+            // applies — edition-2021 disjoint capture would otherwise
+            // capture the bare *mut f64
+            let back_ptr = &back_ptr;
+            let zi = z as isize;
+            let interior_z = z >= 1 && z + 1 < r;
+            for y in 0..r {
+                let yi = y as isize;
+                let interior_zy = interior_z && y >= 1 && y + 1 < r;
+                if interior_zy && r >= 3 {
+                    // branch-free interior row (§Perf iteration 4): all
+                    // six neighbors exist for x in [1, r-1)
+                    let row = (z * r + y) * r;
+                    for x in 1..r - 1 {
+                        let i = row + x;
+                        let u = raw(data, i);
+                        let lap = raw(data, i - 1)
+                            + raw(data, i + 1)
+                            + raw(data, i - r)
+                            + raw(data, i + r)
+                            + raw(data, i - r * r)
+                            + raw(data, i + r * r)
+                            - 6.0 * u;
+                        unsafe {
+                            *back_ptr.0.add(i) = u * decay_factor + coef * lap;
+                        }
+                    }
+                    // boundary columns via the checked path
+                    for x in [0usize, r - 1] {
+                        let xi = x as isize;
+                        let u = get(xi, yi, zi);
+                        let lap = get(xi - 1, yi, zi)
+                            + get(xi + 1, yi, zi)
+                            + get(xi, yi - 1, zi)
+                            + get(xi, yi + 1, zi)
+                            + get(xi, yi, zi - 1)
+                            + get(xi, yi, zi + 1)
+                            - 6.0 * u;
+                        unsafe {
+                            *back_ptr.0.add(row + x) = u * decay_factor + coef * lap;
+                        }
+                    }
+                } else {
+                    for x in 0..r {
+                        let xi = x as isize;
+                        let u = get(xi, yi, zi);
+                        let lap = get(xi - 1, yi, zi)
+                            + get(xi + 1, yi, zi)
+                            + get(xi, yi - 1, zi)
+                            + get(xi, yi + 1, zi)
+                            + get(xi, yi, zi - 1)
+                            + get(xi, yi, zi + 1)
+                            - 6.0 * u;
+                        unsafe {
+                            *back_ptr.0.add((z * r + y) * r + x) = u * decay_factor + coef * lap;
+                        }
+                    }
+                }
+            }
+        });
+        // publish
+        for (cell, &v) in self.data.iter().zip(self.back.iter()) {
+            cell.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot as f32 (input for the PJRT kernel).
+    pub fn snapshot_f32(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .map(|c| f64::from_bits(c.load(Ordering::Relaxed)) as f32)
+            .collect()
+    }
+
+    /// Load concentrations from an f32 buffer (PJRT kernel output).
+    pub fn load_f32(&self, values: &[f32]) {
+        assert_eq!(values.len(), self.data.len());
+        for (cell, &v) in self.data.iter().zip(values.iter()) {
+            cell.store((v as Real).to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// `[decay_factor, diff_coef]` for the PJRT kernel.
+    pub fn kernel_coefficients(&self) -> [f32; 2] {
+        [
+            (1.0 - self.decay_constant * self.dt) as f32,
+            (self.diffusion_coef * self.dt / (self.spacing * self.spacing)) as f32,
+        ]
+    }
+}
+
+/// All substances of a simulation (paper: `DefineSubstance` /
+/// `InitializeSubstance`).
+#[derive(Default)]
+pub struct SubstanceRegistry {
+    grids: Vec<DiffusionGrid>,
+    by_name: HashMap<String, usize>,
+}
+
+impl SubstanceRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a substance; returns its id.
+    pub fn define(&mut self, grid: DiffusionGrid) -> usize {
+        let id = self.grids.len();
+        self.by_name.insert(grid.name.clone(), id);
+        self.grids.push(grid);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.grids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grids.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> &DiffusionGrid {
+        &self.grids[id]
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> &mut DiffusionGrid {
+        &mut self.grids[id]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&DiffusionGrid> {
+        self.by_name.get(name).map(|&i| &self.grids[i])
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DiffusionGrid> {
+        self.grids.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut DiffusionGrid> {
+        self.grids.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(r: usize) -> DiffusionGrid {
+        DiffusionGrid::new("s", 0, r, 0.0, (r - 1) as Real, 1.0, 0.0, 0.1)
+    }
+
+    #[test]
+    fn index_and_accessors() {
+        let g = grid(8);
+        g.set(1, 2, 3, 7.5);
+        assert_eq!(g.get(1, 2, 3), 7.5);
+        assert_eq!(g.concentration_at(Real3::new(1.2, 1.8, 3.4)), 7.5);
+    }
+
+    #[test]
+    fn secretion_is_atomic_across_threads() {
+        let g = grid(4);
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(0..1000, 1, |_, _| {
+            g.increase_concentration_by(Real3::new(1.0, 1.0, 1.0), 1.0);
+        });
+        assert!((g.get(1, 1, 1) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_step_conserves_interior_mass() {
+        let mut g = grid(16);
+        g.set(8, 8, 8, 1.0);
+        let pool = ThreadPool::new(2);
+        for _ in 0..5 {
+            g.step_native(&pool);
+        }
+        // mass stays inside until it reaches the boundary
+        assert!((g.total() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_step_decays() {
+        let mut g = DiffusionGrid::new("d", 0, 8, 0.0, 7.0, 0.0, 0.5, 0.1);
+        g.set(4, 4, 4, 1.0);
+        let pool = ThreadPool::new(1);
+        g.step_native(&pool);
+        assert!((g.get(4, 4, 4) - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_leaks_mass() {
+        let mut g = grid(8);
+        g.set(0, 4, 4, 1.0);
+        let pool = ThreadPool::new(1);
+        g.step_native(&pool);
+        assert!(g.total() < 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn gradient_of_linear_field_is_constant() {
+        let g = grid(16);
+        g.initialize_with(|p| 2.0 * p.x() + 3.0 * p.y() - 1.0 * p.z());
+        let grad = g.gradient_at(Real3::new(7.0, 7.0, 7.0));
+        assert!((grad.x() - 2.0).abs() < 1e-9, "{grad:?}");
+        assert!((grad.y() - 3.0).abs() < 1e-9);
+        assert!((grad.z() + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_band_peaks_at_center() {
+        let g = grid(16);
+        g.initialize_gaussian_band(7.5, 2.0, 2);
+        let at_center = g.concentration_at(Real3::new(7.0, 7.0, 7.5));
+        let off = g.concentration_at(Real3::new(7.0, 7.0, 0.0));
+        assert!(at_center > off);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let g = grid(8);
+        g.set(1, 1, 1, 0.5);
+        g.set(2, 2, 2, 0.25);
+        let snap = g.snapshot_f32();
+        let g2 = grid(8);
+        g2.load_f32(&snap);
+        assert_eq!(g2.get(1, 1, 1), 0.5);
+        assert_eq!(g2.get(2, 2, 2), 0.25);
+    }
+
+    #[test]
+    fn stability_check() {
+        let ok = DiffusionGrid::new("a", 0, 8, 0.0, 7.0, 1.0, 0.0, 1.0 / 6.0);
+        assert!(ok.is_stable());
+        let bad = DiffusionGrid::new("b", 0, 8, 0.0, 7.0, 1.0, 0.0, 0.2);
+        assert!(!bad.is_stable());
+    }
+
+    #[test]
+    fn registry_define_and_lookup() {
+        let mut reg = SubstanceRegistry::new();
+        let id = reg.define(grid(8));
+        assert_eq!(id, 0);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.by_name("s").is_some());
+        assert_eq!(reg.id_of("s"), Some(0));
+        assert!(reg.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn native_matches_manual_stencil() {
+        // cross-check one step against a hand-rolled reference
+        let mut g = DiffusionGrid::new("m", 0, 6, 0.0, 5.0, 0.8, 0.3, 0.1);
+        let mut rngstate = 12345u64;
+        let mut reference = vec![0.0f64; 6 * 6 * 6];
+        for z in 0..6 {
+            for y in 0..6 {
+                for x in 0..6 {
+                    let v = (crate::core::random::splitmix64(&mut rngstate) % 1000) as f64 / 1000.0;
+                    g.set(x, y, z, v);
+                    reference[(z * 6 + y) * 6 + x] = v;
+                }
+            }
+        }
+        let decay = 1.0 - 0.3 * 0.1;
+        let coef = 0.8 * 0.1 / 1.0;
+        let at = |v: &Vec<f64>, x: isize, y: isize, z: isize| -> f64 {
+            if x < 0 || y < 0 || z < 0 || x >= 6 || y >= 6 || z >= 6 {
+                0.0
+            } else {
+                v[((z * 6 + y) * 6 + x) as usize]
+            }
+        };
+        let pool = ThreadPool::new(2);
+        g.step_native(&pool);
+        for z in 0..6isize {
+            for y in 0..6isize {
+                for x in 0..6isize {
+                    let u = at(&reference, x, y, z);
+                    let lap = at(&reference, x - 1, y, z)
+                        + at(&reference, x + 1, y, z)
+                        + at(&reference, x, y - 1, z)
+                        + at(&reference, x, y + 1, z)
+                        + at(&reference, x, y, z - 1)
+                        + at(&reference, x, y, z + 1)
+                        - 6.0 * u;
+                    let want = u * decay + coef * lap;
+                    let got = g.get(x as usize, y as usize, z as usize);
+                    assert!((got - want).abs() < 1e-12, "({x},{y},{z})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Mechanical interaction force (paper §4.5.1, Eq 4.1/4.2; same model
+//! as Cortex3D): `F_N = k*delta - gamma*sqrt(r*delta)` along the
+//! center-center direction, where `delta` is the spatial overlap and
+//! `r = r1*r2/(r1+r2)`.
+//!
+//! Sphere-sphere uses center distance; cylinder interactions reduce to
+//! the closest points between the segment axes (the standard Cortex3D
+//! approximation). The force is replaceable by the user (paper
+//! tutorial E.15): the mechanical-forces operation takes a
+//! [`InteractionForce`] trait object.
+
+use crate::core::agent::{Agent, Shape};
+use crate::core::math::Real3;
+use crate::Real;
+
+/// Pairwise force functor — replaceable by user models.
+pub trait InteractionForce: Send + Sync {
+    /// Force acting on `a` caused by `b`.
+    fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3;
+}
+
+/// The default BioDynaMo/Cortex3D force.
+#[derive(Debug, Clone)]
+pub struct DefaultForce {
+    pub repulsion_k: Real,
+    pub attraction_gamma: Real,
+}
+
+impl Default for DefaultForce {
+    fn default() -> Self {
+        DefaultForce {
+            repulsion_k: 2.0,
+            attraction_gamma: 1.0,
+        }
+    }
+}
+
+impl DefaultForce {
+    pub fn new(repulsion_k: Real, attraction_gamma: Real) -> Self {
+        DefaultForce {
+            repulsion_k,
+            attraction_gamma,
+        }
+    }
+
+    /// Eq 4.1/4.2 magnitude for two radii at `distance`.
+    #[inline]
+    pub fn magnitude(&self, r1: Real, r2: Real, distance: Real) -> Real {
+        let delta = r1 + r2 - distance; // spatial overlap
+        if delta <= 0.0 {
+            return 0.0;
+        }
+        let r_comb = r1 * r2 / (r1 + r2);
+        self.repulsion_k * delta - self.attraction_gamma * (r_comb * delta).sqrt()
+    }
+
+    fn sphere_sphere(&self, pa: Real3, ra: Real, pb: Real3, rb: Real) -> Real3 {
+        let delta_pos = pa - pb;
+        let dist = delta_pos.norm();
+        if dist < 1e-9 {
+            // coincident centers: deterministic tiny push along +x
+            return Real3::new(self.repulsion_k * (ra + rb), 0.0, 0.0);
+        }
+        let m = self.magnitude(ra, rb, dist);
+        if m == 0.0 {
+            Real3::ZERO
+        } else {
+            delta_pos * (m / dist)
+        }
+    }
+}
+
+/// Closest points between segments [p1,q1] and [p2,q2]; returns
+/// (point_on_1, point_on_2). Ericson, Real-Time Collision Detection.
+pub fn closest_points_segments(p1: Real3, q1: Real3, p2: Real3, q2: Real3) -> (Real3, Real3) {
+    let d1 = q1 - p1;
+    let d2 = q2 - p2;
+    let r = p1 - p2;
+    let a = d1.squared_norm();
+    let e = d2.squared_norm();
+    let f = d2.dot(&r);
+    let (s, t);
+    if a <= 1e-12 && e <= 1e-12 {
+        return (p1, p2);
+    }
+    if a <= 1e-12 {
+        s = 0.0;
+        t = (f / e).clamp(0.0, 1.0);
+    } else {
+        let c = d1.dot(&r);
+        if e <= 1e-12 {
+            t = 0.0;
+            s = (-c / a).clamp(0.0, 1.0);
+        } else {
+            let b = d1.dot(&d2);
+            let denom = a * e - b * b;
+            let s0 = if denom.abs() > 1e-12 {
+                ((b * f - c * e) / denom).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let t0 = (b * s0 + f) / e;
+            if t0 < 0.0 {
+                t = 0.0;
+                s = (-c / a).clamp(0.0, 1.0);
+            } else if t0 > 1.0 {
+                t = 1.0;
+                s = ((b - c) / a).clamp(0.0, 1.0);
+            } else {
+                t = t0;
+                s = s0;
+            }
+        }
+    }
+    (p1 + d1 * s, p2 + d2 * t)
+}
+
+impl InteractionForce for DefaultForce {
+    fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3 {
+        let (ra, rb) = (a.diameter() / 2.0, b.diameter() / 2.0);
+        match (a.shape(), b.shape()) {
+            (Shape::Sphere, Shape::Sphere) => {
+                self.sphere_sphere(a.position(), ra, b.position(), rb)
+            }
+            (Shape::Sphere, Shape::Cylinder { proximal, distal }) => {
+                let (pa, pb) = closest_points_segments(a.position(), a.position(), proximal, distal);
+                self.sphere_sphere(pa, ra, pb, rb)
+            }
+            (Shape::Cylinder { proximal, distal }, Shape::Sphere) => {
+                let (pa, pb) = closest_points_segments(proximal, distal, b.position(), b.position());
+                self.sphere_sphere(pa, ra, pb, rb)
+            }
+            (
+                Shape::Cylinder {
+                    proximal: p1,
+                    distal: q1,
+                },
+                Shape::Cylinder {
+                    proximal: p2,
+                    distal: q2,
+                },
+            ) => {
+                let (pa, pb) = closest_points_segments(p1, q1, p2, q2);
+                self.sphere_sphere(pa, ra, pb, rb)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+
+    fn sphere(x: Real, d: Real) -> SphericalAgent {
+        SphericalAgent::with_diameter(Real3::new(x, 0.0, 0.0), d)
+    }
+
+    #[test]
+    fn no_force_without_overlap() {
+        let f = DefaultForce::default();
+        let a = sphere(0.0, 10.0);
+        let b = sphere(20.0, 10.0);
+        assert_eq!(f.calculate(&a, &b), Real3::ZERO);
+        // exactly touching: delta == 0
+        let c = sphere(10.0, 10.0);
+        assert_eq!(f.calculate(&a, &c), Real3::ZERO);
+    }
+
+    #[test]
+    fn deep_overlap_repels() {
+        let f = DefaultForce::default();
+        let a = sphere(0.0, 10.0);
+        let b = sphere(2.0, 10.0);
+        let force = f.calculate(&a, &b);
+        assert!(force.x() < 0.0, "a pushed away from b: {force:?}");
+        assert_eq!(force.y(), 0.0);
+    }
+
+    #[test]
+    fn slight_overlap_attracts() {
+        // near delta -> 0+, the sqrt adhesion term dominates k*delta
+        let f = DefaultForce::default();
+        let a = sphere(0.0, 10.0);
+        let b = sphere(9.9, 10.0); // delta = 0.1
+        let force = f.calculate(&a, &b);
+        assert!(force.x() > 0.0, "adhesion pulls a toward b: {force:?}");
+    }
+
+    #[test]
+    fn newtons_third_law() {
+        let f = DefaultForce::default();
+        let a = sphere(0.0, 12.0);
+        let b = sphere(5.0, 8.0);
+        let fa = f.calculate(&a, &b);
+        let fb = f.calculate(&b, &a);
+        assert!((fa + fb).norm() < 1e-12);
+    }
+
+    #[test]
+    fn coincident_centers_deterministic_push() {
+        let f = DefaultForce::default();
+        let a = sphere(0.0, 10.0);
+        let b = sphere(0.0, 10.0);
+        let fa = f.calculate(&a, &b);
+        assert!(fa.norm() > 0.0);
+    }
+
+    #[test]
+    fn magnitude_crossover() {
+        // magnitude is zero at delta=0, negative (attraction) for tiny
+        // delta, positive (repulsion) for large delta
+        let f = DefaultForce::default();
+        assert_eq!(f.magnitude(5.0, 5.0, 10.0), 0.0);
+        assert!(f.magnitude(5.0, 5.0, 9.99) < 0.0);
+        assert!(f.magnitude(5.0, 5.0, 5.0) > 0.0);
+    }
+
+    #[test]
+    fn segment_closest_points() {
+        // parallel segments distance 2 apart
+        let (a, b) = closest_points_segments(
+            Real3::new(0.0, 0.0, 0.0),
+            Real3::new(10.0, 0.0, 0.0),
+            Real3::new(0.0, 2.0, 0.0),
+            Real3::new(10.0, 2.0, 0.0),
+        );
+        assert!((a.distance(&b) - 2.0).abs() < 1e-12);
+        // crossing segments
+        let (a, b) = closest_points_segments(
+            Real3::new(-1.0, 0.0, 0.0),
+            Real3::new(1.0, 0.0, 0.0),
+            Real3::new(0.0, -1.0, 1.0),
+            Real3::new(0.0, 1.0, 1.0),
+        );
+        assert!((a.distance(&b) - 1.0).abs() < 1e-12);
+        // degenerate: both points
+        let (a, b) = closest_points_segments(
+            Real3::new(1.0, 1.0, 1.0),
+            Real3::new(1.0, 1.0, 1.0),
+            Real3::new(4.0, 5.0, 1.0),
+            Real3::new(4.0, 5.0, 1.0),
+        );
+        assert_eq!(a, Real3::new(1.0, 1.0, 1.0));
+        assert_eq!(b, Real3::new(4.0, 5.0, 1.0));
+    }
+
+    #[test]
+    fn cylinder_sphere_force_via_axis() {
+        let f = DefaultForce::default();
+        let sphere_agent = sphere(0.0, 4.0);
+        let mut cyl = crate::neuro::NeuriteElement::for_test(
+            Real3::new(-5.0, 3.0, 0.0),
+            Real3::new(5.0, 3.0, 0.0),
+            2.0,
+        );
+        cyl.base.uid = 99;
+        // sphere radius 2 + cylinder radius 1 = 3 == axis distance -> no overlap
+        assert_eq!(f.calculate(&sphere_agent, &cyl), Real3::ZERO);
+        let cyl2 = crate::neuro::NeuriteElement::for_test(
+            Real3::new(-5.0, 2.0, 0.0),
+            Real3::new(5.0, 2.0, 0.0),
+            2.0,
+        );
+        let force = f.calculate(&sphere_agent, &cyl2);
+        assert!(force.y() < 0.0, "sphere pushed away from axis: {force:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Physics building blocks (paper §4.5): mechanical interaction forces
+//! between agents (Eq 4.1/4.2) and extracellular diffusion (Eq 4.3),
+//! plus the §5.5 mechanism that omits redundant collision-force
+//! calculations for static agents.
+
+pub mod diffusion;
+pub mod force;
+pub mod pjrt_forces;
+pub mod reactions;

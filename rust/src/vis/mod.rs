@@ -1,0 +1,237 @@
+//! Visualization export (paper §4.3.2, §5.3.3, Fig 5.2).
+//!
+//! Export-mode visualization: each invocation writes the agent state
+//! (positions, diameters, type tags) and substance grids to files that
+//! a ParaView-class tool can read. Two formats:
+//! * **VTK legacy ASCII** (`.vtk`) — interoperable;
+//! * **binary** (`.tab`)  — the fast path whose write throughput the
+//!   Fig 5.16 / Fig 6.7 benches measure.
+//!
+//! The distributed-writers optimization (TeraAgent's 39x visualization
+//! speedup, §6.3.6) is modeled by [`export_agents_sharded`]: N writers
+//! serialize disjoint agent ranges into separate shard files instead of
+//! funneling everything through one writer.
+
+use crate::core::resource_manager::ResourceManager;
+use crate::core::simulation::Simulation;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Export agents + substances for one iteration (used by the built-in
+/// `VisualizationOp`).
+pub fn export_iteration(sim: &Simulation, dir: &str, iteration: u64) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    export_agents_vtk(&sim.rm, &Path::new(dir).join(format!("agents_{iteration}.vtk")))?;
+    for grid in sim.substances.iter() {
+        export_substance_vtk(
+            grid,
+            &Path::new(dir).join(format!("{}_{iteration}.vtk", grid.name)),
+        )?;
+    }
+    Ok(())
+}
+
+/// VTK legacy POLYDATA: one point per agent with diameter + type tag.
+pub fn export_agents_vtk(rm: &ResourceManager, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let n = rm.num_agents();
+    writeln!(w, "# vtk DataFile Version 3.0")?;
+    writeln!(w, "TeraAgent agents")?;
+    writeln!(w, "ASCII")?;
+    writeln!(w, "DATASET POLYDATA")?;
+    writeln!(w, "POINTS {n} float")?;
+    rm.for_each_agent(|_h, a| {
+        let p = a.position();
+        let _ = writeln!(w, "{} {} {}", p.x() as f32, p.y() as f32, p.z() as f32);
+    });
+    writeln!(w, "POINT_DATA {n}")?;
+    writeln!(w, "SCALARS diameter float 1")?;
+    writeln!(w, "LOOKUP_TABLE default")?;
+    rm.for_each_agent(|_h, a| {
+        let _ = writeln!(w, "{}", a.diameter() as f32);
+    });
+    writeln!(w, "SCALARS type_tag int 1")?;
+    writeln!(w, "LOOKUP_TABLE default")?;
+    rm.for_each_agent(|_h, a| {
+        let _ = writeln!(w, "{}", a.type_tag());
+    });
+    w.flush()
+}
+
+/// VTK legacy STRUCTURED_POINTS for one substance grid.
+pub fn export_substance_vtk(
+    grid: &crate::physics::diffusion::DiffusionGrid,
+    path: &Path,
+) -> std::io::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let r = grid.resolution();
+    writeln!(w, "# vtk DataFile Version 3.0")?;
+    writeln!(w, "TeraAgent substance {}", grid.name)?;
+    writeln!(w, "ASCII")?;
+    writeln!(w, "DATASET STRUCTURED_POINTS")?;
+    writeln!(w, "DIMENSIONS {r} {r} {r}")?;
+    writeln!(w, "ORIGIN 0 0 0")?;
+    writeln!(w, "SPACING {s} {s} {s}", s = grid.spacing())?;
+    writeln!(w, "POINT_DATA {}", r * r * r)?;
+    writeln!(w, "SCALARS concentration float 1")?;
+    writeln!(w, "LOOKUP_TABLE default")?;
+    for z in 0..r {
+        for y in 0..r {
+            for x in 0..r {
+                let _ = writeln!(w, "{}", grid.get(x, y, z) as f32);
+            }
+        }
+    }
+    w.flush()
+}
+
+/// Fast binary export: per agent `x y z diameter (f32) tag (u16)`.
+/// Returns bytes written.
+pub fn export_agents_binary(rm: &ResourceManager, path: &Path) -> std::io::Result<u64> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let mut bytes = 0u64;
+    w.write_all(&(rm.num_agents() as u64).to_le_bytes())?;
+    bytes += 8;
+    rm.for_each_agent(|_h, a| {
+        let p = a.position();
+        let mut rec = [0u8; 18];
+        rec[0..4].copy_from_slice(&(p.x() as f32).to_le_bytes());
+        rec[4..8].copy_from_slice(&(p.y() as f32).to_le_bytes());
+        rec[8..12].copy_from_slice(&(p.z() as f32).to_le_bytes());
+        rec[12..16].copy_from_slice(&(a.diameter() as f32).to_le_bytes());
+        rec[16..18].copy_from_slice(&a.type_tag().to_le_bytes());
+        let _ = w.write_all(&rec);
+        bytes += 18;
+    });
+    w.flush()?;
+    Ok(bytes)
+}
+
+/// Distributed-writers export: `shards` writers each serialize a
+/// disjoint agent range into `dir/shard_{i}.tab` in parallel (TeraAgent
+/// §6.3.6). Returns total bytes.
+pub fn export_agents_sharded(
+    rm: &ResourceManager,
+    pool: &crate::core::parallel::ThreadPool,
+    dir: &Path,
+    shards: usize,
+) -> std::io::Result<u64> {
+    std::fs::create_dir_all(dir)?;
+    let handles = rm.handles();
+    let n = handles.len();
+    let shards = shards.max(1);
+    let per = n.div_ceil(shards);
+    let total = std::sync::atomic::AtomicU64::new(0);
+    let err = std::sync::Mutex::new(None);
+    pool.parallel_for(0..shards, 1, |s, _wid| {
+        let lo = s * per;
+        let hi = ((s + 1) * per).min(n);
+        let run = || -> std::io::Result<u64> {
+            let mut w = BufWriter::new(std::fs::File::create(dir.join(format!("shard_{s}.tab")))?);
+            let mut bytes = 0u64;
+            w.write_all(&((hi.saturating_sub(lo)) as u64).to_le_bytes())?;
+            bytes += 8;
+            for &h in &handles[lo..hi] {
+                let a = rm.get(h);
+                let p = a.position();
+                let mut rec = [0u8; 18];
+                rec[0..4].copy_from_slice(&(p.x() as f32).to_le_bytes());
+                rec[4..8].copy_from_slice(&(p.y() as f32).to_le_bytes());
+                rec[8..12].copy_from_slice(&(p.z() as f32).to_le_bytes());
+                rec[12..16].copy_from_slice(&(a.diameter() as f32).to_le_bytes());
+                rec[16..18].copy_from_slice(&a.type_tag().to_le_bytes());
+                w.write_all(&rec)?;
+                bytes += 18;
+            }
+            w.flush()?;
+            Ok(bytes)
+        };
+        match run() {
+            Ok(b) => {
+                total.fetch_add(b, std::sync::atomic::Ordering::Relaxed);
+            }
+            Err(e) => {
+                *err.lock().unwrap() = Some(e);
+            }
+        }
+    });
+    if let Some(e) = err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(total.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::math::Real3;
+    use crate::core::parallel::ThreadPool;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ta_vis_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn population(n: usize) -> ResourceManager {
+        let mut rm = ResourceManager::new(1);
+        for i in 0..n {
+            rm.add_agent(Box::new(SphericalAgent::with_diameter(
+                Real3::new(i as f64, 2.0 * i as f64, 0.5),
+                7.0,
+            )));
+        }
+        rm
+    }
+
+    #[test]
+    fn vtk_export_well_formed() {
+        let rm = population(5);
+        let dir = tmpdir("vtk");
+        let path = dir.join("a.vtk");
+        export_agents_vtk(&rm, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("POINTS 5 float"));
+        assert!(text.contains("SCALARS diameter"));
+        assert!(text.contains("SCALARS type_tag"));
+        assert_eq!(text.matches('\n').count() > 15, true);
+    }
+
+    #[test]
+    fn binary_export_size() {
+        let rm = population(10);
+        let dir = tmpdir("bin");
+        let path = dir.join("a.tab");
+        let bytes = export_agents_binary(&rm, &path).unwrap();
+        assert_eq!(bytes, 8 + 10 * 18);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), bytes);
+    }
+
+    #[test]
+    fn sharded_export_covers_all_agents() {
+        let rm = population(101);
+        let pool = ThreadPool::new(4);
+        let dir = tmpdir("shard");
+        let bytes = export_agents_sharded(&rm, &pool, &dir, 4).unwrap();
+        assert_eq!(bytes, 4 * 8 + 101 * 18);
+        let mut counted = 0u64;
+        for s in 0..4 {
+            let data = std::fs::read(dir.join(format!("shard_{s}.tab"))).unwrap();
+            counted += u64::from_le_bytes(data[0..8].try_into().unwrap());
+        }
+        assert_eq!(counted, 101);
+    }
+
+    #[test]
+    fn substance_export() {
+        let g = crate::physics::diffusion::DiffusionGrid::new("sub", 0, 4, 0.0, 3.0, 1.0, 0.0, 0.01);
+        g.set(1, 1, 1, 0.75);
+        let dir = tmpdir("sub");
+        let path = dir.join("s.vtk");
+        export_substance_vtk(&g, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("DIMENSIONS 4 4 4"));
+        assert!(text.contains("0.75"));
+    }
+}

@@ -1,0 +1,288 @@
+//! Cross-module integration tests: whole-simulation scenarios that
+//! exercise engine + environment + physics + models together, plus
+//! in-tree property tests over the engine invariants (the proptest
+//! substitution of DESIGN.md §3: seeded random cases + invariant
+//! checks).
+
+use teraagent::core::agent::{Agent, SphericalAgent};
+use teraagent::core::behavior::FnBehavior;
+use teraagent::core::event::NewAgentEventKind;
+use teraagent::core::param::{
+    DiffusionBackend, EnvironmentKind, ExecutionContextMode, Param,
+};
+use teraagent::core::random::Rng;
+use teraagent::models;
+use teraagent::{Real3, Simulation};
+
+/// Seeded random-case driver: run `cases` random scenarios, checking
+/// `check` for each; report the failing seed.
+fn property(cases: u64, base_seed: u64, check: impl Fn(u64)) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(6364136223846793005).wrapping_add(case);
+        check(seed);
+    }
+}
+
+// ----------------------------------------------------------------- engine
+
+#[test]
+fn property_population_conservation_without_birth_death() {
+    // Invariant: without divisions/removals the agent set (uids) is
+    // preserved by any combination of engine settings.
+    property(6, 11, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut param = Param::default();
+        param.seed = seed;
+        param.num_threads = 1 + (seed % 4) as usize;
+        param.numa_domains = 1 + (seed % 3) as usize;
+        param.environment = match seed % 3 {
+            0 => EnvironmentKind::UniformGrid,
+            1 => EnvironmentKind::KdTree,
+            _ => EnvironmentKind::Octree,
+        };
+        param.sort_frequency = seed % 4;
+        param.randomize_iteration_order = seed % 2 == 0;
+        let mut sim = Simulation::new(param);
+        let n = 50 + (seed % 100) as usize;
+        for _ in 0..n {
+            let mut a = SphericalAgent::new(rng.uniform3(-50.0, 50.0));
+            a.base.behaviors.push(FnBehavior::new("wander", |a, ctx| {
+                let d = ctx.rng.uniform3(-1.0, 1.0);
+                let p = a.position();
+                a.set_position(p + d);
+                a.base_mut().moved_now = true;
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        let mut uids_before: Vec<u64> = Vec::new();
+        sim.rm.for_each_agent(|_, a| uids_before.push(a.uid()));
+        uids_before.sort_unstable();
+        sim.simulate(5);
+        let mut uids_after: Vec<u64> = Vec::new();
+        sim.rm.for_each_agent(|_, a| uids_after.push(a.uid()));
+        uids_after.sort_unstable();
+        assert_eq!(uids_before, uids_after, "seed={seed}");
+        // uid map consistent
+        sim.rm
+            .for_each_agent(|h, a| assert_eq!(sim.rm.lookup(a.uid()), Some(h), "seed={seed}"));
+    });
+}
+
+#[test]
+fn property_environments_agree_during_simulation() {
+    // Invariant: the three neighbor-search structures produce identical
+    // dynamics for the same seed (they answer identical queries).
+    let run = |env: EnvironmentKind| {
+        let mut param = Param::default();
+        param.seed = 88;
+        param.environment = env;
+        let mut sim = models::cell_growth::build(
+            param,
+            &models::cell_growth::CellGrowthParams {
+                cells_per_dim: 4,
+                ..Default::default()
+            },
+        );
+        sim.simulate(15);
+        let mut state: Vec<(u64, [f64; 3], f64)> = Vec::new();
+        sim.rm
+            .for_each_agent(|_, a| state.push((a.uid(), a.position().0, a.diameter())));
+        state.sort_by_key(|e| e.0);
+        state
+    };
+    let grid = run(EnvironmentKind::UniformGrid);
+    let kd = run(EnvironmentKind::KdTree);
+    let oct = run(EnvironmentKind::Octree);
+    assert_eq!(grid, kd);
+    assert_eq!(grid, oct);
+}
+
+#[test]
+fn property_copy_context_sees_previous_iteration() {
+    // In copy mode, neighbor reads must observe iteration i-1 values:
+    // two mutually-watching agents that copy each other's diameter
+    // stay in lockstep (swap), never collapse to one value.
+    let mut param = Param::default();
+    param.execution_context = ExecutionContextMode::Copy;
+    param.interaction_radius = 10.0;
+    let mut sim = Simulation::new(param);
+    let watch = FnBehavior::new("copy_neighbor_diameter", |a, ctx| {
+        let mut nd = None;
+        ctx.for_each_neighbor(10.0, |_h, nb, _| nd = Some(nb.diameter()));
+        if let Some(d) = nd {
+            a.set_diameter(d);
+        }
+    });
+    for (x, d) in [(0.0, 10.0), (5.0, 20.0)] {
+        let mut a = SphericalAgent::with_diameter(Real3::new(x, 0.0, 0.0), d);
+        a.base.behaviors.push(watch.clone_behavior());
+        sim.add_agent(Box::new(a));
+    }
+    sim.remove_agent_op("mechanical_forces");
+    for step in 0..6 {
+        sim.step();
+        let mut ds: Vec<f64> = Vec::new();
+        sim.rm.for_each_agent(|_, a| ds.push(a.diameter()));
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ds, vec![10.0, 20.0], "step {step}: diameters must swap, not merge");
+    }
+}
+
+#[test]
+fn static_detection_preserves_dynamics() {
+    // §5.5 safety: enabling static detection must not change where
+    // agents end up (it only skips provably-zero force computations).
+    let run = |detect: bool| {
+        let mut param = Param::default();
+        param.seed = 5;
+        param.detect_static_agents = detect;
+        let mut sim = models::cell_sorting::build(
+            param,
+            &models::cell_sorting::CellSortingParams {
+                num_cells: 200,
+                ..Default::default()
+            },
+        );
+        sim.simulate(20);
+        let mut state: Vec<(u64, [f64; 3])> = Vec::new();
+        sim.rm.for_each_agent(|_, a| state.push((a.uid(), a.position().0)));
+        state.sort_by_key(|e| e.0);
+        state
+    };
+    let with = run(true);
+    let without = run(false);
+    assert_eq!(with.len(), without.len());
+    for (a, b) in with.iter().zip(without.iter()) {
+        assert_eq!(a.0, b.0);
+        for c in 0..3 {
+            assert!(
+                (a.1[c] - b.1[c]).abs() < 1e-9,
+                "uid {} diverged with static detection",
+                a.0
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- three-layer
+
+#[test]
+fn pjrt_backend_runs_full_model_when_artifacts_present() {
+    let dir = teraagent::runtime::default_artifacts_dir();
+    if !std::path::Path::new(&dir).join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut param = Param::default();
+    param.diffusion_backend = DiffusionBackend::Pjrt;
+    param.artifacts_dir = dir;
+    let mut sim = models::soma_clustering::build(
+        param,
+        &models::soma_clustering::SomaClusteringParams {
+            num_cells: 100,
+            resolution: 16,
+            space_length: 150.0,
+            diffusion_coef: 3.0,
+            ..Default::default()
+        },
+    );
+    sim.simulate(5);
+    assert!(sim.substances.get(0).total() > 0.0, "secretion + kernel steps ran");
+}
+
+// ----------------------------------------------------------------- models
+
+#[test]
+fn all_named_models_build_and_step() {
+    for name in [
+        "cell_growth",
+        "soma_clustering",
+        "epidemiology",
+        "spheroid",
+        "pyramidal",
+        "cell_sorting",
+    ] {
+        let mut param = Param::default();
+        param.seed = 17;
+        let mut sim = models::build_named(name, param).expect(name);
+        let n0 = sim.num_agents();
+        sim.simulate(3);
+        assert!(sim.iteration == 3, "{name}");
+        assert!(sim.num_agents() > 0, "{name}: population died instantly (n0={n0})");
+    }
+    assert!(models::build_named("nope", Param::default()).is_none());
+}
+
+#[test]
+fn division_heavy_run_keeps_uid_map_consistent() {
+    let mut param = Param::default();
+    param.seed = 2;
+    param.num_threads = 2;
+    param.simulation_time_step = 0.1;
+    let mut sim = models::cell_growth::build(
+        param,
+        &models::cell_growth::CellGrowthParams {
+            cells_per_dim: 4,
+            growth_rate: 500.0,
+            ..Default::default()
+        },
+    );
+    sim.simulate(40);
+    assert!(sim.agents_added > 0);
+    let mut seen = std::collections::HashSet::new();
+    sim.rm.for_each_agent(|h, a| {
+        assert!(seen.insert(a.uid()), "duplicate uid");
+        assert_eq!(sim.rm.lookup(a.uid()), Some(h));
+    });
+}
+
+#[test]
+fn spheroid_death_and_growth_balance() {
+    let mut param = Param::default();
+    param.seed = 9;
+    let p = models::spheroid::SpheroidParams {
+        initial_cells: 300,
+        minimum_age_h: 10,
+        ..models::spheroid::SpheroidParams::for_seeding(2000)
+    };
+    let mut sim = models::spheroid::build(param, &p);
+    sim.simulate(60);
+    assert!(sim.agents_added > 0, "divisions happened");
+    assert!(sim.agents_removed > 0, "apoptosis happened");
+    assert_eq!(
+        sim.num_agents(),
+        300 + sim.agents_added as usize - sim.agents_removed as usize
+    );
+}
+
+// -------------------------------------------------------------- distributed
+
+#[test]
+fn distributed_spheroid_with_divisions_conserves_population_balance() {
+    use teraagent::distributed::engine::DistributedEngine;
+    let model = models::spheroid::SpheroidParams {
+        initial_cells: 200,
+        ..models::spheroid::SpheroidParams::for_seeding(2000)
+    };
+    let builder = move |p: Param| models::spheroid::build(p, &model);
+    let mut param = Param::default();
+    param.seed = 33;
+    param.execution_context = ExecutionContextMode::Copy;
+    let mut engine = DistributedEngine::new(&builder, param, 2, 1);
+    engine.simulate(30);
+    let added: u64 = engine.workers.iter().map(|w| w.sim.agents_added).sum();
+    let removed: u64 = engine.workers.iter().map(|w| w.sim.agents_removed).sum();
+    // ghosts inflate the raw added/removed counters; owned agents are
+    // what must stay consistent
+    assert!(engine.num_agents() > 0);
+    assert!(added >= removed || engine.num_agents() <= 200);
+    // no uid appears on two ranks as an owned agent
+    let mut owned = std::collections::HashSet::new();
+    for w in &engine.workers {
+        w.sim.rm.for_each_agent(|_, a| {
+            if !a.base().is_ghost {
+                assert!(owned.insert(a.uid()), "uid {} owned twice", a.uid());
+            }
+        });
+    }
+}

@@ -1,0 +1,387 @@
+//! Seeded fuzz / property tests over engine invariants (the proptest
+//! substitution of DESIGN.md §3). Each case derives its inputs from a
+//! seed so failures reproduce exactly; assertions name the seed.
+
+use teraagent::core::agent::{Agent, AgentHandle, SphericalAgent};
+use teraagent::core::param::Param;
+use teraagent::core::parallel::ThreadPool;
+use teraagent::core::random::Rng;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::distributed::delta::{rle_decode, rle_encode, DeltaCodec};
+use teraagent::distributed::serialize::{reflection, tailored, AgentRegistry};
+use teraagent::env::{brute_force_neighbors, Environment, UniformGridEnvironment};
+use teraagent::mem::morton::{for_each_box_morton_order, morton_decode, morton_encode};
+use teraagent::Real3;
+
+fn cases(n: u64, base: u64, f: impl Fn(u64)) {
+    for i in 0..n {
+        f(base.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i));
+    }
+}
+
+// ------------------------------------------------------------ RM storms
+
+#[test]
+fn fuzz_resource_manager_add_remove_storm() {
+    cases(8, 101, |seed| {
+        let mut rng = Rng::new(seed);
+        let pool = ThreadPool::new(1 + (seed % 3) as usize);
+        let mut rm = ResourceManager::new(1 + (seed % 4) as usize);
+        let mut live: Vec<u64> = Vec::new();
+        for round in 0..20 {
+            // add a random batch
+            let n_add = rng.uniform_usize(40);
+            for _ in 0..n_add {
+                let h = rm.add_agent(Box::new(SphericalAgent::new(rng.uniform3(0.0, 100.0))));
+                live.push(rm.get(h).uid());
+            }
+            // remove a random subset
+            let n_rm = rng.uniform_usize(live.len() + 1);
+            let mut to_remove = Vec::new();
+            for _ in 0..n_rm {
+                let idx = rng.uniform_usize(live.len());
+                to_remove.push(live.swap_remove(idx));
+            }
+            let removed = rm.commit_removals(to_remove.clone(), &pool);
+            assert_eq!(removed.len(), to_remove.len(), "seed={seed} round={round}");
+            assert_eq!(rm.num_agents(), live.len(), "seed={seed} round={round}");
+            // every live uid resolvable, every removed one gone
+            for uid in &live {
+                assert!(rm.lookup(*uid).is_some(), "seed={seed} lost uid {uid}");
+            }
+            for uid in &to_remove {
+                assert!(rm.lookup(*uid).is_none(), "seed={seed} zombie uid {uid}");
+            }
+            // handle table dense and consistent
+            rm.for_each_agent(|h, a| {
+                assert_eq!(rm.lookup(a.uid()), Some(h), "seed={seed}");
+            });
+        }
+    });
+}
+
+#[test]
+fn fuzz_reorder_is_a_permutation() {
+    cases(6, 202, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut rm = ResourceManager::new(1);
+        let n = 5 + rng.uniform_usize(50);
+        for i in 0..n {
+            rm.add_agent(Box::new(SphericalAgent::new(Real3::new(i as f64, 0.0, 0.0))));
+        }
+        // random permutation
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = rng.uniform_usize(i + 1);
+            perm.swap(i, j);
+        }
+        let mut before: Vec<u64> = Vec::new();
+        rm.for_each_agent(|_, a| before.push(a.uid()));
+        rm.reorder_domain(0, &perm);
+        let mut after: Vec<u64> = Vec::new();
+        rm.for_each_agent(|_, a| after.push(a.uid()));
+        let mut b = before.clone();
+        let mut a = after.clone();
+        b.sort_unstable();
+        a.sort_unstable();
+        assert_eq!(a, b, "seed={seed}: reorder must be a bijection");
+        for (i, &src) in perm.iter().enumerate() {
+            assert_eq!(after[i], before[src as usize], "seed={seed}");
+        }
+    });
+}
+
+// ----------------------------------------------------------- environments
+
+#[test]
+fn fuzz_grid_with_agent_motion_between_updates() {
+    // grid answers must track arbitrary motion across updates
+    cases(6, 303, |seed| {
+        let mut rng = Rng::new(seed);
+        let pool = ThreadPool::new(2);
+        let mut rm = ResourceManager::new(2);
+        for _ in 0..150 {
+            rm.add_agent(Box::new(SphericalAgent::new(rng.uniform3(0.0, 60.0))));
+        }
+        let mut env = UniformGridEnvironment::new(Some(8.0));
+        for _ in 0..5 {
+            // move everyone randomly
+            rm.for_each_agent_mut(|_, a| {
+                let p = a.position();
+                let d = Real3::new(
+                    (p.x() * 13.7).sin() * 5.0,
+                    (p.y() * 7.3).cos() * 5.0,
+                    (p.z() * 3.1).sin() * 5.0,
+                );
+                a.set_position(p + d);
+            });
+            env.update(&rm, &pool);
+            let q = rng.uniform3(0.0, 60.0);
+            let radius = rng.uniform(2.0, 20.0);
+            let expected = brute_force_neighbors(&rm, q, radius);
+            let mut got = Vec::new();
+            env.for_each_neighbor(q, radius, &rm, &mut |h, _, d2| got.push((h, d2)));
+            got.sort_by_key(|(h, _)| *h);
+            assert_eq!(got.len(), expected.len(), "seed={seed}");
+        }
+    });
+}
+
+// ----------------------------------------------------------------- morton
+
+#[test]
+fn fuzz_morton_roundtrip_and_order() {
+    cases(200, 404, |seed| {
+        let mut rng = Rng::new(seed);
+        let x = rng.next_u64() & 0x1F_FFFF;
+        let y = rng.next_u64() & 0x1F_FFFF;
+        let z = rng.next_u64() & 0x1F_FFFF;
+        assert_eq!(morton_decode(morton_encode(x, y, z)), (x, y, z));
+    });
+}
+
+#[test]
+fn fuzz_morton_walk_random_dims() {
+    cases(10, 505, |seed| {
+        let mut rng = Rng::new(seed);
+        let dims = [
+            1 + rng.uniform_usize(9),
+            1 + rng.uniform_usize(9),
+            1 + rng.uniform_usize(9),
+        ];
+        let mut count = 0;
+        let mut last_code = None;
+        for_each_box_morton_order(dims, &mut |c| {
+            count += 1;
+            let code = morton_encode(c[0] as u64, c[1] as u64, c[2] as u64);
+            if let Some(prev) = last_code {
+                assert!(code > prev, "seed={seed} dims={dims:?}");
+            }
+            last_code = Some(code);
+        });
+        assert_eq!(count, dims[0] * dims[1] * dims[2], "seed={seed}");
+    });
+}
+
+// ------------------------------------------------------------ serializers
+
+#[test]
+fn fuzz_serializer_roundtrip_random_agents() {
+    AgentRegistry::register_builtins();
+    cases(10, 606, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut agents: Vec<Box<dyn Agent>> = Vec::new();
+        for i in 0..30 {
+            let mut a: Box<dyn Agent> = match rng.uniform_usize(4) {
+                0 => Box::new(SphericalAgent::with_diameter(
+                    rng.uniform3(-1e6, 1e6),
+                    rng.uniform(1e-6, 1e3),
+                )),
+                1 => Box::new(teraagent::models::epidemiology::Person::new(
+                    rng.uniform3(-1e3, 1e3),
+                    match rng.uniform_usize(3) {
+                        0 => teraagent::models::epidemiology::State::Susceptible,
+                        1 => teraagent::models::epidemiology::State::Infected,
+                        _ => teraagent::models::epidemiology::State::Recovered,
+                    },
+                )),
+                2 => {
+                    let mut n = teraagent::neuro::NeuriteElement::for_test(
+                        rng.uniform3(-100.0, 100.0),
+                        rng.uniform3(-100.0, 100.0),
+                        rng.uniform(0.1, 5.0),
+                    );
+                    n.daughters = (0..rng.uniform_usize(5)).map(|_| rng.next_u64()).collect();
+                    n.is_apical = rng.bernoulli(0.5);
+                    Box::new(n)
+                }
+                _ => Box::new(teraagent::models::spheroid::TumorCell::new(
+                    rng.uniform3(-100.0, 100.0),
+                    rng.uniform(1.0, 20.0),
+                )),
+            };
+            a.base_mut().uid = i * 7 + 1;
+            a.base_mut().moved_last = rng.bernoulli(0.5);
+            agents.push(a);
+        }
+        for (label, ser, de) in [
+            (
+                "tailored",
+                tailored::serialize_batch(agents.iter().map(|a| &**a)),
+                tailored::deserialize_batch as fn(&[u8]) -> Result<Vec<Box<dyn Agent>>, String>,
+            ),
+            (
+                "reflection",
+                reflection::serialize_batch(agents.iter().map(|a| &**a)),
+                reflection::deserialize_batch,
+            ),
+        ] {
+            let back = de(&ser).unwrap_or_else(|e| panic!("seed={seed} {label}: {e}"));
+            assert_eq!(back.len(), agents.len(), "seed={seed} {label}");
+            for (orig, got) in agents.iter().zip(back.iter()) {
+                assert_eq!(orig.uid(), got.uid(), "seed={seed} {label}");
+                assert_eq!(orig.type_tag(), got.type_tag(), "seed={seed} {label}");
+                assert_eq!(orig.position(), got.position(), "seed={seed} {label}");
+                let (mut e1, mut e2) = (Vec::new(), Vec::new());
+                orig.serialize_extra(&mut e1);
+                got.serialize_extra(&mut e2);
+                assert_eq!(e1, e2, "seed={seed} {label}");
+            }
+        }
+    });
+}
+
+#[test]
+fn fuzz_tailored_truncation_never_panics() {
+    AgentRegistry::register_builtins();
+    let mut agents: Vec<Box<dyn Agent>> = Vec::new();
+    for i in 0..5 {
+        let mut a = SphericalAgent::new(Real3::new(i as f64, 0.0, 0.0));
+        a.base.uid = i + 1;
+        agents.push(Box::new(a));
+    }
+    let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+    for cut in 0..buf.len() {
+        // every truncation must return Err, not panic
+        let _ = tailored::deserialize_batch(&buf[..cut]);
+    }
+}
+
+// ------------------------------------------------------------------ delta
+
+#[test]
+fn fuzz_rle_roundtrip_random_buffers() {
+    cases(50, 707, |seed| {
+        let mut rng = Rng::new(seed);
+        let len = rng.uniform_usize(400);
+        let data: Vec<u8> = (0..len)
+            .map(|_| {
+                if rng.bernoulli(0.6) {
+                    0
+                } else {
+                    (rng.next_u64() & 0xFF) as u8
+                }
+            })
+            .collect();
+        let enc = rle_encode(&data);
+        assert_eq!(rle_decode(&enc).unwrap(), data, "seed={seed}");
+    });
+}
+
+#[test]
+fn fuzz_delta_codec_random_streams() {
+    cases(10, 808, |seed| {
+        let mut rng = Rng::new(seed);
+        let mut tx = DeltaCodec::new();
+        let mut rx = DeltaCodec::new();
+        let mut states: std::collections::HashMap<u64, Vec<u8>> = Default::default();
+        for _round in 0..15 {
+            let uid = 1 + rng.uniform_usize(6) as u64;
+            let record = states
+                .entry(uid)
+                .or_insert_with(|| (0..48).map(|_| (rng.next_u64() & 0xFF) as u8).collect());
+            // mutate a few bytes (iterative-simulation pattern)
+            for _ in 0..rng.uniform_usize(4) {
+                let idx = rng.uniform_usize(record.len());
+                record[idx] = (rng.next_u64() & 0xFF) as u8;
+            }
+            let record = record.clone();
+            let mut wire = Vec::new();
+            tx.encode(uid, &record, &mut wire);
+            let (ruid, rrec, used) = rx.decode(&wire).unwrap();
+            assert_eq!((ruid, rrec.as_slice(), used), (uid, record.as_slice(), wire.len()),
+                "seed={seed}");
+        }
+    });
+}
+
+// ------------------------------------------------------------- allocator
+
+#[test]
+fn fuzz_pool_allocator_random_sizes() {
+    use std::alloc::Layout;
+    use teraagent::mem::allocator::PoolAlloc;
+    cases(5, 909, |seed| {
+        let pool = PoolAlloc::new();
+        let mut rng = Rng::new(seed);
+        let mut held: Vec<(*mut u8, Layout, u8)> = Vec::new();
+        for i in 0..5000u64 {
+            if rng.bernoulli(0.6) || held.is_empty() {
+                let size = 1 + rng.uniform_usize(512);
+                let align = [1usize, 2, 4, 8, 16][rng.uniform_usize(5)];
+                let layout = Layout::from_size_align(size, align).unwrap();
+                if !PoolAlloc::is_pooled(layout) {
+                    continue;
+                }
+                let p = unsafe { pool.alloc(layout) };
+                assert!(!p.is_null(), "seed={seed}");
+                let tag = (i & 0xFF) as u8;
+                unsafe { std::ptr::write_bytes(p, tag, size) };
+                held.push((p, layout, tag));
+            } else {
+                let idx = rng.uniform_usize(held.len());
+                let (p, layout, tag) = held.swap_remove(idx);
+                // contents must be intact (no aliasing between blocks)
+                for off in 0..layout.size() {
+                    assert_eq!(unsafe { *p.add(off) }, tag, "seed={seed} corruption");
+                }
+                unsafe { pool.dealloc(p, layout) };
+            }
+        }
+        for (p, layout, _) in held {
+            unsafe { pool.dealloc(p, layout) };
+        }
+    });
+}
+
+// ------------------------------------------------------------------ param
+
+#[test]
+fn fuzz_param_kv_never_panics() {
+    cases(40, 1010, |seed| {
+        let mut rng = Rng::new(seed);
+        let keys = [
+            "seed", "num_threads", "bound_space", "environment", "execution_order",
+            "execution_context", "sort_frequency", "max_bound", "nonsense.key",
+        ];
+        let values = ["42", "-1", "abc", "", "true", "row", "copy", "toroidal", "1e9"];
+        let mut p = Param::default();
+        let k = keys[rng.uniform_usize(keys.len())];
+        let v = values[rng.uniform_usize(values.len())];
+        let _ = p.apply_kv(k, v); // must never panic, Err is fine
+    });
+}
+
+// --------------------------------------------------------------- end2end
+
+#[test]
+fn fuzz_small_simulations_never_lose_uid_consistency() {
+    cases(4, 1111, |seed| {
+        let mut param = Param::default();
+        param.seed = seed;
+        param.num_threads = 1 + (seed % 3) as usize;
+        param.numa_domains = 1 + (seed % 2) as usize;
+        param.sort_frequency = seed % 3;
+        param.simulation_time_step = 0.1;
+        let mut sim = teraagent::models::spheroid::build(
+            param,
+            &teraagent::models::spheroid::SpheroidParams {
+                initial_cells: 100,
+                minimum_age_h: 5,
+                ..teraagent::models::spheroid::SpheroidParams::for_seeding(2000)
+            },
+        );
+        sim.simulate(25);
+        let mut seen = std::collections::HashSet::new();
+        sim.rm.for_each_agent(|h, a| {
+            assert!(seen.insert(a.uid()), "seed={seed} duplicate uid");
+            assert_eq!(sim.rm.lookup(a.uid()), Some(h), "seed={seed}");
+            let _: AgentHandle = h;
+        });
+        assert_eq!(
+            sim.num_agents() as i64,
+            100 + sim.agents_added as i64 - sim.agents_removed as i64,
+            "seed={seed} population bookkeeping"
+        );
+    });
+}
