@@ -4,16 +4,43 @@
 //! everything-off standard implementation (which on their baseline
 //! includes the serial engine); here the "all off" configuration is
 //! the engine with every optional optimization disabled.
+//!
+//! Reported values are **per-iteration medians** — the number tracked
+//! across PRs in EXPERIMENTS.md. `TA_BENCH_SCALE` shrinks the
+//! workloads for CI smoke runs and `TA_BENCH_JSON` writes the rows as
+//! a JSON report (BENCH_PR*.json).
 
 use teraagent::benchkit::*;
+use teraagent::core::agent::{Agent, SphericalAgent};
+use teraagent::core::model_initializer::create_agents_random;
 use teraagent::core::param::Param;
 use teraagent::models::*;
+use teraagent::{Real3, Simulation};
 
 struct Config {
     label: &'static str,
     env: teraagent::core::param::EnvironmentKind,
     sort: u64,
     detect_static: bool,
+}
+
+/// ≥50k plain spheres under mechanical forces only — the §5.4
+/// memory-layout acceptance workload: every pair takes the SoA
+/// sphere-sphere fast path.
+fn build_spheres_50k(mut engine_param: Param) -> Simulation {
+    let n = scaled(55_000, 500);
+    // keep the contact density constant under TA_BENCH_SCALE
+    let space = 400.0 * (n as f64 / 55_000.0).cbrt();
+    engine_param.min_bound = 0.0;
+    engine_param.max_bound = space;
+    engine_param.interaction_radius = 15.0;
+    engine_param.simulation_time_step = 0.01;
+    let mut sim = Simulation::new(engine_param);
+    let mut factory = |pos: Real3| -> Box<dyn Agent> {
+        Box::new(SphericalAgent::with_diameter(pos, 10.0))
+    };
+    create_agents_random(&mut sim, 0.0, space, n, &mut factory);
+    sim
 }
 
 fn main() {
@@ -25,13 +52,15 @@ fn main() {
         Config { label: "+ morton sort+balance", env: UniformGrid, sort: 10, detect_static: false },
         Config { label: "+ static-agent skip", env: UniformGrid, sort: 10, detect_static: true },
     ];
+    let mut json = JsonReport::new("fig5_09_opt_overview");
 
     for (model_name, builder) in [
         (
             "cell growth & division",
             Box::new(|p: Param| {
                 cell_growth::build(p, &cell_growth::CellGrowthParams {
-                    cells_per_dim: 12,
+                    // 12^3 = 1728 initial cells at scale 1
+                    cells_per_dim: ((1728.0 * bench_scale()).cbrt().round() as usize).max(3),
                     ..Default::default()
                 })
             }) as Box<dyn Fn(Param) -> teraagent::Simulation>,
@@ -40,7 +69,7 @@ fn main() {
             "cell sorting",
             Box::new(|p: Param| {
                 cell_sorting::build(p, &cell_sorting::CellSortingParams {
-                    num_cells: 8000,
+                    num_cells: scaled(8000, 100),
                     space_length: 220.0,
                     ..Default::default()
                 })
@@ -52,18 +81,22 @@ fn main() {
                 epidemiology::build(
                     p,
                     &epidemiology::SirParams {
-                        initial_susceptible: 20_000,
-                        initial_infected: 200,
+                        initial_susceptible: scaled(20_000, 200),
+                        initial_infected: scaled(200, 2),
                         space_length: 215.0,
                         ..epidemiology::SirParams::measles()
                     },
                 )
             }),
         ),
+        (
+            "55k spheres (SoA acceptance)",
+            Box::new(build_spheres_50k),
+        ),
     ] {
         let mut table = BenchTable::new(
-            &format!("Fig 5.9 ({model_name}): progressive optimizations, 10 iterations"),
-            &["configuration", "runtime", "speedup vs reference", "ΔRSS"],
+            &format!("Fig 5.9 ({model_name}): progressive optimizations, per iteration"),
+            &["configuration", "time/iteration", "speedup vs reference", "ΔRSS"],
         );
         let mut reference = None;
         for cfg in &configs {
@@ -74,18 +107,21 @@ fn main() {
             let rss0 = rss_bytes();
             let mut sim = builder(param);
             sim.simulate(2);
-            let samples = time_reps(2, 0, || sim.simulate(5));
-            let per = median(samples);
-            let base = *reference.get_or_insert(per);
+            let iters = 5u64;
+            let samples = time_reps(3, 0, || sim.simulate(iters));
+            let per_iter = median(samples).div_f64(iters as f64);
+            let base = *reference.get_or_insert(per_iter);
             table.row(&[
                 cfg.label.into(),
-                fmt_duration(per),
-                format!("{:.2}x", base.as_secs_f64() / per.as_secs_f64()),
+                fmt_duration(per_iter),
+                format!("{:.2}x", base.as_secs_f64() / per_iter.as_secs_f64()),
                 fmt_bytes(rss_bytes().saturating_sub(rss0)),
             ]);
+            json.row(model_name, cfg.label, per_iter.as_secs_f64());
         }
         table.print();
     }
+    json.write_if_requested();
     println!(
         "paper: 33.1x-524x (median 159x) vs the all-off standard implementation on 72\n\
          cores; single-core shape: each optimization is neutral-or-better per model,\n\

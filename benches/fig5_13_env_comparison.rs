@@ -48,7 +48,7 @@ fn main() {
             let mut found = 0u64;
             let search_time = {
                 let t = std::time::Instant::now();
-                for &h in &handles {
+                for &h in handles {
                     let pos = rm.get(h).position();
                     env.for_each_neighbor(pos, 15.0, &rm, &mut |_, _, _| found += 1);
                 }

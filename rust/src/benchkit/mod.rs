@@ -141,6 +141,87 @@ pub fn print_env_banner(bench: &str) {
 pub const CONTAINER_NOTE: &str =
     "container: 1 physical core; paper testbed: 72 cores/4 NUMA domains — compare shapes, not absolutes";
 
+/// Workload multiplier for bench targets: `TA_BENCH_SCALE` env var,
+/// default 1.0. CI smoke runs set a tiny value (e.g. 0.02) so a bench
+/// finishes in seconds while exercising the full code path.
+pub fn bench_scale() -> f64 {
+    std::env::var("TA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|v: &f64| *v > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Scale an agent count by [`bench_scale`], keeping at least `min`.
+pub fn scaled(n: usize, min: usize) -> usize {
+    ((n as f64 * bench_scale()) as usize).max(min)
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Machine-readable bench report: rows of
+/// `(model, configuration, seconds_per_iteration)`; written as JSON to
+/// the path in `TA_BENCH_JSON` (if set) so CI can archive the perf
+/// trajectory (BENCH_PR*.json — see EXPERIMENTS.md).
+pub struct JsonReport {
+    bench: String,
+    rows: Vec<(String, String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, model: &str, config: &str, seconds_per_iteration: f64) {
+        self.rows
+            .push((model.to_string(), config.to_string(), seconds_per_iteration));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str(&format!("  \"bench_scale\": {},\n", bench_scale()));
+        out.push_str("  \"rows\": [\n");
+        for (i, (model, config, secs)) in self.rows.iter().enumerate() {
+            let comma = if i + 1 < self.rows.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"model\": \"{}\", \"config\": \"{}\", \"seconds_per_iteration\": {:e}}}{comma}\n",
+                json_escape(model),
+                json_escape(config),
+                secs
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the report to `$TA_BENCH_JSON` if set; returns the path
+    /// written to.
+    pub fn write_if_requested(&self) -> Option<String> {
+        let path = std::env::var("TA_BENCH_JSON").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => {
+                println!("json report -> {path}");
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("[benchkit] writing {path}: {e}");
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +259,24 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = BenchTable::new("demo", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = JsonReport::new("demo \"bench\"");
+        r.row("model a", "cfg", 1.25e-3);
+        r.row("model b", "cfg2", 2.0);
+        let j = r.to_json();
+        assert!(j.contains("\"bench\": \"demo \\\"bench\\\"\""));
+        assert!(j.contains("seconds_per_iteration"));
+        assert!(j.contains("model b"));
+        // rows separated by a comma, last row without
+        assert_eq!(j.matches("seconds_per_iteration").count(), 2);
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn scaled_respects_floor() {
+        assert!(scaled(1000, 10) >= 10);
     }
 }

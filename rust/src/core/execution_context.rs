@@ -76,6 +76,7 @@ pub struct AgentContext<'a, 'q> {
     pub queues: &'q mut ThreadQueues,
     /// Deterministic RNG stream for (seed, agent, iteration).
     pub rng: Rng,
+    cur_handle: AgentHandle,
     cur_uid: AgentUid,
     cur_pos: Real3,
     seq: u32,
@@ -85,6 +86,7 @@ impl<'a, 'q> AgentContext<'a, 'q> {
     pub fn new(
         shared: &'a IterationShared<'a>,
         queues: &'q mut ThreadQueues,
+        cur_handle: AgentHandle,
         cur_uid: AgentUid,
         cur_pos: Real3,
     ) -> Self {
@@ -93,6 +95,7 @@ impl<'a, 'q> AgentContext<'a, 'q> {
             shared,
             queues,
             rng,
+            cur_handle,
             cur_uid,
             cur_pos,
             seq: 0,
@@ -119,6 +122,18 @@ impl<'a, 'q> AgentContext<'a, 'q> {
         self.cur_uid
     }
 
+    /// Storage handle of the current agent (SoA column index).
+    #[inline]
+    pub fn current_handle(&self) -> AgentHandle {
+        self.cur_handle
+    }
+
+    /// The resource manager (for SoA column reads by handle).
+    #[inline]
+    pub fn rm(&self) -> &'a ResourceManager {
+        self.shared.rm
+    }
+
     // --- neighbor queries -------------------------------------------------
 
     /// Visit every agent within `radius` of the current agent (itself
@@ -136,6 +151,23 @@ impl<'a, 'q> AgentContext<'a, 'q> {
             &mut |h, agent, dist2| {
                 if agent.uid() != uid {
                     f(h, agent, dist2);
+                }
+            },
+        );
+    }
+
+    /// Handle-only neighbor visit (self excluded): no `&dyn Agent` is
+    /// materialized — callers read hot fields from the SoA columns via
+    /// [`AgentContext::rm`]. This is the mechanical-forces fast path.
+    pub fn for_each_neighbor_handle(&self, radius: Real, mut f: impl FnMut(AgentHandle, Real)) {
+        let me = self.cur_handle;
+        self.shared.env.for_each_neighbor_handles(
+            self.cur_pos,
+            radius,
+            self.shared.rm,
+            &mut |h, dist2| {
+                if h != me {
+                    f(h, dist2);
                 }
             },
         );
@@ -225,7 +257,6 @@ impl<'a, 'q> AgentContext<'a, 'q> {
 pub fn commit_queues(
     queues: Vec<ThreadQueues>,
     rm: &mut ResourceManager,
-    pool: &crate::core::parallel::ThreadPool,
     iteration: u64,
 ) -> (Vec<AgentHandle>, Vec<Box<dyn Agent>>) {
     let mut new_agents = Vec::new();
@@ -263,7 +294,7 @@ pub fn commit_queues(
     let added = rm.commit_additions(boxes);
 
     // 3. removals
-    let removed = rm.commit_removals(removals, pool);
+    let removed = rm.commit_removals(removals);
     (added, removed)
 }
 
@@ -271,7 +302,6 @@ pub fn commit_queues(
 mod tests {
     use super::*;
     use crate::core::agent::SphericalAgent;
-    use crate::core::parallel::ThreadPool;
 
     fn setup_rm(n: usize) -> ResourceManager {
         let mut rm = ResourceManager::new(1);
@@ -283,7 +313,6 @@ mod tests {
 
     #[test]
     fn commit_assigns_deterministic_uids() {
-        let pool = ThreadPool::new(1);
         // two "threads" creating agents in interleaved order
         let mk = |creator: AgentUid, seq: u32| PendingNewAgent {
             creator_uid: creator,
@@ -297,7 +326,7 @@ mod tests {
             for (c, s) in order {
                 q1.new_agents.push(mk(c, s));
             }
-            let (added, _) = commit_queues(vec![q1], &mut rm, &pool, 0);
+            let (added, _) = commit_queues(vec![q1], &mut rm, 0);
             added.iter().map(|&h| rm.get(h).uid()).collect()
         };
         // same pendings in different arrival order -> same uid mapping
@@ -317,7 +346,6 @@ mod tests {
 
     #[test]
     fn deferred_updates_applied_in_order() {
-        let pool = ThreadPool::new(1);
         let mut rm = setup_rm(1);
         let uid = rm.get(AgentHandle::new(0, 0)).uid();
         let mut q = ThreadQueues::default();
@@ -332,19 +360,18 @@ mod tests {
             source: 2,
             action: Box::new(|a| a.set_diameter(22.0)),
         });
-        commit_queues(vec![q], &mut rm, &pool, 0);
+        commit_queues(vec![q], &mut rm, 0);
         // source 2 applies first, then source 9 overwrites
         assert_eq!(rm.get_by_uid(uid).unwrap().diameter(), 99.0);
     }
 
     #[test]
     fn deferred_to_removed_agent_is_dropped() {
-        let pool = ThreadPool::new(1);
         let mut rm = setup_rm(2);
         let uid0 = rm.get(AgentHandle::new(0, 0)).uid();
         let mut q = ThreadQueues::default();
         q.removals.push(uid0);
-        let (_, removed) = commit_queues(vec![q], &mut rm, &pool, 0);
+        let (_, removed) = commit_queues(vec![q], &mut rm, 0);
         assert_eq!(removed.len(), 1);
         let mut q2 = ThreadQueues::default();
         q2.deferred.push(DeferredUpdate {
@@ -352,12 +379,11 @@ mod tests {
             source: 1,
             action: Box::new(|_| panic!("must not run")),
         });
-        commit_queues(vec![q2], &mut rm, &pool, 1);
+        commit_queues(vec![q2], &mut rm, 1);
     }
 
     #[test]
     fn removal_and_addition_same_barrier() {
-        let pool = ThreadPool::new(2);
         let mut rm = setup_rm(5);
         let uid2 = 3; // third added agent
         let mut q = ThreadQueues::default();
@@ -368,7 +394,7 @@ mod tests {
             kind: NewAgentEventKind::CellDivision,
             agent: Box::new(SphericalAgent::new(Real3::new(50.0, 0.0, 0.0))),
         });
-        let (added, removed) = commit_queues(vec![q], &mut rm, &pool, 0);
+        let (added, removed) = commit_queues(vec![q], &mut rm, 0);
         assert_eq!(added.len(), 1);
         assert_eq!(removed.len(), 1);
         assert_eq!(rm.num_agents(), 5);

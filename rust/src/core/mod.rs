@@ -16,4 +16,5 @@ pub mod param;
 pub mod random;
 pub mod resource_manager;
 pub mod scheduler;
+pub mod soa;
 pub mod simulation;

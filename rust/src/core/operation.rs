@@ -112,14 +112,21 @@ impl AgentOperation for MechanicalForcesOp {
     fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
         let pos = agent.position();
         let radius = self.search_radius.max(agent.interaction_diameter());
+        let rm = ctx.rm();
 
         // §5.5: skip the force math when neither this agent nor any
         // neighbor moved last iteration — the resulting force cannot
-        // move the agent.
+        // move the agent. Checked against the SoA moved bitset: a fully
+        // static population bails without any neighbor scan, otherwise
+        // the scan reads one bit per neighbor handle (no box chase).
         if self.detect_static && !agent.base().moved_last {
+            if !rm.moved_any() {
+                agent.base_mut().moved_now = false;
+                return;
+            }
             let mut any_moved = false;
-            ctx.for_each_neighbor(radius, |_h, nb, _d2| {
-                any_moved |= nb.base().moved_last;
+            ctx.for_each_neighbor_handle(radius, |h, _d2| {
+                any_moved |= rm.moved_last_of(h);
             });
             if !any_moved {
                 agent.base_mut().moved_now = false;
@@ -135,17 +142,38 @@ impl AgentOperation for MechanicalForcesOp {
         // (Fig 6.5). Contributions live on the stack up to 32 contacts
         // (the dense-model common case) — no allocation in the hot loop
         // (§Perf iteration 3).
+        //
+        // Sphere-sphere pairs stream straight from the SoA columns
+        // (§5.4): position, radius and UID come from contiguous arrays
+        // and the force uses `sphere_sphere_fast`; only mixed-shape
+        // pairs or custom forces without a fast path dereference the
+        // neighbor box.
+        let self_sphere = matches!(agent.shape(), crate::core::agent::Shape::Sphere);
+        let self_radius = agent.diameter() / 2.0;
         let mut stack = [(0u64, crate::core::math::Real3::ZERO); 32];
         let mut n_stack = 0usize;
         let mut spill: Vec<(u64, crate::core::math::Real3)> = Vec::new();
-        ctx.for_each_neighbor(radius, |_h, nb, _d2| {
-            let f = self.force.calculate(agent, nb);
+        ctx.for_each_neighbor_handle(radius, |h, _d2| {
+            let fast = if self_sphere && rm.is_sphere_fast(h) {
+                self.force.sphere_sphere_fast(
+                    pos,
+                    self_radius,
+                    rm.position_of(h),
+                    rm.interaction_diameter_of(h) / 2.0,
+                )
+            } else {
+                None
+            };
+            let f = match fast {
+                Some(f) => f,
+                None => self.force.calculate(agent, rm.get(h)),
+            };
             if f != crate::core::math::Real3::ZERO {
                 if n_stack < stack.len() {
-                    stack[n_stack] = (nb.uid(), f);
+                    stack[n_stack] = (rm.uid_of(h), f);
                     n_stack += 1;
                 } else {
-                    spill.push((nb.uid(), f));
+                    spill.push((rm.uid_of(h), f));
                 }
             }
         });

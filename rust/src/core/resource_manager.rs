@@ -1,4 +1,5 @@
-//! ResourceManager — dense agent storage (paper §5.3.1/§5.3.2, Fig 5.1).
+//! ResourceManager — dense agent storage (paper §5.3.1/§5.3.2, Fig 5.1)
+//! with a SoA hot-field mirror (§5.4).
 //!
 //! Agents live in one dense `Vec` per simulated NUMA domain. Dense
 //! storage (no holes) is what makes the uniform grid's array-based
@@ -6,6 +7,32 @@
 //! compact via the paper's swap-with-tail algorithm (Fig 5.1), and both
 //! additions and removals are committed at iteration barriers from
 //! thread-local queues (§5.3.2).
+//!
+//! ## SoA hot-field mirror
+//! Next to each domain's boxed agents sits a [`HotColumns`] attribute
+//! store: contiguous columns of position, interaction diameter, UID,
+//! and the moved/ghost/sphere bitsets. The four hottest loops (grid
+//! build, bounds reduction, force fast path, moved-flag flip) stream
+//! over these columns instead of chasing `Box<dyn Agent>` pointers.
+//! Coherence contract (DESIGN.md §SoA):
+//! * every structural mutation (`add_agent`, `commit_additions`,
+//!   `commit_removals`, `reorder_domain`, `balance_domains`,
+//!   `replace_agent`, `drain_all`) updates the columns in lock step;
+//! * field mutations made by the parallel agent loop are mirrored once
+//!   per iteration by [`ResourceManager::writeback_and_flip`] (the
+//!   scheduler's post-commit barrier pass, which also performs the
+//!   §5.5 moved-flag flip);
+//! * out-of-band `&mut` access (`get_mut`, setup-phase edits between
+//!   `step()` calls) marks the mirror dirty; the scheduler resyncs at
+//!   the top of the next iteration, and `for_each_agent_mut` resyncs
+//!   inline.
+//! During the parallel loop the columns are therefore a *frozen
+//! start-of-iteration snapshot* — exactly what makes neighbor-distance
+//! filtering deterministic under any processing order.
+//!
+//! The handle list (`handles()`) is cached in insertion order and
+//! maintained incrementally, so the scheduler's per-iteration handle
+//! enumeration allocates nothing in the steady state.
 //!
 //! ## Concurrency model
 //! During the parallel agent loop, each agent slot is mutated by
@@ -20,9 +47,17 @@
 //! (scheduler, tests) uphold the single-writer-per-slot invariant.
 
 use crate::core::agent::{Agent, AgentHandle, AgentUid};
+use crate::core::math::Real3;
 use crate::core::parallel::ThreadPool;
+use crate::core::soa::{set_bit_raw, HotColumns};
+use crate::Real;
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
+
+/// Chunk grain of the parallel column writeback. Must be a multiple of
+/// 64 so that every bitset word is written by exactly one chunk (chunk
+/// starts are multiples of the grain).
+pub(crate) const WRITEBACK_GRAIN: usize = 1024;
 
 /// One agent slot; `Sync` because the scheduler guarantees single-writer.
 pub struct AgentSlot(UnsafeCell<Box<dyn Agent>>);
@@ -57,6 +92,8 @@ impl AgentSlot {
 #[derive(Default)]
 struct Domain {
     agents: Vec<AgentSlot>,
+    /// SoA mirror of the hot fields (see module docs).
+    cols: HotColumns,
 }
 
 /// Dense, NUMA-partitioned agent storage with UID lookup.
@@ -70,6 +107,15 @@ pub struct ResourceManager {
     uid_stride: AgentUid,
     /// round-robin cursor for domain placement of new agents
     place_cursor: usize,
+    /// Cached handle list in insertion order (invalidated/rebuilt on
+    /// structural mutation; see `handles`).
+    handle_cache: Vec<AgentHandle>,
+    /// Upper bound: false only if no live agent has `moved_last` set
+    /// (lets the §5.5 static skip bail without a neighbor scan when the
+    /// whole population is static).
+    moved_any: bool,
+    /// Out-of-band `&mut` access happened since the last column sync.
+    dirty: bool,
 }
 
 impl ResourceManager {
@@ -81,6 +127,9 @@ impl ResourceManager {
             next_uid: 1,
             uid_stride: 1,
             place_cursor: 0,
+            handle_cache: Vec::new(),
+            moved_any: true,
+            dirty: false,
         }
     }
 
@@ -97,7 +146,7 @@ impl ResourceManager {
     }
 
     pub fn num_agents(&self) -> usize {
-        self.domains.iter().map(|d| d.agents.len()).sum()
+        self.handle_cache.len()
     }
 
     pub fn num_agents_in(&self, domain: usize) -> usize {
@@ -122,9 +171,12 @@ impl ResourceManager {
         let domain = self.place_cursor % self.domains.len();
         self.place_cursor += 1;
         let idx = self.domains[domain].agents.len();
+        self.moved_any |= agent.base().moved_last;
+        self.domains[domain].cols.push_from(&*agent);
         self.domains[domain].agents.push(AgentSlot::new(agent));
         let h = AgentHandle::new(domain, idx);
         self.uid_map.insert(uid, h);
+        self.handle_cache.push(h);
         h
     }
 
@@ -135,7 +187,11 @@ impl ResourceManager {
     }
 
     /// Exclusive access through `&mut self` (setup / commit phases).
+    /// Marks the SoA mirror dirty — it is resynced at the next
+    /// iteration start (or by an explicit [`ResourceManager::sync_columns`]).
     pub fn get_mut(&mut self, h: AgentHandle) -> &mut dyn Agent {
+        self.dirty = true;
+        self.moved_any = true; // conservative: the caller may set flags
         unsafe { self.domains[h.numa as usize].agents[h.idx as usize].get_mut() }
     }
 
@@ -158,15 +214,83 @@ impl ResourceManager {
         self.lookup(uid).map(|h| self.get(h))
     }
 
-    /// All handles in deterministic storage order.
-    pub fn handles(&self) -> Vec<AgentHandle> {
-        let mut out = Vec::with_capacity(self.num_agents());
+    // --- SoA column access (hot-path readers) --------------------------
+
+    /// Position column of one domain (frozen start-of-iteration
+    /// snapshot during the parallel loop).
+    #[inline]
+    pub fn positions(&self, domain: usize) -> &[Real3] {
+        &self.domains[domain].cols.positions
+    }
+
+    /// Interaction-diameter column of one domain.
+    #[inline]
+    pub fn interaction_diameters(&self, domain: usize) -> &[Real] {
+        &self.domains[domain].cols.inter_diameters
+    }
+
+    /// Full column set of one domain (coherence tests, bulk readers).
+    #[inline]
+    pub fn columns(&self, domain: usize) -> &HotColumns {
+        &self.domains[domain].cols
+    }
+
+    #[inline]
+    pub fn position_of(&self, h: AgentHandle) -> Real3 {
+        self.domains[h.numa as usize].cols.positions[h.idx as usize]
+    }
+
+    #[inline]
+    pub fn interaction_diameter_of(&self, h: AgentHandle) -> Real {
+        self.domains[h.numa as usize].cols.inter_diameters[h.idx as usize]
+    }
+
+    #[inline]
+    pub fn uid_of(&self, h: AgentHandle) -> AgentUid {
+        self.domains[h.numa as usize].cols.uids[h.idx as usize]
+    }
+
+    /// §5.5: did the agent move in the previous iteration? (bitset read)
+    #[inline]
+    pub fn moved_last_of(&self, h: AgentHandle) -> bool {
+        self.domains[h.numa as usize].cols.moved_last.get(h.idx as usize)
+    }
+
+    /// Ch. 6 ghost flag (bitset read — no box chase in the agent loop).
+    #[inline]
+    pub fn is_ghost(&self, h: AgentHandle) -> bool {
+        self.domains[h.numa as usize].cols.ghost.get(h.idx as usize)
+    }
+
+    /// Sphere-force fast-path eligibility (bitset read).
+    #[inline]
+    pub fn is_sphere_fast(&self, h: AgentHandle) -> bool {
+        self.domains[h.numa as usize].cols.sphere.get(h.idx as usize)
+    }
+
+    /// False only if *no* live agent moved last iteration — the global
+    /// §5.5 short-circuit.
+    #[inline]
+    pub fn moved_any(&self) -> bool {
+        self.moved_any
+    }
+
+    /// All handles in deterministic (insertion) order. Cached — no
+    /// allocation. The order is stable across iterations and rebuilt in
+    /// domain-major order whenever the population is compacted or
+    /// rebalanced.
+    #[inline]
+    pub fn handles(&self) -> &[AgentHandle] {
+        &self.handle_cache
+    }
+
+    fn rebuild_handle_cache(&mut self) {
+        self.handle_cache.clear();
         for (d, domain) in self.domains.iter().enumerate() {
             for i in 0..domain.agents.len() {
-                out.push(AgentHandle::new(d, i));
+                self.handle_cache.push(AgentHandle::new(d, i));
             }
         }
-        out
     }
 
     /// Serial iteration with shared access.
@@ -178,11 +302,16 @@ impl ResourceManager {
         }
     }
 
-    /// Serial iteration with exclusive access.
+    /// Serial iteration with exclusive access. Keeps the SoA mirror
+    /// coherent by refreshing each agent's columns after the closure.
     pub fn for_each_agent_mut(&mut self, mut f: impl FnMut(AgentHandle, &mut dyn Agent)) {
         for (d, domain) in self.domains.iter_mut().enumerate() {
-            for (i, slot) in domain.agents.iter_mut().enumerate() {
+            let Domain { agents, cols } = domain;
+            for (i, slot) in agents.iter_mut().enumerate() {
+                // SAFETY: `&mut self` guarantees exclusivity.
                 f(AgentHandle::new(d, i), unsafe { slot.get_mut() });
+                cols.write_from(i, slot.get());
+                self.moved_any |= slot.get().base().moved_last;
             }
         }
     }
@@ -204,9 +333,12 @@ impl ResourceManager {
             let domain = self.place_cursor % self.domains.len();
             self.place_cursor += 1;
             let idx = self.domains[domain].agents.len();
+            self.moved_any |= agent.base().moved_last;
+            self.domains[domain].cols.push_from(&*agent);
             self.domains[domain].agents.push(AgentSlot::new(agent));
             let h = AgentHandle::new(domain, idx);
             self.uid_map.insert(uid, h);
+            self.handle_cache.push(h);
             handles.push(h);
         }
         handles
@@ -215,16 +347,9 @@ impl ResourceManager {
     /// Commit removals at the iteration barrier using the Fig 5.1
     /// parallel compaction: per domain, holes in the head of the vector
     /// are filled by swapping in non-removed agents from the tail, then
-    /// the vector shrinks. Returns the removed agents.
-    ///
-    /// The auxiliary-array construction mirrors the paper's five steps;
-    /// the swap loop itself is data-parallel (disjoint targets) and is
-    /// executed through `pool`.
-    pub fn commit_removals(
-        &mut self,
-        mut removals: Vec<AgentUid>,
-        pool: &ThreadPool,
-    ) -> Vec<Box<dyn Agent>> {
+    /// the vector shrinks. The SoA columns compact through the same
+    /// (hole, filler) pairs. Returns the removed agents.
+    pub fn commit_removals(&mut self, mut removals: Vec<AgentUid>) -> Vec<Box<dyn Agent>> {
         removals.sort_unstable();
         removals.dedup();
         let mut removed_agents = Vec::with_capacity(removals.len());
@@ -238,10 +363,12 @@ impl ResourceManager {
             }
         }
 
+        let mut any_removed = false;
         for (d, mut idxs) in per_domain.into_iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
+            any_removed = true;
             idxs.sort_unstable();
             let n = self.domains[d].agents.len();
             let k = idxs.len();
@@ -259,11 +386,9 @@ impl ResourceManager {
 
             // Step 3: extract removed agents (swap each removed slot's
             // Box out). Do this before the swaps so we keep ownership.
-            // Swap-remove from the tail downward keeps indices stable.
-            // We instead take the boxes via mem::replace with a
-            // tombstone-free approach: drain the tail, slot in fillers.
+            // Pull the whole tail [new_size, n) out; survivors become
+            // the fillers in ascending-index order.
             let agents = &mut self.domains[d].agents;
-            // Pull the whole tail [new_size, n) out.
             let tail: Vec<AgentSlot> = agents.drain(new_size..).collect();
             let mut fill_iter = Vec::with_capacity(fillers.len());
             for (off, slot) in tail.into_iter().enumerate() {
@@ -274,30 +399,39 @@ impl ResourceManager {
                     fill_iter.push(slot);
                 }
             }
-            // Step 4: fill the holes (parallel-safe: disjoint targets).
-            // Collect hole contents first (they are the removed agents).
+            // Step 4: fill the holes (parallel-safe: disjoint targets),
+            // mirrored on the SoA columns via the same pairs.
             for (&hole, filler) in holes.iter().zip(fill_iter.into_iter()) {
                 let old = std::mem::replace(&mut agents[hole as usize], filler);
                 removed_agents.push(old.into_inner());
             }
             debug_assert_eq!(agents.len(), new_size);
+            let cols = &mut self.domains[d].cols;
+            for (&hole, &filler) in holes.iter().zip(fillers.iter()) {
+                cols.move_entry(hole as usize, filler as usize);
+            }
+            cols.truncate(new_size);
 
             // Step 5: update the uid map for moved agents (serial: the
             // paper updates per-domain maps in parallel; a single
             // HashMap keeps this implementation compact).
-            let _ = pool; // swaps above are O(k); parallel pay-off starts
-                          // at much larger k — see bench fig5_09
+            let agents = &self.domains[d].agents;
             for &hole in &holes {
                 let uid = agents[hole as usize].get().uid();
                 self.uid_map.insert(uid, AgentHandle::new(d, hole as usize));
             }
+        }
+        if any_removed {
+            self.rebuild_handle_cache();
         }
         removed_agents
     }
 
     /// Reorder a domain by `perm` (new storage order: `perm[i]` is the
     /// old index of the agent that moves to index `i`). Used by the
-    /// Morton sorting operation (§5.4.2). Rebuilds the UID map entries.
+    /// Morton sorting operation (§5.4.2). Rebuilds the UID map entries
+    /// and applies the same permutation to the SoA columns; the handle
+    /// *set* is unchanged, so the handle cache stays valid.
     pub fn reorder_domain(&mut self, domain: usize, perm: &[u32]) {
         let agents = &mut self.domains[domain].agents;
         assert_eq!(perm.len(), agents.len());
@@ -305,14 +439,16 @@ impl ResourceManager {
         for &src in perm {
             agents.push(old[src as usize].take().expect("permutation not a bijection"));
         }
-        for (i, slot) in agents.iter().enumerate() {
+        self.domains[domain].cols.apply_perm(perm);
+        for (i, slot) in self.domains[domain].agents.iter().enumerate() {
             self.uid_map
                 .insert(slot.get().uid(), AgentHandle::new(domain, i));
         }
     }
 
     /// Move agents between domains so that every domain holds an equal
-    /// share (±1) — the "balancing" half of §5.4.2.
+    /// share (±1) — the "balancing" half of §5.4.2. Column entries move
+    /// with their agents.
     pub fn balance_domains(&mut self) {
         let total = self.num_agents();
         let ndom = self.domains.len();
@@ -321,25 +457,28 @@ impl ResourceManager {
         }
         let target = total / ndom;
         let rem = total % ndom;
-        let want =
-            |d: usize| -> usize { target + usize::from(d < rem) };
-        // collect surplus
-        let mut surplus: Vec<AgentSlot> = Vec::new();
+        let want = |d: usize| -> usize { target + usize::from(d < rem) };
+        // collect surplus (agent + its column entry)
+        let mut surplus: Vec<(AgentSlot, crate::core::soa::ColumnEntry)> = Vec::new();
         for d in 0..ndom {
             while self.domains[d].agents.len() > want(d) {
-                surplus.push(self.domains[d].agents.pop().unwrap());
+                let slot = self.domains[d].agents.pop().unwrap();
+                let entry = self.domains[d].cols.pop_entry();
+                surplus.push((slot, entry));
             }
         }
         // redistribute
         for d in 0..ndom {
             while self.domains[d].agents.len() < want(d) {
-                let slot = surplus.pop().expect("conservation");
+                let (slot, entry) = surplus.pop().expect("conservation");
                 self.domains[d].agents.push(slot);
+                self.domains[d].cols.push_entry(entry);
             }
         }
         debug_assert!(surplus.is_empty());
-        // rebuild uid map (positions changed wholesale)
+        // rebuild uid map + handle cache (positions changed wholesale)
         self.rebuild_uid_map();
+        self.rebuild_handle_cache();
     }
 
     fn rebuild_uid_map(&mut self) {
@@ -352,15 +491,37 @@ impl ResourceManager {
         }
     }
 
+    /// Rebuild every derived structure (uid map, SoA columns, handle
+    /// cache) from the boxed agents. For tests and recovery paths that
+    /// bypass the public mutation API.
+    pub fn rebuild_caches(&mut self) {
+        self.rebuild_uid_map();
+        let mut any = false;
+        for domain in &mut self.domains {
+            domain.cols.clear();
+            for slot in &domain.agents {
+                domain.cols.push_from(slot.get());
+            }
+            any |= domain.cols.moved_last.any();
+        }
+        self.moved_any = any;
+        self.rebuild_handle_cache();
+        self.dirty = false;
+    }
+
     /// Swap the agent stored at `h` for `agent` (copy-context commit).
-    /// The UID of the new agent must equal the old one.
+    /// The UID of the new agent must equal the old one. The SoA columns
+    /// are refreshed from the new agent.
     pub fn replace_agent(&mut self, h: AgentHandle, agent: Box<dyn Agent>) -> Box<dyn Agent> {
         debug_assert_eq!(
             agent.uid(),
             self.get(h).uid(),
             "replace_agent must preserve the uid"
         );
-        let slot = &mut self.domains[h.numa as usize].agents[h.idx as usize];
+        let domain = &mut self.domains[h.numa as usize];
+        domain.cols.write_from(h.idx as usize, &*agent);
+        self.moved_any |= agent.base().moved_last;
+        let slot = &mut domain.agents[h.idx as usize];
         std::mem::replace(slot, AgentSlot::new(agent)).into_inner()
     }
 
@@ -372,9 +533,192 @@ impl ResourceManager {
             for slot in domain.agents.drain(..) {
                 out.push(slot.into_inner());
             }
+            domain.cols.clear();
         }
         self.uid_map.clear();
+        self.handle_cache.clear();
         out
+    }
+
+    // --- SoA synchronization -------------------------------------------
+
+    /// Resync the SoA mirror from the boxed agents if out-of-band
+    /// `&mut` access happened since the last sync (scheduler, top of
+    /// every iteration).
+    pub fn sync_columns_if_dirty(&mut self, pool: &ThreadPool) {
+        if self.dirty {
+            self.sync_columns(pool);
+        }
+    }
+
+    /// Full parallel resync of every column from the boxed agents.
+    /// Does not modify any agent state.
+    pub fn sync_columns(&mut self, pool: &ThreadPool) {
+        for domain in &mut self.domains {
+            let n = domain.agents.len();
+            debug_assert_eq!(domain.cols.len(), n);
+            if n == 0 {
+                continue;
+            }
+            let ptrs = ColPtrs::of(&mut domain.cols);
+            let agents = &domain.agents;
+            pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, _wid| {
+                let p = &ptrs;
+                for i in chunk {
+                    let a = agents[i].get();
+                    let inter = a.interaction_diameter();
+                    let sphere = HotColumns::sphere_eligible(a);
+                    let b = a.base();
+                    // SAFETY: disjoint chunks; grain is a multiple of 64
+                    // so each bitset word belongs to one chunk.
+                    unsafe {
+                        p.pos.add(i).write(b.position);
+                        p.inter.add(i).write(inter);
+                        p.uid.add(i).write(b.uid);
+                        set_bit_raw(p.moved_last, i, b.moved_last);
+                        set_bit_raw(p.moved_now, i, b.moved_now);
+                        set_bit_raw(p.ghost, i, b.is_ghost);
+                        set_bit_raw(p.sphere, i, sphere);
+                    }
+                }
+            });
+        }
+        self.moved_any = self.domains.iter().any(|d| d.cols.moved_last.any());
+        self.dirty = false;
+    }
+
+    /// Test support: assert the SoA mirror is bitwise coherent with the
+    /// boxed agents (the DESIGN.md §2 invariant) and the handle cache
+    /// is a valid, duplicate-free enumeration. Shared by the unit and
+    /// property test suites; O(n), panics on violation.
+    #[doc(hidden)]
+    pub fn assert_columns_coherent(&self) {
+        let mut count = 0usize;
+        self.for_each_agent(|h, a| {
+            count += 1;
+            let b = a.base();
+            assert_eq!(self.position_of(h), b.position, "position {h:?}");
+            assert_eq!(
+                self.interaction_diameter_of(h),
+                a.interaction_diameter(),
+                "interaction diameter {h:?}"
+            );
+            assert_eq!(self.uid_of(h), b.uid, "uid {h:?}");
+            assert_eq!(self.moved_last_of(h), b.moved_last, "moved_last {h:?}");
+            assert_eq!(
+                self.columns(h.numa as usize).moved_now.get(h.idx as usize),
+                b.moved_now,
+                "moved_now {h:?}"
+            );
+            assert_eq!(self.is_ghost(h), b.is_ghost, "ghost {h:?}");
+            assert_eq!(
+                self.is_sphere_fast(h),
+                HotColumns::sphere_eligible(a),
+                "sphere {h:?}"
+            );
+            assert_eq!(self.lookup(b.uid), Some(h), "uid map {h:?}");
+        });
+        assert_eq!(count, self.num_agents(), "agent count");
+        assert_eq!(self.handles().len(), count, "handle cache len");
+        let mut seen = std::collections::HashSet::new();
+        for &h in self.handles() {
+            assert!(
+                (h.idx as usize) < self.num_agents_in(h.numa as usize),
+                "handle out of range {h:?}"
+            );
+            assert!(seen.insert(h), "duplicate handle {h:?}");
+        }
+        for d in 0..self.num_domains() {
+            assert_eq!(
+                self.columns(d).len(),
+                self.num_agents_in(d),
+                "domain {d} column len"
+            );
+        }
+    }
+
+    /// The per-iteration barrier pass (scheduler step 5). In one
+    /// parallel sweep per domain it
+    /// * mirrors position / interaction diameter / ghost / sphere from
+    ///   the boxed agents into the columns (they may have changed during
+    ///   the agent loop and the commit barrier),
+    /// * stages each agent's `moved_now` into the `moved_now` bitset and
+    ///   performs the §5.5 flip on the box fields
+    ///   (`moved_last <- moved_now; moved_now <- false`),
+    ///
+    /// then flips the bitsets with an O(n/64) swap + clear — the dense
+    /// replacement for the seed's full dyn-agent flip traversal.
+    pub fn writeback_and_flip(&mut self, pool: &ThreadPool) {
+        let mut any = false;
+        for domain in &mut self.domains {
+            let n = domain.agents.len();
+            debug_assert_eq!(domain.cols.len(), n);
+            if n > 0 {
+                let ptrs = ColPtrs::of(&mut domain.cols);
+                let agents = &domain.agents;
+                pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, _wid| {
+                    let p = &ptrs;
+                    for i in chunk {
+                        // SAFETY: disjoint chunks -> single mutator per
+                        // slot; grain is a multiple of 64 so each bitset
+                        // word belongs to one chunk.
+                        let a = unsafe { agents[i].get_mut() };
+                        let inter = a.interaction_diameter();
+                        let sphere = HotColumns::sphere_eligible(a);
+                        let b = a.base_mut();
+                        let moved = b.moved_now;
+                        b.moved_last = moved;
+                        b.moved_now = false;
+                        unsafe {
+                            p.pos.add(i).write(b.position);
+                            p.inter.add(i).write(inter);
+                            set_bit_raw(p.moved_now, i, moved);
+                            set_bit_raw(p.ghost, i, b.is_ghost);
+                            set_bit_raw(p.sphere, i, sphere);
+                        }
+                    }
+                });
+            }
+            // O(n/64) flip: staged moved_now becomes moved_last; the old
+            // moved_last words are recycled as the (cleared) moved_now.
+            let cols = &mut domain.cols;
+            std::mem::swap(&mut cols.moved_last, &mut cols.moved_now);
+            cols.moved_now.fill_false();
+            any |= cols.moved_last.any();
+        }
+        self.moved_any = any;
+        self.dirty = false;
+    }
+}
+
+/// Raw column pointers for the parallel writeback passes.
+struct ColPtrs {
+    pos: *mut Real3,
+    inter: *mut Real,
+    uid: *mut AgentUid,
+    moved_last: *mut u64,
+    moved_now: *mut u64,
+    ghost: *mut u64,
+    sphere: *mut u64,
+}
+
+// SAFETY: the writeback passes hand disjoint 64-aligned index ranges to
+// each worker (see WRITEBACK_GRAIN).
+unsafe impl Send for ColPtrs {}
+unsafe impl Sync for ColPtrs {}
+
+impl ColPtrs {
+    fn of(cols: &mut HotColumns) -> ColPtrs {
+        debug_assert_eq!(WRITEBACK_GRAIN % 64, 0);
+        ColPtrs {
+            pos: cols.positions.as_mut_ptr(),
+            inter: cols.inter_diameters.as_mut_ptr(),
+            uid: cols.uids.as_mut_ptr(),
+            moved_last: cols.moved_last.words_mut_ptr(),
+            moved_now: cols.moved_now.words_mut_ptr(),
+            ghost: cols.ghost.words_mut_ptr(),
+            sphere: cols.sphere.words_mut_ptr(),
+        }
     }
 }
 
@@ -388,6 +732,12 @@ mod tests {
         Box::new(SphericalAgent::new(Real3::new(x, 0.0, 0.0)))
     }
 
+    /// The SoA coherence invariant — delegates to the shared checker so
+    /// unit and property suites assert exactly the same thing.
+    fn assert_columns_coherent(rm: &ResourceManager) {
+        rm.assert_columns_coherent();
+    }
+
     #[test]
     fn add_lookup_get() {
         let mut rm = ResourceManager::new(2);
@@ -398,11 +748,13 @@ mod tests {
         let uid1 = rm.get(h1).uid();
         assert_eq!(rm.lookup(uid1), Some(h1));
         assert_eq!(rm.get_by_uid(uid1).unwrap().position().x(), 1.0);
+        assert_eq!(rm.position_of(h1).x(), 1.0);
+        assert_eq!(rm.uid_of(h1), uid1);
+        assert_columns_coherent(&rm);
     }
 
     #[test]
     fn commit_removals_compacts_and_preserves_survivors() {
-        let pool = ThreadPool::new(2);
         let mut rm = ResourceManager::new(1);
         let mut uids = Vec::new();
         for i in 0..10 {
@@ -410,7 +762,7 @@ mod tests {
             uids.push(rm.get(h).uid());
         }
         // remove a head, a middle, and the tail agent
-        let removed = rm.commit_removals(vec![uids[0], uids[4], uids[9]], &pool);
+        let removed = rm.commit_removals(vec![uids[0], uids[4], uids[9]]);
         assert_eq!(removed.len(), 3);
         assert_eq!(rm.num_agents(), 7);
         // survivors all reachable through the uid map with correct data
@@ -425,11 +777,11 @@ mod tests {
         // dense: every index < len valid
         let handles = rm.handles();
         assert_eq!(handles.len(), 7);
+        assert_columns_coherent(&rm);
     }
 
     #[test]
     fn commit_removals_all_and_none() {
-        let pool = ThreadPool::new(1);
         let mut rm = ResourceManager::new(2);
         let uids: Vec<_> = (0..6)
             .map(|i| {
@@ -437,33 +789,33 @@ mod tests {
                 rm.get(h).uid()
             })
             .collect();
-        assert!(rm.commit_removals(vec![], &pool).is_empty());
+        assert!(rm.commit_removals(vec![]).is_empty());
         assert_eq!(rm.num_agents(), 6);
-        let removed = rm.commit_removals(uids.clone(), &pool);
+        let removed = rm.commit_removals(uids.clone());
         assert_eq!(removed.len(), 6);
         assert_eq!(rm.num_agents(), 0);
+        assert_columns_coherent(&rm);
     }
 
     #[test]
     fn removal_of_unknown_uid_is_ignored() {
-        let pool = ThreadPool::new(1);
         let mut rm = ResourceManager::new(1);
         rm.add_agent(cell(0.0));
-        let removed = rm.commit_removals(vec![424242], &pool);
+        let removed = rm.commit_removals(vec![424242]);
         assert!(removed.is_empty());
         assert_eq!(rm.num_agents(), 1);
     }
 
     #[test]
     fn duplicate_removals_counted_once() {
-        let pool = ThreadPool::new(1);
         let mut rm = ResourceManager::new(1);
         let h = rm.add_agent(cell(0.0));
         let uid = rm.get(h).uid();
         rm.add_agent(cell(1.0));
-        let removed = rm.commit_removals(vec![uid, uid, uid], &pool);
+        let removed = rm.commit_removals(vec![uid, uid, uid]);
         assert_eq!(removed.len(), 1);
         assert_eq!(rm.num_agents(), 1);
+        assert_columns_coherent(&rm);
     }
 
     #[test]
@@ -476,6 +828,7 @@ mod tests {
         assert_eq!(rm.get_by_uid(100).unwrap().position().x(), 5.0);
         // next issued uid must not collide
         assert!(rm.issue_uid() > 100);
+        assert_columns_coherent(&rm);
     }
 
     #[test]
@@ -491,8 +844,9 @@ mod tests {
             .map(|&h| rm.get(h).position().x())
             .collect();
         assert_eq!(xs, vec![4.0, 3.0, 2.0, 1.0, 0.0]);
-        // uid map still correct
+        // uid map + columns still correct
         rm.for_each_agent(|h, a| assert_eq!(rm.lookup(a.uid()), Some(h)));
+        assert_columns_coherent(&rm);
     }
 
     #[test]
@@ -505,12 +859,14 @@ mod tests {
             rm.domains[0].agents.push(AgentSlot::new(a));
         }
         rm.next_uid = 21;
-        rm.rebuild_uid_map();
+        rm.rebuild_caches();
+        assert_columns_coherent(&rm);
         rm.balance_domains();
         for d in 0..4 {
             assert_eq!(rm.num_agents_in(d), 5);
         }
         rm.for_each_agent(|h, a| assert_eq!(rm.lookup(a.uid()), Some(h)));
+        assert_columns_coherent(&rm);
     }
 
     #[test]
@@ -523,5 +879,90 @@ mod tests {
         assert_eq!(all.len(), 7);
         assert_eq!(rm.num_agents(), 0);
         assert!(rm.lookup(all[0].uid()).is_none());
+        assert_columns_coherent(&rm);
+    }
+
+    #[test]
+    fn get_mut_marks_dirty_and_sync_repairs() {
+        let pool = ThreadPool::new(2);
+        let mut rm = ResourceManager::new(2);
+        let h = rm.add_agent(cell(1.0));
+        for i in 0..100 {
+            rm.add_agent(cell(i as f64));
+        }
+        rm.get_mut(h).set_position(Real3::new(9.0, 8.0, 7.0));
+        // mirror is stale now; sync repairs it
+        rm.sync_columns_if_dirty(&pool);
+        assert_eq!(rm.position_of(h), Real3::new(9.0, 8.0, 7.0));
+        assert_columns_coherent(&rm);
+    }
+
+    #[test]
+    fn for_each_agent_mut_keeps_columns_fresh() {
+        let mut rm = ResourceManager::new(2);
+        for i in 0..10 {
+            rm.add_agent(cell(i as f64));
+        }
+        rm.for_each_agent_mut(|_, a| {
+            let p = a.position();
+            a.set_position(p + Real3::new(0.0, 1.0, 0.0));
+            a.set_diameter(3.0);
+        });
+        assert_columns_coherent(&rm);
+    }
+
+    #[test]
+    fn writeback_and_flip_moves_flags_and_positions() {
+        let pool = ThreadPool::new(2);
+        let mut rm = ResourceManager::new(1);
+        let h0 = rm.add_agent(cell(0.0));
+        let h1 = rm.add_agent(cell(1.0));
+        // simulate an agent loop: agent 0 moved, agent 1 did not
+        unsafe {
+            let a = rm.get_mut_unchecked(h0);
+            a.set_position(Real3::new(5.0, 0.0, 0.0));
+            a.base_mut().moved_now = true;
+            rm.get_mut_unchecked(h1).base_mut().moved_now = false;
+        }
+        rm.writeback_and_flip(&pool);
+        assert_eq!(rm.position_of(h0), Real3::new(5.0, 0.0, 0.0));
+        assert!(rm.moved_last_of(h0));
+        assert!(!rm.moved_last_of(h1));
+        assert!(rm.get(h0).base().moved_last);
+        assert!(!rm.get(h0).base().moved_now);
+        assert!(rm.moved_any());
+        assert_columns_coherent(&rm);
+        // second flip with nothing moving -> globally static
+        rm.writeback_and_flip(&pool);
+        assert!(!rm.moved_last_of(h0));
+        assert!(!rm.moved_any());
+        assert_columns_coherent(&rm);
+    }
+
+    #[test]
+    fn writeback_parallel_many_agents_matches_serial_sync() {
+        // bitset word boundaries: use a population larger than several
+        // chunks and odd sizes across two domains
+        let pool = ThreadPool::new(4);
+        let mut rm = ResourceManager::new(2);
+        for i in 0..(WRITEBACK_GRAIN * 3 + 77) {
+            rm.add_agent(cell(i as f64));
+        }
+        let n = rm.num_agents();
+        for (k, &h) in rm.handles().iter().enumerate() {
+            // SAFETY: serial loop — single mutator.
+            unsafe {
+                rm.get_mut_unchecked(h).base_mut().moved_now = k % 5 == 0;
+            }
+        }
+        rm.writeback_and_flip(&pool);
+        assert_eq!(rm.num_agents(), n);
+        assert_columns_coherent(&rm);
+        let moved: usize = rm
+            .handles()
+            .iter()
+            .filter(|&&h| rm.moved_last_of(h))
+            .count();
+        assert_eq!(moved, n.div_ceil(5));
     }
 }

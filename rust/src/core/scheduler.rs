@@ -1,13 +1,19 @@
 //! The simulation scheduler — Algorithm 8 of the paper.
 //!
 //! Each iteration:
+//! 0. resync the SoA mirror if out-of-band `&mut` access happened,
 //! 1. rebuild the environment (pre-standalone),
 //! 2. run user pre-standalone operations,
 //! 3. run all agent operations for all agents in parallel
 //!    (column-wise or row-wise, in-place or copy context),
 //! 4. barrier: commit thread-local additions/removals/deferred updates,
-//! 5. flip the §5.5 moved flags,
+//! 5. column writeback + §5.5 moved-flag flip (one fused parallel pass;
+//!    the bitset flip itself is an O(n/64) swap),
 //! 6. run post-standalone operations (diffusion, sorting, export).
+//!
+//! The steady-state hot path allocates nothing per iteration: the
+//! handle list is cached in the ResourceManager, the environment reads
+//! the shared SoA columns, and the flip is a bitset swap.
 //!
 //! Every phase is timed into [`OpTimers`] — the data behind the
 //! operation-runtime-breakdown experiment (Fig 5.6).
@@ -62,6 +68,10 @@ impl OpTimers {
 
 /// Execute one full iteration on `sim`.
 pub fn execute_iteration(sim: &mut Simulation) {
+    // ---- 0. SoA resync after out-of-band mutation ---------------------
+    // (setup-phase `get_mut`, post ops that edit agents directly, ...)
+    sim.rm.sync_columns_if_dirty(&sim.pool);
+
     // ---- 1. environment update --------------------------------------
     let t = Instant::now();
     sim.env.update(&sim.rm, &sim.pool);
@@ -79,15 +89,15 @@ pub fn execute_iteration(sim: &mut Simulation) {
     let t = Instant::now();
     let queues = std::mem::take(&mut sim.pending_queues);
     if queues.iter().any(|q| !q.is_empty()) {
-        let (added, removed) = commit_queues(queues, &mut sim.rm, &sim.pool, sim.iteration);
+        let (added, removed) = commit_queues(queues, &mut sim.rm, sim.iteration);
         sim.agents_added += added.len() as u64;
         sim.agents_removed += removed.len() as u64;
     }
     sim.timers.record("commit", t.elapsed());
 
-    // ---- 5. flip moved flags (§5.5) -------------------------------------
+    // ---- 5. column writeback + flip moved flags (§5.5) -----------------
     let t = Instant::now();
-    flip_moved_flags(sim);
+    sim.rm.writeback_and_flip(&sim.pool);
     sim.timers.record("flip_flags", t.elapsed());
 
     // ---- 6. post-standalone operations -----------------------------------
@@ -115,27 +125,11 @@ fn run_standalone(sim: &mut Simulation, phase: StandalonePhase) {
     sim.standalone_ops = ops;
 }
 
-/// The iteration order of agents: storage order, or a seeded shuffle
-/// when `randomize_iteration_order` is set (RandomizedRm, §5.2.1).
-fn iteration_order(sim: &Simulation) -> Vec<AgentHandle> {
-    let mut handles = sim.rm.handles();
-    if sim.param.randomize_iteration_order {
-        let mut rng = Rng::for_agent(sim.param.seed, 0, sim.iteration, 7);
-        // Fisher-Yates
-        for i in (1..handles.len()).rev() {
-            let j = rng.uniform_usize(i + 1);
-            handles.swap(i, j);
-        }
-    }
-    handles
-}
-
 fn run_agent_ops(sim: &mut Simulation) {
     let n = sim.rm.num_agents();
     if n == 0 {
         return;
     }
-    let handles = iteration_order(sim);
     let nworkers = sim.pool.num_threads();
     let queues: Vec<Mutex<ThreadQueues>> =
         (0..nworkers).map(|_| Mutex::new(ThreadQueues::default())).collect();
@@ -161,77 +155,106 @@ fn run_agent_ops(sim: &mut Simulation) {
     let copies: Vec<Mutex<Vec<(AgentHandle, Box<dyn crate::core::agent::Agent>)>>> =
         (0..nworkers).map(|_| Mutex::new(Vec::new())).collect();
 
-    let grain = 256;
-    // hot loop: the worker queue is locked once per *chunk*, not per
-    // agent (uncontended lock+unlock per agent costs ~15% on
-    // behavior-light models — see EXPERIMENTS.md §Perf iteration 3)
-    let process_chunk = |chunk: std::ops::Range<usize>, wid: usize| {
-        let mut queues_guard = queues[wid].lock().unwrap();
-        for i in chunk {
-            let h = handles[i];
-            // SAFETY: parallel_for chunks are disjoint index ranges over
-            // a deduplicated handle list -> single mutator per slot.
-            if sim.rm.get(h).base().is_ghost {
-                continue; // aura copies are neighbors only (Ch. 6)
+    {
+        // The iteration order of agents: the cached storage-order handle
+        // list (zero allocation), or a seeded shuffle when
+        // `randomize_iteration_order` is set (RandomizedRm, §5.2.1).
+        let shuffled: Option<Vec<AgentHandle>> = if sim.param.randomize_iteration_order {
+            let mut handles = sim.rm.handles().to_vec();
+            let mut rng = Rng::for_agent(sim.param.seed, 0, sim.iteration, 7);
+            // Fisher-Yates
+            for i in (1..handles.len()).rev() {
+                let j = rng.uniform_usize(i + 1);
+                handles.swap(i, j);
             }
-            if copy_mode {
-                // copy execution context: ops run on a clone; neighbors
-                // keep reading the unmodified original until the barrier.
-                let original = sim.rm.get(h);
-                let mut clone = original.clone_agent();
-                let mut ctx =
-                    AgentContext::new(&shared, &mut queues_guard, clone.uid(), clone.position());
-                for op in &active {
-                    if op.applies_to(&*clone) {
-                        op.run(&mut *clone, &mut ctx);
-                    }
-                }
-                copies[wid].lock().unwrap().push((h, clone));
-            } else {
-                let agent = unsafe { sim.rm.get_mut_unchecked(h) };
-                let mut ctx =
-                    AgentContext::new(&shared, &mut queues_guard, agent.uid(), agent.position());
-                for op in &active {
-                    if op.applies_to(agent) {
-                        op.run(agent, &mut ctx);
-                    }
-                }
-            }
-        }
-    };
+            Some(handles)
+        } else {
+            None
+        };
+        let handles: &[AgentHandle] = match &shuffled {
+            Some(v) => v,
+            None => sim.rm.handles(),
+        };
 
-    match sim.param.execution_order {
-        ExecutionOrder::ColumnWise => {
-            sim.pool
-                .parallel_for_chunks(0..handles.len(), grain, process_chunk);
-        }
-        ExecutionOrder::RowWise => {
-            // one op for all agents, then the next op. Row-wise always
-            // runs in place: the copy context is defined on whole-agent
-            // updates (column-wise); the combination row-wise+copy falls
-            // back to in-place (documented limitation, matches the
-            // paper's default pairing).
-            for op in &active {
-                sim.pool
-                    .parallel_for_chunks(0..handles.len(), grain, |chunk, wid| {
-                        let mut queues_guard = queues[wid].lock().unwrap();
-                        for i in chunk.clone() {
-                            let h = handles[i];
-                            if sim.rm.get(h).base().is_ghost {
-                                continue;
-                            }
-                            let agent = unsafe { sim.rm.get_mut_unchecked(h) };
-                            let mut ctx = AgentContext::new(
-                                &shared,
-                                &mut queues_guard,
-                                agent.uid(),
-                                agent.position(),
-                            );
-                            if op.applies_to(agent) {
-                                op.run(agent, &mut ctx);
-                            }
+        let grain = 256;
+        // One shared chunk body for both execution orders (the SoA
+        // coherence rules live in exactly one place). The worker queue
+        // is locked once per *chunk*, not per agent (uncontended
+        // lock+unlock per agent costs ~15% on behavior-light models —
+        // see EXPERIMENTS.md §Perf iteration 3).
+        let run_chunk = |chunk: std::ops::Range<usize>,
+                         wid: usize,
+                         only_op: Option<usize>,
+                         use_copy: bool| {
+            // `None` = all active ops per agent (column-wise);
+            // `Some(k)` = just active[k] (row-wise passes).
+            let ops: &[&dyn crate::core::operation::AgentOperation] = match only_op {
+                Some(k) => std::slice::from_ref(&active[k]),
+                None => &active,
+            };
+            let mut queues_guard = queues[wid].lock().unwrap();
+            for i in chunk {
+                let h = handles[i];
+                // ghost check from the SoA bitset — no box chase
+                if sim.rm.is_ghost(h) {
+                    continue; // aura copies are neighbors only (Ch. 6)
+                }
+                if use_copy {
+                    // copy execution context: ops run on a clone; neighbors
+                    // keep reading the unmodified original until the barrier.
+                    let original = sim.rm.get(h);
+                    let mut clone = original.clone_agent();
+                    let mut ctx = AgentContext::new(
+                        &shared,
+                        &mut queues_guard,
+                        h,
+                        clone.uid(),
+                        clone.position(),
+                    );
+                    for op in ops {
+                        if op.applies_to(&*clone) {
+                            op.run(&mut *clone, &mut ctx);
                         }
+                    }
+                    copies[wid].lock().unwrap().push((h, clone));
+                } else {
+                    // SAFETY: parallel_for chunks are disjoint index
+                    // ranges over a deduplicated handle list -> single
+                    // mutator per slot.
+                    let agent = unsafe { sim.rm.get_mut_unchecked(h) };
+                    let mut ctx = AgentContext::new(
+                        &shared,
+                        &mut queues_guard,
+                        h,
+                        agent.uid(),
+                        agent.position(),
+                    );
+                    for op in ops {
+                        if op.applies_to(agent) {
+                            op.run(agent, &mut ctx);
+                        }
+                    }
+                }
+            }
+        };
+
+        match sim.param.execution_order {
+            ExecutionOrder::ColumnWise => {
+                sim.pool.parallel_for_chunks(0..handles.len(), grain, |chunk, wid| {
+                    run_chunk(chunk, wid, None, copy_mode)
+                });
+            }
+            ExecutionOrder::RowWise => {
+                // one op for all agents, then the next op. Row-wise always
+                // runs in place: the copy context is defined on whole-agent
+                // updates (column-wise); the combination row-wise+copy falls
+                // back to in-place (documented limitation, matches the
+                // paper's default pairing).
+                for k in 0..active.len() {
+                    sim.pool.parallel_for_chunks(0..handles.len(), grain, |chunk, wid| {
+                        run_chunk(chunk, wid, Some(k), false)
                     });
+                }
             }
         }
     }
@@ -247,16 +270,4 @@ fn run_agent_ops(sim: &mut Simulation) {
     }
 
     sim.pending_queues = queues.into_iter().map(|m| m.into_inner().unwrap()).collect();
-}
-
-fn flip_moved_flags(sim: &mut Simulation) {
-    let handles = sim.rm.handles();
-    let rm = &sim.rm;
-    sim.pool.parallel_for(0..handles.len(), 2048, |i, _wid| {
-        // SAFETY: disjoint indices.
-        let agent = unsafe { rm.get_mut_unchecked(handles[i]) };
-        let base = agent.base_mut();
-        base.moved_last = base.moved_now;
-        base.moved_now = false;
-    });
 }

@@ -1,0 +1,380 @@
+//! SoA "hot-field" attribute store (paper §5.4, "mechanisms to reduce
+//! the memory access latency").
+//!
+//! The ResourceManager stores agents as `Box<dyn Agent>`: flexible, but
+//! every hot loop (grid build, bounds reduction, mechanical forces,
+//! moved-flag flip) pays a pointer chase plus virtual dispatch per
+//! agent per iteration. This module holds the cure: per-NUMA-domain
+//! contiguous *columns* of exactly the fields those loops stream over —
+//! position, interaction diameter, UID, and the moved/ghost/sphere
+//! bitsets. The boxed agents stay authoritative; the columns are a
+//! coherent mirror maintained at every structural mutation point and
+//! refreshed in one parallel pass per iteration (see
+//! `ResourceManager::writeback_and_flip` and DESIGN.md §SoA for the
+//! full coherence contract).
+
+use crate::core::agent::{Agent, AgentUid, Shape};
+use crate::core::math::Real3;
+use crate::Real;
+
+/// Dense bit vector; bits at index `>= len` are guaranteed zero, which
+/// lets [`BitVec::any`] reduce over whole words.
+#[derive(Default, Clone)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> BitVec {
+        BitVec::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i & 63);
+        if v {
+            self.words[i >> 6] |= mask;
+        } else {
+            self.words[i >> 6] &= !mask;
+        }
+    }
+
+    pub fn push(&mut self, v: bool) {
+        if self.len % 64 == 0 {
+            self.words.push(0);
+        }
+        let i = self.len;
+        self.len += 1;
+        if v {
+            self.words[i >> 6] |= 1 << (i & 63);
+        }
+    }
+
+    pub fn pop(&mut self) -> bool {
+        debug_assert!(self.len > 0);
+        let v = self.get(self.len - 1);
+        self.truncate(self.len - 1);
+        v
+    }
+
+    /// Shrink to `n` bits, keeping the above-`len`-bits-are-zero
+    /// invariant.
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.len {
+            return;
+        }
+        self.len = n;
+        self.words.truncate(n.div_ceil(64));
+        if n % 64 != 0 {
+            let mask = (1u64 << (n % 64)) - 1;
+            if let Some(w) = self.words.last_mut() {
+                *w &= mask;
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.len = 0;
+    }
+
+    /// Zero every bit, keeping the length — O(len/64).
+    pub fn fill_false(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// Any bit set? O(len/64) word reduce.
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// New BitVec with `out[i] = self[perm[i]]`.
+    pub fn permuted(&self, perm: &[u32]) -> BitVec {
+        let mut out = BitVec::new();
+        for &src in perm {
+            out.push(self.get(src as usize));
+        }
+        out
+    }
+
+    /// Raw word pointer for the parallel writeback. Callers must write
+    /// each 64-bit word from exactly one thread (see
+    /// [`crate::core::resource_manager::WRITEBACK_GRAIN`]).
+    pub(crate) fn words_mut_ptr(&mut self) -> *mut u64 {
+        self.words.as_mut_ptr()
+    }
+}
+
+/// Write one bit through a raw word pointer.
+///
+/// # Safety
+/// `words` must point to a live word array covering bit `i`, and no
+/// other thread may concurrently access word `i / 64`.
+#[inline]
+pub(crate) unsafe fn set_bit_raw(words: *mut u64, i: usize, v: bool) {
+    let w = words.add(i >> 6);
+    let mask = 1u64 << (i & 63);
+    if v {
+        *w |= mask;
+    } else {
+        *w &= !mask;
+    }
+}
+
+/// One domain's contiguous hot-field columns. Indexed by the agent's
+/// slot index inside the domain (i.e. `AgentHandle::idx`).
+#[derive(Default)]
+pub struct HotColumns {
+    /// `AgentBase::position` (all shapes report their reference point).
+    pub positions: Vec<Real3>,
+    /// `Agent::interaction_diameter()` — grid box sizing and bounds.
+    pub inter_diameters: Vec<Real>,
+    /// `AgentBase::uid` — deterministic force summation order.
+    pub uids: Vec<AgentUid>,
+    /// §5.5: did the agent move in the previous iteration?
+    pub moved_last: BitVec,
+    /// Staged §5.5 flag mirrored from `AgentBase::moved_now` at the
+    /// writeback barrier; swapped into `moved_last` by the flip.
+    pub moved_now: BitVec,
+    /// Ch. 6 aura copies — skipped by the agent loop.
+    pub ghost: BitVec,
+    /// Eligible for the sphere-sphere force fast path: shape is
+    /// [`Shape::Sphere`] and `interaction_diameter == diameter` (so the
+    /// interaction-diameter column doubles as the geometric diameter).
+    pub sphere: BitVec,
+}
+
+/// One agent's column values, detached (domain balancing moves these
+/// between domains alongside the boxed agent).
+pub struct ColumnEntry {
+    pub position: Real3,
+    pub inter_diameter: Real,
+    pub uid: AgentUid,
+    pub moved_last: bool,
+    pub moved_now: bool,
+    pub ghost: bool,
+    pub sphere: bool,
+}
+
+impl HotColumns {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// The sphere-fast-path predicate (see [`HotColumns::sphere`]).
+    #[inline]
+    pub fn sphere_eligible(a: &dyn Agent) -> bool {
+        matches!(a.shape(), Shape::Sphere) && a.interaction_diameter() == a.base().diameter
+    }
+
+    /// Append `a`'s hot fields (agent insertion).
+    pub fn push_from(&mut self, a: &dyn Agent) {
+        let b = a.base();
+        self.positions.push(b.position);
+        self.inter_diameters.push(a.interaction_diameter());
+        self.uids.push(b.uid);
+        self.moved_last.push(b.moved_last);
+        self.moved_now.push(b.moved_now);
+        self.ghost.push(b.is_ghost);
+        self.sphere.push(Self::sphere_eligible(a));
+    }
+
+    /// Overwrite slot `i` from `a` (replace_agent, serial refresh).
+    pub fn write_from(&mut self, i: usize, a: &dyn Agent) {
+        let b = a.base();
+        self.positions[i] = b.position;
+        self.inter_diameters[i] = a.interaction_diameter();
+        self.uids[i] = b.uid;
+        self.moved_last.set(i, b.moved_last);
+        self.moved_now.set(i, b.moved_now);
+        self.ghost.set(i, b.is_ghost);
+        self.sphere.set(i, Self::sphere_eligible(a));
+    }
+
+    /// Copy slot `src` over slot `dst` (swap-with-tail compaction,
+    /// Fig 5.1 — mirrors the agent-vector hole filling).
+    pub fn move_entry(&mut self, dst: usize, src: usize) {
+        self.positions[dst] = self.positions[src];
+        self.inter_diameters[dst] = self.inter_diameters[src];
+        self.uids[dst] = self.uids[src];
+        let (ml, mn) = (self.moved_last.get(src), self.moved_now.get(src));
+        self.moved_last.set(dst, ml);
+        self.moved_now.set(dst, mn);
+        let g = self.ghost.get(src);
+        self.ghost.set(dst, g);
+        let s = self.sphere.get(src);
+        self.sphere.set(dst, s);
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        self.positions.truncate(n);
+        self.inter_diameters.truncate(n);
+        self.uids.truncate(n);
+        self.moved_last.truncate(n);
+        self.moved_now.truncate(n);
+        self.ghost.truncate(n);
+        self.sphere.truncate(n);
+    }
+
+    pub fn clear(&mut self) {
+        self.positions.clear();
+        self.inter_diameters.clear();
+        self.uids.clear();
+        self.moved_last.clear();
+        self.moved_now.clear();
+        self.ghost.clear();
+        self.sphere.clear();
+    }
+
+    /// Detach the last entry (domain balancing).
+    pub fn pop_entry(&mut self) -> ColumnEntry {
+        ColumnEntry {
+            position: self.positions.pop().expect("pop on empty columns"),
+            inter_diameter: self.inter_diameters.pop().expect("columns coherent"),
+            uid: self.uids.pop().expect("columns coherent"),
+            moved_last: self.moved_last.pop(),
+            moved_now: self.moved_now.pop(),
+            ghost: self.ghost.pop(),
+            sphere: self.sphere.pop(),
+        }
+    }
+
+    /// Append a detached entry (domain balancing).
+    pub fn push_entry(&mut self, e: ColumnEntry) {
+        self.positions.push(e.position);
+        self.inter_diameters.push(e.inter_diameter);
+        self.uids.push(e.uid);
+        self.moved_last.push(e.moved_last);
+        self.moved_now.push(e.moved_now);
+        self.ghost.push(e.ghost);
+        self.sphere.push(e.sphere);
+    }
+
+    /// Reorder so that `new[i] = old[perm[i]]` (Morton sorting §5.4.2 —
+    /// mirrors `ResourceManager::reorder_domain`).
+    pub fn apply_perm(&mut self, perm: &[u32]) {
+        debug_assert_eq!(perm.len(), self.len());
+        self.positions = perm.iter().map(|&s| self.positions[s as usize]).collect();
+        self.inter_diameters = perm
+            .iter()
+            .map(|&s| self.inter_diameters[s as usize])
+            .collect();
+        self.uids = perm.iter().map(|&s| self.uids[s as usize]).collect();
+        self.moved_last = self.moved_last.permuted(perm);
+        self.moved_now = self.moved_now.permuted(perm);
+        self.ghost = self.ghost.permuted(perm);
+        self.sphere = self.sphere.permuted(perm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitvec_push_get_set() {
+        let mut b = BitVec::new();
+        for i in 0..200 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.len(), 200);
+        for i in 0..200 {
+            assert_eq!(b.get(i), i % 3 == 0, "bit {i}");
+        }
+        b.set(1, true);
+        assert!(b.get(1));
+        b.set(0, false);
+        assert!(!b.get(0));
+    }
+
+    #[test]
+    fn bitvec_truncate_keeps_invariant() {
+        let mut b = BitVec::new();
+        for _ in 0..130 {
+            b.push(true);
+        }
+        b.truncate(65);
+        assert_eq!(b.len(), 65);
+        assert!(b.any());
+        b.truncate(0);
+        assert!(!b.any());
+        // pushing after truncate must not resurrect stale bits
+        b.push(false);
+        assert!(!b.get(0));
+        assert!(!b.any());
+    }
+
+    #[test]
+    fn bitvec_pop_and_fill() {
+        let mut b = BitVec::new();
+        b.push(true);
+        b.push(false);
+        b.push(true);
+        assert!(b.pop());
+        assert!(!b.pop());
+        assert_eq!(b.len(), 1);
+        b.fill_false();
+        assert!(!b.any());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn bitvec_permuted() {
+        let mut b = BitVec::new();
+        for v in [true, false, false, true] {
+            b.push(v);
+        }
+        let p = b.permuted(&[3, 2, 1, 0]);
+        assert_eq!(
+            (0..4).map(|i| p.get(i)).collect::<Vec<_>>(),
+            vec![true, false, false, true]
+        );
+        let p2 = b.permuted(&[1, 0, 3, 2]);
+        assert_eq!(
+            (0..4).map(|i| p2.get(i)).collect::<Vec<_>>(),
+            vec![false, true, true, false]
+        );
+    }
+
+    #[test]
+    fn set_bit_raw_matches_set() {
+        let mut b = BitVec::new();
+        for _ in 0..100 {
+            b.push(false);
+        }
+        unsafe {
+            set_bit_raw(b.words_mut_ptr(), 7, true);
+            set_bit_raw(b.words_mut_ptr(), 93, true);
+            set_bit_raw(b.words_mut_ptr(), 7, false);
+        }
+        assert!(!b.get(7));
+        assert!(b.get(93));
+        assert!(b.any());
+    }
+}

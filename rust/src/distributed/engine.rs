@@ -133,7 +133,7 @@ impl RankWorker {
             return;
         }
         let ghosts = std::mem::take(&mut self.ghosts);
-        self.sim.rm.commit_removals(ghosts, &self.sim.pool);
+        self.sim.rm.commit_removals(ghosts);
     }
 
     /// Phase 2a: send agents that crossed a slab border.
@@ -155,7 +155,7 @@ impl RankWorker {
             let t = Instant::now();
             let mut agents: Vec<Box<dyn Agent>> = Vec::with_capacity(uids.len());
             if !uids.is_empty() {
-                let removed = self.sim.rm.commit_removals(uids, &self.sim.pool);
+                let removed = self.sim.rm.commit_removals(uids);
                 agents.extend(removed);
             }
             let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));

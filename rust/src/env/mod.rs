@@ -40,6 +40,20 @@ pub trait Environment: Send + Sync {
         f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
     );
 
+    /// Handle-only variant of [`Environment::for_each_neighbor`]: no
+    /// `&dyn Agent` is materialized, so implementations that index the
+    /// SoA columns (uniform grid) never chase the agent box. Callers
+    /// read what they need from the ResourceManager columns by handle.
+    fn for_each_neighbor_handles(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, Real),
+    ) {
+        self.for_each_neighbor(query, radius, rm, &mut |h, _a, d2| f(h, d2));
+    }
+
     /// Forget the index.
     fn clear(&mut self);
 
@@ -65,8 +79,10 @@ pub fn create_environment(param: &Param) -> Box<dyn Environment> {
 }
 
 /// Shared helper: compute the agent bounding box and the largest
-/// interaction diameter in one parallel pass (the bounds half of the
-/// grid build, paper §5.3.1).
+/// interaction diameter (the bounds half of the grid build, paper
+/// §5.3.1). Streams over the SoA position/diameter columns — a flat
+/// slice reduce per NUMA domain, no `Box<dyn Agent>` chasing — and is
+/// shared by the uniform grid, the kd-tree and the octree.
 pub(crate) fn compute_bounds(
     rm: &ResourceManager,
     pool: &ThreadPool,
@@ -88,25 +104,30 @@ pub(crate) fn compute_bounds(
             }
         }
     }
-    let handles = rm.handles();
-    let acc = pool.map_reduce(
-        0..handles.len(),
-        1024,
-        |i, acc: &mut Acc| {
-            let a = rm.get(handles[i]);
-            let p = a.position();
-            acc.min = acc.min.min(&p);
-            acc.max = acc.max.max(&p);
-            acc.largest = acc.largest.max(a.interaction_diameter());
-            acc.any = true;
-        },
-        |a, b| Acc {
-            min: a.min.min(&b.min),
-            max: a.max.max(&b.max),
-            largest: a.largest.max(b.largest),
-            any: a.any || b.any,
-        },
-    );
+    let combine = |a: Acc, b: Acc| Acc {
+        min: a.min.min(&b.min),
+        max: a.max.max(&b.max),
+        largest: a.largest.max(b.largest),
+        any: a.any || b.any,
+    };
+    let mut acc = Acc::default();
+    for d in 0..rm.num_domains() {
+        let positions = rm.positions(d);
+        let diameters = rm.interaction_diameters(d);
+        let domain_acc = pool.map_reduce(
+            0..positions.len(),
+            2048,
+            |i, acc: &mut Acc| {
+                let p = positions[i];
+                acc.min = acc.min.min(&p);
+                acc.max = acc.max.max(&p);
+                acc.largest = acc.largest.max(diameters[i]);
+                acc.any = true;
+            },
+            combine,
+        );
+        acc = combine(acc, domain_acc);
+    }
     if !acc.any {
         return (Real3::ZERO, Real3::ZERO, 1.0);
     }

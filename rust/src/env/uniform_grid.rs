@@ -15,6 +15,13 @@
 //!
 //! The build's insertion path is lock-free: box heads are atomic swap
 //! targets, successor entries are written once by the inserting thread.
+//!
+//! Candidate filtering streams over the ResourceManager's SoA position
+//! columns (§5.4 memory layout): the grid holds no private position
+//! copy and allocates nothing per update in the steady state. The
+//! columns are a frozen start-of-iteration snapshot, so candidate
+//! distances are independent of in-iteration movement — deterministic
+//! under any processing order.
 
 use crate::core::agent::{Agent, AgentHandle};
 use crate::core::math::Real3;
@@ -58,16 +65,11 @@ pub struct UniformGridEnvironment {
     boxes: Vec<GridBox>,
     /// linked-list successor per flat agent index
     successors: Vec<AtomicU32>,
-    /// start-of-iteration position per flat agent index. The search
-    /// filters candidates against this cache instead of chasing the
-    /// ResourceManager's Box pointers — one contiguous array scan per
-    /// box (§5.4's memory-layout principle applied to the index; also
-    /// makes candidate distances independent of in-iteration movement,
-    /// i.e. deterministic under any processing order).
-    positions: Vec<crate::core::math::Real3>,
-    /// flat index -> handle mapping (offset per domain)
+    /// flat index -> handle mapping (offset per domain; never empty
+    /// after an `update`)
     domain_offsets: Vec<u32>,
-    handles: Vec<AgentHandle>,
+    /// number of flat indices in the current build
+    num_flat: usize,
     stamp: u64,
     built: bool,
     bounds: (Real3, Real3),
@@ -82,9 +84,8 @@ impl UniformGridEnvironment {
             grid_min: Real3::ZERO,
             boxes: Vec::new(),
             successors: Vec::new(),
-            positions: Vec::new(),
             domain_offsets: Vec::new(),
-            handles: Vec::new(),
+            num_flat: 0,
             stamp: 0,
             built: false,
             bounds: (Real3::ZERO, Real3::ZERO),
@@ -118,22 +119,98 @@ impl UniformGridEnvironment {
     pub fn geometry(&self) -> ([usize; 3], Real3, Real) {
         (self.dims, self.grid_min, self.box_length)
     }
+
+    /// Shared traversal behind both neighbor visitors: scan the box
+    /// cube, filter candidates against the SoA position columns, and
+    /// report hits as `(handle, squared_distance)` — the agent box is
+    /// never touched here.
+    fn visit_candidates(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, Real),
+    ) {
+        if !self.built || self.num_flat == 0 {
+            return;
+        }
+        let r2 = radius * radius;
+        // Candidate filtering must stay one contiguous array load per
+        // candidate (the engine's hottest inner loop): with a single
+        // domain — the default — the flat index IS the column index, so
+        // hoist the slice once and defer the flat->handle mapping to
+        // actual hits. Multi-domain builds fall back to the
+        // partition_point mapping per candidate (<= a handful of
+        // simulated NUMA domains).
+        let single_domain: Option<&[Real3]> = if self.domain_offsets.len() == 1 {
+            Some(rm.positions(0))
+        } else {
+            None
+        };
+        // range of boxes the query sphere can touch
+        let reach = (radius / self.box_length).ceil() as isize;
+        let c = self.box_coord(query);
+        let lo = |i: usize| (c[i] as isize - reach).max(0) as usize;
+        let hi = |i: usize| ((c[i] as isize + reach) as usize).min(self.dims[i] - 1);
+        for z in lo(2)..=hi(2) {
+            for y in lo(1)..=hi(1) {
+                for x in lo(0)..=hi(0) {
+                    let b = &self.boxes[self.box_index([x, y, z])];
+                    if b.stamp.load(Ordering::Acquire) != self.stamp {
+                        continue; // stale box = empty
+                    }
+                    let mut cur = b.head.load(Ordering::Acquire);
+                    while cur != EMPTY {
+                        // filter against the contiguous position column;
+                        // touch the agent itself only on a hit
+                        match single_domain {
+                            Some(positions) => {
+                                let d2 =
+                                    positions[cur as usize].squared_distance(&query);
+                                if d2 <= r2 {
+                                    f(AgentHandle { numa: 0, idx: cur }, d2);
+                                }
+                            }
+                            None => {
+                                let h = self.flat_to_handle(cur);
+                                let d2 = rm.position_of(h).squared_distance(&query);
+                                if d2 <= r2 {
+                                    f(h, d2);
+                                }
+                            }
+                        }
+                        cur = self.successors[cur as usize].load(Ordering::Acquire);
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Environment for UniformGridEnvironment {
     fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
         let n = rm.num_agents();
-        self.handles = rm.handles();
         self.built = true;
+        self.num_flat = n;
+
+        // flat index mapping (dense, per-domain offsets) — kept valid
+        // even for an empty population so flat_to_handle never sees an
+        // empty offset table.
+        let ndom = rm.num_domains();
+        self.domain_offsets.clear();
+        let mut off = 0u32;
+        for d in 0..ndom {
+            self.domain_offsets.push(off);
+            off += rm.num_agents_in(d) as u32;
+        }
+
         if n == 0 {
             self.dims = [1, 1, 1];
-            self.boxes.clear();
-            self.successors.clear();
             self.bounds = (Real3::ZERO, Real3::ZERO);
             return;
         }
 
-        // --- bounds + box sizing (parallel reduce) ---
+        // --- bounds + box sizing (parallel column reduce) ---
         let (min, max, largest) = compute_bounds(rm, pool);
         self.bounds = (min, max);
         let mut box_len = self.requested_box_length.unwrap_or(largest).max(1e-9);
@@ -164,56 +241,42 @@ impl Environment for UniformGridEnvironment {
         if self.successors.len() < n {
             self.successors.resize_with(n, || AtomicU32::new(EMPTY));
         }
-        self.positions.resize(n, Real3::ZERO);
         self.stamp += 1;
         let stamp = self.stamp;
 
-        // flat index mapping (dense, per-domain offsets)
-        let ndom = rm.num_domains();
-        self.domain_offsets = Vec::with_capacity(ndom);
-        let mut off = 0u32;
-        for d in 0..ndom {
-            self.domain_offsets.push(off);
-            off += rm.num_agents_in(d) as u32;
-        }
-
-        // --- parallel insert (lock-free; paper's parallelized build) ---
-        struct PosPtr(*mut Real3);
-        unsafe impl Send for PosPtr {}
-        unsafe impl Sync for PosPtr {}
-        let pos_ptr = PosPtr(self.positions.as_mut_ptr());
+        // --- parallel insert (lock-free; paper's parallelized build):
+        // stream each domain's position column, no box chasing ---
         let this = &*self;
-        pool.parallel_for(0..n, 1024, |i, _wid| {
-            let pos_ptr = &pos_ptr;
-            let h = this.handles[i];
-            let pos = rm.get(h).position();
-            let bidx = this.box_index(this.box_coord(pos));
-            let gbox = &this.boxes[bidx];
-            // lazy reset via timestamp
-            if gbox.stamp.swap(stamp, Ordering::AcqRel) != stamp {
-                gbox.head.store(EMPTY, Ordering::Release);
-                gbox.count.store(0, Ordering::Release);
-            }
-            let flat = this.domain_offsets[h.numa as usize] + h.idx;
-            // SAFETY: each flat index is written by exactly one thread
-            // (one agent per slot).
-            unsafe { pos_ptr.0.add(flat as usize).write(pos) };
-            // push-front: successor[flat] = old head
-            let mut head = gbox.head.load(Ordering::Acquire);
-            loop {
-                this.successors[flat as usize].store(head, Ordering::Release);
-                match gbox.head.compare_exchange_weak(
-                    head,
-                    flat,
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
-                ) {
-                    Ok(_) => break,
-                    Err(h2) => head = h2,
+        for d in 0..ndom {
+            let positions = rm.positions(d);
+            let base_flat = this.domain_offsets[d];
+            pool.parallel_for(0..positions.len(), 1024, |i, _wid| {
+                let pos = positions[i];
+                let bidx = this.box_index(this.box_coord(pos));
+                let gbox = &this.boxes[bidx];
+                // lazy reset via timestamp
+                if gbox.stamp.swap(stamp, Ordering::AcqRel) != stamp {
+                    gbox.head.store(EMPTY, Ordering::Release);
+                    gbox.count.store(0, Ordering::Release);
                 }
-            }
-            gbox.count.fetch_add(1, Ordering::AcqRel);
-        });
+                let flat = base_flat + i as u32;
+                // push-front: successor[flat] = old head
+                let mut head = gbox.head.load(Ordering::Acquire);
+                loop {
+                    this.successors[flat as usize].store(head, Ordering::Release);
+                    match gbox.head.compare_exchange_weak(
+                        head,
+                        flat,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => break,
+                        Err(h2) => head = h2,
+                    }
+                }
+                gbox.count.fetch_add(1, Ordering::AcqRel);
+            });
+        }
     }
 
     fn for_each_neighbor(
@@ -223,43 +286,24 @@ impl Environment for UniformGridEnvironment {
         rm: &ResourceManager,
         f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
     ) {
-        if !self.built || self.handles.is_empty() {
-            return;
-        }
-        let r2 = radius * radius;
-        // range of boxes the query sphere can touch
-        let reach = (radius / self.box_length).ceil() as isize;
-        let c = self.box_coord_clamped(query);
-        let lo = |i: usize| (c[i] as isize - reach).max(0) as usize;
-        let hi = |i: usize| ((c[i] as isize + reach) as usize).min(self.dims[i] - 1);
-        for z in lo(2)..=hi(2) {
-            for y in lo(1)..=hi(1) {
-                for x in lo(0)..=hi(0) {
-                    let b = &self.boxes[self.box_index([x, y, z])];
-                    if b.stamp.load(Ordering::Acquire) != self.stamp {
-                        continue; // stale box = empty
-                    }
-                    let mut cur = b.head.load(Ordering::Acquire);
-                    while cur != EMPTY {
-                        // filter against the contiguous position cache;
-                        // touch the agent itself only on a hit
-                        let d2 = self.positions[cur as usize].squared_distance(&query);
-                        if d2 <= r2 {
-                            let h = self.flat_to_handle(cur);
-                            f(h, rm.get(h), d2);
-                        }
-                        cur = self.successors[cur as usize].load(Ordering::Acquire);
-                    }
-                }
-            }
-        }
+        self.visit_candidates(query, radius, rm, &mut |h, d2| f(h, rm.get(h), d2));
+    }
+
+    fn for_each_neighbor_handles(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, Real),
+    ) {
+        self.visit_candidates(query, radius, rm, f);
     }
 
     fn clear(&mut self) {
         self.boxes.clear();
         self.successors.clear();
-        self.positions.clear();
-        self.handles.clear();
+        self.domain_offsets.clear();
+        self.num_flat = 0;
         self.built = false;
     }
 
@@ -273,18 +317,20 @@ impl Environment for UniformGridEnvironment {
 }
 
 impl UniformGridEnvironment {
-    #[inline]
-    fn box_coord_clamped(&self, p: Real3) -> [usize; 3] {
-        self.box_coord(p)
-    }
-
+    /// Map a flat storage index back to its (domain, index) handle via
+    /// binary search over the per-domain offset prefix sums
+    /// (`domain_offsets[0] == 0`, monotone non-decreasing).
     #[inline]
     fn flat_to_handle(&self, flat: u32) -> AgentHandle {
-        // binary search over domain offsets (ndom is tiny)
-        let mut d = self.domain_offsets.len() - 1;
-        while self.domain_offsets[d] > flat {
-            d -= 1;
-        }
+        debug_assert!(
+            !self.domain_offsets.is_empty(),
+            "flat_to_handle before update()"
+        );
+        // first offset strictly greater than `flat`, minus one; empty
+        // domains produce equal consecutive offsets and are skipped
+        // correctly because partition_point returns the *last* domain
+        // whose offset is <= flat.
+        let d = self.domain_offsets.partition_point(|&off| off <= flat) - 1;
         AgentHandle {
             numa: d as u16,
             idx: flat - self.domain_offsets[d],
@@ -334,6 +380,23 @@ mod tests {
             assert!((d2 - 1.0).abs() < 1e-12);
         });
         assert_eq!(found, 1);
+    }
+
+    #[test]
+    fn handle_variant_matches_agent_variant() {
+        let rm = random_population(150, 7, 40.0, 2);
+        let pool = ThreadPool::new(2);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        let q = Real3::new(20.0, 20.0, 20.0);
+        let mut via_agent = Vec::new();
+        env.for_each_neighbor(q, 18.0, &rm, &mut |h, _a, d2| via_agent.push((h, d2)));
+        let mut via_handle = Vec::new();
+        env.for_each_neighbor_handles(q, 18.0, &rm, &mut |h, d2| via_handle.push((h, d2)));
+        via_agent.sort_by_key(|(h, _)| *h);
+        via_handle.sort_by_key(|(h, _)| *h);
+        assert_eq!(via_agent, via_handle);
+        assert!(!via_agent.is_empty());
     }
 
     #[test]
@@ -399,5 +462,39 @@ mod tests {
             },
         );
         assert_eq!(seen.len(), 200);
+    }
+
+    #[test]
+    fn flat_to_handle_partition_point_boundaries() {
+        // regression for the former linear scan: uneven domains
+        // including an empty middle domain must map every flat index to
+        // the right (domain, idx) pair, including both boundaries of
+        // each domain range.
+        let mut rm = ResourceManager::new(3);
+        // round-robin: 7 agents -> domain sizes [3, 2, 2]
+        for i in 0..7 {
+            rm.add_agent(Box::new(SphericalAgent::new(Real3::new(i as f64, 0.0, 0.0))));
+        }
+        // empty a middle domain: remove both domain-1 agents
+        let d1_uids: Vec<u64> = (0..rm.num_agents_in(1))
+            .map(|i| rm.get(AgentHandle::new(1, i)).uid())
+            .collect();
+        rm.commit_removals(d1_uids);
+        assert_eq!(rm.num_agents_in(1), 0);
+        let pool = ThreadPool::new(1);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        // offsets are [0, 3, 3]; flats 0..5 map to (0,0..3) then (2,0..2)
+        assert_eq!(env.domain_offsets, vec![0, 3, 3]);
+        let mut expected = Vec::new();
+        for i in 0..3 {
+            expected.push(AgentHandle::new(0, i));
+        }
+        for i in 0..2 {
+            expected.push(AgentHandle::new(2, i));
+        }
+        for (flat, want) in expected.iter().enumerate() {
+            assert_eq!(env.flat_to_handle(flat as u32), *want, "flat {flat}");
+        }
     }
 }

@@ -167,7 +167,7 @@ pub fn build(mut engine_param: Param, p: &CellSortingParams) -> Simulation {
 pub fn sorting_index(sim: &Simulation) -> Real {
     let mut total = 0.0;
     let mut counted = 0usize;
-    for h in sim.rm.handles() {
+    for &h in sim.rm.handles() {
         let a = sim.rm.get(h);
         let Some(cell) = a.downcast_ref::<SortingCell>() else {
             continue;

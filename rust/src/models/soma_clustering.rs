@@ -179,7 +179,7 @@ pub fn homotypic_fraction(sim: &Simulation, radius: Real) -> Real {
     let mut total = 0.0;
     let mut count = 0usize;
     let handles = sim.rm.handles();
-    for h in handles {
+    for &h in handles {
         let a = sim.rm.get(h);
         let Some(cell) = a.downcast_ref::<SomaCell>() else {
             continue;

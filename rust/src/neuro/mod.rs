@@ -340,7 +340,13 @@ mod tests {
         };
         let mut q = ThreadQueues::default();
         {
-            let mut ctx = AgentContext::new(&shared, &mut q, 42, Real3::ZERO);
+            let mut ctx = AgentContext::new(
+                &shared,
+                &mut q,
+                crate::core::agent::AgentHandle::new(0, 0),
+                42,
+                Real3::ZERO,
+            );
             f(&mut ctx);
         }
         q

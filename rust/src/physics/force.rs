@@ -17,6 +17,17 @@ use crate::Real;
 pub trait InteractionForce: Send + Sync {
     /// Force acting on `a` caused by `b`.
     fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3;
+
+    /// SoA fast path: force on a sphere at `pa` with radius `ra` caused
+    /// by a sphere at `pb` with radius `rb`. The mechanical-forces
+    /// operation calls this with values streamed from the hot-field
+    /// columns (no `&dyn Agent` materialized) whenever both agents are
+    /// plain spheres. Return `None` (the default) to force the generic
+    /// dyn-agent path — custom forces that inspect concrete agent types
+    /// (e.g. differential adhesion) simply keep the default.
+    fn sphere_sphere_fast(&self, _pa: Real3, _ra: Real, _pb: Real3, _rb: Real) -> Option<Real3> {
+        None
+    }
 }
 
 /// The default BioDynaMo/Cortex3D force.
@@ -116,6 +127,16 @@ pub fn closest_points_segments(p1: Real3, q1: Real3, p2: Real3, q2: Real3) -> (R
 }
 
 impl InteractionForce for DefaultForce {
+    /// Same formula as the sphere-sphere arm of `calculate`: given the
+    /// same inputs the two paths return bitwise-equal forces. Input
+    /// *sourcing* differs by caller — the SoA fast path feeds
+    /// start-of-iteration column values (Jacobi reads), the generic
+    /// path reads the live agent (Gauss-Seidel reads); see
+    /// DESIGN.md §2 for why both discretizations are sanctioned.
+    fn sphere_sphere_fast(&self, pa: Real3, ra: Real, pb: Real3, rb: Real) -> Option<Real3> {
+        Some(self.sphere_sphere(pa, ra, pb, rb))
+    }
+
     fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3 {
         let (ra, rb) = (a.diameter() / 2.0, b.diameter() / 2.0);
         match (a.shape(), b.shape()) {

@@ -54,7 +54,7 @@ impl StandaloneOperation for PjrtForcesOp {
     }
 
     fn run(&mut self, sim: &mut Simulation) {
-        let handles: Vec<AgentHandle> = sim.rm.handles();
+        let handles: Vec<AgentHandle> = sim.rm.handles().to_vec();
         if handles.is_empty() {
             return;
         }

@@ -25,7 +25,6 @@ fn cases(n: u64, base: u64, f: impl Fn(u64)) {
 fn fuzz_resource_manager_add_remove_storm() {
     cases(8, 101, |seed| {
         let mut rng = Rng::new(seed);
-        let pool = ThreadPool::new(1 + (seed % 3) as usize);
         let mut rm = ResourceManager::new(1 + (seed % 4) as usize);
         let mut live: Vec<u64> = Vec::new();
         for round in 0..20 {
@@ -42,7 +41,7 @@ fn fuzz_resource_manager_add_remove_storm() {
                 let idx = rng.uniform_usize(live.len());
                 to_remove.push(live.swap_remove(idx));
             }
-            let removed = rm.commit_removals(to_remove.clone(), &pool);
+            let removed = rm.commit_removals(to_remove.clone());
             assert_eq!(removed.len(), to_remove.len(), "seed={seed} round={round}");
             assert_eq!(rm.num_agents(), live.len(), "seed={seed} round={round}");
             // every live uid resolvable, every removed one gone
@@ -89,6 +88,156 @@ fn fuzz_reorder_is_a_permutation() {
             assert_eq!(after[i], before[src as usize], "seed={seed}");
         }
     });
+}
+
+// ---------------------------------------------------------- SoA coherence
+
+/// The SoA hot-field mirror invariant, via the engine's shared checker
+/// (`ResourceManager::assert_columns_coherent`, DESIGN.md §2) — wrapped
+/// so a violation names the reproducing seed.
+fn assert_soa_coherent(rm: &ResourceManager, seed: u64) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        rm.assert_columns_coherent();
+    }));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "coherence violation".to_string());
+        panic!("seed={seed}: {msg}");
+    }
+}
+
+#[test]
+fn fuzz_soa_columns_coherent_under_interleaved_mutation() {
+    // Interleave every structural mutation point the ResourceManager
+    // has — add_agent, commit_additions, commit_removals,
+    // reorder_domain, balance_domains, replace_agent, get_mut+sync,
+    // writeback_and_flip — and demand bitwise column coherence after
+    // each step.
+    cases(6, 707, |seed| {
+        let mut rng = Rng::new(seed);
+        let pool = ThreadPool::new(1 + (seed % 4) as usize);
+        let mut rm = ResourceManager::new(1 + (seed % 3) as usize);
+        let mut live: Vec<u64> = Vec::new();
+        for _round in 0..25 {
+            match rng.uniform_usize(8) {
+                0 => {
+                    // setup-phase adds
+                    for _ in 0..rng.uniform_usize(20) {
+                        let mut a = SphericalAgent::new(rng.uniform3(0.0, 80.0));
+                        a.base.diameter = rng.uniform(4.0, 14.0);
+                        let h = rm.add_agent(Box::new(a));
+                        live.push(rm.get(h).uid());
+                    }
+                }
+                1 => {
+                    // barrier adds with pre-assigned uids
+                    let batch: Vec<_> = (0..rng.uniform_usize(10))
+                        .map(|_| {
+                            let mut a = SphericalAgent::new(rng.uniform3(0.0, 80.0));
+                            a.base.uid = rm.issue_uid();
+                            live.push(a.base.uid);
+                            Box::new(a) as Box<dyn Agent>
+                        })
+                        .collect();
+                    rm.commit_additions(batch);
+                }
+                2 => {
+                    // barrier removals of a random subset
+                    let n_rm = rng.uniform_usize(live.len() + 1);
+                    let mut to_remove = Vec::new();
+                    for _ in 0..n_rm {
+                        let idx = rng.uniform_usize(live.len());
+                        to_remove.push(live.swap_remove(idx));
+                    }
+                    rm.commit_removals(to_remove);
+                }
+                3 => {
+                    // Morton-style reorder of one domain
+                    let d = rng.uniform_usize(rm.num_domains());
+                    let n = rm.num_agents_in(d);
+                    if n > 1 {
+                        let mut perm: Vec<u32> = (0..n as u32).collect();
+                        for i in (1..n).rev() {
+                            let j = rng.uniform_usize(i + 1);
+                            perm.swap(i, j);
+                        }
+                        rm.reorder_domain(d, &perm);
+                    }
+                }
+                4 => rm.balance_domains(),
+                5 => {
+                    // copy-context style replace
+                    if !live.is_empty() {
+                        let uid = live[rng.uniform_usize(live.len())];
+                        let h = rm.lookup(uid).unwrap();
+                        let mut clone = rm.get(h).clone_agent();
+                        clone.set_position(rng.uniform3(0.0, 80.0));
+                        clone.set_diameter(rng.uniform(4.0, 14.0));
+                        clone.base_mut().moved_now = rng.bernoulli(0.5);
+                        rm.replace_agent(h, clone);
+                    }
+                }
+                6 => {
+                    // out-of-band mutation + explicit sync
+                    if !live.is_empty() {
+                        let uid = live[rng.uniform_usize(live.len())];
+                        let h = rm.lookup(uid).unwrap();
+                        let a = rm.get_mut(h);
+                        a.set_position(rng.uniform3(0.0, 80.0));
+                        a.base_mut().moved_now = true;
+                        rm.sync_columns(&pool);
+                    }
+                }
+                _ => rm.writeback_and_flip(&pool),
+            }
+            assert_soa_coherent(&rm, seed);
+        }
+    });
+}
+
+#[test]
+fn grid_neighbor_results_identical_across_thread_counts() {
+    // Build the same population, update the grid with 1/2/8 worker
+    // threads, and demand bitwise-identical neighbor sets (the SoA
+    // columns and the lock-free build must not leak scheduling).
+    let build_rm = || {
+        let mut rng = Rng::new(97);
+        let mut rm = ResourceManager::new(3);
+        for _ in 0..3000 {
+            let mut a = SphericalAgent::new(rng.uniform3(0.0, 120.0));
+            a.base.diameter = rng.uniform(5.0, 12.0);
+            rm.add_agent(Box::new(a));
+        }
+        rm
+    };
+    let mut qrng = Rng::new(98);
+    let queries: Vec<(Real3, f64)> = (0..40)
+        .map(|_| (qrng.uniform3(-5.0, 125.0), qrng.uniform(2.0, 25.0)))
+        .collect();
+    let collect = |threads: usize| -> Vec<Vec<(AgentHandle, u64)>> {
+        let rm = build_rm();
+        let pool = ThreadPool::new(threads);
+        let mut env = UniformGridEnvironment::new(None);
+        env.update(&rm, &pool);
+        queries
+            .iter()
+            .map(|&(q, r)| {
+                let mut v: Vec<(AgentHandle, u64)> = Vec::new();
+                env.for_each_neighbor(q, r, &rm, &mut |h, _a, d2| {
+                    v.push((h, d2.to_bits()));
+                });
+                v.sort_unstable();
+                v
+            })
+            .collect()
+    };
+    let one = collect(1);
+    assert!(one.iter().map(|v| v.len()).sum::<usize>() > 0, "queries hit");
+    assert_eq!(one, collect(2), "1 vs 2 threads");
+    assert_eq!(one, collect(8), "1 vs 8 threads");
 }
 
 // ----------------------------------------------------------- environments

@@ -1,0 +1,87 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the workspace
+//! vendors the minimal API surface the engine uses: [`Error`],
+//! [`Result`], the [`anyhow!`] macro and the [`Context`] extension
+//! trait. Semantics match upstream for this subset; swap the `[patch]`
+//! to the real crate when a registry is available.
+
+use std::fmt;
+
+/// String-backed error value. Like upstream `anyhow::Error`, it
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// makes the blanket `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — build an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Attach context to an error (subset of upstream `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_from_and_context() {
+        let e: Error = anyhow!("bad {}", 42);
+        assert_eq!(e.to_string(), "bad 42");
+        assert!(fails_io().is_err());
+        let r: std::io::Result<()> = Err(std::io::Error::other("boom"));
+        let c = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(c.to_string().contains("reading manifest"));
+        assert!(c.to_string().contains("boom"));
+    }
+}
