@@ -19,12 +19,13 @@ fn main() {
         p
     };
 
+    let per_rank = scaled(4000, 200);
     let mut table = BenchTable::new(
-        "Fig 6.9: weak scaling (4000 agents per rank, 10 iterations)",
-        &["ranks", "agents", "runtime", "ns/agent-iter", "aura bytes/iter"],
+        &format!("Fig 6.9: weak scaling ({per_rank} agents per rank, 10 iterations)"),
+        &["ranks", "agents", "runtime", "ns/agent-iter", "aura bytes/iter", "exchange ser+deser"],
     );
     for ranks in [1usize, 2, 4, 8] {
-        let n = 4000 * ranks;
+        let n = per_rank * ranks;
         let model = SirParams {
             initial_susceptible: n,
             initial_infected: n / 100,
@@ -46,6 +47,7 @@ fn main() {
                 elapsed.as_nanos() as f64 / (engine.num_agents() as f64 * 10.0)
             ),
             fmt_bytes(s.aura_bytes_sent / 10),
+            fmt_duration(s.serialize_time + s.deserialize_time),
         ]);
     }
     table.print();

@@ -1,88 +1,91 @@
 //! §6.3.11 / Fig 6.11 — delta encoding of aura updates: data-volume
 //! reduction up to 3.5x in the paper, depending on how much of the
 //! serialized agent changes between iterations. This bench sweeps the
-//! movement scale (the churn knob) and adds the DEFLATE entropy stage.
+//! movement scale (the churn knob) over the four aura encodings the
+//! engine now speaks on the wire (plain, +delta, +deflate,
+//! +delta+deflate — announced per message in the 1-byte version/flags
+//! header, see DESIGN.md §5).
+//!
+//! CI smoke: `TA_BENCH_SCALE=0.02 TA_BENCH_JSON=... cargo bench
+//! --bench fig6_11_delta_encoding`.
 
 use teraagent::benchkit::*;
 use teraagent::core::param::{ExecutionContextMode, Param};
-use teraagent::distributed::delta::deflate;
 use teraagent::distributed::engine::DistributedEngine;
 use teraagent::models::epidemiology::{build, SirParams};
 
 fn main() {
     print_env_banner("fig6_11_delta_encoding");
-    let param = || {
+    let n = scaled(3000, 300);
+    let iterations = 20u64;
+    let param = |delta: bool, deflate: bool| {
         let mut p = Param::default();
         p.execution_context = ExecutionContextMode::Copy;
+        p.dist_aura_delta = delta;
+        p.dist_aura_deflate = deflate;
         p
     };
+    let mut report = JsonReport::new("fig6_11_delta_encoding");
     let mut table = BenchTable::new(
-        "Fig 6.11: aura data volume vs agent dynamics (2 ranks, 20 iterations)",
-        &["movement/iter", "raw bytes", "delta bytes", "delta ratio", "raw+deflate", "delta+deflate"],
+        &format!("Fig 6.11: aura data volume vs agent dynamics (2 ranks, {n} agents, {iterations} iterations)"),
+        &["movement/iter", "raw bytes", "delta", "deflate", "delta+deflate"],
     );
     for movement in [0.0f64, 0.05, 0.5, 5.79] {
         let model = SirParams {
-            initial_susceptible: 3000,
-            initial_infected: 30,
+            initial_susceptible: n,
+            initial_infected: n / 100,
             space_length: 80.0,
             max_movement: movement,
             ..SirParams::measles()
         };
         let builder = |p: Param| build(p, &model);
-        // raw
-        let mut plain = DistributedEngine::new(&builder, param(), 2, 1);
-        plain.simulate(20);
-        let raw = plain.stats().aura_bytes_sent;
-        // delta
-        let mut enc = DistributedEngine::new(&builder, param(), 2, 1);
-        enc.set_delta_enabled(true);
-        enc.simulate(20);
-        let delta_bytes = enc.stats().aura_bytes_sent;
-        assert_eq!(plain.state_snapshot(), enc.state_snapshot());
-        // entropy stage estimate: deflate a representative aura message
-        // stream captured from one extra iteration of each engine
-        let sample_raw: Vec<u8> = (0..raw.min(200_000)).map(|i| (i % 251) as u8).collect();
-        let _ = sample_raw; // deflate of synthetic data is meaningless; use real streams:
-        let raw_defl = estimate_deflate(&mut plain);
-        let delta_defl = estimate_deflate(&mut enc);
-        table.row(&[
-            format!("{movement}"),
-            fmt_bytes(raw),
-            fmt_bytes(delta_bytes),
-            format!("{:.2}x", raw as f64 / delta_bytes as f64),
-            format!("{raw_defl:.2}x"),
-            format!("{delta_defl:.2}x"),
-        ]);
+        let mut cells: Vec<String> = vec![format!("{movement}")];
+
+        // plain reference: raw == sent by construction
+        let mut plain = DistributedEngine::new(&builder, param(false, false), 2, 1);
+        let t = std::time::Instant::now();
+        plain.simulate(iterations);
+        report.row(
+            &format!("sir_movement_{movement}"),
+            "plain",
+            t.elapsed().as_secs_f64() / iterations as f64,
+        );
+        let raw_sent = plain.stats().aura_bytes_sent;
+        assert_eq!(plain.stats().aura_bytes_raw, raw_sent, "plain mode sends raw");
+        cells.push(fmt_bytes(raw_sent));
+        let expect = plain.state_snapshot();
+
+        for (delta, deflate, config) in [
+            (true, false, "delta"),
+            (false, true, "deflate"),
+            (true, true, "delta_deflate"),
+        ] {
+            let mut engine = DistributedEngine::new(&builder, param(delta, deflate), 2, 1);
+            let t = std::time::Instant::now();
+            engine.simulate(iterations);
+            let elapsed = t.elapsed();
+            let s = engine.stats();
+            // every encoding decodes to the identical trajectory
+            assert_eq!(engine.state_snapshot(), expect, "encoding changed the results");
+            cells.push(format!(
+                "{} ({:.2}x)",
+                fmt_bytes(s.aura_bytes_sent),
+                raw_sent as f64 / s.aura_bytes_sent as f64
+            ));
+            report.row(
+                &format!("sir_movement_{movement}"),
+                config,
+                elapsed.as_secs_f64() / iterations as f64,
+            );
+        }
+        table.row(&cells);
     }
     table.print();
+    report.write_if_requested();
     println!(
-        "paper: up to 3.5x volume reduction; the ratio degrades as more serialized\n\
-         bytes change per iteration (fast random movement), matching the sweep above."
+        "paper: up to 3.5x volume reduction; the delta ratio degrades as more serialized\n\
+         bytes change per iteration (fast random movement), matching the sweep above.\n\
+         The DEFLATE entropy stage keeps paying on the cross-record redundancy the\n\
+         XOR+RLE stage cannot see."
     );
-}
-
-/// Run one more superstep while capturing aura messages; return the
-/// additional compression a DEFLATE stage would give on that stream.
-fn estimate_deflate(engine: &mut DistributedEngine) -> f64 {
-    use teraagent::distributed::transport::{InProcessTransport, Transport};
-    let ranks = engine.workers.len();
-    let capture = InProcessTransport::new(ranks);
-    let mut raw_total = 0u64;
-    let mut defl_total = 0u64;
-    for w in &mut engine.workers {
-        w.remove_ghosts();
-    }
-    for w in &mut engine.workers {
-        w.aura_send(&capture).unwrap();
-    }
-    for w in &mut engine.workers {
-        for nb in w.partition.neighbors(w.rank) {
-            let msg = capture.recv(w.rank, nb, 2).unwrap();
-            raw_total += msg.len() as u64;
-            defl_total += deflate(&msg).len() as u64;
-        }
-    }
-    // note: ghosts were not re-added; the engine state remains valid
-    // for subsequent statistics but not for continued stepping.
-    raw_total as f64 / defl_total.max(1) as f64
 }

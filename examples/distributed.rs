@@ -1,10 +1,13 @@
 //! TeraAgent distributed engine demo (paper Ch. 6): runs the SIR model
-//! on R in-process ranks, verifies the result matches the
-//! shared-memory engine exactly (Fig 6.5), and reports the exchange
-//! statistics with and without delta encoding.
+//! on R in-process ranks — one scoped thread per rank, with the
+//! sequential phase-interleaved mode as the cross-check — verifies
+//! the result matches the shared-memory engine exactly (Fig 6.5), and
+//! reports the exchange statistics across the aura encodings (plain,
+//! delta, delta+DEFLATE).
 //!
 //! With `--tcp` it instead spawns one OS process per rank
-//! (`teraagent worker ...`) communicating over localhost TCP.
+//! (`teraagent worker ...`) communicating over localhost TCP with
+//! delta + DEFLATE enabled.
 //!
 //!     cargo run --release --example distributed [--tcp]
 
@@ -42,9 +45,17 @@ fn run_in_process() {
     let expect = simulation_snapshot(&shared);
 
     for ranks in [2usize, 4] {
-        for delta in [false, true] {
-            let mut engine = DistributedEngine::new(&builder, param(), ranks, 1);
-            engine.set_delta_enabled(delta);
+        for (threaded, delta, deflate) in [
+            (true, false, false),
+            (false, false, false), // sequential debug mode, same bits
+            (true, true, false),
+            (true, true, true),
+        ] {
+            let mut p = param();
+            p.dist_threaded_ranks = threaded;
+            p.dist_aura_delta = delta;
+            p.dist_aura_deflate = deflate;
+            let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
             let t = std::time::Instant::now();
             engine.simulate(iterations);
             let elapsed = t.elapsed();
@@ -52,11 +63,13 @@ fn run_in_process() {
             let identical = got == expect;
             let s = engine.stats();
             println!(
-                "ranks={ranks} delta={delta}: {} agents, {:.3}s, identical={identical}, \
-                 migrated={}, ghosts={}, aura {} -> {} bytes ({:.2}x), ser {:.1}ms deser {:.1}ms",
+                "ranks={ranks} threaded={threaded} delta={delta} deflate={deflate}: \
+                 {} agents, {:.3}s, identical={identical}, migrated={} (fwd {}), \
+                 ghosts={}, aura {} -> {} bytes ({:.2}x), ser {:.1}ms deser {:.1}ms",
                 engine.num_agents(),
                 elapsed.as_secs_f64(),
                 s.migrated_agents,
+                s.forwarded_agents,
                 s.ghosts_received,
                 s.aura_bytes_raw,
                 s.aura_bytes_sent,
@@ -67,7 +80,10 @@ fn run_in_process() {
             assert!(identical, "Fig 6.5 correctness violated");
         }
     }
-    println!("\nOK: distributed == shared-memory for all configurations (paper Fig 6.5)");
+    println!(
+        "\nOK: distributed == shared-memory for all rank counts, execution modes\n\
+         (threaded / sequential) and aura encodings (paper Fig 6.5)"
+    );
 }
 
 fn run_tcp() {
@@ -102,6 +118,10 @@ fn run_tcp() {
                     "20",
                     "--param",
                     "execution_context=copy",
+                    "--param",
+                    "dist_aura_delta=true",
+                    "--param",
+                    "dist_aura_deflate=true",
                 ])
                 .spawn()
                 .expect("spawn worker")

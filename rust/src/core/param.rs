@@ -99,6 +99,17 @@ pub struct Param {
     pub attraction_gamma: Real,
     /// Diffusion solver backend.
     pub diffusion_backend: DiffusionBackend,
+    /// Distributed engine (Ch. 6): run the ranks of an in-process
+    /// `DistributedEngine` on scoped threads (true, the default) or
+    /// phase-interleaved in one thread (false — the sequential debug
+    /// mode; results are bitwise identical either way, Fig 6.5).
+    pub dist_threaded_ranks: bool,
+    /// Distributed engine: delta-encode aura updates against the
+    /// previous exchange (§6.2.3, wire flag `FLAG_DELTA`).
+    pub dist_aura_delta: bool,
+    /// Distributed engine: DEFLATE the aura payload after (optional)
+    /// delta encoding — the entropy stage (wire flag `FLAG_DEFLATE`).
+    pub dist_aura_deflate: bool,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -131,6 +142,9 @@ impl Default for Param {
             repulsion_k: 2.0,
             attraction_gamma: 1.0,
             diffusion_backend: DiffusionBackend::Native,
+            dist_threaded_ranks: true,
+            dist_aura_delta: false,
+            dist_aura_deflate: false,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -245,6 +259,15 @@ impl Param {
                     "pjrt" => DiffusionBackend::Pjrt,
                     _ => return Err(err(k, value)),
                 }
+            }
+            "dist_threaded_ranks" => {
+                self.dist_threaded_ranks = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_aura_delta" => {
+                self.dist_aura_delta = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_aura_deflate" => {
+                self.dist_aura_deflate = value.parse().map_err(|_| err(k, value))?
             }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
@@ -363,10 +386,16 @@ mod tests {
         p.apply_kv("execution_order", "row").unwrap();
         p.apply_kv("execution_context", "copy").unwrap();
         p.apply_kv("diffusion_backend", "pjrt").unwrap();
+        p.apply_kv("dist_threaded_ranks", "false").unwrap();
+        p.apply_kv("dist_aura_delta", "true").unwrap();
+        p.apply_kv("dist_aura_deflate", "true").unwrap();
         assert_eq!(p.num_threads, 8);
         assert_eq!(p.execution_order, ExecutionOrder::RowWise);
         assert_eq!(p.execution_context, ExecutionContextMode::Copy);
         assert_eq!(p.diffusion_backend, DiffusionBackend::Pjrt);
+        assert!(!p.dist_threaded_ranks);
+        assert!(p.dist_aura_delta);
+        assert!(p.dist_aura_deflate);
     }
 
     #[test]

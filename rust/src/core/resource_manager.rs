@@ -10,10 +10,12 @@
 //!
 //! ## SoA hot-field mirror
 //! Next to each domain's boxed agents sits a [`HotColumns`] attribute
-//! store: contiguous columns of position, interaction diameter, UID,
-//! and the moved/ghost/sphere bitsets. The four hottest loops (grid
-//! build, bounds reduction, force fast path, moved-flag flip) stream
-//! over these columns instead of chasing `Box<dyn Agent>` pointers.
+//! store: contiguous columns of position, interaction diameter,
+//! geometric diameter, UID, type tag, and the moved/ghost/sphere
+//! bitsets. The four hottest loops (grid build, bounds reduction,
+//! force fast path, moved-flag flip) stream over these columns instead
+//! of chasing `Box<dyn Agent>` pointers, and the Ch. 6 exchange path
+//! scans and serializes from them (see `distributed::engine`).
 //! Coherence contract (DESIGN.md §SoA):
 //! * every structural mutation (`add_agent`, `commit_additions`,
 //!   `commit_removals`, `reorder_domain`, `balance_domains`,
@@ -248,6 +250,19 @@ impl ResourceManager {
     #[inline]
     pub fn uid_of(&self, h: AgentHandle) -> AgentUid {
         self.domains[h.numa as usize].cols.uids[h.idx as usize]
+    }
+
+    /// Geometric diameter (Ch. 6 base-record field — distinct from the
+    /// interaction diameter for non-sphere agents).
+    #[inline]
+    pub fn diameter_of(&self, h: AgentHandle) -> Real {
+        self.domains[h.numa as usize].cols.diameters[h.idx as usize]
+    }
+
+    /// Serialization type tag (Ch. 6 base-record field).
+    #[inline]
+    pub fn type_tag_of(&self, h: AgentHandle) -> u16 {
+        self.domains[h.numa as usize].cols.type_tags[h.idx as usize]
     }
 
     /// §5.5: did the agent move in the previous iteration? (bitset read)
@@ -574,6 +589,7 @@ impl ResourceManager {
                     unsafe {
                         p.pos.add(i).write(b.position);
                         p.inter.add(i).write(inter);
+                        p.diam.add(i).write(b.diameter);
                         p.uid.add(i).write(b.uid);
                         set_bit_raw(p.moved_last, i, b.moved_last);
                         set_bit_raw(p.moved_now, i, b.moved_now);
@@ -604,6 +620,8 @@ impl ResourceManager {
                 "interaction diameter {h:?}"
             );
             assert_eq!(self.uid_of(h), b.uid, "uid {h:?}");
+            assert_eq!(self.diameter_of(h), b.diameter, "diameter {h:?}");
+            assert_eq!(self.type_tag_of(h), a.type_tag(), "type tag {h:?}");
             assert_eq!(self.moved_last_of(h), b.moved_last, "moved_last {h:?}");
             assert_eq!(
                 self.columns(h.numa as usize).moved_now.get(h.idx as usize),
@@ -669,9 +687,12 @@ impl ResourceManager {
                         let moved = b.moved_now;
                         b.moved_last = moved;
                         b.moved_now = false;
+                        // type_tags are skipped: a slot's tag never
+                        // changes between structural mutations.
                         unsafe {
                             p.pos.add(i).write(b.position);
                             p.inter.add(i).write(inter);
+                            p.diam.add(i).write(b.diameter);
                             set_bit_raw(p.moved_now, i, moved);
                             set_bit_raw(p.ghost, i, b.is_ghost);
                             set_bit_raw(p.sphere, i, sphere);
@@ -695,6 +716,7 @@ impl ResourceManager {
 struct ColPtrs {
     pos: *mut Real3,
     inter: *mut Real,
+    diam: *mut Real,
     uid: *mut AgentUid,
     moved_last: *mut u64,
     moved_now: *mut u64,
@@ -713,6 +735,7 @@ impl ColPtrs {
         ColPtrs {
             pos: cols.positions.as_mut_ptr(),
             inter: cols.inter_diameters.as_mut_ptr(),
+            diam: cols.diameters.as_mut_ptr(),
             uid: cols.uids.as_mut_ptr(),
             moved_last: cols.moved_last.words_mut_ptr(),
             moved_now: cols.moved_now.words_mut_ptr(),

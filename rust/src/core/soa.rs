@@ -108,6 +108,12 @@ impl BitVec {
         self.words.iter().any(|&w| w != 0)
     }
 
+    /// Number of set bits — O(len/64) popcount reduce (valid because
+    /// bits at index `>= len` are guaranteed zero).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
     /// New BitVec with `out[i] = self[perm[i]]`.
     pub fn permuted(&self, perm: &[u32]) -> BitVec {
         let mut out = BitVec::new();
@@ -149,8 +155,16 @@ pub struct HotColumns {
     pub positions: Vec<Real3>,
     /// `Agent::interaction_diameter()` — grid box sizing and bounds.
     pub inter_diameters: Vec<Real>,
+    /// `AgentBase::diameter` — the geometric diameter serialized in the
+    /// Ch. 6 base record (differs from `inter_diameters` for non-sphere
+    /// agents).
+    pub diameters: Vec<Real>,
     /// `AgentBase::uid` — deterministic force summation order.
     pub uids: Vec<AgentUid>,
+    /// `Agent::type_tag()` — Ch. 6 serialization dispatch. Immutable
+    /// per agent, so structural mutations alone keep it coherent (the
+    /// per-iteration writeback skips it).
+    pub type_tags: Vec<u16>,
     /// §5.5: did the agent move in the previous iteration?
     pub moved_last: BitVec,
     /// Staged §5.5 flag mirrored from `AgentBase::moved_now` at the
@@ -169,7 +183,9 @@ pub struct HotColumns {
 pub struct ColumnEntry {
     pub position: Real3,
     pub inter_diameter: Real,
+    pub diameter: Real,
     pub uid: AgentUid,
+    pub type_tag: u16,
     pub moved_last: bool,
     pub moved_now: bool,
     pub ghost: bool,
@@ -198,7 +214,9 @@ impl HotColumns {
         let b = a.base();
         self.positions.push(b.position);
         self.inter_diameters.push(a.interaction_diameter());
+        self.diameters.push(b.diameter);
         self.uids.push(b.uid);
+        self.type_tags.push(a.type_tag());
         self.moved_last.push(b.moved_last);
         self.moved_now.push(b.moved_now);
         self.ghost.push(b.is_ghost);
@@ -210,7 +228,9 @@ impl HotColumns {
         let b = a.base();
         self.positions[i] = b.position;
         self.inter_diameters[i] = a.interaction_diameter();
+        self.diameters[i] = b.diameter;
         self.uids[i] = b.uid;
+        self.type_tags[i] = a.type_tag();
         self.moved_last.set(i, b.moved_last);
         self.moved_now.set(i, b.moved_now);
         self.ghost.set(i, b.is_ghost);
@@ -222,7 +242,9 @@ impl HotColumns {
     pub fn move_entry(&mut self, dst: usize, src: usize) {
         self.positions[dst] = self.positions[src];
         self.inter_diameters[dst] = self.inter_diameters[src];
+        self.diameters[dst] = self.diameters[src];
         self.uids[dst] = self.uids[src];
+        self.type_tags[dst] = self.type_tags[src];
         let (ml, mn) = (self.moved_last.get(src), self.moved_now.get(src));
         self.moved_last.set(dst, ml);
         self.moved_now.set(dst, mn);
@@ -235,7 +257,9 @@ impl HotColumns {
     pub fn truncate(&mut self, n: usize) {
         self.positions.truncate(n);
         self.inter_diameters.truncate(n);
+        self.diameters.truncate(n);
         self.uids.truncate(n);
+        self.type_tags.truncate(n);
         self.moved_last.truncate(n);
         self.moved_now.truncate(n);
         self.ghost.truncate(n);
@@ -245,7 +269,9 @@ impl HotColumns {
     pub fn clear(&mut self) {
         self.positions.clear();
         self.inter_diameters.clear();
+        self.diameters.clear();
         self.uids.clear();
+        self.type_tags.clear();
         self.moved_last.clear();
         self.moved_now.clear();
         self.ghost.clear();
@@ -257,7 +283,9 @@ impl HotColumns {
         ColumnEntry {
             position: self.positions.pop().expect("pop on empty columns"),
             inter_diameter: self.inter_diameters.pop().expect("columns coherent"),
+            diameter: self.diameters.pop().expect("columns coherent"),
             uid: self.uids.pop().expect("columns coherent"),
+            type_tag: self.type_tags.pop().expect("columns coherent"),
             moved_last: self.moved_last.pop(),
             moved_now: self.moved_now.pop(),
             ghost: self.ghost.pop(),
@@ -269,7 +297,9 @@ impl HotColumns {
     pub fn push_entry(&mut self, e: ColumnEntry) {
         self.positions.push(e.position);
         self.inter_diameters.push(e.inter_diameter);
+        self.diameters.push(e.diameter);
         self.uids.push(e.uid);
+        self.type_tags.push(e.type_tag);
         self.moved_last.push(e.moved_last);
         self.moved_now.push(e.moved_now);
         self.ghost.push(e.ghost);
@@ -285,7 +315,9 @@ impl HotColumns {
             .iter()
             .map(|&s| self.inter_diameters[s as usize])
             .collect();
+        self.diameters = perm.iter().map(|&s| self.diameters[s as usize]).collect();
         self.uids = perm.iter().map(|&s| self.uids[s as usize]).collect();
+        self.type_tags = perm.iter().map(|&s| self.type_tags[s as usize]).collect();
         self.moved_last = self.moved_last.permuted(perm);
         self.moved_now = self.moved_now.permuted(perm);
         self.ghost = self.ghost.permuted(perm);
@@ -342,6 +374,18 @@ mod tests {
         b.fill_false();
         assert!(!b.any());
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn bitvec_count_ones() {
+        let mut b = BitVec::new();
+        assert_eq!(b.count_ones(), 0);
+        for i in 0..200 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.count_ones(), 67); // ceil(200/3)
+        b.truncate(3);
+        assert_eq!(b.count_ones(), 1);
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //!
 //! Wire format per agent: `mode(1) uid(8) len(4) payload`, where mode
 //! 0 = full record, 1 = XOR+RLE delta (same length as last image).
+//!
+//! Both stages are wired into the aura message path behind `Param`
+//! knobs (`dist_aura_delta`, `dist_aura_deflate`) and announced in the
+//! aura message's 1-byte version/flags header — see
+//! `engine::RankWorker::aura_send` and DESIGN.md §5 for the framing.
+//! [`deflate`]/[`inflate`] run through the vendored `flate2` stand-in
+//! (`vendor/flate2`), which is API-compatible but not RFC 1951
+//! wire-compatible; swap the path dependency for the real crate for
+//! zlib interoperability.
 
 use crate::core::agent::AgentUid;
 use std::collections::HashMap;

@@ -7,26 +7,56 @@
 //!
 //! 1. **ghost removal**  — drop last iteration's aura copies;
 //! 2. **migration**      — agents that crossed a slab border are
-//!    serialized and moved to their new owner;
+//!    serialized and moved to their new owner (multi-hop: agents whose
+//!    new owner is not a direct neighbor are forwarded through the
+//!    neighbor closest to the owner and re-routed on arrival);
 //! 3. **aura exchange**  — agents within one interaction radius of a
-//!    border are serialized (optionally delta-encoded, §6.2.3) and
-//!    mirrored to the neighbor as ghosts;
+//!    border are serialized (optionally delta-encoded, §6.2.3, and/or
+//!    DEFLATE-compressed) and mirrored to the neighbor as ghosts;
 //! 4. **local iteration** — the regular Algorithm-8 step; ghosts act
 //!    as neighbors only.
 //!
-//! Phases are split into send/recv halves so that in-process
-//! (sequential ranks), threaded, and TCP multi-process execution use
-//! the same code and the same deterministic message protocol.
+//! Phases are split into send/recv halves so that sequential
+//! in-process, rank-per-thread in-process, and TCP multi-process
+//! execution use the same code ([`RankWorker::superstep`]) and the
+//! same deterministic message protocol. The in-process engine runs one
+//! scoped thread per rank by default (`Param::dist_threaded_ranks`);
+//! the sequential mode interleaves the phases across ranks in one
+//! thread and produces bitwise-identical results — the transport's
+//! per-channel FIFO mailboxes make message contents independent of
+//! rank scheduling.
+//!
+//! Exchange membership (who migrates, who is mirrored) is computed by
+//! streaming the ResourceManager's SoA columns — position, uid and the
+//! ghost bitset — and the wire records are assembled straight from the
+//! columns (`tailored::serialize_batch_from_columns`); the boxed agent
+//! is consulted only for the type-specific extra section.
+//!
+//! ## Aura wire format
+//! Every aura message starts with a 1-byte header:
+//! `version(4 bits) | flags(4 bits)`, flags = [`FLAG_DELTA`] |
+//! [`FLAG_DEFLATE`]. The payload is a tailored batch (plain) or a
+//! `count(u32)` + per-agent delta stream (§6.2.3), optionally run
+//! through the DEFLATE entropy stage. Receivers dispatch on the header
+//! — the two sides need no out-of-band configuration agreement.
 //!
 //! Correctness vs the shared-memory engine (paper Fig 6.5): with the
 //! copy execution context, per-agent RNG streams keyed by UID, and
 //! UID-ordered force summation, R-rank execution reproduces the 1-rank
 //! trajectories exactly — bench `fig6_05_correctness` asserts it.
+//! Precondition: per-iteration displacement stays within one slab
+//! (`ExchangeStats::forwarded_agents == 0`), which every engine model
+//! satisfies by construction. An agent displaced further is delivered
+//! through multi-hop forwarding — it is owned (and stepped) by the
+//! intermediate rank for the supersteps it is in transit, so its
+//! neighborhood there differs from the 1-rank run; forwarding trades
+//! that transient fidelity for guaranteed delivery where the old code
+//! silently corrupted ownership.
 
-use crate::core::agent::{Agent, AgentUid};
+use crate::core::agent::{Agent, AgentHandle, AgentUid};
 use crate::core::param::Param;
 use crate::core::simulation::Simulation;
-use crate::distributed::delta::DeltaCodec;
+use crate::distributed::delta::{deflate, inflate, DeltaCodec};
 use crate::distributed::partition::SlabPartition;
 use crate::distributed::serialize::{tailored, AgentRegistry};
 use crate::distributed::transport::{InProcessTransport, TcpTransport, Transport};
@@ -36,11 +66,24 @@ use std::time::{Duration, Instant};
 const TAG_MIGRATION: u32 = 1;
 const TAG_AURA: u32 = 2;
 
+/// Aura wire-format version (high nibble of the 1-byte header).
+pub const WIRE_VERSION: u8 = 1;
+/// Aura header flag: the payload is a delta stream (§6.2.3).
+pub const FLAG_DELTA: u8 = 0b0001;
+/// Aura header flag: the payload went through the DEFLATE entropy
+/// stage after (optional) delta encoding.
+pub const FLAG_DEFLATE: u8 = 0b0010;
+
 /// Exchange accounting (feeds the Ch. 6 benches).
 #[derive(Debug, Default, Clone)]
 pub struct ExchangeStats {
     pub migration_bytes: u64,
     pub migrated_agents: u64,
+    /// Migrated agents whose owner was not a direct neighbor — routed
+    /// through the nearest neighbor instead (multi-hop).
+    pub forwarded_agents: u64,
+    /// What the aura exchange would have sent without delta encoding
+    /// and without the entropy stage (header + count + plain records).
     pub aura_bytes_raw: u64,
     pub aura_bytes_sent: u64,
     pub ghosts_received: u64,
@@ -61,6 +104,7 @@ impl ExchangeStats {
     fn merge(&mut self, other: &ExchangeStats) {
         self.migration_bytes += other.migration_bytes;
         self.migrated_agents += other.migrated_agents;
+        self.forwarded_agents += other.forwarded_agents;
         self.aura_bytes_raw += other.aura_bytes_raw;
         self.aura_bytes_sent += other.aura_bytes_sent;
         self.ghosts_received += other.ghosts_received;
@@ -75,7 +119,10 @@ pub struct RankWorker {
     pub rank: usize,
     pub partition: SlabPartition,
     pub sim: Simulation,
+    /// Delta-encode aura updates (§6.2.3, wire flag [`FLAG_DELTA`]).
     pub delta_enabled: bool,
+    /// DEFLATE the aura payload (wire flag [`FLAG_DEFLATE`]).
+    pub deflate_enabled: bool,
     pub stats: ExchangeStats,
     ghosts: Vec<AgentUid>,
     send_codecs: HashMap<usize, DeltaCodec>,
@@ -95,6 +142,7 @@ impl RankWorker {
             partition,
             sim,
             delta_enabled: false,
+            deflate_enabled: false,
             stats: ExchangeStats::default(),
             ghosts: Vec::new(),
             send_codecs: HashMap::new(),
@@ -118,13 +166,29 @@ impl RankWorker {
         });
     }
 
-    /// Number of agents this rank owns (ghosts excluded).
+    /// Number of agents this rank owns (ghosts excluded) — an
+    /// O(n/64) bitset reduce over the SoA ghost column.
     pub fn owned_agents(&self) -> usize {
-        let mut n = 0;
-        self.sim.rm.for_each_agent(|_, a| {
-            n += usize::from(!a.base().is_ghost);
-        });
-        n
+        let rm = &self.sim.rm;
+        (0..rm.num_domains())
+            .map(|d| {
+                let cols = rm.columns(d);
+                cols.len() - cols.ghost.count_ones()
+            })
+            .sum()
+    }
+
+    /// One full superstep of this rank (phases 1–4). Sequential
+    /// in-process, rank-per-thread in-process, and TCP multi-process
+    /// execution all drive exactly this sequence.
+    pub fn superstep(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        self.remove_ghosts();
+        self.migrate_send(transport)?;
+        self.migrate_recv(transport)?;
+        self.aura_send(transport)?;
+        self.aura_recv(transport)?;
+        self.step_local();
+        Ok(())
     }
 
     /// Phase 1: drop last iteration's ghosts.
@@ -136,47 +200,80 @@ impl RankWorker {
         self.sim.rm.commit_removals(ghosts);
     }
 
-    /// Phase 2a: send agents that crossed a slab border.
+    /// Phase 2a: send agents that crossed a slab border. Membership is
+    /// a stream over the SoA position/ghost columns; the wire records
+    /// are serialized from the columns before the removal compaction
+    /// invalidates the handles.
+    ///
+    /// Agents whose new owner is **not** a direct neighbor (a
+    /// displacement larger than one slab) are forwarded to the
+    /// neighbor closest to the owner; the receiving rank re-evaluates
+    /// ownership on its next `migrate_send` scan and forwards again
+    /// until the agent arrives. Previously these agents were silently
+    /// dropped from the `leaving` set in release builds. While in
+    /// transit the agent steps at the intermediate rank, so the
+    /// Fig 6.5 bitwise contract is only guaranteed when
+    /// `forwarded_agents == 0` (see the module docs).
     pub fn migrate_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
-        let mut leaving: HashMap<usize, Vec<AgentUid>> = HashMap::new();
-        self.sim.rm.for_each_agent(|_, a| {
-            if a.base().is_ghost {
-                return;
+        let neighbors = self.partition.neighbors(self.rank);
+        if neighbors.is_empty() {
+            return Ok(());
+        }
+        // out-of-band `&mut` access between supersteps (tests, setup
+        // edits) marks the mirror dirty — resync before scanning it
+        self.sim.rm.sync_columns_if_dirty(&self.sim.pool);
+        let rm = &self.sim.rm;
+        let mut leaving: HashMap<usize, (Vec<AgentHandle>, Vec<AgentUid>)> = HashMap::new();
+        for d in 0..rm.num_domains() {
+            let cols = rm.columns(d);
+            for (i, pos) in cols.positions.iter().enumerate() {
+                if cols.ghost.get(i) {
+                    continue;
+                }
+                let owner = self.partition.rank_of(*pos);
+                if owner == self.rank {
+                    continue;
+                }
+                let target = if neighbors.contains(&owner) {
+                    owner
+                } else {
+                    self.stats.forwarded_agents += 1;
+                    self.partition.route_toward(self.rank, owner)
+                };
+                let entry = leaving.entry(target).or_default();
+                entry.0.push(AgentHandle::new(d, i));
+                entry.1.push(cols.uids[i]);
             }
-            let owner = self.partition.rank_of(a.position());
-            if owner != self.rank {
-                leaving.entry(owner).or_default().push(a.uid());
-            }
-        });
-        // serialize + remove + send per target; always send (possibly
+        }
+        // serialize per target from the columns; always send (possibly
         // empty) to every neighbor so the receive side can block.
-        for nb in self.partition.neighbors(self.rank) {
-            let uids = leaving.remove(&nb).unwrap_or_default();
+        let mut outgoing: Vec<(usize, Vec<u8>)> = Vec::with_capacity(neighbors.len());
+        let mut removed_uids: Vec<AgentUid> = Vec::new();
+        for &nb in &neighbors {
+            let (handles, uids) = leaving.remove(&nb).unwrap_or_default();
             let t = Instant::now();
-            let mut agents: Vec<Box<dyn Agent>> = Vec::with_capacity(uids.len());
-            if !uids.is_empty() {
-                let removed = self.sim.rm.commit_removals(uids);
-                agents.extend(removed);
-            }
-            let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+            let buf = tailored::serialize_batch_from_columns(rm, &handles);
             self.stats.serialize_time += t.elapsed();
             self.stats.migration_bytes += buf.len() as u64;
-            self.stats.migrated_agents += agents.len() as u64;
+            self.stats.migrated_agents += handles.len() as u64;
             self.stats.messages += 1;
+            removed_uids.extend(uids);
+            outgoing.push((nb, buf));
+        }
+        debug_assert!(leaving.is_empty(), "route_toward must return a neighbor");
+        if !removed_uids.is_empty() {
+            self.sim.rm.commit_removals(removed_uids);
+        }
+        for (nb, buf) in outgoing {
             transport.send(self.rank, nb, TAG_MIGRATION, buf)?;
         }
-        // agents "leaving" to non-neighbor ranks can only happen with
-        // pathological displacements; forward via the nearest neighbor
-        // would be the general solution — here we assert it away (the
-        // engine caps per-iteration displacement far below a slab).
-        debug_assert!(
-            leaving.is_empty(),
-            "agent skipped an entire slab: {leaving:?}"
-        );
         Ok(())
     }
 
-    /// Phase 2b: receive migrated agents.
+    /// Phase 2b: receive migrated agents. An agent forwarded toward a
+    /// non-neighbor owner is committed here like any other arrival;
+    /// the next superstep's `migrate_send` scan re-evaluates its owner
+    /// and forwards it onward (multi-hop migration).
     pub fn migrate_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
         for nb in self.partition.neighbors(self.rank) {
             let buf = transport.recv(self.rank, nb, TAG_MIGRATION)?;
@@ -197,69 +294,122 @@ impl RankWorker {
         Ok(())
     }
 
-    /// Phase 3a: send aura agents to neighbors (delta-encoded when
-    /// enabled).
+    /// Phase 3a: send aura agents to neighbors. Membership streams the
+    /// SoA columns; the payload is delta-encoded and/or deflated per
+    /// the worker flags, announced in the 1-byte wire header.
     pub fn aura_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
-        let mut per_target: HashMap<usize, Vec<AgentUid>> = HashMap::new();
-        self.sim.rm.for_each_agent(|_, a| {
-            if a.base().is_ghost {
-                return;
+        let neighbors = self.partition.neighbors(self.rank);
+        if neighbors.is_empty() {
+            return Ok(());
+        }
+        self.sim.rm.sync_columns_if_dirty(&self.sim.pool);
+        let rm = &self.sim.rm;
+        let mut per_target: HashMap<usize, Vec<(AgentUid, AgentHandle)>> = HashMap::new();
+        for d in 0..rm.num_domains() {
+            let cols = rm.columns(d);
+            for (i, pos) in cols.positions.iter().enumerate() {
+                if cols.ghost.get(i) {
+                    continue;
+                }
+                for t in self.partition.aura_targets(*pos, self.rank) {
+                    per_target
+                        .entry(t)
+                        .or_default()
+                        .push((cols.uids[i], AgentHandle::new(d, i)));
+                }
             }
-            for t in self.partition.aura_targets(a.position(), self.rank) {
-                per_target.entry(t).or_default().push(a.uid());
-            }
-        });
-        for nb in self.partition.neighbors(self.rank) {
-            let mut uids = per_target.remove(&nb).unwrap_or_default();
-            uids.sort_unstable(); // deterministic message content
+        }
+        for &nb in &neighbors {
+            let mut members = per_target.remove(&nb).unwrap_or_default();
+            members.sort_unstable_by_key(|&(uid, _)| uid); // deterministic message content
             let t = Instant::now();
-            let buf = if self.delta_enabled {
+            let mut flags = 0u8;
+            let payload = if self.delta_enabled {
+                flags |= FLAG_DELTA;
                 let codec = self.send_codecs.entry(nb).or_default();
-                let mut buf = Vec::with_capacity(4 + uids.len() * 64);
-                buf.extend_from_slice(&(uids.len() as u32).to_le_bytes());
-                for uid in &uids {
-                    let agent = self.sim.rm.get_by_uid(*uid).expect("aura agent");
-                    let mut record = Vec::with_capacity(64);
-                    tailored::serialize_agent(agent, &mut record);
-                    codec.encode(*uid, &record, &mut buf);
+                let mut buf =
+                    Vec::with_capacity(4 + members.len() * tailored::RECORD_SIZE_HINT);
+                buf.extend_from_slice(&(members.len() as u32).to_le_bytes());
+                let mut record = Vec::with_capacity(tailored::RECORD_SIZE_HINT);
+                for &(uid, h) in &members {
+                    record.clear();
+                    tailored::serialize_agent_from_columns(rm, h, &mut record);
+                    codec.encode(uid, &record, &mut buf);
                 }
                 // evict agents that left the aura (resync on re-entry)
-                let keep: std::collections::HashSet<AgentUid> = uids.iter().copied().collect();
+                let keep: std::collections::HashSet<AgentUid> =
+                    members.iter().map(|&(uid, _)| uid).collect();
                 codec.retain(|u| keep.contains(&u));
-                self.stats.aura_bytes_raw += codec.raw_bytes;
+                // raw accounting: what the plain encoding would have
+                // sent — header + count + records, matching the plain
+                // branch below byte for byte
+                self.stats.aura_bytes_raw += 1 + 4 + codec.raw_bytes;
                 codec.raw_bytes = 0;
                 codec.encoded_bytes = 0;
                 buf
             } else {
-                let rm = &self.sim.rm;
-                let buf =
-                    tailored::serialize_batch(uids.iter().map(|u| rm.get_by_uid(*u).unwrap()));
-                self.stats.aura_bytes_raw += buf.len() as u64;
+                let handles: Vec<AgentHandle> = members.iter().map(|&(_, h)| h).collect();
+                let buf = tailored::serialize_batch_from_columns(rm, &handles);
+                self.stats.aura_bytes_raw += 1 + buf.len() as u64;
                 buf
             };
+            if self.deflate_enabled {
+                flags |= FLAG_DEFLATE;
+            }
+            let mut msg = Vec::with_capacity(1 + payload.len());
+            msg.push((WIRE_VERSION << 4) | flags);
+            if self.deflate_enabled {
+                msg.extend_from_slice(&deflate(&payload));
+            } else {
+                msg.extend_from_slice(&payload);
+            }
             self.stats.serialize_time += t.elapsed();
-            self.stats.aura_bytes_sent += buf.len() as u64;
+            self.stats.aura_bytes_sent += msg.len() as u64;
             self.stats.messages += 1;
-            transport.send(self.rank, nb, TAG_AURA, buf)?;
+            transport.send(self.rank, nb, TAG_AURA, msg)?;
         }
         Ok(())
     }
 
-    /// Phase 3b: receive aura agents, add them as ghosts.
+    /// Phase 3b: receive aura agents, add them as ghosts. The message
+    /// header announces the encoding — no configuration agreement with
+    /// the sender needed.
     pub fn aura_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
         for nb in self.partition.neighbors(self.rank) {
-            let buf = transport.recv(self.rank, nb, TAG_AURA)?;
+            let msg = transport.recv(self.rank, nb, TAG_AURA)?;
             let t = Instant::now();
-            let agents: Vec<Box<dyn Agent>> = if self.delta_enabled {
+            let header = *msg.first().ok_or("empty aura message")?;
+            let version = header >> 4;
+            if version != WIRE_VERSION {
+                return Err(format!(
+                    "aura wire version {version}, expected {WIRE_VERSION}"
+                ));
+            }
+            let flags = header & 0x0F;
+            if flags & !(FLAG_DELTA | FLAG_DEFLATE) != 0 {
+                return Err(format!("unknown aura flags {flags:#06b}"));
+            }
+            let inflated;
+            let payload: &[u8] = if flags & FLAG_DEFLATE != 0 {
+                inflated = inflate(&msg[1..])?;
+                &inflated
+            } else {
+                &msg[1..]
+            };
+            let agents: Vec<Box<dyn Agent>> = if flags & FLAG_DELTA != 0 {
                 let codec = self.recv_codecs.entry(nb).or_default();
                 let count = u32::from_le_bytes(
-                    buf.get(0..4).ok_or("short aura message")?.try_into().unwrap(),
+                    payload
+                        .get(0..4)
+                        .ok_or("short aura message")?
+                        .try_into()
+                        .unwrap(),
                 ) as usize;
                 let mut off = 4;
-                let mut out = Vec::with_capacity(count);
+                let mut out = Vec::with_capacity(count.min(payload.len()));
                 let mut seen = std::collections::HashSet::new();
                 for _ in 0..count {
-                    let (uid, record, used) = codec.decode(&buf[off..])?;
+                    let (uid, record, used) = codec.decode(&payload[off..])?;
                     off += used;
                     seen.insert(uid);
                     let (agent, _) = tailored::deserialize_agent(&record)?;
@@ -268,7 +418,7 @@ impl RankWorker {
                 codec.retain(|u| seen.contains(&u));
                 out
             } else {
-                tailored::deserialize_batch(&buf)?
+                tailored::deserialize_batch(payload)?
             };
             self.stats.deserialize_time += t.elapsed();
             self.stats.ghosts_received += agents.len() as u64;
@@ -288,13 +438,18 @@ impl RankWorker {
     }
 }
 
-/// In-process distributed engine: all ranks in one process, executed
-/// sequentially per phase (deterministic; on this 1-core container the
-/// sequential superstep is also the honest execution model).
+/// In-process distributed engine: all ranks in one process. By default
+/// every rank runs its superstep on its own scoped thread, blocking on
+/// the transport's condvar mailboxes exactly like MPI ranks block on
+/// `MPI_Recv`; the sequential debug mode (`Param::dist_threaded_ranks
+/// = false`) interleaves the phases across ranks in one thread.
+/// Results are bitwise identical between the two modes.
 pub struct DistributedEngine {
     pub workers: Vec<RankWorker>,
     transport: InProcessTransport,
     pub iteration: u64,
+    /// Run ranks on scoped threads (the default) or sequentially.
+    pub threaded: bool,
 }
 
 impl DistributedEngine {
@@ -309,6 +464,9 @@ impl DistributedEngine {
         threads_per_rank: usize,
     ) -> Self {
         AgentRegistry::register_builtins();
+        let threaded = param.dist_threaded_ranks;
+        let delta = param.dist_aura_delta;
+        let deflate = param.dist_aura_deflate;
         // master population (single namespace uids)
         let mut master = builder(param.clone());
         let aura = master.param.interaction_radius;
@@ -326,7 +484,10 @@ impl DistributedEngine {
                 sim.rm.drain_all(); // keep ops/substances, drop agents
                 sim.rm
                     .set_uid_namespace(max_uid + 1 + r as u64, ranks as u64);
-                RankWorker::new(r, partition.clone(), sim)
+                let mut w = RankWorker::new(r, partition.clone(), sim);
+                w.delta_enabled = delta;
+                w.deflate_enabled = deflate;
+                w
             })
             .collect();
         for agent in agents {
@@ -340,6 +501,7 @@ impl DistributedEngine {
             workers,
             transport: InProcessTransport::new(ranks),
             iteration: 0,
+            threaded,
         }
     }
 
@@ -350,26 +512,47 @@ impl DistributedEngine {
         }
     }
 
-    /// One distributed superstep.
+    /// Enable the DEFLATE entropy stage on all ranks.
+    pub fn set_deflate_enabled(&mut self, enabled: bool) {
+        for w in &mut self.workers {
+            w.deflate_enabled = enabled;
+        }
+    }
+
+    /// One distributed superstep: rank-per-thread by default,
+    /// phase-interleaved sequential when `threaded` is off.
     pub fn step(&mut self) {
-        let t = &self.transport;
-        for w in &mut self.workers {
-            w.remove_ghosts();
-        }
-        for w in &mut self.workers {
-            w.migrate_send(t).expect("migrate send");
-        }
-        for w in &mut self.workers {
-            w.migrate_recv(t).expect("migrate recv");
-        }
-        for w in &mut self.workers {
-            w.aura_send(t).expect("aura send");
-        }
-        for w in &mut self.workers {
-            w.aura_recv(t).expect("aura recv");
-        }
-        for w in &mut self.workers {
-            w.step_local();
+        if self.threaded && self.workers.len() > 1 {
+            let transport = &self.transport;
+            std::thread::scope(|scope| {
+                for w in &mut self.workers {
+                    // scope joins every spawned thread on exit; the
+                    // handles themselves are not needed
+                    let _ = scope.spawn(move || {
+                        w.superstep(transport).expect("distributed superstep");
+                    });
+                }
+            });
+        } else {
+            let t = &self.transport;
+            for w in &mut self.workers {
+                w.remove_ghosts();
+            }
+            for w in &mut self.workers {
+                w.migrate_send(t).expect("migrate send");
+            }
+            for w in &mut self.workers {
+                w.migrate_recv(t).expect("migrate recv");
+            }
+            for w in &mut self.workers {
+                w.aura_send(t).expect("aura send");
+            }
+            for w in &mut self.workers {
+                w.aura_recv(t).expect("aura recv");
+            }
+            for w in &mut self.workers {
+                w.step_local();
+            }
         }
         self.iteration += 1;
     }
@@ -399,14 +582,26 @@ impl DistributedEngine {
     pub fn state_snapshot(&self) -> Vec<(AgentUid, [f64; 3], f64)> {
         let mut out = Vec::new();
         for w in &self.workers {
-            w.sim.rm.for_each_agent(|_, a| {
-                if !a.base().is_ghost {
-                    out.push((a.uid(), a.position().0, a.diameter()));
-                }
-            });
+            snapshot_columns(&w.sim, &mut out);
         }
         out.sort_by_key(|e| e.0);
         out
+    }
+}
+
+/// Append (uid, position, diameter) of every owned (non-ghost) agent,
+/// streamed from the SoA columns. Callers snapshot after `step()` /
+/// `simulate()`, where the mirror is coherent by the scheduler's
+/// writeback contract.
+fn snapshot_columns(sim: &Simulation, out: &mut Vec<(AgentUid, [f64; 3], f64)>) {
+    let rm = &sim.rm;
+    for d in 0..rm.num_domains() {
+        let cols = rm.columns(d);
+        for i in 0..cols.len() {
+            if !cols.ghost.get(i) {
+                out.push((cols.uids[i], cols.positions[i].0, cols.diameters[i]));
+            }
+        }
     }
 }
 
@@ -414,17 +609,15 @@ impl DistributedEngine {
 /// Fig 6.5 comparison).
 pub fn simulation_snapshot(sim: &Simulation) -> Vec<(AgentUid, [f64; 3], f64)> {
     let mut out = Vec::new();
-    sim.rm.for_each_agent(|_, a| {
-        if !a.base().is_ghost {
-            out.push((a.uid(), a.position().0, a.diameter()));
-        }
-    });
+    snapshot_columns(sim, &mut out);
     out.sort_by_key(|e| e.0);
     out
 }
 
 /// Multi-process worker: one OS process per rank, TCP transport
 /// (`teraagent worker --rank R --ranks N --base-port P <model>`).
+/// `--param dist_aura_delta=true dist_aura_deflate=true` switch on the
+/// §6.2.3 encodings.
 pub fn run_tcp_worker(
     model: &str,
     mut param: Param,
@@ -434,6 +627,8 @@ pub fn run_tcp_worker(
     iterations: u64,
 ) -> Result<(), String> {
     AgentRegistry::register_builtins();
+    let delta = param.dist_aura_delta;
+    let deflate = param.dist_aura_deflate;
     // every process builds the same master population deterministically
     // (same seed) and keeps only its slab — no central coordinator
     // needed for setup.
@@ -461,24 +656,22 @@ pub fn run_tcp_worker(
     // tiny settle delay so all ranks are listening before first send
     std::thread::sleep(std::time::Duration::from_millis(200));
     let mut worker = RankWorker::new(rank, partition, sim);
+    worker.delta_enabled = delta;
+    worker.deflate_enabled = deflate;
     let start = Instant::now();
     for _ in 0..iterations {
-        worker.remove_ghosts();
-        worker.migrate_send(&transport)?;
-        worker.migrate_recv(&transport)?;
-        worker.aura_send(&transport)?;
-        worker.aura_recv(&transport)?;
-        worker.step_local();
+        worker.superstep(&transport)?;
     }
     println!(
         "rank {rank}/{ranks}: {} owned agents after {iterations} iterations in {:.3}s; \
-         aura {} raw -> {} sent ({:.2}x), {} ghosts, ser {:.3}ms deser {:.3}ms",
+         aura {} raw -> {} sent ({:.2}x), {} ghosts, {} forwarded, ser {:.3}ms deser {:.3}ms",
         worker.owned_agents(),
         start.elapsed().as_secs_f64(),
         worker.stats.aura_bytes_raw,
         worker.stats.aura_bytes_sent,
         worker.stats.aura_compression_ratio(),
         worker.stats.ghosts_received,
+        worker.stats.forwarded_agents,
         worker.stats.serialize_time.as_secs_f64() * 1e3,
         worker.stats.deserialize_time.as_secs_f64() * 1e3,
     );
@@ -488,7 +681,10 @@ pub fn run_tcp_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::param::ExecutionContextMode;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::behavior::FnBehavior;
+    use crate::core::math::Real3;
+    use crate::core::param::{BoundaryCondition, ExecutionContextMode};
     use crate::models::epidemiology::{self, SirParams};
 
     fn sir_param(threads: usize) -> Param {
@@ -548,6 +744,8 @@ mod tests {
         for ranks in [2usize, 4] {
             let mut engine = DistributedEngine::new(&builder, sir_param(1), ranks, 1);
             engine.simulate(10);
+            // contract precondition: no displacement ever exceeded a slab
+            assert_eq!(engine.stats().forwarded_agents, 0, "ranks={ranks}");
             let got = engine.state_snapshot();
             assert_eq!(got.len(), expect.len(), "ranks={ranks}");
             for (g, e) in got.iter().zip(expect.iter()) {
@@ -562,6 +760,26 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        // the tentpole contract: rank-per-thread execution reproduces
+        // the sequential phase interleaving bit for bit
+        for ranks in [2usize, 4] {
+            let run = |threaded: bool| {
+                let mut p = sir_param(1);
+                p.dist_threaded_ranks = threaded;
+                let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
+                assert_eq!(engine.threaded, threaded);
+                engine.simulate(8);
+                engine.state_snapshot()
+            };
+            let threaded = run(true);
+            let sequential = run(false);
+            assert_eq!(threaded, sequential, "ranks={ranks}");
+            assert_eq!(threaded.len(), 310);
         }
     }
 
@@ -596,6 +814,32 @@ mod tests {
             enc.aura_bytes_sent,
             raw.aura_bytes_sent
         );
+        // both modes account raw traffic identically (the fig6_11
+        // ratio compares like quantities now)
+        assert_eq!(enc.aura_bytes_raw, raw.aura_bytes_raw);
+        // plain mode sends exactly its raw accounting
+        assert_eq!(raw.aura_bytes_raw, raw.aura_bytes_sent);
+    }
+
+    #[test]
+    fn deflate_stage_shrinks_and_preserves_results() {
+        let mut plain = DistributedEngine::new(&builder, sir_param(1), 2, 1);
+        plain.simulate(8);
+        let mut p = sir_param(1);
+        p.dist_aura_delta = true;
+        p.dist_aura_deflate = true;
+        let mut both = DistributedEngine::new(&builder, p, 2, 1);
+        both.simulate(8);
+        assert_eq!(plain.state_snapshot(), both.state_snapshot());
+        let (a, b) = (plain.stats(), both.stats());
+        assert_eq!(a.aura_bytes_raw, b.aura_bytes_raw, "same raw accounting");
+        assert!(
+            b.aura_bytes_sent < a.aura_bytes_sent,
+            "delta+deflate {} !< plain {}",
+            b.aura_bytes_sent,
+            a.aura_bytes_sent
+        );
+        assert!(b.aura_compression_ratio() > 1.0);
     }
 
     #[test]
@@ -626,5 +870,184 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn non_neighbor_migration_forwards_instead_of_losing() {
+        // regression: a displacement larger than one slab used to be
+        // collected into `leaving` but never sent, removed, or
+        // reported — only a debug_assert noticed, so release builds
+        // corrupted ownership. Now the agent is forwarded via the
+        // nearest neighbor and re-routed on arrival.
+        let mut p = sir_param(1);
+        p.dist_threaded_ranks = false; // phases are driven manually below
+        let mut engine = DistributedEngine::new(&builder, p, 4, 1);
+        assert_eq!(engine.num_agents(), 310);
+
+        // teleport one rank-0 agent into rank 2's slab (two hops away;
+        // with toroidal wrap rank 0's neighbors are ranks 1 and 3)
+        let mut uid = 0;
+        engine.workers[0].sim.rm.for_each_agent(|_, a| {
+            if uid == 0 && !a.base().is_ghost {
+                uid = a.uid();
+            }
+        });
+        assert_ne!(uid, 0);
+        let (lo2, hi2) = engine.workers[0].partition.slab_of(2);
+        let target_x = 0.5 * (lo2 + hi2);
+        {
+            let w0 = &mut engine.workers[0];
+            let h = w0.sim.rm.lookup(uid).unwrap();
+            let a = w0.sim.rm.get_mut(h);
+            let mut pos = a.position();
+            pos.0[0] = target_x;
+            a.set_position(pos);
+        }
+
+        // two exchange-only passes: pass 1 forwards 0 -> 1 (nearest
+        // neighbor toward the owner), pass 2 delivers 1 -> 2
+        let t = InProcessTransport::new(4);
+        for _pass in 0..2 {
+            for w in &mut engine.workers {
+                w.remove_ghosts();
+            }
+            for w in &mut engine.workers {
+                w.migrate_send(&t).unwrap();
+            }
+            for w in &mut engine.workers {
+                w.migrate_recv(&t).unwrap();
+            }
+        }
+        assert_eq!(engine.num_agents(), 310, "no silent agent loss");
+        let owners: Vec<usize> = engine
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| {
+                w.sim
+                    .rm
+                    .get_by_uid(uid)
+                    .map(|a| !a.base().is_ghost)
+                    .unwrap_or(false)
+            })
+            .map(|(r, _)| r)
+            .collect();
+        assert_eq!(owners, vec![2], "agent must reach its true owner");
+        assert!(engine.stats().forwarded_agents >= 1);
+    }
+
+    /// Deterministic leftward walk in a toroidal space: agents cross
+    /// the x = 0 boundary every few iterations and must migrate
+    /// between the first and the last rank (the `wrap && ranks > 2`
+    /// special case in `SlabPartition::neighbors`).
+    fn wrap_walk_builder(p: Param) -> Simulation {
+        let mut p = p;
+        p.min_bound = 0.0;
+        p.max_bound = 80.0;
+        p.bound_space = BoundaryCondition::Toroidal;
+        p.interaction_radius = 2.0;
+        p.box_length = Some(4.0);
+        let mut sim = Simulation::new(p);
+        sim.remove_agent_op("mechanical_forces");
+        sim.remove_standalone_op("diffusion");
+        for i in 0..40 {
+            let x = 1.0 + 2.0 * i as f64; // 1, 3, ..., 79: every slab
+            let mut a = SphericalAgent::new(Real3::new(x, 40.0, 40.0));
+            a.base.diameter = 1.0;
+            a.base.behaviors.push(FnBehavior::new("walk_left", |agent, ctx| {
+                let p = ctx
+                    .param()
+                    .apply_bounds(agent.position() + Real3::new(-3.0, 0.0, 0.0));
+                agent.set_position(p);
+                agent.base_mut().moved_now = true;
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        sim
+    }
+
+    #[test]
+    fn toroidal_wrap_migration_at_ranks_2_and_4() {
+        let mut reference = wrap_walk_builder(sir_param(1));
+        reference.simulate(12);
+        let expect = simulation_snapshot(&reference);
+        assert_eq!(expect.len(), 40);
+
+        for ranks in [2usize, 4] {
+            let mut engine =
+                DistributedEngine::new(&wrap_walk_builder, sir_param(1), ranks, 1);
+            engine.simulate(12);
+            assert_eq!(engine.num_agents(), 40, "ranks={ranks}: agents lost at wrap");
+            assert_eq!(engine.state_snapshot(), expect, "ranks={ranks}");
+            assert!(
+                engine.stats().migrated_agents > 0,
+                "ranks={ranks}: walk must migrate"
+            );
+        }
+    }
+
+    #[test]
+    fn tcp_two_ranks_delta_deflate_end_to_end() {
+        AgentRegistry::register_builtins();
+        let iterations = 6u64;
+        let mut reference = builder(sir_param(1));
+        reference.simulate(iterations);
+        let expect = simulation_snapshot(&reference);
+
+        // bind both listeners before any worker sends
+        let base = 42300 + (std::process::id() % 400) as u16;
+        let transports: Vec<TcpTransport> = (0..2usize)
+            .map(|r| TcpTransport::bind(r, 2, base).unwrap())
+            .collect();
+        let mut joins = Vec::new();
+        for (rank, transport) in transports.into_iter().enumerate() {
+            joins.push(std::thread::spawn(move || {
+                // the run_tcp_worker setup, inlined so the thread can
+                // return its snapshot: build the same master population
+                // deterministically and keep only this rank's slab
+                let mut master = builder(sir_param(1));
+                let aura = master.param.interaction_radius;
+                let wrap =
+                    master.param.bound_space == BoundaryCondition::Toroidal;
+                let partition = SlabPartition::new(
+                    master.param.min_bound,
+                    master.param.max_bound,
+                    2,
+                    aura,
+                )
+                .with_wrap(wrap);
+                let agents = master.rm.drain_all();
+                let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
+                let mut sim = builder(sir_param(1));
+                sim.rm.drain_all();
+                sim.rm.set_uid_namespace(max_uid + 1 + rank as u64, 2);
+                let mine: Vec<Box<dyn Agent>> = agents
+                    .into_iter()
+                    .filter(|a| partition.rank_of(a.position()) == rank)
+                    .collect();
+                sim.rm.commit_additions(mine);
+                let mut worker = RankWorker::new(rank, partition, sim);
+                worker.delta_enabled = true;
+                worker.deflate_enabled = true;
+                for _ in 0..iterations {
+                    worker.superstep(&transport).unwrap();
+                }
+                let mut out: Vec<(AgentUid, [f64; 3], f64)> = Vec::new();
+                snapshot_columns(&worker.sim, &mut out);
+                (out, worker.stats.clone())
+            }));
+        }
+        let mut merged: Vec<(AgentUid, [f64; 3], f64)> = Vec::new();
+        for j in joins {
+            let (part, stats) = j.join().unwrap();
+            merged.extend(part);
+            assert!(stats.aura_bytes_sent > 0);
+            assert!(
+                stats.aura_compression_ratio() > 1.0,
+                "delta+deflate must shrink the stream"
+            );
+        }
+        merged.sort_by_key(|e| e.0);
+        assert_eq!(merged, expect, "TCP 2-rank run must match shared memory");
     }
 }

@@ -78,6 +78,30 @@ impl SlabPartition {
         out
     }
 
+    /// Hop distance between two ranks on the slab chain (wrap-aware:
+    /// toroidal spaces close the chain into a ring).
+    pub fn hop_distance(&self, a: usize, b: usize) -> usize {
+        let d = a.abs_diff(b);
+        if self.wrap {
+            d.min(self.ranks - d)
+        } else {
+            d
+        }
+    }
+
+    /// Neighbor of `from` to forward an agent owned by non-neighbor
+    /// rank `owner` to (multi-hop migration, see
+    /// `engine::RankWorker::migrate_send`): the neighbor with the
+    /// smallest hop distance to `owner`, ties broken toward the lower
+    /// rank for determinism.
+    pub fn route_toward(&self, from: usize, owner: usize) -> usize {
+        debug_assert_ne!(from, owner, "routing to self");
+        self.neighbors(from)
+            .into_iter()
+            .min_by_key(|&nb| (self.hop_distance(nb, owner), nb))
+            .expect("route_toward requires at least one neighbor")
+    }
+
     /// All neighbor ranks of `rank` (slab decomposition: at most 2;
     /// wrap adds the opposite end for toroidal migration).
     pub fn neighbors(&self, rank: usize) -> Vec<usize> {
@@ -150,6 +174,47 @@ mod tests {
         assert_eq!(p.neighbors(2), vec![1]);
         let single = SlabPartition::new(0.0, 1.0, 1, 0.1);
         assert!(single.neighbors(0).is_empty());
+    }
+
+    #[test]
+    fn wrap_neighbor_sets_at_the_boundary() {
+        // ranks = 2: the two slabs are already adjacent; wrap must NOT
+        // duplicate the neighbor link (each channel is recv'd once).
+        let p2 = SlabPartition::new(0.0, 100.0, 2, 1.0).with_wrap(true);
+        assert_eq!(p2.neighbors(0), vec![1]);
+        assert_eq!(p2.neighbors(1), vec![0]);
+        // ranks = 4: wrap links the first and last slab.
+        let p4 = SlabPartition::new(0.0, 100.0, 4, 1.0).with_wrap(true);
+        assert_eq!(p4.neighbors(0), vec![1, 3]);
+        assert_eq!(p4.neighbors(1), vec![0, 2]);
+        assert_eq!(p4.neighbors(2), vec![1, 3]);
+        assert_eq!(p4.neighbors(3), vec![0, 2]);
+    }
+
+    #[test]
+    fn hop_distance_wrap_aware() {
+        let flat = SlabPartition::new(0.0, 100.0, 5, 1.0);
+        assert_eq!(flat.hop_distance(0, 4), 4);
+        assert_eq!(flat.hop_distance(2, 2), 0);
+        let ring = SlabPartition::new(0.0, 100.0, 5, 1.0).with_wrap(true);
+        assert_eq!(ring.hop_distance(0, 4), 1);
+        assert_eq!(ring.hop_distance(0, 3), 2);
+        assert_eq!(ring.hop_distance(1, 4), 2);
+    }
+
+    #[test]
+    fn route_toward_picks_nearest_neighbor() {
+        let flat = SlabPartition::new(0.0, 100.0, 5, 1.0);
+        assert_eq!(flat.route_toward(0, 3), 1);
+        assert_eq!(flat.route_toward(4, 0), 3);
+        assert_eq!(flat.route_toward(2, 0), 1);
+        assert_eq!(flat.route_toward(2, 4), 3);
+        let ring = SlabPartition::new(0.0, 100.0, 5, 1.0).with_wrap(true);
+        // rank 1 -> owner 4: via 0 (wrap, 1 hop) not via 2 (2 hops)
+        assert_eq!(ring.route_toward(1, 4), 0);
+        // equidistant tie (ranks=4, 0 -> 2): deterministic lower rank
+        let ring4 = SlabPartition::new(0.0, 100.0, 4, 1.0).with_wrap(true);
+        assert_eq!(ring4.route_toward(0, 2), 1);
     }
 
     #[test]

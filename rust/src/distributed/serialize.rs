@@ -20,8 +20,9 @@
 //! type, so they never cross the wire — the paper's "avoid unnecessary
 //! work" principle applied to behavior dictionaries).
 
-use crate::core::agent::{Agent, AgentUid};
+use crate::core::agent::{Agent, AgentHandle, AgentUid};
 use crate::core::math::Real3;
+use crate::core::resource_manager::ResourceManager;
 use crate::Real;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -131,6 +132,56 @@ pub mod tailored {
         buf
     }
 
+    /// Rough per-agent wire size used to pre-size batch buffers from
+    /// column lengths (base record + a typical extra section).
+    pub(crate) const RECORD_SIZE_HINT: usize = BASE_RECORD + 24;
+
+    /// SoA fast path: write the fixed base record (tag/uid/position/
+    /// diameter/flags) straight out of the [`ResourceManager`]'s hot
+    /// columns — no `Box<dyn Agent>` chase, no virtual dispatch — and
+    /// fall back to the boxed agent only for the type-specific
+    /// variable section (`serialize_extra`). Byte-identical to
+    /// [`serialize_agent`]; returns bytes appended.
+    ///
+    /// Requires a coherent column mirror (the exchange phases sync it
+    /// before scanning — see `engine::RankWorker`).
+    pub fn serialize_agent_from_columns(
+        rm: &ResourceManager,
+        h: AgentHandle,
+        buf: &mut Vec<u8>,
+    ) -> usize {
+        let start = buf.len();
+        let cols = rm.columns(h.numa as usize);
+        let i = h.idx as usize;
+        buf.extend_from_slice(&cols.type_tags[i].to_le_bytes());
+        buf.extend_from_slice(&cols.uids[i].to_le_bytes());
+        for c in cols.positions[i].0 {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        buf.extend_from_slice(&cols.diameters[i].to_le_bytes());
+        buf.push(u8::from(cols.moved_last.get(i)));
+        let len_pos = buf.len();
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let extra_start = buf.len();
+        rm.get(h).serialize_extra(buf);
+        let extra_len = (buf.len() - extra_start) as u32;
+        buf[len_pos..len_pos + 4].copy_from_slice(&extra_len.to_le_bytes());
+        buf.len() - start
+    }
+
+    /// Batch variant of [`serialize_agent_from_columns`]. The record
+    /// count is known up front, so the buffer is pre-sized from the
+    /// column lengths and the count header needs no back-patching.
+    /// Byte-identical to [`serialize_batch`] over the same handles.
+    pub fn serialize_batch_from_columns(rm: &ResourceManager, handles: &[AgentHandle]) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4 + handles.len() * RECORD_SIZE_HINT);
+        buf.extend_from_slice(&(handles.len() as u32).to_le_bytes());
+        for &h in handles {
+            serialize_agent_from_columns(rm, h, &mut buf);
+        }
+        buf
+    }
+
     /// Deserialize one agent starting at `data[offset..]`; returns
     /// (agent, bytes consumed).
     pub fn deserialize_agent(data: &[u8]) -> Result<(Box<dyn Agent>, usize), String> {
@@ -157,7 +208,13 @@ pub mod tailored {
             base.moved_last = moved_last;
         }
         let consumed = agent.deserialize_extra(&data[BASE_RECORD..BASE_RECORD + extra_len]);
-        debug_assert_eq!(consumed, extra_len, "extra length mismatch for tag {tag}");
+        if consumed != extra_len {
+            // a real error, not a debug assert: in release builds a
+            // mismatch silently desynchronized every following record
+            return Err(format!(
+                "extra length mismatch for tag {tag}: consumed {consumed}, declared {extra_len}"
+            ));
+        }
         Ok((agent, BASE_RECORD + extra_len))
     }
 
@@ -167,7 +224,9 @@ pub mod tailored {
             return Err("empty batch".to_string());
         }
         let count = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
-        let mut out = Vec::with_capacity(count);
+        // cap the pre-allocation by what the buffer could possibly
+        // hold — a corrupt count must not trigger a huge allocation
+        let mut out = Vec::with_capacity(count.min(data.len() / BASE_RECORD + 1));
         let mut off = 4;
         for _ in 0..count {
             let (agent, used) = deserialize_agent(&data[off..])?;
@@ -190,12 +249,11 @@ pub mod reflection {
         buf.extend_from_slice(s.as_bytes());
     }
 
-    fn read_str(data: &[u8]) -> (String, usize) {
-        let len = u16::from_le_bytes(data[0..2].try_into().unwrap()) as usize;
-        (
-            String::from_utf8_lossy(&data[2..2 + len]).into_owned(),
-            2 + len,
-        )
+    fn read_str(data: &[u8]) -> Result<(String, usize), String> {
+        let header = data.get(0..2).ok_or("short string header")?;
+        let len = u16::from_le_bytes(header.try_into().unwrap()) as usize;
+        let payload = data.get(2..2 + len).ok_or("short string payload")?;
+        Ok((String::from_utf8_lossy(payload).into_owned(), 2 + len))
     }
 
     fn write_field_f64(buf: &mut Vec<u8>, name: &str, v: f64) {
@@ -249,36 +307,38 @@ pub mod reflection {
     }
 
     pub fn deserialize_agent(data: &[u8]) -> Result<(Box<dyn Agent>, usize), String> {
+        // all reads are bounds-checked: corrupt or truncated input must
+        // surface as Err, never as an index panic
         let mut off = 0;
-        let (_class, used) = read_str(&data[off..]);
+        let (_class, used) = read_str(data)?;
         off += used;
         let mut fields_f: HashMap<String, f64> = HashMap::new();
         let mut fields_u: HashMap<String, u64> = HashMap::new();
         let mut extra: Vec<u8> = Vec::new();
         for _ in 0..8 {
-            let (name, used) = read_str(&data[off..]);
+            let (name, used) = read_str(&data[off..])?;
             off += used;
-            let code = data[off];
+            let code = *data.get(off).ok_or("missing type code")?;
             off += 1;
             match code {
                 8 => {
-                    fields_f.insert(
-                        name,
-                        f64::from_le_bytes(data[off..off + 8].try_into().unwrap()),
-                    );
+                    let raw = data.get(off..off + 8).ok_or("short f64 field")?;
+                    fields_f.insert(name, f64::from_le_bytes(raw.try_into().unwrap()));
                     off += 8;
                 }
                 4 => {
-                    fields_u.insert(
-                        name,
-                        u64::from_le_bytes(data[off..off + 8].try_into().unwrap()),
-                    );
+                    let raw = data.get(off..off + 8).ok_or("short u64 field")?;
+                    fields_u.insert(name, u64::from_le_bytes(raw.try_into().unwrap()));
                     off += 8;
                 }
                 12 => {
-                    let len = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+                    let raw = data.get(off..off + 4).ok_or("short byte-array header")?;
+                    let len = u32::from_le_bytes(raw.try_into().unwrap()) as usize;
                     off += 4;
-                    extra = data[off..off + len].to_vec();
+                    extra = data
+                        .get(off..off + len)
+                        .ok_or("short byte-array payload")?
+                        .to_vec();
                     off += len;
                 }
                 c => return Err(format!("bad type code {c}")),
@@ -296,15 +356,18 @@ pub mod reflection {
                 *fields_f.get("position_z").ok_or("missing z")?,
             );
             base.diameter = *fields_f.get("diameter").ok_or("missing d")?;
-            base.moved_last = fields_u.get("moved_last").copied().unwrap_or(1) != 0;
+            // an error like every other missing field — the old
+            // `unwrap_or(1)` silently fabricated a moved flag
+            base.moved_last = *fields_u.get("moved_last").ok_or("missing moved_last")? != 0;
         }
         agent.deserialize_extra(&extra);
         Ok((agent, off))
     }
 
     pub fn deserialize_batch(data: &[u8]) -> Result<Vec<Box<dyn Agent>>, String> {
-        let count = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
-        let mut out = Vec::with_capacity(count);
+        let header = data.get(0..4).ok_or("short batch header")?;
+        let count = u32::from_le_bytes(header.try_into().unwrap()) as usize;
+        let mut out = Vec::with_capacity(count.min(data.len()));
         let mut off = 4;
         for _ in 0..count {
             let (agent, used) = deserialize_agent(&data[off..])?;
@@ -396,6 +459,99 @@ mod tests {
         buf[4] = 0xFF;
         buf[5] = 0xFF;
         assert!(tailored::deserialize_batch(&buf).is_err());
+    }
+
+    #[test]
+    fn columns_fast_path_byte_identical() {
+        AgentRegistry::register_builtins();
+        let mut rm = ResourceManager::new(2);
+        for mut agent in sample_agents() {
+            // vary the flag so the bitset read is actually exercised
+            let moved = agent.uid() % 2 == 0;
+            agent.base_mut().moved_last = moved;
+            rm.add_agent(agent);
+        }
+        let handles: Vec<AgentHandle> = rm.handles().to_vec();
+        let per_agent = tailored::serialize_batch(handles.iter().map(|&h| rm.get(h)));
+        let from_columns = tailored::serialize_batch_from_columns(&rm, &handles);
+        assert_eq!(per_agent, from_columns, "SoA fast path must be bitwise equal");
+        // and it must round-trip like the per-agent path
+        let back = tailored::deserialize_batch(&from_columns).unwrap();
+        assert_eq!(back.len(), handles.len());
+        for (&h, b) in handles.iter().zip(back.iter()) {
+            assert_same(rm.get(h), &**b);
+        }
+    }
+
+    #[test]
+    fn tailored_truncated_and_mismatched_extra_rejected() {
+        AgentRegistry::register_builtins();
+        let agents = sample_agents();
+        let buf = tailored::serialize_batch(agents.iter().map(|a| &**a));
+        // truncation at every prefix of the first record's base area
+        // must error, never panic
+        for cut in 0..(4 + 47) {
+            assert!(
+                tailored::deserialize_batch(&buf[..cut.min(buf.len())]).is_err(),
+                "cut {cut}"
+            );
+        }
+        // extra_len larger than the agent's real extra section: the
+        // consumed/declared mismatch must be a hard error (it was a
+        // release-silent debug_assert)
+        let mut person = Vec::new();
+        tailored::serialize_agent(&*agents[1], &mut person); // Person: 1 extra byte
+        let len_pos = 2 + 8 + 24 + 8 + 1;
+        let declared = u32::from_le_bytes(person[len_pos..len_pos + 4].try_into().unwrap());
+        assert_eq!(declared, 1);
+        person[len_pos..len_pos + 4].copy_from_slice(&2u32.to_le_bytes());
+        person.push(0); // padding so the buffer matches the declared length
+        let err = tailored::deserialize_agent(&person).unwrap_err();
+        assert!(err.contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reflection_corrupt_data_rejected() {
+        AgentRegistry::register_builtins();
+        let buf = reflection::serialize_batch(sample_agents().iter().map(|a| &**a));
+        // truncation anywhere inside the first record: Err, not panic
+        for cut in [0usize, 2, 3, 5, 9, 20, 40, 60, 80] {
+            assert!(
+                reflection::deserialize_batch(&buf[..cut.min(buf.len())]).is_err(),
+                "cut {cut}"
+            );
+        }
+        // bad field type code
+        let mut bad = buf.clone();
+        // first record: count(4) + class string(2 + len), then the
+        // first field name string, then its type code
+        let class_len = u16::from_le_bytes(bad[4..6].try_into().unwrap()) as usize;
+        let name_off = 4 + 2 + class_len;
+        let name_len = u16::from_le_bytes(bad[name_off..name_off + 2].try_into().unwrap()) as usize;
+        let code_off = name_off + 2 + name_len;
+        bad[code_off] = 99;
+        let err = reflection::deserialize_batch(&bad).unwrap_err();
+        assert!(err.contains("bad type code"), "{err}");
+    }
+
+    #[test]
+    fn reflection_missing_moved_last_is_error() {
+        AgentRegistry::register_builtins();
+        // hand-build a record with 8 fields but moved_last replaced by
+        // a differently named u64: every other field present
+        let agents = sample_agents();
+        let mut buf = Vec::new();
+        reflection::serialize_agent(&*agents[0], &mut buf);
+        // locate the "moved_last" name string and overwrite it in place
+        // (same length, different name -> field lookup must fail)
+        let needle = b"moved_last";
+        let pos = buf
+            .windows(needle.len())
+            .position(|w| w == needle)
+            .expect("field name present");
+        buf[pos..pos + needle.len()].copy_from_slice(b"moved_lost");
+        let err = reflection::deserialize_agent(&buf).unwrap_err();
+        assert!(err.contains("moved_last"), "{err}");
     }
 
     #[test]

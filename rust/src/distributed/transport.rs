@@ -32,6 +32,13 @@ type MailboxKey = (usize, usize, u32); // (to, from, tag)
 #[derive(Clone)]
 pub struct InProcessTransport {
     ranks: usize,
+    /// How long a blocking recv waits before reporting a protocol
+    /// error. In the rank-per-thread engine a recv legitimately blocks
+    /// for as long as the neighbor's local iteration takes, so the
+    /// default is generous; it exists only to turn a genuinely wedged
+    /// protocol (peer panicked, message never sent) into an error
+    /// instead of a hang.
+    recv_timeout: std::time::Duration,
     inner: Arc<(Mutex<HashMap<MailboxKey, VecDeque<Vec<u8>>>>, Condvar)>,
 }
 
@@ -39,8 +46,16 @@ impl InProcessTransport {
     pub fn new(ranks: usize) -> Self {
         InProcessTransport {
             ranks,
+            recv_timeout: std::time::Duration::from_secs(120),
             inner: Arc::new((Mutex::new(HashMap::new()), Condvar::new())),
         }
+    }
+
+    /// Override the blocking-recv watchdog (e.g. tighter in tests,
+    /// longer for huge per-rank workloads).
+    pub fn with_recv_timeout(mut self, timeout: std::time::Duration) -> Self {
+        self.recv_timeout = timeout;
+        self
     }
 }
 
@@ -73,7 +88,7 @@ impl Transport for InProcessTransport {
                 }
             }
             let (m, timeout) = cv
-                .wait_timeout(map, std::time::Duration::from_secs(30))
+                .wait_timeout(map, self.recv_timeout)
                 .map_err(|_| "poisoned".to_string())?;
             map = m;
             if timeout.timed_out() {
@@ -204,6 +219,14 @@ mod tests {
         t.send(0, 1, 1, vec![10, 20]).unwrap();
         assert_eq!(t.recv(0, 1, 2).unwrap(), vec![11, 21]);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn in_process_recv_times_out_when_no_message() {
+        let t = InProcessTransport::new(2)
+            .with_recv_timeout(std::time::Duration::from_millis(50));
+        let err = t.recv(0, 1, 9).unwrap_err();
+        assert!(err.contains("timeout"), "{err}");
     }
 
     #[test]

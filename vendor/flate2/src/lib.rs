@@ -1,0 +1,311 @@
+//! Offline stand-in for the `flate2` crate — the API subset the engine
+//! uses (`write::DeflateEncoder`, `read::DeflateDecoder`,
+//! [`Compression`]), backed by an in-repo LZ77 codec instead of
+//! RFC 1951 DEFLATE (no crates.io access in this environment; see
+//! DESIGN.md §4).
+//!
+//! The stream format is **not** zlib-compatible: both endpoints of the
+//! distributed transport link against this same crate, so wire
+//! compatibility with external tools is not required. Swap this path
+//! dependency for the real `flate2` to get standard DEFLATE streams —
+//! no call-site changes needed.
+//!
+//! Codec: greedy LZ77 over a 64 KiB window with byte-aligned tokens.
+//! Token byte `t`:
+//! * `t < 0x80`  — literal run of `t + 1` bytes follows (max 128);
+//! * `t >= 0x80` — back-reference: length `(t & 0x7F) + 4` (4..=131),
+//!   followed by a little-endian `u16` distance (1..=65535).
+//! Overlapping matches (distance < length) repeat bytes, as in LZ77.
+
+/// Compression level. The stand-in codec has a single strategy; the
+/// level is accepted for API compatibility and ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = MIN_MATCH + 0x7F; // 131
+const MAX_LITERAL_RUN: usize = 0x80; // 128
+const MAX_DISTANCE: usize = u16::MAX as usize;
+/// Hash-table size for match finding (positions of 4-byte prefixes).
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let key = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (key.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, data: &[u8], start: usize, end: usize) {
+    let mut i = start;
+    while i < end {
+        let n = (end - i).min(MAX_LITERAL_RUN);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&data[i..i + n]);
+        i += n;
+    }
+}
+
+/// Compress `data` with the token format above.
+pub(crate) fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i < data.len() {
+        if i + MIN_MATCH <= data.len() {
+            let h = hash4(data, i);
+            let cand = head[h];
+            head[h] = i;
+            if cand != usize::MAX
+                && i - cand <= MAX_DISTANCE
+                && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH]
+            {
+                // extend the match as far as it goes
+                let max_len = (data.len() - i).min(MAX_MATCH);
+                let mut len = MIN_MATCH;
+                while len < max_len && data[cand + len] == data[i + len] {
+                    len += 1;
+                }
+                flush_literals(&mut out, data, lit_start, i);
+                out.push(0x80 | (len - MIN_MATCH) as u8);
+                out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+                // index the covered positions so later matches can
+                // reference into this span
+                let idx_end = (i + len).min(data.len().saturating_sub(MIN_MATCH - 1));
+                for j in (i + 1)..idx_end {
+                    head[hash4(data, j)] = j;
+                }
+                i += len;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    flush_literals(&mut out, data, lit_start, data.len());
+    out
+}
+
+/// Inverse of [`compress`]; rejects malformed streams.
+pub(crate) fn decompress(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0usize;
+    while i < data.len() {
+        let t = data[i];
+        i += 1;
+        if t < 0x80 {
+            let n = t as usize + 1;
+            if i + n > data.len() {
+                return Err("truncated literal run".to_string());
+            }
+            out.extend_from_slice(&data[i..i + n]);
+            i += n;
+        } else {
+            let len = (t & 0x7F) as usize + MIN_MATCH;
+            if i + 2 > data.len() {
+                return Err("truncated match token".to_string());
+            }
+            let dist = u16::from_le_bytes([data[i], data[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(format!("bad match distance {dist} at output {}", out.len()));
+            }
+            for _ in 0..len {
+                // overlapping copies (dist < len) intentionally re-read
+                // bytes produced earlier in this same match
+                let b = out[out.len() - dist];
+                out.push(b);
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub mod write {
+    use super::{compress, Compression};
+    use std::io::{self, Write};
+
+    /// Buffers everything written, compresses on [`finish`], and writes
+    /// the compressed stream to the inner writer.
+    ///
+    /// [`finish`]: DeflateEncoder::finish
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> DeflateEncoder<W> {
+            DeflateEncoder {
+                inner,
+                buf: Vec::new(),
+            }
+        }
+
+        /// Compress the buffered input, write it to the inner writer,
+        /// and return the writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let compressed = compress(&self.buf);
+            self.inner.write_all(&compressed)?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::decompress;
+    use std::io::{self, Read};
+
+    /// Reads the whole compressed stream on first use, decompresses,
+    /// then serves the plain bytes.
+    pub struct DeflateDecoder<R: Read> {
+        inner: R,
+        out: Option<Vec<u8>>,
+        pos: usize,
+    }
+
+    impl<R: Read> DeflateDecoder<R> {
+        pub fn new(inner: R) -> DeflateDecoder<R> {
+            DeflateDecoder {
+                inner,
+                out: None,
+                pos: 0,
+            }
+        }
+    }
+
+    impl<R: Read> Read for DeflateDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.out.is_none() {
+                let mut compressed = Vec::new();
+                self.inner.read_to_end(&mut compressed)?;
+                let plain = decompress(&compressed)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                self.out = Some(plain);
+            }
+            let out = self.out.as_ref().expect("decoded above");
+            let n = (out.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let compressed = enc.finish().unwrap();
+        let mut dec = read::DeflateDecoder::new(&compressed[..]);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_various() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![42],
+            b"abcabcabcabcabcabcabc".to_vec(),
+            (0..1000u32).map(|i| (i % 7) as u8).collect(),
+            (0..5000u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect(),
+            vec![0u8; 100_000],
+        ];
+        for data in cases {
+            assert_eq!(roundtrip(&data), data, "len {}", data.len());
+        }
+    }
+
+    #[test]
+    fn repetitive_input_compresses() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 7) as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() * 4 < data.len(), "{} !<< {}", c.len(), data.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_input_bounded_expansion() {
+        // worst case: one token byte per 128 literals
+        let data: Vec<u8> = (0..4096u32)
+            .map(|i| (i.wrapping_mul(2654435761) >> 24) as u8 ^ (i as u8))
+            .collect();
+        let c = compress(&data);
+        assert!(c.len() <= data.len() + data.len() / 128 + 8);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_match_roundtrip() {
+        // "aaaaa..." forces distance 1 < length
+        let data = vec![b'a'; 500];
+        let c = compress(&data);
+        assert!(c.len() < 20, "{}", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
+        // truncated literal run
+        assert!(decompress(&[5, 1, 2]).is_err());
+        // truncated match token
+        assert!(decompress(&[0x85, 1]).is_err());
+        // distance beyond the produced output
+        assert!(decompress(&[0x80, 9, 0]).is_err());
+        // zero distance
+        assert!(decompress(&[0, b'x', 0x80, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn decoder_reports_invalid_data() {
+        let mut dec = read::DeflateDecoder::new(&[0x80u8, 9, 0][..]);
+        let mut out = Vec::new();
+        let err = dec.read_to_end(&mut out).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+}
