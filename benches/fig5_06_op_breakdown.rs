@@ -3,55 +3,105 @@
 //! memory-bound with the mechanical-forces + environment operations
 //! dominating; this bench reproduces the per-operation wall-clock
 //! breakdown for the same benchmark set.
+//!
+//! PR 3: every model runs twice — per-agent forces
+//! (`mech_pair_sweep=false`) and the Morton box-pair sweep
+//! (`mech_pair_sweep=true`). In sweep mode the forces are timed as
+//! their own scheduler step ("mechanical_forces", outside
+//! "agent_ops"), so the `forces+env+agent_ops` JSON row is the
+//! comparable acceptance metric across the two configurations.
+//! Workloads honor `TA_BENCH_SCALE`; `TA_BENCH_JSON` archives the
+//! rows (BENCH_PR3.json in CI).
 
 use teraagent::benchkit::*;
 use teraagent::core::param::Param;
 use teraagent::models::*;
 
-fn breakdown(name: &str, mut sim: teraagent::Simulation, iters: u64) {
-    sim.simulate(iters);
-    let rows = sim.timers.breakdown();
-    let total: f64 = rows.iter().map(|r| r.1.as_secs_f64()).sum();
-    let mut table = BenchTable::new(
-        &format!("Fig 5.6 ({name}): operation runtime breakdown over {iters} iterations"),
-        &["operation", "total", "share", "per iteration"],
-    );
-    for (op, dur, count) in rows {
-        table.row(&[
-            op.clone(),
-            fmt_duration(dur),
-            format!("{:.1}%", 100.0 * dur.as_secs_f64() / total),
-            fmt_duration(dur / count.max(1) as u32),
-        ]);
+fn breakdown(
+    name: &str,
+    build: &dyn Fn(Param) -> teraagent::Simulation,
+    iters: u64,
+    report: &mut JsonReport,
+) {
+    for sweep in [false, true] {
+        let mut param = Param::default();
+        param.mech_pair_sweep = sweep;
+        let mut sim = build(param);
+        sim.simulate(iters);
+        let rows = sim.timers.breakdown();
+        let total: f64 = rows.iter().map(|r| r.1.as_secs_f64()).sum();
+        let cfg = if sweep { "sweep=on" } else { "sweep=off" };
+        let mut table = BenchTable::new(
+            &format!(
+                "Fig 5.6 ({name}, {cfg}): operation runtime breakdown over {iters} iterations"
+            ),
+            &["operation", "total", "share", "per iteration"],
+        );
+        let mut combined = 0.0;
+        for (op, dur, count) in rows {
+            table.row(&[
+                op.to_string(),
+                fmt_duration(dur),
+                format!("{:.1}%", 100.0 * dur.as_secs_f64() / total),
+                fmt_duration(dur / count.max(1) as u32),
+            ]);
+            report.row(
+                name,
+                &format!("{cfg}:{op}"),
+                dur.as_secs_f64() / iters as f64,
+            );
+            if op == "agent_ops" || op == "mechanical_forces" || op == "environment_update" {
+                combined += dur.as_secs_f64();
+            }
+        }
+        table.print();
+        // the acceptance metric: forces + env share, comparable across
+        // configurations (sweep=off folds the forces into agent_ops)
+        report.row(
+            name,
+            &format!("{cfg}:forces+env+agent_ops"),
+            combined / iters as f64,
+        );
     }
-    table.print();
 }
 
 fn main() {
     print_env_banner("fig5_06_op_breakdown");
+    let mut report = JsonReport::new("fig5_06_op_breakdown");
+    let cells_per_dim = scaled(10, 4).min(10);
     breakdown(
         "cell growth & division",
-        cell_growth::build(Param::default(), &cell_growth::CellGrowthParams {
-            cells_per_dim: 10,
-            ..Default::default()
-        }),
-        40,
+        &move |p| {
+            cell_growth::build(p, &cell_growth::CellGrowthParams {
+                cells_per_dim,
+                ..Default::default()
+            })
+        },
+        scaled(40, 10) as u64,
+        &mut report,
     );
+    let soma_cells = scaled(2000, 200);
     breakdown(
         "soma clustering",
-        soma_clustering::build(Param::default(), &soma_clustering::SomaClusteringParams {
-            num_cells: 2000,
-            ..Default::default()
-        }),
-        100,
+        &move |p| {
+            soma_clustering::build(p, &soma_clustering::SomaClusteringParams {
+                num_cells: soma_cells,
+                ..Default::default()
+            })
+        },
+        scaled(100, 20) as u64,
+        &mut report,
     );
     breakdown(
         "epidemiology (measles)",
-        epidemiology::build(Param::default(), &epidemiology::SirParams::measles()),
-        300,
+        &|p| epidemiology::build(p, &epidemiology::SirParams::measles().scaled(bench_scale())),
+        scaled(300, 30) as u64,
+        &mut report,
     );
+    report.write_if_requested();
     println!(
         "paper shape: mechanics/agent-ops dominate dense models; diffusion dominates\n\
-         substance-heavy models; the environment update is a constant significant share."
+         substance-heavy models; the environment update is a constant significant share.\n\
+         PR 3: compare the forces+env+agent_ops rows of sweep=off vs sweep=on."
     );
 }

@@ -2,12 +2,21 @@
 //! grid vs kd-tree vs octree, split into build ("update") and search
 //! phases, across agent densities. Paper: the grid wins for the
 //! agent-based workload (fixed-radius search, rebuild every iteration).
+//!
+//! PR 3 adds a fourth row: the uniform grid with the CSR cell-list
+//! view enabled. Its build column includes the counting-sort pass, and
+//! its search column is the Morton-ordered box-pair sweep enumerating
+//! every in-radius pair once over the 14-box half neighborhood — the
+//! traversal behind `Param::mech_pair_sweep`. The reported hit count
+//! must equal the per-agent query rows (each unordered pair counted
+//! from both ends + one self hit per agent), which cross-checks the
+//! CSR against the linked-list traversal.
 
 use teraagent::benchkit::*;
+use teraagent::core::agent::SphericalAgent;
 use teraagent::core::parallel::ThreadPool;
 use teraagent::core::random::Rng;
 use teraagent::core::resource_manager::ResourceManager;
-use teraagent::core::agent::SphericalAgent;
 use teraagent::env::{Environment, KdTreeEnvironment, OctreeEnvironment, UniformGridEnvironment};
 
 fn population(n: usize, space: f64) -> ResourceManager {
@@ -22,12 +31,56 @@ fn population(n: usize, space: f64) -> ResourceManager {
     rm
 }
 
+/// Enumerate all pairs within `radius` through the CSR half
+/// neighborhood (the engine's own `for_each_half_neighbor` traversal);
+/// returns the per-agent-query-equivalent hit count (2 per pair + 1
+/// self hit per agent).
+fn csr_pair_sweep_hits(env: &UniformGridEnvironment, rm: &ResourceManager, radius: f64) -> u64 {
+    let csr = env.csr().expect("csr enabled");
+    let positions = rm.positions(0);
+    let r2 = radius * radius;
+    let mut hits = rm.num_agents() as u64; // self hits of the query rows
+    for &b in csr.morton_boxes() {
+        let b = b as usize;
+        let sa = csr.box_agents(b);
+        if sa.is_empty() {
+            continue;
+        }
+        for (i, &ia) in sa.iter().enumerate() {
+            for &ib in &sa[i + 1..] {
+                let d2 = positions[ia as usize].squared_distance(&positions[ib as usize]);
+                if d2 <= r2 {
+                    hits += 2;
+                }
+            }
+        }
+        csr.for_each_half_neighbor(b, |c| {
+            let sb = csr.box_agents(c);
+            for &ia in sa {
+                for &ib in sb {
+                    let d2 =
+                        positions[ia as usize].squared_distance(&positions[ib as usize]);
+                    if d2 <= r2 {
+                        hits += 2;
+                    }
+                }
+            }
+        });
+    }
+    hits
+}
+
 fn main() {
     print_env_banner("fig5_13_env_comparison");
-    for (n, space, label) in [
-        (10_000usize, 215.0, "dense (10k in 215³)"),
-        (50_000, 800.0, "sparse (50k in 800³)"),
+    let mut report = JsonReport::new("fig5_13_env_comparison");
+    for (n, space, regime) in [
+        (scaled(10_000, 500), 215.0, "dense"),
+        (scaled(50_000, 1000), 800.0, "sparse"),
     ] {
+        // the real (TA_BENCH_SCALE-adjusted) population goes into the
+        // label so archived JSON rows name the regime they measured
+        let label = format!("{regime} ({n} in {space}³)");
+        let label = label.as_str();
         let rm = population(n, space);
         let pool = ThreadPool::new(1);
         let mut table = BenchTable::new(
@@ -42,6 +95,7 @@ fn main() {
             Box::new(KdTreeEnvironment::new()),
             Box::new(OctreeEnvironment::new()),
         ];
+        let mut query_found = None;
         for mut env in envs {
             let build_time = median(time_reps(3, 1, || env.update(&rm, &pool)));
             let handles = rm.handles();
@@ -54,14 +108,46 @@ fn main() {
                 }
                 t.elapsed()
             };
+            query_found.get_or_insert(found);
             table.row(&[
                 env.name().into(),
                 fmt_duration(build_time),
                 fmt_duration(search_time),
                 found.to_string(),
             ]);
+            report.row(label, &format!("{}:build", env.name()), build_time.as_secs_f64());
+            report.row(label, &format!("{}:search", env.name()), search_time.as_secs_f64());
+        }
+        // PR 3: CSR build (counting sort included) + box-pair sweep
+        {
+            let mut env = UniformGridEnvironment::new(Some(15.0));
+            env.enable_csr(true);
+            let build_time = median(time_reps(3, 1, || env.update(&rm, &pool)));
+            let (found, sweep_time) = {
+                let t = std::time::Instant::now();
+                let f = csr_pair_sweep_hits(&env, &rm, 15.0);
+                (f, t.elapsed())
+            };
+            assert_eq!(
+                Some(found),
+                query_found,
+                "CSR pair sweep disagrees with the per-agent queries"
+            );
+            table.row(&[
+                "uniform_grid+csr (pair sweep)".into(),
+                fmt_duration(build_time),
+                fmt_duration(sweep_time),
+                found.to_string(),
+            ]);
+            report.row(label, "uniform_grid_csr:build", build_time.as_secs_f64());
+            report.row(label, "uniform_grid_csr:pair_sweep", sweep_time.as_secs_f64());
         }
         table.print();
     }
-    println!("paper: the uniform grid's O(#agents) build + direct box lookup beats the\ntree structures for this workload; all must return identical neighbor counts.");
+    report.write_if_requested();
+    println!(
+        "paper: the uniform grid's O(#agents) build + direct box lookup beats the\n\
+         tree structures for this workload; all rows must report identical neighbor\n\
+         counts (the pair sweep counts each pair from both ends + self hits)."
+    );
 }

@@ -52,9 +52,16 @@ pub struct ThreadQueues {
     pub new_agents: Vec<PendingNewAgent>,
     pub removals: Vec<AgentUid>,
     pub deferred: Vec<DeferredUpdate>,
+    /// Reusable per-worker spill buffer of the mechanical-forces
+    /// contribution sort (agents with more than 32 contacts). Pure
+    /// scratch — cleared by each user, never committed; lives here so
+    /// its capacity persists across the agents of one worker instead of
+    /// being heap-allocated inside the hot loop.
+    pub force_spill: Vec<(AgentUid, crate::core::math::Real3)>,
 }
 
 impl ThreadQueues {
+    /// No *pending mutations* (scratch buffers are ignored).
     pub fn is_empty(&self) -> bool {
         self.new_agents.is_empty() && self.removals.is_empty() && self.deferred.is_empty()
     }

@@ -30,6 +30,15 @@ pub trait AgentOperation: Send + Sync {
     }
 
     fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext);
+
+    /// Pair-sweep capability (PR 3): operations that can execute as the
+    /// CSR box-pair sweep over the uniform grid return themselves. When
+    /// `Param::mech_pair_sweep` is armed the scheduler lifts such ops
+    /// out of the per-agent loop and drives
+    /// [`MechanicalForcesOp::run_pair_sweep`] instead.
+    fn as_mechanical_pair_sweep(&self) -> Option<&MechanicalForcesOp> {
+        None
+    }
 }
 
 /// When a standalone operation runs within the iteration.
@@ -109,6 +118,10 @@ impl AgentOperation for MechanicalForcesOp {
         "mechanical_forces"
     }
 
+    fn as_mechanical_pair_sweep(&self) -> Option<&MechanicalForcesOp> {
+        Some(self)
+    }
+
     fn run(&self, agent: &mut dyn Agent, ctx: &mut AgentContext) {
         let pos = agent.position();
         let radius = self.search_radius.max(agent.interaction_diameter());
@@ -140,8 +153,9 @@ impl AgentOperation for MechanicalForcesOp {
         // addition is not associative — UID-ordered summation is what
         // makes shared-memory and distributed runs bitwise identical
         // (Fig 6.5). Contributions live on the stack up to 32 contacts
-        // (the dense-model common case) — no allocation in the hot loop
-        // (§Perf iteration 3).
+        // (the dense-model common case); beyond that they spill into
+        // the worker's reusable scratch buffer — no allocation in the
+        // hot loop either way (§Perf iteration 3, tightened in PR 3).
         //
         // Sphere-sphere pairs stream straight from the SoA columns
         // (§5.4): position, radius and UID come from contiguous arrays
@@ -152,7 +166,8 @@ impl AgentOperation for MechanicalForcesOp {
         let self_radius = agent.diameter() / 2.0;
         let mut stack = [(0u64, crate::core::math::Real3::ZERO); 32];
         let mut n_stack = 0usize;
-        let mut spill: Vec<(u64, crate::core::math::Real3)> = Vec::new();
+        let mut spill = std::mem::take(&mut ctx.queues.force_spill);
+        spill.clear();
         ctx.for_each_neighbor_handle(radius, |h, _d2| {
             let fast = if self_sphere && rm.is_sphere_fast(h) {
                 self.force.sphere_sphere_fast(
@@ -191,6 +206,8 @@ impl AgentOperation for MechanicalForcesOp {
                 total += *f;
             }
         }
+        // hand the (possibly grown) spill capacity back to the worker
+        ctx.queues.force_spill = spill;
 
         let dt = ctx.dt();
         let mut displacement = total * dt;
@@ -207,6 +224,555 @@ impl AgentOperation for MechanicalForcesOp {
         } else {
             agent.base_mut().moved_now = false;
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pair-sweep execution mode of the mechanical-forces operation (PR 3).
+//
+// Instead of one 3x3x3 box scan per agent (every interacting pair
+// found twice), the sweep walks the grid's CSR cell lists box by box
+// in Morton order and visits each unordered pair exactly once over the
+// 14-box half neighborhood. Per-pair work streams from the SoA columns
+// (candidate distance, neighbor-side kernel inputs, UIDs) and from a
+// flat gather of live post-behavior self state — precisely the two
+// input sources of the per-agent path, which is what makes the result
+// bitwise identical to it:
+//
+// * a pair contributes to side X iff `d2 <= max(search_radius,
+//   live_inter_X)^2` — the per-agent candidate filter, applied per
+//   side because the two radii differ;
+// * the directed kernel inputs are (live pos/radius of X, column
+//   pos/radius of Y), the per-agent fast path's exact argument list;
+//   when both sides' live state equals their column state ("clean"),
+//   one symmetric kernel evaluation serves both directions
+//   (`sphere_sphere_pair_fast`, Newton's-third-law halving);
+// * contributions land in per-worker buffers, are grouped per target
+//   by a counting sort, and each target's list is reduced in source-
+//   UID order — the same deterministic summation order the per-agent
+//   path uses (Fig 6.5 contract), so the total is independent of the
+//   box traversal schedule and the worker count.
+//
+// §5.5 work omission extends to box granularity: a box whose 27-cube
+// holds no `moved_last` agent is skipped wholesale (all its agents
+// provably stay asleep); inside active cubes the per-agent moved-
+// neighbor probe runs unchanged, so the awake set matches the
+// per-agent path's decisions exactly.
+//
+// Scope of the bitwise contract: it covers the sphere fast path (every
+// benchmark model). Pairs that fall through to the generic
+// `InteractionForce::calculate` read *live* agents — here that means
+// consistent post-behavior state, whereas the per-agent baseline reads
+// whatever mid-pass state the scheduling exposes (its documented
+// Gauss-Seidel latitude, non-deterministic across thread counts) — so
+// for mixed-shape populations the sweep is the *more* deterministic of
+// the two, not bit-equal to a baseline that has no reproducible answer
+// itself (DESIGN.md §2, §6).
+
+/// `flags` bits of the sweep scratch (`SweepScratch::flags`).
+const F_LIVE_SPHERE: u8 = 0x01;
+const F_COL_SPHERE: u8 = 0x02;
+const F_COL_MOVED: u8 = 0x04;
+const F_GHOST: u8 = 0x08;
+const F_CLEAN: u8 = 0x10;
+const F_LIVE_MOVED: u8 = 0x20;
+
+impl MechanicalForcesOp {
+    /// Execute one iteration of mechanical forces as the box-pair
+    /// sweep. Returns `false` when the sweep cannot run this iteration
+    /// (no CSR view, or a query radius exceeds the box length so the
+    /// half neighborhood would not cover the per-agent scan) — the
+    /// scheduler then falls back to the per-agent path.
+    pub fn run_pair_sweep(
+        &self,
+        rm: &crate::core::resource_manager::ResourceManager,
+        grid: &crate::env::UniformGridEnvironment,
+        pool: &crate::core::parallel::ThreadPool,
+        param: &crate::core::param::Param,
+        scratch: &mut crate::core::resource_manager::SweepScratch,
+    ) -> bool {
+        use crate::core::agent::{AgentHandle, Shape};
+        use crate::core::math::Real3;
+        use crate::core::parallel::SendPtr;
+        use crate::core::resource_manager::SweepContribution;
+        use std::sync::Mutex;
+
+        let csr = match grid.csr() {
+            Some(c) => c,
+            None => return false,
+        };
+        let n = rm.num_agents();
+        if n == 0 {
+            return true;
+        }
+        if csr.num_flat() != n {
+            return false;
+        }
+        // O(1) half of the radius guard: a search radius beyond the box
+        // length (user-pinned small boxes) can never sweep — bail before
+        // the gather so persistent-fallback configs pay nothing here.
+        if self.search_radius > grid.box_length() {
+            return false;
+        }
+        let ndom = rm.num_domains();
+        let nworkers = pool.num_threads();
+        let nboxes = csr.num_boxes();
+        let detect = self.detect_static;
+        let moved_any = rm.moved_any();
+
+        let crate::core::resource_manager::SweepScratch {
+            live_pos,
+            live_radius,
+            query_r2,
+            flags,
+            awake,
+            box_moved,
+            box_awake,
+            worker_contrib,
+            contrib_starts,
+            cursors,
+            contrib,
+            sort_bufs,
+            col_pos: g_pos,
+            col_inter: g_inter,
+            col_uid: g_uid,
+        } = scratch;
+
+        live_pos.resize(n, Real3::ZERO);
+        live_radius.resize(n, 0.0);
+        query_r2.resize(n, 0.0);
+        flags.resize(n, 0);
+        awake.resize(n, 0);
+        if ndom > 1 {
+            g_pos.resize(n, Real3::ZERO);
+            g_inter.resize(n, 0.0);
+            g_uid.resize(n, 0);
+        }
+
+        // ---- gather: live (post-behavior) self state + per-flat flag
+        // bits, one parallel pass per domain over the boxed agents;
+        // the max squared query radius (the O(n) half of the radius
+        // guard) folds into the same pass as a per-chunk reduction ----
+        // (nonnegative f64 bit patterns order like the values, so one
+        // relaxed fetch_max per chunk aggregates the maximum)
+        let max_r2_bits = std::sync::atomic::AtomicU64::new(0);
+        {
+            let p_live_pos = SendPtr(live_pos.as_mut_ptr());
+            let p_live_radius = SendPtr(live_radius.as_mut_ptr());
+            let p_query_r2 = SendPtr(query_r2.as_mut_ptr());
+            let p_flags = SendPtr(flags.as_mut_ptr());
+            let p_awake = SendPtr(awake.as_mut_ptr());
+            let p_g_pos = SendPtr(g_pos.as_mut_ptr());
+            let p_g_inter = SendPtr(g_inter.as_mut_ptr());
+            let p_g_uid = SendPtr(g_uid.as_mut_ptr());
+            let mut base_flat = 0usize;
+            for d in 0..ndom {
+                let cols = rm.columns(d);
+                let len = rm.num_agents_in(d);
+                let base = base_flat;
+                pool.parallel_for_chunks(0..len, 1024, |chunk, _wid| {
+                    let mut chunk_max_r2: crate::Real = 0.0;
+                    for i in chunk {
+                        let flat = base + i;
+                        let a = rm.get(AgentHandle::new(d, i));
+                        let pos = a.position();
+                        let diam = a.diameter();
+                        let inter = a.interaction_diameter();
+                        let live_sphere = matches!(a.shape(), Shape::Sphere);
+                        let b = a.base();
+                        let col_position = cols.positions[i];
+                        let col_inter_diam = cols.inter_diameters[i];
+                        let col_sphere = cols.sphere.get(i);
+                        let ghost = cols.ghost.get(i);
+                        let mut fl = 0u8;
+                        if live_sphere {
+                            fl |= F_LIVE_SPHERE;
+                        }
+                        if col_sphere {
+                            fl |= F_COL_SPHERE;
+                        }
+                        if cols.moved_last.get(i) {
+                            fl |= F_COL_MOVED;
+                        }
+                        if ghost {
+                            fl |= F_GHOST;
+                        }
+                        if b.moved_last {
+                            fl |= F_LIVE_MOVED;
+                        }
+                        // "clean": the directed kernel inputs of both
+                        // orientations coincide -> one symmetric pair
+                        // evaluation is exact
+                        if live_sphere
+                            && col_sphere
+                            && pos == col_position
+                            && diam == col_inter_diam
+                        {
+                            fl |= F_CLEAN;
+                        }
+                        let q = self.search_radius.max(inter);
+                        let q2 = q * q;
+                        if q2 > chunk_max_r2 {
+                            chunk_max_r2 = q2;
+                        }
+                        // Preliminary awake: exact unless §5.5 needs the
+                        // box passes below (detect && moved_any).
+                        let wake = if detect {
+                            !ghost && !moved_any && b.moved_last
+                        } else {
+                            !ghost
+                        };
+                        // SAFETY: disjoint flat ranges per chunk/domain.
+                        unsafe {
+                            p_live_pos.0.add(flat).write(pos);
+                            p_live_radius.0.add(flat).write(diam / 2.0);
+                            p_query_r2.0.add(flat).write(q2);
+                            p_flags.0.add(flat).write(fl);
+                            p_awake.0.add(flat).write(wake as u8);
+                            if ndom > 1 {
+                                p_g_pos.0.add(flat).write(col_position);
+                                p_g_inter.0.add(flat).write(col_inter_diam);
+                                p_g_uid.0.add(flat).write(cols.uids[i]);
+                            }
+                        }
+                    }
+                    max_r2_bits.fetch_max(
+                        chunk_max_r2.to_bits(),
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                });
+                base_flat += len;
+            }
+        }
+
+        let query_r2: &[crate::Real] = &query_r2[..];
+        let flags: &[u8] = &flags[..];
+        let live_pos: &[Real3] = &live_pos[..];
+        let live_radius: &[crate::Real] = &live_radius[..];
+        let (col_pos, col_inter, col_uid): (
+            &[Real3],
+            &[crate::Real],
+            &[crate::core::agent::AgentUid],
+        ) = if ndom == 1 {
+            let c = rm.columns(0);
+            (&c.positions[..], &c.inter_diameters[..], &c.uids[..])
+        } else {
+            (&g_pos[..], &g_inter[..], &g_uid[..])
+        };
+
+        // ---- guard: the half neighborhood covers the per-agent scan
+        // only while every query radius fits in one box ring ----
+        let len2 = grid.box_length() * grid.box_length();
+        let max_r2 =
+            crate::Real::from_bits(max_r2_bits.load(std::sync::atomic::Ordering::Relaxed));
+        if max_r2 > len2 {
+            return false;
+        }
+
+        let dims = csr.dims();
+
+        // ---- §5.5 awake refinement (box passes) ----
+        if detect && moved_any {
+            box_moved.resize(nboxes, 0);
+            {
+                let p_box_moved = SendPtr(box_moved.as_mut_ptr());
+                pool.parallel_for_chunks(0..nboxes, 2048, |chunk, _wid| {
+                    for bx in chunk {
+                        let mut any = 0u8;
+                        for &f in csr.box_agents(bx) {
+                            if flags[f as usize] & F_COL_MOVED != 0 {
+                                any = 1;
+                                break;
+                            }
+                        }
+                        // SAFETY: disjoint box indices per chunk.
+                        unsafe { p_box_moved.0.add(bx).write(any) };
+                    }
+                });
+            }
+            let box_moved: &[u8] = &box_moved[..];
+            let p_awake = SendPtr(awake.as_mut_ptr());
+            pool.parallel_for_chunks(0..n, 512, |chunk, _wid| {
+                for ia in chunk {
+                    let fl = flags[ia];
+                    let wake = if fl & F_GHOST != 0 {
+                        false
+                    } else if fl & F_LIVE_MOVED != 0 {
+                        true
+                    } else {
+                        let c = csr.box_coord(col_pos[ia]);
+                        let lo = |k: usize| c[k].saturating_sub(1);
+                        let hi = |k: usize| (c[k] + 1).min(dims[k] - 1);
+                        let mut cube_moved = false;
+                        'cube: for z in lo(2)..=hi(2) {
+                            for y in lo(1)..=hi(1) {
+                                for x in lo(0)..=hi(0) {
+                                    if box_moved[csr.box_index([x, y, z])] != 0 {
+                                        cube_moved = true;
+                                        break 'cube;
+                                    }
+                                }
+                            }
+                        }
+                        if !cube_moved {
+                            // box-granularity skip: a fully static
+                            // 27-cube keeps the whole box asleep
+                            false
+                        } else {
+                            // exact per-agent probe (same candidates,
+                            // radius and bitset the per-agent path uses)
+                            let pa = col_pos[ia];
+                            let r2 = query_r2[ia];
+                            let mut any = false;
+                            'scan: for z in lo(2)..=hi(2) {
+                                for y in lo(1)..=hi(1) {
+                                    for x in lo(0)..=hi(0) {
+                                        for &j in
+                                            csr.box_agents(csr.box_index([x, y, z]))
+                                        {
+                                            let j = j as usize;
+                                            if j == ia
+                                                || flags[j] & F_COL_MOVED == 0
+                                            {
+                                                continue;
+                                            }
+                                            if col_pos[j].squared_distance(&pa) <= r2 {
+                                                any = true;
+                                                break 'scan;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            any
+                        }
+                    };
+                    // SAFETY: disjoint flat indices per chunk.
+                    unsafe { p_awake.0.add(ia).write(wake as u8) };
+                }
+            });
+        }
+        let awake: &[u8] = &awake[..];
+
+        // ---- per-box awake summary (drives the box-pair skip) ----
+        box_awake.resize(nboxes, 0);
+        {
+            let p_box_awake = SendPtr(box_awake.as_mut_ptr());
+            pool.parallel_for_chunks(0..nboxes, 2048, |chunk, _wid| {
+                for bx in chunk {
+                    let mut any = 0u8;
+                    for &f in csr.box_agents(bx) {
+                        if awake[f as usize] != 0 {
+                            any = 1;
+                            break;
+                        }
+                    }
+                    // SAFETY: disjoint box indices per chunk.
+                    unsafe { p_box_awake.0.add(bx).write(any) };
+                }
+            });
+        }
+        let box_awake: &[u8] = &box_awake[..];
+
+        // ---- pair enumeration over the Morton-ordered boxes ----
+        let force = &*self.force;
+        let directed = |x: usize, y: usize| -> Real3 {
+            let fast = if flags[x] & F_LIVE_SPHERE != 0 && flags[y] & F_COL_SPHERE != 0 {
+                force.sphere_sphere_fast(
+                    live_pos[x],
+                    live_radius[x],
+                    col_pos[y],
+                    col_inter[y] / 2.0,
+                )
+            } else {
+                None
+            };
+            match fast {
+                Some(f) => f,
+                None => force.calculate(
+                    rm.get(csr.flat_to_handle(x as u32)),
+                    rm.get(csr.flat_to_handle(y as u32)),
+                ),
+            }
+        };
+        let eval_pair = |ia_u: u32, ib_u: u32, buf: &mut Vec<SweepContribution>| {
+            let (ia, ib) = (ia_u as usize, ib_u as usize);
+            let aw_a = awake[ia] != 0;
+            let aw_b = awake[ib] != 0;
+            if !aw_a && !aw_b {
+                return;
+            }
+            let pa = col_pos[ia];
+            let pb = col_pos[ib];
+            let d2 = pb.squared_distance(&pa);
+            let want_a = aw_a && d2 <= query_r2[ia];
+            let want_b = aw_b && d2 <= query_r2[ib];
+            if !want_a && !want_b {
+                return;
+            }
+            if flags[ia] & F_CLEAN != 0 && flags[ib] & F_CLEAN != 0 {
+                if let Some((f_ab, f_ba)) = force.sphere_sphere_pair_fast(
+                    pa,
+                    col_inter[ia] / 2.0,
+                    pb,
+                    col_inter[ib] / 2.0,
+                ) {
+                    if want_a && f_ab != Real3::ZERO {
+                        buf.push((ia_u, col_uid[ib], f_ab));
+                    }
+                    if want_b && f_ba != Real3::ZERO {
+                        buf.push((ib_u, col_uid[ia], f_ba));
+                    }
+                    return;
+                }
+            }
+            if want_a {
+                let f = directed(ia, ib);
+                if f != Real3::ZERO {
+                    buf.push((ia_u, col_uid[ib], f));
+                }
+            }
+            if want_b {
+                let f = directed(ib, ia);
+                if f != Real3::ZERO {
+                    buf.push((ib_u, col_uid[ia], f));
+                }
+            }
+        };
+
+        worker_contrib.resize_with(nworkers, Vec::new);
+        let contrib_bufs: Vec<Mutex<Vec<SweepContribution>>> = worker_contrib
+            .drain(..)
+            .map(|mut v| {
+                v.clear();
+                Mutex::new(v)
+            })
+            .collect();
+        let morton = csr.morton_boxes();
+        pool.parallel_for_chunks(0..morton.len(), 16, |chunk, wid| {
+            // one lock per chunk, same pattern as the agent-loop queues
+            let mut guard = contrib_bufs[wid].lock().unwrap();
+            let buf: &mut Vec<SweepContribution> = &mut guard;
+            for m in chunk {
+                let b = morton[m] as usize;
+                let sa = csr.box_agents(b);
+                if sa.is_empty() {
+                    continue;
+                }
+                let a_awake = box_awake[b] != 0;
+                if a_awake {
+                    for (i, &ia) in sa.iter().enumerate() {
+                        for &ib in &sa[i + 1..] {
+                            eval_pair(ia, ib, buf);
+                        }
+                    }
+                }
+                csr.for_each_half_neighbor(b, |c| {
+                    let sb = csr.box_agents(c);
+                    if sb.is_empty() {
+                        return;
+                    }
+                    if !a_awake && box_awake[c] == 0 {
+                        return; // §5.5: both boxes fully asleep
+                    }
+                    for &ia in sa {
+                        for &ib in sb {
+                            eval_pair(ia, ib, buf);
+                        }
+                    }
+                });
+            }
+        });
+        let mut bufs: Vec<Vec<SweepContribution>> = contrib_bufs
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect();
+
+        // ---- group contributions per target (counting sort) ----
+        // Serial histogram + scatter over the contribution stream. At
+        // high core counts this is the sweep's Amdahl term; if it shows
+        // up in profiles, parallelize with per-worker histograms and
+        // pre-reserved per-worker cursor ranges.
+        contrib_starts.clear();
+        contrib_starts.resize(n + 1, 0);
+        let mut total = 0usize;
+        for buf in &bufs {
+            total += buf.len();
+            for &(t, _, _) in buf.iter() {
+                contrib_starts[t as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            contrib_starts[i + 1] += contrib_starts[i];
+        }
+        cursors.clear();
+        cursors.extend_from_slice(&contrib_starts[..n]);
+        contrib.clear();
+        contrib.resize(total, (0, Real3::ZERO));
+        for buf in &mut bufs {
+            for &(t, uid, f) in buf.iter() {
+                let t = t as usize;
+                let dst = cursors[t] as usize;
+                cursors[t] += 1;
+                contrib[dst] = (uid, f);
+            }
+            buf.clear();
+        }
+        *worker_contrib = bufs;
+
+        // ---- UID-ordered reduce + displacement apply ----
+        sort_bufs.resize_with(nworkers, Vec::new);
+        let sort_mutexes: Vec<Mutex<Vec<(crate::core::agent::AgentUid, Real3)>>> =
+            sort_bufs.drain(..).map(Mutex::new).collect();
+        let starts: &[u32] = &contrib_starts[..];
+        let contributions: &[(crate::core::agent::AgentUid, Real3)] = &contrib[..];
+        let dt = param.simulation_time_step;
+        pool.parallel_for_chunks(0..n, 256, |chunk, wid| {
+            let mut sbuf = sort_mutexes[wid].lock().unwrap();
+            for flat in chunk {
+                if flags[flat] & F_GHOST != 0 {
+                    continue; // ghosts receive no ops (scheduler rule)
+                }
+                let h = csr.flat_to_handle(flat as u32);
+                // SAFETY: disjoint flat ranges, injective flat->handle
+                // mapping -> single mutator per slot.
+                let agent = unsafe { rm.get_mut_unchecked(h) };
+                if awake[flat] == 0 {
+                    // §5.5 skip — the very write the per-agent
+                    // early-outs make
+                    agent.base_mut().moved_now = false;
+                    continue;
+                }
+                let (s, e) = (starts[flat] as usize, starts[flat + 1] as usize);
+                let mut total_force = Real3::ZERO;
+                if e > s {
+                    sbuf.clear();
+                    sbuf.extend_from_slice(&contributions[s..e]);
+                    sbuf.sort_unstable_by_key(|c| c.0);
+                    for (_, f) in sbuf.iter() {
+                        total_force += *f;
+                    }
+                }
+                let mut displacement = total_force * dt;
+                let norm = displacement.norm();
+                if norm > self.max_displacement {
+                    displacement = displacement * (self.max_displacement / norm);
+                }
+                if norm > self.static_threshold {
+                    let pos = live_pos[flat];
+                    let bounded = param.apply_bounds(pos + displacement) - pos;
+                    agent.translate(bounded);
+                    agent.base_mut().moved_now = true;
+                } else {
+                    agent.base_mut().moved_now = false;
+                }
+            }
+        });
+        *sort_bufs = sort_mutexes
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect();
+        true
     }
 }
 

@@ -19,6 +19,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Raw-pointer wrapper for parallel passes that write disjoint index
+/// ranges of a shared array (grid CSR build, SoA writeback, pair-sweep
+/// scatter). Purely a `Send`/`Sync` capability token — every user must
+/// guarantee its workers touch disjoint elements.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+// SAFETY: see the type docs — all users partition the index space.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Type-erased parallel job. `run` is re-entrant: every worker calls it
 /// once per epoch and internally steals chunks until exhaustion.
 trait Job: Send + Sync {

@@ -87,6 +87,20 @@ pub struct Param {
     pub use_pool_allocator: bool,
     /// Detect static agents and skip their collision forces (§5.5).
     pub detect_static_agents: bool,
+    /// Execute the mechanical-forces operation as a Morton-ordered
+    /// box-pair sweep over the uniform grid's CSR cell lists (PR 3):
+    /// each interacting pair is visited once over the 14-box half
+    /// neighborhood and the per-agent force sums are reduced in UID
+    /// order, so positions stay bitwise identical to the per-agent
+    /// path. Requires the uniform-grid environment, the in-place
+    /// execution context and the column-wise execution order (the
+    /// identity contract is defined against that baseline); the
+    /// scheduler falls back to the per-agent path otherwise, whenever
+    /// a query radius exceeds the box length, or when user ops are
+    /// registered after the force op (lifting would reorder them).
+    /// Extends §5.5 work omission to box granularity when combined
+    /// with `detect_static_agents`.
+    pub mech_pair_sweep: bool,
     /// Row-wise vs column-wise op execution (§5.2.1).
     pub execution_order: ExecutionOrder,
     /// In-place vs copy execution context (§5.2.1).
@@ -136,6 +150,7 @@ impl Default for Param {
             sort_frequency: 0,
             use_pool_allocator: false,
             detect_static_agents: false,
+            mech_pair_sweep: false,
             execution_order: ExecutionOrder::ColumnWise,
             execution_context: ExecutionContextMode::InPlace,
             randomize_iteration_order: false,
@@ -231,6 +246,9 @@ impl Param {
             }
             "detect_static_agents" => {
                 self.detect_static_agents = value.parse().map_err(|_| err(k, value))?
+            }
+            "mech_pair_sweep" => {
+                self.mech_pair_sweep = value.parse().map_err(|_| err(k, value))?
             }
             "execution_order" => {
                 self.execution_order = match value {
@@ -389,7 +407,9 @@ mod tests {
         p.apply_kv("dist_threaded_ranks", "false").unwrap();
         p.apply_kv("dist_aura_delta", "true").unwrap();
         p.apply_kv("dist_aura_deflate", "true").unwrap();
+        p.apply_kv("mech_pair_sweep", "true").unwrap();
         assert_eq!(p.num_threads, 8);
+        assert!(p.mech_pair_sweep);
         assert_eq!(p.execution_order, ExecutionOrder::RowWise);
         assert_eq!(p.execution_context, ExecutionContextMode::Copy);
         assert_eq!(p.diffusion_backend, DiffusionBackend::Pjrt);

@@ -61,6 +61,55 @@ use std::collections::HashMap;
 /// starts are multiples of the grain).
 pub(crate) const WRITEBACK_GRAIN: usize = 1024;
 
+/// One contribution of the pair sweep: `(target flat index, source
+/// agent UID, force on the target)`. The UID is the deterministic sort
+/// key of the per-agent reduction (same Fig 6.5 contract as the
+/// per-agent force path).
+pub type SweepContribution = (u32, AgentUid, Real3);
+
+/// Reusable scratch of the mechanical-forces pair sweep
+/// (`MechanicalForcesOp::run_pair_sweep`). Owned by the
+/// ResourceManager so every buffer's capacity survives across
+/// iterations — the steady-state sweep allocates nothing. Taken out
+/// with [`ResourceManager::take_sweep_scratch`] for the duration of the
+/// pass (the sweep needs `&ResourceManager` alongside the mutable
+/// scratch) and restored afterwards.
+#[derive(Default)]
+pub struct SweepScratch {
+    /// live (post-behavior) agent state, indexed by grid flat index —
+    /// the "self" side of each directed force, exactly what the
+    /// per-agent path reads from the live agent
+    pub live_pos: Vec<Real3>,
+    /// live geometric radius (`diameter() / 2`)
+    pub live_radius: Vec<Real>,
+    /// squared query radius `max(search_radius, live interaction
+    /// diameter)^2` — the per-agent candidate filter bound
+    pub query_r2: Vec<Real>,
+    /// per-flat flag bits (see `operation::sweep` flag constants)
+    pub flags: Vec<u8>,
+    /// per-flat awake byte (kept separate from `flags`: it is written
+    /// by a pass that concurrently reads `flags` of other agents)
+    pub awake: Vec<u8>,
+    /// per-box: any member's column `moved_last` bit set
+    pub box_moved: Vec<u8>,
+    /// per-box: any awake member
+    pub box_awake: Vec<u8>,
+    /// per-worker contribution buffers of the pair enumeration
+    pub worker_contrib: Vec<Vec<SweepContribution>>,
+    /// contribution counting sort: prefix starts per target flat
+    pub contrib_starts: Vec<u32>,
+    /// scatter cursors (copy of `contrib_starts` heads)
+    pub cursors: Vec<u32>,
+    /// contributions grouped by target: `(source uid, force)`
+    pub contrib: Vec<(AgentUid, Real3)>,
+    /// per-worker sort buffers of the UID-ordered reduction
+    pub sort_bufs: Vec<Vec<(AgentUid, Real3)>>,
+    /// multi-domain only: column values gathered into flat order
+    pub col_pos: Vec<Real3>,
+    pub col_inter: Vec<Real>,
+    pub col_uid: Vec<AgentUid>,
+}
+
 /// One agent slot; `Sync` because the scheduler guarantees single-writer.
 pub struct AgentSlot(UnsafeCell<Box<dyn Agent>>);
 
@@ -118,6 +167,9 @@ pub struct ResourceManager {
     moved_any: bool,
     /// Out-of-band `&mut` access happened since the last column sync.
     dirty: bool,
+    /// Pair-sweep accumulator scratch (capacity persists across
+    /// iterations; contents are transient per sweep).
+    sweep_scratch: SweepScratch,
 }
 
 impl ResourceManager {
@@ -132,7 +184,21 @@ impl ResourceManager {
             handle_cache: Vec::new(),
             moved_any: true,
             dirty: false,
+            sweep_scratch: SweepScratch::default(),
         }
+    }
+
+    /// Detach the pair-sweep scratch for the duration of a sweep (the
+    /// pass reads `&self` while mutating the scratch). Pair with
+    /// [`ResourceManager::restore_sweep_scratch`] so buffer capacity
+    /// survives to the next iteration.
+    pub fn take_sweep_scratch(&mut self) -> SweepScratch {
+        std::mem::take(&mut self.sweep_scratch)
+    }
+
+    /// Return the scratch taken by [`ResourceManager::take_sweep_scratch`].
+    pub fn restore_sweep_scratch(&mut self, scratch: SweepScratch) {
+        self.sweep_scratch = scratch;
     }
 
     /// Distributed engine: switch to a strided UID namespace so ranks

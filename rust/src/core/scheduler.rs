@@ -6,6 +6,12 @@
 //! 2. run user pre-standalone operations,
 //! 3. run all agent operations for all agents in parallel
 //!    (column-wise or row-wise, in-place or copy context),
+//! 3b. pair-sweep force pass (PR 3): when `Param::mech_pair_sweep` is
+//!    armed, pair-sweep-capable ops are lifted out of step 3 and run
+//!    as one Morton-ordered box-pair sweep over the grid's CSR view
+//!    (timed separately as "mechanical_forces"; falls back to a
+//!    per-agent pass with column-snapshot query origins when the
+//!    sweep cannot run),
 //! 4. barrier: commit thread-local additions/removals/deferred updates,
 //! 5. column writeback + §5.5 moved-flag flip (one fused parallel pass;
 //!    the bitset flip itself is an O(n/64) swap),
@@ -29,14 +35,20 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Wall-clock accounting per operation.
+///
+/// Keys are `&'static str`: every operation name is a static literal
+/// (`AgentOperation::name` / `StandaloneOperation::name` return
+/// `&'static str`), so the steady-state timing path allocates nothing —
+/// the former `String` keys cost one heap allocation per phase per
+/// iteration.
 #[derive(Debug, Default, Clone)]
 pub struct OpTimers {
-    entries: HashMap<String, (Duration, u64)>,
+    entries: HashMap<&'static str, (Duration, u64)>,
 }
 
 impl OpTimers {
-    pub fn record(&mut self, name: &str, elapsed: Duration) {
-        let e = self.entries.entry(name.to_string()).or_default();
+    pub fn record(&mut self, name: &'static str, elapsed: Duration) {
+        let e = self.entries.entry(name).or_default();
         e.0 += elapsed;
         e.1 += 1;
     }
@@ -51,11 +63,11 @@ impl OpTimers {
 
     /// (name, total, count) sorted by descending total — the Fig 5.6
     /// breakdown rows.
-    pub fn breakdown(&self) -> Vec<(String, Duration, u64)> {
+    pub fn breakdown(&self) -> Vec<(&'static str, Duration, u64)> {
         let mut rows: Vec<_> = self
             .entries
             .iter()
-            .map(|(k, (d, c))| (k.clone(), *d, *c))
+            .map(|(k, (d, c))| (*k, *d, *c))
             .collect();
         rows.sort_by(|a, b| b.1.cmp(&a.1));
         rows
@@ -84,6 +96,9 @@ pub fn execute_iteration(sim: &mut Simulation) {
     let t = Instant::now();
     run_agent_ops(sim);
     sim.timers.record("agent_ops", t.elapsed());
+
+    // ---- 3b. pair-sweep force pass (PR 3) -----------------------------
+    run_pair_sweep_ops(sim);
 
     // ---- 4. commit barrier ---------------------------------------------
     let t = Instant::now();
@@ -141,12 +156,16 @@ fn run_agent_ops(sim: &mut Simulation) {
         iteration: sim.iteration,
         seed: sim.param.seed,
     };
-    // operations active this iteration (frequency gate)
+    // operations active this iteration (frequency gate); the trailing
+    // pair-sweep-capable ops are lifted into the dedicated step-3b pass
+    let lift_from = pair_sweep_lift_from(sim);
     let active: Vec<&dyn crate::core::operation::AgentOperation> = sim
         .agent_ops
         .iter()
-        .filter(|op| sim.iteration % op.frequency().max(1) == 0)
-        .map(|b| &**b)
+        .enumerate()
+        .filter(|(_, op)| sim.iteration % op.frequency().max(1) == 0)
+        .filter(|(i, op)| !(*i >= lift_from && op.as_mechanical_pair_sweep().is_some()))
+        .map(|(_, b)| &**b)
         .collect();
     if active.is_empty() {
         return;
@@ -270,4 +289,133 @@ fn run_agent_ops(sim: &mut Simulation) {
     }
 
     sim.pending_queues = queues.into_iter().map(|m| m.into_inner().unwrap()).collect();
+}
+
+/// Is the pair-sweep execution mode in effect this iteration? Requires
+/// the parameter, the in-place context (the sweep mutates live agents
+/// directly), the column-wise order (the bitwise-identity contract is
+/// defined against the ColumnWise baseline — RowWise builds its force
+/// contexts from live post-behavior query origins, which the sweep
+/// does not reproduce) and an environment that armed a pair-sweep
+/// grid.
+fn pair_sweep_armed(sim: &Simulation) -> bool {
+    sim.param.mech_pair_sweep
+        && sim.param.execution_context == ExecutionContextMode::InPlace
+        && sim.param.execution_order == ExecutionOrder::ColumnWise
+        && sim.env.pair_sweep_grid().is_some()
+}
+
+/// First index of the *trailing* run of frequency-active, pair-sweep-
+/// capable agent ops: step 3b lifts exactly the active capable ops at
+/// `index >=` this value. Lifting only a suffix preserves the
+/// registered op order — an op registered *after* the force op (which
+/// would observe post-force state in the baseline) blocks the lift, so
+/// the whole list falls back to the per-agent loop instead of silently
+/// reordering.
+fn pair_sweep_lift_from(sim: &Simulation) -> usize {
+    let mut lift_from = sim.agent_ops.len();
+    if !pair_sweep_armed(sim) {
+        return lift_from;
+    }
+    for (i, op) in sim.agent_ops.iter().enumerate().rev() {
+        if sim.iteration % op.frequency().max(1) != 0 {
+            continue; // inactive this iteration: no ordering constraint
+        }
+        if op.as_mechanical_pair_sweep().is_some() {
+            lift_from = i;
+        } else {
+            break;
+        }
+    }
+    lift_from
+}
+
+/// Step 3b: run every lifted pair-sweep-capable op as the Morton-
+/// ordered box-pair sweep (timed as "mechanical_forces", separate from
+/// "agent_ops"). When the sweep cannot run this iteration — no CSR
+/// view, or a query radius exceeding the box length — the op executes
+/// as a per-agent pass instead (see [`run_single_op_pass`]).
+fn run_pair_sweep_ops(sim: &mut Simulation) {
+    let lift_from = pair_sweep_lift_from(sim);
+    if lift_from >= sim.agent_ops.len() {
+        return;
+    }
+    // lift the op list out so sim's other fields stay freely borrowable
+    let ops = std::mem::take(&mut sim.agent_ops);
+    for op in ops.iter().skip(lift_from) {
+        if sim.iteration % op.frequency().max(1) != 0 {
+            continue;
+        }
+        let mech = match op.as_mechanical_pair_sweep() {
+            Some(m) => m,
+            None => continue,
+        };
+        let t = Instant::now();
+        let mut scratch = sim.rm.take_sweep_scratch();
+        let swept = {
+            let grid = sim.env.pair_sweep_grid().expect("pair sweep armed");
+            mech.run_pair_sweep(&sim.rm, grid, &sim.pool, &sim.param, &mut scratch)
+        };
+        sim.rm.restore_sweep_scratch(scratch);
+        if !swept {
+            run_single_op_pass(sim, &**op);
+        }
+        sim.timers.record("mechanical_forces", t.elapsed());
+    }
+    // ops added meanwhile land in sim.agent_ops; keep them
+    let mut ops = ops;
+    ops.append(&mut sim.agent_ops);
+    sim.agent_ops = ops;
+}
+
+/// Per-agent execution of one lifted op (the sweep's fallback): one op
+/// over all agents, queue handling included. The context's query
+/// origin is the *column* position — behaviors already ran, so the
+/// live position may have moved, but the ColumnWise baseline captures
+/// `cur_pos` before any op runs (== the column snapshot); reading the
+/// column here keeps fallback iterations bitwise-identical to that
+/// baseline. Iteration is storage-ordered even under
+/// `randomize_iteration_order` — immaterial for force ops, whose
+/// result is order-independent (frozen-column inputs, UID-ordered
+/// summation).
+fn run_single_op_pass(sim: &mut Simulation, op: &dyn crate::core::operation::AgentOperation) {
+    if sim.rm.num_agents() == 0 {
+        return;
+    }
+    let nworkers = sim.pool.num_threads();
+    let queues: Vec<Mutex<ThreadQueues>> =
+        (0..nworkers).map(|_| Mutex::new(ThreadQueues::default())).collect();
+    let shared = IterationShared {
+        rm: &sim.rm,
+        env: &*sim.env,
+        substances: &sim.substances,
+        param: &sim.param,
+        iteration: sim.iteration,
+        seed: sim.param.seed,
+    };
+    let handles = sim.rm.handles();
+    sim.pool.parallel_for_chunks(0..handles.len(), 256, |chunk, wid| {
+        let mut q = queues[wid].lock().unwrap();
+        for i in chunk {
+            let h = handles[i];
+            if sim.rm.is_ghost(h) {
+                continue;
+            }
+            // SAFETY: disjoint chunks over the deduplicated handle
+            // list -> single mutator per slot.
+            let agent = unsafe { sim.rm.get_mut_unchecked(h) };
+            let mut ctx = AgentContext::new(
+                &shared,
+                &mut q,
+                h,
+                agent.uid(),
+                sim.rm.position_of(h), // column snapshot, see fn docs
+            );
+            if op.applies_to(agent) {
+                op.run(agent, &mut ctx);
+            }
+        }
+    });
+    sim.pending_queues
+        .extend(queues.into_iter().map(|m| m.into_inner().unwrap()));
 }

@@ -42,7 +42,13 @@ impl Simulation {
     pub fn new(param: Param) -> Self {
         let pool = ThreadPool::new(param.num_threads);
         let rm = ResourceManager::new(param.numa_domains);
-        let env = create_environment(&param);
+        let mut env = create_environment(&param);
+        if param.mech_pair_sweep {
+            // arm the CSR pair-traversal view (a no-op on environments
+            // without the capability; the scheduler then falls back to
+            // the per-agent force path)
+            env.enable_pair_sweep(true);
+        }
         let mut mech = MechanicalForcesOp::new(param.interaction_radius);
         mech.detect_static = param.detect_static_agents;
         mech.force = Box::new(crate::physics::force::DefaultForce::new(

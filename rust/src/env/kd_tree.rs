@@ -195,4 +195,23 @@ mod tests {
         env.update(&rm, &pool);
         env.for_each_neighbor(Real3::ZERO, 5.0, &rm, &mut |_, _, _| panic!("empty"));
     }
+
+    #[test]
+    fn handle_variant_matches_agent_variant() {
+        // the kd-tree relies on the trait's default handle visitor;
+        // guard that a future override keeps the two variants equal
+        let rm = crate::env::test_support::random_population(150, 7, 40.0, 2);
+        let pool = ThreadPool::new(2);
+        let mut env = KdTreeEnvironment::new();
+        env.update(&rm, &pool);
+        let q = Real3::new(20.0, 20.0, 20.0);
+        let mut via_agent = Vec::new();
+        env.for_each_neighbor(q, 18.0, &rm, &mut |h, _a, d2| via_agent.push((h, d2)));
+        let mut via_handle = Vec::new();
+        env.for_each_neighbor_handles(q, 18.0, &rm, &mut |h, d2| via_handle.push((h, d2)));
+        via_agent.sort_by_key(|(h, _)| *h);
+        via_handle.sort_by_key(|(h, _)| *h);
+        assert_eq!(via_agent, via_handle);
+        assert!(!via_agent.is_empty());
+    }
 }

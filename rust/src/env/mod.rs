@@ -61,6 +61,22 @@ pub trait Environment: Send + Sync {
     fn bounds(&self) -> (Real3, Real3);
 
     fn name(&self) -> &'static str;
+
+    /// Pair-traversal capability (PR 3): environments that can expose a
+    /// CSR cell-list view for the mechanical-forces box-pair sweep
+    /// (`Param::mech_pair_sweep`) opt in by overriding this pair of
+    /// hooks. `enable_pair_sweep` is called once at simulation
+    /// construction; it arms the per-update CSR build. The default
+    /// (kd-tree, octree) is a no-op — the scheduler then falls back to
+    /// the per-agent force path.
+    fn enable_pair_sweep(&mut self, _on: bool) {}
+
+    /// The armed pair-sweep grid, if any. Callers still validate the
+    /// per-iteration CSR via [`UniformGridEnvironment::csr`] — the view
+    /// can be absent for one update (e.g. an empty population).
+    fn pair_sweep_grid(&self) -> Option<&UniformGridEnvironment> {
+        None
+    }
 }
 
 /// Instantiate the environment selected in `param`.

@@ -13,8 +13,15 @@
 //!    insertion; a box is empty unless its timestamp matches the
 //!    current one. Build cost is O(#agents), not O(#agents + #boxes).
 //!
-//! The build's insertion path is lock-free: box heads are atomic swap
-//! targets, successor entries are written once by the inserting thread.
+//! The build's insertion path is concurrent and almost lock-free: box
+//! heads are atomic CAS targets, successor entries are written once by
+//! the inserting thread. The per-box *epoch opening* (the lazy
+//! head/count reset) is published through the stamp word: the opener
+//! claims the box by CAS-ing the stamp to an odd "opening" marker,
+//! resets, then stores the even published stamp; concurrent inserters
+//! spin on the marker for that bounded window. (The former swap-based
+//! reset let a second inserter push between the stamp swap and the
+//! head/count stores, losing its node.)
 //!
 //! Candidate filtering streams over the ResourceManager's SoA position
 //! columns (§5.4 memory layout): the grid holds no private position
@@ -22,10 +29,23 @@
 //! columns are a frozen start-of-iteration snapshot, so candidate
 //! distances are independent of in-iteration movement — deterministic
 //! under any processing order.
+//!
+//! ## CSR cell-list view (PR 3)
+//!
+//! On top of the linked lists the grid can maintain a second,
+//! *contiguous* view of the same build: a counting sort seeded from the
+//! per-box `count` atomics (written on every insert) produces
+//! `box_starts` + `cell_agents`, so a box's occupants are one slice
+//! instead of a pointer chain. Each box slice is sorted ascending, so
+//! the CSR is canonical regardless of the lock-free insert
+//! interleaving. The view powers the Morton-ordered box-pair sweep of
+//! the mechanical-forces operation (`Param::mech_pair_sweep`); when no
+//! consumer registered via [`UniformGridEnvironment::enable_csr`], the
+//! insert path skips the `count` bookkeeping entirely.
 
 use crate::core::agent::{Agent, AgentHandle};
 use crate::core::math::Real3;
-use crate::core::parallel::ThreadPool;
+use crate::core::parallel::{SendPtr, ThreadPool};
 use crate::core::resource_manager::ResourceManager;
 use crate::env::{compute_bounds, Environment};
 use crate::Real;
@@ -36,13 +56,39 @@ const EMPTY: u32 = u32::MAX;
 /// is increased (keeps sparse extreme-scale spaces memory-bounded).
 const MAX_BOXES: usize = 16_000_000;
 
+/// The 13 "forward" neighbor offsets (`[dx, dy, dz]`) of the half
+/// neighborhood: the offsets whose `(dz, dy, dx)` is lexicographically
+/// positive. A box visiting these plus itself enumerates every
+/// adjacent unordered box pair exactly once — the traversal behind the
+/// pair sweep's Newton's-third-law halving.
+pub const HALF_NEIGHBORHOOD: [[isize; 3]; 13] = [
+    [1, 0, 0],
+    [-1, 1, 0],
+    [0, 1, 0],
+    [1, 1, 0],
+    [-1, -1, 1],
+    [0, -1, 1],
+    [1, -1, 1],
+    [-1, 0, 1],
+    [0, 0, 1],
+    [1, 0, 1],
+    [-1, 1, 1],
+    [0, 1, 1],
+    [1, 1, 1],
+];
+
 struct GridBox {
     /// head of the agent linked list (flat agent index), valid only if
-    /// `stamp == grid.stamp`
+    /// `stamp == grid.published_stamp()`
     head: AtomicU32,
-    /// number of agents, valid only if `stamp == grid.stamp`
+    /// number of agents, valid only if `stamp == grid.published_stamp()`
+    /// *and* the CSR view is enabled (its only consumer — maintenance
+    /// is skipped otherwise)
     count: AtomicU32,
-    /// timestamp of the last insertion
+    /// Epoch word of the last insertion: `grid.stamp << 1` once the
+    /// box is initialized for the current build ("published"), or that
+    /// value `| 1` while one inserter performs the lazy head/count
+    /// reset ("opening") — see the module docs.
     stamp: AtomicU64,
 }
 
@@ -73,6 +119,18 @@ pub struct UniformGridEnvironment {
     stamp: u64,
     built: bool,
     bounds: (Real3, Real3),
+    /// CSR view requested (a pair-sweep consumer is registered).
+    csr_enabled: bool,
+    /// CSR: prefix sums over per-box occupancy (`len = nboxes + 1`).
+    box_starts: Vec<u32>,
+    /// CSR: flat agent indices grouped by box, each box slice sorted
+    /// ascending.
+    cell_agents: Vec<u32>,
+    /// stamp of the last CSR build (validity check).
+    csr_stamp: u64,
+    /// Morton visiting order of the box indices, cached per `dims`.
+    morton_boxes: Vec<u32>,
+    morton_dims: [usize; 3],
 }
 
 impl UniformGridEnvironment {
@@ -89,6 +147,29 @@ impl UniformGridEnvironment {
             stamp: 0,
             built: false,
             bounds: (Real3::ZERO, Real3::ZERO),
+            csr_enabled: false,
+            box_starts: Vec::new(),
+            cell_agents: Vec::new(),
+            csr_stamp: 0,
+            morton_boxes: Vec::new(),
+            morton_dims: [0; 3],
+        }
+    }
+
+    /// Register (or drop) the CSR consumer. While disabled, the insert
+    /// path skips the per-box `count` bookkeeping and `update` builds
+    /// no CSR.
+    pub fn enable_csr(&mut self, on: bool) {
+        self.csr_enabled = on;
+    }
+
+    /// The CSR view of the *current* build, or `None` if no consumer is
+    /// registered or the last `update` predates the request.
+    pub fn csr(&self) -> Option<GridCsr<'_>> {
+        if self.csr_enabled && self.built && self.csr_stamp == self.stamp {
+            Some(GridCsr { grid: self })
+        } else {
+            None
         }
     }
 
@@ -113,6 +194,13 @@ impl UniformGridEnvironment {
     #[inline]
     fn box_index(&self, c: [usize; 3]) -> usize {
         (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
+    }
+
+    /// The even epoch word a fully-initialized box of the current
+    /// build carries (see [`GridBox::stamp`]).
+    #[inline]
+    fn published_stamp(&self) -> u64 {
+        self.stamp << 1
     }
 
     /// The grid's Morton-relevant geometry, used by the sorting op.
@@ -150,13 +238,14 @@ impl UniformGridEnvironment {
         // range of boxes the query sphere can touch
         let reach = (radius / self.box_length).ceil() as isize;
         let c = self.box_coord(query);
+        let published = self.published_stamp();
         let lo = |i: usize| (c[i] as isize - reach).max(0) as usize;
         let hi = |i: usize| ((c[i] as isize + reach) as usize).min(self.dims[i] - 1);
         for z in lo(2)..=hi(2) {
             for y in lo(1)..=hi(1) {
                 for x in lo(0)..=hi(0) {
                     let b = &self.boxes[self.box_index([x, y, z])];
-                    if b.stamp.load(Ordering::Acquire) != self.stamp {
+                    if b.stamp.load(Ordering::Acquire) != published {
                         continue; // stale box = empty
                     }
                     let mut cur = b.head.load(Ordering::Acquire);
@@ -207,6 +296,8 @@ impl Environment for UniformGridEnvironment {
         if n == 0 {
             self.dims = [1, 1, 1];
             self.bounds = (Real3::ZERO, Real3::ZERO);
+            // invalidate any previous CSR (its box layout is stale)
+            self.stamp += 1;
             return;
         }
 
@@ -244,9 +335,12 @@ impl Environment for UniformGridEnvironment {
         self.stamp += 1;
         let stamp = self.stamp;
 
-        // --- parallel insert (lock-free; paper's parallelized build):
-        // stream each domain's position column, no box chasing ---
+        // --- parallel insert (paper's parallelized build): stream each
+        // domain's position column, no box chasing ---
         let this = &*self;
+        let maintain_counts = this.csr_enabled;
+        let published = stamp << 1;
+        let opening = published | 1;
         for d in 0..ndom {
             let positions = rm.positions(d);
             let base_flat = this.domain_offsets[d];
@@ -254,10 +348,36 @@ impl Environment for UniformGridEnvironment {
                 let pos = positions[i];
                 let bidx = this.box_index(this.box_coord(pos));
                 let gbox = &this.boxes[bidx];
-                // lazy reset via timestamp
-                if gbox.stamp.swap(stamp, Ordering::AcqRel) != stamp {
-                    gbox.head.store(EMPTY, Ordering::Release);
-                    gbox.count.store(0, Ordering::Release);
+                // Lazy per-epoch reset, race-free: the opener claims
+                // the box (CAS stale -> odd marker), resets head/count,
+                // then publishes the even stamp; everyone else inserts
+                // only after observing the published stamp (the
+                // release store / acquire load pair on `stamp` orders
+                // the resets before every insert of this epoch).
+                let mut cur = gbox.stamp.load(Ordering::Acquire);
+                while cur != published {
+                    if cur & 1 == 0 {
+                        match gbox.stamp.compare_exchange_weak(
+                            cur,
+                            opening,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        ) {
+                            Ok(_) => {
+                                gbox.head.store(EMPTY, Ordering::Release);
+                                if maintain_counts {
+                                    gbox.count.store(0, Ordering::Release);
+                                }
+                                gbox.stamp.store(published, Ordering::Release);
+                                cur = published;
+                            }
+                            Err(c) => cur = c,
+                        }
+                    } else {
+                        // opener at work; bounded wait (two stores)
+                        std::hint::spin_loop();
+                        cur = gbox.stamp.load(Ordering::Acquire);
+                    }
                 }
                 let flat = base_flat + i as u32;
                 // push-front: successor[flat] = old head
@@ -274,8 +394,16 @@ impl Environment for UniformGridEnvironment {
                         Err(h2) => head = h2,
                     }
                 }
-                gbox.count.fetch_add(1, Ordering::AcqRel);
+                // occupancy counter: only the CSR counting sort reads
+                // it, so skip the atomic when no consumer registered
+                if maintain_counts {
+                    gbox.count.fetch_add(1, Ordering::AcqRel);
+                }
             });
+        }
+
+        if self.csr_enabled {
+            self.build_csr(pool);
         }
     }
 
@@ -305,6 +433,12 @@ impl Environment for UniformGridEnvironment {
         self.domain_offsets.clear();
         self.num_flat = 0;
         self.built = false;
+        self.box_starts.clear();
+        self.cell_agents.clear();
+        self.morton_boxes.clear();
+        self.morton_dims = [0; 3];
+        self.csr_stamp = 0;
+        self.stamp += 1;
     }
 
     fn bounds(&self) -> (Real3, Real3) {
@@ -314,9 +448,187 @@ impl Environment for UniformGridEnvironment {
     fn name(&self) -> &'static str {
         "uniform_grid"
     }
+
+    fn enable_pair_sweep(&mut self, on: bool) {
+        self.enable_csr(on);
+    }
+
+    fn pair_sweep_grid(&self) -> Option<&UniformGridEnvironment> {
+        if self.csr_enabled {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+/// Borrowed CSR view of one grid build (see module docs). All flat
+/// indices refer to the same dense flat space the linked lists use
+/// (per-domain offsets over the ResourceManager storage order).
+pub struct GridCsr<'a> {
+    grid: &'a UniformGridEnvironment,
+}
+
+impl GridCsr<'_> {
+    #[inline]
+    pub fn dims(&self) -> [usize; 3] {
+        self.grid.dims
+    }
+
+    #[inline]
+    pub fn box_length(&self) -> Real {
+        self.grid.box_length
+    }
+
+    #[inline]
+    pub fn num_boxes(&self) -> usize {
+        self.grid.dims[0] * self.grid.dims[1] * self.grid.dims[2]
+    }
+
+    #[inline]
+    pub fn num_flat(&self) -> usize {
+        self.grid.num_flat
+    }
+
+    /// Occupants of box `b` as ascending flat indices.
+    #[inline]
+    pub fn box_agents(&self, b: usize) -> &[u32] {
+        let s = self.grid.box_starts[b] as usize;
+        let e = self.grid.box_starts[b + 1] as usize;
+        &self.grid.cell_agents[s..e]
+    }
+
+    /// Box indices in Morton visiting order.
+    #[inline]
+    pub fn morton_boxes(&self) -> &[u32] {
+        &self.grid.morton_boxes
+    }
+
+    /// Grid coordinates of the box containing `p` (clamped).
+    #[inline]
+    pub fn box_coord(&self, p: Real3) -> [usize; 3] {
+        self.grid.box_coord(p)
+    }
+
+    /// Flat box index of grid coordinates `c`.
+    #[inline]
+    pub fn box_index(&self, c: [usize; 3]) -> usize {
+        self.grid.box_index(c)
+    }
+
+    /// Visit the in-range "forward" neighbors of box `b` (the
+    /// [`HALF_NEIGHBORHOOD`] offsets): `f(neighbor_box_index)`. Every
+    /// adjacent unordered box pair is produced exactly once when each
+    /// box is visited with this plus its own intra-box pairs — the
+    /// single definition of the sweep traversal (the engine's pair
+    /// sweep and the fig5_13 cross-check both call it).
+    #[inline]
+    pub fn for_each_half_neighbor(&self, b: usize, mut f: impl FnMut(usize)) {
+        let dims = self.grid.dims;
+        let bx = b % dims[0];
+        let by = (b / dims[0]) % dims[1];
+        let bz = b / (dims[0] * dims[1]);
+        for off in HALF_NEIGHBORHOOD {
+            let nx = bx as isize + off[0];
+            let ny = by as isize + off[1];
+            let nz = bz as isize + off[2];
+            if nx < 0
+                || ny < 0
+                || nz < 0
+                || nx >= dims[0] as isize
+                || ny >= dims[1] as isize
+                || nz >= dims[2] as isize
+            {
+                continue;
+            }
+            f((nz as usize * dims[1] + ny as usize) * dims[0] + nx as usize);
+        }
+    }
+
+    /// Map a flat agent index back to its storage handle.
+    #[inline]
+    pub fn flat_to_handle(&self, flat: u32) -> AgentHandle {
+        self.grid.flat_to_handle(flat)
+    }
 }
 
 impl UniformGridEnvironment {
+    /// Counting-sort pass over the per-box insert counters: produce the
+    /// contiguous `box_starts` / `cell_agents` view of the build the
+    /// lock-free insert just finished (module docs, "CSR cell-list
+    /// view").
+    fn build_csr(&mut self, pool: &ThreadPool) {
+        let nboxes = self.dims[0] * self.dims[1] * self.dims[2];
+        let n = self.num_flat;
+        self.box_starts.clear();
+        self.box_starts.resize(nboxes + 1, 0);
+
+        // pass 1: read the per-box counters (stale stamp = empty box)
+        {
+            let starts = SendPtr(self.box_starts.as_mut_ptr());
+            let boxes = &self.boxes;
+            let published = self.published_stamp();
+            pool.parallel_for_chunks(0..nboxes, 4096, |chunk, _wid| {
+                let p = &starts;
+                for b in chunk {
+                    let gbox = &boxes[b];
+                    let c = if gbox.stamp.load(Ordering::Acquire) == published {
+                        gbox.count.load(Ordering::Acquire)
+                    } else {
+                        0
+                    };
+                    // SAFETY: disjoint chunks write disjoint counters.
+                    unsafe { p.0.add(b + 1).write(c) };
+                }
+            });
+        }
+
+        // pass 2: serial prefix sum (u32 adds over #boxes; cheap next
+        // to the O(#agents) passes around it)
+        for b in 0..nboxes {
+            self.box_starts[b + 1] += self.box_starts[b];
+        }
+        debug_assert_eq!(self.box_starts[nboxes] as usize, n);
+
+        // pass 3: scatter — walk each box's linked list into its slice,
+        // then sort the slice so the CSR is canonical (ascending flat
+        // indices) regardless of the lock-free insert interleaving
+        self.cell_agents.clear();
+        self.cell_agents.resize(n, 0);
+        {
+            let cells = SendPtr(self.cell_agents.as_mut_ptr());
+            let starts = &self.box_starts;
+            let boxes = &self.boxes;
+            let successors = &self.successors;
+            pool.parallel_for_chunks(0..nboxes, 1024, |chunk, _wid| {
+                for b in chunk {
+                    let (s, e) = (starts[b] as usize, starts[b + 1] as usize);
+                    if s == e {
+                        continue;
+                    }
+                    let mut cur = boxes[b].head.load(Ordering::Acquire);
+                    // SAFETY: [s, e) slices are disjoint across boxes.
+                    let slice =
+                        unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
+                    for slot in slice.iter_mut() {
+                        debug_assert_ne!(cur, EMPTY, "count shorter than list");
+                        *slot = cur;
+                        cur = successors[cur as usize].load(Ordering::Acquire);
+                    }
+                    debug_assert_eq!(cur, EMPTY, "count longer than list");
+                    slice.sort_unstable();
+                }
+            });
+        }
+
+        // pass 4: Morton visiting order, cached per grid shape
+        if self.morton_dims != self.dims {
+            self.morton_boxes = crate::mem::morton::morton_order_indices(self.dims);
+            self.morton_dims = self.dims;
+        }
+        self.csr_stamp = self.stamp;
+    }
+
     /// Map a flat storage index back to its (domain, index) handle via
     /// binary search over the per-domain offset prefix sums
     /// (`domain_offsets[0] == 0`, monotone non-decreasing).
@@ -462,6 +774,145 @@ mod tests {
             },
         );
         assert_eq!(seen.len(), 200);
+    }
+
+    /// CSR invariants against the linked-list build: every flat index
+    /// appears exactly once, in the box its column position maps to,
+    /// with ascending order inside each box slice.
+    fn assert_csr_coherent(env: &UniformGridEnvironment, rm: &ResourceManager) {
+        let csr = env.csr().expect("csr built");
+        assert_eq!(csr.num_flat(), rm.num_agents());
+        let mut seen = vec![false; csr.num_flat()];
+        for b in 0..csr.num_boxes() {
+            let slice = csr.box_agents(b);
+            for w in slice.windows(2) {
+                assert!(w[0] < w[1], "box {b} slice not ascending");
+            }
+            for &flat in slice {
+                assert!(!seen[flat as usize], "flat {flat} twice");
+                seen[flat as usize] = true;
+                let h = csr.flat_to_handle(flat);
+                let pos = rm.position_of(h);
+                assert_eq!(csr.box_index(csr.box_coord(pos)), b, "flat {flat}");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "missing flats");
+        // morton list is a permutation of all boxes
+        let mut boxes_seen = vec![false; csr.num_boxes()];
+        for &b in csr.morton_boxes() {
+            assert!(!boxes_seen[b as usize]);
+            boxes_seen[b as usize] = true;
+        }
+        assert!(boxes_seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn csr_matches_linked_list_build() {
+        for domains in [1, 3] {
+            let rm = random_population(400, 17, 80.0, domains);
+            let pool = ThreadPool::new(4);
+            let mut env = UniformGridEnvironment::new(None);
+            env.enable_csr(true);
+            env.update(&rm, &pool);
+            assert_csr_coherent(&env, &rm);
+        }
+    }
+
+    #[test]
+    fn csr_absent_without_consumer_or_before_update() {
+        let rm = random_population(50, 3, 40.0, 1);
+        let pool = ThreadPool::new(1);
+        let mut env = UniformGridEnvironment::new(None);
+        assert!(env.csr().is_none());
+        env.update(&rm, &pool);
+        assert!(env.csr().is_none(), "no consumer registered");
+        env.enable_csr(true);
+        assert!(env.csr().is_none(), "stale build predates the request");
+        env.update(&rm, &pool);
+        assert!(env.csr().is_some());
+        // empty population invalidates the view
+        let empty = ResourceManager::new(1);
+        env.update(&empty, &pool);
+        assert!(env.csr().is_none());
+    }
+
+    #[test]
+    fn csr_tracks_population_across_updates() {
+        let mut rm = random_population(120, 9, 60.0, 2);
+        let pool = ThreadPool::new(2);
+        let mut env = UniformGridEnvironment::new(None);
+        env.enable_csr(true);
+        env.update(&rm, &pool);
+        assert_csr_coherent(&env, &rm);
+        // move everything: stale per-box counters must not leak into
+        // the next counting sort
+        rm.for_each_agent_mut(|_, a| {
+            let p = a.position();
+            a.set_position(p + Real3::new(500.0, -250.0, 125.0));
+        });
+        env.update(&rm, &pool);
+        assert_csr_coherent(&env, &rm);
+    }
+
+    #[test]
+    fn half_neighborhood_covers_each_adjacent_box_pair_once() {
+        let dims = [4usize, 3, 5];
+        let mut pairs = std::collections::HashSet::new();
+        for z in 0..dims[2] {
+            for y in 0..dims[1] {
+                for x in 0..dims[0] {
+                    let b = (z * dims[1] + y) * dims[0] + x;
+                    for off in HALF_NEIGHBORHOOD {
+                        let nx = x as isize + off[0];
+                        let ny = y as isize + off[1];
+                        let nz = z as isize + off[2];
+                        if nx < 0
+                            || ny < 0
+                            || nz < 0
+                            || nx >= dims[0] as isize
+                            || ny >= dims[1] as isize
+                            || nz >= dims[2] as isize
+                        {
+                            continue;
+                        }
+                        let c =
+                            (nz as usize * dims[1] + ny as usize) * dims[0] + nx as usize;
+                        let key = (b.min(c), b.max(c));
+                        assert!(pairs.insert(key), "pair {key:?} twice");
+                    }
+                }
+            }
+        }
+        // count = number of adjacent unordered pairs in the grid
+        let mut expected = 0usize;
+        for z in 0..dims[2] {
+            for y in 0..dims[1] {
+                for x in 0..dims[0] {
+                    for dz in -1isize..=1 {
+                        for dy in -1isize..=1 {
+                            for dx in -1isize..=1 {
+                                if (dx, dy, dz) == (0, 0, 0) {
+                                    continue;
+                                }
+                                let nx = x as isize + dx;
+                                let ny = y as isize + dy;
+                                let nz = z as isize + dz;
+                                if nx >= 0
+                                    && ny >= 0
+                                    && nz >= 0
+                                    && nx < dims[0] as isize
+                                    && ny < dims[1] as isize
+                                    && nz < dims[2] as isize
+                                {
+                                    expected += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(pairs.len(), expected / 2);
     }
 
     #[test]

@@ -67,6 +67,19 @@ pub fn for_each_box_morton_order(dims: [usize; 3], f: &mut dyn FnMut([usize; 3])
     walk([0, 0, 0], size, dims, f);
 }
 
+/// Materialized [`for_each_box_morton_order`]: the Morton visiting
+/// sequence as flat box indices under the uniform grid's x-major
+/// layout (`(z * dims_y + y) * dims_x + x`). The CSR pair sweep walks
+/// this list so box-adjacent work stays memory-adjacent after the
+/// §5.4.2 agent sorting.
+pub fn morton_order_indices(dims: [usize; 3]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(dims[0] * dims[1] * dims[2]);
+    for_each_box_morton_order(dims, &mut |c| {
+        out.push(((c[2] * dims[1] + c[1]) * dims[0] + c[0]) as u32);
+    });
+    out
+}
+
 fn walk(origin: [usize; 3], size: usize, dims: [usize; 3], f: &mut dyn FnMut([usize; 3])) {
     // prune subtrees fully outside the grid
     if origin[0] >= dims[0] || origin[1] >= dims[1] || origin[2] >= dims[2] {
@@ -182,6 +195,29 @@ mod tests {
                 .collect();
             for w in codes.windows(2) {
                 assert!(w[0] < w[1], "{dims:?}: not in morton order");
+            }
+        }
+    }
+
+    #[test]
+    fn morton_order_indices_is_a_permutation_in_order() {
+        for dims in [[4usize, 4, 4], [5, 3, 2], [1, 7, 1]] {
+            let idx = morton_order_indices(dims);
+            let nboxes = dims[0] * dims[1] * dims[2];
+            assert_eq!(idx.len(), nboxes, "{dims:?}");
+            let mut seen = vec![false; nboxes];
+            let mut order = Vec::new();
+            for &b in &idx {
+                assert!(!seen[b as usize], "{dims:?}: duplicate {b}");
+                seen[b as usize] = true;
+                let b = b as usize;
+                let x = b % dims[0];
+                let y = (b / dims[0]) % dims[1];
+                let z = b / (dims[0] * dims[1]);
+                order.push(morton_encode(x as u64, y as u64, z as u64));
+            }
+            for w in order.windows(2) {
+                assert!(w[0] < w[1], "{dims:?}: not morton order");
             }
         }
     }

@@ -28,6 +28,30 @@ pub trait InteractionForce: Send + Sync {
     fn sphere_sphere_fast(&self, _pa: Real3, _ra: Real, _pb: Real3, _rb: Real) -> Option<Real3> {
         None
     }
+
+    /// Batched pair entry for the box-pair sweep: both directed forces
+    /// `(on_a, on_b)` of one sphere pair, evaluated from the same
+    /// inputs. The contract is bitwise agreement with the two directed
+    /// [`InteractionForce::sphere_sphere_fast`] calls — the default
+    /// simply makes them. Implementations whose force obeys Newton's
+    /// third law exactly (the default force does, by IEEE sign
+    /// symmetry) override this with one kernel evaluation + negation,
+    /// which is the arithmetic half of the sweep's pair halving.
+    fn sphere_sphere_pair_fast(
+        &self,
+        pa: Real3,
+        ra: Real,
+        pb: Real3,
+        rb: Real,
+    ) -> Option<(Real3, Real3)> {
+        match (
+            self.sphere_sphere_fast(pa, ra, pb, rb),
+            self.sphere_sphere_fast(pb, rb, pa, ra),
+        ) {
+            (Some(f_ab), Some(f_ba)) => Some((f_ab, f_ba)),
+            _ => None,
+        }
+    }
 }
 
 /// The default BioDynaMo/Cortex3D force.
@@ -137,6 +161,40 @@ impl InteractionForce for DefaultForce {
         Some(self.sphere_sphere(pa, ra, pb, rb))
     }
 
+    /// One distance/overlap evaluation per pair (the expensive half:
+    /// `norm`, `sqrt`, `magnitude`). Bitwise-exact against the two
+    /// directed calls: the squared norm of `pb - pa` equals that of
+    /// `pa - pb` ((-v)^2 == v^2 exactly, and equal components square
+    /// to the same +0.0), and `magnitude` is symmetric in its radii
+    /// (IEEE `+`/`*` are commutative). The reverse force is computed
+    /// from the *reverse delta* rather than by negation — negating
+    /// would flip the sign bit of zero components (x - x is +0.0 from
+    /// both directions, never -0.0), breaking bit equality with the
+    /// directed call whenever the pair shares a coordinate. The
+    /// coincident-center arm mirrors `sphere_sphere`: *both* agents
+    /// receive the same deterministic +x push there (that case is
+    /// deliberately not antisymmetric).
+    fn sphere_sphere_pair_fast(
+        &self,
+        pa: Real3,
+        ra: Real,
+        pb: Real3,
+        rb: Real,
+    ) -> Option<(Real3, Real3)> {
+        let delta_pos = pa - pb;
+        let dist = delta_pos.norm();
+        if dist < 1e-9 {
+            let f = Real3::new(self.repulsion_k * (ra + rb), 0.0, 0.0);
+            return Some((f, f));
+        }
+        let m = self.magnitude(ra, rb, dist);
+        if m == 0.0 {
+            return Some((Real3::ZERO, Real3::ZERO));
+        }
+        let scale = m / dist;
+        Some((delta_pos * scale, (pb - pa) * scale))
+    }
+
     fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3 {
         let (ra, rb) = (a.diameter() / 2.0, b.diameter() / 2.0);
         match (a.shape(), b.shape()) {
@@ -206,6 +264,29 @@ mod tests {
         let b = sphere(9.9, 10.0); // delta = 0.1
         let force = f.calculate(&a, &b);
         assert!(force.x() > 0.0, "adhesion pulls a toward b: {force:?}");
+    }
+
+    #[test]
+    fn pair_fast_bitwise_matches_directed_calls() {
+        // the sweep's halving contract: the batched kernel must equal
+        // the two directed evaluations bit for bit, including the
+        // attraction region, separated pairs and coincident centers
+        let f = DefaultForce::new(3.7, 1.3);
+        let cases = [
+            (Real3::new(0.0, 0.0, 0.0), 5.0, Real3::new(2.0, 1.0, -3.0), 4.0),
+            (Real3::new(1.0, 2.0, 3.0), 5.0, Real3::new(1.0, 2.0 + 9.9, 3.0), 5.0),
+            (Real3::new(0.5, -0.25, 8.0), 2.0, Real3::new(30.0, 0.0, 0.0), 2.0),
+            (Real3::new(1.0, 1.0, 1.0), 6.0, Real3::new(1.0, 1.0, 1.0), 2.5),
+        ];
+        for (pa, ra, pb, rb) in cases {
+            let (on_a, on_b) = f.sphere_sphere_pair_fast(pa, ra, pb, rb).unwrap();
+            let dir_a = f.sphere_sphere_fast(pa, ra, pb, rb).unwrap();
+            let dir_b = f.sphere_sphere_fast(pb, rb, pa, ra).unwrap();
+            for c in 0..3 {
+                assert_eq!(on_a[c].to_bits(), dir_a[c].to_bits(), "{pa:?} on_a[{c}]");
+                assert_eq!(on_b[c].to_bits(), dir_b[c].to_bits(), "{pa:?} on_b[{c}]");
+            }
+        }
     }
 
     #[test]

@@ -164,6 +164,243 @@ fn static_detection_preserves_dynamics() {
     }
 }
 
+// ------------------------------------------------------------ pair sweep
+
+/// Bitwise state snapshot: (uid, position bits, diameter bits).
+fn snapshot_bits(sim: &Simulation) -> Vec<(u64, [u64; 3], u64)> {
+    let mut state: Vec<(u64, [u64; 3], u64)> = Vec::new();
+    sim.rm.for_each_agent(|_, a| {
+        let p = a.position().0;
+        state.push((
+            a.uid(),
+            [p[0].to_bits(), p[1].to_bits(), p[2].to_bits()],
+            a.diameter().to_bits(),
+        ));
+    });
+    state.sort_by_key(|e| e.0);
+    state
+}
+
+#[test]
+fn pair_sweep_bitwise_identical_random_population() {
+    // Acceptance: the Morton box-pair sweep must reproduce the
+    // per-agent force path bit for bit at 1/2/8 worker threads, with
+    // and without §5.5 static detection.
+    for threads in [1usize, 2, 8] {
+        for detect in [false, true] {
+            let run = |sweep: bool| {
+                let mut param = Param::default();
+                param.seed = 42;
+                param.num_threads = threads;
+                param.detect_static_agents = detect;
+                param.mech_pair_sweep = sweep;
+                param.simulation_time_step = 0.05;
+                let mut sim = Simulation::new(param);
+                let mut rng = Rng::new(7);
+                for _ in 0..250 {
+                    let mut a = SphericalAgent::new(rng.uniform3(0.0, 60.0));
+                    a.base.diameter = rng.uniform(5.0, 12.0);
+                    sim.add_agent(Box::new(a));
+                }
+                sim.simulate(12);
+                snapshot_bits(&sim)
+            };
+            let per_agent = run(false);
+            let swept = run(true);
+            assert_eq!(
+                per_agent, swept,
+                "threads={threads} detect={detect}: sweep diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn pair_sweep_bitwise_identical_cell_growth() {
+    // Acceptance on a full model: growth mutates diameters and division
+    // repositions mothers before the force op runs, so the sweep's
+    // live-vs-column ("clean") split is exercised alongside population
+    // growth across the commit barrier.
+    for threads in [1usize, 2, 8] {
+        let run = |sweep: bool| {
+            let mut param = Param::default();
+            param.seed = 5;
+            param.num_threads = threads;
+            param.mech_pair_sweep = sweep;
+            // dt 0.1: cells reach the division threshold within a few
+            // iterations, so the run covers several division rounds
+            param.simulation_time_step = 0.1;
+            let p = models::cell_growth::CellGrowthParams {
+                cells_per_dim: 3,
+                growth_rate: 400.0,
+                ..Default::default()
+            };
+            let mut sim = models::cell_growth::build(param, &p);
+            sim.simulate(20);
+            snapshot_bits(&sim)
+        };
+        let per_agent = run(false);
+        let swept = run(true);
+        assert!(per_agent.len() > 27, "divisions expected");
+        assert_eq!(per_agent, swept, "threads={threads}: sweep diverged");
+    }
+}
+
+#[test]
+fn pair_sweep_falls_back_when_radius_exceeds_box_length() {
+    // An agent whose interaction diameter exceeds the box length makes
+    // the half neighborhood insufficient; the scheduler must fall back
+    // to the per-agent path and still match it exactly.
+    let run = |sweep: bool| {
+        let mut param = Param::default();
+        param.seed = 12;
+        param.mech_pair_sweep = sweep;
+        param.num_threads = 2;
+        param.box_length = Some(10.0); // < the big agent's diameter
+        param.simulation_time_step = 0.05;
+        let mut sim = Simulation::new(param);
+        let mut rng = Rng::new(3);
+        for _ in 0..80 {
+            let mut a = SphericalAgent::new(rng.uniform3(0.0, 40.0));
+            a.base.diameter = rng.uniform(5.0, 9.0);
+            sim.add_agent(Box::new(a));
+        }
+        sim.add_agent(Box::new(SphericalAgent::with_diameter(
+            Real3::new(20.0, 20.0, 20.0),
+            24.0,
+        )));
+        sim.simulate(8);
+        snapshot_bits(&sim)
+    };
+    assert_eq!(run(false), run(true));
+}
+
+/// Force wrapper counting every kernel evaluation — the observable for
+/// the §5.5 fast-path tests.
+struct CountingForce {
+    calls: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    inner: teraagent::physics::force::DefaultForce,
+}
+
+impl teraagent::physics::force::InteractionForce for CountingForce {
+    fn calculate(&self, a: &dyn Agent, b: &dyn Agent) -> Real3 {
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.calculate(a, b)
+    }
+
+    fn sphere_sphere_fast(
+        &self,
+        pa: Real3,
+        ra: f64,
+        pb: Real3,
+        rb: f64,
+    ) -> Option<Real3> {
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.sphere_sphere_fast(pa, ra, pb, rb)
+    }
+}
+
+/// Three spheres in a row, 13 apart (neighbors within the 15 search
+/// radius, but never overlapping): forces evaluate to zero, so after
+/// iteration 0 the population is fully static.
+fn static_row_sim(detect: bool, sweep: bool) -> (Simulation, std::sync::Arc<std::sync::atomic::AtomicU64>) {
+    let mut param = Param::default();
+    param.seed = 1;
+    param.detect_static_agents = detect;
+    param.mech_pair_sweep = sweep;
+    let mut sim = Simulation::new(param);
+    let calls = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    sim.remove_agent_op("mechanical_forces");
+    let mut mech =
+        teraagent::core::operation::MechanicalForcesOp::new(sim.param.interaction_radius);
+    mech.detect_static = detect;
+    mech.force = Box::new(CountingForce {
+        calls: calls.clone(),
+        inner: teraagent::physics::force::DefaultForce::default(),
+    });
+    sim.add_agent_op(Box::new(mech));
+    for i in 0..3 {
+        sim.add_agent(Box::new(SphericalAgent::with_diameter(
+            Real3::new(i as f64 * 13.0, 0.0, 0.0),
+            5.0,
+        )));
+    }
+    (sim, calls)
+}
+
+#[test]
+fn detect_static_fast_path_bails_for_static_population() {
+    for sweep in [false, true] {
+        // control: without §5.5 the kernel keeps firing every iteration
+        let (mut sim, calls) = static_row_sim(false, sweep);
+        sim.simulate(2);
+        let c2 = calls.load(std::sync::atomic::Ordering::Relaxed);
+        sim.simulate(3);
+        let c5 = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(c5 > c2, "sweep={sweep}: control must keep evaluating");
+
+        // §5.5 on: everything is conservatively "moved" on entry, so
+        // iteration 0 computes; after the flip the population is static
+        // and the fast path must bail without a single kernel call
+        let (mut sim, calls) = static_row_sim(true, sweep);
+        sim.simulate(2);
+        let c2 = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(c2 > 0, "sweep={sweep}: iteration 0 must compute");
+        let p2 = snapshot_bits(&sim);
+        sim.simulate(3);
+        let c5 = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(c2, c5, "sweep={sweep}: static population must bail");
+        assert_eq!(p2, snapshot_bits(&sim), "sweep={sweep}: positions frozen");
+    }
+}
+
+#[test]
+fn detect_static_one_moved_neighbor_wakes_the_scan() {
+    for sweep in [false, true] {
+        let (mut sim, calls) = static_row_sim(true, sweep);
+        sim.simulate(3); // settle into the static regime
+        let before = calls.load(std::sync::atomic::Ordering::Relaxed);
+        sim.step();
+        assert_eq!(
+            before,
+            calls.load(std::sync::atomic::Ordering::Relaxed),
+            "sweep={sweep}: asleep before the wake"
+        );
+        // out-of-band move of the rightmost agent marks it moved; the
+        // §5.5 probe must wake its neighborhood on the next iteration
+        let h = *sim.rm.handles().last().unwrap();
+        {
+            let a = sim.rm.get_mut(h);
+            let p = a.position();
+            a.set_position(p + Real3::new(-1.0, 0.0, 0.0));
+            a.base_mut().moved_last = true;
+        }
+        sim.step();
+        let after_wake = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            after_wake > before,
+            "sweep={sweep}: moved neighbor must wake the scan"
+        );
+        // nothing overlaps, so the population re-freezes afterwards
+        // (allow at most one extra settling round before freezing)
+        sim.step();
+        sim.step();
+        let refrozen = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            refrozen - after_wake <= after_wake - before,
+            "sweep={sweep}: must re-freeze after the wake settles"
+        );
+        sim.simulate(3);
+        assert_eq!(
+            refrozen,
+            calls.load(std::sync::atomic::Ordering::Relaxed),
+            "sweep={sweep}: fully static again"
+        );
+    }
+}
+
 // ------------------------------------------------------------- three-layer
 
 #[test]
