@@ -10,12 +10,24 @@
 //! their own scheduler step ("mechanical_forces", outside
 //! "agent_ops"), so the `forces+env+agent_ops` JSON row is the
 //! comparable acceptance metric across the two configurations.
+//! PR 4 adds the environment-update sweep: a drift model where a
+//! controlled fraction of agents moves per iteration (with the §5.5
+//! `moved_now` trail), run with `env_incremental_update` off and on.
+//! At low moved-fractions the incremental grid's O(moved) patch should
+//! beat the full O(n) rebuild; at 100% movers the hysteresis falls
+//! back to the full rebuild, so the row must not regress. Rows:
+//! `inc={off,on}:moved={frac}:environment_update`.
+//!
 //! Workloads honor `TA_BENCH_SCALE`; `TA_BENCH_JSON` archives the
-//! rows (BENCH_PR3.json in CI).
+//! rows (BENCH_PR3.json and BENCH_PR4.json in CI).
 
 use teraagent::benchkit::*;
+use teraagent::core::agent::SphericalAgent;
+use teraagent::core::behavior::FnBehavior;
 use teraagent::core::param::Param;
+use teraagent::core::random::Rng;
 use teraagent::models::*;
+use teraagent::Real3;
 
 fn breakdown(
     name: &str,
@@ -65,9 +77,81 @@ fn breakdown(
     }
 }
 
+/// PR 4: environment-update cost vs moved fraction, incremental grid
+/// off vs on. Corner pins keep the envelope fixed (no accidental
+/// escapes) and the drift is clamped inside it; the mechanical-forces
+/// op and diffusion are removed so the moved fraction is exactly the
+/// knob being swept.
+fn env_update_sweep(report: &mut JsonReport) {
+    let n = scaled(20_000, 400);
+    let iters = scaled(30, 8) as u64;
+    let side = 250.0;
+    let mut table = BenchTable::new(
+        &format!("Fig 5.6 (PR 4): environment update per iteration, {n} agents, {iters} iters"),
+        &["config", "env update / iter", "full rebuilds", "incremental", "re-binned"],
+    );
+    for moved_fraction in [0.0f64, 0.01, 0.1, 1.0] {
+        for incremental in [false, true] {
+            let mut param = Param::default();
+            param.box_length = Some(15.0);
+            // arm the CSR view (the realistic configuration: the pair
+            // sweep is the grid's main consumer) and the PR 4 path
+            param.mech_pair_sweep = true;
+            param.env_incremental_update = incremental;
+            let mut sim = teraagent::Simulation::new(param);
+            sim.remove_agent_op("mechanical_forces");
+            sim.remove_standalone_op("diffusion");
+            // stationary envelope pins
+            sim.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+            sim.add_agent(Box::new(SphericalAgent::new(Real3::new(side, side, side))));
+            let mut rng = Rng::new(7);
+            for _ in 0..n {
+                let mut a = SphericalAgent::new(rng.uniform3(0.0, side));
+                a.base.behaviors.push(FnBehavior::new("drift", move |a, ctx| {
+                    if ctx.rng.bernoulli(moved_fraction) {
+                        let p = a.position() + ctx.rng.uniform3(-2.0, 2.0);
+                        a.set_position(Real3::new(
+                            p.x().clamp(0.0, side),
+                            p.y().clamp(0.0, side),
+                            p.z().clamp(0.0, side),
+                        ));
+                        a.base_mut().moved_now = true;
+                    }
+                }));
+                sim.add_agent(Box::new(a));
+            }
+            sim.simulate(iters);
+            let env = sim.timers.total("environment_update");
+            let stats = sim
+                .env
+                .pair_sweep_grid()
+                .expect("uniform grid armed")
+                .update_stats();
+            let cfg = format!(
+                "inc={}:moved={moved_fraction}",
+                if incremental { "on" } else { "off" }
+            );
+            table.row(&[
+                cfg.clone(),
+                fmt_duration(env / iters.max(1) as u32),
+                stats.full_rebuilds.to_string(),
+                stats.incremental_updates.to_string(),
+                stats.rebinned_agents.to_string(),
+            ]);
+            report.row(
+                "env update sweep",
+                &format!("{cfg}:environment_update"),
+                env.as_secs_f64() / iters as f64,
+            );
+        }
+    }
+    table.print();
+}
+
 fn main() {
     print_env_banner("fig5_06_op_breakdown");
     let mut report = JsonReport::new("fig5_06_op_breakdown");
+    env_update_sweep(&mut report);
     let cells_per_dim = scaled(10, 4).min(10);
     breakdown(
         "cell growth & division",

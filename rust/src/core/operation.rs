@@ -132,9 +132,15 @@ impl AgentOperation for MechanicalForcesOp {
         // move the agent. Checked against the SoA moved bitset: a fully
         // static population bails without any neighbor scan, otherwise
         // the scan reads one bit per neighbor handle (no box chase).
+        // `moved_now` is deliberately left untouched on every non-
+        // displacing path: it is false at iteration start (the barrier
+        // flip cleared it), so the only state the former `= false`
+        // writes could change was a `true` set by a *behavior* earlier
+        // this iteration — erasing that trail broke the §5.5 contract
+        // ("every position change flags moved_now") that static
+        // detection and the PR 4 incremental grid both rest on.
         if self.detect_static && !agent.base().moved_last {
             if !rm.moved_any() {
-                agent.base_mut().moved_now = false;
                 return;
             }
             let mut any_moved = false;
@@ -142,7 +148,6 @@ impl AgentOperation for MechanicalForcesOp {
                 any_moved |= rm.moved_last_of(h);
             });
             if !any_moved {
-                agent.base_mut().moved_now = false;
                 return;
             }
         }
@@ -221,9 +226,9 @@ impl AgentOperation for MechanicalForcesOp {
             let bounded = ctx.param().apply_bounds(pos + displacement) - pos;
             agent.translate(bounded);
             agent.base_mut().moved_now = true;
-        } else {
-            agent.base_mut().moved_now = false;
         }
+        // sub-threshold: no translation, and moved_now keeps whatever a
+        // behavior staged this iteration (see the §5.5 note above)
     }
 }
 
@@ -733,16 +738,18 @@ impl MechanicalForcesOp {
                 if flags[flat] & F_GHOST != 0 {
                     continue; // ghosts receive no ops (scheduler rule)
                 }
+                if awake[flat] == 0 {
+                    // §5.5 skip — like the per-agent early-outs,
+                    // moved_now is left untouched so a behavior's trail
+                    // from earlier this iteration survives; checked
+                    // before the flat->handle search so asleep agents
+                    // cost nothing here
+                    continue;
+                }
                 let h = csr.flat_to_handle(flat as u32);
                 // SAFETY: disjoint flat ranges, injective flat->handle
                 // mapping -> single mutator per slot.
                 let agent = unsafe { rm.get_mut_unchecked(h) };
-                if awake[flat] == 0 {
-                    // §5.5 skip — the very write the per-agent
-                    // early-outs make
-                    agent.base_mut().moved_now = false;
-                    continue;
-                }
                 let (s, e) = (starts[flat] as usize, starts[flat + 1] as usize);
                 let mut total_force = Real3::ZERO;
                 if e > s {
@@ -763,9 +770,8 @@ impl MechanicalForcesOp {
                     let bounded = param.apply_bounds(pos + displacement) - pos;
                     agent.translate(bounded);
                     agent.base_mut().moved_now = true;
-                } else {
-                    agent.base_mut().moved_now = false;
                 }
+                // sub-threshold: moved_now untouched (per-agent twin)
             }
         });
         *sort_bufs = sort_mutexes

@@ -25,9 +25,11 @@ use std::thread::JoinHandle;
 /// guarantee its workers touch disjoint elements.
 pub(crate) struct SendPtr<T>(pub *mut T);
 
-// SAFETY: see the type docs — all users partition the index space.
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: see the type docs — all users partition the index space. The
+// `T: Send` bound keeps the token from silently laundering a pointer
+// to thread-bound data (e.g. `Rc` internals) across workers.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Type-erased parallel job. `run` is re-entrant: every worker calls it
 /// once per epoch and internally steals chunks until exhaustion.

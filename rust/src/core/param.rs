@@ -101,6 +101,28 @@ pub struct Param {
     /// Extends §5.5 work omission to box granularity when combined
     /// with `detect_static_agents`.
     pub mech_pair_sweep: bool,
+    /// Incremental environment maintenance (PR 4, thesis §5.5 "omit
+    /// unnecessary work"): the uniform grid persists its per-agent box
+    /// assignment across iterations and, instead of a full rebuild,
+    /// re-bins only the agents whose box changed — found by scanning
+    /// the §5.5 moved bitset in O(n/64). The bounds reduce and the
+    /// O(n) reinsert are skipped; when the pair-sweep CSR view is
+    /// armed it is patched by an O(n + #boxes) copy-forward pass
+    /// (cheaper in constants than the full counting sort, not
+    /// O(moved) — see the uniform_grid module docs). Any structural
+    /// change in the
+    /// ResourceManager (births, removals, reorders, rebalancing,
+    /// out-of-band edits — tracked by `structure_version`), a mover
+    /// escaping the cached grid envelope, or a moved fraction above
+    /// the hysteresis threshold falls back to the full rebuild
+    /// verbatim. Results are identical either way; this is purely a
+    /// work-omission knob for static-heavy populations. Note: under
+    /// `execution_context = copy` (every commit goes through
+    /// `replace_agent`, a structural bump) or with per-iteration
+    /// out-of-band writers (PJRT force offload), the knob is inert —
+    /// every update falls back to the full rebuild; check
+    /// `GridUpdateStats` when benchmarking.
+    pub env_incremental_update: bool,
     /// Row-wise vs column-wise op execution (§5.2.1).
     pub execution_order: ExecutionOrder,
     /// In-place vs copy execution context (§5.2.1).
@@ -151,6 +173,7 @@ impl Default for Param {
             use_pool_allocator: false,
             detect_static_agents: false,
             mech_pair_sweep: false,
+            env_incremental_update: false,
             execution_order: ExecutionOrder::ColumnWise,
             execution_context: ExecutionContextMode::InPlace,
             randomize_iteration_order: false,
@@ -249,6 +272,9 @@ impl Param {
             }
             "mech_pair_sweep" => {
                 self.mech_pair_sweep = value.parse().map_err(|_| err(k, value))?
+            }
+            "env_incremental_update" => {
+                self.env_incremental_update = value.parse().map_err(|_| err(k, value))?
             }
             "execution_order" => {
                 self.execution_order = match value {
@@ -408,8 +434,10 @@ mod tests {
         p.apply_kv("dist_aura_delta", "true").unwrap();
         p.apply_kv("dist_aura_deflate", "true").unwrap();
         p.apply_kv("mech_pair_sweep", "true").unwrap();
+        p.apply_kv("env_incremental_update", "true").unwrap();
         assert_eq!(p.num_threads, 8);
         assert!(p.mech_pair_sweep);
+        assert!(p.env_incremental_update);
         assert_eq!(p.execution_order, ExecutionOrder::RowWise);
         assert_eq!(p.execution_context, ExecutionContextMode::Copy);
         assert_eq!(p.diffusion_backend, DiffusionBackend::Pjrt);

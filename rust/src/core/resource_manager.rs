@@ -167,6 +167,15 @@ pub struct ResourceManager {
     moved_any: bool,
     /// Out-of-band `&mut` access happened since the last column sync.
     dirty: bool,
+    /// Monotone counter of *structural* changes — anything that can
+    /// change the flat-index space or move positions without leaving a
+    /// `moved_now` trail: additions, removals, reorders, rebalancing,
+    /// agent replacement, out-of-band column resyncs. The incremental
+    /// environment path (PR 4) caches this value at build time; any
+    /// mismatch forces a full rebuild. The per-iteration
+    /// `writeback_and_flip` deliberately does NOT bump it — in-loop
+    /// motion is what the §5.5 moved bitset already tracks.
+    structure_version: u64,
     /// Pair-sweep accumulator scratch (capacity persists across
     /// iterations; contents are transient per sweep).
     sweep_scratch: SweepScratch,
@@ -184,8 +193,18 @@ impl ResourceManager {
             handle_cache: Vec::new(),
             moved_any: true,
             dirty: false,
+            structure_version: 0,
             sweep_scratch: SweepScratch::default(),
         }
+    }
+
+    /// Current structural-change counter (see the field docs). Equal
+    /// values across two points in time guarantee: same agent count,
+    /// same (domain, idx) layout, and every position change in between
+    /// is flagged in the `moved` bitsets.
+    #[inline]
+    pub fn structure_version(&self) -> u64 {
+        self.structure_version
     }
 
     /// Detach the pair-sweep scratch for the duration of a sweep (the
@@ -245,6 +264,7 @@ impl ResourceManager {
         let h = AgentHandle::new(domain, idx);
         self.uid_map.insert(uid, h);
         self.handle_cache.push(h);
+        self.structure_version += 1;
         h
     }
 
@@ -257,9 +277,20 @@ impl ResourceManager {
     /// Exclusive access through `&mut self` (setup / commit phases).
     /// Marks the SoA mirror dirty — it is resynced at the next
     /// iteration start (or by an explicit [`ResourceManager::sync_columns`]).
+    /// Also counts as a structural change: the caller can move the
+    /// agent with no `moved_now` trail, and the dirty flag alone is not
+    /// enough evidence for the incremental environment — the barrier's
+    /// deferred updates run through here *before* `writeback_and_flip`
+    /// clears `dirty`, so the version bump is what survives to the next
+    /// `Environment::update`. Per-iteration out-of-band writers (e.g.
+    /// the PJRT force scatter) therefore pin the grid to full rebuilds
+    /// — which the dirty-flag resync (`sync_columns`, itself a bump)
+    /// already did for them; trail-preserving in-loop mutation is the
+    /// only path the incremental grid can extend.
     pub fn get_mut(&mut self, h: AgentHandle) -> &mut dyn Agent {
         self.dirty = true;
         self.moved_any = true; // conservative: the caller may set flags
+        self.structure_version += 1;
         unsafe { self.domains[h.numa as usize].agents[h.idx as usize].get_mut() }
     }
 
@@ -385,7 +416,10 @@ impl ResourceManager {
 
     /// Serial iteration with exclusive access. Keeps the SoA mirror
     /// coherent by refreshing each agent's columns after the closure.
+    /// Counts as a structural change (the closure can move agents with
+    /// no `moved_now` trail).
     pub fn for_each_agent_mut(&mut self, mut f: impl FnMut(AgentHandle, &mut dyn Agent)) {
+        self.structure_version += 1;
         for (d, domain) in self.domains.iter_mut().enumerate() {
             let Domain { agents, cols } = domain;
             for (i, slot) in agents.iter_mut().enumerate() {
@@ -401,6 +435,9 @@ impl ResourceManager {
     /// "grow the data structures ... and add the agent pointers in
     /// parallel"). `additions` must already carry final UIDs.
     pub fn commit_additions(&mut self, additions: Vec<Box<dyn Agent>>) -> Vec<AgentHandle> {
+        if !additions.is_empty() {
+            self.structure_version += 1;
+        }
         let mut handles = Vec::with_capacity(additions.len());
         for agent in additions {
             debug_assert_ne!(agent.uid(), 0, "uid must be assigned before commit");
@@ -503,6 +540,7 @@ impl ResourceManager {
             }
         }
         if any_removed {
+            self.structure_version += 1;
             self.rebuild_handle_cache();
         }
         removed_agents
@@ -514,6 +552,7 @@ impl ResourceManager {
     /// and applies the same permutation to the SoA columns; the handle
     /// *set* is unchanged, so the handle cache stays valid.
     pub fn reorder_domain(&mut self, domain: usize, perm: &[u32]) {
+        self.structure_version += 1;
         let agents = &mut self.domains[domain].agents;
         assert_eq!(perm.len(), agents.len());
         let mut old: Vec<Option<AgentSlot>> = agents.drain(..).map(Some).collect();
@@ -536,6 +575,7 @@ impl ResourceManager {
         if ndom <= 1 {
             return;
         }
+        self.structure_version += 1;
         let target = total / ndom;
         let rem = total % ndom;
         let want = |d: usize| -> usize { target + usize::from(d < rem) };
@@ -576,6 +616,7 @@ impl ResourceManager {
     /// cache) from the boxed agents. For tests and recovery paths that
     /// bypass the public mutation API.
     pub fn rebuild_caches(&mut self) {
+        self.structure_version += 1;
         self.rebuild_uid_map();
         let mut any = false;
         for domain in &mut self.domains {
@@ -599,6 +640,9 @@ impl ResourceManager {
             self.get(h).uid(),
             "replace_agent must preserve the uid"
         );
+        // the clone may carry an arbitrary new position without a
+        // moved_now trail — conservative structural bump (see field docs)
+        self.structure_version += 1;
         let domain = &mut self.domains[h.numa as usize];
         domain.cols.write_from(h.idx as usize, &*agent);
         self.moved_any |= agent.base().moved_last;
@@ -609,6 +653,7 @@ impl ResourceManager {
     /// Remove and return every agent (used by the distributed engine
     /// when migrating agents between ranks).
     pub fn drain_all(&mut self) -> Vec<Box<dyn Agent>> {
+        self.structure_version += 1;
         let mut out = Vec::with_capacity(self.num_agents());
         for domain in &mut self.domains {
             for slot in domain.agents.drain(..) {
@@ -633,8 +678,12 @@ impl ResourceManager {
     }
 
     /// Full parallel resync of every column from the boxed agents.
-    /// Does not modify any agent state.
+    /// Does not modify any agent state. Counts as a structural change:
+    /// the out-of-band edits it mirrors may have moved agents without
+    /// setting `moved_now`, so persistent environment state keyed on
+    /// [`ResourceManager::structure_version`] must be discarded.
     pub fn sync_columns(&mut self, pool: &ThreadPool) {
+        self.structure_version += 1;
         for domain in &mut self.domains {
             let n = domain.agents.len();
             debug_assert_eq!(domain.cols.len(), n);

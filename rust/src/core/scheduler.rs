@@ -1,8 +1,12 @@
 //! The simulation scheduler — Algorithm 8 of the paper.
 //!
 //! Each iteration:
-//! 0. resync the SoA mirror if out-of-band `&mut` access happened,
-//! 1. rebuild the environment (pre-standalone),
+//! 0. resync the SoA mirror if out-of-band `&mut` access happened
+//!    (which also bumps the ResourceManager's structure version, so
+//!    persistent environment state is discarded),
+//! 1. update the environment (pre-standalone) — a full rebuild, or,
+//!    under `Param::env_incremental_update`, an O(moved) patch of the
+//!    persistent grid keyed on the structure version (PR 4),
 //! 2. run user pre-standalone operations,
 //! 3. run all agent operations for all agents in parallel
 //!    (column-wise or row-wise, in-place or copy context),

@@ -49,6 +49,11 @@ impl Simulation {
             // the per-agent force path)
             env.enable_pair_sweep(true);
         }
+        if param.env_incremental_update {
+            // arm O(moved) index maintenance (a no-op on environments
+            // without the capability — they keep rebuilding fully)
+            env.enable_incremental(true);
+        }
         let mut mech = MechanicalForcesOp::new(param.interaction_radius);
         mech.detect_static = param.detect_static_agents;
         mech.force = Box::new(crate::physics::force::DefaultForce::new(
@@ -329,6 +334,56 @@ mod tests {
         let a = run(1);
         let b = run(4);
         assert_eq!(a, b, "trajectories must not depend on thread count");
+    }
+
+    /// PR 4 regression: a deferred barrier update moves its target
+    /// through `get_mut` with no `moved_now` trail, and the same
+    /// iteration's `writeback_and_flip` clears the dirty flag — only
+    /// the `get_mut` structure-version bump survives to tell the
+    /// incremental grid its persistent state is stale. Without it, the
+    /// target stays linked in its old box and queries near its new
+    /// position miss it.
+    #[test]
+    fn deferred_updates_invalidate_incremental_env() {
+        let mut p = Param::default();
+        p.env_incremental_update = true;
+        p.box_length = Some(10.0);
+        let mut sim = Simulation::new(p);
+        sim.remove_agent_op("mechanical_forces");
+        // stationary pins keep the grid geometry fixed
+        sim.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+        sim.add_agent(Box::new(SphericalAgent::new(Real3::new(80.0, 80.0, 80.0))));
+        let target = sim.add_agent(Box::new(SphericalAgent::new(Real3::new(10.0, 10.0, 10.0))));
+        let target_uid = sim.rm.get(target).uid();
+        let mut actor = SphericalAgent::new(Real3::new(40.0, 40.0, 40.0));
+        actor
+            .base
+            .behaviors
+            .push(FnBehavior::new("teleport_neighbor", move |_a, ctx| {
+                if ctx.iteration() == 2 {
+                    ctx.defer_update(target_uid, |t| {
+                        // deliberately NO moved_now trail — the barrier
+                        // path itself must invalidate the grid
+                        t.set_position(Real3::new(60.0, 60.0, 60.0));
+                    });
+                }
+            }));
+        sim.add_agent(Box::new(actor));
+        // iterations 0..3; the teleport commits at iteration 2's barrier,
+        // iterations 1 and 2 give the incremental path time to engage
+        sim.simulate(4);
+        let mut found = Vec::new();
+        sim.env
+            .for_each_neighbor_handles(Real3::new(60.0, 60.0, 60.0), 5.0, &sim.rm, &mut |h, _| {
+                found.push(h)
+            });
+        assert_eq!(found, vec![target], "teleported agent must be re-binned");
+        let mut stale = Vec::new();
+        sim.env
+            .for_each_neighbor_handles(Real3::new(10.0, 10.0, 10.0), 5.0, &sim.rm, &mut |h, _| {
+                stale.push(h)
+            });
+        assert!(stale.is_empty(), "old box must not still list the target");
     }
 
     #[test]

@@ -123,6 +123,14 @@ impl BitVec {
         out
     }
 
+    /// The backing words. Bits at index `>= len` are zero, so word-wise
+    /// consumers (the incremental grid's mover scan) can stream the
+    /// slice without a tail mask.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Raw word pointer for the parallel writeback. Callers must write
     /// each 64-bit word from exactly one thread (see
     /// [`crate::core::resource_manager::WRITEBACK_GRAIN`]).

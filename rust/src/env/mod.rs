@@ -77,6 +77,14 @@ pub trait Environment: Send + Sync {
     fn pair_sweep_grid(&self) -> Option<&UniformGridEnvironment> {
         None
     }
+
+    /// Incremental-maintenance capability (PR 4): environments that can
+    /// persist their index across iterations and update it in O(moved)
+    /// from the ResourceManager's moved bitset + structure version opt
+    /// in by overriding this hook (`Param::env_incremental_update`,
+    /// called once at simulation construction). The default (kd-tree,
+    /// octree) is a no-op — those rebuild from scratch every update.
+    fn enable_incremental(&mut self, _on: bool) {}
 }
 
 /// Instantiate the environment selected in `param`.

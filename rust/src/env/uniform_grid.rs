@@ -30,6 +30,31 @@
 //! distances are independent of in-iteration movement — deterministic
 //! under any processing order.
 //!
+//! ## Incremental maintenance (PR 4)
+//!
+//! With `Param::env_incremental_update` armed, the grid persists its
+//! per-agent box assignment (`box_of`) across iterations: the §5.5
+//! `moved_last` bitset is scanned word-wise (O(n/64)) for candidates,
+//! and agents whose box actually changed are unlinked from their old
+//! list (serial predecessor walk — mover boxes hold few agents) and
+//! pushed into the new one — O(moved) list maintenance, with the
+//! bounds reduce and the O(n) lock-free reinsert skipped entirely.
+//! Honest cost accounting: when a CSR consumer is armed, the patch
+//! adds an O(n + #boxes) pass (fresh prefix sums plus a copy-forward
+//! scatter that `memcpy`s clean box slices and re-walks + sorts only
+//! dirty ones) — cheaper in constants than the full counting sort's
+//! list walk + per-box sort, but not O(moved); with no CSR consumer
+//! the update truly is scan + re-bin. The full rebuild runs verbatim
+//! whenever the patch could be wrong or unprofitable:
+//! the ResourceManager's `structure_version` changed (births,
+//! removals, reorders, rebalancing, out-of-band edits), a mover left
+//! the cached grid envelope (new bounds needed), or the moved fraction
+//! exceeds the `INC_MOVED_DIVISOR` hysteresis threshold. Both paths
+//! produce the identical canonical structure — same box occupant sets
+//! and the same ascending CSR slices — so every consumer (per-agent
+//! queries, the PR 3 pair sweep) is bitwise-independent of which path
+//! ran (see DESIGN.md §7).
+//!
 //! ## CSR cell-list view (PR 3)
 //!
 //! On top of the linked lists the grid can maintain a second,
@@ -55,6 +80,23 @@ const EMPTY: u32 = u32::MAX;
 /// Upper bound on the number of grid boxes; beyond this the box length
 /// is increased (keeps sparse extreme-scale spaces memory-bounded).
 const MAX_BOXES: usize = 16_000_000;
+/// Incremental-update hysteresis: fall back to the parallel full
+/// rebuild when more than `1/INC_MOVED_DIVISOR` of the population
+/// moved last iteration — beyond that the serial O(moved) patch stops
+/// paying for itself against the O(n) parallel insert.
+const INC_MOVED_DIVISOR: usize = 8;
+
+/// Which `update` path ran, cumulatively — the observable the PR 4
+/// tests and benches key on (and a cheap production diagnostic).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GridUpdateStats {
+    /// Full O(n) rebuilds (bounds reduce + parallel reinsert + CSR).
+    pub full_rebuilds: u64,
+    /// Incremental updates (including no-mover no-ops).
+    pub incremental_updates: u64,
+    /// Agents re-binned across all incremental updates.
+    pub rebinned_agents: u64,
+}
 
 /// The 13 "forward" neighbor offsets (`[dx, dy, dz]`) of the half
 /// neighborhood: the offsets whose `(dz, dy, dx)` is lexicographically
@@ -131,6 +173,30 @@ pub struct UniformGridEnvironment {
     /// Morton visiting order of the box indices, cached per `dims`.
     morton_boxes: Vec<u32>,
     morton_dims: [usize; 3],
+    /// Incremental maintenance requested (PR 4, module docs).
+    incremental_enabled: bool,
+    /// Persistent box assignment per flat index — recorded by the full
+    /// build's insert pass and patched by every re-bin. Meaningful only
+    /// while `inc_valid`.
+    box_of: Vec<u32>,
+    /// `ResourceManager::structure_version` at the last build; any
+    /// mismatch forces the full rebuild.
+    built_structure_version: u64,
+    /// The persistent state (`box_of`, lists, CSR) extends the current
+    /// population — set by a completed full build with recording on,
+    /// cleared by `clear`/disable.
+    inc_valid: bool,
+    /// Cumulative path counters (see [`GridUpdateStats`]).
+    stats: GridUpdateStats,
+    /// Patch scratch: `(flat, old_box, new_box)` of the current update.
+    rebin_scratch: Vec<(u32, u32, u32)>,
+    /// Patch scratch: boxes whose occupant set changed (old + new boxes
+    /// of every re-binned agent), sorted + deduped before the CSR pass.
+    dirty_boxes: Vec<u32>,
+    /// CSR double buffers: the patch writes the next epoch here and
+    /// swaps, so clean box slices are copied (not re-walked).
+    box_starts_back: Vec<u32>,
+    cell_agents_back: Vec<u32>,
 }
 
 impl UniformGridEnvironment {
@@ -153,13 +219,43 @@ impl UniformGridEnvironment {
             csr_stamp: 0,
             morton_boxes: Vec::new(),
             morton_dims: [0; 3],
+            incremental_enabled: false,
+            box_of: Vec::new(),
+            built_structure_version: 0,
+            inc_valid: false,
+            stats: GridUpdateStats::default(),
+            rebin_scratch: Vec::new(),
+            dirty_boxes: Vec::new(),
+            box_starts_back: Vec::new(),
+            cell_agents_back: Vec::new(),
         }
+    }
+
+    /// Arm (or drop) the O(moved) incremental maintenance path. While
+    /// disabled, the insert path skips the `box_of` bookkeeping and
+    /// every `update` rebuilds fully.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental_enabled = on;
+        if !on {
+            self.inc_valid = false;
+        }
+    }
+
+    /// Cumulative update-path counters (tests, benches, diagnostics).
+    pub fn update_stats(&self) -> GridUpdateStats {
+        self.stats
     }
 
     /// Register (or drop) the CSR consumer. While disabled, the insert
     /// path skips the per-box `count` bookkeeping and `update` builds
-    /// no CSR.
+    /// no CSR. Any transition invalidates the persistent incremental
+    /// state: count maintenance tracked the *old* setting, so the
+    /// patch path cannot extend it — the next `update` rebuilds fully
+    /// (and re-seeds the counters and `csr_stamp`).
     pub fn enable_csr(&mut self, on: bool) {
+        if self.csr_enabled != on {
+            self.inc_valid = false;
+        }
         self.csr_enabled = on;
     }
 
@@ -278,9 +374,86 @@ impl UniformGridEnvironment {
 
 impl Environment for UniformGridEnvironment {
     fn update(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
+        if self.incremental_enabled && self.try_incremental_update(rm, pool) {
+            return;
+        }
+        self.full_rebuild(rm, pool);
+    }
+
+    fn for_each_neighbor(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
+    ) {
+        self.visit_candidates(query, radius, rm, &mut |h, d2| f(h, rm.get(h), d2));
+    }
+
+    fn for_each_neighbor_handles(
+        &self,
+        query: Real3,
+        radius: Real,
+        rm: &ResourceManager,
+        f: &mut dyn FnMut(AgentHandle, Real),
+    ) {
+        self.visit_candidates(query, radius, rm, f);
+    }
+
+    fn clear(&mut self) {
+        self.boxes.clear();
+        self.successors.clear();
+        self.domain_offsets.clear();
+        self.num_flat = 0;
+        self.built = false;
+        self.box_starts.clear();
+        self.cell_agents.clear();
+        self.morton_boxes.clear();
+        self.morton_dims = [0; 3];
+        self.csr_stamp = 0;
+        self.stamp += 1;
+        self.box_of.clear();
+        self.inc_valid = false;
+        self.box_starts_back.clear();
+        self.cell_agents_back.clear();
+    }
+
+    fn bounds(&self) -> (Real3, Real3) {
+        self.bounds
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform_grid"
+    }
+
+    fn enable_pair_sweep(&mut self, on: bool) {
+        self.enable_csr(on);
+    }
+
+    fn pair_sweep_grid(&self) -> Option<&UniformGridEnvironment> {
+        if self.csr_enabled {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
+    fn enable_incremental(&mut self, on: bool) {
+        self.set_incremental(on);
+    }
+}
+
+impl UniformGridEnvironment {
+    /// The O(n) build: bounds reduce, box sizing, lock-free parallel
+    /// reinsert, CSR counting sort — the pre-PR 4 `update` verbatim,
+    /// plus `box_of` recording when incremental maintenance is armed.
+    fn full_rebuild(&mut self, rm: &ResourceManager, pool: &ThreadPool) {
         let n = rm.num_agents();
         self.built = true;
         self.num_flat = n;
+        self.stats.full_rebuilds += 1;
+        // persistent state is stale until this build completes
+        self.inc_valid = false;
 
         // flat index mapping (dense, per-domain offsets) — kept valid
         // even for an empty population so flat_to_handle never sees an
@@ -337,6 +510,15 @@ impl Environment for UniformGridEnvironment {
 
         // --- parallel insert (paper's parallelized build): stream each
         // domain's position column, no box chasing ---
+        // `box_of` is detached for the duration of the insert so the
+        // raw-pointer writes below never alias the shared `&*self`
+        // borrow the workers hold.
+        let record_box = self.incremental_enabled;
+        let mut box_of = std::mem::take(&mut self.box_of);
+        if record_box {
+            box_of.resize(n, 0);
+        }
+        let box_of_ptr = SendPtr(box_of.as_mut_ptr());
         let this = &*self;
         let maintain_counts = this.csr_enabled;
         let published = stamp << 1;
@@ -380,6 +562,11 @@ impl Environment for UniformGridEnvironment {
                     }
                 }
                 let flat = base_flat + i as u32;
+                if record_box {
+                    // SAFETY: each flat index is written by exactly one
+                    // iteration of the disjoint parallel range.
+                    unsafe { box_of_ptr.0.add(flat as usize).write(bidx as u32) };
+                }
                 // push-front: successor[flat] = old head
                 let mut head = gbox.head.load(Ordering::Acquire);
                 loop {
@@ -402,63 +589,16 @@ impl Environment for UniformGridEnvironment {
             });
         }
 
+        self.box_of = box_of;
+
         if self.csr_enabled {
             self.build_csr(pool);
         }
-    }
 
-    fn for_each_neighbor(
-        &self,
-        query: Real3,
-        radius: Real,
-        rm: &ResourceManager,
-        f: &mut dyn FnMut(AgentHandle, &dyn Agent, Real),
-    ) {
-        self.visit_candidates(query, radius, rm, &mut |h, d2| f(h, rm.get(h), d2));
-    }
-
-    fn for_each_neighbor_handles(
-        &self,
-        query: Real3,
-        radius: Real,
-        rm: &ResourceManager,
-        f: &mut dyn FnMut(AgentHandle, Real),
-    ) {
-        self.visit_candidates(query, radius, rm, f);
-    }
-
-    fn clear(&mut self) {
-        self.boxes.clear();
-        self.successors.clear();
-        self.domain_offsets.clear();
-        self.num_flat = 0;
-        self.built = false;
-        self.box_starts.clear();
-        self.cell_agents.clear();
-        self.morton_boxes.clear();
-        self.morton_dims = [0; 3];
-        self.csr_stamp = 0;
-        self.stamp += 1;
-    }
-
-    fn bounds(&self) -> (Real3, Real3) {
-        self.bounds
-    }
-
-    fn name(&self) -> &'static str {
-        "uniform_grid"
-    }
-
-    fn enable_pair_sweep(&mut self, on: bool) {
-        self.enable_csr(on);
-    }
-
-    fn pair_sweep_grid(&self) -> Option<&UniformGridEnvironment> {
-        if self.csr_enabled {
-            Some(self)
-        } else {
-            None
-        }
+        // the build extends to this population state; incremental
+        // updates may patch it until the next structural change
+        self.built_structure_version = rm.structure_version();
+        self.inc_valid = self.incremental_enabled;
     }
 }
 
@@ -552,6 +692,63 @@ impl GridCsr<'_> {
     }
 }
 
+/// The shared scatter kernel of `build_csr` and `patch_csr`: walk one
+/// box's linked list into its CSR slice and sort ascending — the
+/// single definition of the canonical slice form, so a patched box can
+/// never diverge from a fully-rebuilt one. `slice` must be the box's
+/// exclusive destination range.
+fn walk_box_into_slice(gbox: &GridBox, successors: &[AtomicU32], slice: &mut [u32]) {
+    let mut cur = gbox.head.load(Ordering::Acquire);
+    for slot in slice.iter_mut() {
+        debug_assert_ne!(cur, EMPTY, "count shorter than list");
+        *slot = cur;
+        cur = successors[cur as usize].load(Ordering::Acquire);
+    }
+    debug_assert_eq!(cur, EMPTY, "count longer than list");
+    slice.sort_unstable();
+}
+
+/// The shared front half of `build_csr` and `patch_csr`: per-box
+/// occupancy (stale stamp = empty box) into `dst[1..=nboxes]`, then
+/// the serial prefix sum (u32 adds over #boxes; cheap next to the
+/// O(#agents) passes around it) — the single definition of the CSR
+/// count semantics, so the patched view can never desynchronize from
+/// the full build. Every counter slot is written, so the buffer is
+/// only (re)allocated when its length is wrong — no steady-state
+/// zero-fill.
+fn csr_prefix_sums(
+    boxes: &[GridBox],
+    published: u64,
+    nboxes: usize,
+    dst: &mut Vec<u32>,
+    pool: &ThreadPool,
+) {
+    if dst.len() != nboxes + 1 {
+        dst.clear();
+        dst.resize(nboxes + 1, 0);
+    }
+    dst[0] = 0;
+    {
+        let starts = SendPtr(dst.as_mut_ptr());
+        pool.parallel_for_chunks(0..nboxes, 4096, |chunk, _wid| {
+            let p = &starts;
+            for b in chunk {
+                let gbox = &boxes[b];
+                let c = if gbox.stamp.load(Ordering::Acquire) == published {
+                    gbox.count.load(Ordering::Acquire)
+                } else {
+                    0
+                };
+                // SAFETY: disjoint chunks write disjoint counters.
+                unsafe { p.0.add(b + 1).write(c) };
+            }
+        });
+    }
+    for b in 0..nboxes {
+        dst[b + 1] += dst[b];
+    }
+}
+
 impl UniformGridEnvironment {
     /// Counting-sort pass over the per-box insert counters: produce the
     /// contiguous `box_starts` / `cell_agents` view of the build the
@@ -560,34 +757,10 @@ impl UniformGridEnvironment {
     fn build_csr(&mut self, pool: &ThreadPool) {
         let nboxes = self.dims[0] * self.dims[1] * self.dims[2];
         let n = self.num_flat;
-        self.box_starts.clear();
-        self.box_starts.resize(nboxes + 1, 0);
 
-        // pass 1: read the per-box counters (stale stamp = empty box)
-        {
-            let starts = SendPtr(self.box_starts.as_mut_ptr());
-            let boxes = &self.boxes;
-            let published = self.published_stamp();
-            pool.parallel_for_chunks(0..nboxes, 4096, |chunk, _wid| {
-                let p = &starts;
-                for b in chunk {
-                    let gbox = &boxes[b];
-                    let c = if gbox.stamp.load(Ordering::Acquire) == published {
-                        gbox.count.load(Ordering::Acquire)
-                    } else {
-                        0
-                    };
-                    // SAFETY: disjoint chunks write disjoint counters.
-                    unsafe { p.0.add(b + 1).write(c) };
-                }
-            });
-        }
-
-        // pass 2: serial prefix sum (u32 adds over #boxes; cheap next
-        // to the O(#agents) passes around it)
-        for b in 0..nboxes {
-            self.box_starts[b + 1] += self.box_starts[b];
-        }
+        // passes 1+2: per-box counts + prefix sums (shared definition)
+        let published = self.published_stamp();
+        csr_prefix_sums(&self.boxes, published, nboxes, &mut self.box_starts, pool);
         debug_assert_eq!(self.box_starts[nboxes] as usize, n);
 
         // pass 3: scatter — walk each box's linked list into its slice,
@@ -606,17 +779,10 @@ impl UniformGridEnvironment {
                     if s == e {
                         continue;
                     }
-                    let mut cur = boxes[b].head.load(Ordering::Acquire);
                     // SAFETY: [s, e) slices are disjoint across boxes.
                     let slice =
                         unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
-                    for slot in slice.iter_mut() {
-                        debug_assert_ne!(cur, EMPTY, "count shorter than list");
-                        *slot = cur;
-                        cur = successors[cur as usize].load(Ordering::Acquire);
-                    }
-                    debug_assert_eq!(cur, EMPTY, "count longer than list");
-                    slice.sort_unstable();
+                    walk_box_into_slice(&boxes[b], successors, slice);
                 }
             });
         }
@@ -627,6 +793,254 @@ impl UniformGridEnvironment {
             self.morton_dims = self.dims;
         }
         self.csr_stamp = self.stamp;
+    }
+
+    /// The PR 4 incremental path (module docs, "Incremental
+    /// maintenance"). Returns `true` when the persistent structure was
+    /// brought up to date in O(moved); `false` means the caller must
+    /// run the full rebuild (structure changed, a mover escaped the
+    /// envelope, the moved fraction tripped the hysteresis, or no
+    /// usable persistent state exists).
+    fn try_incremental_update(&mut self, rm: &ResourceManager, pool: &ThreadPool) -> bool {
+        if !self.built || !self.inc_valid {
+            return false;
+        }
+        // the one correctness anchor: an unchanged structure version
+        // guarantees the flat-index space is unchanged and every
+        // position change since the last build left a moved_last trail
+        if rm.structure_version() != self.built_structure_version {
+            return false;
+        }
+        let n = rm.num_agents();
+        if n == 0 || n != self.num_flat {
+            return false;
+        }
+        // a CSR consumer armed after the last build: the insert skipped
+        // the count bookkeeping, so the patch has nothing to extend
+        if self.csr_enabled && self.csr_stamp != self.stamp {
+            return false;
+        }
+
+        if !rm.moved_any() {
+            // globally static population: the build is already exact
+            // (O(1) — this is the §5.5 short-circuit for the grid)
+            self.stats.incremental_updates += 1;
+            return true;
+        }
+        // mover-fraction hysteresis: beyond ~1/8 movers the parallel
+        // full rebuild wins over the serial patch (O(n/64) popcount)
+        let moved: usize = (0..rm.num_domains())
+            .map(|d| rm.columns(d).moved_last.count_ones())
+            .sum();
+        if moved * INC_MOVED_DIVISOR > n {
+            return false;
+        }
+
+        // --- mover scan: word-wise over the moved_last bitset; keep
+        // only agents whose box changed; any envelope escape forces the
+        // full rebuild (it needs a fresh bounds reduce) ---
+        self.rebin_scratch.clear();
+        // `bounds()` must keep containing every agent: a mover can land
+        // in the slack between the recorded max and the envelope edge
+        // (up to one box length per axis), so grow the published bounds
+        // over the movers. Bounds never shrink until the next full
+        // rebuild — a containing over-approximation, not a tight box.
+        let (mut ext_min, mut ext_max) = self.bounds;
+        for d in 0..rm.num_domains() {
+            let positions = rm.positions(d);
+            let dlen = positions.len();
+            let base = self.domain_offsets[d];
+            for (w, &word) in rm.columns(d).moved_last.words().iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let i = (w << 6) + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    if i >= dlen {
+                        break; // defensive: bits >= len are zero by contract
+                    }
+                    let p = positions[i];
+                    // unclamped box coords — the same arithmetic as
+                    // box_coord, but out-of-range means "escaped"
+                    let mut c = [0usize; 3];
+                    let mut escaped = false;
+                    for (axis, cc) in c.iter_mut().enumerate() {
+                        let rel = ((p[axis] - self.grid_min[axis]) / self.box_length).floor();
+                        if rel < 0.0 || rel >= self.dims[axis] as Real {
+                            escaped = true;
+                            break;
+                        }
+                        *cc = rel as usize;
+                    }
+                    if escaped {
+                        return false;
+                    }
+                    ext_min = ext_min.min(&p);
+                    ext_max = ext_max.max(&p);
+                    let flat = base + i as u32;
+                    let new_box = self.box_index(c) as u32;
+                    let old_box = self.box_of[flat as usize];
+                    if new_box != old_box {
+                        self.rebin_scratch.push((flat, old_box, new_box));
+                    }
+                }
+            }
+        }
+
+        if !self.rebin_scratch.is_empty() {
+            if !self.rebin_movers() {
+                // walk budget exhausted (clustered boxes): the partial
+                // list surgery is fully reset by the rebuild — the
+                // stamp bump invalidates every box, and box_of / CSR
+                // are rewritten from scratch
+                return false;
+            }
+            if self.csr_enabled {
+                self.patch_csr(pool);
+            }
+        }
+        self.bounds = (ext_min, ext_max);
+        self.stats.incremental_updates += 1;
+        true
+    }
+
+    /// Apply the collected `(flat, old_box, new_box)` moves to the
+    /// linked lists and per-box counters, and record the dirty boxes.
+    /// Serial — `&mut self` means no concurrent readers, and the
+    /// hysteresis bounds the number of movers. Returns `false` when the
+    /// predecessor-walk budget is exhausted (clustered populations or
+    /// user-pinned large boxes can put O(n) agents in one box, making
+    /// the serial unlink O(moved × occupancy) — worse than the parallel
+    /// rebuild); the caller must then run the full rebuild, which
+    /// resets every partially-patched structure.
+    fn rebin_movers(&mut self) -> bool {
+        let published = self.published_stamp();
+        let maintain_counts = self.csr_enabled;
+        let rebins = std::mem::take(&mut self.rebin_scratch);
+        self.dirty_boxes.clear();
+        // total predecessor steps comparable to a slice of the O(n)
+        // rebuild; beyond it the rebuild wins
+        let mut walk_budget = (self.num_flat / 4).max(1024) as i64;
+        let mut aborted = false;
+        'movers: for &(flat, old_box, new_box) in &rebins {
+            let fl = flat as usize;
+            // unlink from the old list: predecessor walk
+            let obox = &self.boxes[old_box as usize];
+            debug_assert_eq!(
+                obox.stamp.load(Ordering::Relaxed),
+                published,
+                "recorded box of flat {flat} is stale"
+            );
+            let succ_of_flat = self.successors[fl].load(Ordering::Relaxed);
+            let mut cur = obox.head.load(Ordering::Relaxed);
+            if cur == flat {
+                obox.head.store(succ_of_flat, Ordering::Relaxed);
+            } else {
+                loop {
+                    debug_assert_ne!(cur, EMPTY, "flat {flat} not in its recorded box");
+                    walk_budget -= 1;
+                    if walk_budget < 0 {
+                        // abort mid-surgery: safe because the caller's
+                        // full rebuild bumps the stamp, invalidating
+                        // every box and rewriting box_of / CSR
+                        aborted = true;
+                        break 'movers;
+                    }
+                    let nxt = self.successors[cur as usize].load(Ordering::Relaxed);
+                    if nxt == flat {
+                        self.successors[cur as usize].store(succ_of_flat, Ordering::Relaxed);
+                        break;
+                    }
+                    cur = nxt;
+                }
+            }
+            // link into the new box, lazily opening it for this epoch
+            // (a box untouched since the last full build has a stale
+            // stamp and must present as empty first)
+            let nbox = &self.boxes[new_box as usize];
+            if nbox.stamp.load(Ordering::Relaxed) != published {
+                nbox.head.store(EMPTY, Ordering::Relaxed);
+                nbox.count.store(0, Ordering::Relaxed);
+                nbox.stamp.store(published, Ordering::Relaxed);
+            }
+            let head = nbox.head.load(Ordering::Relaxed);
+            self.successors[fl].store(head, Ordering::Relaxed);
+            nbox.head.store(flat, Ordering::Relaxed);
+            if maintain_counts {
+                obox.count.fetch_sub(1, Ordering::Relaxed);
+                nbox.count.fetch_add(1, Ordering::Relaxed);
+            }
+            self.box_of[fl] = new_box;
+            self.dirty_boxes.push(old_box);
+            self.dirty_boxes.push(new_box);
+        }
+        if !aborted {
+            self.stats.rebinned_agents += rebins.len() as u64;
+        }
+        self.rebin_scratch = rebins; // keep the capacity
+        !aborted
+    }
+
+    /// Selective CSR rebuild after a re-bin: fresh prefix sums from the
+    /// patched per-box counters, then a scatter that *copies* the slice
+    /// of every clean box from the previous CSR (already sorted,
+    /// occupants unchanged — only its offset moved) and re-walks +
+    /// sorts only the dirty boxes. Publishes by swapping the double
+    /// buffers; the result is bit-identical to `build_csr` on the same
+    /// occupancy.
+    fn patch_csr(&mut self, pool: &ThreadPool) {
+        let nboxes = self.dims[0] * self.dims[1] * self.dims[2];
+        let n = self.num_flat;
+        debug_assert_eq!(self.csr_stamp, self.stamp, "patching a stale CSR");
+        self.dirty_boxes.sort_unstable();
+        self.dirty_boxes.dedup();
+
+        // passes 1+2 into the back buffer — the same shared definition
+        // the full build uses, so the patched CSR cannot drift from it
+        let published = self.published_stamp();
+        csr_prefix_sums(&self.boxes, published, nboxes, &mut self.box_starts_back, pool);
+        debug_assert_eq!(self.box_starts_back[nboxes] as usize, n);
+
+        // pass 3: copy-forward scatter. The box slices cover [0, n)
+        // exactly (the prefix sums total n), so every element is
+        // overwritten — skip the O(n) zero-fill when the length is
+        // already right (the steady state: n is pinned by the version
+        // anchor).
+        if self.cell_agents_back.len() != n {
+            self.cell_agents_back.resize(n, 0);
+        }
+        {
+            let cells = SendPtr(self.cell_agents_back.as_mut_ptr());
+            let new_starts = &self.box_starts_back;
+            let old_starts = &self.box_starts;
+            let old_cells = &self.cell_agents;
+            let dirty = &self.dirty_boxes;
+            let boxes = &self.boxes;
+            let successors = &self.successors;
+            pool.parallel_for_chunks(0..nboxes, 1024, |chunk, _wid| {
+                for b in chunk {
+                    let (s, e) = (new_starts[b] as usize, new_starts[b + 1] as usize);
+                    if s == e {
+                        continue;
+                    }
+                    // SAFETY: [s, e) slices are disjoint across boxes.
+                    let slice =
+                        unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
+                    if dirty.binary_search(&(b as u32)).is_err() {
+                        // clean box: same sorted occupants, new offset
+                        let (os, oe) = (old_starts[b] as usize, old_starts[b + 1] as usize);
+                        debug_assert_eq!(oe - os, e - s, "clean box {b} changed size");
+                        slice.copy_from_slice(&old_cells[os..oe]);
+                    } else {
+                        walk_box_into_slice(&boxes[b], successors, slice);
+                    }
+                }
+            });
+        }
+
+        std::mem::swap(&mut self.box_starts, &mut self.box_starts_back);
+        std::mem::swap(&mut self.cell_agents, &mut self.cell_agents_back);
+        // csr_stamp == stamp already (checked above); morton cache is
+        // keyed on dims, which an incremental update never changes
     }
 
     /// Map a flat storage index back to its (domain, index) handle via
@@ -913,6 +1327,219 @@ mod tests {
             }
         }
         assert_eq!(pairs.len(), expected / 2);
+    }
+
+    // ----------------------------------------------------- PR 4 tests
+
+    /// Drive the §5.5 contract the way the scheduler does: mutate via
+    /// the single-writer accessor with a `moved_now` trail, then run
+    /// the barrier flip so `moved_last` reflects exactly that motion —
+    /// without bumping the structure version.
+    fn move_agents(rm: &mut ResourceManager, pool: &ThreadPool, movers: &[(AgentHandle, Real3)]) {
+        for &(h, delta) in movers {
+            // SAFETY: serial loop — single mutator per slot.
+            let a = unsafe { rm.get_mut_unchecked(h) };
+            let p = a.position();
+            a.set_position(p + delta);
+            a.base_mut().moved_now = true;
+        }
+        rm.writeback_and_flip(pool);
+    }
+
+    /// Population with stationary corner "pins" so the bounds (and with
+    /// the fixed box length, the whole grid geometry) are identical
+    /// between an incremental grid and a fresh full rebuild.
+    fn pinned_population(n: usize, seed: u64, domains: usize) -> ResourceManager {
+        use crate::core::random::Rng;
+        let mut rm = ResourceManager::new(domains);
+        rm.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+        rm.add_agent(Box::new(SphericalAgent::new(Real3::new(90.0, 90.0, 90.0))));
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            rm.add_agent(Box::new(SphericalAgent::new(rng.uniform3(10.0, 80.0))));
+        }
+        rm
+    }
+
+    fn neighbor_sets(
+        env: &UniformGridEnvironment,
+        rm: &ResourceManager,
+        seed: u64,
+    ) -> Vec<Vec<(AgentHandle, u64)>> {
+        use crate::core::random::Rng;
+        let mut rng = Rng::new(seed);
+        (0..25)
+            .map(|_| {
+                let q = rng.uniform3(-5.0, 95.0);
+                let r = rng.uniform(2.0, 20.0);
+                let mut v: Vec<(AgentHandle, u64)> = Vec::new();
+                env.for_each_neighbor_handles(q, r, rm, &mut |h, d2| v.push((h, d2.to_bits())));
+                v.sort_unstable();
+                v
+            })
+            .collect()
+    }
+
+    /// Incremental and full-rebuild grids over the same population must
+    /// agree bitwise: same neighbor sets and (same geometry given the
+    /// pins) the same canonical CSR arrays.
+    fn assert_matches_fresh_full(inc: &UniformGridEnvironment, rm: &ResourceManager, seed: u64) {
+        let pool = ThreadPool::new(3);
+        let mut full = UniformGridEnvironment::new(Some(10.0));
+        full.enable_csr(true);
+        full.update(rm, &pool);
+        assert_eq!(neighbor_sets(inc, rm, seed), neighbor_sets(&full, rm, seed));
+        let (ci, cf) = (inc.csr().expect("inc csr"), full.csr().expect("full csr"));
+        assert_eq!(ci.dims(), cf.dims(), "geometry must match (pins)");
+        assert_eq!(ci.num_flat(), cf.num_flat());
+        for b in 0..ci.num_boxes() {
+            assert_eq!(ci.box_agents(b), cf.box_agents(b), "box {b}");
+        }
+    }
+
+    #[test]
+    fn incremental_noop_and_rebin_match_full_rebuild() {
+        let mut rm = pinned_population(300, 41, 2);
+        let pool = ThreadPool::new(4);
+        let mut inc = UniformGridEnvironment::new(Some(10.0));
+        inc.enable_csr(true);
+        inc.set_incremental(true);
+        rm.writeback_and_flip(&pool); // settle: everyone static
+        inc.update(&rm, &pool); // first build is always full
+        assert_eq!(inc.update_stats().full_rebuilds, 1);
+        assert_csr_coherent(&inc, &rm);
+
+        // globally static population: O(1) no-op path
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().incremental_updates, 1);
+        assert_eq!(inc.update_stats().rebinned_agents, 0);
+        assert_matches_fresh_full(&inc, &rm, 91);
+
+        // move a small interior subset (well under the 1/8 hysteresis),
+        // far enough to change boxes
+        let movers: Vec<(AgentHandle, Real3)> = rm
+            .handles()
+            .iter()
+            .copied()
+            .skip(2) // keep the pins stationary
+            .step_by(13)
+            // interior agents live in [10, 80]^3, so a ±9 shift crosses
+            // box borders (box length 10) but never leaves the [0, 90]
+            // envelope the pins define
+            .map(|h| (h, Real3::new(-9.0, 9.0, -9.0)))
+            .collect();
+        let expected_movers = movers.len();
+        assert!(expected_movers * 8 < rm.num_agents(), "stay under hysteresis");
+        move_agents(&mut rm, &pool, &movers);
+        inc.update(&rm, &pool);
+        let stats = inc.update_stats();
+        assert_eq!(stats.full_rebuilds, 1, "must take the incremental path");
+        assert_eq!(stats.incremental_updates, 2);
+        assert!(stats.rebinned_agents > 0, "boxes must actually change");
+        assert_csr_coherent(&inc, &rm);
+        assert_matches_fresh_full(&inc, &rm, 92);
+
+        // agents flagged as moved whose box did not change (zero delta
+        // keeps this deterministic): incremental path, zero re-bins
+        let tiny: Vec<(AgentHandle, Real3)> = rm
+            .handles()
+            .iter()
+            .copied()
+            .skip(2)
+            .step_by(29)
+            .map(|h| (h, Real3::ZERO))
+            .collect();
+        let rebinned_before = inc.update_stats().rebinned_agents;
+        move_agents(&mut rm, &pool, &tiny);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().rebinned_agents, rebinned_before);
+        assert_eq!(inc.update_stats().full_rebuilds, 1);
+        assert_matches_fresh_full(&inc, &rm, 93);
+    }
+
+    #[test]
+    fn incremental_falls_back_on_structure_changes() {
+        let mut rm = pinned_population(200, 42, 1);
+        let pool = ThreadPool::new(2);
+        let mut inc = UniformGridEnvironment::new(Some(10.0));
+        inc.enable_csr(true);
+        inc.set_incremental(true);
+        rm.writeback_and_flip(&pool);
+        inc.update(&rm, &pool);
+        inc.update(&rm, &pool); // static no-op
+        assert_eq!(inc.update_stats().incremental_updates, 1);
+
+        // birth at the barrier -> structure version bump -> full rebuild
+        let mut baby = SphericalAgent::new(Real3::new(40.0, 40.0, 40.0));
+        baby.base.uid = rm.issue_uid();
+        rm.commit_additions(vec![Box::new(baby)]);
+        rm.writeback_and_flip(&pool);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().full_rebuilds, 2);
+        assert_csr_coherent(&inc, &rm);
+        assert_matches_fresh_full(&inc, &rm, 94);
+
+        // removal -> full rebuild
+        let victim = rm.uid_of(rm.handles()[5]);
+        rm.commit_removals(vec![victim]);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().full_rebuilds, 3);
+        assert_matches_fresh_full(&inc, &rm, 95);
+
+        // reorder (the Morton sorting primitive) -> full rebuild
+        let n0 = rm.num_agents_in(0);
+        let perm: Vec<u32> = (0..n0 as u32).rev().collect();
+        rm.reorder_domain(0, &perm);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().full_rebuilds, 4);
+        assert_csr_coherent(&inc, &rm);
+        assert_matches_fresh_full(&inc, &rm, 96);
+    }
+
+    #[test]
+    fn incremental_falls_back_on_escape_and_hysteresis() {
+        let mut rm = pinned_population(200, 43, 2);
+        let pool = ThreadPool::new(2);
+        let mut inc = UniformGridEnvironment::new(Some(10.0));
+        inc.enable_csr(true);
+        inc.set_incremental(true);
+        rm.writeback_and_flip(&pool);
+        inc.update(&rm, &pool);
+
+        // one mover escaping the cached envelope -> full rebuild
+        let h = rm.handles()[10];
+        move_agents(&mut rm, &pool, &[(h, Real3::new(500.0, 0.0, 0.0))]);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().full_rebuilds, 2);
+        assert_eq!(inc.update_stats().incremental_updates, 0);
+        // envelope grew; queries stay exact (no pins here: geometry
+        // differs from a Some(10.0) fresh build only in bounds origin,
+        // so compare neighbor sets against brute force instead)
+        let brute = crate::env::brute_force_neighbors(&rm, Real3::new(45.0, 45.0, 45.0), 25.0);
+        let mut got = Vec::new();
+        inc.for_each_neighbor_handles(Real3::new(45.0, 45.0, 45.0), 25.0, &rm, &mut |h, _| {
+            got.push(h)
+        });
+        assert_eq!(got.len(), brute.len());
+        // bring the escapee back so the envelope question disappears
+        move_agents(&mut rm, &pool, &[(h, Real3::new(-500.0, 0.0, 0.0))]);
+        inc.update(&rm, &pool);
+
+        // mass motion above the 1/8 threshold -> full rebuild
+        let movers: Vec<(AgentHandle, Real3)> = rm
+            .handles()
+            .iter()
+            .copied()
+            .skip(2)
+            .step_by(2)
+            .map(|h| (h, Real3::new(0.5, 0.5, 0.5)))
+            .collect();
+        assert!(movers.len() * 8 > rm.num_agents());
+        let full_before = inc.update_stats().full_rebuilds;
+        move_agents(&mut rm, &pool, &movers);
+        inc.update(&rm, &pool);
+        assert_eq!(inc.update_stats().full_rebuilds, full_before + 1);
+        assert_matches_fresh_full(&inc, &rm, 97);
     }
 
     #[test]

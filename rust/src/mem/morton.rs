@@ -222,6 +222,86 @@ mod tests {
         }
     }
 
+    /// PR 4 regression: a sorting pass between iterations permutes the
+    /// flat-index space, so the incremental uniform grid must discard
+    /// its persistent state (via the ResourceManager structure version)
+    /// and rebuild fully — and queries afterwards must match a fresh
+    /// full rebuild exactly.
+    #[test]
+    fn sort_and_balance_invalidates_incremental_grid() {
+        use crate::core::agent::SphericalAgent;
+        use crate::core::behavior::FnBehavior;
+        use crate::core::math::Real3;
+        use crate::core::param::Param;
+        use crate::core::random::Rng;
+        use crate::env::{brute_force_neighbors, Environment, UniformGridEnvironment};
+
+        let mut p = Param::default();
+        p.env_incremental_update = true;
+        p.mech_pair_sweep = true; // exposes the concrete grid for stats
+        p.box_length = Some(12.0);
+        p.simulation_time_step = 0.05;
+        let mut sim = Simulation::new(p);
+        // drift behavior: a few percent of agents move per iteration,
+        // with the §5.5 moved_now trail — the incremental sweet spot.
+        // Corner pins + clamped drift keep every mover inside the
+        // cached envelope, so the pre-sort iterations are
+        // deterministically incremental.
+        sim.remove_agent_op("mechanical_forces"); // isolate the drift
+        sim.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+        sim.add_agent(Box::new(SphericalAgent::new(Real3::new(80.0, 80.0, 80.0))));
+        let mut rng = Rng::new(33);
+        for _ in 0..300 {
+            let mut a = SphericalAgent::new(rng.uniform3(0.0, 80.0));
+            a.base.behaviors.push(FnBehavior::new("drift", |a, ctx| {
+                if ctx.rng.bernoulli(0.05) {
+                    let p = a.position() + ctx.rng.uniform3(-1.0, 1.0);
+                    a.set_position(Real3::new(
+                        p.x().clamp(0.0, 80.0),
+                        p.y().clamp(0.0, 80.0),
+                        p.z().clamp(0.0, 80.0),
+                    ));
+                    a.base_mut().moved_now = true;
+                }
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        sim.simulate(3);
+        let before = sim.env.pair_sweep_grid().expect("grid").update_stats();
+        assert!(
+            before.incremental_updates > 0,
+            "drift iterations must take the incremental path: {before:?}"
+        );
+
+        // the §5.4.2 sorting pass between two iterations
+        sort_and_balance(&mut sim);
+        sim.step();
+        let after = sim.env.pair_sweep_grid().expect("grid").update_stats();
+        assert_eq!(
+            after.full_rebuilds,
+            before.full_rebuilds + 1,
+            "the reorder must force a full rebuild via the structure version"
+        );
+
+        // post-reorder neighbor queries == fresh full rebuild == oracle
+        let mut fresh = UniformGridEnvironment::new(Some(12.0));
+        fresh.update(&sim.rm, &sim.pool);
+        let mut qrng = Rng::new(34);
+        for _ in 0..20 {
+            let q = qrng.uniform3(0.0, 80.0);
+            let r = qrng.uniform(3.0, 20.0);
+            let mut got: Vec<_> = Vec::new();
+            let mut want: Vec<_> = Vec::new();
+            sim.env
+                .for_each_neighbor_handles(q, r, &sim.rm, &mut |h, d2| got.push((h, d2.to_bits())));
+            fresh.for_each_neighbor_handles(q, r, &sim.rm, &mut |h, d2| want.push((h, d2.to_bits())));
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "query {q:?} r={r}");
+            assert_eq!(got.len(), brute_force_neighbors(&sim.rm, q, r).len());
+        }
+    }
+
     #[test]
     fn sort_and_balance_groups_spatially() {
         use crate::core::agent::{AgentHandle, SphericalAgent};

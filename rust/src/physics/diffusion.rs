@@ -64,7 +64,12 @@ pub struct DiffusionGrid {
     /// f64 bit-cast concentrations; atomic so agents can secrete
     /// concurrently during the agent loop.
     data: Vec<AtomicU64>,
-    back: Vec<Real>,
+    /// Write target of the stencil pass. Same bit-cast layout as
+    /// `data` so the publish is an O(1) buffer swap instead of the
+    /// former serial O(r³) copy loop (PR 4): every cell of `back` is
+    /// written by the step, so whatever the swap leaves behind is
+    /// overwritten next step.
+    back: Vec<AtomicU64>,
     /// diffusion coefficient (nu in Eq 4.3)
     pub diffusion_coef: Real,
     /// decay constant (mu in Eq 4.3)
@@ -96,7 +101,7 @@ impl DiffusionGrid {
             origin: Real3::new(min_bound, min_bound, min_bound),
             spacing: (max_bound - min_bound) / (resolution - 1) as Real,
             data: (0..n).map(|_| AtomicU64::new(0)).collect(),
-            back: vec![0.0; n],
+            back: (0..n).map(|_| AtomicU64::new(0)).collect(),
             diffusion_coef,
             decay_constant,
             dt,
@@ -217,7 +222,11 @@ impl DiffusionGrid {
     }
 
     /// One explicit Eq-4.3 step with the native stencil, parallel over
-    /// z-slabs.
+    /// z-slabs. Publication is a buffer swap: the pass writes every
+    /// cell of `back` (relaxed atomic stores — plain stores on the
+    /// usual targets, and each cell has exactly one writer), then
+    /// `back` becomes `data` in O(1). Values are bit-identical to the
+    /// former copy-publish loop.
     pub fn step_native(&mut self, pool: &ThreadPool) {
         let r = self.resolution;
         let decay_factor = 1.0 - self.decay_constant * self.dt;
@@ -225,12 +234,7 @@ impl DiffusionGrid {
         debug_assert!(self.is_stable(), "unstable diffusion step");
         let data = &self.data;
         let back = &self.back;
-        // SAFETY: each z-slab of `back` is written by exactly one worker
-        // (disjoint ranges); reads of `data` are atomic.
-        let back_ptr = SendPtr(back.as_ptr() as *mut Real);
-        struct SendPtr(*mut Real);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
+        let put = |i: usize, v: Real| back[i].store(v.to_bits(), Ordering::Relaxed);
         let get = |x: isize, y: isize, z: isize| -> Real {
             if x < 0 || y < 0 || z < 0 || x >= r as isize || y >= r as isize || z >= r as isize {
                 0.0 // Dirichlet boundary
@@ -245,10 +249,6 @@ impl DiffusionGrid {
             f64::from_bits(data[idx].load(Ordering::Relaxed))
         }
         pool.parallel_for(0..r, 1, |z, _wid| {
-            // capture the wrapper (not the raw field) so the Sync impl
-            // applies — edition-2021 disjoint capture would otherwise
-            // capture the bare *mut f64
-            let back_ptr = &back_ptr;
             let zi = z as isize;
             let interior_z = z >= 1 && z + 1 < r;
             for y in 0..r {
@@ -268,9 +268,7 @@ impl DiffusionGrid {
                             + raw(data, i - r * r)
                             + raw(data, i + r * r)
                             - 6.0 * u;
-                        unsafe {
-                            *back_ptr.0.add(i) = u * decay_factor + coef * lap;
-                        }
+                        put(i, u * decay_factor + coef * lap);
                     }
                     // boundary columns via the checked path
                     for x in [0usize, r - 1] {
@@ -283,9 +281,7 @@ impl DiffusionGrid {
                             + get(xi, yi, zi - 1)
                             + get(xi, yi, zi + 1)
                             - 6.0 * u;
-                        unsafe {
-                            *back_ptr.0.add(row + x) = u * decay_factor + coef * lap;
-                        }
+                        put(row + x, u * decay_factor + coef * lap);
                     }
                 } else {
                     for x in 0..r {
@@ -298,17 +294,14 @@ impl DiffusionGrid {
                             + get(xi, yi, zi - 1)
                             + get(xi, yi, zi + 1)
                             - 6.0 * u;
-                        unsafe {
-                            *back_ptr.0.add((z * r + y) * r + x) = u * decay_factor + coef * lap;
-                        }
+                        put((z * r + y) * r + x, u * decay_factor + coef * lap);
                     }
                 }
             }
         });
-        // publish
-        for (cell, &v) in self.data.iter().zip(self.back.iter()) {
-            cell.store(v.to_bits(), Ordering::Relaxed);
-        }
+        // publish: O(1) swap — `back` was fully overwritten above, and
+        // the old concentrations become the next step's scratch
+        std::mem::swap(&mut self.data, &mut self.back);
     }
 
     /// Snapshot as f32 (input for the PJRT kernel).

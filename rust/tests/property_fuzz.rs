@@ -276,6 +276,229 @@ fn fuzz_grid_with_agent_motion_between_updates() {
     });
 }
 
+// ---------------------------------------------- incremental grid (PR 4)
+
+/// Tentpole property: with `env_incremental_update` on, whole-simulation
+/// trajectories are bitwise identical to the full-rebuild baseline —
+/// across thread counts, random per-iteration motion with mixed
+/// movers/statics, interleaved births and removals, and both force
+/// paths (per-agent and the PR 3 pair sweep).
+#[test]
+fn fuzz_incremental_env_bitwise_identical_trajectories() {
+    use teraagent::core::behavior::FnBehavior;
+    use teraagent::core::event::NewAgentEventKind;
+    use teraagent::core::simulation::Simulation;
+
+    cases(3, 1212, |seed| {
+        for threads in [1usize, 2, 8] {
+            let run = |incremental: bool| -> Vec<(u64, [u64; 3])> {
+                let mut p = Param::default();
+                p.seed = seed;
+                p.num_threads = threads;
+                p.numa_domains = 1 + (seed % 2) as usize;
+                p.simulation_time_step = 0.05;
+                p.detect_static_agents = true;
+                p.mech_pair_sweep = seed % 2 == 0;
+                p.box_length = Some(12.0);
+                p.interaction_radius = 10.0;
+                p.env_incremental_update = incremental;
+                let mut sim = Simulation::new(p);
+                let mut rng = Rng::new(seed ^ 0xF00D);
+                for _ in 0..200 {
+                    let mut a = SphericalAgent::with_diameter(
+                        rng.uniform3(0.0, 80.0),
+                        rng.uniform(6.0, 10.0),
+                    );
+                    a.base.behaviors.push(FnBehavior::new("mixed", |a, ctx| {
+                        // a minority of movers per iteration (§5.5 trail)
+                        if ctx.rng.bernoulli(0.08) {
+                            let step = ctx.rng.uniform3(-1.5, 1.5);
+                            let p = a.position();
+                            a.set_position(p + step);
+                            a.base_mut().moved_now = true;
+                        }
+                        // interleaved births and removals
+                        if ctx.iteration() == 6 && ctx.rng.bernoulli(0.04) {
+                            let cell = a.downcast_mut::<SphericalAgent>().unwrap();
+                            let daughter = cell.divide(Real3::new(1.0, 0.0, 0.0));
+                            ctx.new_agent(NewAgentEventKind::CellDivision, Box::new(daughter));
+                        }
+                        if ctx.iteration() == 11 && ctx.rng.bernoulli(0.04) {
+                            ctx.remove_self();
+                        }
+                    }));
+                    sim.add_agent(Box::new(a));
+                }
+                sim.simulate(18);
+                let mut out: Vec<(u64, [u64; 3])> = Vec::new();
+                sim.rm.for_each_agent(|_h, a| {
+                    let p = a.position();
+                    out.push((a.uid(), [p.x().to_bits(), p.y().to_bits(), p.z().to_bits()]));
+                });
+                out.sort_unstable();
+                out
+            };
+            let base = run(false);
+            assert!(!base.is_empty(), "seed={seed}");
+            assert_eq!(
+                base,
+                run(true),
+                "seed={seed} threads={threads}: incremental must be bitwise identical"
+            );
+        }
+    });
+}
+
+/// Grid-level storm: the incremental grid must agree with a fresh full
+/// rebuild (neighbor sets bitwise, CSR coherent) across random motion
+/// driven through the §5.5 moved trail, interleaved barrier births and
+/// removals, envelope escapes and over-threshold mass moves.
+#[test]
+fn fuzz_incremental_grid_matches_full_under_mutation_storm() {
+    cases(6, 1313, |seed| {
+        let mut rng = Rng::new(seed);
+        let pool = ThreadPool::new(1 + (seed % 4) as usize);
+        let mut rm = ResourceManager::new(1 + (seed % 3) as usize);
+        // stationary corner pins keep the envelope origin at exactly
+        // (0,0,0), so small-motion rounds (positions wrapped into
+        // [0, 70)) can never escape below it — the even rounds are
+        // deterministically incremental (asserted at the end). They are
+        // excluded from `live` so the removal rounds never delete them.
+        rm.add_agent(Box::new(SphericalAgent::new(Real3::ZERO)));
+        rm.add_agent(Box::new(SphericalAgent::new(Real3::new(70.0, 70.0, 70.0))));
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..300 {
+            let h = rm.add_agent(Box::new(SphericalAgent::new(rng.uniform3(0.0, 70.0))));
+            live.push(rm.get(h).uid());
+        }
+        let mut inc = UniformGridEnvironment::new(Some(9.0));
+        inc.enable_csr(true);
+        inc.set_incremental(true);
+        rm.writeback_and_flip(&pool);
+        inc.update(&rm, &pool);
+        for round in 0..12 {
+            // the corner pins are the first two agents ever added, so
+            // their UIDs are exactly 1 and 2 — every mutation round
+            // leaves them untouched
+            let is_pin = |rm: &ResourceManager, h| rm.uid_of(h) <= 2;
+            if round % 2 == 0 {
+                // small-motion round: ~n/16 movers, inside the space
+                let n = rm.num_agents();
+                for k in (0..n).step_by(16) {
+                    let h = rm.handles()[k];
+                    if is_pin(&rm, h) {
+                        continue;
+                    }
+                    // SAFETY: serial loop — single mutator per slot.
+                    let a = unsafe { rm.get_mut_unchecked(h) };
+                    let p = a.position();
+                    let q = Real3::new(
+                        (p.x() + rng.uniform(1.0, 8.0)).rem_euclid(70.0),
+                        (p.y() + rng.uniform(1.0, 8.0)).rem_euclid(70.0),
+                        (p.z() + rng.uniform(1.0, 8.0)).rem_euclid(70.0),
+                    );
+                    a.set_position(q);
+                    a.base_mut().moved_now = true;
+                }
+            } else {
+                match rng.uniform_usize(4) {
+                    0 => {
+                        // barrier births
+                        let batch: Vec<Box<dyn Agent>> = (0..1 + rng.uniform_usize(10))
+                            .map(|_| {
+                                let mut a = SphericalAgent::new(rng.uniform3(0.0, 70.0));
+                                a.base.uid = rm.issue_uid();
+                                live.push(a.base.uid);
+                                Box::new(a) as Box<dyn Agent>
+                            })
+                            .collect();
+                        rm.commit_additions(batch);
+                    }
+                    1 => {
+                        // barrier removals
+                        let mut to_remove = Vec::new();
+                        for _ in 0..rng.uniform_usize(10.min(live.len())) {
+                            let idx = rng.uniform_usize(live.len());
+                            to_remove.push(live.swap_remove(idx));
+                        }
+                        rm.commit_removals(to_remove);
+                    }
+                    2 => {
+                        // envelope escape: one mover far outside
+                        let mut h = rm.handles()[rng.uniform_usize(rm.num_agents())];
+                        while is_pin(&rm, h) {
+                            h = rm.handles()[rng.uniform_usize(rm.num_agents())];
+                        }
+                        // SAFETY: single mutator.
+                        let a = unsafe { rm.get_mut_unchecked(h) };
+                        a.set_position(rng.uniform3(200.0, 260.0));
+                        a.base_mut().moved_now = true;
+                    }
+                    _ => {
+                        // mass move above the hysteresis threshold
+                        let n = rm.num_agents();
+                        for k in (0..n).step_by(3) {
+                            let h = rm.handles()[k];
+                            if is_pin(&rm, h) {
+                                continue;
+                            }
+                            // SAFETY: single mutator.
+                            let a = unsafe { rm.get_mut_unchecked(h) };
+                            a.set_position(rng.uniform3(0.0, 70.0));
+                            a.base_mut().moved_now = true;
+                        }
+                    }
+                }
+            }
+            rm.writeback_and_flip(&pool);
+            inc.update(&rm, &pool);
+
+            // oracle: fresh full rebuild over the same population
+            let mut full = UniformGridEnvironment::new(Some(9.0));
+            full.enable_csr(true);
+            full.update(&rm, &pool);
+            for _ in 0..10 {
+                let q = rng.uniform3(-10.0, 90.0);
+                let r = rng.uniform(2.0, 18.0);
+                let mut a: Vec<(teraagent::core::agent::AgentHandle, u64)> = Vec::new();
+                let mut b: Vec<(teraagent::core::agent::AgentHandle, u64)> = Vec::new();
+                inc.for_each_neighbor_handles(q, r, &rm, &mut |h, d2| a.push((h, d2.to_bits())));
+                full.for_each_neighbor_handles(q, r, &rm, &mut |h, d2| b.push((h, d2.to_bits())));
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "seed={seed} round={round}");
+            }
+            // CSR self-consistency of the (possibly patched) view:
+            // every flat exactly once, in the box of its column position
+            let csr = inc.csr().expect("csr valid");
+            assert_eq!(csr.num_flat(), rm.num_agents(), "seed={seed} round={round}");
+            let mut seen = vec![false; csr.num_flat()];
+            for bx in 0..csr.num_boxes() {
+                let slice = csr.box_agents(bx);
+                for w in slice.windows(2) {
+                    assert!(w[0] < w[1], "seed={seed} round={round} box {bx} unsorted");
+                }
+                for &flat in slice {
+                    assert!(!seen[flat as usize], "seed={seed} flat {flat} twice");
+                    seen[flat as usize] = true;
+                    let h = csr.flat_to_handle(flat);
+                    let pos = rm.position_of(h);
+                    assert_eq!(
+                        csr.box_index(csr.box_coord(pos)),
+                        bx,
+                        "seed={seed} round={round} flat {flat}"
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "seed={seed} round={round} missing flats");
+        }
+        // the storm must actually exercise both paths
+        let stats = inc.update_stats();
+        assert!(stats.incremental_updates >= 6, "seed={seed}: {stats:?}");
+        assert!(stats.full_rebuilds >= 2, "seed={seed}: {stats:?}");
+    });
+}
+
 // ----------------------------------------------------------------- morton
 
 #[test]
