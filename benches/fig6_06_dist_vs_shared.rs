@@ -3,11 +3,19 @@
 //! on this container are the exchange-overhead share and the memory
 //! overhead of ghosts — the quantities that determine the paper's
 //! single-node crossover.
+//!
+//! PR 5 adds imbalanced-spheroid rows (shared memory vs 4 ranks with
+//! load balancing off/on): on an off-center workload the distributed
+//! configs only amortize their exchange overhead when the balancer
+//! spreads the load. Rows land in the JSON report under model
+//! "imbalanced spheroid" (CI -> BENCH_PR5.json).
 
 use teraagent::benchkit::*;
+use teraagent::core::math::Real3;
 use teraagent::core::param::{ExecutionContextMode, Param};
 use teraagent::distributed::engine::DistributedEngine;
 use teraagent::models::epidemiology::{build, SirParams};
+use teraagent::models::spheroid::{self, SpheroidParams};
 
 fn main() {
     print_env_banner("fig6_06_dist_vs_shared");
@@ -69,6 +77,69 @@ fn main() {
         ]);
     }
     table.print();
+
+    // ---- PR 5: imbalanced spheroid, shared vs distributed ± balance --
+    let mut report = JsonReport::new("fig6_06_dist_vs_shared");
+    let cells = scaled(3000, 300);
+    let spheroid_model = SpheroidParams {
+        initial_cells: cells,
+        center: Real3::new(-200.0, 0.0, 0.0),
+        ..SpheroidParams::for_seeding(3000)
+    };
+    let sp_builder = |p: Param| spheroid::build(p, &spheroid_model);
+    let sp_iters = 10u64;
+    let mut sp_table = BenchTable::new(
+        &format!("PR 5: imbalanced spheroid ({cells} cells, {sp_iters} supersteps)"),
+        &["configuration", "runtime", "s/iter", "owned per rank", "exchange share"],
+    );
+    // shared-memory reference
+    {
+        let mut sim = sp_builder(param());
+        sim.simulate(1);
+        let t = std::time::Instant::now();
+        sim.simulate(sp_iters);
+        let med = t.elapsed();
+        sp_table.row(&[
+            "shared memory".into(),
+            fmt_duration(med),
+            format!("{:.4}", med.as_secs_f64() / sp_iters as f64),
+            format!("[{}]", sim.num_agents()),
+            "0%".into(),
+        ]);
+        report.row(
+            "imbalanced spheroid",
+            "shared_memory",
+            med.as_secs_f64() / sp_iters as f64,
+        );
+    }
+    for (config, balance) in [("ranks4_balance_off", false), ("ranks4_balance_on", true)] {
+        let mut p = param();
+        p.dist_rebalance_freq = if balance { 5 } else { 0 };
+        let mut engine = DistributedEngine::new(&sp_builder, p, 4, 1);
+        engine.simulate(1);
+        let before = engine.stats();
+        let t = std::time::Instant::now();
+        engine.simulate(sp_iters);
+        let med = t.elapsed();
+        let s = engine.stats();
+        let exch = (s.serialize_time + s.deserialize_time)
+            - (before.serialize_time + before.deserialize_time);
+        sp_table.row(&[
+            config.into(),
+            fmt_duration(med),
+            format!("{:.4}", med.as_secs_f64() / sp_iters as f64),
+            format!("{:?}", engine.owned_per_rank()),
+            format!("{:.1}%", 100.0 * exch.as_secs_f64() / med.as_secs_f64()),
+        ]);
+        report.row(
+            "imbalanced spheroid",
+            config,
+            med.as_secs_f64() / sp_iters as f64,
+        );
+    }
+    sp_table.print();
+    report.write_if_requested();
+
     println!(
         "paper: on multi-socket nodes MPI-only beats OpenMP (NUMA locality) — e.g. 800M\n\
          agents 0.6s vs 5s per iteration; on one core the distributed configs show the\n\

@@ -4,11 +4,22 @@
 //! and extrapolate the reachable population for this container and for
 //! the paper's Snellius allocation (their headline: 501.51e9 agents on
 //! 84096 cores).
+//!
+//! PR 5 adds the imbalanced-spheroid rows: an off-center tumor ball
+//! whose static decomposition parks nearly every cell on one rank,
+//! swept over load balancing off/on (and the Morton-SFC decomposition
+//! at 4 ranks). With rank-per-thread execution the wall clock tracks
+//! the busiest rank, so the balanced rows must approach the
+//! even-split runtime as cores allow. Rows land in the JSON report
+//! (`TA_BENCH_JSON`) under model "imbalanced spheroid" — CI extracts
+//! them into BENCH_PR5.json.
 
 use teraagent::benchkit::*;
-use teraagent::core::param::{ExecutionContextMode, Param};
+use teraagent::core::math::Real3;
+use teraagent::core::param::{DistPartitioner, ExecutionContextMode, Param};
 use teraagent::distributed::engine::DistributedEngine;
 use teraagent::models::epidemiology::{build, SirParams};
+use teraagent::models::spheroid::{self, SpheroidParams};
 
 fn main() {
     print_env_banner("fig6_09_dist_weak");
@@ -51,6 +62,69 @@ fn main() {
         ]);
     }
     table.print();
+
+    // ---- PR 5: load balancing on the imbalanced spheroid ------------
+    let mut report = JsonReport::new("fig6_09_dist_weak");
+    let cells = scaled(3000, 300);
+    let spheroid_model = SpheroidParams {
+        initial_cells: cells,
+        center: Real3::new(-200.0, 0.0, 0.0),
+        ..SpheroidParams::for_seeding(3000)
+    };
+    let sp_builder = |p: Param| spheroid::build(p, &spheroid_model);
+    let iters = 10u64;
+    let mut balance_table = BenchTable::new(
+        &format!("PR 5: imbalanced spheroid ({cells} cells, {iters} supersteps), balance off/on"),
+        &["config", "runtime", "s/iter", "owned per rank", "imbalance", "rebal. migrated"],
+    );
+    let mut baseline_4ranks = 0.0f64;
+    for (label, ranks, partitioner, balance) in [
+        ("ranks1", 1usize, DistPartitioner::Slab, false),
+        ("ranks2_balance_off", 2, DistPartitioner::Slab, false),
+        ("ranks2_balance_on", 2, DistPartitioner::Slab, true),
+        ("ranks4_balance_off", 4, DistPartitioner::Slab, false),
+        ("ranks4_balance_on", 4, DistPartitioner::Slab, true),
+        ("ranks4_morton_balance_off", 4, DistPartitioner::Morton, false),
+        ("ranks4_morton_balance_on", 4, DistPartitioner::Morton, true),
+    ] {
+        let mut p = param();
+        p.dist_partitioner = partitioner;
+        p.dist_rebalance_freq = if balance { 5 } else { 0 };
+        let mut engine = DistributedEngine::new(&sp_builder, p, ranks, 1);
+        let t = std::time::Instant::now();
+        engine.simulate(iters);
+        let elapsed = t.elapsed();
+        let owned = engine.owned_per_rank();
+        let max = *owned.iter().max().unwrap_or(&0) as f64;
+        let mean = owned.iter().sum::<usize>() as f64 / owned.len().max(1) as f64;
+        let bs = engine.balance_stats();
+        if label == "ranks4_balance_off" {
+            baseline_4ranks = elapsed.as_secs_f64();
+        }
+        if label == "ranks4_balance_on" && baseline_4ranks > 0.0 {
+            println!(
+                "  4-rank slab wall clock: {:.3}s unbalanced -> {:.3}s balanced ({:+.1}%)",
+                baseline_4ranks,
+                elapsed.as_secs_f64(),
+                100.0 * (elapsed.as_secs_f64() - baseline_4ranks) / baseline_4ranks
+            );
+        }
+        balance_table.row(&[
+            label.to_string(),
+            fmt_duration(elapsed),
+            format!("{:.4}", elapsed.as_secs_f64() / iters as f64),
+            format!("{owned:?}"),
+            format!("{:.2}x", max / mean.max(1.0)),
+            bs.rebalance_migrated.to_string(),
+        ]);
+        report.row(
+            "imbalanced spheroid",
+            label,
+            elapsed.as_secs_f64() / iters as f64,
+        );
+    }
+    balance_table.print();
+    report.write_if_requested();
 
     // extreme-scale probe: memory per agent -> reachable population
     let rss0 = rss_bytes();

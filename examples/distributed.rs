@@ -9,11 +9,21 @@
 //! (`teraagent worker ...`) communicating over localhost TCP with
 //! delta + DEFLATE enabled.
 //!
+//! With `--ranks N` it runs the PR 5 load-balancing scenario instead:
+//! an off-center tumor spheroid whose static decomposition parks
+//! nearly every agent on one rank. `--balance` switches the
+//! rebalancing phase on (`--freq N` sets the cadence, `--partitioner
+//! slab|morton` picks the decomposition); compare the per-rank agent
+//! counts and wall clock against the run without the flag.
+//!
 //!     cargo run --release --example distributed [--tcp]
+//!     cargo run --release --example distributed -- --ranks 4 [--balance]
 
+use teraagent::core::math::Real3;
 use teraagent::core::param::{ExecutionContextMode, Param};
 use teraagent::distributed::engine::{simulation_snapshot, DistributedEngine};
 use teraagent::models::epidemiology::{build, SirParams};
+use teraagent::models::spheroid::{self, SpheroidParams};
 
 fn model() -> SirParams {
     SirParams {
@@ -137,10 +147,99 @@ fn run_tcp() {
     }
 }
 
+fn flag_value(args: &[String], i: usize) -> &str {
+    args.get(i).map(String::as_str).unwrap_or_else(|| {
+        eprintln!("missing value after {}", args[i - 1]);
+        std::process::exit(2);
+    })
+}
+
+/// The PR 5 scenario: a tumor spheroid seeded at x = -200 of the
+/// ±300 space — the uniform slabs park nearly every cell on one rank.
+fn run_imbalanced_spheroid(ranks: usize, balance: bool, freq: u64, partitioner: &str) {
+    let iterations = 30u64;
+    let model = SpheroidParams {
+        initial_cells: 3000,
+        center: Real3::new(-200.0, 0.0, 0.0),
+        ..SpheroidParams::for_seeding(3000)
+    };
+    let builder = |p: Param| spheroid::build(p, &model);
+    let mut p = Param::default();
+    p.execution_context = ExecutionContextMode::Copy;
+    // apply_kv owns the partitioner-name aliases — same spelling as
+    // config files and `--param dist_partitioner=...`
+    if let Err(e) = p.apply_kv("dist_partitioner", partitioner) {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    p.dist_rebalance_freq = if balance { freq } else { 0 };
+    let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
+    let before = engine.owned_per_rank();
+    println!(
+        "imbalanced spheroid: {} cells, {ranks} ranks, partitioner={partitioner}, \
+         balance={balance} (freq {freq})",
+        engine.num_agents()
+    );
+    println!("  owned per rank before: {before:?}");
+    let t = std::time::Instant::now();
+    engine.simulate(iterations);
+    let elapsed = t.elapsed();
+    let after = engine.owned_per_rank();
+    let s = engine.stats();
+    let bs = engine.balance_stats();
+    let max = *after.iter().max().unwrap_or(&0) as f64;
+    let mean = after.iter().sum::<usize>() as f64 / after.len().max(1) as f64;
+    println!("  owned per rank after:  {after:?} (imbalance {:.2}x)", max / mean.max(1.0));
+    println!(
+        "  {iterations} supersteps in {:.3}s; migrated {} (rebalance {}, {} rounds), \
+         rebalances {} (cuts updated {}), gossip {} B, observed imbalance {:.2}x",
+        elapsed.as_secs_f64(),
+        s.migrated_agents,
+        bs.rebalance_migrated,
+        bs.migration_rounds,
+        bs.rebalances,
+        bs.cut_updates,
+        bs.stats_bytes,
+        bs.last_imbalance,
+    );
+}
+
 fn main() {
-    if std::env::args().any(|a| a == "--tcp") {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--tcp") {
         run_tcp();
-    } else {
-        run_in_process();
+        return;
+    }
+    let mut ranks: Option<usize> = None;
+    let mut balance = false;
+    let mut freq = 5u64;
+    let mut partitioner = "slab".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--ranks" => {
+                i += 1;
+                ranks = Some(flag_value(&args, i).parse().expect("--ranks takes a number"));
+            }
+            "--balance" => balance = true,
+            "--freq" => {
+                i += 1;
+                freq = flag_value(&args, i).parse().expect("--freq takes a number");
+            }
+            "--partitioner" => {
+                i += 1;
+                // validated by Param::apply_kv in the scenario runner
+                partitioner = flag_value(&args, i).to_string();
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    match ranks {
+        Some(r) => run_imbalanced_spheroid(r, balance, freq, &partitioner),
+        None => run_in_process(),
     }
 }

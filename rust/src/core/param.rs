@@ -55,6 +55,17 @@ pub enum DiffusionBackend {
     Pjrt,
 }
 
+/// Spatial decomposition of the distributed engine (Ch. 6 / PR 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistPartitioner {
+    /// 1-D slabs along x with movable cut points (the default; chain
+    /// neighbor topology, multi-hop migration).
+    Slab,
+    /// Morton space-filling-curve ranges over aura-sized cells
+    /// (complete exchange graph, single-hop migration).
+    Morton,
+}
+
 /// All engine parameters. Mirrors BioDynaMo's `Param` class.
 #[derive(Debug, Clone)]
 pub struct Param {
@@ -146,6 +157,14 @@ pub struct Param {
     /// Distributed engine: DEFLATE the aura payload after (optional)
     /// delta encoding — the entropy stage (wire flag `FLAG_DEFLATE`).
     pub dist_aura_deflate: bool,
+    /// Distributed engine: which spatial decomposition owns the space.
+    pub dist_partitioner: DistPartitioner,
+    /// Distributed engine: run the load-balancing phase (LoadStats
+    /// gossip -> deterministic cut update -> bulk migration) every N
+    /// supersteps; `0` disables rebalancing (PR 5). Simulation results
+    /// are bitwise identical with rebalancing on or off — only rank
+    /// ownership moves (Fig 6.5 contract).
+    pub dist_rebalance_freq: u64,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -183,6 +202,8 @@ impl Default for Param {
             dist_threaded_ranks: true,
             dist_aura_delta: false,
             dist_aura_deflate: false,
+            dist_partitioner: DistPartitioner::Slab,
+            dist_rebalance_freq: 0,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -313,6 +334,16 @@ impl Param {
             "dist_aura_deflate" => {
                 self.dist_aura_deflate = value.parse().map_err(|_| err(k, value))?
             }
+            "dist_partitioner" => {
+                self.dist_partitioner = match value {
+                    "slab" => DistPartitioner::Slab,
+                    "morton" | "sfc" | "morton_sfc" => DistPartitioner::Morton,
+                    _ => return Err(err(k, value)),
+                }
+            }
+            "dist_rebalance_freq" => {
+                self.dist_rebalance_freq = value.parse().map_err(|_| err(k, value))?
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
                 self.visualization_interval = value.parse().map_err(|_| err(k, value))?
@@ -435,6 +466,11 @@ mod tests {
         p.apply_kv("dist_aura_deflate", "true").unwrap();
         p.apply_kv("mech_pair_sweep", "true").unwrap();
         p.apply_kv("env_incremental_update", "true").unwrap();
+        p.apply_kv("dist_partitioner", "morton").unwrap();
+        p.apply_kv("dist_rebalance_freq", "10").unwrap();
+        assert_eq!(p.dist_partitioner, DistPartitioner::Morton);
+        assert_eq!(p.dist_rebalance_freq, 10);
+        assert!(p.apply_kv("dist_partitioner", "hilbert").is_err());
         assert_eq!(p.num_threads, 8);
         assert!(p.mech_pair_sweep);
         assert!(p.env_incremental_update);

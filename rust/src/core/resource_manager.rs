@@ -405,6 +405,22 @@ impl ResourceManager {
         }
     }
 
+    /// Stream `(handle, position)` of every owned (non-ghost) agent
+    /// straight from the SoA columns — no `Box<dyn Agent>` chase. The
+    /// distributed load-balance histogram and ownership scans read the
+    /// population through this; callers must hold a coherent mirror
+    /// (`sync_columns_if_dirty` first if out-of-band edits happened).
+    pub fn for_each_owned_position(&self, mut f: impl FnMut(AgentHandle, crate::core::math::Real3)) {
+        for (d, domain) in self.domains.iter().enumerate() {
+            let cols = &domain.cols;
+            for (i, pos) in cols.positions.iter().enumerate() {
+                if !cols.ghost.get(i) {
+                    f(AgentHandle::new(d, i), *pos);
+                }
+            }
+        }
+    }
+
     /// Serial iteration with shared access.
     pub fn for_each_agent(&self, mut f: impl FnMut(AgentHandle, &dyn Agent)) {
         for (d, domain) in self.domains.iter().enumerate() {

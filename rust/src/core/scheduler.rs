@@ -65,6 +65,14 @@ impl OpTimers {
         self.entries.get(name).map(|e| e.1).unwrap_or_default()
     }
 
+    /// Sum of every recorded phase total, in nanoseconds — the scalar
+    /// the distributed load telemetry (`balance::LoadStats::op_nanos`)
+    /// samples per rebalance interval. Monotone across iterations, so
+    /// interval costs are plain differences.
+    pub fn total_nanos(&self) -> u64 {
+        self.entries.values().map(|(d, _)| d.as_nanos() as u64).sum()
+    }
+
     /// (name, total, count) sorted by descending total — the Fig 5.6
     /// breakdown rows.
     pub fn breakdown(&self) -> Vec<(&'static str, Duration, u64)> {

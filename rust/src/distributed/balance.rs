@@ -1,0 +1,401 @@
+//! Dynamic load balancing for the distributed engine (PR 5).
+//!
+//! The static decomposition of `partition.rs` leaves ranks idle when
+//! the workload is spatially imbalanced (the tumor spheroid packs
+//! nearly every agent into a few central slabs). This module supplies
+//! the three pieces the engine composes into a rebalancing superstep
+//! phase:
+//!
+//! * [`LoadStats`] — per-rank load telemetry: owned-agent count, local
+//!   iteration wall time, the per-op timer total sampled from
+//!   `OpTimers`, and an agent histogram over the partitioner's 1-D
+//!   order space (slab x, or SFC sequence position). A fixed-layout
+//!   wire codec lets ranks gossip the struct over the existing
+//!   [`Transport`](crate::distributed::transport::Transport) with a
+//!   plain all-to-all broadcast.
+//! * [`balanced_cuts`] — the deterministic cut-point computation:
+//!   given the *global* histogram (identical on every rank after the
+//!   gossip), split the bin axis into contiguous ranges of
+//!   near-equal weight. Every rank runs the same pure function on the
+//!   same input, so no coordinator and no second agreement round are
+//!   needed — the paper's Fig 6.5 determinism contract carries over
+//!   because ownership placement never feeds back into trajectories.
+//! * [`BalanceStats`] — accounting for the benches: rebalance count,
+//!   cut updates, agents moved by bulk migration, gossip bytes, and
+//!   the observed imbalance ratio.
+//!
+//! Wall-clock timings ride along in `LoadStats` for telemetry and
+//! bench reporting, but the cut computation deliberately uses only the
+//! agent histogram: counts are reproducible run to run, timings are
+//! not, and reproducible cuts make the rebalancing storm fuzz exact.
+
+use std::time::Duration;
+
+/// Histogram resolution of the load gossip. 256 bins keeps the wire
+/// cost at ~2 KiB per rank pair while bounding the cut-placement error
+/// at `space_length / 256`.
+pub const BALANCE_BINS: usize = 256;
+
+/// Per-rank load telemetry gossiped at each rebalance point.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LoadStats {
+    pub rank: u64,
+    /// Owned (non-ghost) agents at sampling time.
+    pub owned_agents: u64,
+    /// Wall clock spent in `step_local` since the previous rebalance.
+    pub step_nanos: u64,
+    /// Per-op timer total (`OpTimers::total_nanos`) accumulated since
+    /// the previous rebalance — the Fig 5.6 breakdown rolled into one
+    /// scalar.
+    pub op_nanos: u64,
+    /// Owned-agent count per bin of the partitioner's 1-D order space
+    /// (`Partitioner::load_bin`), length [`BALANCE_BINS`].
+    pub hist: Vec<u64>,
+}
+
+impl LoadStats {
+    /// Fixed-layout wire encoding: 4 u64 header fields, a u32 bin
+    /// count, then the bins as u64 LE.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4 * 8 + 4 + self.hist.len() * 8);
+        buf.extend_from_slice(&self.rank.to_le_bytes());
+        buf.extend_from_slice(&self.owned_agents.to_le_bytes());
+        buf.extend_from_slice(&self.step_nanos.to_le_bytes());
+        buf.extend_from_slice(&self.op_nanos.to_le_bytes());
+        buf.extend_from_slice(&(self.hist.len() as u32).to_le_bytes());
+        for v in &self.hist {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Bounds-checked decode of [`LoadStats::to_bytes`].
+    pub fn from_bytes(data: &[u8]) -> Result<LoadStats, String> {
+        let u64_at = |off: usize| -> Result<u64, String> {
+            data.get(off..off + 8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                .ok_or_else(|| "short load-stats message".to_string())
+        };
+        let rank = u64_at(0)?;
+        let owned_agents = u64_at(8)?;
+        let step_nanos = u64_at(16)?;
+        let op_nanos = u64_at(24)?;
+        let bins = data
+            .get(32..36)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .ok_or_else(|| "short load-stats message".to_string())? as usize;
+        // a corrupt count must not trigger a huge allocation
+        if data.len() < 36 + bins * 8 {
+            return Err(format!(
+                "load-stats histogram truncated: {} bins declared, {} bytes left",
+                bins,
+                data.len() - 36
+            ));
+        }
+        let mut hist = Vec::with_capacity(bins);
+        for i in 0..bins {
+            hist.push(u64_at(36 + i * 8)?);
+        }
+        Ok(LoadStats {
+            rank,
+            owned_agents,
+            step_nanos,
+            op_nanos,
+            hist,
+        })
+    }
+}
+
+/// Element-wise sum of the gossiped histograms — the *global* agent
+/// distribution every rank computes identically.
+pub fn sum_hists(all: &[LoadStats]) -> Result<Vec<u64>, String> {
+    let bins = all.first().map(|s| s.hist.len()).unwrap_or(0);
+    let mut total = vec![0u64; bins];
+    for s in all {
+        if s.hist.len() != bins {
+            return Err(format!(
+                "histogram length mismatch: rank {} sent {} bins, expected {bins}",
+                s.rank,
+                s.hist.len()
+            ));
+        }
+        for (t, v) in total.iter_mut().zip(s.hist.iter()) {
+            *t += v;
+        }
+    }
+    Ok(total)
+}
+
+/// Load imbalance ratio: max over ranks of owned agents divided by the
+/// mean (1.0 = perfectly balanced, `ranks` = everything on one rank).
+pub fn imbalance(all: &[LoadStats]) -> f64 {
+    if all.is_empty() {
+        return 1.0;
+    }
+    let max = all.iter().map(|s| s.owned_agents).max().unwrap_or(0);
+    let total: u64 = all.iter().map(|s| s.owned_agents).sum();
+    if total == 0 {
+        return 1.0;
+    }
+    max as f64 * all.len() as f64 / total as f64
+}
+
+/// Split `hist` into `ranks` contiguous bin ranges of near-equal
+/// weight. Returns the `ranks + 1` monotone bin boundaries
+/// (`[0, ..., hist.len()]`); each range is at least `min_bins` wide
+/// (the caller derives `min_bins` from the aura width so no region
+/// ever becomes thinner than one interaction radius). Returns `None`
+/// when the constraint is infeasible — the caller keeps the current
+/// cuts, which is always safe.
+///
+/// Deterministic: a pure function of (`hist`, `ranks`, `min_bins`),
+/// so every rank computes identical cuts from the gossiped global
+/// histogram without any agreement protocol.
+pub fn balanced_cuts(hist: &[u64], ranks: usize, min_bins: usize) -> Option<Vec<usize>> {
+    let bins = hist.len();
+    let min_bins = min_bins.max(1);
+    if ranks == 0 || bins == 0 || ranks * min_bins > bins {
+        return None;
+    }
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        // no load signal: uniform cuts (spacing >= min_bins because
+        // ranks * min_bins <= bins)
+        return Some((0..=ranks).map(|r| r * bins / ranks).collect());
+    }
+    let mut cuts = Vec::with_capacity(ranks + 1);
+    cuts.push(0usize);
+    let mut b = 0usize; // current candidate cut bin
+    let mut prefix = 0u64; // sum of hist[..b]
+    for r in 1..ranks {
+        let target = total * r as u64 / ranks as u64;
+        while b < bins && prefix + hist[b] <= target {
+            prefix += hist[b];
+            b += 1;
+        }
+        // clamp into the feasible window: at least min_bins after the
+        // previous cut, and enough room for the remaining ranks.
+        // lo <= hi holds inductively (see the tests).
+        let lo = cuts[r - 1] + min_bins;
+        let hi = bins - (ranks - r) * min_bins;
+        let cut = b.clamp(lo, hi);
+        while b < cut {
+            prefix += hist[b];
+            b += 1;
+        }
+        while b > cut {
+            b -= 1;
+            prefix -= hist[b];
+        }
+        cuts.push(cut);
+    }
+    cuts.push(bins);
+    Some(cuts)
+}
+
+/// Rebalancing accounting, merged across ranks by the engine (the
+/// Ch. 6 bench counterpart of `ExchangeStats`).
+#[derive(Debug, Default, Clone)]
+pub struct BalanceStats {
+    /// Rebalance phases executed (gossip + cut computation).
+    pub rebalances: u64,
+    /// Rebalances whose cut points actually changed.
+    pub cut_updates: u64,
+    /// Agents moved by the bulk-migration rounds that follow a cut
+    /// update (subset of `ExchangeStats::migrated_agents`).
+    pub rebalance_migrated: u64,
+    /// Multi-hop forwards during bulk-migration rounds (subset of
+    /// `ExchangeStats::forwarded_agents`). Benign for the Fig 6.5
+    /// contract: in-transit agents are never stepped mid-rebalance —
+    /// unlike regular-migration forwards, which are stepped at the
+    /// intermediate rank.
+    pub rebalance_forwarded: u64,
+    /// Bulk-migration rounds executed (multi-hop delivery).
+    pub migration_rounds: u64,
+    /// Gossip traffic sent (LoadStats payloads).
+    pub stats_bytes: u64,
+    /// Imbalance ratio observed at the latest rebalance, *before* the
+    /// cut update took effect (max-rank agents / mean).
+    pub last_imbalance: f64,
+    /// Wall clock of local iterations reported at the latest
+    /// rebalance, summed over ranks (telemetry for the benches).
+    pub step_time: Duration,
+}
+
+impl BalanceStats {
+    pub fn merge(&mut self, other: &BalanceStats) {
+        self.rebalances = self.rebalances.max(other.rebalances);
+        self.cut_updates = self.cut_updates.max(other.cut_updates);
+        self.rebalance_migrated += other.rebalance_migrated;
+        self.rebalance_forwarded += other.rebalance_forwarded;
+        self.migration_rounds = self.migration_rounds.max(other.migration_rounds);
+        self.stats_bytes += other.stats_bytes;
+        // the imbalance ratio is a global quantity every rank computed
+        // from the same gossip — any rank's copy is the value
+        self.last_imbalance = self.last_imbalance.max(other.last_imbalance);
+        self.step_time += other.step_time;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_stats_roundtrip() {
+        let s = LoadStats {
+            rank: 3,
+            owned_agents: 1234,
+            step_nanos: 999,
+            op_nanos: 555,
+            hist: (0..BALANCE_BINS as u64).collect(),
+        };
+        let bytes = s.to_bytes();
+        assert_eq!(LoadStats::from_bytes(&bytes).unwrap(), s);
+        // truncation at any prefix errors, never panics
+        for cut in [0usize, 7, 31, 35, 36, bytes.len() - 1] {
+            assert!(LoadStats::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_bin_count_rejected() {
+        let s = LoadStats {
+            hist: vec![1, 2, 3],
+            ..LoadStats::default()
+        };
+        let mut bytes = s.to_bytes();
+        bytes[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(LoadStats::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn sum_and_imbalance() {
+        let a = LoadStats {
+            rank: 0,
+            owned_agents: 30,
+            hist: vec![10, 20, 0, 0],
+            ..LoadStats::default()
+        };
+        let b = LoadStats {
+            rank: 1,
+            owned_agents: 10,
+            hist: vec![0, 0, 10, 0],
+            ..LoadStats::default()
+        };
+        assert_eq!(sum_hists(&[a.clone(), b.clone()]).unwrap(), vec![10, 20, 10, 0]);
+        // max 30 / mean 20 = 1.5
+        assert!((imbalance(&[a.clone(), b.clone()]) - 1.5).abs() < 1e-12);
+        let short = LoadStats {
+            hist: vec![1],
+            ..LoadStats::default()
+        };
+        assert!(sum_hists(&[a, short]).is_err());
+    }
+
+    #[test]
+    fn balanced_cuts_equalize_weight() {
+        // all weight in the first quarter: cuts must crowd there
+        let mut hist = vec![0u64; 16];
+        for b in hist.iter_mut().take(4) {
+            *b = 100;
+        }
+        let cuts = balanced_cuts(&hist, 4, 1).unwrap();
+        assert_eq!(cuts.len(), 5);
+        assert_eq!((cuts[0], cuts[4]), (0, 16));
+        for w in cuts.windows(2) {
+            assert!(w[0] < w[1], "cuts must be strictly increasing: {cuts:?}");
+        }
+        // each of the 4 ranges holds exactly one loaded bin
+        for r in 0..4 {
+            let weight: u64 = hist[cuts[r]..cuts[r + 1]].iter().sum();
+            assert_eq!(weight, 100, "range {r} of {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_cuts_respect_min_width() {
+        // everything in bin 0: without the floor all cuts would land at 1
+        let mut hist = vec![0u64; 12];
+        hist[0] = 1000;
+        let cuts = balanced_cuts(&hist, 3, 4).unwrap();
+        assert_eq!(cuts, vec![0, 4, 8, 12]);
+        // infeasible floor: refuse rather than produce thin ranges
+        assert!(balanced_cuts(&hist, 3, 5).is_none());
+        assert!(balanced_cuts(&hist, 0, 1).is_none());
+        assert!(balanced_cuts(&[], 2, 1).is_none());
+    }
+
+    #[test]
+    fn balanced_cuts_uniform_when_no_signal() {
+        let cuts = balanced_cuts(&vec![0u64; 256], 4, 8).unwrap();
+        assert_eq!(cuts, vec![0, 64, 128, 192, 256]);
+    }
+
+    #[test]
+    fn balanced_cuts_deterministic_fuzz() {
+        // pseudo-random histograms: cuts are always a valid partition
+        // with the width floor, and recomputing yields the same cuts
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for case in 0..50 {
+            let bins = 32 + (next() % 225) as usize;
+            let ranks = 1 + (next() % 8) as usize;
+            let min_bins = 1 + (next() % 4) as usize;
+            let hist: Vec<u64> = (0..bins).map(|_| next() % 50).collect();
+            if ranks * min_bins > bins {
+                assert!(balanced_cuts(&hist, ranks, min_bins).is_none());
+                continue;
+            }
+            let cuts = balanced_cuts(&hist, ranks, min_bins).unwrap();
+            assert_eq!(cuts.len(), ranks + 1, "case {case}");
+            assert_eq!((cuts[0], cuts[ranks]), (0, bins), "case {case}");
+            for w in cuts.windows(2) {
+                assert!(
+                    w[1] - w[0] >= min_bins,
+                    "case {case}: range thinner than floor: {cuts:?}"
+                );
+            }
+            assert_eq!(
+                balanced_cuts(&hist, ranks, min_bins).unwrap(),
+                cuts,
+                "case {case}: not deterministic"
+            );
+        }
+    }
+
+    #[test]
+    fn balance_stats_merge() {
+        let mut a = BalanceStats {
+            rebalances: 2,
+            cut_updates: 1,
+            rebalance_migrated: 10,
+            rebalance_forwarded: 2,
+            migration_rounds: 3,
+            stats_bytes: 100,
+            last_imbalance: 1.5,
+            step_time: Duration::from_millis(5),
+        };
+        let b = BalanceStats {
+            rebalances: 2,
+            cut_updates: 1,
+            rebalance_migrated: 7,
+            rebalance_forwarded: 1,
+            migration_rounds: 3,
+            stats_bytes: 50,
+            last_imbalance: 1.5,
+            step_time: Duration::from_millis(3),
+        };
+        a.merge(&b);
+        assert_eq!(a.rebalances, 2);
+        assert_eq!(a.rebalance_migrated, 17);
+        assert_eq!(a.rebalance_forwarded, 3);
+        assert_eq!(a.stats_bytes, 150);
+        assert_eq!(a.step_time, Duration::from_millis(8));
+    }
+}

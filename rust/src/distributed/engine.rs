@@ -6,6 +6,14 @@
 //! superstep:
 //!
 //! 1. **ghost removal**  — drop last iteration's aura copies;
+//! 1b. **rebalancing**   — every `Param::dist_rebalance_freq`
+//!    supersteps: gossip per-rank [`LoadStats`] over the transport,
+//!    recompute the partition cut points deterministically from the
+//!    summed histograms (every rank runs the same pure function on the
+//!    same input — see `balance.rs`), then run enough bulk-migration
+//!    rounds (`Partitioner::max_migration_hops`) that every agent
+//!    reaches its new owner *before* the local step — which is what
+//!    keeps results bitwise identical with rebalancing on or off;
 //! 2. **migration**      — agents that crossed a slab border are
 //!    serialized and moved to their new owner (multi-hop: agents whose
 //!    new owner is not a direct neighbor are forwarded through the
@@ -54,10 +62,11 @@
 //! silently corrupted ownership.
 
 use crate::core::agent::{Agent, AgentHandle, AgentUid};
-use crate::core::param::Param;
+use crate::core::param::{DistPartitioner, Param};
 use crate::core::simulation::Simulation;
+use crate::distributed::balance::{imbalance, sum_hists, BalanceStats, LoadStats, BALANCE_BINS};
 use crate::distributed::delta::{deflate, inflate, DeltaCodec};
-use crate::distributed::partition::SlabPartition;
+use crate::distributed::partition::{MortonPartitioner, Partitioner, SlabPartition};
 use crate::distributed::serialize::{tailored, AgentRegistry};
 use crate::distributed::transport::{InProcessTransport, TcpTransport, Transport};
 use std::collections::HashMap;
@@ -65,6 +74,49 @@ use std::time::{Duration, Instant};
 
 const TAG_MIGRATION: u32 = 1;
 const TAG_AURA: u32 = 2;
+/// Load-balance gossip messages (`LoadStats` wire format).
+const TAG_LOAD: u32 = 3;
+
+/// Build the decomposition `Param` selects: movable-cut slabs (the
+/// default) or Morton-SFC ranges, both sized from the model's space
+/// bounds and interaction radius.
+pub fn build_partition(param: &Param, ranks: usize) -> Box<dyn Partitioner> {
+    let aura = param.interaction_radius;
+    let wrap = param.bound_space == crate::core::param::BoundaryCondition::Toroidal;
+    match param.dist_partitioner {
+        DistPartitioner::Slab => Box::new(
+            SlabPartition::new(param.min_bound, param.max_bound, ranks, aura).with_wrap(wrap),
+        ),
+        DistPartitioner::Morton => Box::new(MortonPartitioner::new(
+            param.min_bound,
+            param.max_bound,
+            ranks,
+            aura,
+        )),
+    }
+}
+
+/// One behavior set per agent type, captured from a population — the
+/// template store migrated agents get their behaviors from (behaviors
+/// never cross the wire, §6.2.2). The engine captures this from the
+/// *master* population before splitting it, so every rank can revive
+/// every type — including types its initial region never contained
+/// (a rank whose first TumorCell arrives via rebalancing still needs
+/// the template).
+fn capture_templates_map(
+    rm: &crate::core::resource_manager::ResourceManager,
+) -> HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> {
+    let mut templates: HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> =
+        HashMap::new();
+    rm.for_each_agent(|_, a| {
+        if !a.base().behaviors.is_empty() {
+            templates
+                .entry(a.type_tag())
+                .or_insert_with(|| a.base().behaviors.to_vec());
+        }
+    });
+    templates
+}
 
 /// Aura wire-format version (high nibble of the 1-byte header).
 pub const WIRE_VERSION: u8 = 1;
@@ -117,16 +169,35 @@ impl ExchangeStats {
 /// One rank's state: its simulation plus exchange bookkeeping.
 pub struct RankWorker {
     pub rank: usize,
-    pub partition: SlabPartition,
+    /// The spatial decomposition. Every rank holds its own copy; the
+    /// rebalancing phase applies identical deterministic cut updates
+    /// on all ranks, so the copies never diverge.
+    pub partition: Box<dyn Partitioner>,
     pub sim: Simulation,
     /// Delta-encode aura updates (§6.2.3, wire flag [`FLAG_DELTA`]).
     pub delta_enabled: bool,
     /// DEFLATE the aura payload (wire flag [`FLAG_DEFLATE`]).
     pub deflate_enabled: bool,
+    /// Run the load-balancing phase every N supersteps; 0 = never.
+    pub rebalance_freq: u64,
+    /// Supersteps completed (drives the rebalance cadence; identical
+    /// across ranks by construction).
+    pub iteration: u64,
     pub stats: ExchangeStats,
+    /// Rebalancing accounting (PR 5).
+    pub balance: BalanceStats,
     ghosts: Vec<AgentUid>,
     send_codecs: HashMap<usize, DeltaCodec>,
     recv_codecs: HashMap<usize, DeltaCodec>,
+    /// Wall clock spent in `step_local` since the last rebalance
+    /// (LoadStats telemetry).
+    step_time: Duration,
+    /// `OpTimers::total_nanos` at the last rebalance (interval deltas).
+    last_op_nanos: u64,
+    /// Own stats sampled by `balance_send`, consumed by
+    /// `balance_recv_and_cut` (sampling twice would reset the interval
+    /// timers twice).
+    pending_load: Option<LoadStats>,
     /// Per-tag behavior templates captured from the initial population:
     /// migrated agents arrive without behaviors (behaviors never cross
     /// the wire, §6.2.2) and get the template clone re-attached.
@@ -136,34 +207,36 @@ pub struct RankWorker {
 }
 
 impl RankWorker {
-    pub fn new(rank: usize, partition: SlabPartition, sim: Simulation) -> Self {
+    pub fn new(rank: usize, partition: Box<dyn Partitioner>, sim: Simulation) -> Self {
         let mut worker = RankWorker {
             rank,
             partition,
             sim,
             delta_enabled: false,
             deflate_enabled: false,
+            rebalance_freq: 0,
+            iteration: 0,
             stats: ExchangeStats::default(),
+            balance: BalanceStats::default(),
             ghosts: Vec::new(),
             send_codecs: HashMap::new(),
             recv_codecs: HashMap::new(),
+            step_time: Duration::ZERO,
+            last_op_nanos: 0,
+            pending_load: None,
             templates: HashMap::new(),
         };
         worker.capture_templates();
         worker
     }
 
-    /// Remember one behavior set per agent type from the local
-    /// population (call again if types appear later).
+    /// Merge one behavior set per agent type from the local population
+    /// into the template store (existing entries win; call again if
+    /// types appear later).
     pub fn capture_templates(&mut self) {
-        let templates = &mut self.templates;
-        self.sim.rm.for_each_agent(|_, a| {
-            if !a.base().behaviors.is_empty() {
-                templates
-                    .entry(a.type_tag())
-                    .or_insert_with(|| a.base().behaviors.to_vec());
-            }
-        });
+        for (tag, tpl) in capture_templates_map(&self.sim.rm) {
+            self.templates.entry(tag).or_insert(tpl);
+        }
     }
 
     /// Number of agents this rank owns (ghosts excluded) — an
@@ -178,11 +251,19 @@ impl RankWorker {
             .sum()
     }
 
-    /// One full superstep of this rank (phases 1–4). Sequential
-    /// in-process, rank-per-thread in-process, and TCP multi-process
-    /// execution all drive exactly this sequence.
+    /// One full superstep of this rank (phases 1–4, with the PR 5
+    /// rebalancing phase 1b on its cadence). Sequential in-process,
+    /// rank-per-thread in-process, and TCP multi-process execution all
+    /// drive exactly this sequence.
     pub fn superstep(&mut self, transport: &dyn Transport) -> Result<(), String> {
         self.remove_ghosts();
+        if self.rebalance_due() {
+            self.balance_send(transport)?;
+            let rounds = self.balance_recv_and_cut(transport)?;
+            for _ in 0..rounds {
+                self.balance_round(transport)?;
+            }
+        }
         self.migrate_send(transport)?;
         self.migrate_recv(transport)?;
         self.aura_send(transport)?;
@@ -190,6 +271,121 @@ impl RankWorker {
         self.step_local();
         Ok(())
     }
+
+    /// Does the load-balancing phase run this superstep? Pure function
+    /// of the (rank-identical) superstep counter, so every rank agrees
+    /// without communication. Skips superstep 0 — no load signal yet.
+    pub fn rebalance_due(&self) -> bool {
+        self.rebalance_freq > 0
+            && self.iteration > 0
+            && self.iteration % self.rebalance_freq == 0
+            && self.partition.ranks() > 1
+    }
+
+    /// Phase 1b send half: sample this rank's [`LoadStats`] (owned
+    /// agents, interval timings, the agent histogram over the
+    /// partitioner's order space) and broadcast it to every peer.
+    pub fn balance_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        let stats = self.collect_load_stats();
+        let payload = stats.to_bytes();
+        self.pending_load = Some(stats);
+        self.balance.stats_bytes +=
+            payload.len() as u64 * (self.partition.ranks() as u64 - 1);
+        transport.broadcast(self.rank, TAG_LOAD, &payload)
+    }
+
+    /// Phase 1b receive half: collect every peer's stats, recompute the
+    /// cut points deterministically from the summed histograms, and
+    /// return how many bulk-migration rounds must follow (0 when the
+    /// cuts did not move). All ranks compute the same cuts and the same
+    /// round count from the same gossip — no agreement protocol.
+    pub fn balance_recv_and_cut(&mut self, transport: &dyn Transport) -> Result<usize, String> {
+        let ranks = self.partition.ranks();
+        let mut all: Vec<LoadStats> = Vec::with_capacity(ranks);
+        for peer in 0..ranks {
+            if peer == self.rank {
+                let own = self
+                    .pending_load
+                    .take()
+                    .ok_or("balance_recv_and_cut without a prior balance_send")?;
+                all.push(own);
+                continue;
+            }
+            let bytes = transport.recv(self.rank, peer, TAG_LOAD)?;
+            let s = LoadStats::from_bytes(&bytes)?;
+            if s.rank as usize != peer {
+                return Err(format!(
+                    "load gossip rank mismatch: {} claimed by peer {peer}",
+                    s.rank
+                ));
+            }
+            all.push(s);
+        }
+        self.balance.rebalances += 1;
+        self.balance.last_imbalance = imbalance(&all);
+        self.balance.step_time = Duration::from_nanos(all[self.rank].step_nanos);
+        let hist = sum_hists(&all)?;
+        if self.partition.repartition(&hist) {
+            self.balance.cut_updates += 1;
+            // deliberately the worst-case round count: an agent's
+            // current owner reflects its *pre-move* position, so the
+            // exact hop need is position-history-dependent and a
+            // tighter bound computed from the cut delta alone could
+            // under-deliver (breaking the bitwise on/off identity
+            // silently). Surplus rounds only cost empty column scans.
+            Ok(self.partition.max_migration_hops().max(1))
+        } else {
+            Ok(0)
+        }
+    }
+
+    /// One bulk-migration round after a cut update: a full
+    /// send/receive migration pass. Multi-hop topologies run
+    /// `max_migration_hops` rounds so every agent reaches its new
+    /// owner before the local step — in-flight agents are *not*
+    /// stepped at intermediate ranks, which is what preserves the
+    /// bitwise on/off-balancing identity.
+    pub fn balance_round(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        self.balance_round_send(transport)?;
+        self.migrate_recv(transport)
+    }
+
+    /// Send half of [`RankWorker::balance_round`] plus its accounting
+    /// (the sequential driver interleaves all sends before any recv).
+    pub fn balance_round_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+        let (migrated, forwarded) = (self.stats.migrated_agents, self.stats.forwarded_agents);
+        self.migrate_send(transport)?;
+        self.balance.rebalance_migrated += self.stats.migrated_agents - migrated;
+        self.balance.rebalance_forwarded += self.stats.forwarded_agents - forwarded;
+        self.balance.migration_rounds += 1;
+        Ok(())
+    }
+
+    /// Sample this rank's load telemetry: agent histogram over the
+    /// partitioner's 1-D order space plus interval timings.
+    fn collect_load_stats(&mut self) -> LoadStats {
+        self.sim.rm.sync_columns_if_dirty(&self.sim.pool);
+        let mut hist = vec![0u64; BALANCE_BINS];
+        let mut owned = 0u64;
+        let partition = &self.partition;
+        self.sim.rm.for_each_owned_position(|_, pos| {
+            owned += 1;
+            hist[partition.load_bin(pos, BALANCE_BINS)] += 1;
+        });
+        let op_total = self.sim.timers.total_nanos();
+        let op_nanos = op_total.saturating_sub(self.last_op_nanos);
+        self.last_op_nanos = op_total;
+        let step_nanos = self.step_time.as_nanos() as u64;
+        self.step_time = Duration::ZERO;
+        LoadStats {
+            rank: self.rank as u64,
+            owned_agents: owned,
+            step_nanos,
+            op_nanos,
+            hist,
+        }
+    }
+
 
     /// Phase 1: drop last iteration's ghosts.
     pub fn remove_ghosts(&mut self) {
@@ -234,7 +430,7 @@ impl RankWorker {
                 if owner == self.rank {
                     continue;
                 }
-                let target = if neighbors.contains(&owner) {
+                let target = if neighbors.contains(owner) {
                     owner
                 } else {
                     self.stats.forwarded_agents += 1;
@@ -249,7 +445,7 @@ impl RankWorker {
         // empty) to every neighbor so the receive side can block.
         let mut outgoing: Vec<(usize, Vec<u8>)> = Vec::with_capacity(neighbors.len());
         let mut removed_uids: Vec<AgentUid> = Vec::new();
-        for &nb in &neighbors {
+        for nb in neighbors {
             let (handles, uids) = leaving.remove(&nb).unwrap_or_default();
             let t = Instant::now();
             let buf = tailored::serialize_batch_from_columns(rm, &handles);
@@ -319,7 +515,7 @@ impl RankWorker {
                 }
             }
         }
-        for &nb in &neighbors {
+        for nb in neighbors {
             let mut members = per_target.remove(&nb).unwrap_or_default();
             members.sort_unstable_by_key(|&(uid, _)| uid); // deterministic message content
             let t = Instant::now();
@@ -432,9 +628,15 @@ impl RankWorker {
         Ok(())
     }
 
-    /// Phase 4: the local Algorithm-8 iteration.
+    /// Phase 4: the local Algorithm-8 iteration. Timed into the
+    /// LoadStats interval, and advances the superstep counter (the
+    /// rebalance cadence) — every execution mode runs this exactly
+    /// once per superstep.
     pub fn step_local(&mut self) {
+        let t = Instant::now();
         self.sim.step();
+        self.step_time += t.elapsed();
+        self.iteration += 1;
     }
 }
 
@@ -469,11 +671,11 @@ impl DistributedEngine {
         let deflate = param.dist_aura_deflate;
         // master population (single namespace uids)
         let mut master = builder(param.clone());
-        let aura = master.param.interaction_radius;
-        let wrap = master.param.bound_space == crate::core::param::BoundaryCondition::Toroidal;
-        let partition =
-            SlabPartition::new(master.param.min_bound, master.param.max_bound, ranks, aura)
-                .with_wrap(wrap);
+        // the builder may have re-bounded the space: size the
+        // decomposition from the *built* parameters
+        let partition = build_partition(&master.param, ranks);
+        let rebalance_freq = master.param.dist_rebalance_freq;
+        let templates = capture_templates_map(&master.rm);
         let agents = master.rm.drain_all();
         let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
 
@@ -487,6 +689,7 @@ impl DistributedEngine {
                 let mut w = RankWorker::new(r, partition.clone(), sim);
                 w.delta_enabled = delta;
                 w.deflate_enabled = deflate;
+                w.rebalance_freq = rebalance_freq;
                 w
             })
             .collect();
@@ -495,7 +698,12 @@ impl DistributedEngine {
             workers[r].sim.rm.commit_additions(vec![agent]);
         }
         for w in &mut workers {
-            w.capture_templates(); // population arrived after new()
+            // master-wide templates: a rank must be able to revive
+            // types it does not initially own (rebalancing delivers
+            // them later); the local capture is a defensive merge for
+            // types the builder added per rank.
+            w.templates = templates.clone();
+            w.capture_templates();
         }
         DistributedEngine {
             workers,
@@ -538,6 +746,27 @@ impl DistributedEngine {
             for w in &mut self.workers {
                 w.remove_ghosts();
             }
+            // phase 1b, interleaved: all sends must precede any recv so
+            // the single thread never blocks on an unsent message. The
+            // cadence and the round count are rank-identical pure
+            // functions, so every worker takes the same branch.
+            if self.workers.iter().any(|w| w.rebalance_due()) {
+                for w in &mut self.workers {
+                    w.balance_send(t).expect("balance send");
+                }
+                let mut rounds = 0usize;
+                for w in &mut self.workers {
+                    rounds = w.balance_recv_and_cut(t).expect("balance cut");
+                }
+                for _ in 0..rounds {
+                    for w in &mut self.workers {
+                        w.balance_round_send(t).expect("rebalance migrate send");
+                    }
+                    for w in &mut self.workers {
+                        w.migrate_recv(t).expect("rebalance migrate recv");
+                    }
+                }
+            }
             for w in &mut self.workers {
                 w.migrate_send(t).expect("migrate send");
             }
@@ -568,6 +797,14 @@ impl DistributedEngine {
         self.workers.iter().map(|w| w.owned_agents()).sum()
     }
 
+    /// Enable load balancing every `freq` supersteps on all ranks
+    /// (0 disables).
+    pub fn set_rebalance_freq(&mut self, freq: u64) {
+        for w in &mut self.workers {
+            w.rebalance_freq = freq;
+        }
+    }
+
     /// Aggregated exchange statistics.
     pub fn stats(&self) -> ExchangeStats {
         let mut total = ExchangeStats::default();
@@ -575,6 +812,51 @@ impl DistributedEngine {
             total.merge(&w.stats);
         }
         total
+    }
+
+    /// Aggregated rebalancing statistics (PR 5).
+    pub fn balance_stats(&self) -> BalanceStats {
+        let mut total = BalanceStats::default();
+        for w in &self.workers {
+            total.merge(&w.balance);
+        }
+        total
+    }
+
+    /// Owned (non-ghost) agents per rank — the imbalance signal the
+    /// benches report.
+    pub fn owned_per_rank(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.owned_agents()).collect()
+    }
+
+    /// Out-of-band population edit between supersteps: insert `agent`
+    /// (UID preassigned by the caller, disjoint from every rank's
+    /// strided namespace) into the rank owning its position. The
+    /// rebalancing-storm tests drive deterministic births through this
+    /// so multi-rank trajectories stay comparable to the 1-rank run.
+    pub fn inject_agent(&mut self, agent: Box<dyn Agent>) {
+        assert_ne!(agent.uid(), 0, "inject_agent requires a preassigned uid");
+        let r = self.workers[0].partition.rank_of(agent.position());
+        self.workers[r].sim.rm.commit_additions(vec![agent]);
+    }
+
+    /// Out-of-band removal by UID from whichever rank owns the agent;
+    /// ghost copies fall out at the next superstep's ghost removal.
+    /// Returns whether an owned agent was removed.
+    pub fn remove_agent(&mut self, uid: AgentUid) -> bool {
+        for w in &mut self.workers {
+            let owned = w
+                .sim
+                .rm
+                .get_by_uid(uid)
+                .map(|a| !a.base().is_ghost)
+                .unwrap_or(false);
+            if owned {
+                w.sim.rm.commit_removals(vec![uid]);
+                return true;
+            }
+        }
+        false
     }
 
     /// Snapshot of all owned agents as (uid, position, diameter),
@@ -634,11 +916,9 @@ pub fn run_tcp_worker(
     // needed for setup.
     let mut master = crate::models::build_named(model, param.clone())
         .ok_or_else(|| format!("unknown model {model}"))?;
-    let aura = master.param.interaction_radius;
-    let wrap = master.param.bound_space == crate::core::param::BoundaryCondition::Toroidal;
-    let partition =
-        SlabPartition::new(master.param.min_bound, master.param.max_bound, ranks, aura)
-            .with_wrap(wrap);
+    let partition = build_partition(&master.param, ranks);
+    let rebalance_freq = master.param.dist_rebalance_freq;
+    let templates = capture_templates_map(&master.rm);
     let agents = master.rm.drain_all();
     let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
 
@@ -658,6 +938,8 @@ pub fn run_tcp_worker(
     let mut worker = RankWorker::new(rank, partition, sim);
     worker.delta_enabled = delta;
     worker.deflate_enabled = deflate;
+    worker.rebalance_freq = rebalance_freq;
+    worker.templates = templates; // master-wide (see capture_templates_map)
     let start = Instant::now();
     for _ in 0..iterations {
         worker.superstep(&transport)?;
@@ -685,6 +967,7 @@ mod tests {
     use crate::core::behavior::FnBehavior;
     use crate::core::math::Real3;
     use crate::core::param::{BoundaryCondition, ExecutionContextMode};
+    use crate::core::random::Rng;
     use crate::models::epidemiology::{self, SirParams};
 
     fn sir_param(threads: usize) -> Param {
@@ -715,7 +998,8 @@ mod tests {
         assert_eq!(engine.num_agents(), 310);
         // each rank owns only agents in its slab
         for w in &engine.workers {
-            let (lo, hi) = w.partition.slab_of(w.rank);
+            let cuts = w.partition.cut_points();
+            let (lo, hi) = (cuts[w.rank], cuts[w.rank + 1]);
             w.sim.rm.for_each_agent(|_, a| {
                 if !a.base().is_ghost {
                     assert!(a.position().x() >= lo - 1e-9 && a.position().x() < hi + 1e-9);
@@ -862,7 +1146,8 @@ mod tests {
             w.migrate_recv(&t).unwrap();
         }
         for w in &engine.workers {
-            let (lo, hi) = w.partition.slab_of(w.rank);
+            let cuts = w.partition.cut_points();
+            let (lo, hi) = (cuts[w.rank], cuts[w.rank + 1]);
             w.sim.rm.for_each_agent(|_, a| {
                 if !a.base().is_ghost {
                     let x = a.position().x();
@@ -893,8 +1178,8 @@ mod tests {
             }
         });
         assert_ne!(uid, 0);
-        let (lo2, hi2) = engine.workers[0].partition.slab_of(2);
-        let target_x = 0.5 * (lo2 + hi2);
+        let cuts = engine.workers[0].partition.cut_points();
+        let target_x = 0.5 * (cuts[2] + cuts[3]);
         {
             let w0 = &mut engine.workers[0];
             let h = w0.sim.rm.lookup(uid).unwrap();
@@ -987,6 +1272,137 @@ mod tests {
     }
 
     #[test]
+    fn rebalancing_preserves_bitwise_results() {
+        // the PR 5 extension of the Fig 6.5 contract: simulation
+        // results are bitwise identical with dist_rebalance_freq on vs
+        // off at 1/2/4 ranks, for both decompositions — rebalancing
+        // only moves ownership, never trajectories
+        let mut shared = builder(sir_param(1));
+        shared.simulate(10);
+        let expect = simulation_snapshot(&shared);
+        for partitioner in [DistPartitioner::Slab, DistPartitioner::Morton] {
+            for ranks in [1usize, 2, 4] {
+                let mut p = sir_param(1);
+                p.dist_partitioner = partitioner;
+                p.dist_rebalance_freq = 3;
+                let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
+                engine.simulate(10);
+                assert_eq!(
+                    engine.num_agents(),
+                    310,
+                    "{partitioner:?} ranks={ranks}: agents lost"
+                );
+                assert_eq!(
+                    engine.state_snapshot(),
+                    expect,
+                    "{partitioner:?} ranks={ranks}: balancing changed results"
+                );
+                if ranks > 1 {
+                    let bs = engine.balance_stats();
+                    assert!(
+                        bs.rebalances >= 3,
+                        "{partitioner:?} ranks={ranks}: {bs:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalancing_threaded_matches_sequential() {
+        for partitioner in [DistPartitioner::Slab, DistPartitioner::Morton] {
+            let run = |threaded: bool| {
+                let mut p = sir_param(1);
+                p.dist_threaded_ranks = threaded;
+                p.dist_rebalance_freq = 2;
+                p.dist_partitioner = partitioner;
+                let mut engine = DistributedEngine::new(&builder, p, 4, 1);
+                engine.simulate(8);
+                (engine.state_snapshot(), engine.balance_stats().rebalances)
+            };
+            let (threaded, ra) = run(true);
+            let (sequential, rb) = run(false);
+            assert_eq!(threaded, sequential, "{partitioner:?}");
+            assert_eq!(ra, rb, "{partitioner:?}");
+            assert!(ra >= 3, "{partitioner:?}: rebalances {ra}");
+        }
+    }
+
+    /// 200 static agents clustered in x ∈ [0, 10) of a 100-wide space:
+    /// the uniform slabs put everything on rank 0; one rebalance must
+    /// spread ownership across all 4 ranks via multi-hop bulk
+    /// migration.
+    fn clustered_builder(p: Param) -> Simulation {
+        let mut p = p;
+        p.min_bound = 0.0;
+        p.max_bound = 100.0;
+        p.interaction_radius = 1.0;
+        p.box_length = Some(4.0);
+        let mut sim = Simulation::new(p);
+        sim.remove_agent_op("mechanical_forces");
+        sim.remove_standalone_op("diffusion");
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let pos = Real3::new(
+                rng.uniform(0.0, 10.0),
+                rng.uniform(0.0, 100.0),
+                rng.uniform(0.0, 100.0),
+            );
+            sim.add_agent(Box::new(SphericalAgent::new(pos)));
+        }
+        sim
+    }
+
+    #[test]
+    fn rebalancing_equalizes_clustered_population() {
+        let mut p = sir_param(1);
+        p.dist_rebalance_freq = 2;
+        let mut engine = DistributedEngine::new(&clustered_builder, p, 4, 1);
+        let owned = engine.owned_per_rank();
+        assert_eq!(owned[0], 200, "uniform slabs leave all load on rank 0");
+        engine.simulate(3); // the rebalance fires before superstep 3
+        let owned = engine.owned_per_rank();
+        assert_eq!(owned.iter().sum::<usize>(), 200, "conservation: {owned:?}");
+        let max = *owned.iter().max().unwrap();
+        assert!(max <= 100, "rebalance must spread the cluster: {owned:?}");
+        assert!(owned.iter().all(|&n| n > 0), "every rank gets load: {owned:?}");
+        let bs = engine.balance_stats();
+        assert!(bs.cut_updates >= 1, "{bs:?}");
+        assert!(bs.rebalance_migrated > 0, "{bs:?}");
+        assert!(bs.migration_rounds >= 3, "chain needs multi-hop rounds: {bs:?}");
+        assert!(
+            bs.last_imbalance > 3.9,
+            "imbalance telemetry must show the 4.0 skew: {}",
+            bs.last_imbalance
+        );
+        assert_eq!(bs.rebalance_migrated, engine.stats().migrated_agents);
+    }
+
+    #[test]
+    fn inject_and_remove_agents_out_of_band() {
+        let mut p = sir_param(1);
+        p.dist_rebalance_freq = 2;
+        let mut engine = DistributedEngine::new(&clustered_builder, p, 2, 1);
+        let mut a = SphericalAgent::new(Real3::new(80.0, 50.0, 50.0));
+        a.base.uid = 1_000_001;
+        engine.inject_agent(Box::new(a));
+        assert_eq!(engine.num_agents(), 201);
+        // landed on the rank owning x = 80
+        let owner = engine.workers[0].partition.rank_of(Real3::new(80.0, 50.0, 50.0));
+        assert!(engine.workers[owner]
+            .sim
+            .rm
+            .get_by_uid(1_000_001)
+            .is_some());
+        engine.simulate(3);
+        assert_eq!(engine.num_agents(), 201);
+        assert!(engine.remove_agent(1_000_001));
+        assert!(!engine.remove_agent(1_000_001), "already removed");
+        engine.simulate(2);
+        assert_eq!(engine.num_agents(), 200);
+    }
+
+    #[test]
     fn tcp_two_ranks_delta_deflate_end_to_end() {
         AgentRegistry::register_builtins();
         let iterations = 6u64;
@@ -1006,16 +1422,7 @@ mod tests {
                 // return its snapshot: build the same master population
                 // deterministically and keep only this rank's slab
                 let mut master = builder(sir_param(1));
-                let aura = master.param.interaction_radius;
-                let wrap =
-                    master.param.bound_space == BoundaryCondition::Toroidal;
-                let partition = SlabPartition::new(
-                    master.param.min_bound,
-                    master.param.max_bound,
-                    2,
-                    aura,
-                )
-                .with_wrap(wrap);
+                let partition = build_partition(&master.param, 2);
                 let agents = master.rm.drain_all();
                 let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
                 let mut sim = builder(sir_param(1));
@@ -1029,6 +1436,9 @@ mod tests {
                 let mut worker = RankWorker::new(rank, partition, sim);
                 worker.delta_enabled = true;
                 worker.deflate_enabled = true;
+                // exercise the LoadStats gossip + cut update over TCP;
+                // balancing never changes the simulation results
+                worker.rebalance_freq = 3;
                 for _ in 0..iterations {
                     worker.superstep(&transport).unwrap();
                 }

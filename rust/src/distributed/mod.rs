@@ -4,11 +4,17 @@
 //! * [`serialize`] — tailored agent serialization + the reflection
 //!   baseline (§6.2.2, §6.3.10)
 //! * [`delta`]     — delta encoding of aura updates (§6.2.3, §6.3.11)
-//! * [`partition`] — spatial decomposition across ranks (§6.2.1)
+//! * [`partition`] — spatial decomposition across ranks (§6.2.1): the
+//!   `Partitioner` trait, movable-cut slabs, the Morton-SFC
+//!   decomposition
+//! * [`balance`]   — dynamic load balancing (PR 5): per-rank
+//!   `LoadStats` telemetry, the deterministic cut-point computation,
+//!   rebalance accounting
 //! * [`transport`] — in-process + TCP message transports (MPI stand-in)
 //! * [`engine`]    — the distributed scheduler: migration, aura
-//!   exchange, per-rank iteration (§6.2.1, Fig 6.1)
+//!   exchange, rebalancing, per-rank iteration (§6.2.1, Fig 6.1)
 
+pub mod balance;
 pub mod delta;
 pub mod engine;
 pub mod partition;

@@ -2,16 +2,199 @@
 //!
 //! TeraAgent decomposes the simulation space into per-rank regions;
 //! agents near a region border (the *aura*, one interaction radius
-//! wide) are mirrored to the neighboring rank each iteration. This
-//! module implements a 1D slab decomposition along x — the pattern
-//! that determines migration and aura membership; higher-dimensional
-//! decompositions only change the neighbor-rank set.
+//! wide) are mirrored to the neighboring rank each iteration. PR 5
+//! abstracts the decomposition behind the [`Partitioner`] trait so the
+//! engine, serializer and transport are independent of the concrete
+//! geometry, and adds the load-balancing surface (`load_bin` /
+//! `repartition` / `cut_points`) the rebalancing superstep phase is
+//! built on (see `balance.rs`). Two implementations:
+//!
+//! * [`SlabPartition`] — 1-D slabs along x with *movable* cut points:
+//!   uniform at startup, re-cut by the balancer so each slab holds a
+//!   near-equal share of the agents (never thinner than the aura).
+//!   Neighbor topology is the rank chain (a ring under toroidal
+//!   wrap), so migration may be multi-hop.
+//! * [`MortonPartitioner`] — the space-filling-curve decomposition:
+//!   the space is cut into cells at least one aura wide, the cells
+//!   are ordered along the Morton curve of `mem/morton.rs`, and each
+//!   rank owns one contiguous SFC range. Ranges stay spatially
+//!   compact under the curve's locality, aura membership is resolved
+//!   per neighboring cell, and every rank pair exchanges directly
+//!   (single-hop migration).
+//!
+//! Neighbor sets and aura targets are returned as [`RankList`] — a
+//! fixed-capacity inline array — so the per-agent exchange membership
+//! scan allocates nothing (the previous `Vec` return allocated twice
+//! per agent per superstep).
 
 use crate::core::math::Real3;
+use crate::distributed::balance::balanced_cuts;
+use crate::mem::morton::morton_seq_of;
 use crate::Real;
 
+/// Capacity of [`RankList`]: the most neighbor ranks any partitioner
+/// produces (the SFC partitioner's complete exchange graph needs
+/// `ranks - 1`).
+pub const MAX_RANK_NEIGHBORS: usize = 16;
+
+/// A small set of rank ids stored inline — the allocation-free return
+/// type of [`Partitioner::neighbors`] / [`Partitioner::aura_targets`],
+/// called once per agent per superstep on the exchange hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankList {
+    ranks: [usize; MAX_RANK_NEIGHBORS],
+    len: usize,
+}
+
+impl RankList {
+    pub fn new() -> RankList {
+        RankList {
+            ranks: [0; MAX_RANK_NEIGHBORS],
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, rank: usize) {
+        assert!(self.len < MAX_RANK_NEIGHBORS, "RankList overflow");
+        self.ranks[self.len] = rank;
+        self.len += 1;
+    }
+
+    /// Insert at the front (keeps ascending rank order when the wrap
+    /// neighbor precedes the chain neighbors).
+    pub fn insert_front(&mut self, rank: usize) {
+        assert!(self.len < MAX_RANK_NEIGHBORS, "RankList overflow");
+        self.ranks.copy_within(0..self.len, 1);
+        self.ranks[0] = rank;
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, rank: usize) -> bool {
+        self.ranks[..self.len].contains(&rank)
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.ranks[..self.len]
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Default for RankList {
+    fn default() -> Self {
+        RankList::new()
+    }
+}
+
+impl IntoIterator for RankList {
+    type Item = usize;
+    type IntoIter = RankListIter;
+
+    fn into_iter(self) -> RankListIter {
+        RankListIter { list: self, pos: 0 }
+    }
+}
+
+/// By-value iterator over a [`RankList`] (the list is `Copy`).
+pub struct RankListIter {
+    list: RankList,
+    pos: usize,
+}
+
+impl Iterator for RankListIter {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.pos < self.list.len {
+            let r = self.list.ranks[self.pos];
+            self.pos += 1;
+            Some(r)
+        } else {
+            None
+        }
+    }
+}
+
+/// A spatial decomposition of the simulation space across ranks. The
+/// distributed engine is written purely against this trait; the
+/// concrete geometry decides ownership, ghost mirroring and message
+/// topology. Invariants every implementation upholds:
+///
+/// * `rank_of` is **total**: every position (in range or not) maps to
+///   exactly one rank in `0..ranks`.
+/// * `aura_targets(pos, owner)` never contains `owner`, and contains
+///   every rank owning space within one aura of `pos` (conservative
+///   supersets are allowed — extra ghosts cost bandwidth, missing
+///   ghosts cost correctness).
+/// * `neighbors` is symmetric (`b ∈ neighbors(a) ⇔ a ∈ neighbors(b)`)
+///   and **independent of the cut points**, so the message topology
+///   survives repartitioning unchanged.
+/// * `repartition` is a pure function of the cut state and the global
+///   histogram — every rank computes identical new cuts from the
+///   gossiped stats (the Fig 6.5 determinism contract).
+pub trait Partitioner: std::fmt::Debug + Send + Sync {
+    /// Short name for bench/report rows.
+    fn name(&self) -> &'static str;
+
+    fn ranks(&self) -> usize;
+
+    /// Owning rank of a position (total, clamped to the space).
+    fn rank_of(&self, pos: Real3) -> usize;
+
+    /// Ranks that need a ghost copy of an agent at `pos` owned by
+    /// `owner_rank`.
+    fn aura_targets(&self, pos: Real3, owner_rank: usize) -> RankList;
+
+    /// Message-exchange peers of `rank` (migration + aura recv set).
+    fn neighbors(&self, rank: usize) -> RankList;
+
+    /// Neighbor of `from` to forward an agent owned by non-neighbor
+    /// rank `owner` to (multi-hop migration).
+    fn route_toward(&self, from: usize, owner: usize) -> usize;
+
+    /// The `ranks + 1` monotone region boundaries in the partitioner's
+    /// 1-D order space (slab x coordinates; SFC sequence positions).
+    fn cut_points(&self) -> Vec<f64>;
+
+    /// Histogram bin of `pos` in the same 1-D order space the cuts
+    /// live in (`bin < bins`); feeds the `LoadStats` gossip.
+    fn load_bin(&self, pos: Real3, bins: usize) -> usize;
+
+    /// Recompute the cut points from the summed gossip histogram.
+    /// Returns whether the cuts changed (identical on every rank —
+    /// the bulk-migration round count depends on it).
+    fn repartition(&mut self, hist: &[u64]) -> bool;
+
+    /// Upper bound on the hops any agent needs to reach its owner
+    /// after a repartition — the bulk-migration round count.
+    fn max_migration_hops(&self) -> usize;
+
+    fn clone_box(&self) -> Box<dyn Partitioner>;
+}
+
+impl Clone for Box<dyn Partitioner> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// --------------------------------------------------------------------
+// 1-D slab partition
+// --------------------------------------------------------------------
+
 /// 1D slab partition of `[min, max)` along the x axis into `ranks`
-/// equal slabs.
+/// slabs with movable cut points (uniform until the balancer re-cuts
+/// them).
 #[derive(Debug, Clone)]
 pub struct SlabPartition {
     pub min: Real,
@@ -25,17 +208,24 @@ pub struct SlabPartition {
     /// interact across the wrap either, and the distributed engine must
     /// reproduce its semantics exactly (Fig 6.5).
     pub wrap: bool,
+    /// `ranks + 1` ascending slab boundaries; `cuts[0] == min`,
+    /// `cuts[ranks] == max`. Rank `r` owns `[cuts[r], cuts[r+1])`.
+    pub cuts: Vec<Real>,
 }
 
 impl SlabPartition {
     pub fn new(min: Real, max: Real, ranks: usize, aura: Real) -> Self {
         assert!(max > min && ranks >= 1 && aura >= 0.0);
+        let w = (max - min) / ranks as Real;
+        let mut cuts: Vec<Real> = (0..=ranks).map(|r| min + r as Real * w).collect();
+        cuts[ranks] = max; // exact upper boundary
         SlabPartition {
             min,
             max,
             ranks,
             aura,
             wrap: false,
+            cuts,
         }
     }
 
@@ -44,30 +234,25 @@ impl SlabPartition {
         self
     }
 
-    pub fn slab_width(&self) -> Real {
-        (self.max - self.min) / self.ranks as Real
-    }
-
     /// Owning rank of a position (clamped to the valid range).
     pub fn rank_of(&self, pos: Real3) -> usize {
-        let rel = (pos.x() - self.min) / self.slab_width();
-        (rel.floor().max(0.0) as usize).min(self.ranks - 1)
+        // number of interior cuts <= x == the owning slab index; out of
+        // range clamps to the first/last slab automatically
+        let x = pos.x();
+        self.cuts[1..self.ranks].partition_point(|&c| c <= x)
     }
 
     /// Slab interval `[lo, hi)` of a rank.
     pub fn slab_of(&self, rank: usize) -> (Real, Real) {
-        let w = self.slab_width();
-        (
-            self.min + rank as Real * w,
-            self.min + (rank + 1) as Real * w,
-        )
+        (self.cuts[rank], self.cuts[rank + 1])
     }
 
     /// Neighbor ranks whose aura this position falls into (i.e. ranks
     /// that need a ghost copy of an agent at `pos` owned by
-    /// `owner_rank`).
-    pub fn aura_targets(&self, pos: Real3, owner_rank: usize) -> Vec<usize> {
-        let mut out = Vec::new();
+    /// `owner_rank`). The balancer keeps every slab at least one aura
+    /// wide, so only the two adjacent slabs ever qualify.
+    pub fn aura_targets(&self, pos: Real3, owner_rank: usize) -> RankList {
+        let mut out = RankList::new();
         let (lo, hi) = self.slab_of(owner_rank);
         if owner_rank > 0 && pos.x() < lo + self.aura {
             out.push(owner_rank - 1);
@@ -104,8 +289,8 @@ impl SlabPartition {
 
     /// All neighbor ranks of `rank` (slab decomposition: at most 2;
     /// wrap adds the opposite end for toroidal migration).
-    pub fn neighbors(&self, rank: usize) -> Vec<usize> {
-        let mut out = Vec::new();
+    pub fn neighbors(&self, rank: usize) -> RankList {
+        let mut out = RankList::new();
         if rank > 0 {
             out.push(rank - 1);
         }
@@ -116,16 +301,341 @@ impl SlabPartition {
             if rank == 0 {
                 out.push(self.ranks - 1);
             } else if rank == self.ranks - 1 {
-                out.insert(0, 0);
+                out.insert_front(0);
             }
         }
         out
     }
 }
 
+impl Partitioner for SlabPartition {
+    fn name(&self) -> &'static str {
+        "slab"
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn rank_of(&self, pos: Real3) -> usize {
+        SlabPartition::rank_of(self, pos)
+    }
+
+    fn aura_targets(&self, pos: Real3, owner_rank: usize) -> RankList {
+        SlabPartition::aura_targets(self, pos, owner_rank)
+    }
+
+    fn neighbors(&self, rank: usize) -> RankList {
+        SlabPartition::neighbors(self, rank)
+    }
+
+    fn route_toward(&self, from: usize, owner: usize) -> usize {
+        SlabPartition::route_toward(self, from, owner)
+    }
+
+    fn cut_points(&self) -> Vec<f64> {
+        self.cuts.clone()
+    }
+
+    fn load_bin(&self, pos: Real3, bins: usize) -> usize {
+        let t = (pos.x() - self.min) / (self.max - self.min);
+        // negative t saturates to bin 0 under the `as` cast
+        ((t * bins as Real) as usize).min(bins - 1)
+    }
+
+    fn repartition(&mut self, hist: &[u64]) -> bool {
+        let bins = hist.len();
+        if bins == 0 || self.ranks < 2 {
+            return false;
+        }
+        let bin_w = (self.max - self.min) / bins as Real;
+        // keep every slab strictly wider than the aura: an agent can
+        // then never sit within one aura of a non-adjacent slab, which
+        // is what limits ghosts to the two chain neighbors
+        let min_bins = ((self.aura / bin_w).ceil() as usize).saturating_add(1);
+        let bin_cuts = match balanced_cuts(hist, self.ranks, min_bins) {
+            Some(c) => c,
+            None => return false, // infeasible: keep the current cuts
+        };
+        let mut cuts = Vec::with_capacity(self.ranks + 1);
+        for (i, &b) in bin_cuts.iter().enumerate() {
+            cuts.push(if i == 0 {
+                self.min
+            } else if i == self.ranks {
+                self.max
+            } else {
+                self.min + b as Real * bin_w
+            });
+        }
+        if cuts == self.cuts {
+            return false;
+        }
+        self.cuts = cuts;
+        true
+    }
+
+    fn max_migration_hops(&self) -> usize {
+        if self.ranks <= 1 {
+            0
+        } else if self.wrap && self.ranks > 2 {
+            self.ranks / 2
+        } else {
+            self.ranks - 1
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(self.clone())
+    }
+}
+
+// --------------------------------------------------------------------
+// Morton space-filling-curve partition
+// --------------------------------------------------------------------
+
+/// SFC decomposition: the cubic space is cut into `dim³` cells of side
+/// `cell >= aura`, the cells are ordered along the Morton curve
+/// (`mem/morton.rs`), and rank `r` owns the cells whose sequence
+/// position falls in `[cuts[r], cuts[r+1])`. Because any point within
+/// one aura of `pos` lies in the 3×3×3 cell neighborhood around
+/// `pos`'s cell (cell side >= aura), aura membership is an exact
+/// 27-cell ownership probe — no assumption about range shapes.
+///
+/// The exchange graph is complete (`ranks - 1` peers), so migration is
+/// always single-hop: after any repartition one bulk round delivers
+/// every agent, and `route_toward` is never exercised.
+#[derive(Debug, Clone)]
+pub struct MortonPartitioner {
+    min: Real,
+    max: Real,
+    ranks: usize,
+    aura: Real,
+    /// cell side length (>= aura)
+    cell: Real,
+    /// cells per axis
+    dim: usize,
+    /// flat cell index (x-major) -> Morton sequence position
+    seq_of: Vec<u32>,
+    ncells: usize,
+    /// `ranks + 1` ascending sequence-position boundaries
+    cuts: Vec<usize>,
+}
+
+impl MortonPartitioner {
+    pub fn new(min: Real, max: Real, ranks: usize, aura: Real) -> Self {
+        assert!(max > min && ranks >= 1 && aura >= 0.0);
+        assert!(
+            ranks <= MAX_RANK_NEIGHBORS + 1,
+            "MortonPartitioner: complete exchange graph capped at {} ranks",
+            MAX_RANK_NEIGHBORS + 1
+        );
+        let len = max - min;
+        // cell side: at least the aura (27-cell completeness), at
+        // least len/32 (bounds the cell count at 32³), at most len
+        let cell = (len / 32.0).max(aura).max(1e-9).min(len);
+        let dim = ((len / cell).ceil() as usize).max(1);
+        let seq_of = morton_seq_of([dim; 3]);
+        let ncells = dim * dim * dim;
+        // fewer cells than ranks (aura on the order of the whole
+        // space) cannot yield strictly monotone cuts — every rank must
+        // own at least one cell for the trait invariants to hold
+        assert!(
+            ncells >= ranks,
+            "MortonPartitioner: {ncells} cells ({dim}^3, cell side >= aura {aura}) \
+             cannot cover {ranks} ranks — shrink the rank count or the interaction radius"
+        );
+        let cuts: Vec<usize> = (0..=ranks).map(|r| r * ncells / ranks).collect();
+        MortonPartitioner {
+            min,
+            max,
+            ranks,
+            aura,
+            cell,
+            dim,
+            seq_of,
+            ncells,
+            cuts,
+        }
+    }
+
+    fn cell_coords(&self, pos: Real3) -> [usize; 3] {
+        let c = |v: Real| -> usize {
+            // negative values saturate to 0 under the `as` cast
+            (((v - self.min) / self.cell) as usize).min(self.dim - 1)
+        };
+        [c(pos.x()), c(pos.y()), c(pos.z())]
+    }
+
+    fn flat(&self, c: [usize; 3]) -> usize {
+        (c[2] * self.dim + c[1]) * self.dim + c[0]
+    }
+
+    /// Morton sequence position of the cell containing `pos`.
+    fn seq_of_pos(&self, pos: Real3) -> usize {
+        self.seq_of[self.flat(self.cell_coords(pos))] as usize
+    }
+
+    fn rank_of_seq(&self, seq: usize) -> usize {
+        self.cuts[1..self.ranks].partition_point(|&c| c <= seq)
+    }
+
+    /// Squared distance from `pos` to the closed cell box `c`.
+    fn dist2_to_cell(&self, pos: Real3, c: [usize; 3]) -> Real {
+        let p = [pos.x(), pos.y(), pos.z()];
+        let mut d2 = 0.0;
+        for a in 0..3 {
+            let lo = self.min + c[a] as Real * self.cell;
+            let hi = lo + self.cell;
+            let d = if p[a] < lo {
+                lo - p[a]
+            } else if p[a] > hi {
+                p[a] - hi
+            } else {
+                0.0
+            };
+            d2 += d * d;
+        }
+        d2
+    }
+}
+
+impl Partitioner for MortonPartitioner {
+    fn name(&self) -> &'static str {
+        "morton-sfc"
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn rank_of(&self, pos: Real3) -> usize {
+        self.rank_of_seq(self.seq_of_pos(pos))
+    }
+
+    fn aura_targets(&self, pos: Real3, owner_rank: usize) -> RankList {
+        let mut out = RankList::new();
+        if self.ranks < 2 {
+            return out;
+        }
+        let base = self.cell_coords(pos);
+        let aura2 = self.aura * self.aura;
+        for dz in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let nx = base[0] as i64 + dx;
+                    let ny = base[1] as i64 + dy;
+                    let nz = base[2] as i64 + dz;
+                    if nx < 0 || ny < 0 || nz < 0 {
+                        continue;
+                    }
+                    let nc = [nx as usize, ny as usize, nz as usize];
+                    if nc[0] >= self.dim || nc[1] >= self.dim || nc[2] >= self.dim {
+                        continue;
+                    }
+                    let r = self.rank_of_seq(self.seq_of[self.flat(nc)] as usize);
+                    if r == owner_rank || out.contains(r) {
+                        continue;
+                    }
+                    if self.dist2_to_cell(pos, nc) <= aura2 {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn neighbors(&self, rank: usize) -> RankList {
+        // complete graph: contiguous SFC ranges of a 3-D curve touch
+        // arbitrarily many other ranges, and the load balancer moves
+        // the cuts anyway — a static all-pairs topology keeps the
+        // message protocol independent of the cut state
+        let mut out = RankList::new();
+        for r in 0..self.ranks {
+            if r != rank {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    fn route_toward(&self, from: usize, owner: usize) -> usize {
+        debug_assert_ne!(from, owner, "routing to self");
+        // every rank pair is directly connected
+        owner
+    }
+
+    fn cut_points(&self) -> Vec<f64> {
+        self.cuts.iter().map(|&c| c as f64).collect()
+    }
+
+    fn load_bin(&self, pos: Real3, bins: usize) -> usize {
+        (self.seq_of_pos(pos) * bins / self.ncells).min(bins - 1)
+    }
+
+    fn repartition(&mut self, hist: &[u64]) -> bool {
+        let bins = hist.len();
+        if bins == 0 || self.ranks < 2 || self.ncells < self.ranks {
+            return false;
+        }
+        let bin_cuts = match balanced_cuts(hist, self.ranks, 1) {
+            Some(c) => c,
+            None => return false,
+        };
+        let mut cuts: Vec<usize> = bin_cuts
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                if i == 0 {
+                    0
+                } else if i == self.ranks {
+                    self.ncells
+                } else {
+                    b * self.ncells / bins
+                }
+            })
+            .collect();
+        // bin granularity can collapse ranges when cells are few;
+        // restore strict monotonicity (>= 1 cell per rank)
+        for r in 1..self.ranks {
+            if cuts[r] < cuts[r - 1] + 1 {
+                cuts[r] = cuts[r - 1] + 1;
+            }
+        }
+        for r in (1..self.ranks).rev() {
+            if cuts[r] > cuts[r + 1] - 1 {
+                cuts[r] = cuts[r + 1] - 1;
+            }
+        }
+        for r in 1..=self.ranks {
+            if cuts[r] <= cuts[r - 1] {
+                return false; // cannot happen while ncells >= ranks; belt
+            }
+        }
+        if cuts == self.cuts {
+            return false;
+        }
+        self.cuts = cuts;
+        true
+    }
+
+    fn max_migration_hops(&self) -> usize {
+        if self.ranks <= 1 {
+            0
+        } else {
+            1
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(self.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::distributed::balance::BALANCE_BINS;
 
     #[test]
     fn rank_assignment_covers_space() {
@@ -157,9 +667,9 @@ mod tests {
         // deep inside rank 1: no aura targets
         assert!(p.aura_targets(Real3::new(37.5, 0.0, 0.0), 1).is_empty());
         // near rank 1's lower border: ghost to rank 0
-        assert_eq!(p.aura_targets(Real3::new(26.0, 0.0, 0.0), 1), vec![0]);
+        assert_eq!(p.aura_targets(Real3::new(26.0, 0.0, 0.0), 1).to_vec(), vec![0]);
         // near rank 1's upper border: ghost to rank 2
-        assert_eq!(p.aura_targets(Real3::new(48.0, 0.0, 0.0), 1), vec![2]);
+        assert_eq!(p.aura_targets(Real3::new(48.0, 0.0, 0.0), 1).to_vec(), vec![2]);
         // first rank has no lower neighbor
         assert!(p.aura_targets(Real3::new(1.0, 0.0, 0.0), 0).is_empty());
         // last rank has no upper neighbor
@@ -169,9 +679,9 @@ mod tests {
     #[test]
     fn neighbor_sets() {
         let p = SlabPartition::new(0.0, 100.0, 3, 1.0);
-        assert_eq!(p.neighbors(0), vec![1]);
-        assert_eq!(p.neighbors(1), vec![0, 2]);
-        assert_eq!(p.neighbors(2), vec![1]);
+        assert_eq!(p.neighbors(0).to_vec(), vec![1]);
+        assert_eq!(p.neighbors(1).to_vec(), vec![0, 2]);
+        assert_eq!(p.neighbors(2).to_vec(), vec![1]);
         let single = SlabPartition::new(0.0, 1.0, 1, 0.1);
         assert!(single.neighbors(0).is_empty());
     }
@@ -181,14 +691,14 @@ mod tests {
         // ranks = 2: the two slabs are already adjacent; wrap must NOT
         // duplicate the neighbor link (each channel is recv'd once).
         let p2 = SlabPartition::new(0.0, 100.0, 2, 1.0).with_wrap(true);
-        assert_eq!(p2.neighbors(0), vec![1]);
-        assert_eq!(p2.neighbors(1), vec![0]);
+        assert_eq!(p2.neighbors(0).to_vec(), vec![1]);
+        assert_eq!(p2.neighbors(1).to_vec(), vec![0]);
         // ranks = 4: wrap links the first and last slab.
         let p4 = SlabPartition::new(0.0, 100.0, 4, 1.0).with_wrap(true);
-        assert_eq!(p4.neighbors(0), vec![1, 3]);
-        assert_eq!(p4.neighbors(1), vec![0, 2]);
-        assert_eq!(p4.neighbors(2), vec![1, 3]);
-        assert_eq!(p4.neighbors(3), vec![0, 2]);
+        assert_eq!(p4.neighbors(0).to_vec(), vec![1, 3]);
+        assert_eq!(p4.neighbors(1).to_vec(), vec![0, 2]);
+        assert_eq!(p4.neighbors(2).to_vec(), vec![1, 3]);
+        assert_eq!(p4.neighbors(3).to_vec(), vec![0, 2]);
     }
 
     #[test]
@@ -223,5 +733,236 @@ mod tests {
         for x in [-1.0, 0.0, 5.0, 9.9, 20.0] {
             assert_eq!(p.rank_of(Real3::new(x, 0.0, 0.0)), 0);
         }
+    }
+
+    #[test]
+    fn rank_list_inline_ops() {
+        let mut l = RankList::new();
+        assert!(l.is_empty());
+        l.push(3);
+        l.push(7);
+        l.insert_front(1);
+        assert_eq!(l.to_vec(), vec![1, 3, 7]);
+        assert_eq!(l.len(), 3);
+        assert!(l.contains(3) && !l.contains(2));
+        assert_eq!(l.into_iter().collect::<Vec<_>>(), vec![1, 3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "RankList overflow")]
+    fn rank_list_overflow_panics() {
+        let mut l = RankList::new();
+        for r in 0..=MAX_RANK_NEIGHBORS {
+            l.push(r);
+        }
+    }
+
+    // ---------------------------------------------------- xorshift fuzz
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    fn fuzz_pos(state: &mut u64, lo: Real, hi: Real) -> Real3 {
+        let mut f = |pad: Real| {
+            let t = (xorshift(state) % 10_000) as Real / 10_000.0;
+            lo - pad + t * (hi - lo + 2.0 * pad)
+        };
+        // include out-of-range positions: rank_of must stay total
+        Real3::new(f(10.0), f(10.0), f(10.0))
+    }
+
+    /// Drive a partitioner through random repartitions and check the
+    /// trait invariants: totality of `rank_of`, monotone non-degenerate
+    /// cut points, owner-free aura targets, symmetric neighbor sets.
+    fn check_partitioner_invariants(p: &mut dyn Partitioner, seed: u64, lo: Real, hi: Real) {
+        let mut state = seed | 1;
+        let ranks = p.ranks();
+        for round in 0..8 {
+            let cuts = p.cut_points();
+            assert_eq!(cuts.len(), ranks + 1, "seed={seed} round={round}");
+            for w in cuts.windows(2) {
+                assert!(w[0] < w[1], "seed={seed} round={round}: cuts {cuts:?}");
+            }
+            for r in 0..ranks {
+                let nbs = p.neighbors(r);
+                assert!(!nbs.contains(r), "seed={seed}: rank in own neighbor set");
+                for nb in nbs {
+                    assert!(nb < ranks, "seed={seed}");
+                    assert!(
+                        p.neighbors(nb).contains(r),
+                        "seed={seed}: asymmetric neighbors {r} <-> {nb}"
+                    );
+                }
+            }
+            for _ in 0..40 {
+                let pos = fuzz_pos(&mut state, lo, hi);
+                let owner = p.rank_of(pos);
+                assert!(owner < ranks, "seed={seed}: rank_of out of range");
+                let targets = p.aura_targets(pos, owner);
+                assert!(
+                    !targets.contains(owner),
+                    "seed={seed}: aura targets include the owner"
+                );
+                for t in targets {
+                    assert!(t < ranks, "seed={seed}");
+                    assert!(
+                        p.neighbors(owner).contains(t),
+                        "seed={seed}: aura target {t} not a neighbor of {owner}"
+                    );
+                }
+            }
+            // random repartition: skewed histogram
+            let peak = (xorshift(&mut state) as usize) % BALANCE_BINS;
+            let mut hist = vec![0u64; BALANCE_BINS];
+            for (b, h) in hist.iter_mut().enumerate() {
+                let d = b.abs_diff(peak) as u64;
+                *h = 1000 / (1 + d * d);
+            }
+            p.repartition(&hist);
+        }
+    }
+
+    #[test]
+    fn fuzz_slab_partitioner_invariants() {
+        for ranks in [1usize, 2, 3, 4, 8] {
+            let mut p = SlabPartition::new(-40.0, 120.0, ranks, 3.0);
+            check_partitioner_invariants(&mut p, 11 + ranks as u64, -40.0, 120.0);
+            let mut ring = SlabPartition::new(-40.0, 120.0, ranks, 3.0).with_wrap(true);
+            check_partitioner_invariants(&mut ring, 23 + ranks as u64, -40.0, 120.0);
+        }
+    }
+
+    #[test]
+    fn fuzz_morton_partitioner_invariants() {
+        for ranks in [1usize, 2, 4, 7] {
+            let mut p = MortonPartitioner::new(-40.0, 120.0, ranks, 6.0);
+            check_partitioner_invariants(&mut p, 37 + ranks as u64, -40.0, 120.0);
+        }
+    }
+
+    #[test]
+    fn slab_repartition_equalizes_agents() {
+        // all load in [0, 25): cuts must crowd into the first quarter
+        let mut p = SlabPartition::new(0.0, 100.0, 4, 2.0);
+        let mut hist = vec![0u64; BALANCE_BINS];
+        for (b, h) in hist.iter_mut().enumerate().take(BALANCE_BINS / 4) {
+            *h = 10 + (b % 3) as u64;
+        }
+        assert!(p.repartition(&hist));
+        let cuts = p.cut_points();
+        assert_eq!(cuts[0], 0.0);
+        assert_eq!(cuts[4], 100.0);
+        assert!(cuts[3] < 30.0, "cuts must follow the load: {cuts:?}");
+        // every slab strictly wider than the aura
+        for w in cuts.windows(2) {
+            assert!(w[1] - w[0] > p.aura, "{cuts:?}");
+        }
+        // rank_of consistent with the new cuts
+        for r in 0..4 {
+            let (lo, hi) = p.slab_of(r);
+            let mid = Real3::new(0.5 * (lo + hi), 0.0, 0.0);
+            assert_eq!(p.rank_of(mid), r);
+        }
+    }
+
+    #[test]
+    fn slab_repartition_refuses_thin_slabs() {
+        // aura 30 over a 100-wide space with 4 ranks: 4 slabs > 30
+        // wide cannot fit -> keep the current cuts
+        let mut p = SlabPartition::new(0.0, 100.0, 4, 30.0);
+        let before = p.cut_points();
+        let mut hist = vec![0u64; BALANCE_BINS];
+        hist[0] = 1000;
+        assert!(!p.repartition(&hist));
+        assert_eq!(p.cut_points(), before);
+    }
+
+    #[test]
+    fn morton_ranges_partition_the_cells() {
+        let p = MortonPartitioner::new(0.0, 100.0, 4, 5.0);
+        let cuts = p.cut_points();
+        assert_eq!(cuts.len(), 5);
+        assert_eq!(cuts[0], 0.0);
+        assert_eq!(cuts[4], p.ncells as f64);
+        // a dense position sample hits every rank and owner lookup
+        // agrees with the sequence cuts
+        let mut seen = vec![false; 4];
+        for i in 0..30 {
+            for j in 0..30 {
+                let pos = Real3::new(i as f64 * 3.4, j as f64 * 3.4, (i + j) as f64);
+                let r = p.rank_of(pos);
+                assert!(r < 4);
+                seen[r] = true;
+                let seq = p.seq_of_pos(pos) as f64;
+                assert!(cuts[r] <= seq && seq < cuts[r + 1]);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every rank must own space");
+    }
+
+    #[test]
+    fn morton_aura_covers_cross_rank_interactions() {
+        // brute-force oracle: for random position pairs within one
+        // aura owned by different ranks, each owner's aura targets
+        // must include the other rank (the ghost-completeness
+        // property the Fig 6.5 contract rests on)
+        let p = MortonPartitioner::new(0.0, 80.0, 4, 8.0);
+        let mut state = 77u64;
+        let mut checked = 0;
+        for _ in 0..4000 {
+            let a = fuzz_pos(&mut state, 10.0, 70.0);
+            let d = Real3::new(
+                ((xorshift(&mut state) % 1000) as Real / 1000.0 - 0.5) * 11.0,
+                ((xorshift(&mut state) % 1000) as Real / 1000.0 - 0.5) * 11.0,
+                ((xorshift(&mut state) % 1000) as Real / 1000.0 - 0.5) * 11.0,
+            );
+            let b = a + d;
+            let dist2 = d.x() * d.x() + d.y() * d.y() + d.z() * d.z();
+            if dist2 > 8.0 * 8.0 {
+                continue;
+            }
+            let (ra, rb) = (p.rank_of(a), p.rank_of(b));
+            if ra == rb {
+                continue;
+            }
+            checked += 1;
+            assert!(
+                p.aura_targets(a, ra).contains(rb),
+                "a={a:?} (rank {ra}) within aura of rank {rb} but not mirrored"
+            );
+            assert!(
+                p.aura_targets(b, rb).contains(ra),
+                "b={b:?} (rank {rb}) within aura of rank {ra} but not mirrored"
+            );
+        }
+        assert!(checked > 50, "oracle must exercise cross-rank pairs: {checked}");
+    }
+
+    #[test]
+    fn morton_repartition_follows_load() {
+        let mut p = MortonPartitioner::new(0.0, 100.0, 4, 5.0);
+        // all load at the start of the curve
+        let mut hist = vec![0u64; BALANCE_BINS];
+        for h in hist.iter_mut().take(BALANCE_BINS / 8) {
+            *h = 50;
+        }
+        assert!(p.repartition(&hist));
+        let cuts = p.cut_points();
+        assert!(
+            cuts[3] <= (p.ncells / 4) as f64,
+            "cuts must crowd into the loaded eighth: {cuts:?}"
+        );
+        for w in cuts.windows(2) {
+            assert!(w[0] < w[1], "{cuts:?}");
+        }
+        // repartitioning back to uniform load restores spread cuts
+        let flat = vec![1u64; BALANCE_BINS];
+        assert!(p.repartition(&flat));
+        let cuts = p.cut_points();
+        assert!(cuts[1] > (p.ncells / 8) as f64, "{cuts:?}");
     }
 }

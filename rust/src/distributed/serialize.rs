@@ -133,8 +133,10 @@ pub mod tailored {
     }
 
     /// Rough per-agent wire size used to pre-size batch buffers from
-    /// column lengths (base record + a typical extra section).
-    pub(crate) const RECORD_SIZE_HINT: usize = BASE_RECORD + 24;
+    /// column lengths (base record + a typical extra section). Public
+    /// so exchange consumers — the aura path, the PR 5 bulk-migration
+    /// rounds, benches sizing message volumes — share one estimate.
+    pub const RECORD_SIZE_HINT: usize = BASE_RECORD + 24;
 
     /// SoA fast path: write the fixed base record (tag/uid/position/
     /// diameter/flags) straight out of the [`ResourceManager`]'s hot

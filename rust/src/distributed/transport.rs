@@ -24,6 +24,20 @@ pub trait Transport: Send {
 
     /// Blocking receive of the next message from `from` with `tag`.
     fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String>;
+
+    /// Send a copy of `data` from `from` to every *other* rank — the
+    /// send half of an all-to-all gossip (the load-balance `LoadStats`
+    /// exchange). The matching receives stay per-peer `recv` calls so
+    /// the phase-interleaved sequential driver can run all sends
+    /// before any rank blocks on a receive.
+    fn broadcast(&self, from: usize, tag: u32, data: &[u8]) -> Result<(), String> {
+        for to in 0..self.ranks() {
+            if to != from {
+                self.send(from, to, tag, data.to_vec())?;
+            }
+        }
+        Ok(())
+    }
 }
 
 type MailboxKey = (usize, usize, u32); // (to, from, tag)
@@ -227,6 +241,17 @@ mod tests {
             .with_recv_timeout(std::time::Duration::from_millis(50));
         let err = t.recv(0, 1, 9).unwrap_err();
         assert!(err.contains("timeout"), "{err}");
+    }
+
+    #[test]
+    fn broadcast_reaches_every_other_rank() {
+        let t = InProcessTransport::new(3);
+        t.broadcast(1, 5, &[9, 9]).unwrap();
+        assert_eq!(t.recv(0, 1, 5).unwrap(), vec![9, 9]);
+        assert_eq!(t.recv(2, 1, 5).unwrap(), vec![9, 9]);
+        // no self-send
+        let t1 = t.clone().with_recv_timeout(std::time::Duration::from_millis(20));
+        assert!(t1.recv(1, 1, 5).is_err());
     }
 
     #[test]

@@ -80,6 +80,19 @@ pub fn morton_order_indices(dims: [usize; 3]) -> Vec<u32> {
     out
 }
 
+/// Inverse permutation of [`morton_order_indices`]: flat box index
+/// (x-major layout) -> position in the Morton visiting sequence. The
+/// distributed SFC partitioner keys rank ownership on this sequence
+/// position, so contiguous rank ranges stay spatially compact.
+pub fn morton_seq_of(dims: [usize; 3]) -> Vec<u32> {
+    let order = morton_order_indices(dims);
+    let mut seq = vec![0u32; order.len()];
+    for (pos, &flat) in order.iter().enumerate() {
+        seq[flat as usize] = pos as u32;
+    }
+    seq
+}
+
 fn walk(origin: [usize; 3], size: usize, dims: [usize; 3], f: &mut dyn FnMut([usize; 3])) {
     // prune subtrees fully outside the grid
     if origin[0] >= dims[0] || origin[1] >= dims[1] || origin[2] >= dims[2] {
@@ -218,6 +231,18 @@ mod tests {
             }
             for w in order.windows(2) {
                 assert!(w[0] < w[1], "{dims:?}: not morton order");
+            }
+        }
+    }
+
+    #[test]
+    fn morton_seq_of_inverts_the_order() {
+        for dims in [[4usize, 4, 4], [5, 3, 2], [1, 7, 1]] {
+            let order = morton_order_indices(dims);
+            let seq = morton_seq_of(dims);
+            assert_eq!(seq.len(), order.len(), "{dims:?}");
+            for (pos, &flat) in order.iter().enumerate() {
+                assert_eq!(seq[flat as usize] as usize, pos, "{dims:?} flat={flat}");
             }
         }
     }

@@ -131,6 +131,12 @@ impl Behavior for TumorCellBehavior {
 #[derive(Debug, Clone)]
 pub struct SpheroidParams {
     pub initial_cells: usize,
+    /// Center of the initial cell ball. The default (the space center)
+    /// reproduces the paper's setup; an off-center ball is the
+    /// distributed engine's worst-case static decomposition — nearly
+    /// every agent lands in one slab — and drives the PR 5
+    /// load-balancing benches.
+    pub center: Real3,
     /// µm³/h (42.0 / 35.0 / 29.9 in the paper)
     pub growth_rate: Real,
     pub minimum_age_h: u64,
@@ -157,6 +163,7 @@ impl SpheroidParams {
         };
         SpheroidParams {
             initial_cells,
+            center: Real3::ZERO,
             growth_rate,
             minimum_age_h: 87,
             division_probability: 0.0215,
@@ -186,14 +193,18 @@ pub fn build(mut engine_param: Param, p: &SpheroidParams) -> Simulation {
     // initial packing radius ~ cube root of total volume
     let cell_d = 10.0;
     let ball_r = (p.initial_cells as Real).cbrt() * cell_d / 2.0;
+    let center = p.center;
     let mut shell = 0usize;
     let mut factory = |pos: Real3| -> Box<dyn Agent> {
-        let mut c = TumorCell::new(pos * ((shell % 100) as Real / 100.0), cell_d);
+        // shrink the surface sample toward the ball center (with the
+        // default center this is the original `pos * t` arithmetic)
+        let t = (shell % 100) as Real / 100.0;
+        let mut c = TumorCell::new(center + (pos - center) * t, cell_d);
         shell += 1;
         c.base.behaviors.push(Box::new(behavior.clone()));
         Box::new(c)
     };
-    create_agents_on_sphere(&mut sim, Real3::ZERO, ball_r, p.initial_cells, &mut factory);
+    create_agents_on_sphere(&mut sim, p.center, ball_r, p.initial_cells, &mut factory);
     sim
 }
 

@@ -757,3 +757,114 @@ fn fuzz_small_simulations_never_lose_uid_consistency() {
         );
     });
 }
+
+// ------------------------------------------------- PR 5 load balancing
+
+/// Rebalancing storm: engines at 1/2/4 ranks (rebalance every 2
+/// supersteps) plus a balance-off 4-rank cross-check run the same SIR
+/// population while a seed-derived script injects and removes static
+/// obstacle agents between supersteps (explicit UIDs, so all engines
+/// see identical structural churn). Invariants per step: agent count
+/// conserved on every engine. At the end: all four trajectories are
+/// bitwise identical — rebalancing moves ownership, never results.
+#[test]
+fn fuzz_rebalance_storm_conserves_and_matches_single_rank() {
+    use teraagent::core::param::{DistPartitioner, ExecutionContextMode};
+    use teraagent::distributed::engine::DistributedEngine;
+    use teraagent::models::epidemiology::{self, SirParams};
+
+    cases(2, 909, |seed| {
+        for partitioner in [DistPartitioner::Slab, DistPartitioner::Morton] {
+            // max_movement below the balancer's minimum slab width so
+            // regular migration stays single-hop (the Fig 6.5
+            // displacement precondition; checked via forwarded == 0)
+            let model = SirParams {
+                initial_susceptible: 150,
+                initial_infected: 5,
+                space_length: 60.0,
+                max_movement: 2.0,
+                ..SirParams::measles()
+            };
+            let builder = |p: Param| epidemiology::build(p, &model);
+            let mk = |ranks: usize, freq: u64| {
+                let mut p = Param::default();
+                p.seed = 42;
+                p.execution_context = ExecutionContextMode::Copy;
+                p.dist_partitioner = partitioner;
+                p.dist_rebalance_freq = freq;
+                DistributedEngine::new(&builder, p, ranks, 1)
+            };
+            let mut engines = vec![mk(1, 2), mk(2, 2), mk(4, 2), mk(4, 0)];
+            let mut expected = engines[0].num_agents();
+            let mut rng = Rng::new(seed);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_uid = 1_000_000u64;
+            for step in 0..10 {
+                // seed-derived script, independent of any engine state
+                let mut births: Vec<(u64, Real3)> = Vec::new();
+                for _ in 0..rng.uniform_usize(4) {
+                    births.push((next_uid, rng.uniform3(2.0, 58.0)));
+                    next_uid += 1;
+                }
+                let mut removals: Vec<u64> = Vec::new();
+                if !live.is_empty() && rng.bernoulli(0.5) {
+                    let idx = rng.uniform_usize(live.len());
+                    removals.push(live.swap_remove(idx));
+                }
+                for &(uid, _) in &births {
+                    live.push(uid);
+                }
+                expected += births.len();
+                expected -= removals.len();
+
+                for engine in &mut engines {
+                    for &(uid, pos) in &births {
+                        let mut a = SphericalAgent::new(pos);
+                        a.base.uid = uid;
+                        a.base.diameter = 1.0; // point-like, like the Persons
+                        engine.inject_agent(Box::new(a));
+                    }
+                    for &uid in &removals {
+                        assert!(
+                            engine.remove_agent(uid),
+                            "seed={seed} {partitioner:?} step={step}: uid {uid} not owned anywhere"
+                        );
+                    }
+                    engine.step();
+                    assert_eq!(
+                        engine.num_agents(),
+                        expected,
+                        "seed={seed} {partitioner:?} step={step}: agents not conserved"
+                    );
+                    // every forward happened inside a bulk-migration
+                    // round (never stepped in transit); the regular
+                    // migration path stayed single-hop
+                    assert_eq!(
+                        engine.stats().forwarded_agents,
+                        engine.balance_stats().rebalance_forwarded,
+                        "seed={seed} {partitioner:?} step={step}: displacement precondition violated"
+                    );
+                }
+            }
+            let reference = engines[0].state_snapshot();
+            assert_eq!(reference.len(), expected, "seed={seed} {partitioner:?}");
+            for (i, engine) in engines.iter().enumerate().skip(1) {
+                assert_eq!(
+                    engine.state_snapshot(),
+                    reference,
+                    "seed={seed} {partitioner:?}: engine {i} diverged from the 1-rank run"
+                );
+            }
+            // the balancing engines actually rebalanced (10 steps, freq 2)
+            for engine in &engines[1..3] {
+                let bs = engine.balance_stats();
+                assert!(
+                    bs.rebalances >= 4,
+                    "seed={seed} {partitioner:?}: only {} rebalances",
+                    bs.rebalances
+                );
+            }
+            assert_eq!(engines[3].balance_stats().rebalances, 0, "balance-off engine");
+        }
+    });
+}
