@@ -47,7 +47,7 @@ fn main() {
     for (ranks, delta) in [(2usize, false), (4, false), (4, true), (8, true)] {
         let mut engine = DistributedEngine::new(&builder, param(), ranks, 1);
         engine.set_delta_enabled(delta);
-        engine.simulate(iterations);
+        engine.simulate(iterations).unwrap();
         let got = engine.state_snapshot();
         let identical = got == expect;
         let max_dev = got

@@ -60,10 +60,10 @@ fn main() {
     ] {
         let rss0 = rss_bytes();
         let mut engine = DistributedEngine::new(&builder, param(), ranks, threads);
-        engine.simulate(1);
+        engine.simulate(1).unwrap();
         let before = engine.stats();
         let t = std::time::Instant::now();
-        engine.simulate(iterations);
+        engine.simulate(iterations).unwrap();
         let med = t.elapsed();
         let s = engine.stats();
         let bytes = (s.aura_bytes_sent + s.migration_bytes) - (before.aura_bytes_sent + before.migration_bytes);
@@ -116,10 +116,10 @@ fn main() {
         let mut p = param();
         p.dist_rebalance_freq = if balance { 5 } else { 0 };
         let mut engine = DistributedEngine::new(&sp_builder, p, 4, 1);
-        engine.simulate(1);
+        engine.simulate(1).unwrap();
         let before = engine.stats();
         let t = std::time::Instant::now();
-        engine.simulate(sp_iters);
+        engine.simulate(sp_iters).unwrap();
         let med = t.elapsed();
         let s = engine.stats();
         let exch = (s.serialize_time + s.deserialize_time)

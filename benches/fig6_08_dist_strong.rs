@@ -49,12 +49,12 @@ fn main() {
     for ranks in [1usize, 2, 4, 8] {
         let mut engine = DistributedEngine::new(&builder, param(true), ranks, 1);
         let t = std::time::Instant::now();
-        engine.simulate(iterations);
+        engine.simulate(iterations).unwrap();
         let threaded_time = t.elapsed();
 
         let mut seq = DistributedEngine::new(&builder, param(false), ranks, 1);
         let t = std::time::Instant::now();
-        seq.simulate(iterations);
+        seq.simulate(iterations).unwrap();
         let seq_time = t.elapsed();
         assert_eq!(
             engine.state_snapshot(),

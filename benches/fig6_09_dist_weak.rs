@@ -46,7 +46,7 @@ fn main() {
         let builder = |p: Param| build(p, &model);
         let mut engine = DistributedEngine::new(&builder, param(), ranks, 1);
         let t = std::time::Instant::now();
-        engine.simulate(10);
+        engine.simulate(10).unwrap();
         let elapsed = t.elapsed();
         let s = engine.stats();
         table.row(&[
@@ -92,7 +92,7 @@ fn main() {
         p.dist_rebalance_freq = if balance { 5 } else { 0 };
         let mut engine = DistributedEngine::new(&sp_builder, p, ranks, 1);
         let t = std::time::Instant::now();
-        engine.simulate(iters);
+        engine.simulate(iters).unwrap();
         let elapsed = t.elapsed();
         let owned = engine.owned_per_rank();
         let max = *owned.iter().max().unwrap_or(&0) as f64;

@@ -44,7 +44,7 @@ fn main() {
         // plain reference: raw == sent by construction
         let mut plain = DistributedEngine::new(&builder, param(false, false), 2, 1);
         let t = std::time::Instant::now();
-        plain.simulate(iterations);
+        plain.simulate(iterations).unwrap();
         report.row(
             &format!("sir_movement_{movement}"),
             "plain",
@@ -62,7 +62,7 @@ fn main() {
         ] {
             let mut engine = DistributedEngine::new(&builder, param(delta, deflate), 2, 1);
             let t = std::time::Instant::now();
-            engine.simulate(iterations);
+            engine.simulate(iterations).unwrap();
             let elapsed = t.elapsed();
             let s = engine.stats();
             // every encoding decodes to the identical trajectory

@@ -16,8 +16,19 @@
 //! slab|morton` picks the decomposition); compare the per-rank agent
 //! counts and wall clock against the run without the flag.
 //!
+//! With `--checkpoint-freq N` (PR 6) the run writes a coordinated
+//! crash-consistent checkpoint every N supersteps into
+//! `--checkpoint-dir` (default `output/checkpoints`); `--restore`
+//! resumes from those files instead of starting fresh, and
+//! `--faults SEED` runs the whole exchange over the deterministic
+//! fault injector (2% drop/corrupt/duplicate/delay) under the
+//! reliable seq/CRC/resend layer. Either way the final state must be
+//! bitwise identical to the uninterrupted shared-memory run.
+//!
 //!     cargo run --release --example distributed [--tcp]
 //!     cargo run --release --example distributed -- --ranks 4 [--balance]
+//!     cargo run --release --example distributed -- --checkpoint-freq 10 [--faults 7]
+//!     cargo run --release --example distributed -- --restore
 
 use teraagent::core::math::Real3;
 use teraagent::core::param::{ExecutionContextMode, Param};
@@ -67,7 +78,7 @@ fn run_in_process() {
             p.dist_aura_deflate = deflate;
             let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
             let t = std::time::Instant::now();
-            engine.simulate(iterations);
+            engine.simulate(iterations).unwrap();
             let elapsed = t.elapsed();
             let got = engine.state_snapshot();
             let identical = got == expect;
@@ -182,7 +193,7 @@ fn run_imbalanced_spheroid(ranks: usize, balance: bool, freq: u64, partitioner: 
     );
     println!("  owned per rank before: {before:?}");
     let t = std::time::Instant::now();
-    engine.simulate(iterations);
+    engine.simulate(iterations).unwrap();
     let elapsed = t.elapsed();
     let after = engine.owned_per_rank();
     let s = engine.stats();
@@ -204,6 +215,84 @@ fn run_imbalanced_spheroid(ranks: usize, balance: bool, freq: u64, partitioner: 
     );
 }
 
+/// The PR 6 scenario: crash-consistent coordinated checkpoints plus
+/// (optionally) a fault-injected transport. Runs the SIR demo on
+/// `ranks` ranks with the periodic checkpoint hook on; `restore`
+/// resumes from `dir` instead of starting fresh; `faults` wraps the
+/// in-process mailboxes in the deterministic fault injector under the
+/// reliable (seq/CRC/resend) layer. The final state is checked bitwise
+/// against the uninterrupted shared-memory reference.
+fn run_fault_tolerant(
+    ranks: usize,
+    iterations: u64,
+    freq: u64,
+    dir: &str,
+    restore: bool,
+    faults: Option<u64>,
+) {
+    use teraagent::distributed::fault::{FaultConfig, FaultyTransport, ReliableTransport};
+    use teraagent::distributed::transport::InProcessTransport;
+    let builder = |p: Param| build(p, &model());
+    let mut p = param();
+    p.dist_checkpoint_freq = freq;
+    p.dist_checkpoint_dir = dir.to_string();
+
+    let mut engine = if restore {
+        println!("restoring {ranks}-rank run from {dir} ...");
+        DistributedEngine::restore_from(&builder, p, ranks, 1, std::path::Path::new(dir))
+            .unwrap_or_else(|e| {
+                eprintln!("restore failed: {e}");
+                std::process::exit(1);
+            })
+    } else {
+        DistributedEngine::new(&builder, p, ranks, 1)
+    };
+    if let Some(seed) = faults {
+        println!(
+            "fault injection on (seed {seed}): 2% drop/corrupt/duplicate/delay \
+             under the reliable layer"
+        );
+        let inner = InProcessTransport::new(ranks)
+            .with_recv_timeout(std::time::Duration::from_secs(5));
+        let faulty = FaultyTransport::new(
+            inner,
+            FaultConfig {
+                seed,
+                drop_p: 0.02,
+                corrupt_p: 0.02,
+                duplicate_p: 0.02,
+                delay_p: 0.02,
+            },
+        );
+        engine.set_transport(Box::new(
+            ReliableTransport::new(faulty)
+                .with_poll(std::time::Duration::from_millis(5))
+                .with_max_wait(std::time::Duration::from_secs(10)),
+        ));
+    }
+    let start_iter = engine.iteration;
+    let t = std::time::Instant::now();
+    if let Err(e) = engine.simulate(iterations.saturating_sub(start_iter)) {
+        eprintln!("distributed run failed (typed): {e}");
+        eprintln!("restart with --restore to resume from {dir}");
+        std::process::exit(1);
+    }
+    println!(
+        "  supersteps {start_iter}..{} in {:.3}s, {} agents across {ranks} ranks \
+         (checkpoints in {dir} every {freq})",
+        engine.iteration,
+        t.elapsed().as_secs_f64(),
+        engine.num_agents()
+    );
+    // fresh or resumed, faulted or clean: the result must match the
+    // uninterrupted shared-memory run bit for bit
+    let mut shared = builder(param());
+    shared.simulate(iterations);
+    let identical = engine.state_snapshot() == simulation_snapshot(&shared);
+    println!("  identical to shared-memory reference: {identical}");
+    assert!(identical, "checkpoint/fault stack changed the results");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.iter().any(|a| a == "--tcp") {
@@ -214,6 +303,11 @@ fn main() {
     let mut balance = false;
     let mut freq = 5u64;
     let mut partitioner = "slab".to_string();
+    let mut iterations = 30u64;
+    let mut ckpt_freq = 0u64;
+    let mut ckpt_dir = "output/checkpoints".to_string();
+    let mut restore = false;
+    let mut faults: Option<u64> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -231,12 +325,44 @@ fn main() {
                 // validated by Param::apply_kv in the scenario runner
                 partitioner = flag_value(&args, i).to_string();
             }
+            "--iterations" => {
+                i += 1;
+                iterations = flag_value(&args, i)
+                    .parse()
+                    .expect("--iterations takes a number");
+            }
+            "--checkpoint-freq" => {
+                i += 1;
+                ckpt_freq = flag_value(&args, i)
+                    .parse()
+                    .expect("--checkpoint-freq takes a number");
+            }
+            "--checkpoint-dir" => {
+                i += 1;
+                ckpt_dir = flag_value(&args, i).to_string();
+            }
+            "--restore" => restore = true,
+            "--faults" => {
+                i += 1;
+                faults = Some(flag_value(&args, i).parse().expect("--faults takes a seed"));
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 std::process::exit(2);
             }
         }
         i += 1;
+    }
+    if ckpt_freq > 0 || restore || faults.is_some() {
+        run_fault_tolerant(
+            ranks.unwrap_or(2),
+            iterations,
+            ckpt_freq,
+            &ckpt_dir,
+            restore,
+            faults,
+        );
+        return;
     }
     match ranks {
         Some(r) => run_imbalanced_spheroid(r, balance, freq, &partitioner),

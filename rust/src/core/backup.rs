@@ -1,120 +1,420 @@
-//! Backup and restore (paper §4.3.5).
+//! Crash-consistent backup and restore (paper §4.3.5).
 //!
 //! BioDynaMo persists all simulation data to system-independent binary
-//! files (ROOT files) at a configurable interval so long runs survive
-//! system failures. Here the backup file carries: a header, the engine
-//! iteration/uid counters, the full agent population (tailored
-//! serialization), and every substance grid. Behaviors are restored
-//! through the same template/factory path as distributed migration.
+//! files at a configurable interval so long runs survive system
+//! failures. The checkpoint here is *self-contained*: it carries the
+//! engine counters (iteration, birth/death totals, the UID namespace),
+//! the full owned-agent population (tailored serialization, §6.2.2),
+//! and every substance grid including its physics parameters.
+//! Behaviors are re-attached through the same template/factory path as
+//! distributed migration, so a restored run is bitwise identical to an
+//! uninterrupted one with zero caller intervention.
+//!
+//! ## File format (version 2)
+//!
+//! ```text
+//! magic    "TERABKP"                     7 bytes
+//! version  b'2'                          1 byte
+//! kind     0 = simulation, 1 = rank      1 byte
+//! body     (kind-specific, see below)
+//! trailer  CRC-32 of everything above    4 bytes
+//! ```
+//!
+//! Writes are crash-consistent: the file is assembled in memory,
+//! written to `<path>.tmp`, fsync'd, and renamed over `path` — a crash
+//! mid-write leaves the previous checkpoint intact. Reads verify
+//! magic, version, kind and CRC before touching the simulation and
+//! report failures as typed [`BackupError`]s.
+//!
+//! RNG streams: the engine derives every stream counter-based from
+//! `(seed, uid, iteration, purpose)` (`core/random.rs`) — persisting
+//! the seed (verified on restore) and the iteration restores all of
+//! them exactly. RNGs held across iterations by user code round-trip
+//! through [`crate::core::random::Rng::state`].
 
+use crate::core::crc32::crc32;
 use crate::core::simulation::Simulation;
-use crate::distributed::serialize::tailored;
-use crate::physics::diffusion::DiffusionGrid;
-use std::io::{Read, Write};
-use std::path::Path;
+use crate::distributed::serialize::{capture_templates_map, tailored};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
-const MAGIC: &[u8; 8] = b"TERABKP1";
+const MAGIC: &[u8; 7] = b"TERABKP";
+/// Current checkpoint format version (ASCII digit, byte 7 of the file).
+pub const FORMAT_VERSION: u8 = b'2';
+/// `kind` byte: a single-process `Simulation` checkpoint.
+pub const KIND_SIMULATION: u8 = 0;
+/// `kind` byte: one rank of a coordinated distributed checkpoint
+/// (`distributed/checkpoint.rs`).
+pub const KIND_DISTRIBUTED_RANK: u8 = 1;
 
-/// Write a full simulation backup to `path`.
-pub fn backup(sim: &Simulation, path: &Path) -> std::io::Result<u64> {
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-    let mut bytes = 0u64;
-    w.write_all(MAGIC)?;
-    bytes += 8;
-    w.write_all(&sim.iteration.to_le_bytes())?;
-    w.write_all(&sim.param.seed.to_le_bytes())?;
-    bytes += 16;
-    // agents
-    let handles = sim.rm.handles();
-    let buf = tailored::serialize_batch(handles.iter().map(|&h| sim.rm.get(h)));
-    w.write_all(&(buf.len() as u64).to_le_bytes())?;
-    w.write_all(&buf)?;
-    bytes += 8 + buf.len() as u64;
+const HEADER_LEN: usize = 9; // magic + version + kind
+const TRAILER_LEN: usize = 4; // crc32
+
+/// Typed checkpoint failures. Everything a corrupt, truncated, stale
+/// or mismatched file can produce is rejected *before* the target
+/// simulation is modified.
+#[derive(Debug)]
+pub enum BackupError {
+    Io(std::io::Error),
+    /// The file does not start with the checkpoint magic.
+    NotABackup,
+    /// Written by a different (older/newer) format version.
+    VersionMismatch { found: u8, expected: u8 },
+    /// A simulation checkpoint fed to the rank reader or vice versa.
+    KindMismatch { found: u8, expected: u8 },
+    /// The file ends before a field it promises.
+    Truncated { needed: usize, have: usize },
+    /// The CRC-32 trailer does not match the content.
+    CrcMismatch { stored: u32, computed: u32 },
+    /// The checkpoint was taken under a different simulation seed —
+    /// restoring it could not reproduce the original trajectories.
+    SeedMismatch { file: u64, sim: u64 },
+    /// A substance in the file is missing from or shaped differently
+    /// in the target simulation (wrong model builder).
+    SubstanceMismatch(String),
+    /// Structurally invalid content that passed the CRC (logic error
+    /// or a deliberately crafted file).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for BackupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackupError::Io(e) => write!(f, "backup io: {e}"),
+            BackupError::NotABackup => write!(f, "not a teraagent backup"),
+            BackupError::VersionMismatch { found, expected } => write!(
+                f,
+                "backup format version {} (expected {})",
+                *found as char, *expected as char
+            ),
+            BackupError::KindMismatch { found, expected } => {
+                write!(f, "backup kind {found} (expected {expected})")
+            }
+            BackupError::Truncated { needed, have } => {
+                write!(f, "backup truncated: needs {needed} bytes, has {have}")
+            }
+            BackupError::CrcMismatch { stored, computed } => write!(
+                f,
+                "backup crc mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            BackupError::SeedMismatch { file, sim } => write!(
+                f,
+                "backup seed {file} does not match simulation seed {sim}"
+            ),
+            BackupError::SubstanceMismatch(s) => write!(f, "substance mismatch: {s}"),
+            BackupError::Corrupt(s) => write!(f, "backup corrupt: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for BackupError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BackupError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BackupError {
+    fn from(e: std::io::Error) -> Self {
+        BackupError::Io(e)
+    }
+}
+
+// --------------------------------------------------------------------
+// framed file I/O (header + body + CRC trailer, atomic writes)
+// --------------------------------------------------------------------
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Frame `body` (header + CRC trailer) and write it crash-consistently:
+/// assemble in memory, write `<path>.tmp`, fsync, rename over `path`,
+/// best-effort fsync of the parent directory. Returns bytes written.
+pub fn write_file(path: &Path, kind: u8, body: &[u8]) -> Result<u64, BackupError> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
+    buf.extend_from_slice(MAGIC);
+    buf.push(FORMAT_VERSION);
+    buf.push(kind);
+    buf.extend_from_slice(body);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        // the rename itself must survive a crash too; directory fsync
+        // is best-effort (not all filesystems allow it)
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(buf.len() as u64)
+}
+
+/// Read and verify a checkpoint file: magic, format version, kind,
+/// CRC-32 trailer. Returns the body bytes.
+pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>, BackupError> {
+    let data = std::fs::read(path)?;
+    if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
+        return Err(BackupError::NotABackup);
+    }
+    if data.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(BackupError::Truncated {
+            needed: HEADER_LEN + TRAILER_LEN,
+            have: data.len(),
+        });
+    }
+    // version before CRC: files from other format versions (e.g. the
+    // CRC-less v1) must be rejected as VersionMismatch, not CrcMismatch
+    if data[7] != FORMAT_VERSION {
+        return Err(BackupError::VersionMismatch {
+            found: data[7],
+            expected: FORMAT_VERSION,
+        });
+    }
+    if data[8] != expect_kind {
+        return Err(BackupError::KindMismatch {
+            found: data[8],
+            expected: expect_kind,
+        });
+    }
+    let body_end = data.len() - TRAILER_LEN;
+    let stored = u32::from_le_bytes(data[body_end..].try_into().unwrap());
+    let computed = crc32(&data[..body_end]);
+    if stored != computed {
+        return Err(BackupError::CrcMismatch { stored, computed });
+    }
+    Ok(data[HEADER_LEN..body_end].to_vec())
+}
+
+// --------------------------------------------------------------------
+// bounds-checked body reader
+// --------------------------------------------------------------------
+
+/// Bounds-checked reader over a checkpoint body — every read that
+/// would run past the end reports [`BackupError::Truncated`] instead
+/// of panicking on a slice.
+pub struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Cursor { data, off: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], BackupError> {
+        let end = self.off.checked_add(n).ok_or(BackupError::Corrupt(
+            "length overflow".to_string(),
+        ))?;
+        if end > self.data.len() {
+            return Err(BackupError::Truncated {
+                needed: end,
+                have: self.data.len(),
+            });
+        }
+        let s = &self.data[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    pub fn u16(&mut self) -> Result<u16, BackupError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, BackupError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, BackupError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, BackupError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.off >= self.data.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.off
+    }
+}
+
+// --------------------------------------------------------------------
+// simulation body codec (shared with the distributed rank checkpoint)
+// --------------------------------------------------------------------
+
+/// Encode the restorable simulation state: seed, engine counters, the
+/// UID namespace, every *owned* agent (ghosts are per-superstep
+/// mirrors the next aura exchange regenerates) and every substance
+/// grid with its physics parameters.
+pub fn encode_sim(sim: &Simulation) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&sim.param.seed.to_le_bytes());
+    out.extend_from_slice(&sim.iteration.to_le_bytes());
+    out.extend_from_slice(&sim.agents_added.to_le_bytes());
+    out.extend_from_slice(&sim.agents_removed.to_le_bytes());
+    let (next_uid, uid_stride) = sim.rm.uid_namespace();
+    out.extend_from_slice(&next_uid.to_le_bytes());
+    out.extend_from_slice(&uid_stride.to_le_bytes());
+    // agents (owned only)
+    let handles: Vec<_> = sim
+        .rm
+        .handles()
+        .iter()
+        .copied()
+        .filter(|&h| !sim.rm.is_ghost(h))
+        .collect();
+    let batch = tailored::serialize_batch(handles.iter().map(|&h| sim.rm.get(h)));
+    out.extend_from_slice(&(batch.len() as u64).to_le_bytes());
+    out.extend_from_slice(&batch);
     // substances
-    w.write_all(&(sim.substances.len() as u32).to_le_bytes())?;
-    bytes += 4;
+    out.extend_from_slice(&(sim.substances.len() as u32).to_le_bytes());
     for grid in sim.substances.iter() {
         let name = grid.name.as_bytes();
-        w.write_all(&(name.len() as u16).to_le_bytes())?;
-        w.write_all(name)?;
-        w.write_all(&(grid.resolution() as u32).to_le_bytes())?;
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(grid.resolution() as u32).to_le_bytes());
         for v in [
             grid.diffusion_coef,
             grid.decay_constant,
             grid.dt,
             grid.spacing(),
         ] {
-            w.write_all(&v.to_le_bytes())?;
+            out.extend_from_slice(&v.to_le_bytes());
         }
         let r = grid.resolution();
         for z in 0..r {
             for y in 0..r {
                 for x in 0..r {
-                    w.write_all(&grid.get(x, y, z).to_le_bytes())?;
+                    out.extend_from_slice(&grid.get(x, y, z).to_le_bytes());
                 }
             }
         }
-        bytes += (2 + name.len() + 4 + 32 + r * r * r * 8) as u64;
     }
-    w.flush()?;
-    Ok(bytes)
+    out
 }
 
-/// Restore agents + substances into `sim` (which must have been built
-/// by the same model builder so ops, params and substance definitions
-/// match — same contract as the paper's restore). Returns the restored
-/// iteration counter.
-pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, String> {
-    let mut data = Vec::new();
-    std::fs::File::open(path)
-        .map_err(|e| e.to_string())?
-        .read_to_end(&mut data)
-        .map_err(|e| e.to_string())?;
-    if data.len() < 32 || &data[0..8] != MAGIC {
-        return Err("not a teraagent backup".to_string());
+type Templates = HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>>;
+
+/// Decode a simulation body into `sim` (which must have been built by
+/// the same model builder so ops, params and substance definitions
+/// match — the paper's restore contract). Behaviors are re-attached
+/// from `templates`, or from the target's own freshly built population
+/// when `None` — the same per-type template mechanism migration uses.
+/// Returns the restored iteration counter.
+pub fn decode_sim(
+    sim: &mut Simulation,
+    cur: &mut Cursor,
+    templates: Option<&Templates>,
+) -> Result<u64, BackupError> {
+    let seed = cur.u64()?;
+    if seed != sim.param.seed {
+        return Err(BackupError::SeedMismatch {
+            file: seed,
+            sim: sim.param.seed,
+        });
     }
-    let iteration = u64::from_le_bytes(data[8..16].try_into().unwrap());
-    let _seed = u64::from_le_bytes(data[16..24].try_into().unwrap());
-    let agents_len = u64::from_le_bytes(data[24..32].try_into().unwrap()) as usize;
-    let agents = tailored::deserialize_batch(&data[32..32 + agents_len])?;
+    let iteration = cur.u64()?;
+    let agents_added = cur.u64()?;
+    let agents_removed = cur.u64()?;
+    let next_uid = cur.u64()?;
+    let uid_stride = cur.u64()?;
+    if uid_stride == 0 {
+        return Err(BackupError::Corrupt("uid stride 0".to_string()));
+    }
+    let agents_len = cur.u64()? as usize;
+    let batch = cur.take(agents_len)?;
+    let mut agents = tailored::deserialize_batch(batch).map_err(BackupError::Corrupt)?;
 
-    // wipe and refill the population
-    sim.rm.drain_all();
-    // re-attach behaviors from any template the model left in the
-    // registry factories; agents serialized with behaviors missing are
-    // the caller's responsibility (same rule as distributed migration)
-    let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
-    sim.rm.commit_additions(agents);
-    sim.rm.set_uid_namespace(max_uid + 1, 1);
-    sim.iteration = iteration;
-
-    // substances
-    let mut off = 32 + agents_len;
-    let count = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
-    off += 4;
-    for _ in 0..count {
-        let name_len = u16::from_le_bytes(data[off..off + 2].try_into().unwrap()) as usize;
-        off += 2;
-        let name = String::from_utf8_lossy(&data[off..off + name_len]).into_owned();
-        off += name_len;
-        let resolution = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
-        off += 4;
-        let f = |o: usize| f64::from_le_bytes(data[o..o + 8].try_into().unwrap());
-        let (_coef, _decay, _dt, _spacing) = (f(off), f(off + 8), f(off + 16), f(off + 24));
-        off += 32;
-        let grid: &DiffusionGrid = sim
-            .substances
-            .by_name(&name)
-            .ok_or_else(|| format!("substance {name} not defined in target simulation"))?;
-        if grid.resolution() != resolution {
-            return Err(format!("substance {name}: resolution mismatch"));
+    // behavior templates from the target's own initial population,
+    // captured before the population is wiped
+    let own_templates;
+    let templates: &Templates = match templates {
+        Some(t) => t,
+        None => {
+            own_templates = capture_templates_map(&sim.rm);
+            &own_templates
         }
+    };
+    for agent in &mut agents {
+        if agent.base().behaviors.is_empty() {
+            if let Some(tpl) = templates.get(&agent.type_tag()) {
+                agent.base_mut().behaviors = tpl.to_vec();
+            }
+        }
+    }
+
+    sim.rm.drain_all();
+    if !agents.is_empty() {
+        sim.rm.commit_additions(agents);
+    }
+    // after commit_additions: stride-1 commits bump next_uid, so the
+    // exact namespace is restored last — the next issued UID matches
+    // the uninterrupted run's
+    sim.rm.set_uid_namespace(next_uid, uid_stride);
+    sim.iteration = iteration;
+    sim.agents_added = agents_added;
+    sim.agents_removed = agents_removed;
+    sim.halt = None;
+
+    // substances (values + the physics parameters v1 threw away)
+    let count = cur.u32()? as usize;
+    if count != sim.substances.len() {
+        return Err(BackupError::SubstanceMismatch(format!(
+            "file has {count} substances, target simulation defines {}",
+            sim.substances.len()
+        )));
+    }
+    for _ in 0..count {
+        let name_len = cur.u16()? as usize;
+        let name = std::str::from_utf8(cur.take(name_len)?)
+            .map_err(|_| BackupError::Corrupt("substance name not utf-8".to_string()))?
+            .to_string();
+        let resolution = cur.u32()? as usize;
+        let (coef, decay, dt, spacing) = (cur.f64()?, cur.f64()?, cur.f64()?, cur.f64()?);
+        let id = sim.substances.id_of(&name).ok_or_else(|| {
+            BackupError::SubstanceMismatch(format!(
+                "substance {name} not defined in target simulation"
+            ))
+        })?;
+        let grid = sim.substances.get_mut(id);
+        if grid.resolution() != resolution {
+            return Err(BackupError::SubstanceMismatch(format!(
+                "substance {name}: resolution {resolution} vs {}",
+                grid.resolution()
+            )));
+        }
+        if (grid.spacing() - spacing).abs() > 1e-9 {
+            return Err(BackupError::SubstanceMismatch(format!(
+                "substance {name}: grid spacing {spacing} vs {} (different space bounds)",
+                grid.spacing()
+            )));
+        }
+        grid.diffusion_coef = coef;
+        grid.decay_constant = decay;
+        grid.dt = dt;
         let r = resolution;
         for z in 0..r {
             for y in 0..r {
                 for x in 0..r {
-                    grid.set(x, y, z, f(off));
-                    off += 8;
+                    grid.set(x, y, z, cur.f64()?);
                 }
             }
         }
@@ -122,11 +422,87 @@ pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, String> {
     Ok(iteration)
 }
 
-/// Standalone operation that writes a backup every `frequency`
-/// iterations (the paper's configurable backup interval).
+// --------------------------------------------------------------------
+// public single-process API
+// --------------------------------------------------------------------
+
+/// Write a full simulation checkpoint to `path` (atomic, CRC-framed).
+/// Returns bytes written.
+pub fn backup(sim: &Simulation, path: &Path) -> Result<u64, BackupError> {
+    write_file(path, KIND_SIMULATION, &encode_sim(sim))
+}
+
+/// Restore a checkpoint into `sim` (built by the same model builder).
+/// Returns the restored iteration counter; the resumed run is bitwise
+/// identical to an uninterrupted one.
+pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, BackupError> {
+    let body = read_file(path, KIND_SIMULATION)?;
+    let mut cur = Cursor::new(&body);
+    let iteration = decode_sim(sim, &mut cur, None)?;
+    if !cur.is_empty() {
+        return Err(BackupError::Corrupt(
+            "trailing bytes after substances".to_string(),
+        ));
+    }
+    Ok(iteration)
+}
+
+// --------------------------------------------------------------------
+// the periodic backup operation
+// --------------------------------------------------------------------
+
+/// What [`BackupOp`] does when a checkpoint cannot be written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackupFailurePolicy {
+    /// Log and keep simulating (transient storage hiccups; the next
+    /// interval retries).
+    Warn,
+    /// Raise [`Simulation::halt`] — `simulate` stops at the next
+    /// iteration boundary rather than running on without a safety net.
+    Halt,
+}
+
+/// Backup accounting, shared out through [`BackupOp::stats_handle`]
+/// (the op itself is boxed away inside the scheduler).
+#[derive(Debug, Default, Clone)]
+pub struct BackupStats {
+    pub attempts: u64,
+    pub failures: u64,
+    pub bytes_written: u64,
+    pub last_error: Option<String>,
+}
+
+/// Standalone operation that writes a checkpoint every `frequency`
+/// iterations (the paper's configurable backup interval). Failures
+/// are counted (`OpTimers` key `backup_failures` + [`BackupStats`])
+/// and handled per [`BackupFailurePolicy`].
 pub struct BackupOp {
     pub frequency: u64,
     pub path: std::path::PathBuf,
+    pub on_failure: BackupFailurePolicy,
+    stats: Arc<Mutex<BackupStats>>,
+}
+
+impl BackupOp {
+    pub fn new(frequency: u64, path: std::path::PathBuf) -> Self {
+        BackupOp {
+            frequency,
+            path,
+            on_failure: BackupFailurePolicy::Warn,
+            stats: Arc::new(Mutex::new(BackupStats::default())),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: BackupFailurePolicy) -> Self {
+        self.on_failure = policy;
+        self
+    }
+
+    /// Live view of the op's accounting (usable after the op is boxed
+    /// into the scheduler).
+    pub fn stats_handle(&self) -> Arc<Mutex<BackupStats>> {
+        Arc::clone(&self.stats)
+    }
 }
 
 impl crate::core::operation::StandaloneOperation for BackupOp {
@@ -139,8 +515,27 @@ impl crate::core::operation::StandaloneOperation for BackupOp {
     }
 
     fn run(&mut self, sim: &mut Simulation) {
-        if let Err(e) = backup(sim, &self.path) {
-            eprintln!("[teraagent] backup failed: {e}");
+        let result = backup(sim, &self.path);
+        let mut st = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+        st.attempts += 1;
+        match result {
+            Ok(bytes) => st.bytes_written += bytes,
+            Err(e) => {
+                st.failures += 1;
+                st.last_error = Some(e.to_string());
+                sim.timers.bump("backup_failures");
+                match self.on_failure {
+                    BackupFailurePolicy::Warn => {
+                        eprintln!("[teraagent] backup failed: {e}");
+                    }
+                    BackupFailurePolicy::Halt => {
+                        sim.halt = Some(format!(
+                            "backup to {} failed: {e}",
+                            self.path.display()
+                        ));
+                    }
+                }
+            }
         }
     }
 }
@@ -176,42 +571,55 @@ mod tests {
         reference.simulate(20);
 
         // backed-up run: 10 iterations, backup, restore into a fresh
-        // simulation, 10 more
+        // simulation, 10 more — no caller intervention of any kind
         let mut first = build(param.clone(), &model());
         first.simulate(10);
         let path = tmp("roundtrip");
         let bytes = backup(&first, &path).unwrap();
         assert!(bytes > 100);
+        assert!(
+            !tmp_path(&path).exists(),
+            "atomic write must not leave the tmp file behind"
+        );
 
         let mut second = build(param, &model());
         let iter = restore(&mut second, &path).unwrap();
         assert_eq!(iter, 10);
         assert_eq!(second.num_agents(), first.num_agents());
-        // behaviors were not serialized: re-attach from the still-live
-        // first simulation's templates via the distributed machinery is
-        // overkill here — soma cells all share behaviors, so copy them:
-        let mut template: Option<Vec<Box<dyn crate::core::behavior::Behavior>>> = None;
-        first.rm.for_each_agent(|_, a| {
-            if template.is_none() && !a.base().behaviors.is_empty() {
-                template = Some(a.base().behaviors.to_vec());
-            }
-        });
-        let template = template.unwrap();
-        second.rm.for_each_agent_mut(|_, a| {
-            a.base_mut().behaviors = template.to_vec();
+        // behaviors round-trip via the template path — restored agents
+        // act on their own, no hand-copying from a still-live run
+        second.rm.for_each_agent(|_, a| {
+            assert!(
+                !a.base().behaviors.is_empty(),
+                "uid {}: behaviors not re-attached",
+                a.uid()
+            );
         });
 
         second.simulate(10);
-        reference
-            .rm
-            .for_each_agent(|_, a| {
-                let b = second.rm.get_by_uid(a.uid()).expect("restored agent");
-                assert!(
-                    (a.position() - b.position()).norm() < 1e-12,
-                    "uid {} diverged after restore",
-                    a.uid()
-                );
-            });
+        assert_eq!(reference.iteration, second.iteration);
+        reference.rm.for_each_agent(|_, a| {
+            let b = second.rm.get_by_uid(a.uid()).expect("restored agent");
+            // bitwise identity, not tolerance
+            assert_eq!(
+                a.position().0,
+                b.position().0,
+                "uid {} diverged after restore",
+                a.uid()
+            );
+            assert_eq!(a.diameter(), b.diameter(), "uid {}", a.uid());
+        });
+        // substance grids identical too
+        for (ga, gb) in reference.substances.iter().zip(second.substances.iter()) {
+            let r = ga.resolution();
+            for z in 0..r {
+                for y in 0..r {
+                    for x in 0..r {
+                        assert_eq!(ga.get(x, y, z), gb.get(x, y, z), "substance diverged");
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -219,18 +627,167 @@ mod tests {
         let path = tmp("garbage");
         std::fs::write(&path, b"definitely not a backup").unwrap();
         let mut sim = build(Param::default(), &model());
-        assert!(restore(&mut sim, &path).is_err());
+        assert!(matches!(
+            restore(&mut sim, &path),
+            Err(BackupError::NotABackup)
+        ));
     }
 
     #[test]
-    fn substance_state_roundtrips() {
+    fn restore_rejects_truncated_file() {
+        AgentRegistry::register_builtins();
+        let mut sim = build(Param::default(), &model());
+        sim.simulate(2);
+        let path = tmp("trunc_src");
+        backup(&sim, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let cut_path = tmp("trunc_cut");
+        for cut in [5usize, 10, full.len() / 2, full.len() - 1] {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            let mut target = build(Param::default(), &model());
+            let err = restore(&mut target, &cut_path).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    BackupError::NotABackup
+                        | BackupError::Truncated { .. }
+                        | BackupError::CrcMismatch { .. }
+                ),
+                "cut at {cut}: unexpected {err:?}"
+            );
+            // the rejected restore must not have wiped the population
+            assert_eq!(target.num_agents(), 80, "cut at {cut} clobbered the target");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_other_format_versions() {
+        AgentRegistry::register_builtins();
+        let sim = build(Param::default(), &model());
+        let path = tmp("version");
+        backup(&sim, &path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        data[7] = b'1'; // a v1-era header
+        std::fs::write(&path, &data).unwrap();
+        let mut target = build(Param::default(), &model());
+        match restore(&mut target, &path) {
+            Err(BackupError::VersionMismatch { found, expected }) => {
+                assert_eq!(found, b'1');
+                assert_eq!(expected, FORMAT_VERSION);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn restore_rejects_flipped_payload_bit() {
+        AgentRegistry::register_builtins();
+        let sim = build(Param::default(), &model());
+        let path = tmp("bitflip");
+        backup(&sim, &path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0x10;
+        std::fs::write(&path, &data).unwrap();
+        let mut target = build(Param::default(), &model());
+        assert!(matches!(
+            restore(&mut target, &path),
+            Err(BackupError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn restore_rejects_seed_mismatch() {
+        AgentRegistry::register_builtins();
+        let mut param = Param::default();
+        param.seed = 123;
+        let sim = build(param, &model());
+        let path = tmp("seed");
+        backup(&sim, &path).unwrap();
+        let mut other = Param::default();
+        other.seed = 124;
+        let mut target = build(other, &model());
+        match restore(&mut target, &path) {
+            Err(BackupError::SeedMismatch { file, sim }) => {
+                assert_eq!((file, sim), (123, 124));
+            }
+            other => panic!("expected SeedMismatch, got {other:?}"),
+        }
+        assert_eq!(target.num_agents(), 80, "rejected restore must not modify");
+    }
+
+    #[test]
+    fn substance_state_and_params_roundtrip() {
         AgentRegistry::register_builtins();
         let mut sim = build(Param::default(), &model());
         sim.substances.get(0).set(2, 3, 4, 7.25);
+        // perturb the physics parameters; v1 parsed these and threw
+        // them away
+        {
+            let g = sim.substances.get_mut(0);
+            g.diffusion_coef = 0.123;
+            g.decay_constant = 0.456;
+            g.dt = 0.789;
+        }
         let path = tmp("subs");
         backup(&sim, &path).unwrap();
         let mut restored = build(Param::default(), &model());
         restore(&mut restored, &path).unwrap();
         assert_eq!(restored.substances.get(0).get(2, 3, 4), 7.25);
+        let g = restored.substances.get(0);
+        assert_eq!(g.diffusion_coef, 0.123);
+        assert_eq!(g.decay_constant, 0.456);
+        assert_eq!(g.dt, 0.789);
+    }
+
+    #[test]
+    fn backup_op_warn_policy_keeps_running() {
+        AgentRegistry::register_builtins();
+        let mut sim = build(Param::default(), &model());
+        let bad = std::path::PathBuf::from("/nonexistent_dir_teraagent/x.bkp");
+        let op = BackupOp::new(2, bad); // Warn is the default
+        let stats = op.stats_handle();
+        sim.add_standalone_op(Box::new(op));
+        sim.simulate(6);
+        assert_eq!(sim.iteration, 6, "warn policy must not stop the run");
+        let st = stats.lock().unwrap();
+        assert!(st.failures >= 2, "{st:?}");
+        assert_eq!(st.attempts, st.failures);
+        assert!(st.last_error.is_some());
+        assert_eq!(sim.timers.count("backup_failures"), st.failures);
+    }
+
+    #[test]
+    fn backup_op_halt_policy_stops_the_run() {
+        AgentRegistry::register_builtins();
+        let mut sim = build(Param::default(), &model());
+        let bad = std::path::PathBuf::from("/nonexistent_dir_teraagent/x.bkp");
+        let op = BackupOp::new(2, bad).with_policy(BackupFailurePolicy::Halt);
+        let stats = op.stats_handle();
+        sim.add_standalone_op(Box::new(op));
+        sim.simulate(10);
+        assert!(
+            sim.iteration < 10,
+            "halt policy must stop simulate early (ran {})",
+            sim.iteration
+        );
+        assert!(sim.halt.is_some());
+        assert_eq!(stats.lock().unwrap().failures, 1, "halted after the first");
+    }
+
+    #[test]
+    fn backup_op_happy_path_counts_bytes() {
+        AgentRegistry::register_builtins();
+        let mut sim = build(Param::default(), &model());
+        let path = tmp("op_ok");
+        let op = BackupOp::new(3, path.clone());
+        let stats = op.stats_handle();
+        sim.add_standalone_op(Box::new(op));
+        sim.simulate(6);
+        let st = stats.lock().unwrap();
+        assert_eq!(st.failures, 0);
+        assert!(st.attempts >= 1);
+        assert!(st.bytes_written > 0);
+        assert!(path.exists());
     }
 }

@@ -5,6 +5,7 @@
 pub mod agent;
 pub mod backup;
 pub mod behavior;
+pub mod crc32;
 pub mod event;
 pub mod experiment;
 pub mod execution_context;

@@ -165,6 +165,18 @@ pub struct Param {
     /// are bitwise identical with rebalancing on or off — only rank
     /// ownership moves (Fig 6.5 contract).
     pub dist_rebalance_freq: u64,
+    /// Distributed engine: write a coordinated per-rank checkpoint
+    /// every N supersteps (at the superstep barrier, so all ranks
+    /// snapshot the same iteration — §4.3.5's configurable backup
+    /// interval); `0` disables checkpointing.
+    pub dist_checkpoint_freq: u64,
+    /// Directory the coordinated checkpoints go to; empty selects
+    /// `<output_dir>/checkpoints`.
+    pub dist_checkpoint_dir: String,
+    /// Upper bound on a single transport message; a corrupt or hostile
+    /// wire header can no longer make a rank allocate an unbounded
+    /// buffer.
+    pub dist_max_message_bytes: u64,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -204,6 +216,9 @@ impl Default for Param {
             dist_aura_deflate: false,
             dist_partitioner: DistPartitioner::Slab,
             dist_rebalance_freq: 0,
+            dist_checkpoint_freq: 0,
+            dist_checkpoint_dir: String::new(),
+            dist_max_message_bytes: 256 * 1024 * 1024,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -344,6 +359,13 @@ impl Param {
             "dist_rebalance_freq" => {
                 self.dist_rebalance_freq = value.parse().map_err(|_| err(k, value))?
             }
+            "dist_checkpoint_freq" => {
+                self.dist_checkpoint_freq = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_checkpoint_dir" => self.dist_checkpoint_dir = value.to_string(),
+            "dist_max_message_bytes" => {
+                self.dist_max_message_bytes = value.parse().map_err(|_| err(k, value))?
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
                 self.visualization_interval = value.parse().map_err(|_| err(k, value))?
@@ -468,8 +490,15 @@ mod tests {
         p.apply_kv("env_incremental_update", "true").unwrap();
         p.apply_kv("dist_partitioner", "morton").unwrap();
         p.apply_kv("dist_rebalance_freq", "10").unwrap();
+        p.apply_kv("dist_checkpoint_freq", "100").unwrap();
+        p.apply_kv("dist_checkpoint_dir", "/tmp/ckpt").unwrap();
+        p.apply_kv("dist_max_message_bytes", "1048576").unwrap();
         assert_eq!(p.dist_partitioner, DistPartitioner::Morton);
         assert_eq!(p.dist_rebalance_freq, 10);
+        assert_eq!(p.dist_checkpoint_freq, 100);
+        assert_eq!(p.dist_checkpoint_dir, "/tmp/ckpt");
+        assert_eq!(p.dist_max_message_bytes, 1_048_576);
+        assert!(p.apply_kv("dist_checkpoint_freq", "sometimes").is_err());
         assert!(p.apply_kv("dist_partitioner", "hilbert").is_err());
         assert_eq!(p.num_threads, 8);
         assert!(p.mech_pair_sweep);

@@ -60,6 +60,53 @@ impl Rng {
         Rng::new(mix(&[seed, uid, iteration, stream]))
     }
 
+    /// Size of the serialized stream state ([`Rng::state`]).
+    pub const STATE_BYTES: usize = 41;
+
+    /// Export the full stream state (xoshiro256** state words plus the
+    /// Box-Muller spare cache) — the checkpoint primitive for any RNG
+    /// that outlives an iteration. The engine's per-agent streams are
+    /// counter-based ([`Rng::for_agent`]) and need only (seed,
+    /// iteration) persisted; this covers explicitly held `Rng` values.
+    pub fn state(&self) -> [u8; Self::STATE_BYTES] {
+        let mut out = [0u8; Self::STATE_BYTES];
+        for (i, s) in self.s.iter().enumerate() {
+            out[i * 8..i * 8 + 8].copy_from_slice(&s.to_le_bytes());
+        }
+        match self.spare {
+            Some(v) => {
+                out[32] = 1;
+                out[33..41].copy_from_slice(&v.to_le_bytes());
+            }
+            None => out[32] = 0,
+        }
+        out
+    }
+
+    /// Rebuild an [`Rng`] from [`Rng::state`] bytes; the restored
+    /// generator continues the exact output sequence (including a
+    /// cached gaussian spare).
+    pub fn from_state(state: &[u8]) -> Result<Self, String> {
+        if state.len() != Self::STATE_BYTES {
+            return Err(format!(
+                "rng state: expected {} bytes, got {}",
+                Self::STATE_BYTES,
+                state.len()
+            ));
+        }
+        let word = |i: usize| u64::from_le_bytes(state[i * 8..i * 8 + 8].try_into().unwrap());
+        let s = [word(0), word(1), word(2), word(3)];
+        if s == [0, 0, 0, 0] {
+            return Err("rng state: all-zero xoshiro state is invalid".to_string());
+        }
+        let spare = match state[32] {
+            0 => None,
+            1 => Some(Real::from_le_bytes(state[33..41].try_into().unwrap())),
+            f => return Err(format!("rng state: bad spare flag {f}")),
+        };
+        Ok(Rng { s, spare })
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -200,6 +247,33 @@ mod tests {
             let v: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
             assert_ne!(base, v, "stream ({uid},{it},{st}) collided");
         }
+    }
+
+    #[test]
+    fn state_roundtrip_mid_stream_continues_identically() {
+        let mut a = Rng::new(99);
+        // advance mid-stream and park a gaussian spare in the cache
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let _ = a.gaussian(0.0, 1.0); // leaves a spare cached
+        let snap = a.state();
+        let mut b = Rng::from_state(&snap).unwrap();
+        // the very next gaussian must consume the restored spare
+        assert_eq!(a.gaussian(2.0, 3.0), b.gaussian(2.0, 3.0));
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.uniform01(), b.uniform01());
+    }
+
+    #[test]
+    fn state_rejects_bad_input() {
+        assert!(Rng::from_state(&[0u8; 7]).is_err());
+        assert!(Rng::from_state(&[0u8; Rng::STATE_BYTES]).is_err(), "all-zero state");
+        let mut bad_flag = Rng::new(1).state();
+        bad_flag[32] = 9;
+        assert!(Rng::from_state(&bad_flag).is_err());
     }
 
     #[test]

@@ -228,6 +228,13 @@ impl ResourceManager {
         self.uid_stride = stride;
     }
 
+    /// The `(next_uid, stride)` the next issued UID comes from —
+    /// persisted by checkpoints so a restored run issues the exact
+    /// UIDs the uninterrupted run would have.
+    pub fn uid_namespace(&self) -> (AgentUid, AgentUid) {
+        (self.next_uid, self.uid_stride)
+    }
+
     pub fn num_domains(&self) -> usize {
         self.domains.len()
     }

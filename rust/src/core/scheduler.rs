@@ -65,6 +65,13 @@ impl OpTimers {
         self.entries.get(name).map(|e| e.1).unwrap_or_default()
     }
 
+    /// Count an event with no duration (e.g. `backup_failures`): the
+    /// count shows up in [`OpTimers::count`] / the breakdown rows
+    /// without perturbing [`OpTimers::total_nanos`].
+    pub fn bump(&mut self, name: &'static str) {
+        self.record(name, Duration::ZERO);
+    }
+
     /// Sum of every recorded phase total, in nanoseconds — the scalar
     /// the distributed load telemetry (`balance::LoadStats::op_nanos`)
     /// samples per rebalance interval. Monotone across iterations, so

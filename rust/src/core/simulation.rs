@@ -33,6 +33,10 @@ pub struct Simulation {
     pub pending_queues: Vec<ThreadQueues>,
     pub agents_added: u64,
     pub agents_removed: u64,
+    /// Set by an operation to stop the `simulate` loop at the next
+    /// iteration boundary (e.g. `BackupFailurePolicy::Halt` when a
+    /// checkpoint cannot be written); carries the reason.
+    pub halt: Option<String>,
 }
 
 impl Simulation {
@@ -88,6 +92,7 @@ impl Simulation {
             pending_queues: Vec::new(),
             agents_added: 0,
             agents_removed: 0,
+            halt: None,
         }
     }
 
@@ -186,8 +191,13 @@ impl Simulation {
     }
 
     /// Execute `iterations` iterations (paper `Scheduler::Simulate`).
+    /// Stops early when an operation raised [`Simulation::halt`].
     pub fn simulate(&mut self, iterations: u64) {
         for _ in 0..iterations {
+            if let Some(reason) = &self.halt {
+                eprintln!("[teraagent] simulation halted: {reason}");
+                break;
+            }
             self.step();
         }
     }

@@ -1,0 +1,152 @@
+//! Coordinated distributed checkpoint/restore (paper §4.3.5 extended
+//! to the distributed engine; DESIGN.md §9).
+//!
+//! Every `Param::dist_checkpoint_freq` supersteps, each rank writes
+//! one `rank<r>.ckpt` file at the superstep barrier — the point where
+//! all ranks sit at the same iteration, every message of the superstep
+//! has been drained (each phase fully consumes what it sends) and no
+//! migration is in flight. The rank file reuses the crash-consistent
+//! framing of `core/backup.rs` (atomic tmp+fsync+rename, version
+//! header, CRC-32 trailer) with kind [`KIND_DISTRIBUTED_RANK`] and
+//! prepends the distributed coordination state to the simulation body:
+//!
+//! ```text
+//! rank u32 | ranks u32 | superstep u64
+//! cut count u16 | cut f64 ...          (partitioner cut points)
+//! 6 x u64 balance counters | last_imbalance f64
+//! <simulation body of core/backup.rs>  (owned agents only)
+//! ```
+//!
+//! Ghosts are deliberately *not* persisted: they are per-superstep
+//! mirrors the next aura exchange regenerates from the owned state.
+//! `restore_distributed` (engine) verifies that all rank files carry
+//! the same superstep — a torn checkpoint (some ranks wrote, some
+//! crashed first) is rejected as a typed error instead of resuming an
+//! inconsistent world line.
+
+use crate::core::backup::{
+    decode_sim, encode_sim, read_file, write_file, BackupError, Cursor, KIND_DISTRIBUTED_RANK,
+};
+use crate::core::simulation::Simulation;
+use crate::distributed::balance::BalanceStats;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Canonical rank-file name inside a checkpoint directory.
+pub fn rank_file(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank{rank}.ckpt"))
+}
+
+/// Write one rank's coordinated checkpoint file.
+pub fn write_rank(
+    dir: &Path,
+    rank: usize,
+    ranks: usize,
+    superstep: u64,
+    cuts: &[f64],
+    balance: &BalanceStats,
+    sim: &Simulation,
+) -> Result<u64, BackupError> {
+    std::fs::create_dir_all(dir)?;
+    let mut body = Vec::new();
+    body.extend_from_slice(&(rank as u32).to_le_bytes());
+    body.extend_from_slice(&(ranks as u32).to_le_bytes());
+    body.extend_from_slice(&superstep.to_le_bytes());
+    body.extend_from_slice(&(cuts.len() as u16).to_le_bytes());
+    for &c in cuts {
+        body.extend_from_slice(&c.to_le_bytes());
+    }
+    for v in [
+        balance.rebalances,
+        balance.cut_updates,
+        balance.rebalance_migrated,
+        balance.rebalance_forwarded,
+        balance.migration_rounds,
+        balance.stats_bytes,
+    ] {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    body.extend_from_slice(&balance.last_imbalance.to_le_bytes());
+    body.extend_from_slice(&encode_sim(sim));
+    write_file(&rank_file(dir, rank), KIND_DISTRIBUTED_RANK, &body)
+}
+
+/// A parsed rank checkpoint: the coordination state plus the
+/// still-encoded simulation body (decoded by [`RankCheckpoint::restore_into`]
+/// once the target rank simulation exists).
+pub struct RankCheckpoint {
+    pub rank: usize,
+    pub ranks: usize,
+    pub superstep: u64,
+    pub cuts: Vec<f64>,
+    pub balance: BalanceStats,
+    body: Vec<u8>,
+    sim_offset: usize,
+}
+
+impl RankCheckpoint {
+    /// Read and verify `rank<r>.ckpt` (framing, CRC, meta layout); the
+    /// simulation body stays encoded until `restore_into`.
+    pub fn read(dir: &Path, rank: usize) -> Result<RankCheckpoint, BackupError> {
+        let body = read_file(&rank_file(dir, rank), KIND_DISTRIBUTED_RANK)?;
+        let mut cur = Cursor::new(&body);
+        let file_rank = cur.u32()? as usize;
+        if file_rank != rank {
+            return Err(BackupError::Corrupt(format!(
+                "rank file for rank {rank} carries rank {file_rank}"
+            )));
+        }
+        let ranks = cur.u32()? as usize;
+        let superstep = cur.u64()?;
+        let ncuts = cur.u16()? as usize;
+        let mut cuts = Vec::with_capacity(ncuts);
+        for _ in 0..ncuts {
+            cuts.push(cur.f64()?);
+        }
+        let mut counters = [0u64; 6];
+        for c in counters.iter_mut() {
+            *c = cur.u64()?;
+        }
+        let last_imbalance = cur.f64()?;
+        let balance = BalanceStats {
+            rebalances: counters[0],
+            cut_updates: counters[1],
+            rebalance_migrated: counters[2],
+            rebalance_forwarded: counters[3],
+            migration_rounds: counters[4],
+            stats_bytes: counters[5],
+            last_imbalance,
+            // wall-clock telemetry is not world-line state; it restarts
+            step_time: Duration::ZERO,
+        };
+        let sim_offset = body.len() - cur.remaining();
+        Ok(RankCheckpoint {
+            rank,
+            ranks,
+            superstep,
+            cuts,
+            balance,
+            body,
+            sim_offset,
+        })
+    }
+
+    /// Decode the simulation body into `sim` (the rank's freshly built
+    /// simulation), re-attaching behaviors from `templates` — the same
+    /// master-wide template map `DistributedEngine::new` installs.
+    pub fn restore_into(
+        &self,
+        sim: &mut Simulation,
+        templates: &HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>>,
+    ) -> Result<u64, BackupError> {
+        let mut cur = Cursor::new(&self.body[self.sim_offset..]);
+        let iter = decode_sim(sim, &mut cur, Some(templates))?;
+        if !cur.is_empty() {
+            return Err(BackupError::Corrupt(
+                "trailing bytes after rank simulation body".to_string(),
+            ));
+        }
+        Ok(iter)
+    }
+}

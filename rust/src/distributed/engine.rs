@@ -65,11 +65,14 @@ use crate::core::agent::{Agent, AgentHandle, AgentUid};
 use crate::core::param::{DistPartitioner, Param};
 use crate::core::simulation::Simulation;
 use crate::distributed::balance::{imbalance, sum_hists, BalanceStats, LoadStats, BALANCE_BINS};
+use crate::distributed::checkpoint::{self, RankCheckpoint};
 use crate::distributed::delta::{deflate, inflate, DeltaCodec};
 use crate::distributed::partition::{MortonPartitioner, Partitioner, SlabPartition};
-use crate::distributed::serialize::{tailored, AgentRegistry};
+use crate::distributed::serialize::{capture_templates_map, tailored, AgentRegistry};
 use crate::distributed::transport::{InProcessTransport, TcpTransport, Transport};
+use crate::distributed::DistError;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 const TAG_MIGRATION: u32 = 1;
@@ -94,28 +97,6 @@ pub fn build_partition(param: &Param, ranks: usize) -> Box<dyn Partitioner> {
             aura,
         )),
     }
-}
-
-/// One behavior set per agent type, captured from a population — the
-/// template store migrated agents get their behaviors from (behaviors
-/// never cross the wire, §6.2.2). The engine captures this from the
-/// *master* population before splitting it, so every rank can revive
-/// every type — including types its initial region never contained
-/// (a rank whose first TumorCell arrives via rebalancing still needs
-/// the template).
-fn capture_templates_map(
-    rm: &crate::core::resource_manager::ResourceManager,
-) -> HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> {
-    let mut templates: HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> =
-        HashMap::new();
-    rm.for_each_agent(|_, a| {
-        if !a.base().behaviors.is_empty() {
-            templates
-                .entry(a.type_tag())
-                .or_insert_with(|| a.base().behaviors.to_vec());
-        }
-    });
-    templates
 }
 
 /// Aura wire-format version (high nibble of the 1-byte header).
@@ -254,8 +235,10 @@ impl RankWorker {
     /// One full superstep of this rank (phases 1–4, with the PR 5
     /// rebalancing phase 1b on its cadence). Sequential in-process,
     /// rank-per-thread in-process, and TCP multi-process execution all
-    /// drive exactly this sequence.
-    pub fn superstep(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    /// drive exactly this sequence. Failures — transport faults,
+    /// malformed peer data — surface as typed [`DistError`]s instead
+    /// of panics, so a driver can halt (or retry) gracefully.
+    pub fn superstep(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         self.remove_ghosts();
         if self.rebalance_due() {
             self.balance_send(transport)?;
@@ -285,13 +268,13 @@ impl RankWorker {
     /// Phase 1b send half: sample this rank's [`LoadStats`] (owned
     /// agents, interval timings, the agent histogram over the
     /// partitioner's order space) and broadcast it to every peer.
-    pub fn balance_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn balance_send(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         let stats = self.collect_load_stats();
         let payload = stats.to_bytes();
         self.pending_load = Some(stats);
         self.balance.stats_bytes +=
             payload.len() as u64 * (self.partition.ranks() as u64 - 1);
-        transport.broadcast(self.rank, TAG_LOAD, &payload)
+        Ok(transport.broadcast(self.rank, TAG_LOAD, &payload)?)
     }
 
     /// Phase 1b receive half: collect every peer's stats, recompute the
@@ -299,7 +282,7 @@ impl RankWorker {
     /// return how many bulk-migration rounds must follow (0 when the
     /// cuts did not move). All ranks compute the same cuts and the same
     /// round count from the same gossip — no agreement protocol.
-    pub fn balance_recv_and_cut(&mut self, transport: &dyn Transport) -> Result<usize, String> {
+    pub fn balance_recv_and_cut(&mut self, transport: &dyn Transport) -> Result<usize, DistError> {
         let ranks = self.partition.ranks();
         let mut all: Vec<LoadStats> = Vec::with_capacity(ranks);
         for peer in 0..ranks {
@@ -314,10 +297,10 @@ impl RankWorker {
             let bytes = transport.recv(self.rank, peer, TAG_LOAD)?;
             let s = LoadStats::from_bytes(&bytes)?;
             if s.rank as usize != peer {
-                return Err(format!(
+                return Err(DistError::Protocol(format!(
                     "load gossip rank mismatch: {} claimed by peer {peer}",
                     s.rank
-                ));
+                )));
             }
             all.push(s);
         }
@@ -345,14 +328,14 @@ impl RankWorker {
     /// owner before the local step — in-flight agents are *not*
     /// stepped at intermediate ranks, which is what preserves the
     /// bitwise on/off-balancing identity.
-    pub fn balance_round(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn balance_round(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         self.balance_round_send(transport)?;
         self.migrate_recv(transport)
     }
 
     /// Send half of [`RankWorker::balance_round`] plus its accounting
     /// (the sequential driver interleaves all sends before any recv).
-    pub fn balance_round_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn balance_round_send(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         let (migrated, forwarded) = (self.stats.migrated_agents, self.stats.forwarded_agents);
         self.migrate_send(transport)?;
         self.balance.rebalance_migrated += self.stats.migrated_agents - migrated;
@@ -410,7 +393,7 @@ impl RankWorker {
     /// transit the agent steps at the intermediate rank, so the
     /// Fig 6.5 bitwise contract is only guaranteed when
     /// `forwarded_agents == 0` (see the module docs).
-    pub fn migrate_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn migrate_send(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         let neighbors = self.partition.neighbors(self.rank);
         if neighbors.is_empty() {
             return Ok(());
@@ -470,7 +453,7 @@ impl RankWorker {
     /// non-neighbor owner is committed here like any other arrival;
     /// the next superstep's `migrate_send` scan re-evaluates its owner
     /// and forwards it onward (multi-hop migration).
-    pub fn migrate_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn migrate_recv(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         for nb in self.partition.neighbors(self.rank) {
             let buf = transport.recv(self.rank, nb, TAG_MIGRATION)?;
             let t = Instant::now();
@@ -493,7 +476,7 @@ impl RankWorker {
     /// Phase 3a: send aura agents to neighbors. Membership streams the
     /// SoA columns; the payload is delta-encoded and/or deflated per
     /// the worker flags, announced in the 1-byte wire header.
-    pub fn aura_send(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn aura_send(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         let neighbors = self.partition.neighbors(self.rank);
         if neighbors.is_empty() {
             return Ok(());
@@ -570,20 +553,22 @@ impl RankWorker {
     /// Phase 3b: receive aura agents, add them as ghosts. The message
     /// header announces the encoding — no configuration agreement with
     /// the sender needed.
-    pub fn aura_recv(&mut self, transport: &dyn Transport) -> Result<(), String> {
+    pub fn aura_recv(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
         for nb in self.partition.neighbors(self.rank) {
             let msg = transport.recv(self.rank, nb, TAG_AURA)?;
             let t = Instant::now();
             let header = *msg.first().ok_or("empty aura message")?;
             let version = header >> 4;
             if version != WIRE_VERSION {
-                return Err(format!(
+                return Err(DistError::Protocol(format!(
                     "aura wire version {version}, expected {WIRE_VERSION}"
-                ));
+                )));
             }
             let flags = header & 0x0F;
             if flags & !(FLAG_DELTA | FLAG_DEFLATE) != 0 {
-                return Err(format!("unknown aura flags {flags:#06b}"));
+                return Err(DistError::Protocol(format!(
+                    "unknown aura flags {flags:#06b}"
+                )));
             }
             let inflated;
             let payload: &[u8] = if flags & FLAG_DEFLATE != 0 {
@@ -648,10 +633,20 @@ impl RankWorker {
 /// Results are bitwise identical between the two modes.
 pub struct DistributedEngine {
     pub workers: Vec<RankWorker>,
-    transport: InProcessTransport,
+    /// The message transport — in-process mailboxes by default;
+    /// [`DistributedEngine::set_transport`] swaps in a decorated one
+    /// (fault injection, reliable delivery).
+    transport: Box<dyn Transport>,
     pub iteration: u64,
     /// Run ranks on scoped threads (the default) or sequentially.
     pub threaded: bool,
+    /// Coordinated checkpoint cadence in supersteps
+    /// (`Param::dist_checkpoint_freq`); 0 = never.
+    pub checkpoint_freq: u64,
+    /// Where the periodic checkpoints go
+    /// (`Param::dist_checkpoint_dir`, default
+    /// `<output_dir>/checkpoints`).
+    pub checkpoint_dir: PathBuf,
 }
 
 impl DistributedEngine {
@@ -675,6 +670,12 @@ impl DistributedEngine {
         // decomposition from the *built* parameters
         let partition = build_partition(&master.param, ranks);
         let rebalance_freq = master.param.dist_rebalance_freq;
+        let checkpoint_freq = master.param.dist_checkpoint_freq;
+        let checkpoint_dir = if master.param.dist_checkpoint_dir.is_empty() {
+            Path::new(&master.param.output_dir).join("checkpoints")
+        } else {
+            PathBuf::from(&master.param.dist_checkpoint_dir)
+        };
         let templates = capture_templates_map(&master.rm);
         let agents = master.rm.drain_all();
         let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
@@ -707,10 +708,25 @@ impl DistributedEngine {
         }
         DistributedEngine {
             workers,
-            transport: InProcessTransport::new(ranks),
+            transport: Box::new(InProcessTransport::new(ranks)),
             iteration: 0,
             threaded,
+            checkpoint_freq,
+            checkpoint_dir,
         }
+    }
+
+    /// Swap the message transport — e.g. wrap the in-process mailboxes
+    /// in [`crate::distributed::fault::FaultyTransport`] and/or
+    /// [`crate::distributed::fault::ReliableTransport`]. The
+    /// replacement must span the same rank count.
+    pub fn set_transport(&mut self, transport: Box<dyn Transport>) {
+        assert_eq!(
+            transport.ranks(),
+            self.workers.len(),
+            "transport rank count must match the engine"
+        );
+        self.transport = transport;
     }
 
     /// Enable delta encoding of aura updates on all ranks (§6.2.3).
@@ -728,21 +744,39 @@ impl DistributedEngine {
     }
 
     /// One distributed superstep: rank-per-thread by default,
-    /// phase-interleaved sequential when `threaded` is off.
-    pub fn step(&mut self) {
+    /// phase-interleaved sequential when `threaded` is off. Transport
+    /// faults, malformed peer data and checkpoint failures surface as
+    /// typed [`DistError`]s — a failed superstep leaves the engine in
+    /// an undefined exchange state, so callers should treat an error
+    /// as fatal for the run (and restore from the last checkpoint).
+    pub fn step(&mut self) -> Result<(), DistError> {
         if self.threaded && self.workers.len() > 1 {
-            let transport = &self.transport;
+            let transport: &dyn Transport = self.transport.as_ref();
+            let workers = &mut self.workers;
+            let mut first_err: Option<DistError> = None;
             std::thread::scope(|scope| {
-                for w in &mut self.workers {
-                    // scope joins every spawned thread on exit; the
-                    // handles themselves are not needed
-                    let _ = scope.spawn(move || {
-                        w.superstep(transport).expect("distributed superstep");
+                let mut handles = Vec::with_capacity(workers.len());
+                for w in workers.iter_mut() {
+                    handles.push(scope.spawn(move || w.superstep(transport)));
+                }
+                for h in handles {
+                    // a rank thread that died (panic) is reported as a
+                    // protocol error instead of cascading the panic
+                    // into the driver; sibling ranks surface their own
+                    // timeouts through the transport watchdog
+                    let r = h.join().unwrap_or_else(|_| {
+                        Err(DistError::Protocol("rank thread panicked".to_string()))
                     });
+                    if let Err(e) = r {
+                        first_err.get_or_insert(e);
+                    }
                 }
             });
+            if let Some(e) = first_err {
+                return Err(e);
+            }
         } else {
-            let t = &self.transport;
+            let t: &dyn Transport = self.transport.as_ref();
             for w in &mut self.workers {
                 w.remove_ghosts();
             }
@@ -752,44 +786,134 @@ impl DistributedEngine {
             // functions, so every worker takes the same branch.
             if self.workers.iter().any(|w| w.rebalance_due()) {
                 for w in &mut self.workers {
-                    w.balance_send(t).expect("balance send");
+                    w.balance_send(t)?;
                 }
                 let mut rounds = 0usize;
                 for w in &mut self.workers {
-                    rounds = w.balance_recv_and_cut(t).expect("balance cut");
+                    rounds = w.balance_recv_and_cut(t)?;
                 }
                 for _ in 0..rounds {
                     for w in &mut self.workers {
-                        w.balance_round_send(t).expect("rebalance migrate send");
+                        w.balance_round_send(t)?;
                     }
                     for w in &mut self.workers {
-                        w.migrate_recv(t).expect("rebalance migrate recv");
+                        w.migrate_recv(t)?;
                     }
                 }
             }
             for w in &mut self.workers {
-                w.migrate_send(t).expect("migrate send");
+                w.migrate_send(t)?;
             }
             for w in &mut self.workers {
-                w.migrate_recv(t).expect("migrate recv");
+                w.migrate_recv(t)?;
             }
             for w in &mut self.workers {
-                w.aura_send(t).expect("aura send");
+                w.aura_send(t)?;
             }
             for w in &mut self.workers {
-                w.aura_recv(t).expect("aura recv");
+                w.aura_recv(t)?;
             }
             for w in &mut self.workers {
                 w.step_local();
             }
         }
         self.iteration += 1;
+        // the coordinated checkpoint: this point is the superstep
+        // barrier — every rank has joined (or run) its superstep, all
+        // messages of the superstep are drained, no migration is in
+        // flight, and all ranks agree on the iteration counter.
+        if self.checkpoint_freq > 0 && self.iteration % self.checkpoint_freq == 0 {
+            let dir = self.checkpoint_dir.clone();
+            self.checkpoint_to(&dir)?;
+        }
+        Ok(())
     }
 
-    pub fn simulate(&mut self, iterations: u64) {
+    pub fn simulate(&mut self, iterations: u64) -> Result<(), DistError> {
         for _ in 0..iterations {
-            self.step();
+            self.step()?;
         }
+        Ok(())
+    }
+
+    /// Write one coordinated checkpoint — `rank<r>.ckpt` per rank —
+    /// into `dir`. Must be called between supersteps (the periodic
+    /// hook in [`DistributedEngine::step`] is). Returns total bytes.
+    pub fn checkpoint_to(&self, dir: &Path) -> Result<u64, DistError> {
+        let ranks = self.workers.len();
+        let mut bytes = 0u64;
+        for w in &self.workers {
+            bytes += checkpoint::write_rank(
+                dir,
+                w.rank,
+                ranks,
+                self.iteration,
+                &w.partition.cut_points(),
+                &w.balance,
+                &w.sim,
+            )?;
+        }
+        Ok(bytes)
+    }
+
+    /// Rebuild an engine from a coordinated checkpoint. `builder` and
+    /// `param` must be the ones the checkpointed run was created with
+    /// (the restore contract of `core/backup.rs` — seed, substances
+    /// and partitioner shape are verified, not assumed). All rank
+    /// files must exist, verify, and agree on one superstep: a torn
+    /// checkpoint — some ranks wrote, others crashed first — is
+    /// rejected with a typed error instead of resuming an inconsistent
+    /// world line. The resumed run is bitwise identical to an
+    /// uninterrupted one.
+    pub fn restore_from(
+        builder: &dyn Fn(Param) -> Simulation,
+        param: Param,
+        ranks: usize,
+        threads_per_rank: usize,
+        dir: &Path,
+    ) -> Result<Self, DistError> {
+        let mut engine = Self::new(builder, param, ranks, threads_per_rank);
+        let mut checkpoints = Vec::with_capacity(ranks);
+        for r in 0..ranks {
+            let ck = RankCheckpoint::read(dir, r)?;
+            if ck.ranks != ranks {
+                return Err(DistError::Protocol(format!(
+                    "checkpoint in {} was written by {} ranks, restoring with {ranks}",
+                    dir.display(),
+                    ck.ranks
+                )));
+            }
+            checkpoints.push(ck);
+        }
+        let superstep = checkpoints[0].superstep;
+        if let Some(ck) = checkpoints.iter().find(|c| c.superstep != superstep) {
+            return Err(DistError::Protocol(format!(
+                "torn checkpoint in {}: rank 0 is at superstep {superstep}, rank {} at {}",
+                dir.display(),
+                ck.rank,
+                ck.superstep
+            )));
+        }
+        for (w, ck) in engine.workers.iter_mut().zip(&checkpoints) {
+            w.partition
+                .restore_cuts(&ck.cuts)
+                .map_err(DistError::Protocol)?;
+            ck.restore_into(&mut w.sim, &w.templates)?;
+            w.balance = ck.balance.clone();
+            w.iteration = superstep;
+            // superstep-transient state restarts empty: ghosts are
+            // regenerated by the next aura exchange, and the delta
+            // codecs resynchronize from scratch on *every* rank, so
+            // sender and receiver windows stay paired
+            w.ghosts.clear();
+            w.send_codecs.clear();
+            w.recv_codecs.clear();
+            w.step_time = Duration::ZERO;
+            w.last_op_nanos = w.sim.timers.total_nanos();
+            w.pending_load = None;
+        }
+        engine.iteration = superstep;
+        Ok(engine)
     }
 
     /// Total owned agents across ranks.
@@ -907,10 +1031,11 @@ pub fn run_tcp_worker(
     ranks: usize,
     base_port: u16,
     iterations: u64,
-) -> Result<(), String> {
+) -> Result<(), DistError> {
     AgentRegistry::register_builtins();
     let delta = param.dist_aura_delta;
     let deflate = param.dist_aura_deflate;
+    let max_message_bytes = param.dist_max_message_bytes;
     // every process builds the same master population deterministically
     // (same seed) and keeps only its slab — no central coordinator
     // needed for setup.
@@ -932,7 +1057,8 @@ pub fn run_tcp_worker(
         .collect();
     sim.rm.commit_additions(mine);
 
-    let transport = TcpTransport::bind(rank, ranks, base_port)?;
+    let transport = TcpTransport::bind(rank, ranks, base_port)?
+        .with_max_message_bytes(max_message_bytes);
     // tiny settle delay so all ranks are listening before first send
     std::thread::sleep(std::time::Duration::from_millis(200));
     let mut worker = RankWorker::new(rank, partition, sim);
@@ -1011,7 +1137,7 @@ mod tests {
     #[test]
     fn steps_conserve_agents_and_exchange_ghosts() {
         let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
-        engine.simulate(5);
+        engine.simulate(5).unwrap();
         assert_eq!(engine.num_agents(), 310, "no agents lost in exchanges");
         let stats = engine.stats();
         assert!(stats.ghosts_received > 0, "aura must move ghosts");
@@ -1027,7 +1153,7 @@ mod tests {
 
         for ranks in [2usize, 4] {
             let mut engine = DistributedEngine::new(&builder, sir_param(1), ranks, 1);
-            engine.simulate(10);
+            engine.simulate(10).unwrap();
             // contract precondition: no displacement ever exceeded a slab
             assert_eq!(engine.stats().forwarded_agents, 0, "ranks={ranks}");
             let got = engine.state_snapshot();
@@ -1057,7 +1183,7 @@ mod tests {
                 p.dist_threaded_ranks = threaded;
                 let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
                 assert_eq!(engine.threaded, threaded);
-                engine.simulate(8);
+                engine.simulate(8).unwrap();
                 engine.state_snapshot()
             };
             let threaded = run(true);
@@ -1083,12 +1209,12 @@ mod tests {
             )
         };
         let mut plain = DistributedEngine::new(&slow, sir_param(1), 2, 1);
-        plain.simulate(8);
+        plain.simulate(8).unwrap();
         let raw = plain.stats();
 
         let mut delta = DistributedEngine::new(&slow, sir_param(1), 2, 1);
         delta.set_delta_enabled(true);
-        delta.simulate(8);
+        delta.simulate(8).unwrap();
         let enc = delta.stats();
         // identical results
         assert_eq!(plain.state_snapshot(), delta.state_snapshot());
@@ -1108,12 +1234,12 @@ mod tests {
     #[test]
     fn deflate_stage_shrinks_and_preserves_results() {
         let mut plain = DistributedEngine::new(&builder, sir_param(1), 2, 1);
-        plain.simulate(8);
+        plain.simulate(8).unwrap();
         let mut p = sir_param(1);
         p.dist_aura_delta = true;
         p.dist_aura_deflate = true;
         let mut both = DistributedEngine::new(&builder, p, 2, 1);
-        both.simulate(8);
+        both.simulate(8).unwrap();
         assert_eq!(plain.state_snapshot(), both.state_snapshot());
         let (a, b) = (plain.stats(), both.stats());
         assert_eq!(a.aura_bytes_raw, b.aura_bytes_raw, "same raw accounting");
@@ -1129,7 +1255,7 @@ mod tests {
     #[test]
     fn migration_moves_ownership() {
         let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
-        engine.simulate(20);
+        engine.simulate(20).unwrap();
         let stats = engine.stats();
         assert!(stats.migrated_agents > 0, "random movement must migrate");
         assert_eq!(engine.num_agents(), 310);
@@ -1261,7 +1387,7 @@ mod tests {
         for ranks in [2usize, 4] {
             let mut engine =
                 DistributedEngine::new(&wrap_walk_builder, sir_param(1), ranks, 1);
-            engine.simulate(12);
+            engine.simulate(12).unwrap();
             assert_eq!(engine.num_agents(), 40, "ranks={ranks}: agents lost at wrap");
             assert_eq!(engine.state_snapshot(), expect, "ranks={ranks}");
             assert!(
@@ -1286,7 +1412,7 @@ mod tests {
                 p.dist_partitioner = partitioner;
                 p.dist_rebalance_freq = 3;
                 let mut engine = DistributedEngine::new(&builder, p, ranks, 1);
-                engine.simulate(10);
+                engine.simulate(10).unwrap();
                 assert_eq!(
                     engine.num_agents(),
                     310,
@@ -1317,7 +1443,7 @@ mod tests {
                 p.dist_rebalance_freq = 2;
                 p.dist_partitioner = partitioner;
                 let mut engine = DistributedEngine::new(&builder, p, 4, 1);
-                engine.simulate(8);
+                engine.simulate(8).unwrap();
                 (engine.state_snapshot(), engine.balance_stats().rebalances)
             };
             let (threaded, ra) = run(true);
@@ -1360,7 +1486,7 @@ mod tests {
         let mut engine = DistributedEngine::new(&clustered_builder, p, 4, 1);
         let owned = engine.owned_per_rank();
         assert_eq!(owned[0], 200, "uniform slabs leave all load on rank 0");
-        engine.simulate(3); // the rebalance fires before superstep 3
+        engine.simulate(3).unwrap(); // the rebalance fires before superstep 3
         let owned = engine.owned_per_rank();
         assert_eq!(owned.iter().sum::<usize>(), 200, "conservation: {owned:?}");
         let max = *owned.iter().max().unwrap();
@@ -1394,11 +1520,11 @@ mod tests {
             .rm
             .get_by_uid(1_000_001)
             .is_some());
-        engine.simulate(3);
+        engine.simulate(3).unwrap();
         assert_eq!(engine.num_agents(), 201);
         assert!(engine.remove_agent(1_000_001));
         assert!(!engine.remove_agent(1_000_001), "already removed");
-        engine.simulate(2);
+        engine.simulate(2).unwrap();
         assert_eq!(engine.num_agents(), 200);
     }
 
@@ -1459,5 +1585,198 @@ mod tests {
         }
         merged.sort_by_key(|e| e.0);
         assert_eq!(merged, expect, "TCP 2-rank run must match shared memory");
+    }
+
+    // ---------------------------------------------------------------
+    // PR 6: coordinated checkpoint/restore + fault injection
+    // ---------------------------------------------------------------
+
+    use crate::core::backup::BackupError;
+    use crate::distributed::fault::{FaultConfig, FaultyTransport, ReliableTransport};
+    use crate::distributed::transport::TransportError;
+    use crate::distributed::DistError;
+
+    fn ckpt_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "teraagent_ckpt_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn distributed_checkpoint_restore_is_bitwise() {
+        // the PR 6 contract: the periodic hook checkpoints at
+        // superstep 5, the engine is dropped ("crash"), restore_from
+        // resumes, and 5 more supersteps land bitwise identical to the
+        // uninterrupted 10-superstep shared-memory run — with
+        // rebalancing on, at 1, 2 and 4 ranks.
+        let mut reference = builder(sir_param(1));
+        reference.simulate(10);
+        let expect = simulation_snapshot(&reference);
+        for ranks in [1usize, 2, 4] {
+            let dir = ckpt_dir(&format!("bitwise{ranks}"));
+            let mut p = sir_param(1);
+            p.dist_rebalance_freq = 3;
+            p.dist_checkpoint_freq = 5;
+            p.dist_checkpoint_dir = dir.to_string_lossy().to_string();
+            let mut engine = DistributedEngine::new(&builder, p.clone(), ranks, 1);
+            engine.simulate(5).unwrap();
+            for r in 0..ranks {
+                assert!(
+                    checkpoint::rank_file(&dir, r).exists(),
+                    "ranks={ranks}: hook must write rank {r}"
+                );
+            }
+            drop(engine);
+
+            let mut restored =
+                DistributedEngine::restore_from(&builder, p, ranks, 1, &dir).unwrap();
+            assert_eq!(restored.iteration, 5, "ranks={ranks}");
+            assert_eq!(restored.num_agents(), 310, "ranks={ranks}");
+            restored.simulate(5).unwrap();
+            assert_eq!(
+                restored.state_snapshot(),
+                expect,
+                "ranks={ranks}: restored run diverged"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_torn_checkpoint() {
+        let dir = ckpt_dir("torn");
+        let p = sir_param(1);
+        let mut engine = DistributedEngine::new(&builder, p.clone(), 2, 1);
+        engine.simulate(2).unwrap();
+        engine.checkpoint_to(&dir).unwrap();
+        // rank 1 advances and overwrites only its own file — the state
+        // a crash in the middle of a later checkpoint leaves behind
+        engine.simulate(1).unwrap();
+        let w = &engine.workers[1];
+        checkpoint::write_rank(
+            &dir,
+            1,
+            2,
+            engine.iteration,
+            &w.partition.cut_points(),
+            &w.balance,
+            &w.sim,
+        )
+        .unwrap();
+        match DistributedEngine::restore_from(&builder, p, 2, 1, &dir) {
+            Err(DistError::Protocol(msg)) => {
+                assert!(msg.contains("torn"), "{msg}")
+            }
+            other => panic!(
+                "torn checkpoint must be rejected, got {:?}",
+                other.map(|_| ())
+            ),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_rejects_missing_rank_file_and_rank_count_mismatch() {
+        let dir = ckpt_dir("rankcount");
+        let p = sir_param(1);
+        let mut engine = DistributedEngine::new(&builder, p.clone(), 2, 1);
+        engine.simulate(1).unwrap();
+        engine.checkpoint_to(&dir).unwrap();
+        // a 4-rank restore of a 2-rank checkpoint: rank 0's file
+        // verifies but declares the wrong rank count
+        match DistributedEngine::restore_from(&builder, p.clone(), 4, 1, &dir) {
+            Err(DistError::Protocol(msg)) => assert!(msg.contains("2 ranks"), "{msg}"),
+            other => panic!(
+                "rank-count mismatch must be rejected, got {:?}",
+                other.map(|_| ())
+            ),
+        }
+        std::fs::remove_file(checkpoint::rank_file(&dir, 1)).unwrap();
+        match DistributedEngine::restore_from(&builder, p, 2, 1, &dir) {
+            Err(DistError::Checkpoint(BackupError::Io(_))) => {}
+            other => panic!(
+                "missing rank file must fail typed, got {:?}",
+                other.map(|_| ())
+            ),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn faulty_transport_fuzz_reliable_is_bitwise_or_typed() {
+        // fuzz the full distributed model under injected faults: with
+        // the reliable layer on top, every seed must either finish
+        // bitwise identical to the clean run or fail with a typed
+        // error — never hang, never silently corrupt.
+        let mut reference = builder(sir_param(1));
+        reference.simulate(6);
+        let expect = simulation_snapshot(&reference);
+        for seed in [11u64, 29, 47] {
+            let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
+            let inner =
+                InProcessTransport::new(2).with_recv_timeout(Duration::from_secs(2));
+            let faulty = FaultyTransport::new(
+                inner,
+                FaultConfig {
+                    seed,
+                    drop_p: 0.03,
+                    corrupt_p: 0.03,
+                    duplicate_p: 0.03,
+                    delay_p: 0.03,
+                },
+            );
+            let reliable = ReliableTransport::new(faulty)
+                .with_poll(Duration::from_millis(5))
+                .with_max_wait(Duration::from_secs(5))
+                .with_history_cap(64);
+            engine.set_transport(Box::new(reliable));
+            let start = std::time::Instant::now();
+            match engine.simulate(6) {
+                Ok(()) => assert_eq!(
+                    engine.state_snapshot(),
+                    expect,
+                    "seed={seed}: faults changed the results"
+                ),
+                // a typed failure is an acceptable outcome; silent
+                // corruption or a hang is not
+                Err(e) => eprintln!("seed {seed}: typed failure: {e}"),
+            }
+            assert!(
+                start.elapsed() < Duration::from_secs(60),
+                "seed={seed}: fuzz run must not hang"
+            );
+        }
+    }
+
+    #[test]
+    fn raw_faulty_transport_fails_typed_not_hangs() {
+        // without the reliable layer, an unrecoverable fault pattern
+        // (everything dropped) must surface as a typed timeout from
+        // the superstep — not a panic, not a hang.
+        let mut engine = DistributedEngine::new(&builder, sir_param(1), 2, 1);
+        let inner =
+            InProcessTransport::new(2).with_recv_timeout(Duration::from_millis(200));
+        let faulty = FaultyTransport::new(
+            inner,
+            FaultConfig {
+                seed: 5,
+                drop_p: 1.0,
+                ..FaultConfig::default()
+            },
+        );
+        engine.set_transport(Box::new(faulty));
+        let start = std::time::Instant::now();
+        let err = engine.simulate(3).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                DistError::Transport(TransportError::Timeout { .. })
+            ),
+            "expected a typed timeout, got {err:?}"
+        );
+        assert!(start.elapsed() < Duration::from_secs(30));
     }
 }

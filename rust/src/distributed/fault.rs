@@ -1,0 +1,643 @@
+//! Deterministic fault injection + reliable delivery (DESIGN.md §9).
+//!
+//! Two decorators over any [`Transport`]:
+//!
+//! * [`FaultyTransport`] — deterministically (seeded) drops, delays,
+//!   duplicates and bit-flips messages. The fault pattern for the
+//!   n-th message on a channel is a pure function of
+//!   `(seed, from, to, tag, n)` via the engine's counter-based RNG, so
+//!   a fuzz failure reproduces exactly from its seed regardless of
+//!   thread scheduling.
+//! * [`ReliableTransport`] — a sequence-number + CRC envelope with
+//!   duplicate suppression, reorder buffering and resend-history
+//!   recovery. Stacked *outside* the faulty layer it turns every
+//!   injected fault into either an exact recovery (the engine sees a
+//!   clean, in-order, bitwise-original message stream) or a *typed*
+//!   error — never a hang, never silent divergence.
+//!
+//! The resend history is shared through the transport instance, which
+//! all in-process ranks hold — it plays the role of the sender-side
+//! retransmit buffer that a NACK would hit in a real MPI/network
+//! stack. Across OS processes (TCP) each side has its own instance,
+//! so recovery degrades to detection: the TCP layer's per-frame CRC
+//! rejects corruption with a typed error instead of delivering it.
+
+use crate::core::crc32::Crc32;
+use crate::core::random::{mix, Rng};
+use crate::distributed::transport::{Transport, TransportError};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A directed message channel: (from, to, tag).
+type Key = (usize, usize, u32);
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// --------------------------------------------------------------------
+// fault injection
+// --------------------------------------------------------------------
+
+/// Independent per-message fault probabilities (each in `[0, 1]`).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// RNG seed — the whole fault pattern derives from it.
+    pub seed: u64,
+    /// Message vanishes.
+    pub drop_p: f64,
+    /// One random payload bit is flipped.
+    pub corrupt_p: f64,
+    /// Message is delivered twice.
+    pub duplicate_p: f64,
+    /// Message is held back and released after the *next* send on the
+    /// same channel (reordering); a held message with no later send
+    /// behaves like a drop.
+    pub delay_p: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            duplicate_p: 0.0,
+            delay_p: 0.0,
+        }
+    }
+}
+
+/// What the faulty layer did so far.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultStats {
+    pub sent: u64,
+    pub dropped: u64,
+    pub corrupted: u64,
+    pub duplicated: u64,
+    pub delayed: u64,
+}
+
+/// Decorator that injects deterministic faults into `inner`.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    config: FaultConfig,
+    /// per-channel send counter — the `n` in the fault function
+    counters: Mutex<HashMap<Key, u64>>,
+    /// held-back messages, released by the next send on the channel
+    held: Mutex<HashMap<Key, Vec<Vec<u8>>>>,
+    stats: Mutex<FaultStats>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    pub fn new(inner: T, config: FaultConfig) -> Self {
+        FaultyTransport {
+            inner,
+            config,
+            counters: Mutex::new(HashMap::new()),
+            held: Mutex::new(HashMap::new()),
+            stats: Mutex::new(FaultStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        lock(&self.stats).clone()
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn ranks(&self) -> usize {
+        self.inner.ranks()
+    }
+
+    fn send(
+        &self,
+        from: usize,
+        to: usize,
+        tag: u32,
+        mut data: Vec<u8>,
+    ) -> Result<(), TransportError> {
+        let key = (from, to, tag);
+        let n = {
+            let mut c = lock(&self.counters);
+            let e = c.entry(key).or_insert(0);
+            let n = *e;
+            *e += 1;
+            n
+        };
+        // the fault pattern for message n on a channel is a pure
+        // function of (seed, channel, n) — scheduling independent
+        let mut rng = Rng::new(mix(&[self.config.seed, from as u64, to as u64, tag as u64, n]));
+        let r_drop = rng.uniform01();
+        let r_corrupt = rng.uniform01();
+        let r_dup = rng.uniform01();
+        let r_delay = rng.uniform01();
+        lock(&self.stats).sent += 1;
+
+        if r_drop < self.config.drop_p {
+            lock(&self.stats).dropped += 1;
+            return Ok(()); // vanished
+        }
+        if r_corrupt < self.config.corrupt_p && !data.is_empty() {
+            let bit = (rng.next_u64() as usize) % (data.len() * 8);
+            data[bit / 8] ^= 1 << (bit % 8);
+            lock(&self.stats).corrupted += 1;
+        }
+        if r_delay < self.config.delay_p {
+            lock(&self.held).entry(key).or_default().push(data);
+            lock(&self.stats).delayed += 1;
+            return Ok(());
+        }
+        let dup = r_dup < self.config.duplicate_p;
+        if dup {
+            self.inner.send(from, to, tag, data.clone())?;
+            lock(&self.stats).duplicated += 1;
+        }
+        self.inner.send(from, to, tag, data)?;
+        // release held messages AFTER this one — that's the reorder
+        let flush = lock(&self.held).remove(&key);
+        if let Some(msgs) = flush {
+            for m in msgs {
+                self.inner.send(from, to, tag, m)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError> {
+        self.inner.recv(to, from, tag)
+    }
+
+    fn recv_timeout(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
+        self.inner.recv_timeout(to, from, tag, timeout)
+    }
+}
+
+// --------------------------------------------------------------------
+// reliable delivery
+// --------------------------------------------------------------------
+
+const REL_MAGIC: [u8; 4] = *b"RSEQ";
+/// `[magic 4][seq u64][crc u32]` + payload; CRC over seq bytes and
+/// payload, so flipped sequence numbers are detected too.
+const REL_HEADER: usize = 16;
+
+/// Reliable-layer accounting.
+#[derive(Debug, Default, Clone)]
+pub struct ReliableStats {
+    pub sent: u64,
+    pub delivered: u64,
+    /// frames that failed the envelope check (bad magic/CRC/length)
+    pub corrupt_frames: u64,
+    pub duplicates_dropped: u64,
+    /// out-of-order frames parked until their turn
+    pub reordered: u64,
+    /// messages served from the sender-side resend history
+    pub history_recoveries: u64,
+}
+
+struct RelState {
+    send_seq: HashMap<Key, u64>,
+    /// sender-side retransmit buffer: last `history_cap` payloads per
+    /// channel — what a NACK would re-request in a real network stack
+    history: HashMap<Key, VecDeque<(u64, Vec<u8>)>>,
+    expected: HashMap<Key, u64>,
+    /// received-early frames waiting for the sequence gap to close
+    stash: HashMap<Key, BTreeMap<u64, Vec<u8>>>,
+}
+
+/// Sequence/CRC/resend envelope over any transport. Delivery is
+/// exactly-once and in-order per channel; unfixable loss surfaces as
+/// [`TransportError::Timeout`] or [`TransportError::Unrecoverable`],
+/// never as a hang or a silently wrong payload.
+pub struct ReliableTransport<T: Transport> {
+    inner: T,
+    /// how long one inner poll blocks before recovery is attempted
+    poll: Duration,
+    /// total budget per recv before a typed timeout
+    max_wait: Duration,
+    history_cap: usize,
+    state: Mutex<RelState>,
+    stats: Mutex<ReliableStats>,
+}
+
+impl<T: Transport> ReliableTransport<T> {
+    pub fn new(inner: T) -> Self {
+        ReliableTransport {
+            inner,
+            poll: Duration::from_millis(50),
+            max_wait: Duration::from_secs(10),
+            history_cap: 64,
+            state: Mutex::new(RelState {
+                send_seq: HashMap::new(),
+                history: HashMap::new(),
+                expected: HashMap::new(),
+                stash: HashMap::new(),
+            }),
+            stats: Mutex::new(ReliableStats::default()),
+        }
+    }
+
+    /// Total time a recv may spend recovering before it fails typed.
+    pub fn with_max_wait(mut self, max_wait: Duration) -> Self {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Inner poll interval (recovery is attempted between polls).
+    pub fn with_poll(mut self, poll: Duration) -> Self {
+        self.poll = poll;
+        self
+    }
+
+    /// Per-channel resend-history depth.
+    pub fn with_history_cap(mut self, cap: usize) -> Self {
+        self.history_cap = cap.max(1);
+        self
+    }
+
+    pub fn stats(&self) -> ReliableStats {
+        lock(&self.stats).clone()
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    fn envelope(seq: u64, payload: &[u8]) -> Vec<u8> {
+        let mut h = Crc32::new();
+        h.update(&seq.to_le_bytes());
+        h.update(payload);
+        let mut env = Vec::with_capacity(REL_HEADER + payload.len());
+        env.extend_from_slice(&REL_MAGIC);
+        env.extend_from_slice(&seq.to_le_bytes());
+        env.extend_from_slice(&h.finish().to_le_bytes());
+        env.extend_from_slice(payload);
+        env
+    }
+
+    fn parse(env: &[u8]) -> Result<(u64, &[u8]), ()> {
+        if env.len() < REL_HEADER || env[0..4] != REL_MAGIC {
+            return Err(());
+        }
+        let seq = u64::from_le_bytes(env[4..12].try_into().unwrap());
+        let crc = u32::from_le_bytes(env[12..16].try_into().unwrap());
+        let payload = &env[REL_HEADER..];
+        let mut h = Crc32::new();
+        h.update(&seq.to_le_bytes());
+        h.update(payload);
+        if h.finish() != crc {
+            return Err(());
+        }
+        Ok((seq, payload))
+    }
+
+    /// Try to serve `expected` on `key` from the resend history.
+    /// `Ok(Some)` = recovered (bitwise original), `Ok(None)` = not yet
+    /// sent (keep waiting), `Err` = sent but already evicted.
+    fn recover(&self, key: Key) -> Result<Option<Vec<u8>>, TransportError> {
+        let mut st = lock(&self.state);
+        let expected = *st.expected.entry(key).or_insert(0);
+        let sent_up_to = st.send_seq.get(&key).copied().unwrap_or(0);
+        if let Some(hist) = st.history.get(&key) {
+            if let Some((_, payload)) = hist.iter().find(|(s, _)| *s == expected) {
+                let payload = payload.clone();
+                *st.expected.get_mut(&key).unwrap() += 1;
+                drop(st);
+                let mut stats = lock(&self.stats);
+                stats.history_recoveries += 1;
+                stats.delivered += 1;
+                return Ok(Some(payload));
+            }
+        }
+        if sent_up_to > expected {
+            // the sender definitely sent seq `expected`, and it is no
+            // longer in the retransmit buffer — gone for good
+            return Err(TransportError::Unrecoverable(format!(
+                "seq {expected} on channel {key:?} left the resend history (cap {})",
+                self.history_cap
+            )));
+        }
+        Ok(None)
+    }
+}
+
+impl<T: Transport> Transport for ReliableTransport<T> {
+    fn ranks(&self) -> usize {
+        self.inner.ranks()
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), TransportError> {
+        let key = (from, to, tag);
+        let env = {
+            let mut st = lock(&self.state);
+            let seq_ref = st.send_seq.entry(key).or_insert(0);
+            let seq = *seq_ref;
+            *seq_ref += 1;
+            let hist = st.history.entry(key).or_default();
+            hist.push_back((seq, data.clone()));
+            while hist.len() > self.history_cap {
+                hist.pop_front();
+            }
+            Self::envelope(seq, &data)
+        };
+        lock(&self.stats).sent += 1;
+        self.inner.send(from, to, tag, env)
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError> {
+        let key = (from, to, tag);
+        let deadline = Instant::now() + self.max_wait;
+        loop {
+            // 1. the expected frame may already sit in the stash
+            {
+                let mut st = lock(&self.state);
+                let expected = *st.expected.entry(key).or_insert(0);
+                if let Some(stash) = st.stash.get_mut(&key) {
+                    if let Some(payload) = stash.remove(&expected) {
+                        *st.expected.get_mut(&key).unwrap() += 1;
+                        drop(st);
+                        lock(&self.stats).delivered += 1;
+                        return Ok(payload);
+                    }
+                }
+            }
+            // 2. poll the wire
+            match self.inner.recv_timeout(to, from, tag, self.poll) {
+                Ok(env) => match Self::parse(&env) {
+                    Ok((seq, payload)) => {
+                        let mut st = lock(&self.state);
+                        let expected = *st.expected.entry(key).or_insert(0);
+                        if seq == expected {
+                            *st.expected.get_mut(&key).unwrap() += 1;
+                            drop(st);
+                            lock(&self.stats).delivered += 1;
+                            return Ok(payload.to_vec());
+                        } else if seq < expected {
+                            drop(st);
+                            lock(&self.stats).duplicates_dropped += 1;
+                        } else {
+                            // a gap: park this frame, then try to fill
+                            // the gap from the resend history
+                            st.stash
+                                .entry(key)
+                                .or_default()
+                                .insert(seq, payload.to_vec());
+                            drop(st);
+                            lock(&self.stats).reordered += 1;
+                            if let Some(p) = self.recover(key)? {
+                                return Ok(p);
+                            }
+                        }
+                    }
+                    Err(()) => {
+                        lock(&self.stats).corrupt_frames += 1;
+                        if let Some(p) = self.recover(key)? {
+                            return Ok(p);
+                        }
+                    }
+                },
+                Err(TransportError::Timeout { .. }) => {
+                    if let Some(p) = self.recover(key)? {
+                        return Ok(p);
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { to, from, tag });
+                    }
+                }
+                // the inner layer detected corruption itself (e.g. the
+                // TCP frame CRC) — same recovery path
+                Err(TransportError::Corrupt(_)) => {
+                    lock(&self.stats).corrupt_frames += 1;
+                    if let Some(p) = self.recover(key)? {
+                        return Ok(p);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::Timeout { to, from, tag });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::transport::InProcessTransport;
+
+    fn faulty(ranks: usize, cfg: FaultConfig) -> FaultyTransport<InProcessTransport> {
+        FaultyTransport::new(
+            InProcessTransport::new(ranks).with_recv_timeout(Duration::from_millis(40)),
+            cfg,
+        )
+    }
+
+    fn reliable(
+        ranks: usize,
+        cfg: FaultConfig,
+    ) -> ReliableTransport<FaultyTransport<InProcessTransport>> {
+        ReliableTransport::new(faulty(ranks, cfg))
+            .with_poll(Duration::from_millis(10))
+            .with_max_wait(Duration::from_secs(5))
+            // the tests below enqueue whole batches before receiving;
+            // the history must cover the full batch or early dropped
+            // seqs are (correctly) reported unrecoverable
+            .with_history_cap(256)
+    }
+
+    #[test]
+    fn fault_pattern_is_deterministic() {
+        let cfg = FaultConfig {
+            seed: 7,
+            drop_p: 0.2,
+            corrupt_p: 0.2,
+            duplicate_p: 0.2,
+            delay_p: 0.2,
+        };
+        let run = || {
+            let t = faulty(2, cfg);
+            for i in 0..200u8 {
+                t.send(0, 1, 1, vec![i; 8]).unwrap();
+            }
+            t.stats()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must produce the same fault pattern");
+        assert!(a.dropped > 0 && a.corrupted > 0 && a.duplicated > 0 && a.delayed > 0);
+    }
+
+    #[test]
+    fn dropped_messages_time_out_typed() {
+        let t = faulty(
+            2,
+            FaultConfig {
+                seed: 1,
+                drop_p: 1.0,
+                ..FaultConfig::default()
+            },
+        );
+        t.send(0, 1, 1, vec![1, 2, 3]).unwrap();
+        assert!(matches!(
+            t.recv(1, 0, 1).unwrap_err(),
+            TransportError::Timeout { .. }
+        ));
+    }
+
+    #[test]
+    fn reliable_recovers_drops_exactly() {
+        let t = reliable(
+            2,
+            FaultConfig {
+                seed: 3,
+                drop_p: 0.3,
+                ..FaultConfig::default()
+            },
+        );
+        for i in 0..100u64 {
+            t.send(0, 1, 1, i.to_le_bytes().to_vec()).unwrap();
+        }
+        for i in 0..100u64 {
+            assert_eq!(t.recv(1, 0, 1).unwrap(), i.to_le_bytes().to_vec());
+        }
+        assert!(t.stats().history_recoveries > 0);
+    }
+
+    #[test]
+    fn reliable_drops_duplicates() {
+        let t = reliable(
+            2,
+            FaultConfig {
+                seed: 4,
+                duplicate_p: 1.0,
+                ..FaultConfig::default()
+            },
+        );
+        for i in 0..20u8 {
+            t.send(0, 1, 1, vec![i]).unwrap();
+        }
+        for i in 0..20u8 {
+            assert_eq!(t.recv(1, 0, 1).unwrap(), vec![i]);
+        }
+        // the duplicates must be invisible: nothing left on the wire
+        assert!(t.recv(1, 0, 1).is_err());
+        assert!(t.stats().duplicates_dropped > 0);
+    }
+
+    #[test]
+    fn reliable_recovers_corruption_bitwise() {
+        let t = reliable(
+            2,
+            FaultConfig {
+                seed: 5,
+                corrupt_p: 0.5,
+                ..FaultConfig::default()
+            },
+        );
+        for i in 0..50u64 {
+            t.send(0, 1, 1, (i * 1_000_003).to_le_bytes().to_vec()).unwrap();
+        }
+        for i in 0..50u64 {
+            assert_eq!(
+                t.recv(1, 0, 1).unwrap(),
+                (i * 1_000_003).to_le_bytes().to_vec(),
+                "payload must be the bitwise original, not the flipped frame"
+            );
+        }
+        assert!(t.stats().corrupt_frames > 0);
+    }
+
+    #[test]
+    fn reliable_restores_order_under_delay() {
+        let t = reliable(
+            2,
+            FaultConfig {
+                seed: 6,
+                delay_p: 0.4,
+                ..FaultConfig::default()
+            },
+        );
+        for i in 0..60u8 {
+            t.send(0, 1, 1, vec![i]).unwrap();
+        }
+        for i in 0..60u8 {
+            assert_eq!(t.recv(1, 0, 1).unwrap(), vec![i]);
+        }
+    }
+
+    #[test]
+    fn reliable_survives_mixed_faults() {
+        for seed in [11u64, 12, 13] {
+            let t = reliable(
+                2,
+                FaultConfig {
+                    seed,
+                    drop_p: 0.05,
+                    corrupt_p: 0.05,
+                    duplicate_p: 0.05,
+                    delay_p: 0.05,
+                },
+            );
+            for i in 0..200u64 {
+                t.send(0, 1, 1, i.to_le_bytes().to_vec()).unwrap();
+            }
+            for i in 0..200u64 {
+                assert_eq!(
+                    t.recv(1, 0, 1).unwrap(),
+                    i.to_le_bytes().to_vec(),
+                    "seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reliable_times_out_typed_when_nothing_comes() {
+        let t = ReliableTransport::new(
+            InProcessTransport::new(2).with_recv_timeout(Duration::from_millis(20)),
+        )
+        .with_poll(Duration::from_millis(10))
+        .with_max_wait(Duration::from_millis(120));
+        let start = Instant::now();
+        assert!(matches!(
+            t.recv(1, 0, 1).unwrap_err(),
+            TransportError::Timeout { .. }
+        ));
+        assert!(start.elapsed() < Duration::from_secs(5), "must not hang");
+    }
+
+    #[test]
+    fn reliable_reports_unrecoverable_when_history_evicted() {
+        let t = ReliableTransport::new(faulty(
+            2,
+            FaultConfig {
+                seed: 9,
+                drop_p: 1.0, // every frame vanishes
+                ..FaultConfig::default()
+            },
+        ))
+        .with_poll(Duration::from_millis(5))
+        .with_history_cap(2);
+        for i in 0..10u8 {
+            t.send(0, 1, 1, vec![i]).unwrap();
+        }
+        // seq 0 was sent, dropped, and has left the 2-deep history
+        assert!(matches!(
+            t.recv(1, 0, 1).unwrap_err(),
+            TransportError::Unrecoverable(_)
+        ));
+    }
+}

@@ -11,12 +11,82 @@
 //!   `LoadStats` telemetry, the deterministic cut-point computation,
 //!   rebalance accounting
 //! * [`transport`] — in-process + TCP message transports (MPI stand-in)
+//! * [`fault`]     — deterministic fault injection + the reliable
+//!   (seq/CRC/resend) transport layer (DESIGN.md §9)
+//! * [`checkpoint`] — coordinated per-rank checkpoint/restore (§4.3.5
+//!   extended to the distributed engine)
 //! * [`engine`]    — the distributed scheduler: migration, aura
 //!   exchange, rebalancing, per-rank iteration (§6.2.1, Fig 6.1)
 
 pub mod balance;
+pub mod checkpoint;
 pub mod delta;
 pub mod engine;
+pub mod fault;
 pub mod partition;
 pub mod serialize;
 pub mod transport;
+
+use crate::core::backup::BackupError;
+use transport::TransportError;
+
+/// Typed failures of the distributed engine — everything a superstep
+/// can surface instead of panicking: transport faults, protocol
+/// violations (wire-format/version/coordination mismatches) and
+/// checkpoint errors.
+#[derive(Debug)]
+pub enum DistError {
+    Transport(TransportError),
+    /// Malformed or unexpected peer data: wire-version/flag mismatch,
+    /// bad gossip payload, undecodable migration batch, a rank thread
+    /// that died, ...
+    Protocol(String),
+    Checkpoint(BackupError),
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::Transport(e) => write!(f, "transport: {e}"),
+            DistError::Protocol(s) => write!(f, "protocol: {s}"),
+            DistError::Checkpoint(e) => write!(f, "checkpoint: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DistError::Transport(e) => Some(e),
+            DistError::Checkpoint(e) => Some(e),
+            DistError::Protocol(_) => None,
+        }
+    }
+}
+
+impl From<TransportError> for DistError {
+    fn from(e: TransportError) -> Self {
+        DistError::Transport(e)
+    }
+}
+
+impl From<BackupError> for DistError {
+    fn from(e: BackupError) -> Self {
+        DistError::Checkpoint(e)
+    }
+}
+
+// Bridges for the pre-existing `Result<_, String>` helpers
+// (`LoadStats::from_bytes`, codec/inflate errors, ...) so `?` keeps
+// working while they are surfaced as protocol errors.
+impl From<String> for DistError {
+    fn from(s: String) -> Self {
+        DistError::Protocol(s)
+    }
+}
+
+impl From<&str> for DistError {
+    fn from(s: &str) -> Self {
+        DistError::Protocol(s.to_string())
+    }
+}

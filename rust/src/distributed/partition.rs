@@ -179,6 +179,14 @@ pub trait Partitioner: std::fmt::Debug + Send + Sync {
     /// after a repartition — the bulk-migration round count.
     fn max_migration_hops(&self) -> usize;
 
+    /// Restore cut points previously captured with [`cut_points`]
+    /// (checkpoint restore, `distributed/checkpoint.rs`). Validates
+    /// count, strict monotonicity and the endpoint invariants against
+    /// this partitioner's geometry before applying anything.
+    ///
+    /// [`cut_points`]: Partitioner::cut_points
+    fn restore_cuts(&mut self, cuts: &[f64]) -> Result<(), String>;
+
     fn clone_box(&self) -> Box<dyn Partitioner>;
 }
 
@@ -382,6 +390,35 @@ impl Partitioner for SlabPartition {
         } else {
             self.ranks - 1
         }
+    }
+
+    fn restore_cuts(&mut self, cuts: &[f64]) -> Result<(), String> {
+        if cuts.len() != self.ranks + 1 {
+            return Err(format!(
+                "slab cut restore: {} cuts for {} ranks (need {})",
+                cuts.len(),
+                self.ranks,
+                self.ranks + 1
+            ));
+        }
+        for w in cuts.windows(2) {
+            if !(w[0] < w[1]) {
+                return Err(format!("slab cut restore: cuts not ascending: {cuts:?}"));
+            }
+        }
+        // the endpoints are fixed geometry, not balance state; cuts
+        // round-trip bitwise through the checkpoint so exact equality
+        // is the correct check
+        if cuts[0] != self.min || cuts[self.ranks] != self.max {
+            return Err(format!(
+                "slab cut restore: endpoints {:?} do not match space [{}, {}]",
+                (cuts[0], cuts[self.ranks]),
+                self.min,
+                self.max
+            ));
+        }
+        self.cuts = cuts.to_vec();
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn Partitioner> {
@@ -625,6 +662,43 @@ impl Partitioner for MortonPartitioner {
         } else {
             1
         }
+    }
+
+    fn restore_cuts(&mut self, cuts: &[f64]) -> Result<(), String> {
+        if cuts.len() != self.ranks + 1 {
+            return Err(format!(
+                "morton cut restore: {} cuts for {} ranks (need {})",
+                cuts.len(),
+                self.ranks,
+                self.ranks + 1
+            ));
+        }
+        // cut_points exports the usize sequence positions as f64 —
+        // invert that exactly or refuse
+        let mut seq = Vec::with_capacity(cuts.len());
+        for &c in cuts {
+            if !(c >= 0.0) || c.fract() != 0.0 || c > self.ncells as f64 {
+                return Err(format!(
+                    "morton cut restore: {c} is not a sequence position in 0..={}",
+                    self.ncells
+                ));
+            }
+            seq.push(c as usize);
+        }
+        for w in seq.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("morton cut restore: cuts not ascending: {seq:?}"));
+            }
+        }
+        if seq[0] != 0 || seq[self.ranks] != self.ncells {
+            return Err(format!(
+                "morton cut restore: endpoints {:?} must span 0..={}",
+                (seq[0], seq[self.ranks]),
+                self.ncells
+            ));
+        }
+        self.cuts = seq;
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn Partitioner> {
@@ -940,6 +1014,58 @@ mod tests {
             );
         }
         assert!(checked > 50, "oracle must exercise cross-rank pairs: {checked}");
+    }
+
+    #[test]
+    fn slab_restore_cuts_roundtrip_and_validation() {
+        let mut p = SlabPartition::new(0.0, 100.0, 4, 2.0);
+        let mut hist = vec![0u64; BALANCE_BINS];
+        for (b, h) in hist.iter_mut().enumerate().take(BALANCE_BINS / 4) {
+            *h = 10 + (b % 3) as u64;
+        }
+        assert!(p.repartition(&hist));
+        let cuts = p.cut_points();
+        // restore into a freshly built (uniform-cut) partitioner
+        let mut q = SlabPartition::new(0.0, 100.0, 4, 2.0);
+        q.restore_cuts(&cuts).unwrap();
+        assert_eq!(q.cut_points(), cuts);
+        for x in [3.0, 14.0, 33.0, 61.0, 95.0] {
+            let pos = Real3::new(x, 0.0, 0.0);
+            assert_eq!(q.rank_of(pos), p.rank_of(pos));
+        }
+        // typed rejections
+        assert!(q.restore_cuts(&cuts[..3]).is_err(), "wrong count");
+        let mut bad = cuts.clone();
+        bad.swap(1, 2);
+        assert!(q.restore_cuts(&bad).is_err(), "not ascending");
+        let mut bad = cuts.clone();
+        bad[0] = -5.0;
+        assert!(q.restore_cuts(&bad).is_err(), "wrong endpoint");
+    }
+
+    #[test]
+    fn morton_restore_cuts_roundtrip_and_validation() {
+        let mut p = MortonPartitioner::new(0.0, 100.0, 4, 5.0);
+        let mut hist = vec![0u64; BALANCE_BINS];
+        for h in hist.iter_mut().take(BALANCE_BINS / 8) {
+            *h = 50;
+        }
+        assert!(p.repartition(&hist));
+        let cuts = p.cut_points();
+        let mut q = MortonPartitioner::new(0.0, 100.0, 4, 5.0);
+        q.restore_cuts(&cuts).unwrap();
+        assert_eq!(q.cut_points(), cuts);
+        for i in 0..20 {
+            let pos = Real3::new(i as f64 * 5.1, (i % 7) as f64 * 13.0, 40.0);
+            assert_eq!(q.rank_of(pos), p.rank_of(pos));
+        }
+        assert!(q.restore_cuts(&cuts[..2]).is_err(), "wrong count");
+        let mut bad = cuts.clone();
+        bad[1] = 1.5; // not a sequence position
+        assert!(q.restore_cuts(&bad).is_err(), "fractional");
+        let mut bad = cuts.clone();
+        bad[1] = bad[2];
+        assert!(q.restore_cuts(&bad).is_err(), "not strictly ascending");
     }
 
     #[test]

@@ -88,6 +88,26 @@ impl AgentRegistry {
     }
 }
 
+/// One behavior set per agent type, captured from a population —
+/// the template store migrated or checkpoint-restored agents get
+/// their behaviors from (behaviors never cross the wire and are not
+/// persisted, §6.2.2; the factory/template path is the single
+/// re-attachment contract for both migration and restore).
+pub fn capture_templates_map(
+    rm: &ResourceManager,
+) -> HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> {
+    let mut templates: HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>> =
+        HashMap::new();
+    rm.for_each_agent(|_, a| {
+        if !a.base().behaviors.is_empty() {
+            templates
+                .entry(a.type_tag())
+                .or_insert_with(|| a.base().behaviors.to_vec());
+        }
+    });
+    templates
+}
+
 // --------------------------------------------------------------------
 // tailored serializer
 // --------------------------------------------------------------------

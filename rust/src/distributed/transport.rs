@@ -9,28 +9,93 @@
 //! * [`TcpTransport`] — localhost sockets, one listener per rank; used
 //!   by the multi-process worker example to demonstrate real
 //!   inter-process exchange.
+//!
+//! Failures are *typed* ([`TransportError`]) so the engine can
+//! distinguish a transient timeout from a corrupt frame or an
+//! out-of-range rank and propagate them out of the superstep instead
+//! of panicking. The TCP wire format is hardened (DESIGN.md §9): a
+//! magic marker, a length cap checked *before* allocation, and a
+//! per-message CRC-32, with sends retried under exponential backoff.
 
+use crate::core::crc32::crc32;
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-/// Point-to-point transport between `ranks` ranks.
-pub trait Transport: Send {
+/// Typed transport failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No message arrived within the receive watchdog.
+    Timeout { to: usize, from: usize, tag: u32 },
+    /// Source or destination rank outside `0..ranks`.
+    RankOutOfRange { from: usize, to: usize, ranks: usize },
+    /// A frame announced (or a caller passed) a payload larger than
+    /// the configured maximum — rejected before allocation so a
+    /// corrupt header cannot trigger an unbounded `vec![0; len]`.
+    TooLarge { len: u64, max: u64 },
+    /// Bad magic, failed CRC, or an otherwise malformed frame.
+    Corrupt(String),
+    /// An OS-level I/O failure (connect/read/write/accept), after any
+    /// retries were exhausted.
+    Io { op: &'static str, detail: String },
+    /// The reliable layer cannot recover a lost/corrupted message
+    /// (e.g. it already left the resend history).
+    Unrecoverable(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout { to, from, tag } => {
+                write!(f, "recv timeout ({to} <- {from}, tag {tag})")
+            }
+            TransportError::RankOutOfRange { from, to, ranks } => {
+                write!(f, "rank out of range ({from} -> {to}, {ranks} ranks)")
+            }
+            TransportError::TooLarge { len, max } => {
+                write!(f, "message of {len} bytes exceeds cap of {max}")
+            }
+            TransportError::Corrupt(s) => write!(f, "corrupt message: {s}"),
+            TransportError::Io { op, detail } => write!(f, "transport io ({op}): {detail}"),
+            TransportError::Unrecoverable(s) => write!(f, "unrecoverable: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Point-to-point transport between `ranks` ranks. `Send + Sync` so a
+/// `&dyn Transport` can be shared across the rank-per-thread engine.
+pub trait Transport: Send + Sync {
     fn ranks(&self) -> usize;
 
     /// Send `data` from `from` to `to` under `tag`.
-    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String>;
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), TransportError>;
 
     /// Blocking receive of the next message from `from` with `tag`.
-    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String>;
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError>;
+
+    /// Receive with an explicit deadline. Default: delegates to the
+    /// transport's own watchdog (`recv`); implementations with a real
+    /// clock override this — the reliable layer polls through it.
+    fn recv_timeout(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        _timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
+        self.recv(to, from, tag)
+    }
 
     /// Send a copy of `data` from `from` to every *other* rank — the
     /// send half of an all-to-all gossip (the load-balance `LoadStats`
     /// exchange). The matching receives stay per-peer `recv` calls so
     /// the phase-interleaved sequential driver can run all sends
     /// before any rank blocks on a receive.
-    fn broadcast(&self, from: usize, tag: u32, data: &[u8]) -> Result<(), String> {
+    fn broadcast(&self, from: usize, tag: u32, data: &[u8]) -> Result<(), TransportError> {
         for to in 0..self.ranks() {
             if to != from {
                 self.send(from, to, tag, data.to_vec())?;
@@ -52,7 +117,7 @@ pub struct InProcessTransport {
     /// default is generous; it exists only to turn a genuinely wedged
     /// protocol (peer panicked, message never sent) into an error
     /// instead of a hang.
-    recv_timeout: std::time::Duration,
+    recv_timeout: Duration,
     inner: Arc<(Mutex<HashMap<MailboxKey, VecDeque<Vec<u8>>>>, Condvar)>,
 }
 
@@ -60,16 +125,50 @@ impl InProcessTransport {
     pub fn new(ranks: usize) -> Self {
         InProcessTransport {
             ranks,
-            recv_timeout: std::time::Duration::from_secs(120),
+            recv_timeout: Duration::from_secs(120),
             inner: Arc::new((Mutex::new(HashMap::new()), Condvar::new())),
         }
     }
 
     /// Override the blocking-recv watchdog (e.g. tighter in tests,
     /// longer for huge per-rank workloads).
-    pub fn with_recv_timeout(mut self, timeout: std::time::Duration) -> Self {
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
         self.recv_timeout = timeout;
         self
+    }
+
+    fn recv_deadline(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
+        let (lock, cv) = &*self.inner;
+        // a poisoned mutex means some rank thread panicked mid-send;
+        // the mailbox map itself is never left half-updated (push_back
+        // is the last touch), so recover the data instead of cascading
+        // the panic into every sibling rank
+        let mut map = lock.lock().unwrap_or_else(|e| e.into_inner());
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(q) = map.get_mut(&(to, from, tag)) {
+                if let Some(msg) = q.pop_front() {
+                    return Ok(msg);
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout { to, from, tag });
+            }
+            let (m, wait) = cv
+                .wait_timeout(map, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            map = m;
+            if wait.timed_out() {
+                return Err(TransportError::Timeout { to, from, tag });
+            }
+        }
     }
 }
 
@@ -78,13 +177,17 @@ impl Transport for InProcessTransport {
         self.ranks
     }
 
-    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String> {
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), TransportError> {
         if from >= self.ranks || to >= self.ranks {
-            return Err(format!("rank out of range ({from} -> {to})"));
+            return Err(TransportError::RankOutOfRange {
+                from,
+                to,
+                ranks: self.ranks,
+            });
         }
         let (lock, cv) = &*self.inner;
         lock.lock()
-            .expect("transport mutex poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .entry((to, from, tag))
             .or_default()
             .push_back(data);
@@ -92,33 +195,43 @@ impl Transport for InProcessTransport {
         Ok(())
     }
 
-    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String> {
-        let (lock, cv) = &*self.inner;
-        let mut map = lock.lock().expect("transport mutex poisoned");
-        loop {
-            if let Some(q) = map.get_mut(&(to, from, tag)) {
-                if let Some(msg) = q.pop_front() {
-                    return Ok(msg);
-                }
-            }
-            let (m, timeout) = cv
-                .wait_timeout(map, self.recv_timeout)
-                .map_err(|_| "poisoned".to_string())?;
-            map = m;
-            if timeout.timed_out() {
-                return Err(format!("recv timeout ({to} <- {from}, tag {tag})"));
-            }
-        }
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError> {
+        self.recv_deadline(to, from, tag, self.recv_timeout)
+    }
+
+    fn recv_timeout(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
+        self.recv_deadline(to, from, tag, timeout)
     }
 }
 
-/// TCP transport: rank r listens on `base_port + r`; messages carry a
-/// `[from u32][tag u32][len u64]` header. Connections are opened per
-/// send (simple and robust for the example workloads).
+/// TCP frame marker ("TeraAgent Message Protocol").
+const TCP_MAGIC: [u8; 4] = *b"TAMP";
+/// `[magic 4][from u32][tag u32][len u64][crc u32]`
+const TCP_HEADER_LEN: usize = 24;
+/// Default payload cap (matches `Param::dist_max_message_bytes`).
+pub const DEFAULT_MAX_MESSAGE_BYTES: u64 = 256 * 1024 * 1024;
+
+/// TCP transport: rank r listens on `base_port + r`; frames carry a
+/// `[magic][from u32][tag u32][len u64][crc u32]` header with the CRC
+/// computed over the payload. Connections are opened per send (simple
+/// and robust for the example workloads); sends are retried with
+/// exponential backoff so ranks that bind late or drop a connection
+/// don't abort the run.
 pub struct TcpTransport {
     ranks: usize,
     rank: usize,
     base_port: u16,
+    /// Refuse to allocate or send payloads beyond this.
+    max_message_bytes: u64,
+    /// send attempts (>=1) and initial backoff delay
+    send_attempts: u32,
+    send_backoff: Duration,
     /// received-but-not-consumed messages
     pending: Mutex<HashMap<(usize, u32), VecDeque<Vec<u8>>>>,
     listener: TcpListener,
@@ -126,13 +239,21 @@ pub struct TcpTransport {
 
 impl TcpTransport {
     /// Bind rank `rank`'s listener.
-    pub fn bind(rank: usize, ranks: usize, base_port: u16) -> Result<TcpTransport, String> {
-        let listener = TcpListener::bind(("127.0.0.1", base_port + rank as u16))
-            .map_err(|e| format!("bind rank {rank}: {e}"))?;
+    pub fn bind(rank: usize, ranks: usize, base_port: u16) -> Result<TcpTransport, TransportError> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", base_port + rank as u16)).map_err(|e| {
+                TransportError::Io {
+                    op: "bind",
+                    detail: format!("rank {rank}: {e}"),
+                }
+            })?;
         Ok(TcpTransport {
             ranks,
             rank,
             base_port,
+            max_message_bytes: DEFAULT_MAX_MESSAGE_BYTES,
+            send_attempts: 5,
+            send_backoff: Duration::from_millis(10),
             pending: Mutex::new(HashMap::new()),
             listener,
         })
@@ -142,19 +263,73 @@ impl TcpTransport {
         self.rank
     }
 
-    fn read_message(stream: &mut TcpStream) -> Result<(usize, u32, Vec<u8>), String> {
-        let mut header = [0u8; 16];
+    /// Cap accepted/sent payload sizes (`Param::dist_max_message_bytes`).
+    pub fn with_max_message_bytes(mut self, max: u64) -> Self {
+        self.max_message_bytes = max;
+        self
+    }
+
+    /// Configure the send retry loop: total `attempts` (>=1) with
+    /// exponential backoff starting at `backoff`.
+    pub fn with_send_retries(mut self, attempts: u32, backoff: Duration) -> Self {
+        self.send_attempts = attempts.max(1);
+        self.send_backoff = backoff;
+        self
+    }
+
+    fn read_message(
+        stream: &mut TcpStream,
+        max_message_bytes: u64,
+    ) -> Result<(usize, u32, Vec<u8>), TransportError> {
+        let mut header = [0u8; TCP_HEADER_LEN];
         stream
             .read_exact(&mut header)
-            .map_err(|e| format!("read header: {e}"))?;
-        let from = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
-        let tag = u32::from_le_bytes(header[4..8].try_into().unwrap());
-        let len = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
-        let mut data = vec![0u8; len];
+            .map_err(|e| TransportError::Io {
+                op: "read header",
+                detail: e.to_string(),
+            })?;
+        if header[0..4] != TCP_MAGIC {
+            return Err(TransportError::Corrupt("bad frame magic".to_string()));
+        }
+        let from = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+        let tag = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        let len = u64::from_le_bytes(header[12..20].try_into().unwrap());
+        let crc = u32::from_le_bytes(header[20..24].try_into().unwrap());
+        // cap BEFORE the allocation: a corrupt length field must not
+        // drive `vec![0u8; len]` to arbitrary sizes
+        if len > max_message_bytes {
+            return Err(TransportError::TooLarge {
+                len,
+                max: max_message_bytes,
+            });
+        }
+        let mut data = vec![0u8; len as usize];
         stream
             .read_exact(&mut data)
-            .map_err(|e| format!("read body: {e}"))?;
+            .map_err(|e| TransportError::Io {
+                op: "read body",
+                detail: e.to_string(),
+            })?;
+        let computed = crc32(&data);
+        if computed != crc {
+            return Err(TransportError::Corrupt(format!(
+                "payload crc mismatch (stored {crc:#010x}, computed {computed:#010x})"
+            )));
+        }
         Ok((from, tag, data))
+    }
+
+    fn try_send_once(&self, to: usize, msg: &[u8]) -> Result<(), TransportError> {
+        let mut stream = TcpStream::connect(("127.0.0.1", self.base_port + to as u16)).map_err(
+            |e| TransportError::Io {
+                op: "connect",
+                detail: format!("rank {to}: {e}"),
+            },
+        )?;
+        stream.write_all(msg).map_err(|e| TransportError::Io {
+            op: "write",
+            detail: e.to_string(),
+        })
     }
 }
 
@@ -163,24 +338,55 @@ impl Transport for TcpTransport {
         self.ranks
     }
 
-    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), String> {
+    fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), TransportError> {
         debug_assert_eq!(from, self.rank);
-        let mut stream = TcpStream::connect(("127.0.0.1", self.base_port + to as u16))
-            .map_err(|e| format!("connect to rank {to}: {e}"))?;
-        let mut msg = Vec::with_capacity(16 + data.len());
+        if to >= self.ranks {
+            return Err(TransportError::RankOutOfRange {
+                from,
+                to,
+                ranks: self.ranks,
+            });
+        }
+        if data.len() as u64 > self.max_message_bytes {
+            return Err(TransportError::TooLarge {
+                len: data.len() as u64,
+                max: self.max_message_bytes,
+            });
+        }
+        let mut msg = Vec::with_capacity(TCP_HEADER_LEN + data.len());
+        msg.extend_from_slice(&TCP_MAGIC);
         msg.extend_from_slice(&(from as u32).to_le_bytes());
         msg.extend_from_slice(&tag.to_le_bytes());
         msg.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        msg.extend_from_slice(&crc32(&data).to_le_bytes());
         msg.extend_from_slice(&data);
-        stream.write_all(&msg).map_err(|e| format!("send: {e}"))?;
-        Ok(())
+        // retry with exponential backoff: peers bind their listeners
+        // independently and the OS may refuse connections transiently
+        let mut backoff = self.send_backoff;
+        let mut last = None;
+        for attempt in 0..self.send_attempts {
+            match self.try_send_once(to, &msg) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < self.send_attempts {
+                        std::thread::sleep(backoff);
+                        backoff = backoff.saturating_mul(2);
+                    }
+                }
+            }
+        }
+        Err(last.unwrap_or(TransportError::Io {
+            op: "connect",
+            detail: "no attempts".to_string(),
+        }))
     }
 
-    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, String> {
+    fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError> {
         debug_assert_eq!(to, self.rank);
         // check pending first
         {
-            let mut pending = self.pending.lock().unwrap();
+            let mut pending = self.pending.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(q) = pending.get_mut(&(from, tag)) {
                 if let Some(msg) = q.pop_front() {
                     return Ok(msg);
@@ -189,17 +395,17 @@ impl Transport for TcpTransport {
         }
         // accept until the wanted message arrives; stash others
         loop {
-            let (mut stream, _) = self
-                .listener
-                .accept()
-                .map_err(|e| format!("accept: {e}"))?;
-            let (mfrom, mtag, data) = Self::read_message(&mut stream)?;
+            let (mut stream, _) = self.listener.accept().map_err(|e| TransportError::Io {
+                op: "accept",
+                detail: e.to_string(),
+            })?;
+            let (mfrom, mtag, data) = Self::read_message(&mut stream, self.max_message_bytes)?;
             if mfrom == from && mtag == tag {
                 return Ok(data);
             }
             self.pending
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .entry((mfrom, mtag))
                 .or_default()
                 .push_back(data);
@@ -237,10 +443,25 @@ mod tests {
 
     #[test]
     fn in_process_recv_times_out_when_no_message() {
-        let t = InProcessTransport::new(2)
-            .with_recv_timeout(std::time::Duration::from_millis(50));
+        let t = InProcessTransport::new(2).with_recv_timeout(Duration::from_millis(50));
         let err = t.recv(0, 1, 9).unwrap_err();
-        assert!(err.contains("timeout"), "{err}");
+        assert_eq!(
+            err,
+            TransportError::Timeout {
+                to: 0,
+                from: 1,
+                tag: 9
+            }
+        );
+    }
+
+    #[test]
+    fn in_process_recv_timeout_overrides_watchdog() {
+        let t = InProcessTransport::new(2); // default watchdog 120 s
+        let start = std::time::Instant::now();
+        let err = t.recv_timeout(0, 1, 9, Duration::from_millis(30)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        assert!(start.elapsed() < Duration::from_secs(10));
     }
 
     #[test]
@@ -250,14 +471,21 @@ mod tests {
         assert_eq!(t.recv(0, 1, 5).unwrap(), vec![9, 9]);
         assert_eq!(t.recv(2, 1, 5).unwrap(), vec![9, 9]);
         // no self-send
-        let t1 = t.clone().with_recv_timeout(std::time::Duration::from_millis(20));
+        let t1 = t.clone().with_recv_timeout(Duration::from_millis(20));
         assert!(t1.recv(1, 1, 5).is_err());
     }
 
     #[test]
     fn in_process_rejects_bad_rank() {
         let t = InProcessTransport::new(2);
-        assert!(t.send(0, 5, 0, vec![]).is_err());
+        assert_eq!(
+            t.send(0, 5, 0, vec![]).unwrap_err(),
+            TransportError::RankOutOfRange {
+                from: 0,
+                to: 5,
+                ranks: 2
+            }
+        );
     }
 
     #[test]
@@ -289,5 +517,106 @@ mod tests {
         assert_eq!(t0.recv(0, 1, 1).unwrap(), vec![1]);
         assert_eq!(t0.recv(0, 1, 2).unwrap(), vec![2]);
         h.join().unwrap();
+    }
+
+    /// Write raw bytes straight to a rank's listener port.
+    fn raw_send(base: u16, to: usize, bytes: &[u8]) {
+        let mut s = TcpStream::connect(("127.0.0.1", base + to as u16)).unwrap();
+        s.write_all(bytes).unwrap();
+    }
+
+    #[test]
+    fn tcp_rejects_oversized_length_before_allocating() {
+        let base = 40300 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base).unwrap().with_max_message_bytes(1024);
+        let h = std::thread::spawn(move || {
+            // a frame whose header claims an absurd payload length
+            let mut msg = Vec::new();
+            msg.extend_from_slice(&TCP_MAGIC);
+            msg.extend_from_slice(&1u32.to_le_bytes()); // from
+            msg.extend_from_slice(&7u32.to_le_bytes()); // tag
+            msg.extend_from_slice(&u64::MAX.to_le_bytes()); // len: lie
+            msg.extend_from_slice(&0u32.to_le_bytes()); // crc
+            raw_send(base, 0, &msg);
+        });
+        match t0.recv(0, 1, 7).unwrap_err() {
+            TransportError::TooLarge { len, max } => {
+                assert_eq!(len, u64::MAX);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_rejects_bad_magic_and_bad_crc() {
+        let base = 40900 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base).unwrap();
+        // bad magic
+        let h = std::thread::spawn(move || {
+            raw_send(base, 0, b"NOPE\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0");
+        });
+        assert!(matches!(
+            t0.recv(0, 1, 7).unwrap_err(),
+            TransportError::Corrupt(_)
+        ));
+        h.join().unwrap();
+        // valid header, flipped payload bit -> crc mismatch
+        let h = std::thread::spawn(move || {
+            let payload = [1u8, 2, 3, 4];
+            let mut msg = Vec::new();
+            msg.extend_from_slice(&TCP_MAGIC);
+            msg.extend_from_slice(&1u32.to_le_bytes());
+            msg.extend_from_slice(&7u32.to_le_bytes());
+            msg.extend_from_slice(&4u64.to_le_bytes());
+            msg.extend_from_slice(&crc32(&payload).to_le_bytes());
+            msg.extend_from_slice(&[1u8, 2, 3, 5]); // corrupted body
+            raw_send(base, 0, &msg);
+        });
+        assert!(matches!(
+            t0.recv(0, 1, 7).unwrap_err(),
+            TransportError::Corrupt(_)
+        ));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_send_retries_until_listener_appears() {
+        let base = 41500 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base)
+            .unwrap()
+            .with_send_retries(10, Duration::from_millis(10));
+        let h = std::thread::spawn(move || {
+            // rank 1 binds late; early connects must be retried
+            std::thread::sleep(Duration::from_millis(60));
+            let t1 = TcpTransport::bind(1, 2, base).unwrap();
+            t1.recv(1, 0, 3).unwrap()
+        });
+        t0.send(0, 1, 3, vec![42]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn tcp_send_fails_typed_when_retries_exhausted() {
+        let base = 44000 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base)
+            .unwrap()
+            .with_send_retries(2, Duration::from_millis(1));
+        // rank 1 never binds
+        match t0.send(0, 1, 3, vec![1]).unwrap_err() {
+            TransportError::Io { op, .. } => assert_eq!(op, "connect"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tcp_sender_refuses_oversized_payload() {
+        let base = 44600 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base).unwrap().with_max_message_bytes(8);
+        assert!(matches!(
+            t0.send(0, 1, 1, vec![0u8; 64]).unwrap_err(),
+            TransportError::TooLarge { len: 64, max: 8 }
+        ));
     }
 }

@@ -506,7 +506,7 @@ fn distributed_spheroid_with_divisions_conserves_population_balance() {
     param.seed = 33;
     param.execution_context = ExecutionContextMode::Copy;
     let mut engine = DistributedEngine::new(&builder, param, 2, 1);
-    engine.simulate(30);
+    engine.simulate(30).unwrap();
     let added: u64 = engine.workers.iter().map(|w| w.sim.agents_added).sum();
     let removed: u64 = engine.workers.iter().map(|w| w.sim.agents_removed).sum();
     // ghosts inflate the raw added/removed counters; owned agents are

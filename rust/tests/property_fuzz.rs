@@ -830,7 +830,7 @@ fn fuzz_rebalance_storm_conserves_and_matches_single_rank() {
                             "seed={seed} {partitioner:?} step={step}: uid {uid} not owned anywhere"
                         );
                     }
-                    engine.step();
+                    engine.step().unwrap();
                     assert_eq!(
                         engine.num_agents(),
                         expected,
