@@ -1,0 +1,296 @@
+//! Rule 2: no `HashMap`/`HashSet` *iteration* in determinism-critical
+//! modules. Iteration order of the std hash containers varies run to
+//! run (`RandomState`), so any result that flows out of an unsorted
+//! walk breaks the bitwise-determinism contract. Keyed access
+//! (`get`/`insert`/`remove`/`contains_key`/`entry`) is fine.
+//!
+//! Detection is name-based: we track identifiers bound or declared with
+//! a `HashMap`/`HashSet` type in the same file (let-bindings and struct
+//! fields), then flag ordered-iteration method calls and `for … in`
+//! loops over those names. Known limitation (documented in DESIGN.md
+//! §10): type aliases and cross-file indirection are not traced — the
+//! rule is a tripwire, not a type checker.
+
+use super::lexer::{contains_word, find_word};
+use super::{emit, FileCtx, LintReport, Rule};
+use std::collections::BTreeSet;
+
+/// Path prefixes (relative to `src/`) where the rule is enforced.
+const CRITICAL: &[&str] = &["core/", "env/", "distributed/", "physics/"];
+
+/// Method calls that observe iteration order (or drop keys in hash
+/// order). `.drain(` and `.retain(` mutate in iteration order too.
+const ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    if !CRITICAL.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    // Pass 1: names declared with a hash-container type.
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for line in &ctx.scan.lines {
+        if line.in_test {
+            continue;
+        }
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0usize;
+            while let Some(p) = find_word(&line.code, ty, from) {
+                from = p + ty.len();
+                if let Some(name) = declared_name(&line.code, p) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    // Pass 2: iteration over a tracked name.
+    for (l, line) in ctx.scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for name in &names {
+            let mut flagged = false;
+            for m in ITER_METHODS {
+                let pat = format!("{name}{m}");
+                let mut from = 0usize;
+                while let Some(p) = code[from..].find(&pat).map(|r| r + from) {
+                    from = p + name.len();
+                    // identifier boundary before the name (so `foo_map.iter()`
+                    // doesn't match tracked name `map`)
+                    let ok_before = p == 0 || {
+                        let b = code.as_bytes()[p - 1] as char;
+                        !(b.is_alphanumeric() || b == '_')
+                    };
+                    if ok_before {
+                        emit(
+                            ctx,
+                            out,
+                            l,
+                            Rule::HashIter,
+                            format!(
+                                "hash-order iteration `{name}{m}` in determinism-critical module — \
+                                 use BTreeMap/sorted keys"
+                            ),
+                        );
+                        flagged = true;
+                        break;
+                    }
+                }
+                if flagged {
+                    break;
+                }
+            }
+            if !flagged && is_for_loop_over(code, name) {
+                emit(
+                    ctx,
+                    out,
+                    l,
+                    Rule::HashIter,
+                    format!(
+                        "`for … in {name}` iterates a hash container in a determinism-critical \
+                         module — use BTreeMap/sorted keys"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Given `code` with a `HashMap`/`HashSet` token at byte `p`, find the
+/// identifier this type annotates: `let [mut] NAME = …HashMap…` or a
+/// struct-field / parameter `NAME: …HashMap…`. Returns `None` when the
+/// occurrence is a `use` import, return type, etc.
+fn declared_name(code: &str, p: usize) -> Option<String> {
+    let before = &code[..p];
+    if before.trim_start().starts_with("use ") {
+        return None;
+    }
+    // let-binding: `let [mut] NAME [: T] = … HashMap`
+    if let Some(lp) = before.rfind("let ") {
+        let rest = before[lp + 4..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+        if let Some(name) = leading_ident(rest) {
+            let between = &rest[name.len()..];
+            if between_is_typeish(between) {
+                return Some(name);
+            }
+        }
+    }
+    // field / parameter: `NAME: … HashMap`
+    if let Some(cp) = before.rfind(':') {
+        // skip `::` path separators
+        if cp > 0 && (before.as_bytes()[cp - 1] == b':' || before.as_bytes().get(cp + 1) == Some(&b':')) {
+            return None;
+        }
+        let between = &before[cp + 1..];
+        if !between_is_typeish(between) {
+            return None;
+        }
+        let head = before[..cp].trim_end();
+        if let Some(name) = trailing_ident(head) {
+            return Some(name);
+        }
+    }
+    None
+}
+
+/// Text between a declared name and its `HashMap` occurrence may only
+/// contain type-ish syntax (`: Arc<Mutex<HashMap…`, ` = HashMap::new()`
+/// via ` = `); a `;`, `-` (from `->`), or `.` means the occurrence
+/// belongs to something else.
+fn between_is_typeish(s: &str) -> bool {
+    s.chars().all(|c| {
+        c.is_whitespace()
+            || c.is_alphanumeric()
+            || matches!(c, ':' | '<' | '>' | '(' | ')' | ',' | '&' | '\'' | '_' | '=' | '[' | ']')
+    })
+}
+
+fn leading_ident(s: &str) -> Option<String> {
+    let end = s
+        .char_indices()
+        .find(|(_, c)| !(c.is_alphanumeric() || *c == '_'))
+        .map(|(i, _)| i)
+        .unwrap_or(s.len());
+    if end == 0 {
+        None
+    } else {
+        Some(s[..end].to_string())
+    }
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let start = s
+        .char_indices()
+        .rev()
+        .find(|(_, c)| !(c.is_alphanumeric() || *c == '_'))
+        .map(|(i, c)| i + c.len_utf8())
+        .unwrap_or(0);
+    if start == s.len() {
+        None
+    } else {
+        Some(s[start..].to_string())
+    }
+}
+
+/// `for … in [&[mut ]]name …` (the common no-method iteration form).
+fn is_for_loop_over(code: &str, name: &str) -> bool {
+    if find_word(code, "for", 0).is_none() || !contains_word(code, name) {
+        return false;
+    }
+    let Some(inp) = code.find(" in ") else {
+        return false;
+    };
+    let after = code[inp + 4..].trim_start();
+    let after = after.strip_prefix('&').unwrap_or(after);
+    let after = after.strip_prefix("mut ").unwrap_or(after).trim_start();
+    leading_ident(after).as_deref() == Some(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    fn fires(src: &str) -> bool {
+        lint_source("core/fixture.rs", src)
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::HashIter)
+    }
+
+    #[test]
+    fn values_iteration_fires() {
+        let src = "\
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn sum(&self) -> u64 { self.m.values().map(|v| *v as u64).sum() }
+}
+";
+        assert!(fires(src));
+    }
+
+    #[test]
+    fn for_loop_over_let_binding_fires() {
+        let src = "\
+use std::collections::HashSet;
+fn f() {
+    let seen: HashSet<u32> = HashSet::new();
+    for x in &seen { let _ = x; }
+}
+";
+        assert!(fires(src));
+    }
+
+    #[test]
+    fn retain_fires() {
+        let src = "\
+use std::collections::HashMap;
+struct C { images: HashMap<u64, Vec<u8>> }
+impl C {
+    fn gc(&mut self, keep: impl Fn(u64) -> bool) { self.images.retain(|k, _| keep(*k)); }
+}
+";
+        assert!(fires(src));
+    }
+
+    #[test]
+    fn keyed_access_is_fine() {
+        let src = "\
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn get(&self, k: u32) -> Option<&u32> { self.m.get(&k) }
+    fn put(&mut self, k: u32, v: u32) { self.m.insert(k, v); }
+    fn del(&mut self, k: u32) { self.m.remove(&k); }
+}
+";
+        assert!(!fires(src));
+    }
+
+    #[test]
+    fn non_critical_module_is_exempt() {
+        let src = "\
+use std::collections::HashMap;
+fn f(m: &HashMap<u32, u32>) -> u64 { m.values().map(|v| *v as u64).sum() }
+";
+        let rep = lint_source("analysis/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn btreemap_iteration_is_fine() {
+        let src = "\
+use std::collections::BTreeMap;
+fn f(m: &BTreeMap<u32, u32>) -> u64 { m.values().map(|v| *v as u64).sum() }
+";
+        assert!(!fires(src));
+    }
+
+    #[test]
+    fn similar_name_does_not_alias() {
+        // `map` is a HashMap, `btree_map` is not — iterating the latter is fine
+        let src = "\
+use std::collections::{BTreeMap, HashMap};
+fn f(map: &HashMap<u32, u32>, btree_map: &BTreeMap<u32, u32>) -> Option<&u32> {
+    let s: u64 = btree_map.values().map(|v| *v as u64).sum();
+    map.get(&(s as u32))
+}
+";
+        assert!(!fires(src));
+    }
+}

@@ -1,0 +1,361 @@
+//! Line-oriented token scanner for `detlint` (no external parser).
+//!
+//! Rust syntax is reduced to exactly what the lint rules need: per
+//! source line, the *code* text (comments removed, string/char literal
+//! contents blanked to spaces so pattern searches never match inside
+//! literals) and the *comment* text (contents of `//`, `///`, `//!`
+//! and `/* ... */` comments on that line). Block comments and raw
+//! strings may span lines; nesting of block comments is handled.
+//!
+//! On top of the stripped code the scanner marks `#[cfg(test)]`
+//! regions (brace-matched from the attributed item) so rules can skip
+//! test-only code — the determinism contract binds the engine, not its
+//! oracles.
+
+/// One scanned source line.
+#[derive(Debug, Default, Clone)]
+pub struct ScanLine {
+    /// Source text with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text appearing on this line.
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item (attribute line included).
+    pub in_test: bool,
+}
+
+/// A scanned file: one [`ScanLine`] per source line.
+#[derive(Debug, Default)]
+pub struct ScannedFile {
+    pub lines: Vec<ScanLine>,
+}
+
+#[derive(PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// nesting depth
+    BlockComment(u32),
+    Str,
+    /// number of `#` marks in the delimiter
+    RawStr(u32),
+    Char,
+}
+
+/// Scan `src` into per-line code/comment views.
+pub fn scan(src: &str) -> ScannedFile {
+    let mut lines: Vec<ScanLine> = Vec::new();
+    let mut cur = ScanLine::default();
+    let mut mode = Mode::Code;
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied().unwrap_or('\0');
+        match mode {
+            Mode::Code => {
+                if c == '/' && next == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    // swallow doc-comment markers
+                    while matches!(chars.get(i), Some('/') | Some('!')) {
+                        i += 1;
+                    }
+                } else if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+                    // r"..."  r#"..."#  br#"..."#  b"..."
+                    let mut j = i;
+                    while matches!(chars.get(j), Some('r') | Some('b')) {
+                        cur.code.push(chars[j]);
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        cur.code.push('#');
+                        hashes += 1;
+                        j += 1;
+                    }
+                    // is_raw_string_start guarantees chars[j] == '"'
+                    cur.code.push('"');
+                    i = j + 1;
+                    mode = Mode::RawStr(hashes);
+                } else if c == '\'' {
+                    // char literal vs lifetime tick
+                    if next == '\\' || (chars.get(i + 2) == Some(&'\'') && next != '\'') {
+                        cur.code.push('\'');
+                        mode = Mode::Char;
+                        i += 1;
+                    } else {
+                        // lifetime (or stray tick): keep it, stay in code
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && next == '/' {
+                    if depth == 1 {
+                        mode = Mode::Code;
+                    } else {
+                        mode = Mode::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    cur.code.push(' ');
+                    if next != '\0' && next != '\n' {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    // need `"` followed by `hashes` x `#`
+                    let mut k = 0u32;
+                    while k < hashes && chars.get(i + 1 + k as usize) == Some(&'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        cur.code.push('"');
+                        for _ in 0..hashes {
+                            cur.code.push('#');
+                        }
+                        i += 1 + hashes as usize;
+                        mode = Mode::Code;
+                        continue;
+                    }
+                }
+                cur.code.push(' ');
+                i += 1;
+            }
+            Mode::Char => {
+                if c == '\\' && next != '\0' && next != '\n' {
+                    cur.code.push(' ');
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    let mut file = ScannedFile { lines };
+    mark_test_regions(&mut file);
+    file
+}
+
+/// `r` / `b` at `i` starts a raw/byte string iff the following chars
+/// are `#*"` (with at most one extra `b`/`r` prefix char).
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    let mut prefix = 0;
+    while matches!(chars.get(j), Some('r') | Some('b')) && prefix < 2 {
+        j += 1;
+        prefix += 1;
+    }
+    // identifier characters before? handled by caller context: we only
+    // call this when the previous char was consumed as code; to avoid
+    // matching identifiers ending in r (e.g. `for`), require a
+    // non-ident char before i.
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return false;
+        }
+    }
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Mark lines inside `#[cfg(test)]` items. The attribute is matched in
+/// stripped code; the item body is brace-matched from the first `{`
+/// within the next few lines (requires a `mod`/`fn`/`impl` keyword in
+/// between so attributed `use` items don't swallow the file).
+fn mark_test_regions(file: &mut ScannedFile) {
+    let nlines = file.lines.len();
+    let mut l = 0usize;
+    while l < nlines {
+        let code = file.lines[l].code.clone();
+        if !(code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test")) {
+            l += 1;
+            continue;
+        }
+        // find the item's opening brace
+        let mut item_ok = false;
+        let mut open: Option<(usize, usize)> = None; // (line, col)
+        'find: for (dl, line) in file.lines[l..nlines.min(l + 6)].iter().enumerate() {
+            let c = &line.code;
+            if c.contains("mod ") || c.contains("fn ") || c.contains("impl ") {
+                item_ok = true;
+            }
+            let start = if dl == 0 {
+                c.find("#[cfg(").map(|p| p + 1).unwrap_or(0)
+            } else {
+                0
+            };
+            if let Some(p) = c[start.min(c.len())..].find('{') {
+                open = Some((l + dl, start + p));
+                break 'find;
+            }
+        }
+        let (ol, oc) = match (item_ok, open) {
+            (true, Some(x)) => x,
+            _ => {
+                l += 1;
+                continue;
+            }
+        };
+        // brace-match from (ol, oc)
+        let mut depth = 0i64;
+        let mut end_line = nlines - 1;
+        'outer: for ll in ol..nlines {
+            let code = file.lines[ll].code.clone();
+            let from = if ll == ol { oc } else { 0 };
+            for ch in code[from.min(code.len())..].chars() {
+                if ch == '{' {
+                    depth += 1;
+                } else if ch == '}' {
+                    depth -= 1;
+                    if depth == 0 {
+                        end_line = ll;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        for line in &mut file.lines[l..=end_line] {
+            line.in_test = true;
+        }
+        l = end_line + 1;
+    }
+}
+
+/// Does `haystack` contain `needle` as a whole word (ident boundaries)?
+pub fn contains_word(haystack: &str, needle: &str) -> bool {
+    find_word(haystack, needle, 0).is_some()
+}
+
+/// Find `needle` at an identifier boundary, starting at byte `from`.
+pub fn find_word(haystack: &str, needle: &str, from: usize) -> Option<usize> {
+    let bytes = haystack.as_bytes();
+    let mut start = from;
+    while let Some(rel) = haystack.get(start..).and_then(|h| h.find(needle)) {
+        let p = start + rel;
+        let before_ok = p == 0 || {
+            let b = bytes[p - 1] as char;
+            !(b.is_alphanumeric() || b == '_')
+        };
+        let after = p + needle.len();
+        let after_ok = after >= bytes.len() || {
+            let b = bytes[after] as char;
+            !(b.is_alphanumeric() || b == '_')
+        };
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        start = p + 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let f = scan("let x = \"HashMap in a string\"; // HashMap comment\n");
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[0].comment.contains("HashMap comment"));
+        assert!(f.lines[0].code.contains("let x ="));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let f = scan("a /* one\n two */ b\n");
+        assert!(f.lines[0].code.contains('a'));
+        assert!(f.lines[0].comment.contains("one"));
+        assert!(f.lines[1].comment.contains("two"));
+        assert!(f.lines[1].code.contains('b'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = scan("fn f<'a>(x: &'a str, c: char) { let y = 'z'; let nl = '\\n'; }\n");
+        let code = &f.lines[0].code;
+        assert!(code.contains("&'a str"));
+        assert!(!code.contains('z'), "char literal contents blanked: {code}");
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let f = scan("let s = r#\"unsafe { }\"#; let t = r\"Instant::now\";\n");
+        let code = &f.lines[0].code;
+        assert!(!code.contains("unsafe"));
+        assert!(!code.contains("Instant"));
+    }
+
+    #[test]
+    fn cfg_test_region_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { unsafe {} }\n}\nfn live2() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("use std::collections::HashMap;", "HashMap"));
+        assert!(!contains_word("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(contains_word("unsafe {", "unsafe"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Rule 1: every `unsafe` keyword (block, fn, impl, trait) must be
+//! justified by a `SAFETY` comment — on the same line, in the comment
+//! block directly above (attributes and blank lines may intervene), or
+//! via a `# Safety` doc section on an `unsafe fn`.
+
+use super::lexer::find_word;
+use super::{emit, FileCtx, LintReport, Rule};
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    for (l, line) in ctx.scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(p) = find_word(&line.code, "unsafe", from) {
+            from = p + "unsafe".len();
+            if has_safety_evidence(ctx, l) {
+                continue;
+            }
+            let kind = classify(&line.code[from..]);
+            emit(
+                ctx,
+                out,
+                l,
+                Rule::SafetyComment,
+                format!("`unsafe` {kind} without a `// SAFETY:` comment"),
+            );
+            // one finding per line is enough
+            break;
+        }
+    }
+}
+
+fn classify(after: &str) -> &'static str {
+    let after = after.trim_start();
+    if after.starts_with("fn ") {
+        "fn"
+    } else if after.starts_with("impl ") || after.starts_with("impl<") {
+        "impl"
+    } else if after.starts_with("trait ") {
+        "trait"
+    } else {
+        "block"
+    }
+}
+
+/// SAFETY text on the line itself, or in the contiguous run of
+/// comment/attribute/blank lines directly above (bounded walk).
+fn has_safety_evidence(ctx: &FileCtx, l: usize) -> bool {
+    if is_safety_comment(&ctx.scan.lines[l].comment) {
+        return true;
+    }
+    let mut steps = 0;
+    let mut k = l;
+    while k > 0 && steps < 12 {
+        k -= 1;
+        steps += 1;
+        let line = &ctx.scan.lines[k];
+        if is_safety_comment(&line.comment) {
+            return true;
+        }
+        let code = line.code.trim();
+        let attachable = code.is_empty() || code.starts_with("#[") || code.starts_with("#!");
+        if !attachable {
+            return false;
+        }
+    }
+    false
+}
+
+fn is_safety_comment(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety") || comment.contains("Safety:")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    #[test]
+    fn bare_unsafe_block_fires() {
+        let src = "fn f(p: *mut u32) {\n    unsafe { *p = 1; }\n}\n";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(
+            rep.findings.iter().any(|f| f.rule == Rule::SafetyComment && f.line == 2),
+            "{:?}",
+            rep.findings
+        );
+    }
+
+    #[test]
+    fn same_line_safety_comment_passes() {
+        let src = "fn f(p: *mut u32) {\n    unsafe { *p = 1; } // SAFETY: p is valid\n}\n";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn comment_above_passes_through_attributes() {
+        let src = "\
+// SAFETY: contract documented here
+#[inline]
+unsafe fn g(p: *mut u32) {
+    unsafe { *p = 1; } // SAFETY: caller contract
+}
+";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn doc_safety_section_passes() {
+        let src = "\
+/// Dereferences `p`.
+///
+/// # Safety
+/// `p` must be valid for writes.
+pub unsafe fn g(p: *mut u32) {
+    unsafe { *p = 1; } // SAFETY: forwarded caller contract
+}
+";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn code_between_comment_and_unsafe_blocks_attachment() {
+        let src = "\
+// SAFETY: stale comment about something else
+fn other() {}
+fn f(p: *mut u32) {
+    unsafe { *p = 1; }
+}
+";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.findings.iter().any(|f| f.rule == Rule::SafetyComment));
+    }
+
+    #[test]
+    fn unsafe_in_tests_is_skipped() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        unsafe { std::hint::unreachable_unchecked() };
+    }
+}
+";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn unsafe_in_string_or_ident_does_not_fire() {
+        let src = "fn f() { let s = \"unsafe { }\"; let unsafe_ish = 1; let _ = (s, unsafe_ish); }\n";
+        let rep = lint_source("mem/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+    }
+}

@@ -1,0 +1,183 @@
+//! Rule 4: `OpTimers` keys are `&'static str` literals. The PR 3
+//! timing contract is zero allocation on the hot path; a dynamically
+//! built key (`format!`, `String`, `.leak()`) would both allocate per
+//! op and defeat key interning. Enforced two ways:
+//!
+//! * call sites: the first argument to `timers.record(` / `timers.bump(`
+//!   must not be built from `format!` / `String` / `to_string` /
+//!   `.leak(` (a bare identifier is fine — the signature pins it to
+//!   `&'static str`);
+//! * the declaration: in the file defining `struct OpTimers`, the
+//!   `fn record(` / `fn bump(` signatures must keep `&'static str`.
+
+use super::{emit, FileCtx, LintReport, Rule};
+
+const CALLS: &[&str] = &["timers.record(", "timers.bump("];
+const BAD_ARG: &[&str] = &["format!", "String::", ".to_string()", ".to_owned()", ".leak(", "String"];
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    let defines_optimers = ctx
+        .scan
+        .lines
+        .iter()
+        .any(|l| l.code.contains("struct OpTimers"));
+
+    for (l, line) in ctx.scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for call in CALLS {
+            let Some(p) = code.find(call) else { continue };
+            let arg = first_arg(ctx, l, p + call.len());
+            let arg = arg.trim();
+            if arg.starts_with('"') {
+                continue; // literal — exactly what we want
+            }
+            if BAD_ARG.iter().any(|b| arg.contains(b)) {
+                emit(
+                    ctx,
+                    out,
+                    l,
+                    Rule::TimerKey,
+                    format!(
+                        "OpTimers key `{}` is built dynamically — keys must be \
+                         `&'static str` literals",
+                        arg.chars().take(40).collect::<String>()
+                    ),
+                );
+            }
+            // anything else (identifier, op.name()) is pinned to
+            // &'static str by the record/bump signature, which the
+            // declaration check below keeps honest.
+        }
+        if defines_optimers
+            && (code.contains("fn record(") || code.contains("fn bump("))
+        {
+            let sig = sig_text(ctx, l);
+            if sig.contains("name") && !sig.contains("&'static str") {
+                emit(
+                    ctx,
+                    out,
+                    l,
+                    Rule::TimerKey,
+                    "OpTimers::record/bump key parameter must stay `&'static str`".to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Extract the first call argument starting at byte `from` on line `l`
+/// (spills onto up to two continuation lines).
+fn first_arg(ctx: &FileCtx, l: usize, from: usize) -> String {
+    let mut text = ctx.scan.lines[l].code[from.min(ctx.scan.lines[l].code.len())..].to_string();
+    for cont in 1..=2 {
+        if let Some(line) = ctx.scan.lines.get(l + cont) {
+            text.push(' ');
+            text.push_str(&line.code);
+        }
+    }
+    let mut depth = 0i32;
+    for (i, c) in text.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => {
+                if depth == 0 {
+                    return text[..i].to_string();
+                }
+                depth -= 1;
+            }
+            ',' if depth == 0 => return text[..i].to_string(),
+            _ => {}
+        }
+    }
+    text
+}
+
+/// Signature text from the `fn` line until its opening `{` (joined
+/// over up to three lines).
+fn sig_text(ctx: &FileCtx, l: usize) -> String {
+    let mut text = String::new();
+    for dl in 0..3 {
+        if let Some(line) = ctx.scan.lines.get(l + dl) {
+            if let Some(b) = line.code.find('{') {
+                text.push_str(&line.code[..b]);
+                break;
+            }
+            text.push_str(&line.code);
+            text.push(' ');
+        }
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    fn fires(src: &str) -> bool {
+        lint_source("core/fixture.rs", src)
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::TimerKey)
+    }
+
+    #[test]
+    fn dynamic_key_fires() {
+        let src = "\
+fn f(sim: &mut Sim, i: usize) {
+    sim.timers.record(format!(\"op{}\", i).leak(), d());
+}
+";
+        assert!(fires(src));
+    }
+
+    #[test]
+    fn literal_key_passes() {
+        let src = "\
+fn f(sim: &mut Sim) {
+    sim.timers.record(\"mechanics\", d());
+    sim.timers.bump(\"agents\", 1);
+}
+";
+        assert!(!fires(src));
+    }
+
+    #[test]
+    fn identifier_key_passes() {
+        // op.name() returns &'static str; the signature pins it
+        let src = "\
+fn f(sim: &mut Sim, op: &dyn Operation) {
+    sim.timers.record(op.name(), d());
+}
+";
+        assert!(!fires(src));
+    }
+
+    #[test]
+    fn weakened_declaration_fires() {
+        let src = "\
+pub struct OpTimers { entries: std::collections::BTreeMap<String, u64> }
+impl OpTimers {
+    pub fn record(&mut self, name: &str, nanos: u64) {
+        *self.entries.entry(name.to_string()).or_insert(0) += nanos;
+    }
+}
+";
+        assert!(fires(src));
+    }
+
+    #[test]
+    fn static_declaration_passes() {
+        let src = "\
+pub struct OpTimers { entries: std::collections::BTreeMap<&'static str, u64> }
+impl OpTimers {
+    pub fn record(&mut self, name: &'static str, nanos: u64) {
+        *self.entries.entry(name).or_insert(0) += nanos;
+    }
+}
+";
+        assert!(!fires(src));
+    }
+}

@@ -1,0 +1,343 @@
+//! Rule 5: every `pub fn …(&mut self` on `ResourceManager` must bump
+//! `structure_version` — directly or by delegating to a method that
+//! does — or appear in the checked-in waiver list
+//! ([`super::waivers::RM_VERSION_WAIVERS`]) with a reason.
+//!
+//! This is the PR 4 regression class: the incremental uniform grid
+//! trusts `structure_version` to detect structural change; a public
+//! mutator that forgets the bump silently serves stale neighbor lists.
+//! Delegation is resolved by a fixpoint over the intra-impl call graph
+//! (`self.method(…)` edges), so `sync_columns_if_dirty` → `sync_columns`
+//! counts as bumping.
+
+use super::lexer::find_word;
+use super::waivers::RM_VERSION_WAIVERS;
+use super::{FileCtx, Finding, LintReport, Rule, WaiverUse};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    if !ctx.rel.ends_with("resource_manager.rs") {
+        return;
+    }
+    let fns = collect_impl_fns(ctx, "ResourceManager");
+    if fns.is_empty() {
+        return;
+    }
+
+    // Fixpoint: a fn "bumps" if its body writes structure_version or
+    // calls a bumping method on self.
+    let mut bumps: BTreeSet<String> = fns
+        .iter()
+        .filter(|f| {
+            f.body.contains("structure_version +=") || f.body.contains("structure_version =")
+        })
+        .map(|f| f.name.clone())
+        .collect();
+    loop {
+        let mut grew = false;
+        for f in &fns {
+            if bumps.contains(&f.name) {
+                continue;
+            }
+            if self_calls(&f.body).iter().any(|c| bumps.contains(c)) {
+                bumps.insert(f.name.clone());
+                grew = true;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+
+    let waivers: BTreeMap<&str, &str> = RM_VERSION_WAIVERS.iter().copied().collect();
+    let mut seen_pub_mut = BTreeSet::new();
+    for f in &fns {
+        if !(f.is_pub && f.sig.contains("&mut self")) {
+            continue;
+        }
+        seen_pub_mut.insert(f.name.as_str());
+        if bumps.contains(&f.name) {
+            continue;
+        }
+        match waivers.get(f.name.as_str()) {
+            Some(reason) => out.waivers.push(WaiverUse {
+                file: ctx.rel.to_string(),
+                line: f.line + 1,
+                key: Rule::VersionBump.key().to_string(),
+                reason: (*reason).to_string(),
+            }),
+            None => out.findings.push(Finding {
+                file: ctx.rel.to_string(),
+                line: f.line + 1,
+                rule: Rule::VersionBump,
+                message: format!(
+                    "pub fn {}(&mut self…) neither bumps structure_version nor appears \
+                     in RM_VERSION_WAIVERS",
+                    f.name
+                ),
+            }),
+        }
+    }
+    // Stale table entries rot the contract: flag them so the list stays
+    // in sync with the impl.
+    for (name, _) in RM_VERSION_WAIVERS {
+        if !seen_pub_mut.contains(name) && !ctx.rel.contains("fixture") {
+            out.findings.push(Finding {
+                file: ctx.rel.to_string(),
+                line: 1,
+                rule: Rule::VersionBump,
+                message: format!(
+                    "RM_VERSION_WAIVERS lists `{name}` but ResourceManager has no such \
+                     pub &mut self fn — remove the stale waiver"
+                ),
+            });
+        }
+    }
+}
+
+struct FnItem {
+    name: String,
+    sig: String,
+    body: String,
+    line: usize,
+    is_pub: bool,
+}
+
+/// Parse the fns of every `impl <target>` block (top-level fns only —
+/// nested fn bodies are skipped by the brace matcher).
+fn collect_impl_fns(ctx: &FileCtx, target: &str) -> Vec<FnItem> {
+    let lines = &ctx.scan.lines;
+    let mut fns = Vec::new();
+    let mut l = 0usize;
+    while l < lines.len() {
+        let code = &lines[l].code;
+        let is_impl = code.trim_start().starts_with("impl")
+            && find_word(code, target, 0).is_some()
+            && !code.contains(" for "); // trait impls don't carry the API
+        if !is_impl || lines[l].in_test {
+            l += 1;
+            continue;
+        }
+        // find the impl's opening brace (may be on a later line)
+        let (mut bl, mut bc) = (l, None);
+        'find: for dl in 0..4 {
+            if let Some(line) = lines.get(l + dl) {
+                if let Some(p) = line.code.find('{') {
+                    bl = l + dl;
+                    bc = Some(p);
+                    break 'find;
+                }
+            }
+        }
+        let Some(bc) = bc else {
+            l += 1;
+            continue;
+        };
+        let end = parse_impl_block(lines, bl, bc, &mut fns);
+        l = end + 1;
+    }
+    fns
+}
+
+/// Walk the impl block char by char; at relative depth 1 (inside the
+/// impl braces) pick up `fn` items, brace-matching each body so nested
+/// items/closures are consumed. Returns the impl's closing line.
+fn parse_impl_block(
+    lines: &[super::lexer::ScanLine],
+    bl: usize,
+    bc: usize,
+    fns: &mut Vec<FnItem>,
+) -> usize {
+    let mut depth = 0i64;
+    let mut l = bl;
+    let mut col = bc;
+    // fn item under construction: header (sig) first, then body
+    let mut pend: Option<FnItem> = None;
+    let mut in_body = false;
+    let mut entry_depth = 0i64;
+    while l < lines.len() {
+        let code = &lines[l].code;
+        let bytes = code.as_bytes();
+        while col < bytes.len() {
+            let c = bytes[col] as char;
+            if in_body {
+                let item = pend.as_mut().expect("fn body without header");
+                item.body.push(c);
+                if c == '{' {
+                    depth += 1;
+                } else if c == '}' {
+                    depth -= 1;
+                    if depth == entry_depth {
+                        item.body.pop(); // drop the closing brace
+                        fns.push(pend.take().expect("pend"));
+                        in_body = false;
+                    }
+                }
+                col += 1;
+                continue;
+            }
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pend.is_some() {
+                        // fn header complete — body starts here
+                        in_body = true;
+                        entry_depth = depth - 1;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return l; // end of the impl block
+                    }
+                }
+                'f' if depth == 1 && pend.is_none() => {
+                    if find_word(code, "fn", col) == Some(col) {
+                        let rest = &code[col + 2..];
+                        let name: String = rest
+                            .trim_start()
+                            .chars()
+                            .take_while(|ch| ch.is_alphanumeric() || *ch == '_')
+                            .collect();
+                        let is_pub = code[..col].contains("pub");
+                        pend = Some(FnItem {
+                            name,
+                            sig: String::new(),
+                            body: String::new(),
+                            line: l,
+                            is_pub,
+                        });
+                    }
+                    if let Some(item) = pend.as_mut() {
+                        item.sig.push(c);
+                    }
+                }
+                _ => {
+                    if let Some(item) = pend.as_mut() {
+                        item.sig.push(c);
+                    }
+                }
+            }
+            col += 1;
+        }
+        if let Some(item) = pend.as_mut() {
+            if in_body {
+                item.body.push('\n');
+            } else {
+                item.sig.push(' ');
+            }
+        }
+        l += 1;
+        col = 0;
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Identifiers called as `self.NAME(` in a body.
+fn self_calls(body: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut from = 0usize;
+    while let Some(p) = body[from..].find("self.").map(|r| r + from) {
+        from = p + 5;
+        let rest = &body[from..];
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() && rest[name.len()..].starts_with('(') {
+            out.insert(name);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    const GOOD: &str = "\
+pub struct ResourceManager { structure_version: u64 }
+impl ResourceManager {
+    pub fn add_agent(&mut self) {
+        self.structure_version += 1;
+    }
+    pub fn add_two(&mut self) {
+        self.add_agent();
+        self.add_agent();
+    }
+    pub fn peek(&self) -> u64 { self.structure_version }
+    fn private_helper(&mut self) {}
+}
+";
+
+    #[test]
+    fn bump_and_delegation_pass() {
+        let rep = lint_source("core/fixture_resource_manager.rs", GOOD);
+        assert!(
+            !rep.findings.iter().any(|f| f.rule == Rule::VersionBump),
+            "{:?}",
+            rep.findings
+        );
+    }
+
+    #[test]
+    fn missing_bump_fires() {
+        let src = "\
+pub struct ResourceManager { structure_version: u64 }
+impl ResourceManager {
+    pub fn mutate_silently(&mut self) {
+        // forgot the bump
+    }
+}
+";
+        let rep = lint_source("core/fixture_resource_manager.rs", src);
+        assert!(
+            rep.findings
+                .iter()
+                .any(|f| f.rule == Rule::VersionBump && f.message.contains("mutate_silently")),
+            "{:?}",
+            rep.findings
+        );
+    }
+
+    #[test]
+    fn shared_ref_fns_are_exempt() {
+        let src = "\
+pub struct ResourceManager { structure_version: u64 }
+impl ResourceManager {
+    pub fn read_only(&self) -> u64 { self.structure_version }
+}
+";
+        let rep = lint_source("core/fixture_resource_manager.rs", src);
+        assert!(!rep.findings.iter().any(|f| f.rule == Rule::VersionBump));
+    }
+
+    #[test]
+    fn waived_fn_is_recorded() {
+        // writeback_and_flip is in the checked-in waiver table
+        let src = "\
+pub struct ResourceManager { structure_version: u64 }
+impl ResourceManager {
+    pub fn writeback_and_flip(&mut self) {}
+}
+";
+        let rep = lint_source("core/fixture_resource_manager.rs", src);
+        assert!(!rep.findings.iter().any(|f| f.rule == Rule::VersionBump));
+        assert!(rep
+            .waivers
+            .iter()
+            .any(|w| w.key == "version-bump" && w.line == 3));
+    }
+
+    #[test]
+    fn other_files_are_exempt() {
+        let src = "\
+pub struct ResourceManager { structure_version: u64 }
+impl ResourceManager {
+    pub fn mutate_silently(&mut self) {}
+}
+";
+        let rep = lint_source("core/other.rs", src);
+        assert!(!rep.findings.iter().any(|f| f.rule == Rule::VersionBump));
+    }
+}

@@ -1,0 +1,41 @@
+//! Checked-in waiver list for the version-bump rule (rule 5).
+//!
+//! Every entry is a `pub fn …(&mut self` on `ResourceManager` that
+//! deliberately does **not** bump `structure_version`, with the reason
+//! reviewers signed off on. detlint flags any pub `&mut self` method
+//! that neither bumps nor appears here — and flags stale entries whose
+//! method no longer exists, so the list cannot rot.
+
+/// `(method name, reason)` — kept sorted by name.
+pub const RM_VERSION_WAIVERS: &[(&str, &str)] = &[
+    (
+        "conflict_prepare",
+        "sizes the conflict-check shadow owner tags; never changes agent \
+         storage, ordering, or columns",
+    ),
+    (
+        "issue_uid",
+        "allocates from the UID counter only; agent storage untouched until \
+         the add is committed (which bumps)",
+    ),
+    (
+        "restore_sweep_scratch",
+        "returns a scratch buffer to the pool; no agent storage mutation",
+    ),
+    (
+        "set_uid_namespace",
+        "configures the UID high bits before any agents exist; storage \
+         layout unaffected",
+    ),
+    (
+        "take_sweep_scratch",
+        "borrows a scratch buffer from the pool; no agent storage mutation",
+    ),
+    (
+        "writeback_and_flip",
+        "deliberate (DESIGN.md §5.5): per-iteration writeback publishes new \
+         values in place; the moved bitset — not structure_version — is the \
+         incremental grid's change trail. Bumping here would force a full \
+         grid rebuild every iteration and defeat PR 4.",
+    ),
+];

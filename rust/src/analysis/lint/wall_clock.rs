@@ -1,0 +1,230 @@
+//! Rule 3: no wall-clock reads (`Instant::now`, `SystemTime`) outside
+//! the telemetry whitelist. Wall time in simulation logic is the
+//! classic nondeterminism source (time-based seeds, timeout-dependent
+//! branches). Telemetry is fine — the rule accepts a clock read when
+//! every use of the bound timer flows into a recognized telemetry sink
+//! (`OpTimers::record`, `+=` stat accumulators, log output).
+
+use super::lexer::{contains_word, find_word};
+use super::{emit, FileCtx, LintReport, Rule};
+
+/// Files that exist to measure or to wait: benchmarking harness and
+/// transports (socket deadlines are I/O control flow, not sim logic).
+const WHITELIST: &[&str] = &[
+    "benchkit/",
+    "benchkit.rs",
+    "distributed/transport.rs",
+    "distributed/fault.rs",
+];
+
+/// A use-line counts as telemetry when it matches one of these.
+const SINKS: &[&str] = &[
+    ".record(",
+    ".bump(",
+    "+=",
+    "_nanos",
+    "_time",
+    "stats",
+    "as_secs_f64",
+    "as_millis",
+    "println!",
+    "eprintln!",
+    "writeln!",
+    "format!",
+    "elapsed_ms",
+];
+
+/// How far below a `let t = Instant::now()` binding we trace uses.
+const TRACE_WINDOW: usize = 40;
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    if WHITELIST.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    for (l, line) in ctx.scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let hit = if code.contains("Instant::now") {
+            "Instant::now"
+        } else if contains_word(code, "SystemTime") && !code.trim_start().starts_with("use ") {
+            "SystemTime"
+        } else {
+            continue;
+        };
+        if let Some(name) = binding_name(code) {
+            match first_non_telemetry_use(ctx, l, &name) {
+                None => continue, // all uses are telemetry sinks
+                Some(bad) => emit(
+                    ctx,
+                    out,
+                    bad,
+                    Rule::WallClock,
+                    format!(
+                        "wall-clock timer `{name}` ({hit}) escapes the telemetry sink \
+                         whitelist — wall time must not influence simulation logic"
+                    ),
+                ),
+            }
+        } else if !is_sink_line(code) {
+            emit(
+                ctx,
+                out,
+                l,
+                Rule::WallClock,
+                format!("{hit} outside the telemetry whitelist"),
+            );
+        }
+    }
+}
+
+/// `let [mut] NAME = … Instant::now() …` → NAME.
+fn binding_name(code: &str) -> Option<String> {
+    let lp = code.find("let ")?;
+    let rest = code[lp + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| !(c.is_alphanumeric() || *c == '_'))
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    if end == 0 {
+        None
+    } else {
+        Some(rest[..end].to_string())
+    }
+}
+
+fn is_sink_line(code: &str) -> bool {
+    SINKS.iter().any(|s| code.contains(s))
+}
+
+/// Trace uses of `name` for [`TRACE_WINDOW`] lines after the binding.
+/// The trace stops at anything that ends the timer's scope: a new `fn`
+/// item, a shadowing `let name = …` rebind (common in op loops), or a
+/// `for name in …` loop variable. Returns the first use-line that is
+/// not a telemetry sink.
+fn first_non_telemetry_use(ctx: &FileCtx, bind_line: usize, name: &str) -> Option<usize> {
+    let hi = (bind_line + 1 + TRACE_WINDOW).min(ctx.scan.lines.len());
+    for l in bind_line + 1..hi {
+        let code = &ctx.scan.lines[l].code;
+        // a new fn item ends the binding's scope
+        if find_word(code, "fn", 0).is_some() {
+            return None;
+        }
+        if !contains_word(code, name) {
+            continue;
+        }
+        if rebinds(code, "let", name) || rebinds(code, "for", name) {
+            return None;
+        }
+        if !is_sink_line(code) {
+            return Some(l);
+        }
+    }
+    None
+}
+
+/// `<kw> [mut] name` at a word boundary (shadowing rebind).
+fn rebinds(code: &str, kw: &str, name: &str) -> bool {
+    let Some(kp) = find_word(code, kw, 0) else {
+        return false;
+    };
+    let rest = code[kp + kw.len()..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    rest.starts_with(name)
+        && !rest[name.len()..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    fn fires(rel: &str, src: &str) -> bool {
+        lint_source(rel, src)
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::WallClock)
+    }
+
+    #[test]
+    fn clock_into_sim_logic_fires() {
+        let src = "\
+use std::time::Instant;
+fn step(seed: &mut u64) {
+    let t = Instant::now();
+    *seed ^= t.elapsed().subsec_micros() as u64;
+}
+";
+        assert!(fires("core/fixture.rs", src));
+    }
+
+    #[test]
+    fn timer_into_optimers_passes() {
+        let src = "\
+use std::time::Instant;
+fn step(timers: &mut crate::core::scheduler::OpTimers) {
+    let t = Instant::now();
+    timers.record(\"mechanics\", t.elapsed());
+}
+";
+        assert!(!fires("core/fixture.rs", src));
+    }
+
+    #[test]
+    fn stat_accumulator_passes() {
+        let src = "\
+use std::time::Instant;
+struct Stats { serialize_time: std::time::Duration }
+fn f(stats: &mut Stats) {
+    let t = Instant::now();
+    stats.serialize_time += t.elapsed();
+}
+";
+        assert!(!fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn shadowing_rebind_does_not_leak_scope() {
+        // the second `let t` must not count as a non-sink use of the first
+        let src = "\
+use std::time::Instant;
+fn f(timers: &mut crate::core::scheduler::OpTimers) {
+    let t = Instant::now();
+    timers.record(\"a\", t.elapsed());
+    let t = Instant::now();
+    timers.record(\"b\", t.elapsed());
+}
+";
+        assert!(!fires("core/fixture.rs", src));
+    }
+
+    #[test]
+    fn whitelist_paths_are_exempt() {
+        let src = "\
+use std::time::Instant;
+fn deadline() -> Instant { Instant::now() }
+";
+        assert!(!fires("distributed/transport.rs", src));
+        assert!(!fires("benchkit/mod.rs", src));
+        // same code in core/ fires
+        assert!(fires("core/fixture.rs", src));
+    }
+
+    #[test]
+    fn system_time_fires() {
+        let src = "\
+use std::time::SystemTime;
+fn seed() -> u64 {
+    let s = SystemTime::now();
+    let d = s.duration_since(std::time::UNIX_EPOCH).unwrap();
+    d.subsec_micros() as u64
+}
+";
+        assert!(fires("core/fixture.rs", src));
+    }
+}

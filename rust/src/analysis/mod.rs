@@ -6,6 +6,7 @@
 //! * [`sir_ode`] — RK4 integration of the analytical SIR model, the
 //!   validation target of the epidemiology use case (Fig 4.17).
 
+pub mod lint;
 pub mod optim;
 pub mod sir_ode;
 

@@ -1,0 +1,48 @@
+//! `detlint` — run the project static-analysis pass over `rust/src`.
+//!
+//! Usage: `cargo run --bin detlint [-- <src-root>]`
+//!
+//! Exit code 0 iff the tree is clean (no findings, no unexplained
+//! waivers). Explained waivers are printed so every hole in the
+//! determinism contract stays visible in CI logs.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use teraagent::analysis::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    println!(
+        "detlint: scanned {} files under {}",
+        report.files_scanned,
+        root.display()
+    );
+    if !report.waivers.is_empty() {
+        println!("detlint: {} explained waiver(s):", report.waivers.len());
+        for w in &report.waivers {
+            println!("  {}:{} allow({}) — {}", w.file, w.line, w.key, w.reason);
+        }
+    }
+    if report.findings.is_empty() {
+        println!("detlint: clean");
+        return ExitCode::SUCCESS;
+    }
+    eprintln!("detlint: {} finding(s):", report.findings.len());
+    for f in &report.findings {
+        eprintln!("  {f}");
+    }
+    ExitCode::FAILURE
+}

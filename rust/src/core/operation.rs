@@ -747,6 +747,7 @@ impl MechanicalForcesOp {
                     continue;
                 }
                 let h = csr.flat_to_handle(flat as u32);
+                rm.conflict_begin_write(h, wid);
                 // SAFETY: disjoint flat ranges, injective flat->handle
                 // mapping -> single mutator per slot.
                 let agent = unsafe { rm.get_mut_unchecked(h) };
@@ -772,6 +773,7 @@ impl MechanicalForcesOp {
                     agent.base_mut().moved_now = true;
                 }
                 // sub-threshold: moved_now untouched (per-agent twin)
+                rm.conflict_end_write(h, wid);
             }
         });
         *sort_bufs = sort_mutexes

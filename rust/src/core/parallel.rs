@@ -9,12 +9,18 @@
 //! spawns no threads at all — the serial execution mode of Fig 4.5B is
 //! literally the same code path.
 //!
-//! Safety note: `parallel_for*` blocks until every worker finished the
-//! job, so borrowing the closure and its captures from the caller's
-//! stack is sound; the lifetime erasure below is encapsulated on that
-//! invariant (same argument as `std::thread::scope`).
+//! Safety note: the job slot holds a *raw* pointer to the caller's
+//! stack-borrowed job (raw pointers may dangle as values, unlike
+//! references, so parking one in shared state is sound). It is only
+//! dereferenced between a worker's `active += 1` and `active -= 1`,
+//! and `broadcast` does not return — on the normal path *or* on caller
+//! unwind (drop guard) — until `active == 0` with the slot cleared, so
+//! every dereference happens while the borrow is live. Worker panics
+//! are caught, forwarded through the pool state, and re-raised on the
+//! caller; the same quiescence argument as `std::thread::scope`.
 
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -29,6 +35,7 @@ pub(crate) struct SendPtr<T>(pub *mut T);
 // `T: Send` bound keeps the token from silently laundering a pointer
 // to thread-bound data (e.g. `Rc` internals) across workers.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: same argument as `Send` above — disjoint-index discipline.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Type-erased parallel job. `run` is re-entrant: every worker calls it
@@ -37,11 +44,25 @@ trait Job: Send + Sync {
     fn run(&self, worker_id: usize);
 }
 
+/// Raw pointer to the current epoch's job, borrowed from the
+/// broadcasting caller's stack. See the module safety note: the pointee
+/// is only dereferenced while `broadcast` is still blocked waiting for
+/// quiescence, which keeps the borrow live.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Job + 'static));
+
+// SAFETY: the pointee is `Sync` (the `Job` supertrait) and the pointer
+// is only dereferenced inside the liveness window `broadcast`
+// guarantees; moving the pointer value itself across threads is free.
+unsafe impl Send for JobPtr {}
+
 struct PoolState {
-    job: Option<Arc<dyn Job>>,
+    job: Option<JobPtr>,
     epoch: u64,
     active: usize,
     shutdown: bool,
+    /// First worker panic of the current epoch; re-raised by `broadcast`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
 struct Shared {
@@ -68,6 +89,7 @@ impl ThreadPool {
                 epoch: 0,
                 active: 0,
                 shutdown: false,
+                panic: None,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -204,37 +226,53 @@ impl ThreadPool {
     }
 
     /// Publish a job to all workers, participate as worker 0, and wait
-    /// for quiescence.
-    ///
-    /// SAFETY: blocks until every worker finished running `job` (the
-    /// `active == 0` wait below), so the borrow outlives all uses
-    /// despite the `'static` erasure — the `std::thread::scope`
-    /// argument.
+    /// for quiescence. Re-raises the first worker panic; a caller-side
+    /// panic still waits for worker quiescence (drop guard) before
+    /// unwinding past the borrowed job.
     fn broadcast(&self, job: &(dyn Job + '_)) {
-        let job_static: &'static (dyn Job + 'static) =
-            unsafe { std::mem::transmute::<&(dyn Job + '_), &'static (dyn Job + 'static)>(job) };
-        let arc: Arc<dyn Job> = Arc::new(ForwardJob(job_static));
-        struct ForwardJob(&'static dyn Job);
-        impl Job for ForwardJob {
-            fn run(&self, wid: usize) {
-                self.0.run(wid);
+        // Retiring the job slot and draining `active` must happen on
+        // every exit path — including an unwind out of `job.run(0)`
+        // below — or workers could still be running `job` when its
+        // stack frame dies. Encoded as a drop guard.
+        struct Quiesce<'a>(&'a Shared);
+        impl Drop for Quiesce<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().unwrap();
+                st.job = None; // late workers will see None and skip
+                while st.active > 0 {
+                    st = self.0.done_cv.wait(st).unwrap();
+                }
             }
         }
+
+        let ptr: *const (dyn Job + '_) = job;
+        // SAFETY: lifetime erasure on a raw pointer (a transmute of the
+        // pointer value; both sides are fat `*const dyn Job`). Sound
+        // because the pointee is only dereferenced by workers between
+        // `active += 1` and `active -= 1`, and the `Quiesce` guard keeps
+        // this frame — and therefore `job` — alive until `active == 0`
+        // with the slot cleared, on both the normal and unwind paths.
+        let ptr = JobPtr(unsafe {
+            std::mem::transmute::<*const (dyn Job + '_), *const (dyn Job + 'static)>(ptr)
+        });
         {
             let mut st = self.shared.state.lock().unwrap();
             debug_assert!(st.job.is_none(), "nested parallel region");
-            st.job = Some(arc);
+            st.job = Some(ptr);
+            st.panic = None;
             st.epoch += 1;
             self.shared.work_cv.notify_all();
         }
-        // Participate as worker 0.
+        let guard = Quiesce(&self.shared);
+        // Participate as worker 0. May unwind — see `guard`.
         job.run(0);
-        // Wait until all workers that picked up the job are done, then
-        // retire the job slot.
-        let mut st = self.shared.state.lock().unwrap();
-        st.job = None; // cursor exhausted; late workers will see None
-        while st.active > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+        drop(guard);
+        // Normal path: re-raise the first worker panic of this epoch so
+        // a panicking parallel closure behaves like a panicking serial
+        // loop instead of hanging or being silently swallowed.
+        let payload = self.shared.state.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            resume_unwind(p);
         }
     }
 }
@@ -242,7 +280,7 @@ impl ThreadPool {
 fn worker_loop(shared: Arc<Shared>, wid: usize) {
     let mut last_epoch = 0u64;
     loop {
-        let job = {
+        let ptr = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -250,9 +288,9 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
                 }
                 if st.epoch != last_epoch {
                     last_epoch = st.epoch;
-                    if let Some(job) = st.job.clone() {
+                    if let Some(ptr) = st.job {
                         st.active += 1;
-                        break job;
+                        break ptr;
                     }
                     // job already retired: skip this epoch
                     continue;
@@ -260,8 +298,20 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        job.run(wid);
+        // SAFETY: `active` was incremented under the lock while the job
+        // slot was populated, so `broadcast`'s quiescence guard is
+        // blocked until this worker decrements it below — the pointee
+        // (the caller's stack-borrowed job) is live for this dereference.
+        let job = unsafe { &*ptr.0 };
+        // Catch panics: the worker must always reach `active -= 1`, or
+        // `broadcast` would deadlock; the payload is re-raised there.
+        let result = catch_unwind(AssertUnwindSafe(|| job.run(wid)));
         let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
         st.active -= 1;
         if st.active == 0 {
             shared.done_cv.notify_all();
@@ -292,7 +342,7 @@ mod tests {
     fn parallel_for_visits_every_index_once() {
         for nt in [1, 2, 4, 8] {
             let pool = ThreadPool::new(nt);
-            let n = 10_000;
+            let n = if cfg!(miri) { 512 } else { 10_000 };
             let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
             pool.parallel_for(0..n, 64, |i, _wid| {
                 hits[i].fetch_add(1, Ordering::Relaxed);
@@ -343,12 +393,13 @@ mod tests {
     fn sequential_regions_reuse_pool() {
         let pool = ThreadPool::new(4);
         let counter = AtomicU64::new(0);
-        for _ in 0..50 {
+        let rounds: u64 = if cfg!(miri) { 5 } else { 50 };
+        for _ in 0..rounds {
             pool.parallel_for(0..100, 8, |_i, _w| {
                 counter.fetch_add(1, Ordering::Relaxed);
             });
         }
-        assert_eq!(counter.load(Ordering::Relaxed), 5000);
+        assert_eq!(counter.load(Ordering::Relaxed), rounds * 100);
     }
 
     #[test]
@@ -360,6 +411,28 @@ mod tests {
     #[test]
     fn worker_ids_in_range() {
         let pool = ThreadPool::new(3);
-        pool.parallel_for(0..1000, 4, |_, wid| assert!(wid < 3));
+        let n = if cfg!(miri) { 200 } else { 1000 };
+        pool.parallel_for(0..n, 4, |_, wid| assert!(wid < 3));
+    }
+
+    #[test]
+    fn closure_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(0..256, 1, |i, _wid| {
+                if i == 128 {
+                    panic!("deliberate test panic at index {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic in a parallel closure must propagate");
+        // The pool must be fully quiesced and reusable afterwards —
+        // neither deadlocked (lost `active` decrement) nor holding a
+        // stale job pointer.
+        let counter = AtomicU64::new(0);
+        pool.parallel_for(0..100, 8, |_, _| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
     }
 }

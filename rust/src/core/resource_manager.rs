@@ -51,6 +51,7 @@
 use crate::core::agent::{Agent, AgentHandle, AgentUid};
 use crate::core::math::Real3;
 use crate::core::parallel::ThreadPool;
+use crate::core::soa::conflict::SlotOwners;
 use crate::core::soa::{set_bit_raw, HotColumns};
 use crate::Real;
 use std::cell::UnsafeCell;
@@ -125,6 +126,9 @@ impl AgentSlot {
 
     #[inline]
     fn get(&self) -> &dyn Agent {
+        // SAFETY: shared read of the slot; the single-writer schedule
+        // (type docs) makes concurrent in-place writes benign for the
+        // fields read through shared references.
         unsafe { &**self.0.get() }
     }
 
@@ -132,7 +136,8 @@ impl AgentSlot {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     unsafe fn get_mut(&self) -> &mut dyn Agent {
-        &mut **self.0.get()
+        // SAFETY: forwarded caller contract — unique mutator of the slot.
+        unsafe { &mut **self.0.get() }
     }
 
     fn into_inner(self) -> Box<dyn Agent> {
@@ -145,6 +150,9 @@ struct Domain {
     agents: Vec<AgentSlot>,
     /// SoA mirror of the hot fields (see module docs).
     cols: HotColumns,
+    /// `--features conflict-check` shadow owner tags (zero-sized no-op
+    /// otherwise); armed by [`ResourceManager::conflict_prepare`].
+    owners: SlotOwners,
 }
 
 /// Dense, NUMA-partitioned agent storage with UID lookup.
@@ -298,6 +306,8 @@ impl ResourceManager {
         self.dirty = true;
         self.moved_any = true; // conservative: the caller may set flags
         self.structure_version += 1;
+        // SAFETY: `&mut self` makes this thread the unique mutator of
+        // every slot for the duration of the borrow.
         unsafe { self.domains[h.numa as usize].agents[h.idx as usize].get_mut() }
     }
 
@@ -309,7 +319,8 @@ impl ResourceManager {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut_unchecked(&self, h: AgentHandle) -> &mut dyn Agent {
-        self.domains[h.numa as usize].agents[h.idx as usize].get_mut()
+        // SAFETY: forwarded caller contract — unique mutator of slot `h`.
+        unsafe { self.domains[h.numa as usize].agents[h.idx as usize].get_mut() }
     }
 
     pub fn lookup(&self, uid: AgentUid) -> Option<AgentHandle> {
@@ -689,6 +700,67 @@ impl ResourceManager {
         out
     }
 
+    // --- conflict-check instrumentation --------------------------------
+
+    /// Arm the `conflict-check` shadow owner tags for the current slot
+    /// layout (a no-op without the feature — see
+    /// [`crate::core::soa::conflict`]). The scheduler calls this before
+    /// the parallel agent loop; slots appended after arming (agent
+    /// insertion mid-iteration) are unchecked until the next arm.
+    pub fn conflict_prepare(&mut self) {
+        for domain in &mut self.domains {
+            let n = domain.agents.len();
+            domain.owners.reset(n);
+        }
+    }
+
+    /// Claim exclusive write ownership of slot `h` for worker `wid`.
+    /// Panics with slot + both worker ids on writer/writer or
+    /// reader/writer overlap; no-op without `conflict-check`.
+    #[inline]
+    pub fn conflict_begin_write(&self, h: AgentHandle, wid: usize) {
+        #[cfg(feature = "conflict-check")]
+        self.domains[h.numa as usize]
+            .owners
+            .begin_write(h.idx as usize, wid);
+        #[cfg(not(feature = "conflict-check"))]
+        let _ = (h, wid);
+    }
+
+    /// Release the claim taken by [`ResourceManager::conflict_begin_write`].
+    #[inline]
+    pub fn conflict_end_write(&self, h: AgentHandle, wid: usize) {
+        #[cfg(feature = "conflict-check")]
+        self.domains[h.numa as usize]
+            .owners
+            .end_write(h.idx as usize, wid);
+        #[cfg(not(feature = "conflict-check"))]
+        let _ = (h, wid);
+    }
+
+    /// Register a shared-reader claim on slot `h` (panics if a writer
+    /// holds the slot; no-op without `conflict-check`).
+    #[inline]
+    pub fn conflict_begin_read(&self, h: AgentHandle, wid: usize) {
+        #[cfg(feature = "conflict-check")]
+        self.domains[h.numa as usize]
+            .owners
+            .begin_read(h.idx as usize, wid);
+        #[cfg(not(feature = "conflict-check"))]
+        let _ = (h, wid);
+    }
+
+    /// Drop the claim taken by [`ResourceManager::conflict_begin_read`].
+    #[inline]
+    pub fn conflict_end_read(&self, h: AgentHandle, wid: usize) {
+        #[cfg(feature = "conflict-check")]
+        self.domains[h.numa as usize]
+            .owners
+            .end_read(h.idx as usize, wid);
+        #[cfg(not(feature = "conflict-check"))]
+        let _ = (h, wid);
+    }
+
     // --- SoA synchronization -------------------------------------------
 
     /// Resync the SoA mirror from the boxed agents if out-of-band
@@ -713,11 +785,14 @@ impl ResourceManager {
             if n == 0 {
                 continue;
             }
+            domain.owners.reset(n);
             let ptrs = ColPtrs::of(&mut domain.cols);
             let agents = &domain.agents;
-            pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, _wid| {
+            let owners = &domain.owners;
+            pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, wid| {
                 let p = &ptrs;
                 for i in chunk {
+                    owners.begin_write(i, wid);
                     let a = agents[i].get();
                     let inter = a.interaction_diameter();
                     let sphere = HotColumns::sphere_eligible(a);
@@ -734,6 +809,7 @@ impl ResourceManager {
                         set_bit_raw(p.ghost, i, b.is_ghost);
                         set_bit_raw(p.sphere, i, sphere);
                     }
+                    owners.end_write(i, wid);
                 }
             });
         }
@@ -810,11 +886,14 @@ impl ResourceManager {
             let n = domain.agents.len();
             debug_assert_eq!(domain.cols.len(), n);
             if n > 0 {
+                domain.owners.reset(n);
                 let ptrs = ColPtrs::of(&mut domain.cols);
                 let agents = &domain.agents;
-                pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, _wid| {
+                let owners = &domain.owners;
+                pool.parallel_for_chunks(0..n, WRITEBACK_GRAIN, |chunk, wid| {
                     let p = &ptrs;
                     for i in chunk {
+                        owners.begin_write(i, wid);
                         // SAFETY: disjoint chunks -> single mutator per
                         // slot; grain is a multiple of 64 so each bitset
                         // word belongs to one chunk.
@@ -827,6 +906,10 @@ impl ResourceManager {
                         b.moved_now = false;
                         // type_tags are skipped: a slot's tag never
                         // changes between structural mutations.
+                        // SAFETY: same disjoint-chunk argument as the
+                        // slot access above — index i belongs to this
+                        // worker's chunk only, and the 64-multiple grain
+                        // gives each bitset word a single writer.
                         unsafe {
                             p.pos.add(i).write(b.position);
                             p.inter.add(i).write(inter);
@@ -835,6 +918,7 @@ impl ResourceManager {
                             set_bit_raw(p.ghost, i, b.is_ghost);
                             set_bit_raw(p.sphere, i, sphere);
                         }
+                        owners.end_write(i, wid);
                     }
                 });
             }
@@ -865,6 +949,7 @@ struct ColPtrs {
 // SAFETY: the writeback passes hand disjoint 64-aligned index ranges to
 // each worker (see WRITEBACK_GRAIN).
 unsafe impl Send for ColPtrs {}
+// SAFETY: same disjoint-range argument as `Send` above.
 unsafe impl Sync for ColPtrs {}
 
 impl ColPtrs {
@@ -1125,5 +1210,50 @@ mod tests {
             .filter(|&&h| rm.moved_last_of(h))
             .count();
         assert_eq!(moved, n.div_ceil(5));
+    }
+
+    /// Deliberate two-writer race through the public instrumentation
+    /// API: the second writer's claim must panic deterministically and
+    /// the diagnostic must name the slot and both workers.
+    #[cfg(feature = "conflict-check")]
+    #[test]
+    fn conflict_check_catches_two_writers_on_one_slot() {
+        let mut rm = ResourceManager::new(1);
+        let h = rm.add_agent(cell(0.0));
+        rm.add_agent(cell(1.0));
+        rm.conflict_prepare();
+        rm.conflict_begin_write(h, 0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rm.conflict_begin_write(h, 1);
+        }))
+        .expect_err("second writer on the same slot must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("slot 0"), "missing slot in: {msg}");
+        assert!(msg.contains("worker 0"), "missing holder in: {msg}");
+        assert!(msg.contains("worker 1"), "missing claimant in: {msg}");
+        rm.conflict_end_write(h, 0);
+    }
+
+    /// The instrumented writeback brackets must be balanced: two full
+    /// barrier passes over a multi-chunk population run clean with the
+    /// checker armed (the no-false-positive guarantee the CI
+    /// `--features conflict-check` test run rests on).
+    #[cfg(feature = "conflict-check")]
+    #[test]
+    fn conflict_check_no_false_positive_in_writeback() {
+        let pool = ThreadPool::new(4);
+        let mut rm = ResourceManager::new(2);
+        for i in 0..(WRITEBACK_GRAIN * 2 + 13) {
+            rm.add_agent(cell(i as f64));
+        }
+        rm.conflict_prepare();
+        rm.writeback_and_flip(&pool);
+        let h0 = rm.handles()[0];
+        rm.get_mut(h0).set_diameter(2.5);
+        rm.sync_columns_if_dirty(&pool);
+        assert_columns_coherent(&rm);
     }
 }

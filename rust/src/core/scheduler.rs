@@ -34,7 +34,7 @@ use crate::core::operation::StandalonePhase;
 use crate::core::param::{ExecutionContextMode, ExecutionOrder};
 use crate::core::random::Rng;
 use crate::core::simulation::Simulation;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -44,10 +44,13 @@ use std::time::{Duration, Instant};
 /// (`AgentOperation::name` / `StandaloneOperation::name` return
 /// `&'static str`), so the steady-state timing path allocates nothing —
 /// the former `String` keys cost one heap allocation per phase per
-/// iteration.
+/// iteration. The map is a `BTreeMap` so [`OpTimers::breakdown`] rows
+/// with equal totals tie-break in key order instead of hash order —
+/// the breakdown output is part of the deterministic surface (detlint
+/// rule `hash-iter`).
 #[derive(Debug, Default, Clone)]
 pub struct OpTimers {
-    entries: HashMap<&'static str, (Duration, u64)>,
+    entries: BTreeMap<&'static str, (Duration, u64)>,
 }
 
 impl OpTimers {
@@ -113,6 +116,7 @@ pub fn execute_iteration(sim: &mut Simulation) {
 
     // ---- 3. agent loop ------------------------------------------------
     let t = Instant::now();
+    sim.rm.conflict_prepare(); // arm the conflict-check owner tags
     run_agent_ops(sim);
     sim.timers.record("agent_ops", t.elapsed());
 
@@ -256,6 +260,9 @@ fn run_agent_ops(sim: &mut Simulation) {
                     }
                     copies[wid].lock().unwrap().push((h, clone));
                 } else {
+                    // conflict-check: claim exclusive write ownership of
+                    // the slot for the duration of the op run
+                    sim.rm.conflict_begin_write(h, wid);
                     // SAFETY: parallel_for chunks are disjoint index
                     // ranges over a deduplicated handle list -> single
                     // mutator per slot.
@@ -272,6 +279,7 @@ fn run_agent_ops(sim: &mut Simulation) {
                             op.run(agent, &mut ctx);
                         }
                     }
+                    sim.rm.conflict_end_write(h, wid);
                 }
             }
         };
@@ -420,6 +428,7 @@ fn run_single_op_pass(sim: &mut Simulation, op: &dyn crate::core::operation::Age
             if sim.rm.is_ghost(h) {
                 continue;
             }
+            sim.rm.conflict_begin_write(h, wid);
             // SAFETY: disjoint chunks over the deduplicated handle
             // list -> single mutator per slot.
             let agent = unsafe { sim.rm.get_mut_unchecked(h) };
@@ -433,6 +442,7 @@ fn run_single_op_pass(sim: &mut Simulation, op: &dyn crate::core::operation::Age
             if op.applies_to(agent) {
                 op.run(agent, &mut ctx);
             }
+            sim.rm.conflict_end_write(h, wid);
         }
     });
     sim.pending_queues

@@ -146,12 +146,16 @@ impl BitVec {
 /// other thread may concurrently access word `i / 64`.
 #[inline]
 pub(crate) unsafe fn set_bit_raw(words: *mut u64, i: usize, v: bool) {
-    let w = words.add(i >> 6);
-    let mask = 1u64 << (i & 63);
-    if v {
-        *w |= mask;
-    } else {
-        *w &= !mask;
+    // SAFETY: forwarded caller contract — `words` covers bit `i` and
+    // this thread is the word's only accessor.
+    unsafe {
+        let w = words.add(i >> 6);
+        let mask = 1u64 << (i & 63);
+        if v {
+            *w |= mask;
+        } else {
+            *w &= !mask;
+        }
     }
 }
 
@@ -333,6 +337,163 @@ impl HotColumns {
     }
 }
 
+/// Runtime exclusive-writer / shared-reader checker for the SoA slots
+/// (`--features conflict-check`).
+///
+/// Each domain keeps a shadow array of per-slot atomic owner tags. A
+/// tag is `FREE` (0), a reader count (low 31 bits), or a writer mark
+/// `WRITE_BIT | (worker + 1)`. Parallel regions that mutate a slot
+/// bracket the mutation with [`SlotOwners::begin_write`] /
+/// [`SlotOwners::end_write`]; concurrent readers of *other* agents'
+/// slots may bracket with `begin_read`/`end_read`. Any overlap that
+/// violates the exclusive-writer/shared-reader discipline panics
+/// deterministically with the slot index and both worker ids, turning
+/// a latent data race in the custom thread pool into a reproducible
+/// failure. With the feature off, [`SlotOwners`] is a zero-sized no-op
+/// so the hot loops compile back to their unchecked form.
+#[cfg(feature = "conflict-check")]
+pub mod conflict {
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    /// Unowned slot.
+    pub const FREE: u32 = 0;
+    /// High bit marks a writer tag; low bits then hold `worker + 1`.
+    pub const WRITE_BIT: u32 = 1 << 31;
+
+    /// Shadow per-slot owner tags for one domain's SoA columns.
+    #[derive(Default)]
+    pub struct SlotOwners {
+        tags: Vec<AtomicU32>,
+    }
+
+    impl SlotOwners {
+        pub fn new() -> SlotOwners {
+            SlotOwners::default()
+        }
+
+        /// Arm the checker for `n` slots, resetting every tag to
+        /// [`FREE`]. Called from `ResourceManager::conflict_prepare`
+        /// before each parallel region; slots appended afterwards
+        /// (agent insertion mid-iteration) are simply unchecked until
+        /// the next prepare.
+        pub fn reset(&mut self, n: usize) {
+            self.tags.clear();
+            self.tags.resize_with(n, || AtomicU32::new(FREE));
+        }
+
+        pub fn len(&self) -> usize {
+            self.tags.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.tags.is_empty()
+        }
+
+        #[inline]
+        fn write_tag(worker: usize) -> u32 {
+            WRITE_BIT | (worker as u32 + 1)
+        }
+
+        /// Claim exclusive write ownership of `slot` for `worker`.
+        /// Panics if another worker holds the write tag or readers are
+        /// active.
+        #[inline]
+        pub fn begin_write(&self, slot: usize, worker: usize) {
+            let Some(t) = self.tags.get(slot) else {
+                return; // slot appended after the last prepare
+            };
+            let want = Self::write_tag(worker);
+            if let Err(prev) =
+                t.compare_exchange(FREE, want, Ordering::AcqRel, Ordering::Acquire)
+            {
+                if prev & WRITE_BIT != 0 {
+                    panic!(
+                        "conflict-check: two writers on slot {slot}: worker {} already \
+                         holds the write tag, worker {worker} tried to claim it",
+                        (prev & !WRITE_BIT) - 1
+                    );
+                }
+                panic!(
+                    "conflict-check: worker {worker} claimed write on slot {slot} \
+                     with {prev} active reader(s)"
+                );
+            }
+        }
+
+        /// Release write ownership. Panics if `worker` did not hold it
+        /// (catches unbalanced or cross-worker bracketing).
+        #[inline]
+        pub fn end_write(&self, slot: usize, worker: usize) {
+            let Some(t) = self.tags.get(slot) else {
+                return;
+            };
+            let prev = t.swap(FREE, Ordering::AcqRel);
+            assert_eq!(
+                prev,
+                Self::write_tag(worker),
+                "conflict-check: end_write on slot {slot} by worker {worker} \
+                 but tag was {prev:#x}"
+            );
+        }
+
+        /// Register a shared reader on `slot`. Panics if a writer holds
+        /// the slot.
+        #[inline]
+        pub fn begin_read(&self, slot: usize, worker: usize) {
+            let Some(t) = self.tags.get(slot) else {
+                return;
+            };
+            let prev = t.fetch_add(1, Ordering::AcqRel);
+            if prev & WRITE_BIT != 0 {
+                t.fetch_sub(1, Ordering::AcqRel);
+                panic!(
+                    "conflict-check: worker {worker} read slot {slot} while worker {} \
+                     holds the write tag",
+                    (prev & !WRITE_BIT) - 1
+                );
+            }
+        }
+
+        /// Drop a shared-reader registration.
+        #[inline]
+        pub fn end_read(&self, slot: usize, _worker: usize) {
+            if let Some(t) = self.tags.get(slot) {
+                t.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+/// No-op stand-in when `conflict-check` is disabled: zero-sized, every
+/// method inlines to nothing, so instrumented call sites cost nothing
+/// in release builds.
+#[cfg(not(feature = "conflict-check"))]
+pub mod conflict {
+    #[derive(Default)]
+    pub struct SlotOwners;
+
+    impl SlotOwners {
+        pub fn new() -> SlotOwners {
+            SlotOwners
+        }
+        pub fn reset(&mut self, _n: usize) {}
+        pub fn len(&self) -> usize {
+            0
+        }
+        pub fn is_empty(&self) -> bool {
+            true
+        }
+        #[inline]
+        pub fn begin_write(&self, _slot: usize, _worker: usize) {}
+        #[inline]
+        pub fn end_write(&self, _slot: usize, _worker: usize) {}
+        #[inline]
+        pub fn begin_read(&self, _slot: usize, _worker: usize) {}
+        #[inline]
+        pub fn end_read(&self, _slot: usize, _worker: usize) {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,5 +589,102 @@ mod tests {
         assert!(!b.get(7));
         assert!(b.get(93));
         assert!(b.any());
+    }
+
+    #[cfg(feature = "conflict-check")]
+    mod conflict_check {
+        use crate::core::soa::conflict::SlotOwners;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+            err.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default()
+        }
+
+        #[test]
+        fn balanced_brackets_are_clean() {
+            let mut o = SlotOwners::new();
+            o.reset(16);
+            assert_eq!(o.len(), 16);
+            o.begin_write(3, 0);
+            o.end_write(3, 0);
+            o.begin_read(3, 1);
+            o.begin_read(3, 2);
+            o.end_read(3, 1);
+            o.end_read(3, 2);
+            // slot is FREE again, a writer may claim it
+            o.begin_write(3, 2);
+            o.end_write(3, 2);
+        }
+
+        #[test]
+        fn two_writers_panic_names_slot_and_both_workers() {
+            let mut o = SlotOwners::new();
+            o.reset(8);
+            o.begin_write(5, 0);
+            let err = catch_unwind(AssertUnwindSafe(|| o.begin_write(5, 1)))
+                .expect_err("second writer on the same slot must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("slot 5"), "missing slot in: {msg}");
+            assert!(msg.contains("worker 0"), "missing holder in: {msg}");
+            assert!(msg.contains("worker 1"), "missing claimant in: {msg}");
+            o.end_write(5, 0);
+        }
+
+        #[test]
+        fn reader_under_writer_panics() {
+            let mut o = SlotOwners::new();
+            o.reset(4);
+            o.begin_write(2, 7);
+            let err = catch_unwind(AssertUnwindSafe(|| o.begin_read(2, 1)))
+                .expect_err("read under an active writer must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("slot 2"), "{msg}");
+            assert!(msg.contains("worker 7"), "{msg}");
+            o.end_write(2, 7);
+        }
+
+        #[test]
+        fn writer_over_readers_panics() {
+            let mut o = SlotOwners::new();
+            o.reset(4);
+            o.begin_read(1, 0);
+            let err = catch_unwind(AssertUnwindSafe(|| o.begin_write(1, 3)))
+                .expect_err("write over active readers must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("slot 1"), "{msg}");
+            assert!(msg.contains("1 active reader"), "{msg}");
+            o.end_read(1, 0);
+        }
+
+        #[test]
+        fn slots_past_prepare_are_unchecked() {
+            let mut o = SlotOwners::new();
+            o.reset(2);
+            // slot 9 was appended after the last prepare: no tag, no panic
+            o.begin_write(9, 0);
+            o.begin_write(9, 1);
+            o.end_write(9, 0);
+        }
+
+        #[test]
+        fn threaded_disjoint_writers_are_clean() {
+            let mut o = SlotOwners::new();
+            let n = 1024;
+            o.reset(n);
+            let owners = &o;
+            std::thread::scope(|s| {
+                for wid in 0..4usize {
+                    s.spawn(move || {
+                        for slot in (wid..n).step_by(4) {
+                            owners.begin_write(slot, wid);
+                            owners.end_write(slot, wid);
+                        }
+                    });
+                }
+            });
+        }
     }
 }

@@ -22,7 +22,7 @@
 //! zlib interoperability.
 
 use crate::core::agent::AgentUid;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
 /// Zero-run-length encode: literals are copied, runs of zero bytes
@@ -83,9 +83,12 @@ pub fn inflate(data: &[u8]) -> Result<Vec<u8>, String> {
 
 /// Per-peer delta codec state: the serialized image last exchanged for
 /// every agent UID. Sender and receiver instances stay in lockstep.
+/// `BTreeMap` so [`DeltaCodec::retain`] walks (and drops) images in UID
+/// order — iteration order is observable through allocator behavior and
+/// must not depend on hash state (detlint rule `hash-iter`).
 #[derive(Default)]
 pub struct DeltaCodec {
-    images: HashMap<AgentUid, Vec<u8>>,
+    images: BTreeMap<AgentUid, Vec<u8>>,
     /// bytes that would have been sent without delta encoding
     pub raw_bytes: u64,
     /// bytes actually emitted (pre-entropy stage)

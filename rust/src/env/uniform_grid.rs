@@ -780,8 +780,7 @@ impl UniformGridEnvironment {
                         continue;
                     }
                     // SAFETY: [s, e) slices are disjoint across boxes.
-                    let slice =
-                        unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
+                    let slice = unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
                     walk_box_into_slice(&boxes[b], successors, slice);
                 }
             });
@@ -1023,8 +1022,7 @@ impl UniformGridEnvironment {
                         continue;
                     }
                     // SAFETY: [s, e) slices are disjoint across boxes.
-                    let slice =
-                        unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
+                    let slice = unsafe { std::slice::from_raw_parts_mut(cells.0.add(s), e - s) };
                     if dirty.binary_search(&(b as u32)).is_err() {
                         // clean box: same sorted occupants, new offset
                         let (os, oe) = (old_starts[b] as usize, old_starts[b + 1] as usize);

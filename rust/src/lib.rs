@@ -24,6 +24,11 @@
 //! * [`analysis`]    — statistics, time series, ODE oracles
 //! * [`benchkit`]    — the custom bench harness used by `cargo bench`
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own justification, even inside `unsafe fn` — enforced alongside
+// the detlint `safety` rule (see `analysis::lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analysis;
 pub mod baseline;
 pub mod benchkit;

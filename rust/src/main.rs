@@ -114,13 +114,12 @@ fn cmd_run(cli: &Cli) {
     let mut sim = build_model(model, param);
     let start = std::time::Instant::now();
     sim.simulate(iterations);
-    let elapsed = start.elapsed();
     println!(
         "model={model} iterations={iterations} agents={} added={} removed={} runtime={:.3}s",
         sim.num_agents(),
         sim.agents_added,
         sim.agents_removed,
-        elapsed.as_secs_f64()
+        start.elapsed().as_secs_f64()
     );
     println!("op breakdown:");
     for (name, total, count) in sim.timers.breakdown() {

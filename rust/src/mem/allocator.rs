@@ -44,14 +44,27 @@ thread_local! {
     };
 }
 
+/// Read the next-pointer stored in a free block's first word.
+///
+/// # Safety
+/// `ptr` must address a live, free pool block: at least 8 readable
+/// bytes, word-aligned (every size class is ≥ 16 B and 16-aligned), and
+/// not concurrently written (the block is owned by one free list).
 #[inline]
 unsafe fn block_next(ptr: usize) -> usize {
-    (ptr as *const usize).read()
+    // SAFETY: forwarded caller contract (free block, aligned, owned).
+    unsafe { (ptr as *const usize).read() }
 }
 
+/// Store the next-pointer into a free block's first word.
+///
+/// # Safety
+/// Same contract as [`block_next`], for writes: `ptr` must be a free
+/// pool block exclusively owned by the caller.
 #[inline]
 unsafe fn set_block_next(ptr: usize, next: usize) {
-    (ptr as *mut usize).write(next)
+    // SAFETY: forwarded caller contract (free block, aligned, owned).
+    unsafe { (ptr as *mut usize).write(next) }
 }
 
 struct SizeClass {
@@ -92,6 +105,9 @@ impl SizeClass {
                         let (mut head, mut len) = cache[ci].get();
                         while take < TL_BATCH - 1 {
                             let Some(q) = free.pop() else { break };
+                            // SAFETY: q was just popped off the locked
+                            // central free list — a free, aligned pool
+                            // block this thread now owns exclusively.
                             unsafe { set_block_next(q, head) };
                             head = q;
                             len += 1;
@@ -107,6 +123,8 @@ impl SizeClass {
         let mut bump = self.bump.lock().unwrap();
         if bump.0 == 0 || bump.1 + self.block > SLAB_SIZE {
             let layout = Layout::from_size_align(SLAB_SIZE, MAX_POOLED_ALIGN).unwrap();
+            // SAFETY: layout is statically valid (non-zero size, power-
+            // of-two align) — the GlobalAlloc::alloc contract.
             let base = unsafe { System.alloc(layout) };
             if base.is_null() {
                 return std::ptr::null_mut();
@@ -140,6 +158,8 @@ impl SizeClass {
             .try_with(|cache| {
                 let (head, len) = cache[class_idx].get();
                 if head != 0 {
+                    // SAFETY: head is a free block on this thread's own
+                    // cache chain (checked non-null above).
                     let next = unsafe { block_next(head) };
                     cache[class_idx].set((next, len - 1));
                     head
@@ -160,6 +180,8 @@ impl SizeClass {
         let pushed = TL_CACHE
             .try_with(|cache| {
                 let (head, len) = cache[class_idx].get();
+                // SAFETY: ptr is the block being freed (caller contract
+                // of dealloc) — this thread owns it from here on.
                 unsafe { set_block_next(ptr as usize, head) };
                 cache[class_idx].set((ptr as usize, len + 1));
                 if len + 1 > TL_CACHE_MAX {
@@ -168,6 +190,8 @@ impl SizeClass {
                     let mut free = self.free.lock().unwrap();
                     for _ in 0..TL_BATCH {
                         free.push(head);
+                        // SAFETY: walking this thread's own cache chain;
+                        // every node is a free block it linked itself.
                         head = unsafe { block_next(head) };
                         len -= 1;
                     }
@@ -291,20 +315,31 @@ fn mode() -> u8 {
 /// `#[global_allocator] static A: SwitchablePool = SwitchablePool;`
 pub struct SwitchablePool;
 
+// SAFETY: both paths delegate to allocators upholding the GlobalAlloc
+// contract (PoolAlloc for pooled layouts, System otherwise); the route
+// is a pure function of the layout, so alloc/dealloc pairs always land
+// on the same underlying allocator (`mode()` latches once per process).
 unsafe impl GlobalAlloc for SwitchablePool {
+    // SAFETY: forwards the GlobalAlloc::alloc contract unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if mode() == 2 && PoolAlloc::is_pooled(layout) {
-            GLOBAL_POOL.alloc(layout)
+            // SAFETY: layout is pooled-eligible; same caller contract.
+            unsafe { GLOBAL_POOL.alloc(layout) }
         } else {
-            System.alloc(layout)
+            // SAFETY: same caller contract, forwarded to System.
+            unsafe { System.alloc(layout) }
         }
     }
 
+    // SAFETY: forwards the GlobalAlloc::dealloc contract unchanged; the
+    // layout-based route matches the one taken at allocation time.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         if mode() == 2 && PoolAlloc::is_pooled(layout) {
-            GLOBAL_POOL.dealloc(ptr, layout)
+            // SAFETY: ptr came from GLOBAL_POOL (same layout route).
+            unsafe { GLOBAL_POOL.dealloc(ptr, layout) }
         } else {
-            System.dealloc(ptr, layout)
+            // SAFETY: ptr came from System (same layout route).
+            unsafe { System.dealloc(ptr, layout) }
         }
     }
 }
