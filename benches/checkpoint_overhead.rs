@@ -9,7 +9,7 @@
 
 use teraagent::benchkit::*;
 use teraagent::core::param::{ExecutionContextMode, Param};
-use teraagent::distributed::checkpoint::rank_file;
+use teraagent::distributed::checkpoint::{epoch_dir, list_epochs, rank_file};
 use teraagent::distributed::engine::DistributedEngine;
 use teraagent::models::epidemiology::{build, SirParams};
 
@@ -68,9 +68,17 @@ fn main() {
             expect,
             "checkpointing changed the results"
         );
-        let bytes: u64 = (0..ranks)
-            .map(|r| std::fs::metadata(rank_file(&dir, r)).map(|m| m.len()).unwrap_or(0))
-            .sum();
+        // the periodic hook writes epoch directories (PR 8): size the
+        // newest complete one
+        let bytes: u64 = list_epochs(&dir)
+            .last()
+            .map(|&e| {
+                let ed = epoch_dir(&dir, e);
+                (0..ranks)
+                    .map(|r| std::fs::metadata(rank_file(&ed, r)).map(|m| m.len()).unwrap_or(0))
+                    .sum()
+            })
+            .unwrap_or(0);
         report.row("sir_dist", &format!("ckpt_freq_{freq}"), per_iter);
         table.row(&[
             format!("every {freq}"),

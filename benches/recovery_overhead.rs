@@ -1,0 +1,142 @@
+//! PR 8 — rollback-recovery overhead: the cost of self-healing. A
+//! supervised SIR run takes a scripted rank kill at 3/4 of the run;
+//! the bench sweeps the checkpoint cadence and reports, per cadence,
+//! the recovery latency (discard + transport rebuild + restore from
+//! the newest complete epoch) and the lost work (supersteps rolled
+//! back × clean per-superstep seconds) — the two halves of the
+//! MTTF/cadence trade-off. A supervised run with no failures
+//! measures the supervision overhead itself (heartbeats + runner
+//! thread indirection). Every run must end bitwise identical to the
+//! uninterrupted unsupervised baseline.
+//!
+//! CI smoke: `TA_BENCH_SCALE=0.02 TA_BENCH_JSON=... cargo bench
+//! --bench recovery_overhead`.
+
+use teraagent::benchkit::*;
+use teraagent::core::param::{ExecutionContextMode, Param};
+use teraagent::distributed::engine::DistributedEngine;
+use teraagent::distributed::supervisor::Supervisor;
+use teraagent::models::epidemiology::{build, SirParams};
+
+fn main() {
+    print_env_banner("recovery_overhead");
+    let n = scaled(3000, 300);
+    let iterations = 24u64;
+    let ranks = 2usize;
+    // captures only `n` (Copy), so the builder can be boxed per
+    // supervisor and still borrowed by the plain engine
+    let builder = move |p: Param| {
+        build(
+            p,
+            &SirParams {
+                initial_susceptible: n,
+                initial_infected: n / 100,
+                space_length: 80.0,
+                ..SirParams::measles()
+            },
+        )
+    };
+    let dir = std::env::temp_dir()
+        .join(format!("teraagent_bench_recovery_{}", std::process::id()));
+    let param = |freq: u64| {
+        let mut p = Param::default();
+        p.execution_context = ExecutionContextMode::Copy;
+        p.dist_checkpoint_freq = freq;
+        p.dist_checkpoint_dir = dir.to_string_lossy().to_string();
+        p.dist_heartbeat_ms = 2_000;
+        p.dist_recv_timeout_ms = 5_000;
+        p
+    };
+    let mut report = JsonReport::new("recovery_overhead");
+    let mut table = BenchTable::new(
+        &format!(
+            "PR 8: rollback-recovery overhead ({n} agents, {ranks} ranks, \
+             {iterations} supersteps, kill at {})",
+            iterations * 3 / 4
+        ),
+        &["scenario", "recovery ms", "lost steps", "lost work s", "total s"],
+    );
+
+    // uninterrupted unsupervised baseline: the bitwise oracle and the
+    // per-superstep cost that prices lost work
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut plain = DistributedEngine::new(&builder, param(0), ranks, 1);
+    let t = std::time::Instant::now();
+    plain.simulate(iterations).unwrap();
+    let per_step = t.elapsed().as_secs_f64() / iterations as f64;
+    let expect = plain.state_snapshot();
+    report.row("sir_dist", "plain", per_step);
+    table.row(&[
+        "plain (unsupervised)".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        format!("{:.3}", per_step * iterations as f64),
+    ]);
+
+    // supervised, no failures: heartbeat + runner-thread overhead
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sup = Supervisor::new(Box::new(builder), param(5), ranks, 1);
+    let t = std::time::Instant::now();
+    sup.run(iterations).unwrap();
+    let sup_total = t.elapsed().as_secs_f64();
+    let engine = sup.finish().unwrap();
+    assert_eq!(
+        engine.state_snapshot(),
+        expect,
+        "supervision changed the results"
+    );
+    report.row("sir_dist", "sup_clean", sup_total / iterations as f64);
+    table.row(&[
+        "supervised, clean".to_string(),
+        "-".to_string(),
+        "0".to_string(),
+        "0.000".to_string(),
+        format!("{sup_total:.3}"),
+    ]);
+
+    // one kill, three cadences: tighter cadence -> less lost work,
+    // more checkpoint overhead (priced by checkpoint_overhead bench)
+    let kill_at = iterations * 3 / 4;
+    for freq in [1u64, 5, 10] {
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sup = Supervisor::new(Box::new(builder), param(freq), ranks, 1)
+            .with_backoff_base(std::time::Duration::from_millis(1));
+        let fired = sup.script_kill(ranks - 1, kill_at);
+        let t = std::time::Instant::now();
+        sup.run(iterations).unwrap();
+        let total = t.elapsed().as_secs_f64();
+        let stats = sup.stats();
+        let engine = sup.finish().unwrap();
+        assert!(
+            fired.load(std::sync::atomic::Ordering::SeqCst),
+            "scripted kill did not fire"
+        );
+        assert_eq!(stats.recoveries, 1, "expected exactly one recovery");
+        assert_eq!(
+            engine.state_snapshot(),
+            expect,
+            "rollback-recovery changed the results"
+        );
+        let recovery_s = stats.last_recovery_latency.as_secs_f64();
+        let lost_work = stats.supersteps_lost as f64 * per_step;
+        report.row("sir_dist", &format!("recover_freq_{freq}"), recovery_s);
+        report.row("sir_dist", &format!("lost_work_freq_{freq}"), lost_work);
+        table.row(&[
+            format!("kill @ {kill_at}, ckpt every {freq}"),
+            format!("{:.1}", recovery_s * 1e3),
+            stats.supersteps_lost.to_string(),
+            format!("{lost_work:.3}"),
+            format!("{total:.3}"),
+        ]);
+    }
+    table.print();
+    report.write_if_requested();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "recovery latency is dominated by the restore (deserialize + rebuild); lost\n\
+         work scales with the checkpoint interval — the knob trades steady-state hook\n\
+         cost against rollback distance, and either way the replayed world line lands\n\
+         on the same bits as the uninterrupted run."
+    );
+}

@@ -19,16 +19,27 @@
 //! With `--checkpoint-freq N` (PR 6) the run writes a coordinated
 //! crash-consistent checkpoint every N supersteps into
 //! `--checkpoint-dir` (default `output/checkpoints`); `--restore`
-//! resumes from those files instead of starting fresh, and
-//! `--faults SEED` runs the whole exchange over the deterministic
-//! fault injector (2% drop/corrupt/duplicate/delay) under the
+//! resumes from the newest *complete* checkpoint epoch (torn epochs
+//! are skipped with a typed reason), and `--faults SEED` runs the
+//! whole exchange over the deterministic fault injector (2% of
+//! `--fault-kind drop|corrupt|duplicate|delay|all`) under the
 //! reliable seq/CRC/resend layer. Either way the final state must be
 //! bitwise identical to the uninterrupted shared-memory run.
+//!
+//! With `--supervise` (PR 8) the run goes through the self-healing
+//! supervisor: heartbeat failure detection plus automatic
+//! rollback-recovery to the last coordinated checkpoint. `--kill-rank
+//! R@S` (repeatable) scripts rank R to panic at superstep S; combined
+//! with `--faults SEED --fault-kind KIND` storms, the supervisor
+//! detects each failure, rolls back, and the final state still
+//! matches the uninterrupted reference bit for bit.
 //!
 //!     cargo run --release --example distributed [--tcp]
 //!     cargo run --release --example distributed -- --ranks 4 [--balance]
 //!     cargo run --release --example distributed -- --checkpoint-freq 10 [--faults 7]
 //!     cargo run --release --example distributed -- --restore
+//!     cargo run --release --example distributed -- --supervise --kill-rank 1@7 \
+//!         --faults 7 --fault-kind drop --checkpoint-freq 5
 
 use teraagent::core::math::Real3;
 use teraagent::core::param::{ExecutionContextMode, Param};
@@ -215,22 +226,54 @@ fn run_imbalanced_spheroid(ranks: usize, balance: bool, freq: u64, partitioner: 
     );
 }
 
+/// Map `--fault-kind` to a [`FaultConfig`]: 2% of the chosen fault
+/// class(es) at `seed`.
+fn fault_config(seed: u64, kind: &str) -> teraagent::distributed::fault::FaultConfig {
+    use teraagent::distributed::fault::FaultConfig;
+    let p = 0.02;
+    let mut cfg = FaultConfig {
+        seed,
+        drop_p: 0.0,
+        corrupt_p: 0.0,
+        duplicate_p: 0.0,
+        delay_p: 0.0,
+    };
+    match kind {
+        "drop" => cfg.drop_p = p,
+        "corrupt" => cfg.corrupt_p = p,
+        "duplicate" => cfg.duplicate_p = p,
+        "delay" => cfg.delay_p = p,
+        "all" => {
+            cfg.drop_p = p;
+            cfg.corrupt_p = p;
+            cfg.duplicate_p = p;
+            cfg.delay_p = p;
+        }
+        other => {
+            eprintln!("unknown --fault-kind {other} (drop|corrupt|duplicate|delay|all)");
+            std::process::exit(2);
+        }
+    }
+    cfg
+}
+
 /// The PR 6 scenario: crash-consistent coordinated checkpoints plus
 /// (optionally) a fault-injected transport. Runs the SIR demo on
 /// `ranks` ranks with the periodic checkpoint hook on; `restore`
-/// resumes from `dir` instead of starting fresh; `faults` wraps the
-/// in-process mailboxes in the deterministic fault injector under the
-/// reliable (seq/CRC/resend) layer. The final state is checked bitwise
-/// against the uninterrupted shared-memory reference.
+/// resumes from the newest complete epoch under `dir` instead of
+/// starting fresh; `faults` wraps the in-process mailboxes in the
+/// deterministic fault injector under the reliable (seq/CRC/resend)
+/// layer. The final state is checked bitwise against the
+/// uninterrupted shared-memory reference.
 fn run_fault_tolerant(
     ranks: usize,
     iterations: u64,
     freq: u64,
     dir: &str,
     restore: bool,
-    faults: Option<u64>,
+    faults: Option<(u64, &str)>,
 ) {
-    use teraagent::distributed::fault::{FaultConfig, FaultyTransport, ReliableTransport};
+    use teraagent::distributed::fault::{FaultyTransport, ReliableTransport};
     use teraagent::distributed::transport::InProcessTransport;
     let builder = |p: Param| build(p, &model());
     let mut p = param();
@@ -238,32 +281,26 @@ fn run_fault_tolerant(
     p.dist_checkpoint_dir = dir.to_string();
 
     let mut engine = if restore {
-        println!("restoring {ranks}-rank run from {dir} ...");
-        DistributedEngine::restore_from(&builder, p, ranks, 1, std::path::Path::new(dir))
-            .unwrap_or_else(|e| {
-                eprintln!("restore failed: {e}");
-                std::process::exit(1);
-            })
+        println!("restoring {ranks}-rank run from the newest complete epoch under {dir} ...");
+        let (engine, skipped) =
+            DistributedEngine::restore_latest(&builder, p, ranks, 1, std::path::Path::new(dir))
+                .unwrap_or_else(|e| {
+                    eprintln!("restore failed: {e}");
+                    std::process::exit(1);
+                });
+        for (epoch, why) in &skipped {
+            println!("  skipped torn epoch {epoch}: {why}");
+        }
+        println!("  resumed at superstep {}", engine.iteration);
+        engine
     } else {
         DistributedEngine::new(&builder, p, ranks, 1)
     };
-    if let Some(seed) = faults {
-        println!(
-            "fault injection on (seed {seed}): 2% drop/corrupt/duplicate/delay \
-             under the reliable layer"
-        );
+    if let Some((seed, kind)) = faults {
+        println!("fault injection on (seed {seed}, kind {kind}) under the reliable layer");
         let inner = InProcessTransport::new(ranks)
             .with_recv_timeout(std::time::Duration::from_secs(5));
-        let faulty = FaultyTransport::new(
-            inner,
-            FaultConfig {
-                seed,
-                drop_p: 0.02,
-                corrupt_p: 0.02,
-                duplicate_p: 0.02,
-                delay_p: 0.02,
-            },
-        );
+        let faulty = FaultyTransport::new(inner, fault_config(seed, kind));
         engine.set_transport(Box::new(
             ReliableTransport::new(faulty)
                 .with_poll(std::time::Duration::from_millis(5))
@@ -293,6 +330,112 @@ fn run_fault_tolerant(
     assert!(identical, "checkpoint/fault stack changed the results");
 }
 
+/// The PR 8 scenario: the self-healing supervisor. Scripted rank
+/// kills and/or a seeded fault storm hit the run; the supervisor
+/// detects each failure (heartbeat, typed error, deadline), rolls
+/// back to the last complete checkpoint epoch, and resumes. The final
+/// state must still be bitwise identical to the uninterrupted
+/// shared-memory run.
+fn run_supervised(
+    ranks: usize,
+    iterations: u64,
+    freq: u64,
+    dir: &str,
+    restore: bool,
+    faults: Option<(u64, &str)>,
+    kills: &[(usize, u64)],
+) {
+    use teraagent::core::random::mix;
+    use teraagent::distributed::fault::{FaultyTransport, ReliableTransport};
+    use teraagent::distributed::supervisor::Supervisor;
+    use teraagent::distributed::transport::InProcessTransport;
+
+    // validate the kind up front — the factory below runs per
+    // generation, too late for a usage error
+    if let Some((_, kind)) = faults {
+        let _ = fault_config(0, kind);
+    }
+    if !restore {
+        // stale epochs would make the supervisor auto-resume past the
+        // kills and faults this invocation scripts
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let builder = |p: Param| build(p, &model());
+    let mut p = param();
+    p.dist_checkpoint_freq = freq;
+    p.dist_checkpoint_dir = dir.to_string();
+    // demo-friendly health knobs: a failed superstep surfaces in
+    // seconds, not the production-default minutes
+    p.dist_heartbeat_ms = 2_000;
+    p.dist_recv_timeout_ms = 5_000;
+    p.dist_superstep_deadline_ms = 30_000;
+
+    println!(
+        "supervised {ranks}-rank run: {iterations} supersteps, checkpoints every {freq} \
+         into {dir}, kills {kills:?}, faults {faults:?}"
+    );
+    let mut sup = Supervisor::new(Box::new(builder), p, ranks, 1);
+    if let Some((seed, kind)) = faults {
+        let kind = kind.to_string();
+        sup = sup.with_transport_factory(Box::new(move |ranks, generation| {
+            // generation-salted seed: the fault pattern that killed a
+            // world line is not replayed verbatim against its successor
+            let cfg = fault_config(mix(&[seed, generation]), &kind);
+            let inner = InProcessTransport::new(ranks)
+                .with_recv_timeout(std::time::Duration::from_millis(500));
+            Box::new(
+                ReliableTransport::new(FaultyTransport::new(inner, cfg))
+                    .with_poll(std::time::Duration::from_millis(5))
+                    .with_max_wait(std::time::Duration::from_secs(3)),
+            )
+        }));
+    }
+    let fired: Vec<_> = kills.iter().map(|&(r, s)| sup.script_kill(r, s)).collect();
+    let t = std::time::Instant::now();
+    if let Err(e) = sup.run(iterations) {
+        eprintln!("supervised run unrecoverable (typed): {e}");
+        std::process::exit(1);
+    }
+    let elapsed = t.elapsed();
+    let stats = sup.stats();
+    let engine = sup.finish().unwrap_or_else(|e| {
+        eprintln!("supervisor finish failed: {e}");
+        std::process::exit(1);
+    });
+    for (i, latch) in fired.iter().enumerate() {
+        let (r, s) = kills[i];
+        println!(
+            "  scripted kill rank {r} @ superstep {s}: fired={}",
+            latch.load(std::sync::atomic::Ordering::SeqCst)
+        );
+    }
+    println!(
+        "  {} supersteps in {:.3}s: {} failure(s), {} recover{}, {} superstep(s) of \
+         work lost, {} torn epoch(s) skipped, {} thread(s) abandoned",
+        stats.supersteps,
+        elapsed.as_secs_f64(),
+        stats.failures,
+        stats.recoveries,
+        if stats.recoveries == 1 { "y" } else { "ies" },
+        stats.supersteps_lost,
+        stats.epochs_skipped,
+        stats.threads_abandoned,
+    );
+    if let Some(why) = &stats.last_failure {
+        println!(
+            "  last failure: {why} (recovery latency {:.1} ms)",
+            stats.last_recovery_latency.as_secs_f64() * 1e3
+        );
+    }
+    // the headline invariant: failures, rollbacks and replays must be
+    // invisible in the results
+    let mut shared = builder(param());
+    shared.simulate(iterations);
+    let identical = engine.state_snapshot() == simulation_snapshot(&shared);
+    println!("  identical to shared-memory reference: {identical}");
+    assert!(identical, "supervised recovery changed the results");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.iter().any(|a| a == "--tcp") {
@@ -308,6 +451,9 @@ fn main() {
     let mut ckpt_dir = "output/checkpoints".to_string();
     let mut restore = false;
     let mut faults: Option<u64> = None;
+    let mut fault_kind = "all".to_string();
+    let mut supervise = false;
+    let mut kills: Vec<(usize, u64)> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -346,12 +492,44 @@ fn main() {
                 i += 1;
                 faults = Some(flag_value(&args, i).parse().expect("--faults takes a seed"));
             }
+            "--fault-kind" => {
+                i += 1;
+                // validated by fault_config in the scenario runner
+                fault_kind = flag_value(&args, i).to_string();
+            }
+            "--supervise" => supervise = true,
+            "--kill-rank" => {
+                i += 1;
+                let spec = flag_value(&args, i);
+                let Some((r, s)) = spec.split_once('@') else {
+                    eprintln!("--kill-rank takes R@S (e.g. 1@7)");
+                    std::process::exit(2);
+                };
+                kills.push((
+                    r.parse().expect("--kill-rank rank"),
+                    s.parse().expect("--kill-rank superstep"),
+                ));
+            }
             other => {
                 eprintln!("unknown flag {other}");
                 std::process::exit(2);
             }
         }
         i += 1;
+    }
+    let faults = faults.map(|seed| (seed, fault_kind.as_str()));
+    if supervise {
+        run_supervised(
+            ranks.unwrap_or(2),
+            iterations,
+            // recovery needs something to roll back to
+            if ckpt_freq == 0 { 5 } else { ckpt_freq },
+            &ckpt_dir,
+            restore,
+            faults,
+            &kills,
+        );
+        return;
     }
     if ckpt_freq > 0 || restore || faults.is_some() {
         run_fault_tolerant(

@@ -26,6 +26,11 @@
 //!    through a method that does) or appears in the checked-in waiver
 //!    list ([`waivers::RM_VERSION_WAIVERS`]) with a reason. This is the
 //!    PR 4 `get_mut` regression class.
+//! 6. **unwrap** — no `.unwrap()`/`.expect(` in `distributed/` outside
+//!    `#[cfg(test)]`: a rank panic strands its superstep peers, so the
+//!    distributed layer fails typed (`DistError`) for the PR 8
+//!    supervisor to roll back from. Proven-infallible cases carry a
+//!    waiver.
 //!
 //! ## Waivers
 //! A finding can be waived in place with a comment on the same line or
@@ -44,6 +49,7 @@ pub mod hash_iter;
 pub mod lexer;
 pub mod safety;
 pub mod timer_keys;
+pub mod unwrap;
 pub mod version_bump;
 pub mod waivers;
 pub mod wall_clock;
@@ -60,6 +66,7 @@ pub enum Rule {
     WallClock,
     TimerKey,
     VersionBump,
+    UnwrapPanic,
     UnexplainedWaiver,
 }
 
@@ -72,6 +79,7 @@ impl Rule {
             Rule::WallClock => "wall-clock",
             Rule::TimerKey => "timer-key",
             Rule::VersionBump => "version-bump",
+            Rule::UnwrapPanic => "unwrap",
             Rule::UnexplainedWaiver => "waiver",
         }
     }
@@ -207,6 +215,7 @@ pub fn lint_source(rel: &str, src: &str) -> LintReport {
     hash_iter::check(&ctx, &mut out);
     wall_clock::check(&ctx, &mut out);
     timer_keys::check(&ctx, &mut out);
+    unwrap::check(&ctx, &mut out);
     version_bump::check(&ctx, &mut out);
     out
 }

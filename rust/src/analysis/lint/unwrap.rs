@@ -1,0 +1,142 @@
+//! Rule 6: no `.unwrap()` / `.expect(` in `distributed/` outside
+//! `#[cfg(test)]`. A panic in a rank thread takes down one participant
+//! of a coordinated superstep and strands its peers in recv timeouts —
+//! the self-healing contract (PR 8) demands every failure in the
+//! distributed layer surface as a *typed* [`crate::distributed::DistError`]
+//! the supervisor can roll back from, never as an ad-hoc panic.
+//! Genuinely infallible conversions (bounds-checked `try_into` on
+//! fixed-size headers) and documented invariants carry an explicit
+//! `// DETLINT: allow(unwrap) <reason>` waiver instead.
+
+use super::{emit, FileCtx, LintReport, Rule};
+
+/// The rule binds the distributed layer only: `core/` and friends have
+/// their own panic discipline (a shared-memory panic is an ordinary
+/// test failure, not a stranded cluster).
+const CRITICAL: &[&str] = &["distributed/"];
+
+/// Exact call tokens. `.unwrap_or*(…)` and `.expect_err(…)` are fine —
+/// they do not panic on the `Err`/`None` path.
+const PANICKY: &[&str] = &[".unwrap()", ".expect("];
+
+pub fn check(ctx: &FileCtx, out: &mut LintReport) {
+    if !CRITICAL.iter().any(|p| ctx.rel.starts_with(p)) {
+        return;
+    }
+    for (l, line) in ctx.scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in PANICKY {
+            if line.code.contains(pat) {
+                emit(
+                    ctx,
+                    out,
+                    l,
+                    Rule::UnwrapPanic,
+                    format!(
+                        "`{pat}…)` in the distributed layer — a rank panic strands its \
+                         peers; return a typed DistError (or waive a proven-infallible case)"
+                    ),
+                );
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_source, Rule};
+
+    fn fires(rel: &str, src: &str) -> bool {
+        lint_source(rel, src)
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::UnwrapPanic)
+    }
+
+    #[test]
+    fn unwrap_in_distributed_fires() {
+        let src = "\
+fn decode(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[0..8].try_into().unwrap())
+}
+";
+        assert!(fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn expect_in_distributed_fires() {
+        let src = "\
+fn head(v: &[u8]) -> u8 {
+    *v.first().expect(\"nonempty\")
+}
+";
+        assert!(fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn unwrap_or_variants_and_expect_err_pass() {
+        let src = "\
+fn f(r: Result<u64, u64>, o: Option<u64>) -> u64 {
+    r.unwrap_or_default() + o.unwrap_or(0) + r.unwrap_or_else(|e| e)
+}
+fn g(r: Result<u64, String>) -> String {
+    r.expect_err(\"must fail\")
+}
+";
+        assert!(!fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn other_modules_are_exempt() {
+        let src = "\
+fn f(o: Option<u64>) -> u64 { o.unwrap() }
+";
+        assert!(!fires("core/fixture.rs", src));
+        assert!(!fires("analysis/fixture.rs", src));
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "\
+fn prod() -> u64 { 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v: Option<u64> = Some(1);
+        assert_eq!(v.unwrap(), super::prod());
+    }
+}
+";
+        assert!(!fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn explained_waiver_passes_and_is_recorded() {
+        let src = "\
+fn decode(b: &[u8; 8]) -> u64 {
+    // DETLINT: allow(unwrap) slice of a fixed [u8; 8] array is exactly 8 bytes
+    u64::from_le_bytes(b[0..8].try_into().unwrap())
+}
+";
+        let rep = lint_source("distributed/fixture.rs", src);
+        assert!(rep.clean(), "{:?}", rep.findings);
+        assert_eq!(rep.waivers.len(), 1);
+        assert_eq!(rep.waivers[0].key, "unwrap");
+    }
+
+    #[test]
+    fn unwrap_inside_string_literal_passes() {
+        // the lexer blanks string contents; \".unwrap()\" in a message
+        // must not trip the rule
+        let src = "\
+fn msg() -> &'static str {
+    \"call .unwrap() at your peril\"
+}
+";
+        assert!(!fires("distributed/fixture.rs", src));
+    }
+}

@@ -163,6 +163,28 @@ pub fn write_file(path: &Path, kind: u8, body: &[u8]) -> Result<u64, BackupError
     Ok(buf.len() as u64)
 }
 
+/// Remove orphaned `<name>.tmp` files left directly in `dir` by a
+/// crash between the tmp write and the rename in [`write_file`]. The
+/// tmp file is by definition not yet part of any complete checkpoint,
+/// so deleting it never loses committed state. Returns how many
+/// orphans were removed; a missing `dir` counts as zero orphans.
+pub fn remove_orphan_tmp(dir: &Path) -> Result<usize, BackupError> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(e.into()),
+    };
+    let mut removed = 0usize;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_file() && path.extension().is_some_and(|e| e == "tmp") {
+            std::fs::remove_file(&path)?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
 /// Read and verify a checkpoint file: magic, format version, kind,
 /// CRC-32 trailer. Returns the body bytes.
 pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>, BackupError> {

@@ -177,6 +177,31 @@ pub struct Param {
     /// wire header can no longer make a rank allocate an unbounded
     /// buffer.
     pub dist_max_message_bytes: u64,
+    /// Run the distributed engine under the self-healing supervisor
+    /// (PR 8): per-rank heartbeats + superstep deadline watchdog, with
+    /// automatic rollback to the last complete coordinated checkpoint
+    /// epoch on any rank failure.
+    pub dist_supervise: bool,
+    /// How long a rank waits for a peer's per-superstep heartbeat
+    /// before declaring the peer failed (only read when
+    /// `dist_supervise` is on).
+    pub dist_heartbeat_ms: u64,
+    /// Supervisor watchdog: a whole superstep exceeding this wall-time
+    /// budget counts as a failure and triggers recovery; `0` disables
+    /// the deadline.
+    pub dist_superstep_deadline_ms: u64,
+    /// Supervisor recovery budget: after this many rollback-recoveries
+    /// in one run the supervisor surfaces `DistError::Unrecoverable`
+    /// instead of retrying again.
+    pub dist_max_recoveries: u64,
+    /// Checkpoint-directory hygiene: keep only the newest N coordinated
+    /// checkpoint epochs (`epoch<superstep>/` subdirectories); `0`
+    /// keeps every epoch.
+    pub dist_checkpoint_retain: u64,
+    /// Transport receive watchdog: how long a blocking `recv` waits
+    /// before failing with a typed timeout (both `InProcessTransport`
+    /// and `TcpTransport`). Replaces the former hardcoded 120 s.
+    pub dist_recv_timeout_ms: u64,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -219,6 +244,12 @@ impl Default for Param {
             dist_checkpoint_freq: 0,
             dist_checkpoint_dir: String::new(),
             dist_max_message_bytes: 256 * 1024 * 1024,
+            dist_supervise: false,
+            dist_heartbeat_ms: 30_000,
+            dist_superstep_deadline_ms: 0,
+            dist_max_recoveries: 5,
+            dist_checkpoint_retain: 3,
+            dist_recv_timeout_ms: 120_000,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -366,6 +397,24 @@ impl Param {
             "dist_max_message_bytes" => {
                 self.dist_max_message_bytes = value.parse().map_err(|_| err(k, value))?
             }
+            "dist_supervise" => {
+                self.dist_supervise = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_heartbeat_ms" => {
+                self.dist_heartbeat_ms = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_superstep_deadline_ms" => {
+                self.dist_superstep_deadline_ms = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_max_recoveries" => {
+                self.dist_max_recoveries = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_checkpoint_retain" => {
+                self.dist_checkpoint_retain = value.parse().map_err(|_| err(k, value))?
+            }
+            "dist_recv_timeout_ms" => {
+                self.dist_recv_timeout_ms = value.parse().map_err(|_| err(k, value))?
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
                 self.visualization_interval = value.parse().map_err(|_| err(k, value))?
@@ -493,6 +542,19 @@ mod tests {
         p.apply_kv("dist_checkpoint_freq", "100").unwrap();
         p.apply_kv("dist_checkpoint_dir", "/tmp/ckpt").unwrap();
         p.apply_kv("dist_max_message_bytes", "1048576").unwrap();
+        p.apply_kv("dist_supervise", "true").unwrap();
+        p.apply_kv("dist_heartbeat_ms", "250").unwrap();
+        p.apply_kv("dist_superstep_deadline_ms", "4000").unwrap();
+        p.apply_kv("dist_max_recoveries", "7").unwrap();
+        p.apply_kv("dist_checkpoint_retain", "2").unwrap();
+        p.apply_kv("dist_recv_timeout_ms", "1500").unwrap();
+        assert!(p.dist_supervise);
+        assert_eq!(p.dist_heartbeat_ms, 250);
+        assert_eq!(p.dist_superstep_deadline_ms, 4000);
+        assert_eq!(p.dist_max_recoveries, 7);
+        assert_eq!(p.dist_checkpoint_retain, 2);
+        assert_eq!(p.dist_recv_timeout_ms, 1500);
+        assert!(p.apply_kv("dist_max_recoveries", "many").is_err());
         assert_eq!(p.dist_partitioner, DistPartitioner::Morton);
         assert_eq!(p.dist_rebalance_freq, 10);
         assert_eq!(p.dist_checkpoint_freq, 100);

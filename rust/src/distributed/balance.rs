@@ -73,6 +73,7 @@ impl LoadStats {
     pub fn from_bytes(data: &[u8]) -> Result<LoadStats, String> {
         let u64_at = |off: usize| -> Result<u64, String> {
             data.get(off..off + 8)
+                // DETLINT: allow(unwrap) `get(off..off + 8)` yields exactly 8 bytes
                 .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
                 .ok_or_else(|| "short load-stats message".to_string())
         };
@@ -82,6 +83,7 @@ impl LoadStats {
         let op_nanos = u64_at(24)?;
         let bins = data
             .get(32..36)
+            // DETLINT: allow(unwrap) `get(32..36)` yields exactly 4 bytes
             .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
             .ok_or_else(|| "short load-stats message".to_string())? as usize;
         // a corrupt count must not trigger a huge allocation

@@ -23,6 +23,15 @@
 //! the same superstep — a torn checkpoint (some ranks wrote, some
 //! crashed first) is rejected as a typed error instead of resuming an
 //! inconsistent world line.
+//!
+//! ## Epoch layout (PR 8)
+//!
+//! The periodic hook keeps a *history* of coordinated checkpoints, one
+//! `epoch<superstep>/` subdirectory per barrier, so the supervisor can
+//! fall back past a torn epoch to the newest complete one. Hygiene:
+//! only the newest `Param::dist_checkpoint_retain` epochs are kept
+//! ([`prune_epochs`]) and orphaned `*.tmp` files from mid-write
+//! crashes are swept on every checkpoint ([`remove_orphan_tmp`]).
 
 use crate::core::backup::{
     decode_sim, encode_sim, read_file, write_file, BackupError, Cursor, KIND_DISTRIBUTED_RANK,
@@ -36,6 +45,58 @@ use std::time::Duration;
 /// Canonical rank-file name inside a checkpoint directory.
 pub fn rank_file(dir: &Path, rank: usize) -> PathBuf {
     dir.join(format!("rank{rank}.ckpt"))
+}
+
+/// Subdirectory of `base` holding the coordinated checkpoint written
+/// at `superstep`. Zero-padded so lexicographic order matches numeric
+/// order in directory listings.
+pub fn epoch_dir(base: &Path, superstep: u64) -> PathBuf {
+    base.join(format!("epoch{superstep:010}"))
+}
+
+/// All checkpoint epochs present under `base`, ascending by superstep.
+/// Non-epoch entries are ignored; a missing `base` is an empty list.
+pub fn list_epochs(base: &Path) -> Vec<u64> {
+    let Ok(entries) = std::fs::read_dir(base) else {
+        return Vec::new();
+    };
+    let mut epochs: Vec<u64> = entries
+        .flatten()
+        .filter(|e| e.path().is_dir())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_prefix("epoch"))
+                .and_then(|n| n.parse().ok())
+        })
+        .collect();
+    epochs.sort_unstable();
+    epochs
+}
+
+/// Delete the oldest epoch directories until at most `retain` remain;
+/// `retain == 0` keeps everything. Returns the supersteps removed.
+pub fn prune_epochs(base: &Path, retain: usize) -> Result<Vec<u64>, BackupError> {
+    if retain == 0 {
+        return Ok(Vec::new());
+    }
+    let epochs = list_epochs(base);
+    let excess = epochs.len().saturating_sub(retain);
+    let doomed = epochs[..excess].to_vec();
+    for &superstep in &doomed {
+        std::fs::remove_dir_all(epoch_dir(base, superstep))?;
+    }
+    Ok(doomed)
+}
+
+/// Sweep orphaned `*.tmp` files (crash between tmp write and rename)
+/// from `base` and every epoch subdirectory. Returns orphans removed.
+pub fn remove_orphan_tmp(base: &Path) -> Result<usize, BackupError> {
+    let mut removed = crate::core::backup::remove_orphan_tmp(base)?;
+    for superstep in list_epochs(base) {
+        removed += crate::core::backup::remove_orphan_tmp(&epoch_dir(base, superstep))?;
+    }
+    Ok(removed)
 }
 
 /// Write one rank's coordinated checkpoint file.
@@ -148,5 +209,64 @@ impl RankCheckpoint {
             ));
         }
         Ok(iter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_base(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "teraagent_epochs_{}_{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn epoch_listing_sorted_and_noise_ignored() {
+        let base = tmp_base("list");
+        for s in [30u64, 5, 10] {
+            std::fs::create_dir_all(epoch_dir(&base, s)).unwrap();
+        }
+        std::fs::create_dir_all(base.join("not_an_epoch")).unwrap();
+        std::fs::write(base.join("epoch9999999999"), b"a file, not a dir").unwrap();
+        assert_eq!(list_epochs(&base), vec![5, 10, 30]);
+        assert_eq!(list_epochs(&base.join("missing")), Vec::<u64>::new());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn prune_keeps_newest_epochs() {
+        let base = tmp_base("prune");
+        for s in [2u64, 4, 6, 8] {
+            std::fs::create_dir_all(epoch_dir(&base, s)).unwrap();
+            std::fs::write(rank_file(&epoch_dir(&base, s), 0), b"x").unwrap();
+        }
+        assert_eq!(prune_epochs(&base, 0).unwrap(), Vec::<u64>::new());
+        assert_eq!(list_epochs(&base), vec![2, 4, 6, 8]);
+        assert_eq!(prune_epochs(&base, 2).unwrap(), vec![2, 4]);
+        assert_eq!(list_epochs(&base), vec![6, 8]);
+        // already below the cap: nothing removed
+        assert_eq!(prune_epochs(&base, 5).unwrap(), Vec::<u64>::new());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn orphan_tmp_swept_from_base_and_epochs() {
+        let base = tmp_base("tmp");
+        let e = epoch_dir(&base, 3);
+        std::fs::create_dir_all(&e).unwrap();
+        std::fs::write(rank_file(&e, 0), b"committed").unwrap();
+        std::fs::write(e.join("rank1.ckpt.tmp"), b"torn").unwrap();
+        std::fs::write(base.join("stray.tmp"), b"torn").unwrap();
+        assert_eq!(remove_orphan_tmp(&base).unwrap(), 2);
+        assert!(rank_file(&e, 0).exists(), "committed file untouched");
+        assert!(!e.join("rank1.ckpt.tmp").exists());
+        assert_eq!(remove_orphan_tmp(&base).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

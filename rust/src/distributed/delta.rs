@@ -70,6 +70,7 @@ pub fn rle_decode(data: &[u8]) -> Result<Vec<u8>, String> {
 /// DEFLATE helpers (entropy stage).
 pub fn deflate(data: &[u8]) -> Vec<u8> {
     let mut enc = flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+    // DETLINT: allow(unwrap) writing into an in-memory Vec sink cannot fail
     enc.write_all(data).expect("deflate write");
     enc.finish().expect("deflate finish")
 }
@@ -139,6 +140,7 @@ impl DeltaCodec {
             return Err("short delta header".to_string());
         }
         let mode = data[0];
+        // DETLINT: allow(unwrap) fixed sub-slices of a header length-checked (>= 13) above
         let uid = AgentUid::from_le_bytes(data[1..9].try_into().unwrap());
         let len = u32::from_le_bytes(data[9..13].try_into().unwrap()) as usize;
         if data.len() < 13 + len {

@@ -73,12 +73,16 @@ use crate::distributed::transport::{InProcessTransport, TcpTransport, Transport}
 use crate::distributed::DistError;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const TAG_MIGRATION: u32 = 1;
 const TAG_AURA: u32 = 2;
 /// Load-balance gossip messages (`LoadStats` wire format).
 const TAG_LOAD: u32 = 3;
+/// Supervision heartbeats (`[rank u64 | superstep u64]`, PR 8).
+const TAG_HEARTBEAT: u32 = 4;
 
 /// Build the decomposition `Param` selects: movable-cut slabs (the
 /// default) or Morton-SFC ranges, both sized from the model's space
@@ -185,6 +189,16 @@ pub struct RankWorker {
     /// Models whose behaviors differ per agent of the same type
     /// register a behavior-complete factory in `AgentRegistry` instead.
     templates: HashMap<u16, Vec<Box<dyn crate::core::behavior::Behavior>>>,
+    /// Supervision (PR 8): exchange per-superstep heartbeats as phase 0
+    /// so a dead peer is detected within `heartbeat_timeout` instead of
+    /// the (much longer) transport recv watchdog.
+    pub supervised: bool,
+    /// How long to wait for a peer's heartbeat (`Param::dist_heartbeat_ms`).
+    pub heartbeat_timeout: Duration,
+    /// Scripted failures (`--kill-rank R@S` driver, supervisor tests):
+    /// panic at the start of superstep S unless the shared one-shot
+    /// flag says the kill already fired in a previous generation.
+    kills: Vec<(u64, Arc<AtomicBool>)>,
 }
 
 impl RankWorker {
@@ -206,6 +220,9 @@ impl RankWorker {
             last_op_nanos: 0,
             pending_load: None,
             templates: HashMap::new(),
+            supervised: false,
+            heartbeat_timeout: Duration::from_secs(30),
+            kills: Vec::new(),
         };
         worker.capture_templates();
         worker
@@ -239,6 +256,9 @@ impl RankWorker {
     /// malformed peer data — surface as typed [`DistError`]s instead
     /// of panics, so a driver can halt (or retry) gracefully.
     pub fn superstep(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
+        self.check_scripted_kill();
+        self.heartbeat_send(transport)?;
+        self.heartbeat_recv(transport)?;
         self.remove_ghosts();
         if self.rebalance_due() {
             self.balance_send(transport)?;
@@ -252,6 +272,82 @@ impl RankWorker {
         self.aura_send(transport)?;
         self.aura_recv(transport)?;
         self.step_local();
+        Ok(())
+    }
+
+    /// Fire a scripted kill (`--kill-rank R@S`) scheduled for the
+    /// current superstep. The shared flag makes the kill one-shot
+    /// across supervisor recoveries: after rollback the rank replays
+    /// this superstep without dying again (a real crash, not a
+    /// deterministic poison pill).
+    pub fn check_scripted_kill(&mut self) {
+        for (superstep, fired) in &self.kills {
+            if *superstep == self.iteration && !fired.swap(true, Ordering::SeqCst) {
+                panic!(
+                    "scripted kill: rank {} at superstep {superstep}",
+                    self.rank
+                );
+            }
+        }
+    }
+
+    /// Schedule a scripted kill of this rank at `superstep`; `fired`
+    /// is the cross-generation one-shot latch.
+    pub fn script_kill(&mut self, superstep: u64, fired: Arc<AtomicBool>) {
+        self.kills.push((superstep, fired));
+    }
+
+    /// Supervision phase 0, send half: broadcast `[rank | superstep]`
+    /// to every peer. Heartbeats are drained completely within the
+    /// phase and never touch agent state, so supervised runs stay
+    /// bitwise identical to unsupervised ones.
+    pub fn heartbeat_send(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
+        if !self.supervised || self.partition.ranks() <= 1 {
+            return Ok(());
+        }
+        let mut payload = [0u8; 16];
+        payload[0..8].copy_from_slice(&(self.rank as u64).to_le_bytes());
+        payload[8..16].copy_from_slice(&self.iteration.to_le_bytes());
+        Ok(transport.broadcast(self.rank, TAG_HEARTBEAT, &payload)?)
+    }
+
+    /// Supervision phase 0, receive half: collect one heartbeat from
+    /// every peer within `heartbeat_timeout`. A missing heartbeat means
+    /// the peer died before its sends; a superstep mismatch means the
+    /// ranks desynchronized — both are typed failures the supervisor
+    /// turns into a rollback.
+    pub fn heartbeat_recv(&mut self, transport: &dyn Transport) -> Result<(), DistError> {
+        if !self.supervised || self.partition.ranks() <= 1 {
+            return Ok(());
+        }
+        for peer in 0..self.partition.ranks() {
+            if peer == self.rank {
+                continue;
+            }
+            let bytes =
+                transport.recv_timeout(self.rank, peer, TAG_HEARTBEAT, self.heartbeat_timeout)?;
+            let rank = bytes
+                .get(0..8)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap_or_default()));
+            let superstep = bytes
+                .get(8..16)
+                .map(|b| u64::from_le_bytes(b.try_into().unwrap_or_default()));
+            match (rank, superstep) {
+                (Some(r), Some(s)) if r == peer as u64 && s == self.iteration => {}
+                (Some(r), Some(s)) if r == peer as u64 => {
+                    return Err(DistError::Protocol(format!(
+                        "superstep desync: rank {} is at {}, peer {peer} heartbeats {s}",
+                        self.rank, self.iteration
+                    )));
+                }
+                _ => {
+                    return Err(DistError::Protocol(format!(
+                        "malformed heartbeat from peer {peer} ({} bytes)",
+                        bytes.len()
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -584,7 +680,7 @@ impl RankWorker {
                         .get(0..4)
                         .ok_or("short aura message")?
                         .try_into()
-                        .unwrap(),
+                        .unwrap_or_default(), // infallible: get(0..4) is 4 bytes
                 ) as usize;
                 let mut off = 4;
                 let mut out = Vec::with_capacity(count.min(payload.len()));
@@ -647,6 +743,20 @@ pub struct DistributedEngine {
     /// (`Param::dist_checkpoint_dir`, default
     /// `<output_dir>/checkpoints`).
     pub checkpoint_dir: PathBuf,
+    /// Keep only the newest N checkpoint epochs
+    /// (`Param::dist_checkpoint_retain`); 0 keeps all.
+    pub checkpoint_retain: u64,
+}
+
+/// Where `param` sends coordinated checkpoints: the explicit
+/// `dist_checkpoint_dir` or `<output_dir>/checkpoints`. Shared by the
+/// engine and the supervisor so both agree without an engine instance.
+pub fn resolve_checkpoint_dir(param: &Param) -> PathBuf {
+    if param.dist_checkpoint_dir.is_empty() {
+        Path::new(&param.output_dir).join("checkpoints")
+    } else {
+        PathBuf::from(&param.dist_checkpoint_dir)
+    }
 }
 
 impl DistributedEngine {
@@ -671,11 +781,11 @@ impl DistributedEngine {
         let partition = build_partition(&master.param, ranks);
         let rebalance_freq = master.param.dist_rebalance_freq;
         let checkpoint_freq = master.param.dist_checkpoint_freq;
-        let checkpoint_dir = if master.param.dist_checkpoint_dir.is_empty() {
-            Path::new(&master.param.output_dir).join("checkpoints")
-        } else {
-            PathBuf::from(&master.param.dist_checkpoint_dir)
-        };
+        let checkpoint_dir = resolve_checkpoint_dir(&master.param);
+        let checkpoint_retain = master.param.dist_checkpoint_retain;
+        let supervised = master.param.dist_supervise;
+        let heartbeat_timeout = Duration::from_millis(master.param.dist_heartbeat_ms.max(1));
+        let recv_timeout = Duration::from_millis(master.param.dist_recv_timeout_ms.max(1));
         let templates = capture_templates_map(&master.rm);
         let agents = master.rm.drain_all();
         let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
@@ -691,6 +801,8 @@ impl DistributedEngine {
                 w.delta_enabled = delta;
                 w.deflate_enabled = deflate;
                 w.rebalance_freq = rebalance_freq;
+                w.supervised = supervised;
+                w.heartbeat_timeout = heartbeat_timeout;
                 w
             })
             .collect();
@@ -708,11 +820,21 @@ impl DistributedEngine {
         }
         DistributedEngine {
             workers,
-            transport: Box::new(InProcessTransport::new(ranks)),
+            transport: Box::new(InProcessTransport::new(ranks).with_recv_timeout(recv_timeout)),
             iteration: 0,
             threaded,
             checkpoint_freq,
             checkpoint_dir,
+            checkpoint_retain,
+        }
+    }
+
+    /// Schedule a scripted kill (`--kill-rank R@S`): rank `rank` panics
+    /// at the start of superstep `superstep` unless the shared one-shot
+    /// latch already fired in an earlier supervisor generation.
+    pub fn script_kill(&mut self, rank: usize, superstep: u64, fired: Arc<AtomicBool>) {
+        if let Some(w) = self.workers.get_mut(rank) {
+            w.script_kill(superstep, fired);
         }
     }
 
@@ -777,6 +899,15 @@ impl DistributedEngine {
             }
         } else {
             let t: &dyn Transport = self.transport.as_ref();
+            // phase 0 (supervision), interleaved like every phase: all
+            // kill checks and heartbeat sends before any recv blocks
+            for w in &mut self.workers {
+                w.check_scripted_kill();
+                w.heartbeat_send(t)?;
+            }
+            for w in &mut self.workers {
+                w.heartbeat_recv(t)?;
+            }
             for w in &mut self.workers {
                 w.remove_ghosts();
             }
@@ -823,8 +954,14 @@ impl DistributedEngine {
         // messages of the superstep are drained, no migration is in
         // flight, and all ranks agree on the iteration counter.
         if self.checkpoint_freq > 0 && self.iteration % self.checkpoint_freq == 0 {
-            let dir = self.checkpoint_dir.clone();
-            self.checkpoint_to(&dir)?;
+            let base = self.checkpoint_dir.clone();
+            // epoch-stamped subdirectory, so a history of coordinated
+            // checkpoints accumulates for rollback-recovery (PR 8) ...
+            self.checkpoint_to(&checkpoint::epoch_dir(&base, self.iteration))?;
+            // ... with hygiene: drop the oldest epochs beyond the
+            // retention cap and sweep tmp orphans of earlier crashes
+            checkpoint::prune_epochs(&base, self.checkpoint_retain as usize)?;
+            checkpoint::remove_orphan_tmp(&base)?;
         }
         Ok(())
     }
@@ -914,6 +1051,34 @@ impl DistributedEngine {
         }
         engine.iteration = superstep;
         Ok(engine)
+    }
+
+    /// Restore from the newest *complete* checkpoint epoch under
+    /// `base`. Epochs are tried newest-first; torn or partial ones
+    /// (missing rank files, superstep disagreement, framing/CRC
+    /// failures — PR 6's typed rejections) are skipped and collected
+    /// into the second return value as `(superstep, why)`. Fails typed
+    /// when no epoch restores.
+    pub fn restore_latest(
+        builder: &dyn Fn(Param) -> Simulation,
+        param: Param,
+        ranks: usize,
+        threads_per_rank: usize,
+        base: &Path,
+    ) -> Result<(Self, Vec<(u64, DistError)>), DistError> {
+        let mut skipped = Vec::new();
+        for epoch in checkpoint::list_epochs(base).into_iter().rev() {
+            let dir = checkpoint::epoch_dir(base, epoch);
+            match Self::restore_from(builder, param.clone(), ranks, threads_per_rank, &dir) {
+                Ok(engine) => return Ok((engine, skipped)),
+                Err(e) => skipped.push((epoch, e)),
+            }
+        }
+        Err(DistError::Protocol(format!(
+            "no restorable checkpoint epoch under {} ({} torn/partial epoch(s) skipped)",
+            base.display(),
+            skipped.len()
+        )))
     }
 
     /// Total owned agents across ranks.
@@ -1048,7 +1213,9 @@ pub fn run_tcp_worker(
     let max_uid = agents.iter().map(|a| a.uid()).max().unwrap_or(0);
 
     param.num_threads = param.num_threads.max(1);
-    let mut sim = crate::models::build_named(model, param).unwrap();
+    let recv_timeout = Duration::from_millis(param.dist_recv_timeout_ms.max(1));
+    let mut sim = crate::models::build_named(model, param)
+        .ok_or_else(|| format!("unknown model {model}"))?;
     sim.rm.drain_all();
     sim.rm.set_uid_namespace(max_uid + 1 + rank as u64, ranks as u64);
     let mine: Vec<Box<dyn Agent>> = agents
@@ -1058,7 +1225,8 @@ pub fn run_tcp_worker(
     sim.rm.commit_additions(mine);
 
     let transport = TcpTransport::bind(rank, ranks, base_port)?
-        .with_max_message_bytes(max_message_bytes);
+        .with_max_message_bytes(max_message_bytes)
+        .with_recv_timeout(recv_timeout);
     // tiny settle delay so all ranks are listening before first send
     std::thread::sleep(std::time::Duration::from_millis(200));
     let mut worker = RankWorker::new(rank, partition, sim);
@@ -1607,10 +1775,11 @@ mod tests {
 
     #[test]
     fn distributed_checkpoint_restore_is_bitwise() {
-        // the PR 6 contract: the periodic hook checkpoints at
-        // superstep 5, the engine is dropped ("crash"), restore_from
-        // resumes, and 5 more supersteps land bitwise identical to the
-        // uninterrupted 10-superstep shared-memory run — with
+        // the PR 6 contract under the PR 8 epoch layout: the periodic
+        // hook checkpoints into `epoch0000000005/`, the engine is
+        // dropped ("crash"), restore_latest resumes from the newest
+        // complete epoch, and 5 more supersteps land bitwise identical
+        // to the uninterrupted 10-superstep shared-memory run — with
         // rebalancing on, at 1, 2 and 4 ranks.
         let mut reference = builder(sir_param(1));
         reference.simulate(10);
@@ -1623,16 +1792,19 @@ mod tests {
             p.dist_checkpoint_dir = dir.to_string_lossy().to_string();
             let mut engine = DistributedEngine::new(&builder, p.clone(), ranks, 1);
             engine.simulate(5).unwrap();
+            assert_eq!(checkpoint::list_epochs(&dir), vec![5], "ranks={ranks}");
+            let epoch5 = checkpoint::epoch_dir(&dir, 5);
             for r in 0..ranks {
                 assert!(
-                    checkpoint::rank_file(&dir, r).exists(),
+                    checkpoint::rank_file(&epoch5, r).exists(),
                     "ranks={ranks}: hook must write rank {r}"
                 );
             }
             drop(engine);
 
-            let mut restored =
-                DistributedEngine::restore_from(&builder, p, ranks, 1, &dir).unwrap();
+            let (mut restored, skipped) =
+                DistributedEngine::restore_latest(&builder, p, ranks, 1, &dir).unwrap();
+            assert!(skipped.is_empty(), "ranks={ranks}: {skipped:?}");
             assert_eq!(restored.iteration, 5, "ranks={ranks}");
             assert_eq!(restored.num_agents(), 310, "ranks={ranks}");
             restored.simulate(5).unwrap();
@@ -1643,6 +1815,73 @@ mod tests {
             );
             let _ = std::fs::remove_dir_all(&dir);
         }
+    }
+
+    #[test]
+    fn checkpoint_hook_retains_and_sweeps_epochs() {
+        let dir = ckpt_dir("retain");
+        let mut p = sir_param(1);
+        p.dist_checkpoint_freq = 1;
+        p.dist_checkpoint_retain = 2;
+        p.dist_checkpoint_dir = dir.to_string_lossy().to_string();
+        let mut engine = DistributedEngine::new(&builder, p, 2, 1);
+        engine.simulate(3).unwrap();
+        assert_eq!(checkpoint::list_epochs(&dir), vec![2, 3]);
+        // a tmp orphan from a "crash" is swept by the next hook run
+        std::fs::write(
+            checkpoint::epoch_dir(&dir, 3).join("rank0.ckpt.tmp"),
+            b"torn",
+        )
+        .unwrap();
+        engine.simulate(1).unwrap();
+        assert_eq!(checkpoint::list_epochs(&dir), vec![3, 4]);
+        assert!(!checkpoint::epoch_dir(&dir, 3).join("rank0.ckpt.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_latest_skips_torn_epoch() {
+        // satellite 4, engine half: epochs 2 and 4 exist; epoch 4 is
+        // torn exactly like a crash between tmp write and rename
+        // leaves it — rank 1's new file is a stale *.tmp, its real
+        // file still holds the *previous* superstep. restore_latest
+        // must skip epoch 4 typed and restore epoch 2.
+        let dir = ckpt_dir("skiptorn");
+        let mut p = sir_param(1);
+        p.dist_checkpoint_freq = 2;
+        p.dist_checkpoint_dir = dir.to_string_lossy().to_string();
+        let mut engine = DistributedEngine::new(&builder, p.clone(), 2, 1);
+        engine.simulate(4).unwrap();
+        assert_eq!(checkpoint::list_epochs(&dir), vec![2, 4]);
+        let epoch4 = checkpoint::epoch_dir(&dir, 4);
+        // tear epoch 4: rank 1 "crashed between tmp write and rename"
+        let real = checkpoint::rank_file(&epoch4, 1);
+        let mut tmp = real.clone().into_os_string();
+        tmp.push(".tmp");
+        std::fs::rename(&real, &tmp).unwrap();
+        let stale = checkpoint::rank_file(&checkpoint::epoch_dir(&dir, 2), 1);
+        std::fs::copy(&stale, &real).unwrap();
+
+        let (restored, skipped) =
+            DistributedEngine::restore_latest(&builder, p.clone(), 2, 1, &dir).unwrap();
+        assert_eq!(restored.iteration, 2, "must fall back to epoch 2");
+        assert_eq!(skipped.len(), 1, "{skipped:?}");
+        assert_eq!(skipped[0].0, 4);
+        assert!(
+            matches!(&skipped[0].1, DistError::Protocol(m) if m.contains("torn")),
+            "{:?}",
+            skipped[0].1
+        );
+
+        // with epoch 2 also gone, restore_latest must fail typed
+        std::fs::remove_dir_all(checkpoint::epoch_dir(&dir, 2)).unwrap();
+        match DistributedEngine::restore_latest(&builder, p, 2, 1, &dir) {
+            Err(DistError::Protocol(msg)) => {
+                assert!(msg.contains("no restorable"), "{msg}")
+            }
+            other => panic!("expected typed failure, got {:?}", other.map(|_| ())),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

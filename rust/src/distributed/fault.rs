@@ -205,12 +205,19 @@ pub struct ReliableStats {
     pub reordered: u64,
     /// messages served from the sender-side resend history
     pub history_recoveries: u64,
+    /// high-water mark of any channel's resend history — bounded by
+    /// ack pruning (entries the receiver advanced past are dropped),
+    /// not by total traffic
+    pub max_history_len: u64,
 }
 
 struct RelState {
     send_seq: HashMap<Key, u64>,
-    /// sender-side retransmit buffer: last `history_cap` payloads per
-    /// channel — what a NACK would re-request in a real network stack
+    /// sender-side retransmit buffer: at most `history_cap` payloads
+    /// per channel — what a NACK would re-request in a real network
+    /// stack. Entries below the receiver's `expected` watermark are
+    /// acknowledged and pruned eagerly, so sustained traffic holds
+    /// only the in-flight window, not the whole run's payloads.
     history: HashMap<Key, VecDeque<(u64, Vec<u8>)>>,
     expected: HashMap<Key, u64>,
     /// received-early frames waiting for the sequence gap to close
@@ -291,6 +298,7 @@ impl<T: Transport> ReliableTransport<T> {
         if env.len() < REL_HEADER || env[0..4] != REL_MAGIC {
             return Err(());
         }
+        // DETLINT: allow(unwrap) slice length checked against REL_HEADER above
         let seq = u64::from_le_bytes(env[4..12].try_into().unwrap());
         let crc = u32::from_le_bytes(env[12..16].try_into().unwrap());
         let payload = &env[REL_HEADER..];
@@ -303,6 +311,20 @@ impl<T: Transport> ReliableTransport<T> {
         Ok((seq, payload))
     }
 
+    /// Drop resend-history entries the receiver has acknowledged by
+    /// advancing `expected` past them. Called at every
+    /// expected-advance site so a long-lived channel's history holds
+    /// only the in-flight window (bounded memory under sustained
+    /// traffic), never the whole run's payloads.
+    fn prune_acked(st: &mut RelState, key: Key) {
+        let acked = st.expected.get(&key).copied().unwrap_or(0);
+        if let Some(hist) = st.history.get_mut(&key) {
+            while hist.front().is_some_and(|(s, _)| *s < acked) {
+                hist.pop_front();
+            }
+        }
+    }
+
     /// Try to serve `expected` on `key` from the resend history.
     /// `Ok(Some)` = recovered (bitwise original), `Ok(None)` = not yet
     /// sent (keep waiting), `Err` = sent but already evicted.
@@ -310,16 +332,19 @@ impl<T: Transport> ReliableTransport<T> {
         let mut st = lock(&self.state);
         let expected = *st.expected.entry(key).or_insert(0);
         let sent_up_to = st.send_seq.get(&key).copied().unwrap_or(0);
-        if let Some(hist) = st.history.get(&key) {
-            if let Some((_, payload)) = hist.iter().find(|(s, _)| *s == expected) {
-                let payload = payload.clone();
-                *st.expected.get_mut(&key).unwrap() += 1;
-                drop(st);
-                let mut stats = lock(&self.stats);
-                stats.history_recoveries += 1;
-                stats.delivered += 1;
-                return Ok(Some(payload));
-            }
+        let hit = st.history.get(&key).and_then(|hist| {
+            hist.iter()
+                .find(|(s, _)| *s == expected)
+                .map(|(_, payload)| payload.clone())
+        });
+        if let Some(payload) = hit {
+            st.expected.insert(key, expected + 1);
+            Self::prune_acked(&mut st, key);
+            drop(st);
+            let mut stats = lock(&self.stats);
+            stats.history_recoveries += 1;
+            stats.delivered += 1;
+            return Ok(Some(payload));
         }
         if sent_up_to > expected {
             // the sender definitely sent seq `expected`, and it is no
@@ -340,19 +365,25 @@ impl<T: Transport> Transport for ReliableTransport<T> {
 
     fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), TransportError> {
         let key = (from, to, tag);
-        let env = {
+        let (env, hist_len) = {
             let mut st = lock(&self.state);
             let seq_ref = st.send_seq.entry(key).or_insert(0);
             let seq = *seq_ref;
             *seq_ref += 1;
+            Self::prune_acked(&mut st, key);
             let hist = st.history.entry(key).or_default();
             hist.push_back((seq, data.clone()));
             while hist.len() > self.history_cap {
                 hist.pop_front();
             }
-            Self::envelope(seq, &data)
+            let hist_len = hist.len() as u64;
+            (Self::envelope(seq, &data), hist_len)
         };
-        lock(&self.stats).sent += 1;
+        {
+            let mut stats = lock(&self.stats);
+            stats.sent += 1;
+            stats.max_history_len = stats.max_history_len.max(hist_len);
+        }
         self.inner.send(from, to, tag, env)
     }
 
@@ -364,13 +395,13 @@ impl<T: Transport> Transport for ReliableTransport<T> {
             {
                 let mut st = lock(&self.state);
                 let expected = *st.expected.entry(key).or_insert(0);
-                if let Some(stash) = st.stash.get_mut(&key) {
-                    if let Some(payload) = stash.remove(&expected) {
-                        *st.expected.get_mut(&key).unwrap() += 1;
-                        drop(st);
-                        lock(&self.stats).delivered += 1;
-                        return Ok(payload);
-                    }
+                let stashed = st.stash.get_mut(&key).and_then(|s| s.remove(&expected));
+                if let Some(payload) = stashed {
+                    st.expected.insert(key, expected + 1);
+                    Self::prune_acked(&mut st, key);
+                    drop(st);
+                    lock(&self.stats).delivered += 1;
+                    return Ok(payload);
                 }
             }
             // 2. poll the wire
@@ -380,7 +411,8 @@ impl<T: Transport> Transport for ReliableTransport<T> {
                         let mut st = lock(&self.state);
                         let expected = *st.expected.entry(key).or_insert(0);
                         if seq == expected {
-                            *st.expected.get_mut(&key).unwrap() += 1;
+                            st.expected.insert(key, expected + 1);
+                            Self::prune_acked(&mut st, key);
                             drop(st);
                             lock(&self.stats).delivered += 1;
                             return Ok(payload.to_vec());
@@ -617,6 +649,30 @@ mod tests {
             TransportError::Timeout { .. }
         ));
         assert!(start.elapsed() < Duration::from_secs(5), "must not hang");
+    }
+
+    #[test]
+    fn reliable_history_stays_bounded_under_sustained_traffic() {
+        // In-process sender and receiver share the instance, so every
+        // delivery acknowledges its seq: the resend history must track
+        // the in-flight window, not the run length. Before ack pruning
+        // this test's high-water mark was min(500, history_cap).
+        let t = ReliableTransport::new(
+            InProcessTransport::new(2).with_recv_timeout(Duration::from_millis(40)),
+        )
+        .with_poll(Duration::from_millis(10))
+        .with_history_cap(1024);
+        for i in 0..500u64 {
+            t.send(0, 1, 1, i.to_le_bytes().to_vec()).unwrap();
+            assert_eq!(t.recv(1, 0, 1).unwrap(), i.to_le_bytes().to_vec());
+        }
+        let stats = t.stats();
+        assert_eq!(stats.delivered, 500);
+        assert!(
+            stats.max_history_len <= 2,
+            "resend history grew to {} entries despite lockstep acks",
+            stats.max_history_len
+        );
     }
 
     #[test]

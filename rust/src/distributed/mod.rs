@@ -17,6 +17,9 @@
 //!   extended to the distributed engine)
 //! * [`engine`]    — the distributed scheduler: migration, aura
 //!   exchange, rebalancing, per-rank iteration (§6.2.1, Fig 6.1)
+//! * [`supervisor`] — self-healing runs (PR 8): heartbeat + deadline
+//!   failure detection, automatic rollback-recovery to the newest
+//!   complete checkpoint epoch, bounded retries with backoff
 
 pub mod balance;
 pub mod checkpoint;
@@ -25,6 +28,7 @@ pub mod engine;
 pub mod fault;
 pub mod partition;
 pub mod serialize;
+pub mod supervisor;
 pub mod transport;
 
 use crate::core::backup::BackupError;
@@ -42,6 +46,10 @@ pub enum DistError {
     /// that died, ...
     Protocol(String),
     Checkpoint(BackupError),
+    /// The supervisor exhausted its recovery budget
+    /// (`Param::dist_max_recoveries`): `attempts` rollback-recoveries
+    /// were performed and the run still failed with `last`.
+    Unrecoverable { attempts: u64, last: String },
 }
 
 impl std::fmt::Display for DistError {
@@ -50,6 +58,10 @@ impl std::fmt::Display for DistError {
             DistError::Transport(e) => write!(f, "transport: {e}"),
             DistError::Protocol(s) => write!(f, "protocol: {s}"),
             DistError::Checkpoint(e) => write!(f, "checkpoint: {e}"),
+            DistError::Unrecoverable { attempts, last } => write!(
+                f,
+                "unrecoverable after {attempts} rollback-recoveries; last failure: {last}"
+            ),
         }
     }
 }
@@ -59,7 +71,7 @@ impl std::error::Error for DistError {
         match self {
             DistError::Transport(e) => Some(e),
             DistError::Checkpoint(e) => Some(e),
-            DistError::Protocol(_) => None,
+            DistError::Protocol(_) | DistError::Unrecoverable { .. } => None,
         }
     }
 }

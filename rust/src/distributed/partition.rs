@@ -292,6 +292,7 @@ impl SlabPartition {
         self.neighbors(from)
             .into_iter()
             .min_by_key(|&nb| (self.hop_distance(nb, owner), nb))
+            // DETLINT: allow(unwrap) `neighbors` is nonempty for every ranks >= 2 decomposition
             .expect("route_toward requires at least one neighbor")
     }
 

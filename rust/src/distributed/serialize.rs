@@ -44,11 +44,20 @@ fn registry() -> &'static Mutex<HashMap<u16, AgentFactory>> {
 
 impl AgentRegistry {
     pub fn register(tag: u16, factory: impl Fn() -> Box<dyn Agent> + Send + Sync + 'static) {
-        registry().lock().unwrap().insert(tag, Box::new(factory));
+        // a poisoned registry lock is still structurally sound — the
+        // panicking thread only read or replaced whole entries
+        registry()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(tag, Box::new(factory));
     }
 
     pub fn create(tag: u16) -> Option<Box<dyn Agent>> {
-        registry().lock().unwrap().get(&tag).map(|f| f())
+        registry()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&tag)
+            .map(|f| f())
     }
 
     /// Register the built-in agent types (idempotent). The factories
@@ -210,12 +219,15 @@ pub mod tailored {
         if data.len() < BASE_RECORD {
             return Err("short record".to_string());
         }
+        // DETLINT: allow(unwrap) fixed sub-slices of a record length-checked against BASE_RECORD
         let tag = u16::from_le_bytes(data[0..2].try_into().unwrap());
         let uid = AgentUid::from_le_bytes(data[2..10].try_into().unwrap());
+        // DETLINT: allow(unwrap) fixed sub-slices of a record length-checked against BASE_RECORD
         let f = |o: usize| Real::from_le_bytes(data[o..o + 8].try_into().unwrap());
         let pos = Real3::new(f(10), f(18), f(26));
         let diameter = f(34);
         let moved_last = data[42] != 0;
+        // DETLINT: allow(unwrap) fixed sub-slices of a record length-checked against BASE_RECORD
         let extra_len = u32::from_le_bytes(data[43..47].try_into().unwrap()) as usize;
         if data.len() < BASE_RECORD + extra_len {
             return Err("short extra section".to_string());
@@ -245,6 +257,7 @@ pub mod tailored {
         if data.len() < 4 {
             return Err("empty batch".to_string());
         }
+        // DETLINT: allow(unwrap) `data[0..4]` is exactly 4 bytes after the length check above
         let count = u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
         // cap the pre-allocation by what the buffer could possibly
         // hold — a corrupt count must not trigger a huge allocation
@@ -273,6 +286,7 @@ pub mod reflection {
 
     fn read_str(data: &[u8]) -> Result<(String, usize), String> {
         let header = data.get(0..2).ok_or("short string header")?;
+        // DETLINT: allow(unwrap) `get(0..2)` yields exactly 2 bytes
         let len = u16::from_le_bytes(header.try_into().unwrap()) as usize;
         let payload = data.get(2..2 + len).ok_or("short string payload")?;
         Ok((String::from_utf8_lossy(payload).into_owned(), 2 + len))
@@ -345,16 +359,19 @@ pub mod reflection {
             match code {
                 8 => {
                     let raw = data.get(off..off + 8).ok_or("short f64 field")?;
+                    // DETLINT: allow(unwrap) `get(off..off + 8)` yields exactly 8 bytes
                     fields_f.insert(name, f64::from_le_bytes(raw.try_into().unwrap()));
                     off += 8;
                 }
                 4 => {
                     let raw = data.get(off..off + 8).ok_or("short u64 field")?;
+                    // DETLINT: allow(unwrap) `get(off..off + 8)` yields exactly 8 bytes
                     fields_u.insert(name, u64::from_le_bytes(raw.try_into().unwrap()));
                     off += 8;
                 }
                 12 => {
                     let raw = data.get(off..off + 4).ok_or("short byte-array header")?;
+                    // DETLINT: allow(unwrap) `get(off..off + 4)` yields exactly 4 bytes
                     let len = u32::from_le_bytes(raw.try_into().unwrap()) as usize;
                     off += 4;
                     extra = data
@@ -388,6 +405,7 @@ pub mod reflection {
 
     pub fn deserialize_batch(data: &[u8]) -> Result<Vec<Box<dyn Agent>>, String> {
         let header = data.get(0..4).ok_or("short batch header")?;
+        // DETLINT: allow(unwrap) `get(0..4)` yields exactly 4 bytes
         let count = u32::from_le_bytes(header.try_into().unwrap()) as usize;
         let mut out = Vec::with_capacity(count.min(data.len()));
         let mut off = 4;

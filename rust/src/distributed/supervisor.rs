@@ -1,0 +1,737 @@
+//! Self-healing distributed runs (PR 8; DESIGN.md §11).
+//!
+//! The [`Supervisor`] owns the distributed engine on a dedicated
+//! runner thread and drives it superstep by superstep under a health
+//! protocol:
+//!
+//! * **Heartbeats** — when `Param::dist_supervise` is on, every rank
+//!   opens each superstep by broadcasting a `[rank | superstep]`
+//!   heartbeat on its own tag and collecting its peers' within
+//!   `Param::dist_heartbeat_ms` (the engine's phase 0). A rank that
+//!   died, wedged or desynchronized turns into a *typed* error at the
+//!   top of the superstep instead of a hang deep inside an exchange.
+//! * **Deadline watchdog** — the supervisor waits at most
+//!   `Param::dist_superstep_deadline_ms` for each superstep to
+//!   complete (0 disables). A wedged runner thread is abandoned — it
+//!   unwedges on its own when the transport recv watchdog fires and
+//!   finds its command channel closed — and never rejoins the world
+//!   line.
+//! * **Rollback recovery** — on any rank panic, typed [`DistError`]
+//!   or deadline overrun the supervisor discards the engine, rebuilds
+//!   the transport (a fresh, generation-tagged instance, so stale
+//!   messages of the failed world line cannot leak forward), restores
+//!   from the newest *complete* checkpoint epoch
+//!   ([`DistributedEngine::restore_latest`]; torn epochs are skipped
+//!   via PR 6's typed rejection) — or restarts from superstep 0 when
+//!   no epoch restores — and resumes. Replay is bitwise identical to
+//!   the uninterrupted run: heartbeats never touch agent state, and
+//!   everything downstream of the restored state is deterministic.
+//! * **Bounded retries** — recoveries are capped at
+//!   `Param::dist_max_recoveries` with exponential backoff between
+//!   attempts; an exhausted budget surfaces as
+//!   [`DistError::Unrecoverable`], never as a hang.
+
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use crate::distributed::checkpoint;
+use crate::distributed::engine::{resolve_checkpoint_dir, DistributedEngine};
+use crate::distributed::transport::{InProcessTransport, Transport};
+use crate::distributed::DistError;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Builds the per-rank simulation — same contract as the `builder`
+/// argument of [`DistributedEngine::new`], owned so the supervisor can
+/// rebuild engines across recoveries.
+pub type SimBuilder = Box<dyn Fn(Param) -> Simulation>;
+
+/// Builds a fresh transport for `(ranks, generation)`. The generation
+/// increments on every recovery: factories deriving fault seeds from
+/// it make injected faults *transient* (a deterministic replay of the
+/// same fault pattern would re-kill every retry), and a fresh instance
+/// per generation fences stale in-flight messages off the new world
+/// line.
+pub type TransportFactory = Box<dyn Fn(usize, u64) -> Box<dyn Transport>>;
+
+/// What the supervisor observed over a run.
+#[derive(Debug, Default, Clone)]
+pub struct SupervisorStats {
+    /// Supersteps completed successfully, replays included.
+    pub supersteps: u64,
+    /// Failures observed (panic, typed error, deadline overrun).
+    pub failures: u64,
+    /// Rollback-recoveries performed.
+    pub recoveries: u64,
+    /// Supersteps of completed work discarded by rollbacks — the
+    /// lost-work half of the MTTF/cadence trade-off the recovery bench
+    /// sweeps.
+    pub supersteps_lost: u64,
+    /// Torn/partial checkpoint epochs skipped while restoring.
+    pub epochs_skipped: u64,
+    /// Wedged runner threads abandoned by the deadline watchdog.
+    pub threads_abandoned: u64,
+    /// Human-readable cause of the most recent failure.
+    pub last_failure: Option<String>,
+    /// Wall-clock cost of the most recent rebuild-and-restore.
+    pub last_recovery_latency: Duration,
+}
+
+/// The only command the runner thread understands; dropping the
+/// channel is the shutdown signal.
+enum Cmd {
+    Step,
+}
+
+/// The engine lives on this thread so a wedged superstep cannot freeze
+/// the supervisor: the supervisor times out on `out_rx` and walks
+/// away, while the runner unblocks later via the transport watchdog.
+struct EngineRunner {
+    cmd_tx: Sender<Cmd>,
+    out_rx: Receiver<Result<u64, DistError>>,
+    handle: JoinHandle<Option<DistributedEngine>>,
+    /// Last iteration the runner reported (the restore point's
+    /// iteration until the first step completes).
+    iteration: u64,
+}
+
+fn spawn_runner(mut engine: DistributedEngine) -> EngineRunner {
+    let iteration = engine.iteration;
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let (out_tx, out_rx) = mpsc::channel::<Result<u64, DistError>>();
+    let handle = std::thread::spawn(move || {
+        while let Ok(Cmd::Step) = cmd_rx.recv() {
+            // A scripted kill or rank bug panics right through
+            // `step()` in sequential mode (threaded mode converts rank
+            // panics to typed errors itself); catch it so the failure
+            // reaches the supervisor as data, not as a dead channel.
+            match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+                Ok(Ok(())) => {
+                    if out_tx.send(Ok(engine.iteration)).is_err() {
+                        // supervisor walked away (deadline): this
+                        // world line is abandoned, never hand it back
+                        return None;
+                    }
+                }
+                Ok(Err(e)) => {
+                    let _ = out_tx.send(Err(e));
+                    return None;
+                }
+                Err(_) => {
+                    let _ = out_tx.send(Err(DistError::Protocol(
+                        "engine step panicked".to_string(),
+                    )));
+                    return None;
+                }
+            }
+        }
+        // clean shutdown: hand the healthy engine back for inspection
+        Some(engine)
+    });
+    EngineRunner {
+        cmd_tx,
+        out_rx,
+        handle,
+        iteration,
+    }
+}
+
+/// Drives a supervised distributed run to a target superstep,
+/// recovering from failures along the way. See the module docs for
+/// the protocol.
+pub struct Supervisor {
+    builder: SimBuilder,
+    param: Param,
+    ranks: usize,
+    threads_per_rank: usize,
+    transport_factory: TransportFactory,
+    /// Scripted kills (`--kill-rank R@S`), re-applied to every rebuilt
+    /// engine; the shared one-shot latch keeps a fired kill from
+    /// re-firing during replay.
+    kills: Vec<(usize, u64, Arc<AtomicBool>)>,
+    runner: Option<EngineRunner>,
+    /// Bumped on every recovery; salts the transport factory.
+    generation: u64,
+    /// Per-superstep completion deadline (watchdog).
+    deadline: Duration,
+    /// First backoff step; doubles per consecutive failure (cap 64x).
+    backoff_base: Duration,
+    max_recoveries: u64,
+    checkpoint_base: PathBuf,
+    stats: SupervisorStats,
+}
+
+impl Supervisor {
+    /// Supervise `builder` over `ranks` ranks. `param` drives both the
+    /// engine and the supervision knobs (`dist_heartbeat_ms`,
+    /// `dist_superstep_deadline_ms`, `dist_max_recoveries`,
+    /// `dist_checkpoint_*`, `dist_recv_timeout_ms`);
+    /// `dist_supervise` is forced on. If the checkpoint directory
+    /// already holds epochs, the first `run` resumes from the newest
+    /// complete one — a crashed supervised process self-heals by
+    /// simply being restarted.
+    pub fn new(builder: SimBuilder, mut param: Param, ranks: usize, threads_per_rank: usize) -> Self {
+        param.dist_supervise = true;
+        let deadline = if param.dist_superstep_deadline_ms == 0 {
+            // "disabled": failures are still caught by heartbeats and
+            // transport watchdogs; a day-long cap keeps recv_timeout
+            // semantics without a magic sentinel
+            Duration::from_secs(86_400)
+        } else {
+            Duration::from_millis(param.dist_superstep_deadline_ms)
+        };
+        let recv_timeout = Duration::from_millis(param.dist_recv_timeout_ms.max(1));
+        Supervisor {
+            checkpoint_base: resolve_checkpoint_dir(&param),
+            max_recoveries: param.dist_max_recoveries,
+            deadline,
+            backoff_base: Duration::from_millis(10),
+            builder,
+            param,
+            ranks,
+            threads_per_rank,
+            transport_factory: Box::new(move |ranks, _generation| {
+                Box::new(InProcessTransport::new(ranks).with_recv_timeout(recv_timeout))
+            }),
+            kills: Vec::new(),
+            runner: None,
+            generation: 0,
+            stats: SupervisorStats::default(),
+        }
+    }
+
+    /// Replace the default in-process transport. The factory runs once
+    /// per generation (initial build + every recovery).
+    pub fn with_transport_factory(mut self, factory: TransportFactory) -> Self {
+        self.transport_factory = factory;
+        self
+    }
+
+    /// Override the first backoff step (tests use ~1 ms).
+    pub fn with_backoff_base(mut self, base: Duration) -> Self {
+        self.backoff_base = base;
+        self
+    }
+
+    /// Schedule rank `rank` to panic at the start of superstep
+    /// `superstep` — once. Returns the one-shot latch (observable by
+    /// tests; shared with every rebuilt engine so replay skips it).
+    /// Call before `run`.
+    pub fn script_kill(&mut self, rank: usize, superstep: u64) -> Arc<AtomicBool> {
+        let fired = Arc::new(AtomicBool::new(false));
+        self.kills.push((rank, superstep, fired.clone()));
+        fired
+    }
+
+    pub fn stats(&self) -> SupervisorStats {
+        self.stats.clone()
+    }
+
+    /// The supervision generation: 0 initially, +1 per recovery.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Restore from the newest complete checkpoint epoch, or start
+    /// fresh at superstep 0 when none exists or none restores; then
+    /// install a fresh generation transport and re-arm scripted kills.
+    fn build_engine(&mut self) -> DistributedEngine {
+        let epochs = checkpoint::list_epochs(&self.checkpoint_base);
+        let mut engine = if epochs.is_empty() {
+            DistributedEngine::new(
+                &*self.builder,
+                self.param.clone(),
+                self.ranks,
+                self.threads_per_rank,
+            )
+        } else {
+            match DistributedEngine::restore_latest(
+                &*self.builder,
+                self.param.clone(),
+                self.ranks,
+                self.threads_per_rank,
+                &self.checkpoint_base,
+            ) {
+                Ok((engine, skipped)) => {
+                    self.stats.epochs_skipped += skipped.len() as u64;
+                    engine
+                }
+                Err(_) => {
+                    // every epoch on disk is torn/partial: worst-case
+                    // rollback to the very beginning
+                    self.stats.epochs_skipped += epochs.len() as u64;
+                    DistributedEngine::new(
+                        &*self.builder,
+                        self.param.clone(),
+                        self.ranks,
+                        self.threads_per_rank,
+                    )
+                }
+            }
+        };
+        engine.set_transport((self.transport_factory)(self.ranks, self.generation));
+        for (rank, superstep, fired) in &self.kills {
+            engine.script_kill(*rank, *superstep, fired.clone());
+        }
+        engine
+    }
+
+    fn ensure_runner(&mut self) {
+        if self.runner.is_none() {
+            let engine = self.build_engine();
+            self.runner = Some(spawn_runner(engine));
+        }
+    }
+
+    /// Tear down the current runner. A healthy runner (already
+    /// returned from its loop) joins immediately; a wedged one —
+    /// deadline overrun, still blocked inside a superstep — is
+    /// abandoned: it unblocks when the transport recv watchdog fires,
+    /// sees the closed command channel and exits on its own, and its
+    /// engine is never handed back.
+    fn discard_runner(&mut self, wedged: bool) {
+        if let Some(runner) = self.runner.take() {
+            drop(runner.cmd_tx);
+            drop(runner.out_rx);
+            if wedged {
+                self.stats.threads_abandoned += 1;
+                drop(runner.handle);
+            } else {
+                let _ = runner.handle.join();
+            }
+        }
+    }
+
+    /// One rollback-recovery, or [`DistError::Unrecoverable`] when the
+    /// budget is spent.
+    fn recover(
+        &mut self,
+        why: String,
+        wedged: bool,
+        consecutive: &mut u32,
+    ) -> Result<(), DistError> {
+        self.stats.failures += 1;
+        self.stats.last_failure = Some(why.clone());
+        if self.stats.recoveries >= self.max_recoveries {
+            self.discard_runner(wedged);
+            return Err(DistError::Unrecoverable {
+                attempts: self.stats.recoveries,
+                last: why,
+            });
+        }
+        // exponential backoff: transient congestion (a delay storm, a
+        // busy disk) gets time to clear instead of being re-hit
+        std::thread::sleep(self.backoff_base * 2u32.pow((*consecutive).min(6)));
+        *consecutive += 1;
+        let lost_from = self.runner.as_ref().map(|r| r.iteration).unwrap_or(0);
+        self.discard_runner(wedged);
+        self.stats.recoveries += 1;
+        self.generation += 1;
+        let t0 = Instant::now();
+        let engine = self.build_engine();
+        self.stats.supersteps_lost += lost_from.saturating_sub(engine.iteration);
+        self.runner = Some(spawn_runner(engine));
+        self.stats.last_recovery_latency = t0.elapsed();
+        Ok(())
+    }
+
+    /// Drive the run until the engine has completed `target`
+    /// supersteps, rolling back and recovering on failures. Returns
+    /// [`DistError::Unrecoverable`] when `Param::dist_max_recoveries`
+    /// is exhausted — by construction it cannot hang: every wait is
+    /// bounded by the superstep deadline, every transport recv by its
+    /// watchdog, and every recovery counts against the budget.
+    pub fn run(&mut self, target: u64) -> Result<(), DistError> {
+        let mut consecutive = 0u32;
+        loop {
+            self.ensure_runner();
+            let deadline = self.deadline;
+            let Some(runner) = self.runner.as_mut() else {
+                return Err(DistError::Protocol(
+                    "supervisor runner vanished".to_string(),
+                ));
+            };
+            if runner.iteration >= target {
+                return Ok(());
+            }
+            let (why, wedged) = match runner.cmd_tx.send(Cmd::Step) {
+                Err(_) => ("engine runner command channel closed".to_string(), false),
+                Ok(()) => match runner.out_rx.recv_timeout(deadline) {
+                    Ok(Ok(iteration)) => {
+                        runner.iteration = iteration;
+                        self.stats.supersteps += 1;
+                        consecutive = 0;
+                        continue;
+                    }
+                    Ok(Err(e)) => (e.to_string(), false),
+                    Err(RecvTimeoutError::Timeout) => (
+                        format!(
+                            "superstep deadline exceeded ({} ms)",
+                            deadline.as_millis()
+                        ),
+                        true,
+                    ),
+                    Err(RecvTimeoutError::Disconnected) => {
+                        ("engine runner died without a reply".to_string(), false)
+                    }
+                },
+            };
+            self.recover(why, wedged, &mut consecutive)?;
+        }
+    }
+
+    /// Shut the runner down cleanly and hand the engine back (for
+    /// snapshots, stats, further unsupervised use). Typed error if no
+    /// healthy engine exists — e.g. after an `Unrecoverable` run.
+    pub fn finish(mut self) -> Result<DistributedEngine, DistError> {
+        let Some(runner) = self.runner.take() else {
+            return Err(DistError::Protocol(
+                "supervisor holds no healthy engine".to_string(),
+            ));
+        };
+        drop(runner.cmd_tx);
+        drop(runner.out_rx);
+        match runner.handle.join() {
+            Ok(Some(engine)) => Ok(engine),
+            Ok(None) | Err(_) => Err(DistError::Protocol(
+                "engine runner exited without handing the engine back".to_string(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::param::ExecutionContextMode;
+    use crate::core::random::mix;
+    use crate::distributed::fault::{FaultConfig, FaultyTransport, ReliableTransport};
+    use crate::models::epidemiology::{self, SirParams};
+    use std::sync::atomic::Ordering;
+
+    fn small_sir() -> SirParams {
+        SirParams {
+            initial_susceptible: 300,
+            initial_infected: 10,
+            space_length: 60.0,
+            ..SirParams::measles()
+        }
+    }
+
+    fn builder(p: Param) -> Simulation {
+        epidemiology::build(p, &small_sir())
+    }
+
+    fn sup_param(name: &str) -> (Param, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "teraagent_sup_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut p = Param::default();
+        p.seed = 42;
+        p.num_threads = 1;
+        // copy context: required for exact shared-vs-distributed match
+        p.execution_context = ExecutionContextMode::Copy;
+        p.dist_checkpoint_freq = 3;
+        p.dist_checkpoint_dir = dir.to_string_lossy().into_owned();
+        p.dist_heartbeat_ms = 500;
+        p.dist_recv_timeout_ms = 2_000;
+        p.dist_max_recoveries = 5;
+        (p, dir)
+    }
+
+    /// Reference world line: the same build, unsupervised and
+    /// uninterrupted, checkpoints off.
+    fn reference_snapshot(
+        p: &Param,
+        ranks: usize,
+        supersteps: u64,
+    ) -> Vec<(crate::core::agent::AgentUid, [f64; 3], f64)> {
+        let mut rp = p.clone();
+        rp.dist_supervise = false;
+        rp.dist_checkpoint_freq = 0;
+        let mut engine = DistributedEngine::new(&builder, rp, ranks, 1);
+        engine.simulate(supersteps).unwrap();
+        engine.state_snapshot()
+    }
+
+    #[test]
+    fn supervised_run_without_failures_is_transparent() {
+        let (p, dir) = sup_param("clean");
+        let want = reference_snapshot(&p, 2, 5);
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1);
+        sup.run(5).unwrap();
+        let stats = sup.stats();
+        assert_eq!(stats.supersteps, 5);
+        assert_eq!(stats.failures, 0);
+        assert_eq!(stats.recoveries, 0);
+        let engine = sup.finish().unwrap();
+        assert_eq!(engine.iteration, 5);
+        assert_eq!(engine.state_snapshot(), want, "heartbeats must not touch state");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scripted_kill_recovers_bitwise_at_1_2_4_ranks() {
+        for ranks in [1usize, 2, 4] {
+            let (mut p, dir) = sup_param(&format!("kill{ranks}"));
+            p.dist_heartbeat_ms = 400; // survivors detect the dead rank fast
+            let want = reference_snapshot(&p, ranks, 10);
+            let mut sup = Supervisor::new(Box::new(builder), p, ranks, 1)
+                .with_backoff_base(Duration::from_millis(1));
+            // kill the last rank after 7 completed supersteps: rolls
+            // back to the epoch at superstep 6, replays 7..10
+            let fired = sup.script_kill(ranks - 1, 7);
+            sup.run(10).unwrap();
+            assert!(fired.load(Ordering::SeqCst), "kill must fire ({ranks} ranks)");
+            let stats = sup.stats();
+            assert_eq!(stats.failures, 1, "{ranks} ranks");
+            assert_eq!(stats.recoveries, 1, "{ranks} ranks");
+            assert_eq!(
+                stats.supersteps_lost, 1,
+                "7 done, epoch 6 restored ({ranks} ranks)"
+            );
+            let engine = sup.finish().unwrap();
+            assert_eq!(engine.iteration, 10);
+            assert_eq!(
+                engine.state_snapshot(),
+                want,
+                "recovered run must be bitwise identical ({ranks} ranks)"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn drop_storm_generation_salting_recovers_bitwise() {
+        // Generation 0 runs under a heavy drop storm (every superstep
+        // loses messages, so the heartbeat/exchange watchdogs fail it
+        // typed); the recovery generations run clean. The salted
+        // factory is what makes the fault transient — replaying the
+        // *same* seed would re-kill every retry forever.
+        let (mut p, dir) = sup_param("storm_drop");
+        p.dist_heartbeat_ms = 150;
+        p.dist_recv_timeout_ms = 150;
+        let want = reference_snapshot(&p, 2, 8);
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1)
+            .with_backoff_base(Duration::from_millis(1))
+            .with_transport_factory(Box::new(|ranks, generation| {
+                let inner =
+                    InProcessTransport::new(ranks).with_recv_timeout(Duration::from_millis(150));
+                if generation == 0 {
+                    Box::new(FaultyTransport::new(
+                        inner,
+                        FaultConfig {
+                            seed: mix(&[97, generation]),
+                            drop_p: 0.5,
+                            ..FaultConfig::default()
+                        },
+                    ))
+                } else {
+                    Box::new(inner)
+                }
+            }));
+        sup.run(8).unwrap();
+        let stats = sup.stats();
+        assert!(stats.recoveries >= 1, "the storm must trigger recovery");
+        let engine = sup.finish().unwrap();
+        assert_eq!(engine.iteration, 8);
+        assert_eq!(engine.state_snapshot(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_fault_storm_under_reliable_layer_recovers_bitwise() {
+        // All four fault kinds at once, absorbed by the reliable layer
+        // (drops/corruption/duplicates/reordering recover in-band,
+        // bitwise), plus a scripted kill to force one supervised
+        // rollback on top — across seeds.
+        for seed in [21u64, 22, 23] {
+            let (mut p, dir) = sup_param(&format!("storm_mix{seed}"));
+            p.dist_heartbeat_ms = 2_000; // reliable recv waits its own max_wait
+            let want = reference_snapshot(&p, 2, 8);
+            let mut sup = Supervisor::new(Box::new(builder), p, 2, 1)
+                .with_backoff_base(Duration::from_millis(1))
+                .with_transport_factory(Box::new(move |ranks, generation| {
+                    let faulty = FaultyTransport::new(
+                        InProcessTransport::new(ranks)
+                            .with_recv_timeout(Duration::from_millis(40)),
+                        FaultConfig {
+                            seed: mix(&[seed, generation]),
+                            drop_p: 0.05,
+                            corrupt_p: 0.05,
+                            duplicate_p: 0.05,
+                            delay_p: 0.05,
+                        },
+                    );
+                    Box::new(
+                        ReliableTransport::new(faulty)
+                            .with_poll(Duration::from_millis(5))
+                            .with_max_wait(Duration::from_secs(2))
+                            .with_history_cap(4096),
+                    )
+                }));
+            let fired = sup.script_kill(1, 5);
+            sup.run(8).unwrap();
+            assert!(fired.load(Ordering::SeqCst), "seed {seed}");
+            assert!(sup.stats().recoveries >= 1, "seed {seed}");
+            let engine = sup.finish().unwrap();
+            assert_eq!(engine.iteration, 8);
+            assert_eq!(engine.state_snapshot(), want, "seed {seed}");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    /// Delegating wrapper whose first recv naps once, wedging one
+    /// superstep well past the supervisor deadline.
+    struct WedgeOnce<T: Transport> {
+        inner: T,
+        armed: AtomicBool,
+        nap: Duration,
+    }
+
+    impl<T: Transport> WedgeOnce<T> {
+        fn wedge(&self) {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                std::thread::sleep(self.nap);
+            }
+        }
+    }
+
+    impl<T: Transport> Transport for WedgeOnce<T> {
+        fn ranks(&self) -> usize {
+            self.inner.ranks()
+        }
+        fn send(&self, from: usize, to: usize, tag: u32, data: Vec<u8>) -> Result<(), crate::distributed::transport::TransportError> {
+            self.inner.send(from, to, tag, data)
+        }
+        fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, crate::distributed::transport::TransportError> {
+            self.wedge();
+            self.inner.recv(to, from, tag)
+        }
+        fn recv_timeout(
+            &self,
+            to: usize,
+            from: usize,
+            tag: u32,
+            timeout: Duration,
+        ) -> Result<Vec<u8>, crate::distributed::transport::TransportError> {
+            self.wedge();
+            self.inner.recv_timeout(to, from, tag, timeout)
+        }
+    }
+
+    #[test]
+    fn deadline_watchdog_abandons_wedged_superstep_and_recovers() {
+        let (mut p, dir) = sup_param("wedge");
+        p.dist_superstep_deadline_ms = 700;
+        let want = reference_snapshot(&p, 2, 6);
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1)
+            .with_backoff_base(Duration::from_millis(1))
+            .with_transport_factory(Box::new(|ranks, generation| {
+                let inner =
+                    InProcessTransport::new(ranks).with_recv_timeout(Duration::from_secs(2));
+                if generation == 0 {
+                    Box::new(WedgeOnce {
+                        inner,
+                        armed: AtomicBool::new(true),
+                        nap: Duration::from_secs(3),
+                    })
+                } else {
+                    Box::new(inner)
+                }
+            }));
+        sup.run(6).unwrap();
+        let stats = sup.stats();
+        assert!(stats.failures >= 1);
+        assert!(stats.recoveries >= 1);
+        assert_eq!(stats.threads_abandoned, 1, "the wedged runner is abandoned");
+        assert!(
+            stats
+                .last_failure
+                .as_deref()
+                .is_some_and(|s| s.contains("deadline")),
+            "failure cause must name the deadline: {:?}",
+            stats.last_failure
+        );
+        let engine = sup.finish().unwrap();
+        assert_eq!(engine.iteration, 6);
+        assert_eq!(engine.state_snapshot(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_recovery_budget_fails_typed_not_hanging() {
+        let (mut p, dir) = sup_param("budget");
+        p.dist_heartbeat_ms = 50;
+        p.dist_recv_timeout_ms = 50;
+        p.dist_max_recoveries = 2;
+        p.dist_checkpoint_freq = 0; // nothing to restore: fresh each try
+        let t0 = Instant::now();
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1)
+            .with_backoff_base(Duration::from_millis(1))
+            .with_transport_factory(Box::new(|ranks, generation| {
+                // every generation drops everything — unrecoverable
+                Box::new(FaultyTransport::new(
+                    InProcessTransport::new(ranks)
+                        .with_recv_timeout(Duration::from_millis(50)),
+                    FaultConfig {
+                        seed: mix(&[13, generation]),
+                        drop_p: 1.0,
+                        ..FaultConfig::default()
+                    },
+                ))
+            }));
+        let err = sup.run(4).unwrap_err();
+        assert!(
+            matches!(err, DistError::Unrecoverable { attempts: 2, .. }),
+            "want Unrecoverable after 2 attempts, got: {err}"
+        );
+        assert_eq!(sup.stats().failures, 3, "initial failure + 2 failed retries");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "exhausted budget must fail fast, never hang"
+        );
+        assert!(sup.finish().is_err(), "no healthy engine after unrecoverable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn startup_skips_torn_epoch_and_resumes_from_complete_one() {
+        // Crash-then-restart e2e: an unsupervised run leaves epochs 2
+        // and 4 behind; epoch 4 is torn mid-write (rank file renamed
+        // back to its tmp form). A *new* supervisor must skip the torn
+        // epoch, resume from epoch 2, sweep the orphan and land
+        // bitwise on the uninterrupted world line.
+        let (mut p, dir) = sup_param("torn");
+        p.dist_checkpoint_freq = 2;
+        let want = reference_snapshot(&p, 2, 6);
+
+        let mut first = DistributedEngine::new(&builder, p.clone(), 2, 1);
+        first.simulate(4).unwrap();
+        drop(first); // "crash"
+        assert_eq!(checkpoint::list_epochs(&dir), vec![2, 4]);
+        let epoch4 = checkpoint::epoch_dir(&dir, 4);
+        let torn_tmp = epoch4.join("rank1.ckpt.tmp");
+        std::fs::rename(checkpoint::rank_file(&epoch4, 1), &torn_tmp).unwrap();
+
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1);
+        sup.run(6).unwrap();
+        let stats = sup.stats();
+        assert_eq!(stats.epochs_skipped, 1, "the torn epoch 4 is skipped");
+        assert_eq!(stats.supersteps, 4, "resumed at 2, ran 3..=6");
+        assert!(
+            !torn_tmp.exists(),
+            "checkpoint hygiene sweeps the orphaned tmp during the resumed run"
+        );
+        let engine = sup.finish().unwrap();
+        assert_eq!(engine.iteration, 6);
+        assert_eq!(engine.state_snapshot(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -232,10 +232,18 @@ pub struct TcpTransport {
     /// send attempts (>=1) and initial backoff delay
     send_attempts: u32,
     send_backoff: Duration,
+    /// Receive watchdog (`Param::dist_recv_timeout_ms`): how long
+    /// `recv` waits for a connection before reporting a typed
+    /// [`TransportError::Timeout`] instead of blocking forever in
+    /// `accept` — same role as the `InProcessTransport` watchdog.
+    recv_timeout: Duration,
     /// received-but-not-consumed messages
     pending: Mutex<HashMap<(usize, u32), VecDeque<Vec<u8>>>>,
     listener: TcpListener,
 }
+
+/// Accept-poll interval while waiting for an inbound connection.
+const TCP_ACCEPT_POLL: Duration = Duration::from_millis(1);
 
 impl TcpTransport {
     /// Bind rank `rank`'s listener.
@@ -247,6 +255,14 @@ impl TcpTransport {
                     detail: format!("rank {rank}: {e}"),
                 }
             })?;
+        // non-blocking accept so recv can enforce its deadline instead
+        // of wedging in the kernel when a peer dies before connecting
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| TransportError::Io {
+                op: "set_nonblocking",
+                detail: e.to_string(),
+            })?;
         Ok(TcpTransport {
             ranks,
             rank,
@@ -254,6 +270,7 @@ impl TcpTransport {
             max_message_bytes: DEFAULT_MAX_MESSAGE_BYTES,
             send_attempts: 5,
             send_backoff: Duration::from_millis(10),
+            recv_timeout: Duration::from_secs(120),
             pending: Mutex::new(HashMap::new()),
             listener,
         })
@@ -277,6 +294,13 @@ impl TcpTransport {
         self
     }
 
+    /// Override the blocking-recv watchdog
+    /// (`Param::dist_recv_timeout_ms`).
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
+        self.recv_timeout = timeout;
+        self
+    }
+
     fn read_message(
         stream: &mut TcpStream,
         max_message_bytes: u64,
@@ -291,8 +315,10 @@ impl TcpTransport {
         if header[0..4] != TCP_MAGIC {
             return Err(TransportError::Corrupt("bad frame magic".to_string()));
         }
+        // DETLINT: allow(unwrap) slices of the fixed [u8; 24] header array are exactly 4/8 bytes
         let from = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
         let tag = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        // DETLINT: allow(unwrap) slices of the fixed [u8; 24] header array are exactly 4/8 bytes
         let len = u64::from_le_bytes(header[12..20].try_into().unwrap());
         let crc = u32::from_le_bytes(header[20..24].try_into().unwrap());
         // cap BEFORE the allocation: a corrupt length field must not
@@ -383,6 +409,28 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&self, to: usize, from: usize, tag: u32) -> Result<Vec<u8>, TransportError> {
+        self.recv_deadline(to, from, tag, self.recv_timeout)
+    }
+
+    fn recv_timeout(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
+        self.recv_deadline(to, from, tag, timeout)
+    }
+}
+
+impl TcpTransport {
+    fn recv_deadline(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        timeout: Duration,
+    ) -> Result<Vec<u8>, TransportError> {
         debug_assert_eq!(to, self.rank);
         // check pending first
         {
@@ -393,22 +441,45 @@ impl Transport for TcpTransport {
                 }
             }
         }
-        // accept until the wanted message arrives; stash others
+        // accept (polling, non-blocking listener) until the wanted
+        // message arrives or the watchdog fires; stash other messages
+        let deadline = std::time::Instant::now() + timeout;
         loop {
-            let (mut stream, _) = self.listener.accept().map_err(|e| TransportError::Io {
-                op: "accept",
-                detail: e.to_string(),
-            })?;
-            let (mfrom, mtag, data) = Self::read_message(&mut stream, self.max_message_bytes)?;
-            if mfrom == from && mtag == tag {
-                return Ok(data);
+            match self.listener.accept() {
+                Ok((mut stream, _)) => {
+                    // the accepted stream must be blocking again, with
+                    // its reads bounded by the remaining budget so a
+                    // stalled sender cannot wedge us past the deadline
+                    let remain = deadline
+                        .saturating_duration_since(std::time::Instant::now())
+                        .max(Duration::from_millis(1));
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_read_timeout(Some(remain));
+                    let (mfrom, mtag, data) =
+                        Self::read_message(&mut stream, self.max_message_bytes)?;
+                    if mfrom == from && mtag == tag {
+                        return Ok(data);
+                    }
+                    self.pending
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .entry((mfrom, mtag))
+                        .or_default()
+                        .push_back(data);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { to, from, tag });
+                    }
+                    std::thread::sleep(TCP_ACCEPT_POLL);
+                }
+                Err(e) => {
+                    return Err(TransportError::Io {
+                        op: "accept",
+                        detail: e.to_string(),
+                    })
+                }
             }
-            self.pending
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .entry((mfrom, mtag))
-                .or_default()
-                .push_back(data);
         }
     }
 }
@@ -595,6 +666,29 @@ mod tests {
         });
         t0.send(0, 1, 3, vec![42]).unwrap();
         assert_eq!(h.join().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn tcp_recv_times_out_typed() {
+        let base = 45200 + (std::process::id() % 500) as u16;
+        let t0 = TcpTransport::bind(0, 2, base)
+            .unwrap()
+            .with_recv_timeout(Duration::from_millis(60));
+        let start = std::time::Instant::now();
+        assert_eq!(
+            t0.recv(0, 1, 7).unwrap_err(),
+            TransportError::Timeout {
+                to: 0,
+                from: 1,
+                tag: 7
+            }
+        );
+        assert!(start.elapsed() < Duration::from_secs(10));
+        // explicit per-call deadline overrides the watchdog
+        assert!(matches!(
+            t0.recv_timeout(0, 1, 7, Duration::from_millis(20)).unwrap_err(),
+            TransportError::Timeout { .. }
+        ));
     }
 
     #[test]
