@@ -1,0 +1,242 @@
+//! `SimService` demo + soak gate (PR 9): run N independent tenants
+//! over one shared pool with slice-based cooperative scheduling, panic
+//! quarantine, deadline budgets and checkpointed recovery — then
+//! *verify* the fault-isolation contract and exit non-zero when it is
+//! violated (this is the CI service-soak gate, not just a demo).
+//!
+//! With `--faults SEED` a deterministic fault storm is seeded over the
+//! tenant population: some tenants get a one-shot panicking behavior
+//! (they must recover — from the last in-memory checkpoint when
+//! `--checkpoint-freq > 0`, by replay otherwise — and finish bitwise
+//! identical to an uninterrupted run), some panic persistently (they
+//! must exhaust `--max-restarts` and park as `Failed`), some carry an
+//! iteration budget far below the target (they must suspend as
+//! `DeadlineExceeded`). Healthy tenants must always finish bitwise
+//! identical to their solo runs.
+//!
+//!     cargo run --release --example service
+//!     cargo run --release --example service -- --tenants 12 --faults 7
+//!     cargo run --release --example service -- --faults 7 --checkpoint-freq 0
+//!
+//! Flags: `--tenants N` (8) `--iterations N` (40) `--threads N` (4)
+//! `--slice K` (4) `--checkpoint-freq N` (5) `--max-restarts N` (2)
+//! `--faults SEED` (0 = all healthy)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use teraagent::core::agent::SphericalAgent;
+use teraagent::core::behavior::FnBehavior;
+use teraagent::core::random::Rng;
+use teraagent::runtime::service::{SimService, TenantBuilder, TenantError};
+use teraagent::{Param, Real3, Simulation};
+
+const AGENTS: usize = 16;
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum FaultPlan {
+    Healthy,
+    /// panics once at the given iteration, then recovers
+    OneShot(u64),
+    /// panics at the given iteration on every attempt
+    Persistent(u64),
+    /// iteration budget far below the target
+    DeadlineBuster,
+}
+
+fn build_jiggle(param: Param) -> Simulation {
+    let mut sim = Simulation::new(param);
+    sim.remove_agent_op("mechanical_forces");
+    for i in 0..AGENTS {
+        let mut a = SphericalAgent::new(Real3::new(i as f64 * 10.0, 0.0, 0.0));
+        a.base.behaviors.push(FnBehavior::new("jiggle", |a, ctx| {
+            let step = ctx.rng.uniform3(-1.0, 1.0);
+            let p = a.position();
+            a.set_position(p + step);
+        }));
+        sim.add_agent(Box::new(a));
+    }
+    sim
+}
+
+/// Builder for one tenant under its fault plan. The injected fault
+/// behaviors are attached to *every* agent (uniform per-type behavior
+/// lists — the checkpoint-restore re-attachment contract); the
+/// one-shot latch is shared through the builder so rebuild + replay
+/// does not re-fire it.
+fn tenant_builder(plan: FaultPlan, latch: &Arc<AtomicBool>) -> TenantBuilder {
+    let latch = Arc::clone(latch);
+    Box::new(move |p: Param| {
+        let mut sim = build_jiggle(p);
+        match plan {
+            FaultPlan::Healthy | FaultPlan::DeadlineBuster => {}
+            FaultPlan::OneShot(at) => {
+                let handles: Vec<_> = sim.rm.handles().to_vec();
+                for h in handles {
+                    let latch = Arc::clone(&latch);
+                    sim.rm.get_mut(h).base_mut().behaviors.push(FnBehavior::new(
+                        "one_shot_panic",
+                        move |_a, ctx| {
+                            if ctx.shared.iteration == at
+                                && !latch.swap(true, Ordering::SeqCst)
+                            {
+                                panic!("seeded one-shot fault");
+                            }
+                        },
+                    ));
+                }
+            }
+            FaultPlan::Persistent(at) => {
+                let handles: Vec<_> = sim.rm.handles().to_vec();
+                for h in handles {
+                    sim.rm.get_mut(h).base_mut().behaviors.push(FnBehavior::new(
+                        "persistent_panic",
+                        move |_a, ctx| {
+                            if ctx.shared.iteration == at {
+                                panic!("seeded persistent fault");
+                            }
+                        },
+                    ));
+                }
+            }
+        }
+        sim
+    })
+}
+
+fn snapshot(sim: &Simulation) -> Vec<(u64, [f64; 3])> {
+    let mut out = Vec::new();
+    sim.rm
+        .for_each_agent(|_h, a| out.push((a.uid(), a.position().0)));
+    out.sort_by_key(|e| e.0);
+    out
+}
+
+fn arg(args: &[String], flag: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let tenants = arg(&args, "--tenants", 8) as usize;
+    let iterations = arg(&args, "--iterations", 40);
+    let threads = arg(&args, "--threads", 4);
+    let slice = arg(&args, "--slice", 4);
+    let checkpoint_freq = arg(&args, "--checkpoint-freq", 5);
+    let max_restarts = arg(&args, "--max-restarts", 2);
+    let fault_seed = arg(&args, "--faults", 0);
+
+    // deterministic fault storm over the tenant population
+    let mut storm = Rng::new(fault_seed.max(1));
+    let plans: Vec<FaultPlan> = (0..tenants)
+        .map(|_| {
+            if fault_seed == 0 {
+                return FaultPlan::Healthy;
+            }
+            let roll = storm.uniform01();
+            // fault iterations past the first checkpoint so the
+            // restore path (not just replay) is exercised
+            if roll < 0.25 {
+                FaultPlan::OneShot(checkpoint_freq.max(2) + 4)
+            } else if roll < 0.40 {
+                FaultPlan::Persistent(checkpoint_freq.max(2) + 3)
+            } else if roll < 0.55 {
+                FaultPlan::DeadlineBuster
+            } else {
+                FaultPlan::Healthy
+            }
+        })
+        .collect();
+
+    let mut service_param = Param::default();
+    service_param.svc_threads = threads;
+    service_param.svc_slice_iterations = slice;
+    let mut svc = SimService::new(service_param);
+
+    let mut latches: Vec<Arc<AtomicBool>> = Vec::with_capacity(tenants);
+    let mut ids = Vec::with_capacity(tenants);
+    for (i, &plan) in plans.iter().enumerate() {
+        let latch = Arc::new(AtomicBool::new(false));
+        let mut p = Param::default();
+        p.num_threads = 1;
+        p.seed = 1000 + i as u64;
+        p.svc_checkpoint_freq = checkpoint_freq;
+        p.svc_max_restarts = max_restarts;
+        if plan == FaultPlan::DeadlineBuster {
+            p.svc_iteration_budget = (iterations / 4).max(1);
+        }
+        let id = match svc.submit(tenant_builder(plan, &latch), p, iterations) {
+            Ok(id) => id,
+            Err(e) => {
+                eprintln!("FAIL tenant {i} rejected unexpectedly: {e}");
+                std::process::exit(1);
+            }
+        };
+        latches.push(latch);
+        ids.push(id);
+    }
+
+    let t0 = std::time::Instant::now();
+    svc.run();
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("{:<8} {:<16} {:<10} outcome", "tenant", "plan", "state");
+    let mut violations = 0usize;
+    for (i, (&id, &plan)) in ids.iter().zip(&plans).enumerate() {
+        let outcome = svc.take(id);
+        let verdict: String = match (plan, outcome) {
+            (FaultPlan::Healthy, Some(Ok(sim))) | (FaultPlan::OneShot(_), Some(Ok(sim))) => {
+                // bitwise check against an uninterrupted run of the
+                // same builder (the one-shot latch is already spent)
+                let reference = tenant_builder(plan, &latches[i]);
+                let mut p = Param::default();
+                p.num_threads = 1;
+                p.seed = 1000 + i as u64;
+                let mut ref_sim = reference(p);
+                ref_sim.simulate(iterations);
+                if snapshot(&sim) == snapshot(&ref_sim) {
+                    "done, bitwise identical to solo run".to_string()
+                } else {
+                    violations += 1;
+                    "VIOLATION: diverged from solo run".to_string()
+                }
+            }
+            (FaultPlan::Persistent(_), Some(Err(TenantError::Failed { attempts, last }))) => {
+                format!("parked typed after {attempts} restarts: {last}")
+            }
+            (FaultPlan::DeadlineBuster, Some(Err(e @ TenantError::DeadlineExceeded { .. }))) => {
+                format!("suspended typed: {e}")
+            }
+            (_, outcome) => {
+                violations += 1;
+                format!("VIOLATION: unexpected outcome {outcome:?}")
+            }
+        };
+        println!("{i:<8} {:<16} {verdict}", format!("{plan:?}"));
+    }
+
+    let stats = svc.stats();
+    println!(
+        "\n{} tenants in {wall:.3}s: {} completed, {} panics quarantined, \
+         {} restarts, {} deadline suspensions, {} failed, {} rounds, {} slices \
+         (p99 slice op-time {:.3} ms)",
+        tenants,
+        stats.completed,
+        stats.panics,
+        stats.restarts,
+        stats.deadline_suspensions,
+        stats.failed,
+        stats.rounds,
+        stats.slices,
+        stats.p99_slice_nanos() as f64 / 1e6,
+    );
+
+    if violations > 0 {
+        eprintln!("FAIL: {violations} fault-isolation violations");
+        std::process::exit(1);
+    }
+    println!("OK: fault-isolation contract held");
+}

@@ -26,11 +26,13 @@
 //!    through a method that does) or appears in the checked-in waiver
 //!    list ([`waivers::RM_VERSION_WAIVERS`]) with a reason. This is the
 //!    PR 4 `get_mut` regression class.
-//! 6. **unwrap** — no `.unwrap()`/`.expect(` in `distributed/` outside
-//!    `#[cfg(test)]`: a rank panic strands its superstep peers, so the
-//!    distributed layer fails typed (`DistError`) for the PR 8
-//!    supervisor to roll back from. Proven-infallible cases carry a
-//!    waiver.
+//! 6. **unwrap** — no `.unwrap()`/`.expect(` in the fault-isolated
+//!    layers (`distributed/`, `runtime/`) outside `#[cfg(test)]`: a
+//!    rank panic strands its superstep peers, and a panic on a
+//!    `SimService` coordinator path escapes the per-tenant quarantine
+//!    (PR 9) — both layers fail typed (`DistError` / `TenantError`)
+//!    for their supervisors to recover from. Proven-infallible cases
+//!    carry a waiver.
 //!
 //! ## Waivers
 //! A finding can be waived in place with a comment on the same line or

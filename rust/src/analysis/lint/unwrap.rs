@@ -1,19 +1,21 @@
-//! Rule 6: no `.unwrap()` / `.expect(` in `distributed/` outside
-//! `#[cfg(test)]`. A panic in a rank thread takes down one participant
-//! of a coordinated superstep and strands its peers in recv timeouts —
-//! the self-healing contract (PR 8) demands every failure in the
-//! distributed layer surface as a *typed* [`crate::distributed::DistError`]
-//! the supervisor can roll back from, never as an ad-hoc panic.
-//! Genuinely infallible conversions (bounds-checked `try_into` on
-//! fixed-size headers) and documented invariants carry an explicit
-//! `// DETLINT: allow(unwrap) <reason>` waiver instead.
+//! Rule 6: no `.unwrap()` / `.expect(` in the fault-isolated layers
+//! (`distributed/`, `runtime/`) outside `#[cfg(test)]`. A panic in a
+//! rank thread takes down one participant of a coordinated superstep
+//! and strands its peers in recv timeouts; a panic on a `SimService`
+//! coordinator path escapes the per-tenant quarantine and takes every
+//! co-tenant down (PR 9). The self-healing contracts demand every
+//! failure surface as a *typed* error — `DistError` for the
+//! distributed layer, `TenantError` for the service — never as an
+//! ad-hoc panic. Genuinely infallible conversions (bounds-checked
+//! `try_into` on fixed-size headers) and documented invariants carry
+//! an explicit `// DETLINT: allow(unwrap) <reason>` waiver instead.
 
 use super::{emit, FileCtx, LintReport, Rule};
 
-/// The rule binds the distributed layer only: `core/` and friends have
-/// their own panic discipline (a shared-memory panic is an ordinary
-/// test failure, not a stranded cluster).
-const CRITICAL: &[&str] = &["distributed/"];
+/// The rule binds the fault-isolated layers only: `core/` and friends
+/// have their own panic discipline (a shared-memory panic is an
+/// ordinary test failure, not a stranded cluster or a downed service).
+const CRITICAL: &[&str] = &["distributed/", "runtime/"];
 
 /// Exact call tokens. `.unwrap_or*(…)` and `.expect_err(…)` are fine —
 /// they do not panic on the `Err`/`None` path.
@@ -35,8 +37,9 @@ pub fn check(ctx: &FileCtx, out: &mut LintReport) {
                     l,
                     Rule::UnwrapPanic,
                     format!(
-                        "`{pat}…)` in the distributed layer — a rank panic strands its \
-                         peers; return a typed DistError (or waive a proven-infallible case)"
+                        "`{pat}…)` in a fault-isolated layer — a stray panic strands rank \
+                         peers or escapes the tenant quarantine; return a typed error \
+                         (DistError / TenantError) or waive a proven-infallible case"
                     ),
                 );
                 break;
@@ -87,6 +90,23 @@ fn g(r: Result<u64, String>) -> String {
 }
 ";
         assert!(!fires("distributed/fixture.rs", src));
+    }
+
+    #[test]
+    fn unwrap_in_runtime_fires() {
+        // PR 9: the service layer carries the same no-panic contract
+        let src = "\
+fn slot(v: &[u64], i: usize) -> u64 {
+    *v.get(i).unwrap()
+}
+";
+        assert!(fires("runtime/fixture.rs", src));
+        let src = "\
+fn kernel(o: Option<u64>) -> u64 {
+    o.expect(\"compiled artifact\")
+}
+";
+        assert!(fires("runtime/fixture.rs", src));
     }
 
     #[test]

@@ -124,6 +124,109 @@ pub fn particle_swarm(
     }
 }
 
+/// Batched PSO for backends that evaluate a whole generation at once
+/// (e.g. a `SimService` farming one tenant per candidate, PR 9):
+/// identical RNG draw order to [`particle_swarm`] — per-particle
+/// position then velocity draws at init, `r1, r2` per dimension per
+/// particle per iteration — but `objective_batch` receives all
+/// candidate positions of a generation together, and pbest/gbest
+/// update only *after* the batch returns.
+///
+/// Semantic difference, intentional and documented: gbest is
+/// *synchronous* (a generation barrier). The sequential variant lets
+/// later particles within a generation see mid-generation gbest
+/// improvements; a batched evaluator cannot, since all candidates are
+/// in flight simultaneously. Failed/crashed candidates are expressed
+/// as `f64::INFINITY` scores and simply never become bests.
+pub fn particle_swarm_batch(
+    objective_batch: &mut dyn FnMut(&[Vec<f64>]) -> Vec<f64>,
+    bounds: &[(f64, f64)],
+    config: &PsoConfig,
+) -> OptimResult {
+    assert!(!bounds.is_empty());
+    let dim = bounds.len();
+    let mut rng = Rng::new(config.seed);
+    let mut evaluations = 0;
+
+    struct Particle {
+        pos: Vec<f64>,
+        vel: Vec<f64>,
+        best_pos: Vec<f64>,
+        best_val: f64,
+    }
+
+    let mut swarm: Vec<Particle> = (0..config.particles)
+        .map(|_| {
+            let pos: Vec<f64> = bounds.iter().map(|&(lo, hi)| rng.uniform(lo, hi)).collect();
+            let vel: Vec<f64> = bounds
+                .iter()
+                .map(|&(lo, hi)| rng.uniform(-(hi - lo), hi - lo) * 0.1)
+                .collect();
+            Particle {
+                best_pos: pos.clone(),
+                best_val: f64::INFINITY,
+                pos,
+                vel,
+            }
+        })
+        .collect();
+
+    let mut score_generation = |swarm: &[Particle], evaluations: &mut usize| -> Vec<f64> {
+        let generation: Vec<Vec<f64>> = swarm.iter().map(|p| p.pos.clone()).collect();
+        let values = objective_batch(&generation);
+        assert_eq!(
+            values.len(),
+            swarm.len(),
+            "objective_batch must return one score per candidate"
+        );
+        *evaluations += values.len();
+        values
+    };
+
+    let mut gbest_pos = swarm[0].pos.clone();
+    let mut gbest_val = f64::INFINITY;
+    let values = score_generation(&swarm, &mut evaluations);
+    for (p, &v) in swarm.iter_mut().zip(&values) {
+        p.best_val = v;
+        if v < gbest_val {
+            gbest_val = v;
+            gbest_pos = p.pos.clone();
+        }
+    }
+
+    let mut history = Vec::with_capacity(config.iterations);
+    for _ in 0..config.iterations {
+        for p in &mut swarm {
+            for d in 0..dim {
+                let r1 = rng.uniform01();
+                let r2 = rng.uniform01();
+                p.vel[d] = config.w * p.vel[d]
+                    + config.c1 * r1 * (p.best_pos[d] - p.pos[d])
+                    + config.c2 * r2 * (gbest_pos[d] - p.pos[d]);
+                p.pos[d] = (p.pos[d] + p.vel[d]).clamp(bounds[d].0, bounds[d].1);
+            }
+        }
+        let values = score_generation(&swarm, &mut evaluations);
+        for (p, &v) in swarm.iter_mut().zip(&values) {
+            if v < p.best_val {
+                p.best_val = v;
+                p.best_pos = p.pos.clone();
+            }
+            if v < gbest_val {
+                gbest_val = v;
+                gbest_pos = p.pos.clone();
+            }
+        }
+        history.push(gbest_val);
+    }
+    OptimResult {
+        best_position: gbest_pos,
+        best_value: gbest_val,
+        evaluations,
+        history,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +272,72 @@ mod tests {
         let mut f = |x: &[f64]| -x[0]; // pushes toward the upper bound
         let result = particle_swarm(&mut f, &[(0.0, 5.0)], &PsoConfig::default());
         assert!((result.best_position[0] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_minimizes_sphere_function() {
+        let mut f = |generation: &[Vec<f64>]| {
+            generation
+                .iter()
+                .map(|x| x.iter().map(|v| v * v).sum::<f64>())
+                .collect::<Vec<f64>>()
+        };
+        let bounds = vec![(-10.0, 10.0); 4];
+        let result = particle_swarm_batch(&mut f, &bounds, &PsoConfig::default());
+        assert!(result.best_value < 1e-3, "best={}", result.best_value);
+        assert_eq!(result.evaluations, 20 + 20 * 50);
+    }
+
+    #[test]
+    fn batch_sees_whole_generations_and_is_deterministic() {
+        let mut sizes = Vec::new();
+        let mut f = |generation: &[Vec<f64>]| {
+            sizes.push(generation.len());
+            generation
+                .iter()
+                .map(|x| (x[0] - 2.0).abs())
+                .collect::<Vec<f64>>()
+        };
+        let cfg = PsoConfig {
+            particles: 7,
+            iterations: 5,
+            seed: 11,
+            ..Default::default()
+        };
+        let r1 = particle_swarm_batch(&mut f, &[(0.0, 4.0)], &cfg);
+        assert_eq!(sizes.len(), 6, "init + one batch per iteration");
+        assert!(sizes.iter().all(|&n| n == 7));
+        let mut f2 = |generation: &[Vec<f64>]| {
+            generation
+                .iter()
+                .map(|x| (x[0] - 2.0).abs())
+                .collect::<Vec<f64>>()
+        };
+        let r2 = particle_swarm_batch(&mut f2, &[(0.0, 4.0)], &cfg);
+        assert_eq!(r1.best_position, r2.best_position);
+        assert_eq!(r1.best_value, r2.best_value);
+    }
+
+    #[test]
+    fn batch_survives_infinite_scores() {
+        // half the box is "crashed" (scored INFINITY, the way
+        // calibrate_service reports failed tenants) — the swarm still
+        // finds the feasible minimum
+        let mut f = |generation: &[Vec<f64>]| {
+            generation
+                .iter()
+                .map(|x| {
+                    if x[0] > 5.0 {
+                        f64::INFINITY
+                    } else {
+                        (x[0] - 3.0).abs()
+                    }
+                })
+                .collect::<Vec<f64>>()
+        };
+        let result = particle_swarm_batch(&mut f, &[(0.0, 10.0)], &PsoConfig::default());
+        assert!(result.best_value < 0.01, "best={}", result.best_value);
+        assert!(result.best_position[0] <= 5.0);
     }
 
     #[test]

@@ -134,10 +134,12 @@ fn tmp_path(path: &Path) -> PathBuf {
     PathBuf::from(os)
 }
 
-/// Frame `body` (header + CRC trailer) and write it crash-consistently:
-/// assemble in memory, write `<path>.tmp`, fsync, rename over `path`,
-/// best-effort fsync of the parent directory. Returns bytes written.
-pub fn write_file(path: &Path, kind: u8, body: &[u8]) -> Result<u64, BackupError> {
+/// Assemble the framed byte image of a checkpoint: header (magic +
+/// version + kind) + body + CRC-32 trailer — exactly the bytes
+/// [`write_file`] persists. The in-memory half of the format, used by
+/// the multi-tenant service (`runtime/service.rs`) for checkpoints
+/// that never touch the filesystem.
+pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
     buf.extend_from_slice(MAGIC);
     buf.push(FORMAT_VERSION);
@@ -145,6 +147,51 @@ pub fn write_file(path: &Path, kind: u8, body: &[u8]) -> Result<u64, BackupError
     buf.extend_from_slice(body);
     let crc = crc32(&buf);
     buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Verify a framed byte image (magic, format version, kind, CRC-32
+/// trailer) and return the body slice. The read-side mirror of
+/// [`frame`]; every rejection is typed and happens before the caller
+/// can touch a simulation.
+pub fn unframe(data: &[u8], expect_kind: u8) -> Result<&[u8], BackupError> {
+    if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
+        return Err(BackupError::NotABackup);
+    }
+    if data.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(BackupError::Truncated {
+            needed: HEADER_LEN + TRAILER_LEN,
+            have: data.len(),
+        });
+    }
+    // version before CRC: files from other format versions (e.g. the
+    // CRC-less v1) must be rejected as VersionMismatch, not CrcMismatch
+    if data[7] != FORMAT_VERSION {
+        return Err(BackupError::VersionMismatch {
+            found: data[7],
+            expected: FORMAT_VERSION,
+        });
+    }
+    if data[8] != expect_kind {
+        return Err(BackupError::KindMismatch {
+            found: data[8],
+            expected: expect_kind,
+        });
+    }
+    let body_end = data.len() - TRAILER_LEN;
+    let stored = u32::from_le_bytes(data[body_end..].try_into().unwrap());
+    let computed = crc32(&data[..body_end]);
+    if stored != computed {
+        return Err(BackupError::CrcMismatch { stored, computed });
+    }
+    Ok(&data[HEADER_LEN..body_end])
+}
+
+/// Frame `body` (header + CRC trailer) and write it crash-consistently:
+/// assemble in memory, write `<path>.tmp`, fsync, rename over `path`,
+/// best-effort fsync of the parent directory. Returns bytes written.
+pub fn write_file(path: &Path, kind: u8, body: &[u8]) -> Result<u64, BackupError> {
+    let buf = frame(kind, body);
 
     let tmp = tmp_path(path);
     {
@@ -189,36 +236,7 @@ pub fn remove_orphan_tmp(dir: &Path) -> Result<usize, BackupError> {
 /// CRC-32 trailer. Returns the body bytes.
 pub fn read_file(path: &Path, expect_kind: u8) -> Result<Vec<u8>, BackupError> {
     let data = std::fs::read(path)?;
-    if data.len() < MAGIC.len() || &data[..MAGIC.len()] != MAGIC {
-        return Err(BackupError::NotABackup);
-    }
-    if data.len() < HEADER_LEN + TRAILER_LEN {
-        return Err(BackupError::Truncated {
-            needed: HEADER_LEN + TRAILER_LEN,
-            have: data.len(),
-        });
-    }
-    // version before CRC: files from other format versions (e.g. the
-    // CRC-less v1) must be rejected as VersionMismatch, not CrcMismatch
-    if data[7] != FORMAT_VERSION {
-        return Err(BackupError::VersionMismatch {
-            found: data[7],
-            expected: FORMAT_VERSION,
-        });
-    }
-    if data[8] != expect_kind {
-        return Err(BackupError::KindMismatch {
-            found: data[8],
-            expected: expect_kind,
-        });
-    }
-    let body_end = data.len() - TRAILER_LEN;
-    let stored = u32::from_le_bytes(data[body_end..].try_into().unwrap());
-    let computed = crc32(&data[..body_end]);
-    if stored != computed {
-        return Err(BackupError::CrcMismatch { stored, computed });
-    }
-    Ok(data[HEADER_LEN..body_end].to_vec())
+    Ok(unframe(&data, expect_kind)?.to_vec())
 }
 
 // --------------------------------------------------------------------
@@ -454,12 +472,21 @@ pub fn backup(sim: &Simulation, path: &Path) -> Result<u64, BackupError> {
     write_file(path, KIND_SIMULATION, &encode_sim(sim))
 }
 
-/// Restore a checkpoint into `sim` (built by the same model builder).
-/// Returns the restored iteration counter; the resumed run is bitwise
-/// identical to an uninterrupted one.
-pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, BackupError> {
-    let body = read_file(path, KIND_SIMULATION)?;
-    let mut cur = Cursor::new(&body);
+/// In-memory simulation checkpoint: the framed byte image [`backup`]
+/// would write to disk, returned as a buffer instead. The multi-tenant
+/// service keeps one of these per tenant so a quarantined tenant can
+/// be restored without any filesystem traffic.
+pub fn write_to(sim: &Simulation) -> Vec<u8> {
+    frame(KIND_SIMULATION, &encode_sim(sim))
+}
+
+/// Restore a simulation from an in-memory checkpoint produced by
+/// [`write_to`] (or the raw bytes of a [`backup`] file). Same
+/// verification and same bitwise-resume contract as [`restore`];
+/// rejects happen before `sim` is modified.
+pub fn read_from(sim: &mut Simulation, data: &[u8]) -> Result<u64, BackupError> {
+    let body = unframe(data, KIND_SIMULATION)?;
+    let mut cur = Cursor::new(body);
     let iteration = decode_sim(sim, &mut cur, None)?;
     if !cur.is_empty() {
         return Err(BackupError::Corrupt(
@@ -467,6 +494,14 @@ pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, BackupError> {
         ));
     }
     Ok(iteration)
+}
+
+/// Restore a checkpoint into `sim` (built by the same model builder).
+/// Returns the restored iteration counter; the resumed run is bitwise
+/// identical to an uninterrupted one.
+pub fn restore(sim: &mut Simulation, path: &Path) -> Result<u64, BackupError> {
+    let data = std::fs::read(path)?;
+    read_from(sim, &data)
 }
 
 // --------------------------------------------------------------------
@@ -642,6 +677,77 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn in_memory_roundtrip_resumes_identically() {
+        AgentRegistry::register_builtins();
+        let mut param = Param::default();
+        param.seed = 321;
+        let mut reference = build(param.clone(), &model());
+        reference.simulate(16);
+
+        let mut first = build(param.clone(), &model());
+        first.simulate(8);
+        let image = write_to(&first);
+        // byte image is the exact file format: the file reader accepts it
+        let path = tmp("mem_image");
+        std::fs::write(&path, &image).unwrap();
+        let mut via_file = build(param.clone(), &model());
+        assert_eq!(restore(&mut via_file, &path).unwrap(), 8);
+
+        let mut second = build(param, &model());
+        let iter = read_from(&mut second, &image).unwrap();
+        assert_eq!(iter, 8);
+        second.simulate(8);
+        assert_eq!(reference.iteration, second.iteration);
+        reference.rm.for_each_agent(|_, a| {
+            let b = second.rm.get_by_uid(a.uid()).expect("restored agent");
+            assert_eq!(a.position().0, b.position().0, "uid {}", a.uid());
+            assert_eq!(a.diameter(), b.diameter(), "uid {}", a.uid());
+        });
+    }
+
+    #[test]
+    fn read_from_rejects_corruption_typed() {
+        AgentRegistry::register_builtins();
+        let sim = build(Param::default(), &model());
+        let image = write_to(&sim);
+        let mut target = build(Param::default(), &model());
+        // garbage
+        assert!(matches!(
+            read_from(&mut target, b"nope"),
+            Err(BackupError::NotABackup)
+        ));
+        // truncation
+        for cut in [5usize, 10, image.len() / 2, image.len() - 1] {
+            let err = read_from(&mut target, &image[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    BackupError::NotABackup
+                        | BackupError::Truncated { .. }
+                        | BackupError::CrcMismatch { .. }
+                ),
+                "cut at {cut}: unexpected {err:?}"
+            );
+        }
+        // bit flip
+        let mut flipped = image.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x08;
+        assert!(matches!(
+            read_from(&mut target, &flipped),
+            Err(BackupError::CrcMismatch { .. })
+        ));
+        // wrong kind
+        let other = frame(KIND_DISTRIBUTED_RANK, &encode_sim(&sim));
+        assert!(matches!(
+            read_from(&mut target, &other),
+            Err(BackupError::KindMismatch { .. })
+        ));
+        // every rejection left the target untouched
+        assert_eq!(target.num_agents(), 80);
     }
 
     #[test]

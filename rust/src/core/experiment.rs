@@ -7,10 +7,12 @@
 //! calibration loop the paper uses for the epidemiology model
 //! (particle-swarm optimization against a ground-truth series).
 
-use crate::analysis::optim::{particle_swarm, OptimResult, PsoConfig};
+use crate::analysis::optim::{particle_swarm, particle_swarm_batch, OptimResult, PsoConfig};
 use crate::analysis::TimeSeries;
 use crate::core::param::Param;
 use crate::core::simulation::Simulation;
+use crate::runtime::service::{SimService, TenantBuilder, TenantError};
+use std::sync::Arc;
 
 /// Mode C: run several independent simulations sequentially; returns
 /// one result per simulation.
@@ -70,6 +72,104 @@ pub fn run_repetitions<T>(
         .collect()
 }
 
+/// Mode C over a `SimService` (PR 9): run the batch as fault-isolated
+/// tenants on a shared pool instead of sequentially on the caller's
+/// thread. A panicking or over-budget tenant yields a typed
+/// `Err(TenantError)` in its slot; co-tenants are unaffected and —
+/// by the service determinism contract — produce results bitwise
+/// identical to [`run_batch`]. Scheduling knobs (`svc_threads`,
+/// `svc_slice_iterations`, ...) come from `service_param`; per-tenant
+/// fault policy (`svc_max_restarts`, `svc_checkpoint_freq`, budgets)
+/// from each tenant's own [`Param`].
+pub fn run_batch_service<T>(
+    service_param: Param,
+    tenants: Vec<(TenantBuilder, Param)>,
+    iterations: u64,
+    mut extract: impl FnMut(&Simulation) -> T,
+) -> Vec<Result<T, TenantError>> {
+    let mut svc = SimService::new(service_param);
+    let ids: Vec<Result<usize, TenantError>> = tenants
+        .into_iter()
+        .map(|(builder, param)| svc.submit(builder, param, iterations))
+        .collect();
+    svc.run();
+    ids.into_iter()
+        .map(|id| match id {
+            Ok(id) => match svc.take(id) {
+                Some(Ok(sim)) => Ok(extract(&sim)),
+                Some(Err(e)) => Err(e),
+                None => unreachable!("after run(), every admitted tenant is takeable once"),
+            },
+            Err(e) => Err(e),
+        })
+        .collect()
+}
+
+/// [`run_repetitions`] over a `SimService`: one tenant per seed. The
+/// builder is shared across tenants (hence `Arc` + `Sync`); results
+/// arrive in seed order with typed per-seed failures.
+pub fn run_repetitions_service<T>(
+    builder: Arc<dyn Fn(Param) -> Simulation + Send + Sync>,
+    service_param: Param,
+    base_param: Param,
+    seeds: &[u64],
+    iterations: u64,
+    extract: impl FnMut(&Simulation) -> T,
+) -> Vec<Result<T, TenantError>> {
+    let tenants: Vec<(TenantBuilder, Param)> = seeds
+        .iter()
+        .map(|&seed| {
+            let mut p = base_param.clone();
+            p.seed = seed;
+            let b = Arc::clone(&builder);
+            (Box::new(move |param: Param| b(param)) as TenantBuilder, p)
+        })
+        .collect();
+    run_batch_service(service_param, tenants, iterations, extract)
+}
+
+/// Mode E over a `SimService` (PR 9): particle-swarm calibration that
+/// farms every candidate of a generation through the service as an
+/// isolated tenant — a crashing or over-budget candidate scores
+/// `f64::INFINITY` and loses, instead of taking the whole sweep down.
+/// Uses [`particle_swarm_batch`] (synchronous per-generation gbest; see
+/// its docs for the semantic difference from [`calibrate`]).
+///
+/// `build(candidate, param)` constructs the simulation for one
+/// candidate vector; `score` maps a finished simulation to the error
+/// against the ground truth.
+pub fn calibrate_service(
+    service_param: Param,
+    sim_param: Param,
+    iterations: u64,
+    build: Arc<dyn Fn(&[f64], Param) -> Simulation + Send + Sync>,
+    score: &mut dyn FnMut(&Simulation) -> f64,
+    bounds: &[(f64, f64)],
+    config: &PsoConfig,
+) -> OptimResult {
+    let mut objective_batch = |candidates: &[Vec<f64>]| -> Vec<f64> {
+        let tenants: Vec<(TenantBuilder, Param)> = candidates
+            .iter()
+            .map(|candidate| {
+                let b = Arc::clone(&build);
+                let candidate = candidate.clone();
+                (
+                    Box::new(move |p: Param| b(&candidate, p)) as TenantBuilder,
+                    sim_param.clone(),
+                )
+            })
+            .collect();
+        run_batch_service(service_param.clone(), tenants, iterations, |sim| score(sim))
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(_) => f64::INFINITY,
+            })
+            .collect()
+    };
+    particle_swarm_batch(&mut objective_batch, bounds, config)
+}
+
 /// Mode E: calibrate model parameters against an objective by running
 /// one simulation per candidate parameter vector (PSO, §4.4.10).
 ///
@@ -121,7 +221,12 @@ impl crate::core::operation::StandaloneOperation for CollectOp {
     }
 
     fn run(&mut self, sim: &mut Simulation) {
-        let mut series = self.series.lock().unwrap();
+        // A collector that panicked while holding the lock poisons the
+        // mutex; the series data itself is still coherent (records are
+        // appended atomically from the observer's perspective), so
+        // recover instead of cascading the panic into every later
+        // observer (PR 6 transport idiom, PR 9 satellite).
+        let mut series = self.series.lock().unwrap_or_else(|e| e.into_inner());
         (self.collect)(sim, &mut series);
     }
 }
@@ -322,6 +427,184 @@ mod tests {
             .map(|k| ts.last(k).unwrap())
             .sum();
         assert_eq!(total, 105.0);
+    }
+
+    #[test]
+    fn collect_op_recovers_from_poisoned_series() {
+        use crate::core::operation::StandaloneOperation;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let armed = Arc::new(AtomicBool::new(true));
+        let a = Arc::clone(&armed);
+        let (mut op, series) = CollectOp::new(1, move |sim, ts| {
+            if a.swap(false, Ordering::SeqCst) {
+                // panics while the series lock is held -> poisons it
+                panic!("deliberate collector panic");
+            }
+            ts.record("iters", sim.iteration, sim.iteration as f64);
+        });
+        let mut sim = Simulation::with_defaults();
+        let poisoned = catch_unwind(AssertUnwindSafe(|| op.run(&mut sim)));
+        assert!(poisoned.is_err());
+        // later observers must keep working despite the poisoned lock
+        op.run(&mut sim);
+        op.run(&mut sim);
+        let ts = series.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(ts.get("iters").unwrap().len(), 2);
+    }
+
+    fn counting_tenant(seed: u64, agents: usize) -> (crate::runtime::service::TenantBuilder, Param)
+    {
+        let mut p = Param::default();
+        p.num_threads = 1;
+        p.seed = seed;
+        (
+            Box::new(move |param: Param| {
+                let mut sim = Simulation::new(param);
+                sim.remove_agent_op("mechanical_forces");
+                for k in 0..agents {
+                    sim.add_agent(Box::new(SphericalAgent::new(Real3::new(
+                        k as f64 * 30.0,
+                        0.0,
+                        0.0,
+                    ))));
+                }
+                sim
+            }),
+            p,
+        )
+    }
+
+    #[test]
+    fn batch_service_survives_crashing_tenant() {
+        let mut crasher_param = Param::default();
+        crasher_param.num_threads = 1;
+        crasher_param.svc_max_restarts = 0;
+        let crasher: crate::runtime::service::TenantBuilder = Box::new(|param: Param| {
+            let mut sim = Simulation::new(param);
+            sim.remove_agent_op("mechanical_forces");
+            let mut a = SphericalAgent::new(Real3::ZERO);
+            a.base.behaviors.push(FnBehavior::new("boom", |_a, ctx| {
+                if ctx.shared.iteration == 3 {
+                    panic!("crashing tenant");
+                }
+            }));
+            sim.add_agent(Box::new(a));
+            sim
+        });
+        let tenants = vec![
+            counting_tenant(100, 1),
+            (crasher, crasher_param),
+            counting_tenant(102, 3),
+        ];
+        let mut sp = Param::default();
+        sp.svc_threads = 2;
+        let results = run_batch_service(sp, tenants, 6, |s| (s.num_agents(), s.iteration));
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0], Ok((1, 6)));
+        assert_eq!(results[2], Ok((3, 6)));
+        match &results[1] {
+            Err(TenantError::Failed { attempts: 0, last }) => {
+                assert!(matches!(**last, TenantError::Panicked { iteration: 3, .. }));
+            }
+            other => panic!("crasher must fail typed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repetitions_service_matches_sequential() {
+        let model = SirParams {
+            initial_susceptible: 120,
+            initial_infected: 5,
+            space_length: 30.0,
+            ..SirParams::measles()
+        };
+        let seeds = [1u64, 2, 3];
+        let m = model.clone();
+        let sequential = run_repetitions(
+            &move |param: Param| build(param, &m),
+            Param::default(),
+            &seeds,
+            25,
+            |s| census(s),
+        );
+        let m = model.clone();
+        let shared: Arc<dyn Fn(Param) -> Simulation + Send + Sync> =
+            Arc::new(move |param: Param| build(param, &m));
+        let mut sp = Param::default();
+        sp.svc_threads = 2;
+        let serviced =
+            run_repetitions_service(shared, sp, Param::default(), &seeds, 25, |s| census(s));
+        assert_eq!(serviced.len(), sequential.len());
+        for (svc, seq) in serviced.iter().zip(&sequential) {
+            assert_eq!(svc.as_ref().ok(), Some(seq), "service run must be bitwise");
+        }
+    }
+
+    #[test]
+    fn calibrate_service_survives_crashing_candidates() {
+        // Trivial growth model: one agent grows by the candidate rate
+        // each iteration; ground truth diameter 25 after 20 iterations
+        // from 5.0 -> optimum rate 1.0. Candidates in (2.0, 3.0) crash
+        // at build time; they must score INFINITY and lose, not take
+        // the sweep down.
+        let build_fn: Arc<dyn Fn(&[f64], Param) -> Simulation + Send + Sync> =
+            Arc::new(|candidate: &[f64], param: Param| {
+                let rate = candidate[0];
+                if (2.0..3.0).contains(&rate) {
+                    panic!("unstable candidate region");
+                }
+                let mut sim = Simulation::new(param);
+                sim.remove_agent_op("mechanical_forces");
+                let mut a = SphericalAgent::with_diameter(Real3::ZERO, 5.0);
+                a.base.behaviors.push(FnBehavior::new("grow", move |a, _ctx| {
+                    let d = a.diameter();
+                    a.set_diameter(d + rate);
+                }));
+                sim.add_agent(Box::new(a));
+                sim
+            });
+        let mut score = |sim: &Simulation| -> f64 {
+            let d = sim
+                .rm
+                .get(crate::core::agent::AgentHandle::new(0, 0))
+                .diameter();
+            (d - 25.0).abs()
+        };
+        let mut sim_param = Param::default();
+        sim_param.num_threads = 1;
+        sim_param.svc_max_restarts = 0; // building always re-crashes
+        let mut sp = Param::default();
+        sp.svc_threads = 2;
+        let result = calibrate_service(
+            sp,
+            sim_param,
+            20,
+            build_fn,
+            &mut score,
+            &[(0.1, 5.0)],
+            &PsoConfig {
+                particles: 8,
+                iterations: 10,
+                seed: 5,
+                ..Default::default()
+            },
+        );
+        assert_eq!(result.evaluations, 8 + 8 * 10);
+        // value = 20 * |rate - 1|, so < 2.0 means the rate is within
+        // 0.1 of the optimum
+        assert!(
+            result.best_value < 2.0,
+            "calibration must converge despite crashes: best={}",
+            result.best_value
+        );
+        assert!(
+            (result.best_position[0] - 1.0).abs() < 0.2,
+            "rate={}",
+            result.best_position[0]
+        );
+        assert!(!(2.0..3.0).contains(&result.best_position[0]));
     }
 
     #[test]

@@ -202,6 +202,47 @@ pub struct Param {
     /// before failing with a typed timeout (both `InProcessTransport`
     /// and `TcpTransport`). Replaces the former hardcoded 120 s.
     pub dist_recv_timeout_ms: u64,
+    /// Multi-tenant service (PR 9, `runtime/service.rs`): maximum
+    /// number of tenants holding an execution seat at once; further
+    /// admissions queue. `0` = unbounded (every tenant is seated
+    /// immediately and the queue is never used).
+    pub svc_max_tenants: u64,
+    /// Multi-tenant service: bound on the admission queue. A submit
+    /// that finds all seats taken *and* the queue full is shed with a
+    /// typed `TenantError::Rejected` instead of queueing unboundedly.
+    /// Only read when `svc_max_tenants > 0`.
+    pub svc_max_queued: u64,
+    /// Multi-tenant service: how many times a quarantined (panicked or
+    /// restore-failed) tenant is restored and retried before it is
+    /// parked as `TenantError::Failed { attempts, last }`.
+    pub svc_max_restarts: u64,
+    /// Multi-tenant service: cooperative slice length — each seated
+    /// tenant steps at most this many iterations per scheduling round
+    /// before yielding its worker to co-tenants.
+    pub svc_slice_iterations: u64,
+    /// Multi-tenant service: take an in-memory checkpoint
+    /// (`core/backup.rs::write_to`) whenever a tenant has advanced
+    /// this many iterations past its last one; a quarantined tenant
+    /// restarts from the newest checkpoint. `0` = no checkpoints
+    /// (recovery replays from iteration 0).
+    pub svc_checkpoint_freq: u64,
+    /// Multi-tenant service: hard budget on iterations *executed* for
+    /// one tenant (including recovery replay); exceeding it suspends
+    /// the tenant with a typed `TenantError::DeadlineExceeded`.
+    /// Deterministic — counted in iterations, not wall time. `0` = no
+    /// budget.
+    pub svc_iteration_budget: u64,
+    /// Multi-tenant service: budget on a tenant's accumulated
+    /// operation time (milliseconds of `OpTimers::total_nanos`, the
+    /// engine's own phase accounting — no extra clock reads in the
+    /// scheduler loop); exceeding it suspends the tenant with
+    /// `TenantError::DeadlineExceeded`. Machine-dependent by nature;
+    /// checked only at slice boundaries so co-tenant trajectories are
+    /// never affected. `0` = no budget.
+    pub svc_deadline_op_ms: u64,
+    /// Multi-tenant service: worker threads of the service's shared
+    /// pool; `0` = use `num_threads`.
+    pub svc_threads: u64,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -250,6 +291,14 @@ impl Default for Param {
             dist_max_recoveries: 5,
             dist_checkpoint_retain: 3,
             dist_recv_timeout_ms: 120_000,
+            svc_max_tenants: 0,
+            svc_max_queued: 64,
+            svc_max_restarts: 3,
+            svc_slice_iterations: 16,
+            svc_checkpoint_freq: 0,
+            svc_iteration_budget: 0,
+            svc_deadline_op_ms: 0,
+            svc_threads: 0,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -415,6 +464,28 @@ impl Param {
             "dist_recv_timeout_ms" => {
                 self.dist_recv_timeout_ms = value.parse().map_err(|_| err(k, value))?
             }
+            "svc_max_tenants" => {
+                self.svc_max_tenants = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_max_queued" => {
+                self.svc_max_queued = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_max_restarts" => {
+                self.svc_max_restarts = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_slice_iterations" => {
+                self.svc_slice_iterations = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_checkpoint_freq" => {
+                self.svc_checkpoint_freq = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_iteration_budget" => {
+                self.svc_iteration_budget = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_deadline_op_ms" => {
+                self.svc_deadline_op_ms = value.parse().map_err(|_| err(k, value))?
+            }
+            "svc_threads" => self.svc_threads = value.parse().map_err(|_| err(k, value))?,
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
                 self.visualization_interval = value.parse().map_err(|_| err(k, value))?
@@ -548,6 +619,24 @@ mod tests {
         p.apply_kv("dist_max_recoveries", "7").unwrap();
         p.apply_kv("dist_checkpoint_retain", "2").unwrap();
         p.apply_kv("dist_recv_timeout_ms", "1500").unwrap();
+        p.apply_kv("svc_max_tenants", "4").unwrap();
+        p.apply_kv("svc_max_queued", "9").unwrap();
+        p.apply_kv("svc_max_restarts", "2").unwrap();
+        p.apply_kv("svc_slice_iterations", "32").unwrap();
+        p.apply_kv("svc_checkpoint_freq", "5").unwrap();
+        p.apply_kv("svc_iteration_budget", "1000").unwrap();
+        p.apply_kv("svc_deadline_op_ms", "250").unwrap();
+        p.apply_kv("svc_threads", "3").unwrap();
+        assert_eq!(p.svc_max_tenants, 4);
+        assert_eq!(p.svc_max_queued, 9);
+        assert_eq!(p.svc_max_restarts, 2);
+        assert_eq!(p.svc_slice_iterations, 32);
+        assert_eq!(p.svc_checkpoint_freq, 5);
+        assert_eq!(p.svc_iteration_budget, 1000);
+        assert_eq!(p.svc_deadline_op_ms, 250);
+        assert_eq!(p.svc_threads, 3);
+        assert!(p.apply_kv("svc_max_restarts", "often").is_err());
+        assert!(p.apply_kv("svc_slice_iterations", "-1").is_err());
         assert!(p.dist_supervise);
         assert_eq!(p.dist_heartbeat_ms, 250);
         assert_eq!(p.dist_superstep_deadline_ms, 4000);

@@ -19,7 +19,8 @@
 //! * [`distributed`] — the TeraAgent distributed engine
 //! * [`models`]      — the paper's benchmark simulations
 //! * [`baseline`]    — deliberately-serial engine (Cortex3D/NetLogo stand-in)
-//! * [`runtime`]     — PJRT artifact loading/execution
+//! * [`runtime`]     — PJRT artifact loading/execution + the
+//!   fault-isolated multi-tenant `SimService`
 //! * [`vis`]         — visualization export
 //! * [`analysis`]    — statistics, time series, ODE oracles
 //! * [`benchkit`]    — the custom bench harness used by `cargo bench`

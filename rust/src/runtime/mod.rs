@@ -1,353 +1,22 @@
-//! PJRT runtime — load and execute the AOT-compiled Pallas/JAX
-//! artifacts (HLO text) from the Rust hot path.
+//! Runtime layer: the bridge between the deterministic simulation
+//! core and the world that schedules and executes it.
 //!
-//! Python runs once (`make artifacts`); afterwards this module is the
-//! only bridge to the compiled kernels:
-//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
-//! `client.compile` -> `execute` (see /opt/xla-example/load_hlo).
+//! Two halves:
 //!
-//! The artifact manifest (`artifacts/manifest.txt`, written by
-//! `python/compile/aot.py`) lists every artifact with its kind and
-//! parameters; [`Manifest`] parses it and resolves the right artifact
-//! for a requested configuration.
+//! * [`pjrt`]    — load and execute the AOT-compiled Pallas/JAX
+//!   artifacts (HLO text) from the Rust hot path, including the
+//!   artifact manifest parser with typed corruption errors.
+//! * [`service`] — `SimService`, the fault-isolated multi-tenant
+//!   simulation service: N independent `Simulation` tenants scheduled
+//!   cooperatively over a shared `ThreadPool`, with panic quarantine,
+//!   deterministic deadline budgets, checkpointed recovery, and typed
+//!   admission control.
+//!
+//! The PJRT items are re-exported at the module root so existing
+//! `crate::runtime::PjrtStepper` / `crate::runtime::Manifest` paths
+//! keep working after the split.
 
-use crate::core::parallel::ThreadPool;
-use crate::physics::diffusion::{DiffusionGrid, DiffusionStepper};
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+pub mod pjrt;
+pub mod service;
 
-/// One manifest row: `name|kind|params|shapes|vmem=N`.
-#[derive(Debug, Clone)]
-pub struct ManifestEntry {
-    pub name: String,
-    pub kind: String,
-    pub params: HashMap<String, u64>,
-    pub shapes: String,
-    pub vmem_bytes: u64,
-}
-
-/// Parsed artifact manifest.
-#[derive(Debug, Clone, Default)]
-pub struct Manifest {
-    pub entries: Vec<ManifestEntry>,
-    pub dir: PathBuf,
-}
-
-impl Manifest {
-    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
-        let dir = PathBuf::from(artifacts_dir);
-        let text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt", artifacts_dir))?;
-        let mut entries = Vec::new();
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let parts: Vec<&str> = line.split('|').collect();
-            if parts.len() != 5 {
-                return Err(anyhow!("malformed manifest line: {line}"));
-            }
-            let mut params = HashMap::new();
-            for kv in parts[2].split(',') {
-                if let Some((k, v)) = kv.split_once('=') {
-                    params.insert(k.to_string(), v.parse().unwrap_or(0));
-                }
-            }
-            let vmem_bytes = parts[4]
-                .strip_prefix("vmem=")
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(0);
-            entries.push(ManifestEntry {
-                name: parts[0].to_string(),
-                kind: parts[1].to_string(),
-                params,
-                shapes: parts[3].to_string(),
-                vmem_bytes,
-            });
-        }
-        Ok(Manifest { entries, dir })
-    }
-
-    /// Find an artifact of `kind` whose params all match.
-    pub fn find(&self, kind: &str, want: &[(&str, u64)]) -> Option<&ManifestEntry> {
-        self.entries.iter().find(|e| {
-            e.kind == kind
-                && want
-                    .iter()
-                    .all(|(k, v)| e.params.get(*k).copied() == Some(*v))
-        })
-    }
-
-    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
-        self.dir.join(format!("{}.hlo.txt", entry.name))
-    }
-}
-
-/// A compiled HLO artifact ready to execute.
-pub struct CompiledKernel {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-// SAFETY: the PJRT CPU client and its executables are internally
-// thread-safe (PJRT API requirement); the wrapper types only lack the
-// auto-trait because they hold raw pointers.
-unsafe impl Send for CompiledKernel {}
-
-impl CompiledKernel {
-    /// Load HLO text from `path` and compile it on a CPU PJRT client.
-    pub fn load(path: &Path) -> Result<CompiledKernel> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(CompiledKernel {
-            client,
-            exe,
-            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute with literal inputs; returns the unpacked 1-tuple result
-    /// (aot.py lowers with `return_tuple=True`).
-    pub fn execute1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
-        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
-    }
-}
-
-/// Diffusion stepper backed by the AOT Pallas kernel (one Eq-4.3 step
-/// per call).
-pub struct PjrtStepper {
-    kernel: CompiledKernel,
-    resolution: usize,
-}
-
-impl PjrtStepper {
-    /// Resolve, load and compile the right `diffusion_r{R}` artifact
-    /// for `grid`'s resolution.
-    pub fn for_grid(artifacts_dir: &str, grid: &DiffusionGrid) -> Result<PjrtStepper> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let r = grid.resolution() as u64;
-        let entry = manifest
-            .find("diffusion", &[("r", r)])
-            .ok_or_else(|| anyhow!("no diffusion artifact for r={r}"))?;
-        let kernel = CompiledKernel::load(&manifest.path_of(entry))?;
-        Ok(PjrtStepper {
-            kernel,
-            resolution: grid.resolution(),
-        })
-    }
-
-    pub fn kernel_name(&self) -> &str {
-        &self.kernel.name
-    }
-}
-
-impl DiffusionStepper for PjrtStepper {
-    fn step(&mut self, grid: &mut DiffusionGrid, _pool: &ThreadPool) {
-        assert_eq!(grid.resolution(), self.resolution);
-        let r = self.resolution as i64;
-        let data = grid.snapshot_f32();
-        let u = xla::Literal::vec1(&data)
-            .reshape(&[r, r, r])
-            .expect("reshape grid");
-        let coef = xla::Literal::vec1(&grid.kernel_coefficients()[..]);
-        let out = self
-            .kernel
-            .execute1(&[u, coef])
-            .expect("diffusion kernel execution");
-        let values: Vec<f32> = out.to_vec().expect("kernel output to_vec");
-        grid.load_f32(&values);
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
-/// Collision-force kernel wrapper (force_b{B}_k{K} artifacts) —
-/// exercised by the integration tests and the perf comparison; the
-/// engine's default force path stays native (the gather/scatter around
-/// a CPU PJRT call dominates for this op — see EXPERIMENTS.md §Perf).
-pub struct ForceKernel {
-    kernel: CompiledKernel,
-    pub batch: usize,
-    pub neighbors: usize,
-}
-
-impl ForceKernel {
-    pub fn load(artifacts_dir: &str, batch: usize, neighbors: usize) -> Result<ForceKernel> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let entry = manifest
-            .find("force", &[("b", batch as u64), ("k", neighbors as u64)])
-            .ok_or_else(|| anyhow!("no force artifact for b={batch} k={neighbors}"))?;
-        let kernel = CompiledKernel::load(&manifest.path_of(entry))?;
-        Ok(ForceKernel {
-            kernel,
-            batch,
-            neighbors,
-        })
-    }
-
-    /// Compute forces for a padded batch. Slices are f32 rows:
-    /// pos[B*3], radius[B], npos[B*K*3], nradius[B*K], nmask[B*K].
-    /// params = [repulsion_k, attraction_gamma]. Returns force[B*3].
-    pub fn execute(
-        &self,
-        pos: &[f32],
-        radius: &[f32],
-        npos: &[f32],
-        nradius: &[f32],
-        nmask: &[f32],
-        params: [f32; 2],
-    ) -> Result<Vec<f32>> {
-        let (b, k) = (self.batch as i64, self.neighbors as i64);
-        let inputs = [
-            xla::Literal::vec1(pos).reshape(&[b, 3])?,
-            xla::Literal::vec1(radius),
-            xla::Literal::vec1(npos).reshape(&[b, k, 3])?,
-            xla::Literal::vec1(nradius).reshape(&[b, k])?,
-            xla::Literal::vec1(nmask).reshape(&[b, k])?,
-            xla::Literal::vec1(&params[..]),
-        ];
-        let out = self.kernel.execute1(&inputs)?;
-        Ok(out.to_vec()?)
-    }
-}
-
-/// Locate the artifacts directory for tests/benches: `TA_ARTIFACTS`
-/// env var, else `artifacts/` relative to the crate root.
-pub fn default_artifacts_dir() -> String {
-    if let Ok(d) = std::env::var("TA_ARTIFACTS") {
-        return d;
-    }
-    let candidates = ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")];
-    for c in candidates {
-        if Path::new(c).join("manifest.txt").exists() {
-            return c.to_string();
-        }
-    }
-    "artifacts".to_string()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts_dir() -> Option<String> {
-        let dir = default_artifacts_dir();
-        if Path::new(&dir).join("manifest.txt").exists() {
-            Some(dir)
-        } else {
-            eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
-            None
-        }
-    }
-
-    #[test]
-    fn manifest_parses() {
-        let Some(dir) = artifacts_dir() else { return };
-        let m = Manifest::load(&dir).unwrap();
-        assert!(!m.entries.is_empty());
-        let e = m.find("diffusion", &[("r", 16)]).expect("r16 artifact");
-        assert!(m.path_of(e).exists());
-        assert!(e.vmem_bytes > 0);
-        assert!(m.find("diffusion", &[("r", 999)]).is_none());
-    }
-
-    #[test]
-    fn manifest_malformed_rejected() {
-        let tmp = std::env::temp_dir().join("ta_manifest_bad");
-        std::fs::create_dir_all(&tmp).unwrap();
-        std::fs::write(tmp.join("manifest.txt"), "bad line no pipes\n").unwrap();
-        assert!(Manifest::load(tmp.to_str().unwrap()).is_err());
-    }
-
-    #[test]
-    fn pjrt_diffusion_matches_native() {
-        let Some(dir) = artifacts_dir() else { return };
-        let pool = ThreadPool::new(1);
-        let mk = || {
-            let g = DiffusionGrid::new("s", 0, 16, 0.0, 15.0, 1.0, 0.1, 0.1);
-            g.set(8, 8, 8, 1.0);
-            g.set(3, 4, 5, 0.5);
-            g
-        };
-        let mut native = mk();
-        let mut pjrt_grid = mk();
-        let mut stepper = PjrtStepper::for_grid(&dir, &pjrt_grid).unwrap();
-        assert!(stepper.kernel_name().contains("diffusion_r16"));
-        for _ in 0..3 {
-            native.step_native(&pool);
-            stepper.step(&mut pjrt_grid, &pool);
-        }
-        // f32 kernel vs f64 native: compare loosely
-        for z in 0..16 {
-            for y in 0..16 {
-                for x in 0..16 {
-                    let a = native.get(x, y, z);
-                    let b = pjrt_grid.get(x, y, z);
-                    assert!((a - b).abs() < 1e-5, "({x},{y},{z}): native={a} pjrt={b}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn force_kernel_matches_native_force() {
-        let Some(dir) = artifacts_dir() else { return };
-        let fk = match ForceKernel::load(&dir, 256, 16) {
-            Ok(f) => f,
-            Err(e) => {
-                eprintln!("skipping: {e}");
-                return;
-            }
-        };
-        let b = 256;
-        let k = 16;
-        // one real pair in slot 0, rest masked out
-        let mut pos = vec![0.0f32; b * 3];
-        let mut radius = vec![1.0f32; b];
-        let mut npos = vec![0.0f32; b * k * 3];
-        let mut nradius = vec![1.0f32; b * k];
-        let mut nmask = vec![0.0f32; b * k];
-        radius[0] = 5.0;
-        pos[0] = 0.0;
-        npos[0] = 6.0; // neighbor at x=6
-        nradius[0] = 5.0;
-        nmask[0] = 1.0;
-        let out = fk
-            .execute(&pos, &radius, &npos, &nradius, &nmask, [2.0, 1.0])
-            .unwrap();
-        // native force for comparison
-        let f = crate::physics::force::DefaultForce::new(2.0, 1.0);
-        let m = f.magnitude(5.0, 5.0, 6.0);
-        let expected_x = -m; // pushed to -x
-        assert!(
-            (out[0] as f64 - expected_x).abs() < 1e-4,
-            "kernel {} vs native {}",
-            out[0],
-            expected_x
-        );
-        assert!(out[3..].iter().all(|v| v.abs() < 1e-6));
-    }
-}
+pub use pjrt::*;

@@ -1,0 +1,529 @@
+//! PJRT bridge — load and execute the AOT-compiled Pallas/JAX
+//! artifacts (HLO text) from the Rust hot path.
+//!
+//! Python runs once (`make artifacts`); afterwards this module is the
+//! only bridge to the compiled kernels:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute` (see /opt/xla-example/load_hlo).
+//!
+//! The artifact manifest (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`) lists every artifact with its kind and
+//! parameters; [`Manifest`] parses it and resolves the right artifact
+//! for a requested configuration. Every malformed manifest row is a
+//! typed [`ManifestError::Malformed`] naming the line — a mis-typed
+//! `r=1b` or `vmem=?` must fail loudly, not silently resolve to a
+//! zero-parameter artifact (PR 9 satellite fix).
+
+use crate::core::parallel::ThreadPool;
+use crate::physics::diffusion::{DiffusionGrid, DiffusionStepper};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Typed manifest-parsing failures. `Malformed` names the offending
+/// line (1-based) and quotes it so a bad artifact build is diagnosable
+/// from the error alone.
+#[derive(Debug)]
+pub enum ManifestError {
+    /// `manifest.txt` could not be read.
+    Io {
+        path: PathBuf,
+        error: std::io::Error,
+    },
+    /// A manifest row that does not parse. Previously these rows were
+    /// silently swallowed (`parse().unwrap_or(0)`), which made a
+    /// corrupt manifest resolve to wrong artifacts.
+    Malformed {
+        /// 1-based line number in `manifest.txt`.
+        line_no: usize,
+        /// The offending line, verbatim.
+        line: String,
+        /// What failed to parse.
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, error } => {
+                write!(f, "reading {}: {error}", path.display())
+            }
+            ManifestError::Malformed {
+                line_no,
+                line,
+                reason,
+            } => write!(
+                f,
+                "manifest.txt line {line_no}: {reason} (line: {line:?})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { error, .. } => Some(error),
+            ManifestError::Malformed { .. } => None,
+        }
+    }
+}
+
+/// One manifest row: `name|kind|params|shapes|vmem=N`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: String,
+    pub params: HashMap<String, u64>,
+    pub shapes: String,
+    pub vmem_bytes: u64,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest, ManifestError> {
+        let dir = PathBuf::from(artifacts_dir);
+        let manifest_path = dir.join("manifest.txt");
+        let text =
+            std::fs::read_to_string(&manifest_path).map_err(|error| ManifestError::Io {
+                path: manifest_path,
+                error,
+            })?;
+        let malformed = |line_no: usize, line: &str, reason: String| ManifestError::Malformed {
+            line_no,
+            line: line.to_string(),
+            reason,
+        };
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 5 {
+                return Err(malformed(
+                    line_no,
+                    line,
+                    format!(
+                        "expected 5 '|'-separated fields (name|kind|params|shapes|vmem=N), found {}",
+                        parts.len()
+                    ),
+                ));
+            }
+            let mut params = HashMap::new();
+            for kv in parts[2].split(',') {
+                if kv.is_empty() {
+                    continue; // an empty params field is a kernel with no parameters
+                }
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    malformed(
+                        line_no,
+                        line,
+                        format!("param token {kv:?} is not key=value"),
+                    )
+                })?;
+                let v: u64 = v.parse().map_err(|_| {
+                    malformed(
+                        line_no,
+                        line,
+                        format!("param {k:?} has non-integer value {v:?}"),
+                    )
+                })?;
+                params.insert(k.to_string(), v);
+            }
+            let vmem_bytes = parts[4]
+                .strip_prefix("vmem=")
+                .ok_or_else(|| {
+                    malformed(
+                        line_no,
+                        line,
+                        format!("field 5 must be vmem=N, found {:?}", parts[4]),
+                    )
+                })?
+                .parse()
+                .map_err(|_| {
+                    malformed(
+                        line_no,
+                        line,
+                        format!("vmem value {:?} is not an integer", &parts[4][5..]),
+                    )
+                })?;
+            entries.push(ManifestEntry {
+                name: parts[0].to_string(),
+                kind: parts[1].to_string(),
+                params,
+                shapes: parts[3].to_string(),
+                vmem_bytes,
+            });
+        }
+        Ok(Manifest { entries, dir })
+    }
+
+    /// Find an artifact of `kind` whose params all match.
+    pub fn find(&self, kind: &str, want: &[(&str, u64)]) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == kind
+                && want
+                    .iter()
+                    .all(|(k, v)| e.params.get(*k).copied() == Some(*v))
+        })
+    }
+
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", entry.name))
+    }
+}
+
+/// A compiled HLO artifact ready to execute.
+pub struct CompiledKernel {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: the PJRT CPU client and its executables are internally
+// thread-safe (PJRT API requirement); the wrapper types only lack the
+// auto-trait because they hold raw pointers.
+unsafe impl Send for CompiledKernel {}
+
+impl CompiledKernel {
+    /// Load HLO text from `path` and compile it on a CPU PJRT client.
+    pub fn load(path: &Path) -> Result<CompiledKernel> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let name = path
+            .file_stem()
+            .ok_or_else(|| anyhow!("artifact path {} has no file stem", path.display()))?
+            .to_string_lossy()
+            .into_owned();
+        Ok(CompiledKernel { client, exe, name })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with literal inputs; returns the unpacked 1-tuple result
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn execute1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// Diffusion stepper backed by the AOT Pallas kernel (one Eq-4.3 step
+/// per call).
+pub struct PjrtStepper {
+    kernel: CompiledKernel,
+    resolution: usize,
+}
+
+impl PjrtStepper {
+    /// Resolve, load and compile the right `diffusion_r{R}` artifact
+    /// for `grid`'s resolution.
+    pub fn for_grid(artifacts_dir: &str, grid: &DiffusionGrid) -> Result<PjrtStepper> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let r = grid.resolution() as u64;
+        let entry = manifest
+            .find("diffusion", &[("r", r)])
+            .ok_or_else(|| anyhow!("no diffusion artifact for r={r}"))?;
+        let kernel = CompiledKernel::load(&manifest.path_of(entry))?;
+        Ok(PjrtStepper {
+            kernel,
+            resolution: grid.resolution(),
+        })
+    }
+
+    pub fn kernel_name(&self) -> &str {
+        &self.kernel.name
+    }
+}
+
+impl DiffusionStepper for PjrtStepper {
+    fn step(&mut self, grid: &mut DiffusionGrid, _pool: &ThreadPool) {
+        assert_eq!(grid.resolution(), self.resolution);
+        let r = self.resolution as i64;
+        let data = grid.snapshot_f32();
+        // `DiffusionStepper::step` is infallible by contract; a PJRT
+        // execution failure mid-run has no recovery that keeps the grid
+        // consistent, so the honest response is a panic — which the
+        // multi-tenant service (PR 9) quarantines into a typed
+        // TenantError::Panicked instead of taking the process down.
+        // DETLINT: allow(unwrap) infallible trait contract; the panic is quarantined
+        let u = xla::Literal::vec1(&data).reshape(&[r, r, r]).expect("reshape grid");
+        let coef = xla::Literal::vec1(&grid.kernel_coefficients()[..]);
+        // DETLINT: allow(unwrap) infallible trait contract; the panic is quarantined
+        let out = self.kernel.execute1(&[u, coef]).expect("diffusion kernel execution");
+        // DETLINT: allow(unwrap) infallible trait contract; the panic is quarantined
+        let values: Vec<f32> = out.to_vec().expect("kernel output to_vec");
+        grid.load_f32(&values);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Collision-force kernel wrapper (force_b{B}_k{K} artifacts) —
+/// exercised by the integration tests and the perf comparison; the
+/// engine's default force path stays native (the gather/scatter around
+/// a CPU PJRT call dominates for this op — see EXPERIMENTS.md §Perf).
+pub struct ForceKernel {
+    kernel: CompiledKernel,
+    pub batch: usize,
+    pub neighbors: usize,
+}
+
+impl ForceKernel {
+    pub fn load(artifacts_dir: &str, batch: usize, neighbors: usize) -> Result<ForceKernel> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest
+            .find("force", &[("b", batch as u64), ("k", neighbors as u64)])
+            .ok_or_else(|| anyhow!("no force artifact for b={batch} k={neighbors}"))?;
+        let kernel = CompiledKernel::load(&manifest.path_of(entry))?;
+        Ok(ForceKernel {
+            kernel,
+            batch,
+            neighbors,
+        })
+    }
+
+    /// Compute forces for a padded batch. Slices are f32 rows:
+    /// pos[B*3], radius[B], npos[B*K*3], nradius[B*K], nmask[B*K].
+    /// params = [repulsion_k, attraction_gamma]. Returns force[B*3].
+    pub fn execute(
+        &self,
+        pos: &[f32],
+        radius: &[f32],
+        npos: &[f32],
+        nradius: &[f32],
+        nmask: &[f32],
+        params: [f32; 2],
+    ) -> Result<Vec<f32>> {
+        let (b, k) = (self.batch as i64, self.neighbors as i64);
+        let inputs = [
+            xla::Literal::vec1(pos).reshape(&[b, 3])?,
+            xla::Literal::vec1(radius),
+            xla::Literal::vec1(npos).reshape(&[b, k, 3])?,
+            xla::Literal::vec1(nradius).reshape(&[b, k])?,
+            xla::Literal::vec1(nmask).reshape(&[b, k])?,
+            xla::Literal::vec1(&params[..]),
+        ];
+        let out = self.kernel.execute1(&inputs)?;
+        Ok(out.to_vec()?)
+    }
+}
+
+/// Locate the artifacts directory for tests/benches: `TA_ARTIFACTS`
+/// env var, else `artifacts/` relative to the crate root.
+pub fn default_artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("TA_ARTIFACTS") {
+        return d;
+    }
+    let candidates = ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")];
+    for c in candidates {
+        if Path::new(c).join("manifest.txt").exists() {
+            return c.to_string();
+        }
+    }
+    "artifacts".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = default_artifacts_dir();
+        if Path::new(&dir).join("manifest.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping PJRT test: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+
+    fn load_str(name: &str, content: &str) -> Result<Manifest, ManifestError> {
+        let tmp = std::env::temp_dir().join(format!("ta_manifest_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.txt"), content).unwrap();
+        Manifest::load(tmp.to_str().unwrap())
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        let e = m.find("diffusion", &[("r", 16)]).expect("r16 artifact");
+        assert!(m.path_of(e).exists());
+        assert!(e.vmem_bytes > 0);
+        assert!(m.find("diffusion", &[("r", 999)]).is_none());
+    }
+
+    #[test]
+    fn manifest_malformed_rejected() {
+        assert!(matches!(
+            load_str("bad", "bad line no pipes\n"),
+            Err(ManifestError::Malformed { line_no: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn manifest_bad_param_value_names_line() {
+        // the old parser mapped `r=1b` to r=0 silently; it must now be
+        // a typed error carrying the line number and text
+        let text = "diffusion_r16|diffusion|r=16|f32[16,16,16]|vmem=1024\n\
+                    diffusion_r32|diffusion|r=3b|f32[32,32,32]|vmem=2048\n";
+        match load_str("badparam", text) {
+            Err(ManifestError::Malformed {
+                line_no,
+                line,
+                reason,
+            }) => {
+                assert_eq!(line_no, 2);
+                assert!(line.contains("diffusion_r32"), "{line}");
+                assert!(reason.contains('r') && reason.contains("3b"), "{reason}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_bad_vmem_names_line() {
+        // old parser: `vmem=?` -> 0; missing prefix -> 0
+        for bad in [
+            "force_b256_k16|force|b=256,k=16|f32[256,3]|vmem=?\n",
+            "force_b256_k16|force|b=256,k=16|f32[256,3]|1024\n",
+        ] {
+            match load_str("badvmem", bad) {
+                Err(ManifestError::Malformed { line_no, reason, .. }) => {
+                    assert_eq!(line_no, 1);
+                    assert!(reason.contains("vmem"), "{reason}");
+                }
+                other => panic!("expected Malformed for {bad:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_param_without_equals_rejected() {
+        let text = "diffusion_r16|diffusion|r16|f32[16,16,16]|vmem=1024\n";
+        match load_str("noeq", text) {
+            Err(ManifestError::Malformed { reason, .. }) => {
+                assert!(reason.contains("key=value"), "{reason}");
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_good_lines_and_empty_params_pass() {
+        let text = "\n  \ninit|init||f32[1]|vmem=0\n\
+                    diffusion_r16|diffusion|r=16|f32[16,16,16]|vmem=1024\n";
+        let m = load_str("good", text).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.entries[0].params.is_empty());
+        assert_eq!(m.entries[1].params.get("r"), Some(&16));
+        assert_eq!(m.entries[1].vmem_bytes, 1024);
+    }
+
+    #[test]
+    fn manifest_missing_file_is_io_error() {
+        let err = Manifest::load("/nonexistent_dir_teraagent/artifacts").unwrap_err();
+        assert!(matches!(err, ManifestError::Io { .. }));
+        // the error formats with the path so it is actionable
+        assert!(err.to_string().contains("manifest.txt"));
+    }
+
+    #[test]
+    fn pjrt_diffusion_matches_native() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = ThreadPool::new(1);
+        let mk = || {
+            let g = DiffusionGrid::new("s", 0, 16, 0.0, 15.0, 1.0, 0.1, 0.1);
+            g.set(8, 8, 8, 1.0);
+            g.set(3, 4, 5, 0.5);
+            g
+        };
+        let mut native = mk();
+        let mut pjrt_grid = mk();
+        let mut stepper = PjrtStepper::for_grid(&dir, &pjrt_grid).unwrap();
+        assert!(stepper.kernel_name().contains("diffusion_r16"));
+        for _ in 0..3 {
+            native.step_native(&pool);
+            stepper.step(&mut pjrt_grid, &pool);
+        }
+        // f32 kernel vs f64 native: compare loosely
+        for z in 0..16 {
+            for y in 0..16 {
+                for x in 0..16 {
+                    let a = native.get(x, y, z);
+                    let b = pjrt_grid.get(x, y, z);
+                    assert!((a - b).abs() < 1e-5, "({x},{y},{z}): native={a} pjrt={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn force_kernel_matches_native_force() {
+        let Some(dir) = artifacts_dir() else { return };
+        let fk = match ForceKernel::load(&dir, 256, 16) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        let b = 256;
+        let k = 16;
+        // one real pair in slot 0, rest masked out
+        let mut pos = vec![0.0f32; b * 3];
+        let mut radius = vec![1.0f32; b];
+        let mut npos = vec![0.0f32; b * k * 3];
+        let mut nradius = vec![1.0f32; b * k];
+        let mut nmask = vec![0.0f32; b * k];
+        radius[0] = 5.0;
+        pos[0] = 0.0;
+        npos[0] = 6.0; // neighbor at x=6
+        nradius[0] = 5.0;
+        nmask[0] = 1.0;
+        let out = fk
+            .execute(&pos, &radius, &npos, &nradius, &nmask, [2.0, 1.0])
+            .unwrap();
+        // native force for comparison
+        let f = crate::physics::force::DefaultForce::new(2.0, 1.0);
+        let m = f.magnitude(5.0, 5.0, 6.0);
+        let expected_x = -m; // pushed to -x
+        assert!(
+            (out[0] as f64 - expected_x).abs() < 1e-4,
+            "kernel {} vs native {}",
+            out[0],
+            expected_x
+        );
+        assert!(out[3..].iter().all(|v| v.abs() < 1e-6));
+    }
+}

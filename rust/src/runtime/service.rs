@@ -1,0 +1,1061 @@
+//! `SimService` — a fault-isolated, multi-tenant simulation service.
+//!
+//! The north star ("millions of users") means many concurrent
+//! *simulations*, not just many agents. This module is the in-process
+//! mirror of the distributed supervisor (PR 8): N independent
+//! [`Simulation`] tenants run over one shared [`ThreadPool`] with
+//! slice-based cooperative scheduling, and each tenant gets a fault
+//! isolation contract:
+//!
+//! * **Panic quarantine** — a tenant behavior/operation that panics is
+//!   caught with `catch_unwind` inside the worker closure and converted
+//!   into a typed [`TenantError::Panicked`]; co-tenants never observe
+//!   it. (Catching *inside* the worker is mandatory: the pool stores a
+//!   worker panic and re-raises it on the caller, which would take the
+//!   whole service down.)
+//! * **Checkpointed recovery** — tenants checkpoint in memory every
+//!   `svc_checkpoint_freq` iterations through the v2 TERABKP byte
+//!   path ([`backup::write_to`] / [`backup::read_from`]); a quarantined
+//!   tenant is rebuilt from its builder, restored from the last
+//!   checkpoint (or replayed from iteration 0 when there is none) and
+//!   retried with deterministic exponential backoff, bounded by
+//!   `svc_max_restarts`, then parked as [`TenantError::Failed`].
+//! * **Deadline budgets** — per-tenant `svc_iteration_budget` (counts
+//!   *executed* iterations, including recovery replay, so it is exactly
+//!   reproducible) and `svc_deadline_op_ms` (op time accounted via
+//!   [`OpTimers::total_nanos`], checked at slice boundaries only)
+//!   suspend over-budget tenants with [`TenantError::DeadlineExceeded`].
+//! * **Admission control** — `svc_max_tenants` seats plus a bounded
+//!   `svc_max_queued` wait queue; beyond that, `submit` sheds load with
+//!   [`TenantError::Rejected`] instead of queueing unboundedly.
+//!
+//! Knob split: *scheduling* knobs (`svc_threads`, `svc_max_tenants`,
+//! `svc_max_queued`, `svc_slice_iterations`) are read from the
+//! **service** [`Param`]; *fault-policy* knobs (`svc_max_restarts`,
+//! `svc_checkpoint_freq`, `svc_iteration_budget`, `svc_deadline_op_ms`)
+//! are read from each **tenant's** [`Param`], so co-tenants can carry
+//! different budgets.
+//!
+//! Determinism contract: the service introduces no new randomness and
+//! reads no wall clock (backoff is round-based, op budgets reuse the
+//! scheduler's own timers). Because every tenant owns its RNG streams
+//! (counter-based on `(seed, uid, iteration)`) and its UID space
+//! (per-`ResourceManager` counters), a tenant's trajectory is bitwise
+//! identical whether it runs solo, co-scheduled, or replayed through a
+//! checkpoint restore.
+//!
+//! [`OpTimers::total_nanos`]: crate::core::scheduler::OpTimers::total_nanos
+
+use crate::core::backup;
+use crate::core::parallel::ThreadPool;
+use crate::core::param::Param;
+use crate::core::simulation::Simulation;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard};
+
+/// Builds one tenant simulation from its [`Param`]. Called once at
+/// admission and again after every quarantined fault (the rebuilt
+/// population is then overwritten by the checkpoint restore, which
+/// also re-attaches behaviors from the fresh population's per-type
+/// templates — so builders must attach uniform behavior lists per
+/// agent type, the same contract file-based backup/restore has).
+pub type TenantBuilder = Box<dyn Fn(Param) -> Simulation + Send>;
+
+/// Index of a tenant within its service; returned by
+/// [`SimService::submit`] and used with [`SimService::take`].
+pub type TenantId = usize;
+
+/// Which deadline budget a suspended tenant exceeded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlineBudget {
+    /// `svc_iteration_budget`: executed iterations (including recovery
+    /// replay) reached the limit — exactly reproducible.
+    Iterations { limit: u64 },
+    /// `svc_deadline_op_ms`: accumulated op time crossed the limit.
+    /// Machine-dependent by nature; checked at slice boundaries only,
+    /// so a tenant is never suspended mid-iteration.
+    OpMillis { limit_ms: u64, used_ms: u64 },
+}
+
+/// Typed tenant outcome — the service never lets a tenant fault escape
+/// as a raw panic or an untyped string.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TenantError {
+    /// A behavior/operation panicked; the tenant was quarantined at
+    /// `iteration` with the extracted panic `message`. Non-terminal
+    /// until the restart budget is exhausted (see [`TenantError::Failed`]).
+    Panicked { iteration: u64, message: String },
+    /// A deadline budget ran out; the tenant was suspended
+    /// deterministically at a slice boundary. Terminal (suspension is
+    /// a policy decision, not a fault — restarting would just re-spend
+    /// the budget).
+    DeadlineExceeded {
+        iteration: u64,
+        executed: u64,
+        budget: DeadlineBudget,
+    },
+    /// Rebuild-and-restore after a fault failed (corrupt checkpoint
+    /// image or builder/restore mismatch). Counts against the restart
+    /// budget like a panic.
+    RestoreFailed { iteration: u64, error: String },
+    /// The restart budget (`svc_max_restarts`) is exhausted: the
+    /// tenant is parked with its fault history. `attempts` is the
+    /// number of restarts performed before giving up.
+    Failed {
+        attempts: u64,
+        last: Box<TenantError>,
+    },
+    /// Admission control shed this submission: all `svc_max_tenants`
+    /// seats and all `svc_max_queued` queue slots were occupied.
+    Rejected { active: usize, queued: usize },
+}
+
+impl std::fmt::Display for TenantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TenantError::Panicked { iteration, message } => {
+                write!(f, "tenant panicked at iteration {iteration}: {message}")
+            }
+            TenantError::DeadlineExceeded {
+                iteration,
+                executed,
+                budget,
+            } => match budget {
+                DeadlineBudget::Iterations { limit } => write!(
+                    f,
+                    "tenant exceeded its iteration budget ({limit}) at iteration \
+                     {iteration} after executing {executed} iterations"
+                ),
+                DeadlineBudget::OpMillis { limit_ms, used_ms } => write!(
+                    f,
+                    "tenant exceeded its op-time budget ({limit_ms} ms; used \
+                     {used_ms} ms) at iteration {iteration} after executing \
+                     {executed} iterations"
+                ),
+            },
+            TenantError::RestoreFailed { iteration, error } => {
+                write!(f, "tenant restore from checkpoint@{iteration} failed: {error}")
+            }
+            TenantError::Failed { attempts, last } => {
+                write!(f, "tenant failed permanently after {attempts} restarts: {last}")
+            }
+            TenantError::Rejected { active, queued } => write!(
+                f,
+                "tenant rejected by admission control ({active} active, {queued} queued)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TenantError {}
+
+/// Public tenant lifecycle state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TenantState {
+    /// Admitted but waiting for a seat.
+    Queued,
+    /// Seated: scheduled every round (possibly in backoff).
+    Running,
+    /// Reached its iteration target or halted itself; the finished
+    /// simulation is available via [`SimService::take`].
+    Done,
+    /// Terminal typed failure.
+    Errored(TenantError),
+}
+
+/// Result of one slice, handed from the worker to the coordinator.
+enum SliceOutcome {
+    /// Stepped; still running.
+    Progress,
+    /// Reached the target or halted.
+    Done,
+    /// Quarantined fault (panic or restore failure) — subject to the
+    /// restart policy.
+    Fault(TenantError),
+    /// Deadline suspension — terminal.
+    Suspended(TenantError),
+}
+
+/// Counters and per-slice op-time samples, for tests, observability
+/// and the `service_throughput` bench.
+#[derive(Debug, Default, Clone)]
+pub struct ServiceStats {
+    /// `submit` calls, including rejected ones.
+    pub submitted: u64,
+    /// Submissions shed by admission control.
+    pub rejected: u64,
+    /// Tenants that reached `Done`.
+    pub completed: u64,
+    /// Quarantined panics (every occurrence, including retries).
+    pub panics: u64,
+    /// Restarts scheduled after quarantined faults.
+    pub restarts: u64,
+    /// Tenants suspended over a deadline budget.
+    pub deadline_suspensions: u64,
+    /// Tenants parked after exhausting the restart budget.
+    pub failed: u64,
+    /// Scheduling rounds executed by `run`.
+    pub rounds: u64,
+    /// Slices that performed work (stepped at least zero iterations of
+    /// a live simulation; boundary-only suspension checks not counted).
+    pub slices: u64,
+    /// Op-time nanoseconds of each counted slice, in drain order —
+    /// the p99 of this series is the bench headline.
+    pub slice_nanos: Vec<u64>,
+}
+
+impl ServiceStats {
+    /// p99 of the recorded per-slice op times (0 when empty).
+    pub fn p99_slice_nanos(&self) -> u64 {
+        if self.slice_nanos.is_empty() {
+            return 0;
+        }
+        let mut v = self.slice_nanos.clone();
+        v.sort_unstable();
+        v[(v.len() - 1) * 99 / 100]
+    }
+}
+
+struct TenantSlot {
+    builder: TenantBuilder,
+    param: Param,
+    /// Requested iteration target.
+    target: u64,
+    /// The live simulation; `None` while quarantined (awaiting
+    /// rebuild) or after a terminal fault.
+    sim: Option<Box<Simulation>>,
+    state: TenantState,
+    /// Restarts performed so far.
+    attempts: u64,
+    /// Earliest round this tenant may run again (exponential backoff).
+    ready_round: u64,
+    /// Last in-memory checkpoint (TERABKP v2 image) and its iteration.
+    checkpoint: Option<Vec<u8>>,
+    checkpoint_iteration: u64,
+    /// Iterations executed, including recovery replay.
+    executed: u64,
+    /// Accumulated op-time across slices and rebuilds.
+    op_nanos: u64,
+    /// Op-time of the last slice (worker → coordinator hand-off).
+    last_slice_nanos: u64,
+    /// Slice result awaiting the coordinator.
+    outcome: Option<SliceOutcome>,
+}
+
+impl TenantSlot {
+    /// Run one slice of up to `slice_k` iterations. Called on a pool
+    /// worker with the slot lock held; all faults are converted to an
+    /// outcome — this function never panics for tenant-attributable
+    /// causes.
+    fn run_slice(&mut self, slice_k: u64) {
+        self.last_slice_nanos = 0;
+        // (Re)build after admission or quarantine. The builder itself
+        // runs under `catch_unwind` too: a builder panic is a tenant
+        // fault, not a service fault.
+        if self.sim.is_none() {
+            let param = self.param.clone();
+            let builder = &self.builder;
+            let built = catch_unwind(AssertUnwindSafe(|| builder(param)));
+            let mut sim = match built {
+                Ok(sim) => Box::new(sim),
+                Err(payload) => {
+                    self.outcome = Some(SliceOutcome::Fault(TenantError::Panicked {
+                        iteration: 0,
+                        message: panic_message(payload.as_ref()),
+                    }));
+                    return;
+                }
+            };
+            if let Some(image) = &self.checkpoint {
+                // deserialize_batch resolves agent factories through
+                // the registry; make sure the builtins are present
+                crate::distributed::serialize::AgentRegistry::register_builtins();
+                if let Err(e) = backup::read_from(&mut sim, image) {
+                    self.outcome = Some(SliceOutcome::Fault(TenantError::RestoreFailed {
+                        iteration: self.checkpoint_iteration,
+                        error: e.to_string(),
+                    }));
+                    return;
+                }
+            }
+            self.sim = Some(sim);
+        }
+        let target = self.target;
+        let iter_budget = self.param.svc_iteration_budget;
+        let op_budget_ms = self.param.svc_deadline_op_ms;
+        let freq = self.param.svc_checkpoint_freq;
+        let sim = match self.sim.as_mut() {
+            Some(sim) => sim,
+            None => return,
+        };
+
+        // Budget checks happen at the slice boundary, before stepping.
+        let mut k = slice_k.min(target.saturating_sub(sim.iteration));
+        if iter_budget > 0 {
+            k = k.min(iter_budget.saturating_sub(self.executed));
+            if k == 0 && sim.iteration < target {
+                let err = TenantError::DeadlineExceeded {
+                    iteration: sim.iteration,
+                    executed: self.executed,
+                    budget: DeadlineBudget::Iterations { limit: iter_budget },
+                };
+                self.sim = None;
+                self.outcome = Some(SliceOutcome::Suspended(err));
+                return;
+            }
+        }
+        if op_budget_ms > 0 && self.op_nanos / 1_000_000 >= op_budget_ms {
+            let err = TenantError::DeadlineExceeded {
+                iteration: sim.iteration,
+                executed: self.executed,
+                budget: DeadlineBudget::OpMillis {
+                    limit_ms: op_budget_ms,
+                    used_ms: self.op_nanos / 1_000_000,
+                },
+            };
+            self.sim = None;
+            self.outcome = Some(SliceOutcome::Suspended(err));
+            return;
+        }
+
+        let start_iteration = sim.iteration;
+        let start_nanos = sim.timers.total_nanos();
+        let stepped = catch_unwind(AssertUnwindSafe(|| {
+            for _ in 0..k {
+                if sim.halt.is_some() {
+                    break;
+                }
+                sim.step();
+            }
+        }));
+        let advanced = sim.iteration.saturating_sub(start_iteration);
+        let spent = sim.timers.total_nanos().saturating_sub(start_nanos);
+        self.executed += advanced;
+        self.op_nanos += spent;
+        self.last_slice_nanos = spent;
+        match stepped {
+            Ok(()) => {
+                if sim.halt.is_some() || sim.iteration >= target {
+                    self.outcome = Some(SliceOutcome::Done);
+                    return;
+                }
+                if freq > 0 && sim.iteration.saturating_sub(self.checkpoint_iteration) >= freq
+                {
+                    self.checkpoint = Some(backup::write_to(sim));
+                    self.checkpoint_iteration = sim.iteration;
+                }
+                self.outcome = Some(SliceOutcome::Progress);
+            }
+            Err(payload) => {
+                // Quarantine: the simulation may be mid-iteration, so
+                // it is discarded; recovery rebuilds from the builder
+                // and restores the last checkpoint.
+                let at = sim.iteration;
+                self.sim = None;
+                self.outcome = Some(SliceOutcome::Fault(TenantError::Panicked {
+                    iteration: at,
+                    message: panic_message(payload.as_ref()),
+                }));
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The multi-tenant simulation service (see module docs).
+pub struct SimService {
+    param: Param,
+    pool: ThreadPool,
+    slots: Vec<Mutex<TenantSlot>>,
+    /// Seated tenants, in admission order.
+    active: Vec<TenantId>,
+    /// Admitted tenants waiting for a seat, in admission order.
+    queued: VecDeque<TenantId>,
+    round: u64,
+    stats: ServiceStats,
+}
+
+impl SimService {
+    /// Build a service whose scheduling pool has `svc_threads` workers
+    /// (0 = the service param's `num_threads`). Each *tenant* still
+    /// owns an inner pool sized by its own param; size tenants at 1
+    /// thread when the service pool provides the parallelism.
+    pub fn new(param: Param) -> Self {
+        let threads = if param.svc_threads > 0 {
+            param.svc_threads as usize
+        } else {
+            param.num_threads
+        };
+        SimService {
+            param,
+            pool: ThreadPool::new(threads),
+            slots: Vec::new(),
+            active: Vec::new(),
+            queued: VecDeque::new(),
+            round: 0,
+            stats: ServiceStats::default(),
+        }
+    }
+
+    fn max_active(&self) -> usize {
+        if self.param.svc_max_tenants == 0 {
+            usize::MAX
+        } else {
+            self.param.svc_max_tenants as usize
+        }
+    }
+
+    fn lock_slot(&self, id: TenantId) -> MutexGuard<'_, TenantSlot> {
+        // A poisoned slot mutex means a *service* bug escaped the
+        // quarantine (tenant panics are caught inside run_slice); the
+        // slot data is still the most recent coherent hand-off, so
+        // recover rather than cascade.
+        self.slots[id].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Admit a tenant: seat it if a seat is free, queue it if the
+    /// bounded queue has room, otherwise shed it with
+    /// [`TenantError::Rejected`]. `iterations` is the run target; the
+    /// tenant's fault-policy knobs travel in its `param`.
+    pub fn submit(
+        &mut self,
+        builder: TenantBuilder,
+        param: Param,
+        iterations: u64,
+    ) -> Result<TenantId, TenantError> {
+        self.stats.submitted += 1;
+        let state = if self.active.len() < self.max_active() {
+            TenantState::Running
+        } else if (self.queued.len() as u64) < self.param.svc_max_queued {
+            TenantState::Queued
+        } else {
+            self.stats.rejected += 1;
+            return Err(TenantError::Rejected {
+                active: self.active.len(),
+                queued: self.queued.len(),
+            });
+        };
+        let id = self.slots.len();
+        match state {
+            TenantState::Running => self.active.push(id),
+            _ => self.queued.push_back(id),
+        }
+        self.slots.push(Mutex::new(TenantSlot {
+            builder,
+            param,
+            target: iterations,
+            sim: None,
+            state,
+            attempts: 0,
+            ready_round: 0,
+            checkpoint: None,
+            checkpoint_iteration: 0,
+            executed: 0,
+            op_nanos: 0,
+            last_slice_nanos: 0,
+            outcome: None,
+        }));
+        Ok(id)
+    }
+
+    /// Current lifecycle state of a tenant (None for unknown ids).
+    pub fn state(&self, id: TenantId) -> Option<TenantState> {
+        if id >= self.slots.len() {
+            return None;
+        }
+        Some(self.lock_slot(id).state.clone())
+    }
+
+    /// Service counters (valid after or during `run`).
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    /// Take a finished tenant's result: `Ok(Simulation)` once for a
+    /// `Done` tenant (subsequent calls return None), `Err` (repeatable)
+    /// for a terminally failed one, `None` for unknown, unfinished or
+    /// already-taken tenants.
+    pub fn take(&mut self, id: TenantId) -> Option<Result<Simulation, TenantError>> {
+        if id >= self.slots.len() {
+            return None;
+        }
+        let mut slot = self.lock_slot(id);
+        match &slot.state {
+            TenantState::Done => slot.sim.take().map(|b| Ok(*b)),
+            TenantState::Errored(e) => Some(Err(e.clone())),
+            _ => None,
+        }
+    }
+
+    /// Drive every admitted tenant to a terminal state (`Done` or
+    /// `Errored`). Never panics for tenant-attributable causes and
+    /// provably terminates: every non-faulted slice of a seated tenant
+    /// advances its simulation or retires it, faults are bounded by
+    /// `svc_max_restarts`, backoff is bounded by 2^6 rounds, and the
+    /// queue is bounded and only drains.
+    pub fn run(&mut self) {
+        loop {
+            // Promote queued tenants into free seats, admission order.
+            while self.active.len() < self.max_active() {
+                match self.queued.pop_front() {
+                    Some(id) => {
+                        self.lock_slot(id).state = TenantState::Running;
+                        self.active.push(id);
+                    }
+                    None => break,
+                }
+            }
+            if self.active.is_empty() {
+                break;
+            }
+            self.round += 1;
+            self.stats.rounds += 1;
+            let round = self.round;
+            let ready: Vec<TenantId> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| self.lock_slot(id).ready_round <= round)
+                .collect();
+            let slice_k = self.param.svc_slice_iterations.max(1);
+            if !ready.is_empty() {
+                let slots = &self.slots;
+                let ready_ref = &ready;
+                self.pool.parallel_for_chunks(0..ready.len(), 1, |chunk, _worker| {
+                    for i in chunk {
+                        let id = ready_ref[i];
+                        let mut slot =
+                            slots[id].lock().unwrap_or_else(|e| e.into_inner());
+                        slot.run_slice(slice_k);
+                    }
+                });
+            }
+            // Drain outcomes serially in admission order so stats and
+            // restart decisions are deterministic.
+            for &id in &ready {
+                self.apply_outcome(id, round);
+            }
+            let slots = &self.slots;
+            self.active.retain(|&id| {
+                let slot = slots[id].lock().unwrap_or_else(|e| e.into_inner());
+                matches!(slot.state, TenantState::Running)
+            });
+        }
+    }
+
+    fn apply_outcome(&mut self, id: TenantId, round: u64) {
+        // Field-precise borrow (self.slots only) so self.stats stays
+        // mutable while the guard is held.
+        let mut slot = self.slots[id].lock().unwrap_or_else(|e| e.into_inner());
+        let max_restarts = slot.param.svc_max_restarts;
+        let outcome = match slot.outcome.take() {
+            Some(o) => o,
+            None => return,
+        };
+        match outcome {
+            SliceOutcome::Progress => {
+                self.stats.slices += 1;
+                self.stats.slice_nanos.push(slot.last_slice_nanos);
+            }
+            SliceOutcome::Done => {
+                self.stats.slices += 1;
+                self.stats.slice_nanos.push(slot.last_slice_nanos);
+                self.stats.completed += 1;
+                slot.state = TenantState::Done;
+            }
+            SliceOutcome::Suspended(err) => {
+                self.stats.deadline_suspensions += 1;
+                slot.state = TenantState::Errored(err);
+            }
+            SliceOutcome::Fault(err) => {
+                if matches!(err, TenantError::Panicked { .. }) {
+                    self.stats.panics += 1;
+                    self.stats.slices += 1;
+                    self.stats.slice_nanos.push(slot.last_slice_nanos);
+                }
+                if slot.attempts < max_restarts {
+                    slot.attempts += 1;
+                    // Deterministic exponential backoff in *rounds*
+                    // (no wall clock): 2, 4, 8, ... capped at 2^6.
+                    let exp = slot.attempts.min(6) as u32;
+                    slot.ready_round = round + (1u64 << exp);
+                    self.stats.restarts += 1;
+                } else {
+                    let attempts = slot.attempts;
+                    slot.state = TenantState::Errored(TenantError::Failed {
+                        attempts,
+                        last: Box::new(err),
+                    });
+                    self.stats.failed += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::behavior::FnBehavior;
+    use crate::core::operation::{StandaloneOperation, StandalonePhase};
+    use crate::Real3;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    /// Small RNG-driven model: agents jiggle by a deterministic
+    /// counter-based draw each iteration. Mechanical forces removed to
+    /// keep tenants cheap and purely trajectory-deterministic.
+    fn build_jiggle(param: Param, n: usize) -> Simulation {
+        let mut sim = Simulation::new(param);
+        sim.remove_agent_op("mechanical_forces");
+        for i in 0..n {
+            let mut a = SphericalAgent::new(Real3::new(i as f64 * 10.0, 0.0, 0.0));
+            a.base.behaviors.push(FnBehavior::new("jiggle", |a, ctx| {
+                let step = ctx.rng.uniform3(-1.0, 1.0);
+                let p = a.position();
+                a.set_position(p + step);
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        sim
+    }
+
+    fn jiggle_builder(n: usize) -> TenantBuilder {
+        Box::new(move |p: Param| build_jiggle(p, n))
+    }
+
+    fn tenant_param(seed: u64) -> Param {
+        let mut p = Param::default();
+        p.num_threads = 1;
+        p.seed = seed;
+        p
+    }
+
+    fn service_param(threads: u64) -> Param {
+        let mut p = Param::default();
+        p.svc_threads = threads;
+        p.svc_slice_iterations = 4;
+        p
+    }
+
+    fn snapshot(sim: &Simulation) -> Vec<(u64, [f64; 3], f64)> {
+        let mut out = Vec::new();
+        sim.rm
+            .for_each_agent(|_h, a| out.push((a.uid(), a.position().0, a.diameter())));
+        out.sort_by_key(|e| e.0);
+        out
+    }
+
+    fn solo_snapshot(seed: u64, n: usize, iterations: u64) -> Vec<(u64, [f64; 3], f64)> {
+        let mut sim = build_jiggle(tenant_param(seed), n);
+        sim.simulate(iterations);
+        snapshot(&sim)
+    }
+
+    /// Behavior panicking once, the first time any agent reaches
+    /// iteration `at` — fires during the service run, already spent by
+    /// the time a reference run or a restarted tenant replays. Attached
+    /// to *every* agent so per-type behavior templates stay uniform
+    /// (the checkpoint-restore re-attachment contract).
+    fn one_shot_panic_builder(n: usize, at: u64, latch: &Arc<AtomicBool>) -> TenantBuilder {
+        let latch = Arc::clone(latch);
+        Box::new(move |p: Param| {
+            let mut sim = build_jiggle(p, n);
+            let latch = Arc::clone(&latch);
+            let handles: Vec<_> = sim.rm.handles().to_vec();
+            for h in handles {
+                let latch = Arc::clone(&latch);
+                sim.rm.get_mut(h).base_mut().behaviors.push(FnBehavior::new(
+                    "one_shot_panic",
+                    move |_a, ctx| {
+                        if ctx.shared.iteration == at && !latch.swap(true, Ordering::SeqCst) {
+                            panic!("injected one-shot fault");
+                        }
+                    },
+                ));
+            }
+            sim
+        })
+    }
+
+    /// Behavior panicking every time iteration `at` is reached — every
+    /// restart replays into the same fault, exhausting the budget.
+    fn always_panic_builder(n: usize, at: u64) -> TenantBuilder {
+        Box::new(move |p: Param| {
+            let mut sim = build_jiggle(p, n);
+            let handles: Vec<_> = sim.rm.handles().to_vec();
+            for h in handles {
+                sim.rm.get_mut(h).base_mut().behaviors.push(FnBehavior::new(
+                    "always_panic",
+                    move |_a, ctx| {
+                        if ctx.shared.iteration == at {
+                            panic!("injected persistent fault");
+                        }
+                    },
+                ));
+            }
+            sim
+        })
+    }
+
+    #[test]
+    fn healthy_tenants_match_solo_runs_bitwise() {
+        for threads in [1u64, 2, 8] {
+            let mut svc = SimService::new(service_param(threads));
+            let seeds = [101u64, 202, 303];
+            let ids: Vec<TenantId> = seeds
+                .iter()
+                .map(|&s| {
+                    svc.submit(jiggle_builder(12), tenant_param(s), 20)
+                        .unwrap()
+                })
+                .collect();
+            svc.run();
+            for (&id, &seed) in ids.iter().zip(&seeds) {
+                let sim = match svc.take(id) {
+                    Some(Ok(sim)) => sim,
+                    other => panic!("tenant {id} not Done: {other:?}"),
+                };
+                assert_eq!(sim.iteration, 20);
+                assert_eq!(
+                    snapshot(&sim),
+                    solo_snapshot(seed, 12, 20),
+                    "tenant seed {seed} at {threads} service threads"
+                );
+            }
+            assert_eq!(svc.stats().completed, 3);
+            assert_eq!(svc.stats().panics, 0);
+        }
+    }
+
+    #[test]
+    fn panicking_tenant_is_quarantined_and_co_tenant_unperturbed() {
+        let mut p = service_param(2);
+        p.svc_slice_iterations = 4;
+        let mut svc = SimService::new(p);
+        let healthy = svc
+            .submit(jiggle_builder(10), tenant_param(42), 24)
+            .unwrap();
+        let mut crasher_param = tenant_param(43);
+        crasher_param.svc_max_restarts = 2;
+        let crasher = svc
+            .submit(always_panic_builder(6, 7), crasher_param, 24)
+            .unwrap();
+        svc.run();
+
+        let sim = match svc.take(healthy) {
+            Some(Ok(sim)) => sim,
+            other => panic!("healthy tenant not Done: {other:?}"),
+        };
+        assert_eq!(snapshot(&sim), solo_snapshot(42, 10, 24));
+
+        match svc.take(crasher) {
+            Some(Err(TenantError::Failed { attempts, last })) => {
+                assert_eq!(attempts, 2);
+                match *last {
+                    TenantError::Panicked { iteration, ref message } => {
+                        assert_eq!(iteration, 7);
+                        assert!(message.contains("injected persistent fault"), "{message}");
+                    }
+                    other => panic!("unexpected last error: {other:?}"),
+                }
+            }
+            other => panic!("crasher not parked as Failed: {other:?}"),
+        }
+        // initial run + 2 restarts, each hitting the fault once
+        assert_eq!(svc.stats().panics, 3);
+        assert_eq!(svc.stats().restarts, 2);
+        assert_eq!(svc.stats().failed, 1);
+        assert_eq!(svc.stats().completed, 1);
+    }
+
+    /// Satellite 3: a tenant that crashes once and is restored from an
+    /// in-memory checkpoint must end bitwise identical to a run that
+    /// never crashed — with checkpoints (restore + replay) and without
+    /// (full replay from iteration 0).
+    #[test]
+    fn recovered_tenant_matches_uninterrupted_run_bitwise() {
+        for checkpoint_freq in [5u64, 0] {
+            let latch = Arc::new(AtomicBool::new(false));
+            let builder = one_shot_panic_builder(8, 9, &latch);
+            let mut p = tenant_param(77);
+            p.svc_checkpoint_freq = checkpoint_freq;
+            let mut svc = SimService::new(service_param(2));
+            let id = svc.submit(builder, p.clone(), 30).unwrap();
+            svc.run();
+            let sim = match svc.take(id) {
+                Some(Ok(sim)) => sim,
+                other => panic!("tenant not Done (freq {checkpoint_freq}): {other:?}"),
+            };
+            assert_eq!(svc.stats().panics, 1);
+            assert_eq!(svc.stats().restarts, 1);
+
+            // Reference: same builder, latch already spent — an
+            // uninterrupted run of the same model and seed.
+            let reference = one_shot_panic_builder(8, 9, &latch);
+            let mut ref_sim = reference(p);
+            ref_sim.simulate(30);
+            assert_eq!(
+                snapshot(&sim),
+                snapshot(&ref_sim),
+                "restored tenant must match the uninterrupted run (freq {checkpoint_freq})"
+            );
+        }
+    }
+
+    #[test]
+    fn iteration_budget_suspends_deterministically() {
+        let mut p = tenant_param(5);
+        p.svc_iteration_budget = 10;
+        let mut svc = SimService::new(service_param(1));
+        let id = svc.submit(jiggle_builder(4), p, 50).unwrap();
+        svc.run();
+        match svc.take(id) {
+            Some(Err(TenantError::DeadlineExceeded {
+                iteration,
+                executed,
+                budget,
+            })) => {
+                assert_eq!(iteration, 10);
+                assert_eq!(executed, 10);
+                assert_eq!(budget, DeadlineBudget::Iterations { limit: 10 });
+            }
+            other => panic!("expected iteration-budget suspension: {other:?}"),
+        }
+        assert_eq!(svc.stats().deadline_suspensions, 1);
+        assert_eq!(svc.stats().completed, 0);
+    }
+
+    #[test]
+    fn op_time_budget_suspends() {
+        // Busy behavior burning real op time so the 1 ms budget is
+        // guaranteed to trip long before the (huge) iteration target.
+        let builder: TenantBuilder = Box::new(|p: Param| {
+            let mut sim = Simulation::new(p);
+            sim.remove_agent_op("mechanical_forces");
+            for i in 0..8 {
+                let mut a = SphericalAgent::new(Real3::new(i as f64 * 10.0, 0.0, 0.0));
+                a.base.behaviors.push(FnBehavior::new("busy", |_a, _ctx| {
+                    let mut x = 1.000001f64;
+                    for _ in 0..200_000 {
+                        x = std::hint::black_box(x * 1.000001);
+                    }
+                }));
+                sim.add_agent(Box::new(a));
+            }
+            sim
+        });
+        let mut p = tenant_param(6);
+        p.svc_deadline_op_ms = 1;
+        let mut svc = SimService::new(service_param(1));
+        let id = svc.submit(builder, p, 1_000_000).unwrap();
+        svc.run();
+        match svc.take(id) {
+            Some(Err(TenantError::DeadlineExceeded { budget, .. })) => match budget {
+                DeadlineBudget::OpMillis { limit_ms, used_ms } => {
+                    assert_eq!(limit_ms, 1);
+                    assert!(used_ms >= 1, "suspension below the budget: {used_ms}");
+                }
+                other => panic!("wrong budget kind: {other:?}"),
+            },
+            other => panic!("expected op-time suspension: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_control_sheds_typed_and_queue_drains() {
+        let mut p = service_param(2);
+        p.svc_max_tenants = 2;
+        p.svc_max_queued = 1;
+        let mut svc = SimService::new(p);
+        let a = svc.submit(jiggle_builder(4), tenant_param(1), 8).unwrap();
+        let b = svc.submit(jiggle_builder(4), tenant_param(2), 8).unwrap();
+        let c = svc.submit(jiggle_builder(4), tenant_param(3), 8).unwrap();
+        assert_eq!(svc.state(c), Some(TenantState::Queued));
+        match svc.submit(jiggle_builder(4), tenant_param(4), 8) {
+            Err(TenantError::Rejected { active, queued }) => {
+                assert_eq!(active, 2);
+                assert_eq!(queued, 1);
+            }
+            other => panic!("expected admission shed: {other:?}"),
+        }
+        assert_eq!(svc.stats().rejected, 1);
+        assert_eq!(svc.stats().submitted, 4);
+        svc.run();
+        for (id, seed) in [(a, 1u64), (b, 2), (c, 3)] {
+            let sim = match svc.take(id) {
+                Some(Ok(sim)) => sim,
+                other => panic!("tenant {id} not Done: {other:?}"),
+            };
+            assert_eq!(snapshot(&sim), solo_snapshot(seed, 4, 8));
+        }
+        assert_eq!(svc.stats().completed, 3);
+    }
+
+    struct HaltOp {
+        at: u64,
+    }
+    impl StandaloneOperation for HaltOp {
+        fn name(&self) -> &'static str {
+            "halt_op"
+        }
+        fn frequency(&self) -> u64 {
+            1
+        }
+        fn phase(&self) -> StandalonePhase {
+            StandalonePhase::Post
+        }
+        fn run(&mut self, sim: &mut Simulation) {
+            if sim.iteration == self.at {
+                sim.halt = Some("test halt".to_string());
+            }
+        }
+    }
+
+    #[test]
+    fn halted_tenant_retires_as_done() {
+        let builder: TenantBuilder = Box::new(|p: Param| {
+            let mut sim = build_jiggle(p, 4);
+            sim.add_standalone_op(Box::new(HaltOp { at: 3 }));
+            sim
+        });
+        let mut svc = SimService::new(service_param(1));
+        let id = svc.submit(builder, tenant_param(9), 100).unwrap();
+        svc.run();
+        let sim = match svc.take(id) {
+            Some(Ok(sim)) => sim,
+            other => panic!("halted tenant not Done: {other:?}"),
+        };
+        assert_eq!(sim.halt.as_deref(), Some("test halt"));
+        // halt is set during iteration 3 (post phase runs before the
+        // increment) and observed at the next loop check
+        assert_eq!(sim.iteration, 4);
+        // second take: the simulation is gone
+        assert!(svc.take(id).is_none());
+    }
+
+    #[test]
+    fn empty_service_run_returns_immediately() {
+        let mut svc = SimService::new(service_param(2));
+        svc.run();
+        assert_eq!(svc.stats().rounds, 0);
+        assert!(svc.take(0).is_none());
+        assert!(svc.state(0).is_none());
+    }
+
+    /// Acceptance criterion: a seeded fault storm — panickers,
+    /// deadline busters, restart-budget exhaustion — at 1/2/8 service
+    /// threads. Every healthy or recovered tenant finishes bitwise
+    /// identical to its solo run; every faulted tenant ends in a typed
+    /// terminal state; the service returns (no hang, no abort).
+    #[test]
+    fn fault_storm_isolation_at_1_2_8_threads() {
+        for threads in [1u64, 2, 8] {
+            let mut sp = service_param(threads);
+            sp.svc_slice_iterations = 4;
+            let mut svc = SimService::new(sp);
+
+            // healthy tenants with distinct seeds
+            let healthy: Vec<(TenantId, u64)> = [11u64, 22, 33]
+                .iter()
+                .map(|&s| {
+                    (
+                        svc.submit(jiggle_builder(8), tenant_param(s), 25).unwrap(),
+                        s,
+                    )
+                })
+                .collect();
+
+            // one-shot panicker with checkpoints: recovers via restore
+            let latch_cp = Arc::new(AtomicBool::new(false));
+            let mut p = tenant_param(44);
+            p.svc_checkpoint_freq = 5;
+            let recover_cp = svc
+                .submit(one_shot_panic_builder(6, 9, &latch_cp), p.clone(), 25)
+                .unwrap();
+            let recover_cp_param = p;
+
+            // one-shot panicker without checkpoints: recovers via replay
+            let latch_replay = Arc::new(AtomicBool::new(false));
+            let p = tenant_param(55);
+            let recover_replay = svc
+                .submit(one_shot_panic_builder(6, 6, &latch_replay), p.clone(), 25)
+                .unwrap();
+            let recover_replay_param = p;
+
+            // persistent panicker: exhausts the restart budget
+            let mut p = tenant_param(66);
+            p.svc_max_restarts = 1;
+            let doomed = svc.submit(always_panic_builder(5, 4), p, 25).unwrap();
+
+            // deadline buster: iteration budget far below the target
+            let mut p = tenant_param(88);
+            p.svc_iteration_budget = 6;
+            let buster = svc.submit(jiggle_builder(5), p, 400).unwrap();
+
+            svc.run();
+
+            for &(id, seed) in &healthy {
+                let sim = match svc.take(id) {
+                    Some(Ok(sim)) => sim,
+                    other => panic!("[{threads}t] healthy tenant {id} not Done: {other:?}"),
+                };
+                assert_eq!(
+                    snapshot(&sim),
+                    solo_snapshot(seed, 8, 25),
+                    "[{threads}t] healthy tenant seed {seed} perturbed"
+                );
+            }
+            for (id, latch, param, n) in [
+                (recover_cp, &latch_cp, recover_cp_param, 6usize),
+                (recover_replay, &latch_replay, recover_replay_param, 6),
+            ] {
+                let sim = match svc.take(id) {
+                    Some(Ok(sim)) => sim,
+                    other => panic!("[{threads}t] recovered tenant {id} not Done: {other:?}"),
+                };
+                assert!(latch.load(Ordering::SeqCst), "[{threads}t] fault never fired");
+                let reference = one_shot_panic_builder(n, 9, latch);
+                let mut ref_sim = reference(param);
+                ref_sim.simulate(25);
+                assert_eq!(
+                    snapshot(&sim),
+                    snapshot(&ref_sim),
+                    "[{threads}t] recovered tenant {id} diverged"
+                );
+            }
+            match svc.take(doomed) {
+                Some(Err(TenantError::Failed { attempts, last })) => {
+                    assert_eq!(attempts, 1, "[{threads}t]");
+                    assert!(matches!(*last, TenantError::Panicked { .. }), "[{threads}t]");
+                }
+                other => panic!("[{threads}t] doomed tenant not Failed: {other:?}"),
+            }
+            match svc.take(buster) {
+                Some(Err(TenantError::DeadlineExceeded { executed, .. })) => {
+                    assert_eq!(executed, 6, "[{threads}t]");
+                }
+                other => panic!("[{threads}t] buster not suspended: {other:?}"),
+            }
+            let stats = svc.stats();
+            assert_eq!(stats.completed, 5, "[{threads}t]");
+            assert_eq!(stats.failed, 1, "[{threads}t]");
+            assert_eq!(stats.deadline_suspensions, 1, "[{threads}t]");
+            // one-shot panickers fire once each; the doomed tenant
+            // panics on the initial run and one retry
+            assert_eq!(stats.panics, 4, "[{threads}t]");
+            assert!(stats.slices > 0 && !stats.slice_nanos.is_empty(), "[{threads}t]");
+        }
+    }
+}
