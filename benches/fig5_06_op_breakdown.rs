@@ -18,8 +18,14 @@
 //! back to the full rebuild, so the row must not regress. Rows:
 //! `inc={off,on}:moved={frac}:environment_update`.
 //!
+//! PR 10 adds the telemetry-overhead sweep: the cell-growth workload
+//! stepped with the span tracer off and on (every scheduler op and
+//! iteration traced). The `telemetry overhead` rows feed the CI gate
+//! asserting `tel_on_off_ratio < 1.03` — tracing must stay under 3%
+//! and must not change the trajectory (asserted bitwise here).
+//!
 //! Workloads honor `TA_BENCH_SCALE`; `TA_BENCH_JSON` archives the
-//! rows (BENCH_PR3.json and BENCH_PR4.json in CI).
+//! rows (BENCH_PR3.json, BENCH_PR4.json and BENCH_PR10.json in CI).
 
 use teraagent::benchkit::*;
 use teraagent::core::agent::SphericalAgent;
@@ -148,10 +154,82 @@ fn env_update_sweep(report: &mut JsonReport) {
     table.print();
 }
 
+/// PR 10: span-tracer overhead on the Fig 5.6 cell-growth workload.
+/// Telemetry on must (a) leave the trajectory bitwise unchanged and
+/// (b) cost under 3% of wall time — CI asserts the `tel_on_off_ratio`
+/// row archived in BENCH_PR10.json. The workload is deliberately
+/// *not* `TA_BENCH_SCALE`-scaled: a percentage gate needs a stable
+/// denominator, not a configurable one.
+fn telemetry_overhead(report: &mut JsonReport) {
+    let iters: u64 = 30;
+    let run = |tel: bool| -> teraagent::Simulation {
+        let mut p = Param::default();
+        p.tel_enabled = tel;
+        // large enough that no span is ever dropped during the run
+        p.tel_ring_capacity = 1 << 16;
+        let mut sim = cell_growth::build(p, &cell_growth::CellGrowthParams {
+            cells_per_dim: 6,
+            ..Default::default()
+        });
+        sim.simulate(iters);
+        sim
+    };
+    let positions = |sim: &teraagent::Simulation| -> Vec<(u64, [f64; 3])> {
+        let mut out = Vec::new();
+        sim.rm
+            .for_each_agent(|_h, a| out.push((a.uid(), a.position().0)));
+        out.sort_by_key(|e| e.0);
+        out
+    };
+    // the determinism contract first: tracing must not change results
+    let traced = run(true);
+    assert_eq!(
+        positions(&run(false)),
+        positions(&traced),
+        "telemetry changed the simulation trajectory"
+    );
+    assert!(
+        !traced.tel.events().is_empty(),
+        "traced run recorded no spans — overhead sweep would be vacuous"
+    );
+    drop(traced);
+    let secs = |tel: bool| -> f64 {
+        median(time_reps(7, 2, || {
+            run(tel);
+        }))
+        .as_secs_f64()
+    };
+    let off = secs(false);
+    let on = secs(true);
+    let ratio = on / off;
+    let mut table = BenchTable::new(
+        &format!("Fig 5.6 (PR 10): telemetry overhead, cell growth 6^3 start, {iters} iters"),
+        &["config", "median wall", "per iteration", "on/off"],
+    );
+    table.row(&[
+        "tel=off".to_string(),
+        format!("{:.3} ms", off * 1e3),
+        format!("{:.4} ms", off * 1e3 / iters as f64),
+        "1.000".to_string(),
+    ]);
+    table.row(&[
+        "tel=on".to_string(),
+        format!("{:.3} ms", on * 1e3),
+        format!("{:.4} ms", on * 1e3 / iters as f64),
+        format!("{ratio:.3}"),
+    ]);
+    table.print();
+    report.row("telemetry overhead", "tel_off", off / iters as f64);
+    report.row("telemetry overhead", "tel_on", on / iters as f64);
+    // not a per-iteration time, but the gate metric CI consumes
+    report.row("telemetry overhead", "tel_on_off_ratio", ratio);
+}
+
 fn main() {
     print_env_banner("fig5_06_op_breakdown");
     let mut report = JsonReport::new("fig5_06_op_breakdown");
     env_update_sweep(&mut report);
+    telemetry_overhead(&mut report);
     let cells_per_dim = scaled(10, 4).min(10);
     breakdown(
         "cell growth & division",

@@ -131,6 +131,58 @@ fn main() {
         ]);
     }
     table.print();
+
+    // PR 10 cross-check: the supervisor's trace instants must agree
+    // with the stats this bench prices. A dedicated traced run (so the
+    // timed rows above stay tracer-free): the `supervisor_recovery`
+    // instant carries the recovery latency in ns as its arg, and both
+    // failure and recovery instants must be present on the supervisor
+    // lane.
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut traced_param = param(5);
+    traced_param.tel_enabled = true;
+    let mut sup = Supervisor::new(Box::new(builder), traced_param, ranks, 1)
+        .with_backoff_base(std::time::Duration::from_millis(1));
+    sup.script_kill(ranks - 1, kill_at);
+    sup.run(iterations).unwrap();
+    let stats = sup.stats();
+    let events = sup.telemetry().events();
+    let failures: Vec<_> = events
+        .iter()
+        .filter(|e| e.name == "supervisor_failure")
+        .collect();
+    let recoveries: Vec<_> = events
+        .iter()
+        .filter(|e| e.name == "supervisor_recovery")
+        .collect();
+    assert_eq!(
+        failures.len(),
+        stats.failures as usize,
+        "one supervisor_failure instant per detected failure"
+    );
+    assert_eq!(
+        recoveries.len(),
+        stats.recoveries as usize,
+        "one supervisor_recovery instant per recovery"
+    );
+    assert_eq!(stats.recoveries, 1, "expected exactly one recovery");
+    assert_eq!(
+        recoveries[0].arg,
+        stats.last_recovery_latency.as_nanos() as u64,
+        "supervisor_recovery instant arg disagrees with last_recovery_latency"
+    );
+    let engine = sup.finish().unwrap();
+    assert_eq!(
+        engine.state_snapshot(),
+        expect,
+        "tracing the supervisor changed the results"
+    );
+    println!(
+        "PR 10: supervisor trace instants agree with SupervisorStats \
+         (recovery latency {} ns on the supervisor lane)",
+        recoveries[0].arg
+    );
+
     report.write_if_requested();
     let _ = std::fs::remove_dir_all(&dir);
     println!(

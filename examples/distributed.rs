@@ -40,6 +40,13 @@
 //!     cargo run --release --example distributed -- --restore
 //!     cargo run --release --example distributed -- --supervise --kill-rank 1@7 \
 //!         --faults 7 --fault-kind drop --checkpoint-freq 5
+//!
+//! With `--trace-out PATH` (PR 10) the plain and supervised scenarios
+//! additionally run with the span tracer enabled (`tel_enabled`) and
+//! write a Chrome-tracing JSON (one process row per rank, plus the
+//! supervisor's lane under `--supervise`) to PATH and a flat metrics
+//! snapshot to PATH.metrics.txt — tracing never changes the results,
+//! and the example asserts so.
 
 use teraagent::core::math::Real3;
 use teraagent::core::param::{ExecutionContextMode, Param};
@@ -65,8 +72,7 @@ fn param() -> Param {
     p
 }
 
-fn run_in_process() {
-    let iterations = 30;
+fn run_in_process(iterations: u64, trace_out: Option<&str>) {
     let builder = |p: Param| build(p, &model());
 
     println!("shared-memory reference run...");
@@ -115,6 +121,34 @@ fn run_in_process() {
     println!(
         "\nOK: distributed == shared-memory for all rank counts, execution modes\n\
          (threaded / sequential) and aura encodings (paper Fig 6.5)"
+    );
+
+    if let Some(path) = trace_out {
+        println!("\ntraced 2-rank run (tel_enabled)...");
+        let mut p = param();
+        p.tel_enabled = true;
+        let mut engine = DistributedEngine::new(&builder, p, 2, 1);
+        engine.simulate(iterations).unwrap();
+        assert!(
+            engine.state_snapshot() == expect,
+            "tracing changed the results (tel on != tel off)"
+        );
+        write_trace(path, &engine.chrome_trace(), &engine.metrics().render());
+    }
+}
+
+/// Write the Chrome trace to `path` and the metrics snapshot next to
+/// it (`path.metrics.txt`), creating the parent directory if needed.
+fn write_trace(path: &str, trace_json: &str, metrics: &str) {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(path, trace_json).expect("write trace");
+    let metrics_path = format!("{path}.metrics.txt");
+    std::fs::write(&metrics_path, metrics).expect("write metrics");
+    println!(
+        "  trace -> {path} ({} bytes), metrics -> {metrics_path}",
+        trace_json.len()
     );
 }
 
@@ -344,6 +378,7 @@ fn run_supervised(
     restore: bool,
     faults: Option<(u64, &str)>,
     kills: &[(usize, u64)],
+    trace_out: Option<&str>,
 ) {
     use teraagent::core::random::mix;
     use teraagent::distributed::fault::{FaultyTransport, ReliableTransport};
@@ -369,6 +404,9 @@ fn run_supervised(
     p.dist_heartbeat_ms = 2_000;
     p.dist_recv_timeout_ms = 5_000;
     p.dist_superstep_deadline_ms = 30_000;
+    // tracing on when asked for — the bitwise check below doubles as
+    // the tel on == off proof for the supervised path
+    p.tel_enabled = trace_out.is_some();
 
     println!(
         "supervised {ranks}-rank run: {iterations} supersteps, checkpoints every {freq} \
@@ -398,6 +436,12 @@ fn run_supervised(
     }
     let elapsed = t.elapsed();
     let stats = sup.stats();
+    // the supervisor lane must be captured before finish() consumes it
+    let sup_lane = (
+        sup.telemetry().lane().label(),
+        sup.telemetry().events(),
+        sup.telemetry().dropped_events(),
+    );
     let engine = sup.finish().unwrap_or_else(|e| {
         eprintln!("supervisor finish failed: {e}");
         std::process::exit(1);
@@ -434,6 +478,19 @@ fn run_supervised(
     let identical = engine.state_snapshot() == simulation_snapshot(&shared);
     println!("  identical to shared-memory reference: {identical}");
     assert!(identical, "supervised recovery changed the results");
+
+    if let Some(path) = trace_out {
+        // rank lanes of the surviving generation, plus the supervisor's
+        // failure/recovery instants (rings of failed generations died
+        // with their engines)
+        let mut trace = teraagent::telemetry::ChromeTrace::new();
+        for (label, events, dropped) in engine.trace_lanes() {
+            trace.add_lane(&label, events, dropped);
+        }
+        let (label, events, dropped) = sup_lane;
+        trace.add_lane(&label, events, dropped);
+        write_trace(path, &trace.render(), &engine.metrics().render());
+    }
 }
 
 fn main() {
@@ -454,6 +511,7 @@ fn main() {
     let mut fault_kind = "all".to_string();
     let mut supervise = false;
     let mut kills: Vec<(usize, u64)> = Vec::new();
+    let mut trace_out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -498,6 +556,10 @@ fn main() {
                 fault_kind = flag_value(&args, i).to_string();
             }
             "--supervise" => supervise = true,
+            "--trace-out" => {
+                i += 1;
+                trace_out = Some(flag_value(&args, i).to_string());
+            }
             "--kill-rank" => {
                 i += 1;
                 let spec = flag_value(&args, i);
@@ -528,6 +590,7 @@ fn main() {
             restore,
             faults,
             &kills,
+            trace_out.as_deref(),
         );
         return;
     }
@@ -544,6 +607,6 @@ fn main() {
     }
     match ranks {
         Some(r) => run_imbalanced_spheroid(r, balance, freq, &partitioner),
-        None => run_in_process(),
+        None => run_in_process(iterations, trace_out.as_deref()),
     }
 }

@@ -20,7 +20,11 @@
 //!
 //! Flags: `--tenants N` (8) `--iterations N` (40) `--threads N` (4)
 //! `--slice K` (4) `--checkpoint-freq N` (5) `--max-restarts N` (2)
-//! `--faults SEED` (0 = all healthy)
+//! `--faults SEED` (0 = all healthy) `--trace-out PATH` (off; PR 10 —
+//! enables the span tracer on the coordinator and every tenant and
+//! writes a Chrome-tracing JSON to PATH plus a flat metrics snapshot
+//! to PATH.metrics.txt; tracing never changes tenant trajectories, so
+//! the bitwise soak checks still gate)
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -119,6 +123,13 @@ fn arg(args: &[String], flag: &str, default: u64) -> u64 {
         .unwrap_or(default)
 }
 
+fn arg_str(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let tenants = arg(&args, "--tenants", 8) as usize;
@@ -128,6 +139,7 @@ fn main() {
     let checkpoint_freq = arg(&args, "--checkpoint-freq", 5);
     let max_restarts = arg(&args, "--max-restarts", 2);
     let fault_seed = arg(&args, "--faults", 0);
+    let trace_out = arg_str(&args, "--trace-out");
 
     // deterministic fault storm over the tenant population
     let mut storm = Rng::new(fault_seed.max(1));
@@ -154,6 +166,7 @@ fn main() {
     let mut service_param = Param::default();
     service_param.svc_threads = threads;
     service_param.svc_slice_iterations = slice;
+    service_param.tel_enabled = trace_out.is_some();
     let mut svc = SimService::new(service_param);
 
     let mut latches: Vec<Arc<AtomicBool>> = Vec::with_capacity(tenants);
@@ -165,6 +178,7 @@ fn main() {
         p.seed = 1000 + i as u64;
         p.svc_checkpoint_freq = checkpoint_freq;
         p.svc_max_restarts = max_restarts;
+        p.tel_enabled = trace_out.is_some();
         if plan == FaultPlan::DeadlineBuster {
             p.svc_iteration_budget = (iterations / 4).max(1);
         }
@@ -182,6 +196,22 @@ fn main() {
     let t0 = std::time::Instant::now();
     svc.run();
     let wall = t0.elapsed().as_secs_f64();
+
+    // export before take(): Done tenants surrender their simulations
+    // (and with them their trace lanes) to the outcome loop below
+    if let Some(path) = &trace_out {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let json = svc.chrome_trace();
+        std::fs::write(path, &json).expect("write trace");
+        let metrics_path = format!("{path}.metrics.txt");
+        std::fs::write(&metrics_path, svc.metrics().render()).expect("write metrics");
+        println!(
+            "trace -> {path} ({} bytes), metrics -> {metrics_path}",
+            json.len()
+        );
+    }
 
     println!("{:<8} {:<16} {:<10} outcome", "tenant", "plan", "state");
     let mut violations = 0usize;
@@ -222,7 +252,7 @@ fn main() {
     println!(
         "\n{} tenants in {wall:.3}s: {} completed, {} panics quarantined, \
          {} restarts, {} deadline suspensions, {} failed, {} rounds, {} slices \
-         (p99 slice op-time {:.3} ms)",
+         (slice op-time p50 {:.3} / p90 {:.3} / p99 {:.3} ms)",
         tenants,
         stats.completed,
         stats.panics,
@@ -231,6 +261,8 @@ fn main() {
         stats.failed,
         stats.rounds,
         stats.slices,
+        stats.p50_slice_nanos() as f64 / 1e6,
+        stats.p90_slice_nanos() as f64 / 1e6,
         stats.p99_slice_nanos() as f64 / 1e6,
     );
 

@@ -8,9 +8,12 @@
 use super::lexer::{contains_word, find_word};
 use super::{emit, FileCtx, LintReport, Rule};
 
-/// Files that exist to measure or to wait: benchmarking harness and
-/// transports (socket deadlines are I/O control flow, not sim logic).
+/// Files that exist to measure or to wait: the telemetry subsystem
+/// (PR 10 — every scheduler/engine clock read is routed through it),
+/// the benchmarking harness, and transports (socket deadlines are I/O
+/// control flow, not sim logic).
 const WHITELIST: &[&str] = &[
+    "telemetry/",
     "benchkit/",
     "benchkit.rs",
     "distributed/transport.rs",
@@ -213,6 +216,35 @@ fn deadline() -> Instant { Instant::now() }
         assert!(!fires("benchkit/mod.rs", src));
         // same code in core/ fires
         assert!(fires("core/fixture.rs", src));
+    }
+
+    #[test]
+    fn telemetry_module_is_exempt() {
+        // the span tracer is *defined* by reading the clock; the
+        // whitelist covers the whole module
+        let src = "\
+use std::time::Instant;
+pub fn begin() -> Instant { Instant::now() }
+";
+        assert!(!fires("telemetry/mod.rs", src));
+        assert!(!fires("telemetry/tracer.rs", src));
+    }
+
+    #[test]
+    fn clock_read_outside_a_telemetry_sink_still_fires() {
+        // routing clock reads through telemetry::begin/end must not
+        // loosen the rule anywhere else: a bare Instant::now feeding
+        // control flow in core/ is still flagged
+        let src = "\
+use std::time::Instant;
+fn adaptive(sim: &mut Sim) {
+    let t0 = Instant::now();
+    sim.step();
+    if t0.elapsed().as_secs() > 1 { sim.coarsen(); }
+}
+";
+        assert!(fires("core/fixture.rs", src));
+        assert!(fires("runtime/fixture.rs", src));
     }
 
     #[test]

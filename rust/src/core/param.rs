@@ -243,6 +243,19 @@ pub struct Param {
     /// Multi-tenant service: worker threads of the service's shared
     /// pool; `0` = use `num_threads`.
     pub svc_threads: u64,
+    /// Telemetry (PR 10): master switch for the span tracer. Off by
+    /// default; flipping it never changes simulation results — the
+    /// bitwise on ≡ off contract is verified by tests at 1/2/8 threads
+    /// and 1/2/4 ranks.
+    pub tel_enabled: bool,
+    /// Telemetry: per-lane ring-buffer capacity in events. A full ring
+    /// overwrites its oldest events (counted in `dropped_events`)
+    /// instead of blocking or reallocating.
+    pub tel_ring_capacity: u64,
+    /// Telemetry: record spans only every Nth iteration/superstep
+    /// (`1` = every iteration; `0` is treated as 1). Keyed on the
+    /// iteration counter, never on time.
+    pub tel_sample_stride: u64,
     /// Directory holding the AOT HLO artifacts.
     pub artifacts_dir: String,
     /// Export visualization data every N iterations; `0` disables.
@@ -299,6 +312,9 @@ impl Default for Param {
             svc_iteration_budget: 0,
             svc_deadline_op_ms: 0,
             svc_threads: 0,
+            tel_enabled: false,
+            tel_ring_capacity: 65_536,
+            tel_sample_stride: 1,
             artifacts_dir: "artifacts".to_string(),
             visualization_interval: 0,
             output_dir: "output".to_string(),
@@ -486,6 +502,13 @@ impl Param {
                 self.svc_deadline_op_ms = value.parse().map_err(|_| err(k, value))?
             }
             "svc_threads" => self.svc_threads = value.parse().map_err(|_| err(k, value))?,
+            "tel_enabled" => self.tel_enabled = value.parse().map_err(|_| err(k, value))?,
+            "tel_ring_capacity" => {
+                self.tel_ring_capacity = value.parse().map_err(|_| err(k, value))?
+            }
+            "tel_sample_stride" => {
+                self.tel_sample_stride = value.parse().map_err(|_| err(k, value))?
+            }
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "visualization_interval" => {
                 self.visualization_interval = value.parse().map_err(|_| err(k, value))?
@@ -627,6 +650,14 @@ mod tests {
         p.apply_kv("svc_iteration_budget", "1000").unwrap();
         p.apply_kv("svc_deadline_op_ms", "250").unwrap();
         p.apply_kv("svc_threads", "3").unwrap();
+        p.apply_kv("tel_enabled", "true").unwrap();
+        p.apply_kv("tel_ring_capacity", "1024").unwrap();
+        p.apply_kv("tel_sample_stride", "4").unwrap();
+        assert!(p.tel_enabled);
+        assert_eq!(p.tel_ring_capacity, 1024);
+        assert_eq!(p.tel_sample_stride, 4);
+        assert!(p.apply_kv("tel_enabled", "maybe").is_err());
+        assert!(p.apply_kv("tel_ring_capacity", "-3").is_err());
         assert_eq!(p.svc_max_tenants, 4);
         assert_eq!(p.svc_max_queued, 9);
         assert_eq!(p.svc_max_restarts, 2);

@@ -26,7 +26,12 @@
 //! the shared SoA columns, and the flip is a bitset swap.
 //!
 //! Every phase is timed into [`OpTimers`] — the data behind the
-//! operation-runtime-breakdown experiment (Fig 5.6).
+//! operation-runtime-breakdown experiment (Fig 5.6). The clock reads
+//! themselves go through [`crate::telemetry::Telemetry::begin`] /
+//! [`crate::telemetry::Telemetry::end`] (PR 10), which doubles as the
+//! span tracer: when tracing is enabled each phase also lands in the
+//! simulation's per-lane ring buffer, and `telemetry/` stays the only
+//! non-benchmark module reading the wall clock (detlint `wall-clock`).
 
 use crate::core::agent::AgentHandle;
 use crate::core::execution_context::{commit_queues, AgentContext, IterationShared, ThreadQueues};
@@ -36,7 +41,7 @@ use crate::core::random::Rng;
 use crate::core::simulation::Simulation;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Wall-clock accounting per operation.
 ///
@@ -107,36 +112,40 @@ pub fn execute_iteration(sim: &mut Simulation) {
     sim.rm.sync_columns_if_dirty(&sim.pool);
 
     // ---- 1. environment update --------------------------------------
-    let t = Instant::now();
+    let sp = sim.tel.begin("environment_update");
     sim.env.update(&sim.rm, &sim.pool);
-    sim.timers.record("environment_update", t.elapsed());
+    let elapsed = sim.tel.end(sp, sim.iteration);
+    sim.timers.record("environment_update", elapsed);
 
     // ---- 2. pre-standalone operations --------------------------------
     run_standalone(sim, StandalonePhase::Pre);
 
     // ---- 3. agent loop ------------------------------------------------
-    let t = Instant::now();
+    let sp = sim.tel.begin("agent_ops");
     sim.rm.conflict_prepare(); // arm the conflict-check owner tags
     run_agent_ops(sim);
-    sim.timers.record("agent_ops", t.elapsed());
+    let elapsed = sim.tel.end(sp, sim.iteration);
+    sim.timers.record("agent_ops", elapsed);
 
     // ---- 3b. pair-sweep force pass (PR 3) -----------------------------
     run_pair_sweep_ops(sim);
 
     // ---- 4. commit barrier ---------------------------------------------
-    let t = Instant::now();
+    let sp = sim.tel.begin("commit");
     let queues = std::mem::take(&mut sim.pending_queues);
     if queues.iter().any(|q| !q.is_empty()) {
         let (added, removed) = commit_queues(queues, &mut sim.rm, sim.iteration);
         sim.agents_added += added.len() as u64;
         sim.agents_removed += removed.len() as u64;
     }
-    sim.timers.record("commit", t.elapsed());
+    let elapsed = sim.tel.end(sp, sim.iteration);
+    sim.timers.record("commit", elapsed);
 
     // ---- 5. column writeback + flip moved flags (§5.5) -----------------
-    let t = Instant::now();
+    let sp = sim.tel.begin("flip_flags");
     sim.rm.writeback_and_flip(&sim.pool);
-    sim.timers.record("flip_flags", t.elapsed());
+    let elapsed = sim.tel.end(sp, sim.iteration);
+    sim.timers.record("flip_flags", elapsed);
 
     // ---- 6. post-standalone operations -----------------------------------
     run_standalone(sim, StandalonePhase::Post);
@@ -154,9 +163,10 @@ fn run_standalone(sim: &mut Simulation, phase: StandalonePhase) {
         if sim.iteration % freq != 0 {
             continue;
         }
-        let t = Instant::now();
+        let sp = sim.tel.begin(op.name());
         op.run(sim);
-        sim.timers.record(op.name(), t.elapsed());
+        let elapsed = sim.tel.end(sp, sim.iteration);
+        sim.timers.record(op.name(), elapsed);
     }
     // ops added during run() land in sim.standalone_ops; keep them
     ops.append(&mut sim.standalone_ops);
@@ -377,7 +387,7 @@ fn run_pair_sweep_ops(sim: &mut Simulation) {
             Some(m) => m,
             None => continue,
         };
-        let t = Instant::now();
+        let sp = sim.tel.begin("mechanical_forces");
         let mut scratch = sim.rm.take_sweep_scratch();
         let swept = {
             let grid = sim.env.pair_sweep_grid().expect("pair sweep armed");
@@ -387,7 +397,8 @@ fn run_pair_sweep_ops(sim: &mut Simulation) {
         if !swept {
             run_single_op_pass(sim, &**op);
         }
-        sim.timers.record("mechanical_forces", t.elapsed());
+        let elapsed = sim.tel.end(sp, sim.iteration);
+        sim.timers.record("mechanical_forces", elapsed);
     }
     // ops added meanwhile land in sim.agent_ops; keep them
     let mut ops = ops;

@@ -14,6 +14,7 @@ use crate::core::scheduler::{execute_iteration, OpTimers};
 use crate::core::agent::{Agent, AgentHandle};
 use crate::env::{create_environment, Environment};
 use crate::physics::diffusion::{DiffusionGrid, DiffusionStepper, NativeStepper, SubstanceRegistry};
+use crate::telemetry::Telemetry;
 use crate::Real;
 
 /// A complete agent-based simulation (paper Fig 4.1D: initialization +
@@ -37,6 +38,10 @@ pub struct Simulation {
     /// iteration boundary (e.g. `BackupFailurePolicy::Halt` when a
     /// checkpoint cannot be written); carries the reason.
     pub halt: Option<String>,
+    /// Span tracer (PR 10). Disabled by default; the scheduler routes
+    /// all of its wall-clock reads through it so that `telemetry/` is
+    /// the only non-benchmark module touching `Instant::now`.
+    pub tel: Telemetry,
 }
 
 impl Simulation {
@@ -78,6 +83,7 @@ impl Simulation {
                 frequency: param.visualization_interval,
             }));
         }
+        let tel = Telemetry::from_param(&param);
         Simulation {
             param,
             rm,
@@ -93,6 +99,7 @@ impl Simulation {
             agents_added: 0,
             agents_removed: 0,
             halt: None,
+            tel,
         }
     }
 

@@ -37,6 +37,7 @@ use crate::distributed::checkpoint;
 use crate::distributed::engine::{resolve_checkpoint_dir, DistributedEngine};
 use crate::distributed::transport::{InProcessTransport, Transport};
 use crate::distributed::DistError;
+use crate::telemetry::{Lane, Telemetry};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
@@ -163,6 +164,24 @@ pub struct Supervisor {
     max_recoveries: u64,
     checkpoint_base: PathBuf,
     stats: SupervisorStats,
+    /// The supervisor's own trace lane (PR 10): one instant per
+    /// observed failure and per completed recovery.
+    tel: Telemetry,
+}
+
+/// Classify a failure message into the trace-instant detail tag. The
+/// sources are the supervisor's own deadline message, the runner's
+/// panic wrapper, and [`DistError`] display strings.
+fn failure_kind(why: &str) -> &'static str {
+    if why.contains("deadline") {
+        "deadline"
+    } else if why.contains("heartbeat") || why.contains("desync") {
+        "heartbeat"
+    } else if why.contains("panic") {
+        "panic"
+    } else {
+        "transport"
+    }
 }
 
 impl Supervisor {
@@ -185,7 +204,10 @@ impl Supervisor {
             Duration::from_millis(param.dist_superstep_deadline_ms)
         };
         let recv_timeout = Duration::from_millis(param.dist_recv_timeout_ms.max(1));
+        let mut tel = Telemetry::from_param(&param);
+        tel.set_lane(Lane::Supervisor);
         Supervisor {
+            tel,
             checkpoint_base: resolve_checkpoint_dir(&param),
             max_recoveries: param.dist_max_recoveries,
             deadline,
@@ -229,6 +251,17 @@ impl Supervisor {
 
     pub fn stats(&self) -> SupervisorStats {
         self.stats.clone()
+    }
+
+    /// The supervisor's trace lane. Each failure shows up as a
+    /// `supervisor_failure` instant (detail = failure kind, iteration
+    /// = superstep the world line died at, arg = consecutive-failure
+    /// round feeding the backoff), each recovery as a
+    /// `supervisor_recovery` instant (iteration = restored epoch, arg
+    /// = rebuild-and-restore latency in nanoseconds — cross-checkable
+    /// against [`SupervisorStats::last_recovery_latency`]).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
     }
 
     /// The supervision generation: 0 initially, +1 per recovery.
@@ -314,8 +347,11 @@ impl Supervisor {
         wedged: bool,
         consecutive: &mut u32,
     ) -> Result<(), DistError> {
+        let lost_from = self.runner.as_ref().map(|r| r.iteration).unwrap_or(0);
         self.stats.failures += 1;
         self.stats.last_failure = Some(why.clone());
+        self.tel
+            .instant("supervisor_failure", failure_kind(&why), lost_from, *consecutive as u64);
         if self.stats.recoveries >= self.max_recoveries {
             self.discard_runner(wedged);
             return Err(DistError::Unrecoverable {
@@ -327,15 +363,21 @@ impl Supervisor {
         // busy disk) gets time to clear instead of being re-hit
         std::thread::sleep(self.backoff_base * 2u32.pow((*consecutive).min(6)));
         *consecutive += 1;
-        let lost_from = self.runner.as_ref().map(|r| r.iteration).unwrap_or(0);
         self.discard_runner(wedged);
         self.stats.recoveries += 1;
         self.generation += 1;
         let t0 = Instant::now();
         let engine = self.build_engine();
-        self.stats.supersteps_lost += lost_from.saturating_sub(engine.iteration);
+        let restored_epoch = engine.iteration;
+        self.stats.supersteps_lost += lost_from.saturating_sub(restored_epoch);
         self.runner = Some(spawn_runner(engine));
         self.stats.last_recovery_latency = t0.elapsed();
+        self.tel.instant(
+            "supervisor_recovery",
+            "rollback_restore",
+            restored_epoch,
+            self.stats.last_recovery_latency.as_nanos() as u64,
+        );
         Ok(())
     }
 
@@ -698,6 +740,43 @@ mod tests {
             "exhausted budget must fail fast, never hang"
         );
         assert!(sup.finish().is_err(), "no healthy engine after unrecoverable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn supervisor_lane_records_failure_and_recovery_instants() {
+        let (mut p, dir) = sup_param("tel");
+        p.tel_enabled = true;
+        let mut sup = Supervisor::new(Box::new(builder), p, 2, 1)
+            .with_backoff_base(Duration::from_millis(1));
+        sup.script_kill(1, 3);
+        sup.run(6).unwrap();
+        let stats = sup.stats();
+        let events = sup.telemetry().events();
+        let failures: Vec<_> = events
+            .iter()
+            .filter(|e| e.name == "supervisor_failure")
+            .collect();
+        let recoveries: Vec<_> = events
+            .iter()
+            .filter(|e| e.name == "supervisor_recovery")
+            .collect();
+        assert_eq!(failures.len() as u64, stats.failures);
+        assert_eq!(recoveries.len() as u64, stats.recoveries);
+        assert_eq!(failures[0].detail, "panic", "scripted kill panics the runner");
+        assert_eq!(
+            failures[0].iteration, 3,
+            "the world line died at superstep 3"
+        );
+        assert_eq!(
+            recoveries[0].arg,
+            stats.last_recovery_latency.as_nanos() as u64,
+            "trace instant and SupervisorStats must agree on the latency"
+        );
+        assert_eq!(
+            recoveries[0].iteration, 3,
+            "epoch 3 (checkpoint_freq 3) is the restore point"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -23,6 +23,8 @@
 //!   fault-isolated multi-tenant `SimService`
 //! * [`vis`]         — visualization export
 //! * [`analysis`]    — statistics, time series, ODE oracles
+//! * [`telemetry`]   — span tracing, metrics registry, Chrome-trace
+//!                     export; the only module allowed to read the wall clock
 //! * [`benchkit`]    — the custom bench harness used by `cargo bench`
 
 // Every unsafe operation must sit in an explicit `unsafe {}` block with
@@ -41,6 +43,7 @@ pub mod models;
 pub mod neuro;
 pub mod physics;
 pub mod runtime;
+pub mod telemetry;
 pub mod vis;
 
 pub use crate::core::math::Real3;

@@ -50,6 +50,7 @@ use crate::core::backup;
 use crate::core::parallel::ThreadPool;
 use crate::core::param::Param;
 use crate::core::simulation::Simulation;
+use crate::telemetry::{ChromeTrace, Histogram, Lane, MetricsRegistry, Telemetry};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Mutex, MutexGuard};
@@ -200,20 +201,43 @@ pub struct ServiceStats {
     /// Slices that performed work (stepped at least zero iterations of
     /// a live simulation; boundary-only suspension checks not counted).
     pub slices: u64,
-    /// Op-time nanoseconds of each counted slice, in drain order —
-    /// the p99 of this series is the bench headline.
+    /// Op-time nanoseconds of each counted slice, in drain order.
     pub slice_nanos: Vec<u64>,
+    /// The same samples as log2-bucket counts — what the percentile
+    /// accessors and the [`crate::telemetry::Collect`] export read.
+    slice_hist: Histogram,
 }
 
 impl ServiceStats {
-    /// p99 of the recorded per-slice op times (0 when empty).
+    /// Count one work slice: the raw sample, the histogram behind the
+    /// percentile accessors, and the `slices` counter.
+    pub fn record_slice(&mut self, nanos: u64) {
+        self.slices += 1;
+        self.slice_nanos.push(nanos);
+        self.slice_hist.observe(nanos);
+    }
+
+    /// Median per-slice op time (0 when empty), from the histogram.
+    pub fn p50_slice_nanos(&self) -> u64 {
+        self.slice_hist.percentile(0.50)
+    }
+
+    /// p90 of the recorded per-slice op times (0 when empty).
+    pub fn p90_slice_nanos(&self) -> u64 {
+        self.slice_hist.percentile(0.90)
+    }
+
+    /// p99 of the recorded per-slice op times (0 when empty) — the
+    /// bench headline. Bucket-resolution (upper edge of the log2
+    /// bucket, clamped to the observed min/max), not an exact order
+    /// statistic.
     pub fn p99_slice_nanos(&self) -> u64 {
-        if self.slice_nanos.is_empty() {
-            return 0;
-        }
-        let mut v = self.slice_nanos.clone();
-        v.sort_unstable();
-        v[(v.len() - 1) * 99 / 100]
+        self.slice_hist.percentile(0.99)
+    }
+
+    /// The per-slice op-time histogram itself.
+    pub fn slice_histogram(&self) -> &Histogram {
+        &self.slice_hist
     }
 }
 
@@ -247,8 +271,10 @@ impl TenantSlot {
     /// Run one slice of up to `slice_k` iterations. Called on a pool
     /// worker with the slot lock held; all faults are converted to an
     /// outcome — this function never panics for tenant-attributable
-    /// causes.
-    fn run_slice(&mut self, slice_k: u64) {
+    /// causes. `id` labels the tenant's trace lane; a quarantined
+    /// tenant's ring is discarded with its simulation (the service
+    /// counters persist across restarts, the spans do not).
+    fn run_slice(&mut self, slice_k: u64, id: TenantId) {
         self.last_slice_nanos = 0;
         // (Re)build after admission or quarantine. The builder itself
         // runs under `catch_unwind` too: a builder panic is a tenant
@@ -267,6 +293,7 @@ impl TenantSlot {
                     return;
                 }
             };
+            sim.tel.set_lane(Lane::Tenant(id as u64));
             if let Some(image) = &self.checkpoint {
                 // deserialize_batch resolves agent factories through
                 // the registry; make sure the builtins are present
@@ -321,6 +348,7 @@ impl TenantSlot {
 
         let start_iteration = sim.iteration;
         let start_nanos = sim.timers.total_nanos();
+        let slice_span = sim.tel.begin("tenant_slice");
         let stepped = catch_unwind(AssertUnwindSafe(|| {
             for _ in 0..k {
                 if sim.halt.is_some() {
@@ -329,6 +357,7 @@ impl TenantSlot {
                 sim.step();
             }
         }));
+        sim.tel.end(slice_span, start_iteration);
         let advanced = sim.iteration.saturating_sub(start_iteration);
         let spent = sim.timers.total_nanos().saturating_sub(start_nanos);
         self.executed += advanced;
@@ -383,6 +412,9 @@ pub struct SimService {
     queued: VecDeque<TenantId>,
     round: u64,
     stats: ServiceStats,
+    /// The coordinator's trace lane (PR 10): tenant lifecycle
+    /// instants — submissions, completions, restarts, suspensions.
+    tel: Telemetry,
 }
 
 impl SimService {
@@ -396,6 +428,7 @@ impl SimService {
         } else {
             param.num_threads
         };
+        let tel = Telemetry::from_param(&param);
         SimService {
             param,
             pool: ThreadPool::new(threads),
@@ -404,6 +437,7 @@ impl SimService {
             queued: VecDeque::new(),
             round: 0,
             stats: ServiceStats::default(),
+            tel,
         }
     }
 
@@ -440,12 +474,19 @@ impl SimService {
             TenantState::Queued
         } else {
             self.stats.rejected += 1;
+            self.tel
+                .instant("tenant_rejected", "admission_control", self.round, self.slots.len() as u64);
             return Err(TenantError::Rejected {
                 active: self.active.len(),
                 queued: self.queued.len(),
             });
         };
         let id = self.slots.len();
+        let detail = match state {
+            TenantState::Running => "seated",
+            _ => "queued",
+        };
+        self.tel.instant("tenant_submitted", detail, self.round, id as u64);
         match state {
             TenantState::Running => self.active.push(id),
             _ => self.queued.push_back(id),
@@ -536,7 +577,7 @@ impl SimService {
                         let id = ready_ref[i];
                         let mut slot =
                             slots[id].lock().unwrap_or_else(|e| e.into_inner());
-                        slot.run_slice(slice_k);
+                        slot.run_slice(slice_k, id);
                     }
                 });
             }
@@ -564,24 +605,23 @@ impl SimService {
         };
         match outcome {
             SliceOutcome::Progress => {
-                self.stats.slices += 1;
-                self.stats.slice_nanos.push(slot.last_slice_nanos);
+                self.stats.record_slice(slot.last_slice_nanos);
             }
             SliceOutcome::Done => {
-                self.stats.slices += 1;
-                self.stats.slice_nanos.push(slot.last_slice_nanos);
+                self.stats.record_slice(slot.last_slice_nanos);
                 self.stats.completed += 1;
                 slot.state = TenantState::Done;
+                self.tel.instant("tenant_done", "completed", round, id as u64);
             }
             SliceOutcome::Suspended(err) => {
                 self.stats.deadline_suspensions += 1;
                 slot.state = TenantState::Errored(err);
+                self.tel.instant("tenant_suspended", "deadline", round, id as u64);
             }
             SliceOutcome::Fault(err) => {
                 if matches!(err, TenantError::Panicked { .. }) {
                     self.stats.panics += 1;
-                    self.stats.slices += 1;
-                    self.stats.slice_nanos.push(slot.last_slice_nanos);
+                    self.stats.record_slice(slot.last_slice_nanos);
                 }
                 if slot.attempts < max_restarts {
                     slot.attempts += 1;
@@ -590,6 +630,7 @@ impl SimService {
                     let exp = slot.attempts.min(6) as u32;
                     slot.ready_round = round + (1u64 << exp);
                     self.stats.restarts += 1;
+                    self.tel.instant("tenant_restart", "quarantine", round, id as u64);
                 } else {
                     let attempts = slot.attempts;
                     slot.state = TenantState::Errored(TenantError::Failed {
@@ -597,9 +638,43 @@ impl SimService {
                         last: Box::new(err),
                     });
                     self.stats.failed += 1;
+                    self.tel.instant("tenant_failed", "budget_exhausted", round, id as u64);
                 }
             }
         }
+    }
+
+    /// Chrome-tracing JSON: the coordinator's lifecycle lane plus one
+    /// lane per tenant that still holds its simulation (`Done` tenants
+    /// keep theirs until [`SimService::take`]; quarantined/failed ones
+    /// lost theirs with the fault).
+    pub fn chrome_trace(&self) -> String {
+        let mut trace = ChromeTrace::new();
+        trace.add_lane(
+            &self.tel.lane().label(),
+            self.tel.events(),
+            self.tel.dropped_events(),
+        );
+        for slot in &self.slots {
+            let slot = slot.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(sim) = &slot.sim {
+                trace.add_lane(
+                    &sim.tel.lane().label(),
+                    sim.tel.events(),
+                    sim.tel.dropped_events(),
+                );
+            }
+        }
+        trace.render()
+    }
+
+    /// Flat metrics snapshot of the service counters and the slice
+    /// histogram.
+    pub fn metrics(&self) -> MetricsRegistry {
+        use crate::telemetry::Collect;
+        let mut reg = MetricsRegistry::new();
+        self.stats.collect("svc", &mut reg);
+        reg
     }
 }
 
@@ -1057,5 +1132,75 @@ mod tests {
             assert_eq!(stats.panics, 4, "[{threads}t]");
             assert!(stats.slices > 0 && !stats.slice_nanos.is_empty(), "[{threads}t]");
         }
+    }
+
+    #[test]
+    fn slice_percentiles_derive_from_histogram_and_trace_exports() {
+        let mut sp = service_param(2);
+        sp.tel_enabled = true;
+        let mut svc = SimService::new(sp);
+        for t in 0..3u64 {
+            let mut p = tenant_param(100 + t);
+            p.tel_enabled = true;
+            svc.submit(jiggle_builder(8), p, 12).unwrap();
+        }
+        svc.run();
+        let stats = svc.stats().clone();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.slice_nanos.len() as u64, stats.slices);
+        assert_eq!(stats.slice_histogram().count(), stats.slices);
+        assert!(stats.p50_slice_nanos() <= stats.p90_slice_nanos());
+        assert!(stats.p90_slice_nanos() <= stats.p99_slice_nanos());
+        assert_eq!(
+            stats.p99_slice_nanos(),
+            stats.slice_histogram().percentile(0.99),
+            "the accessor is the histogram percentile, nothing bespoke"
+        );
+        // the log2-bucket p99 brackets the exact order statistic: it is
+        // an upper bucket edge clamped to the observed [min, max]
+        let mut exact = stats.slice_nanos.clone();
+        exact.sort_unstable();
+        let exact_p99 = exact[(exact.len() - 1) * 99 / 100];
+        assert!(
+            stats.p99_slice_nanos() >= exact_p99,
+            "bucket edge {} below exact p99 {exact_p99}",
+            stats.p99_slice_nanos()
+        );
+
+        // the trace holds the coordinator lane plus one lane per
+        // finished (not-yet-taken) tenant, and round-trips the parser
+        let json = svc.chrome_trace();
+        let doc = crate::telemetry::parse_json(&json).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let lane_names: Vec<String> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter_map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    .map(str::to_string)
+            })
+            .collect();
+        for want in ["main", "tenant 0", "tenant 1", "tenant 2"] {
+            assert!(lane_names.iter().any(|n| n == want), "missing lane {want}");
+        }
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("tenant_slice")
+                    && e.get("ph").and_then(|p| p.as_str()) == Some("X")
+            }),
+            "tenant slices must appear as complete spans"
+        );
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("tenant_done")
+                    && e.get("ph").and_then(|p| p.as_str()) == Some("i")
+            }),
+            "lifecycle instants must appear on the coordinator lane"
+        );
+        let metrics = svc.metrics().render();
+        assert!(metrics.contains("svc.completed 3"), "{metrics}");
+        assert!(metrics.contains("svc.slice_nanos.p99"), "{metrics}");
     }
 }

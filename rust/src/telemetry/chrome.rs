@@ -1,0 +1,455 @@
+//! Chrome `chrome://tracing` JSON exporter, plus a minimal JSON reader
+//! used by the round-trip tests.
+//!
+//! Output format: `{"traceEvents": [...]}` in the Trace Event Format —
+//! `"X"` complete spans (`ts`/`dur` in microseconds), `"i"` instants,
+//! one `"M"` `process_name` metadata record per lane (so ranks,
+//! tenants and the supervisor each get their own named track), and a
+//! `"C"` counter for events lost to ring wraparound. Load the file in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use super::tracer::{EventKind, TraceEvent};
+use std::fmt::Write as _;
+
+struct LaneData {
+    label: String,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+/// Builder: feed it one lane per rank/tenant/worker, then
+/// [`ChromeTrace::render`] the merged timeline.
+#[derive(Default)]
+pub struct ChromeTrace {
+    lanes: Vec<LaneData>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> ChromeTrace {
+        ChromeTrace { lanes: Vec::new() }
+    }
+
+    pub fn add_lane(&mut self, label: &str, events: Vec<TraceEvent>, dropped: u64) {
+        self.lanes.push(LaneData {
+            label: label.to_string(),
+            events,
+            dropped,
+        });
+    }
+
+    /// Span/instant events across all lanes (metadata records not
+    /// counted).
+    pub fn num_events(&self) -> usize {
+        self.lanes.iter().map(|l| l.events.len()).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        for (pid, lane) in self.lanes.iter().enumerate() {
+            push_record(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"name\":{}}}}}",
+                    json_string(&lane.label)
+                ),
+            );
+            if lane.dropped > 0 {
+                push_record(
+                    &mut out,
+                    &mut first,
+                    &format!(
+                        "{{\"name\":\"dropped_events\",\"ph\":\"C\",\"ts\":0,\"pid\":{pid},\
+                         \"tid\":0,\"args\":{{\"dropped\":{}}}}}",
+                        lane.dropped
+                    ),
+                );
+            }
+            for ev in &lane.events {
+                let ts = micros(ev.t_ns);
+                let rec = match ev.kind {
+                    EventKind::Span => format!(
+                        "{{\"name\":{},\"cat\":\"span\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{},\
+                         \"pid\":{pid},\"tid\":0,\"args\":{{\"iteration\":{},\"arg\":{}}}}}",
+                        json_string(ev.name),
+                        micros(ev.dur_ns),
+                        ev.iteration,
+                        ev.arg
+                    ),
+                    EventKind::Instant => format!(
+                        "{{\"name\":{},\"cat\":\"instant\",\"ph\":\"i\",\"ts\":{ts},\"s\":\"p\",\
+                         \"pid\":{pid},\"tid\":0,\"args\":{{\"detail\":{},\"iteration\":{},\
+                         \"arg\":{}}}}}",
+                        json_string(ev.name),
+                        json_string(ev.detail),
+                        ev.iteration,
+                        ev.arg
+                    ),
+                };
+                push_record(&mut out, &mut first, &rec);
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn push_record(out: &mut String, first: &mut bool, rec: &str) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push_str(rec);
+}
+
+/// Nanoseconds → microseconds as a JSON decimal (`1234567` → `"1234.567"`).
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (round-trip checks; no external deps).
+// ---------------------------------------------------------------------------
+
+/// Parsed JSON. Objects keep insertion order as key/value pairs (no
+/// map semantics needed for a parse check).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// First value under `key` when this is an object.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document. Strict enough for round-trip
+/// checking our own exporter output (no surrogate-pair `\u` handling —
+/// the exporter never emits them).
+pub fn parse_json(s: &str) -> Result<JsonValue, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_whitespace())
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::String(self.string()?)),
+            Some(b't') => self.lit("true", JsonValue::Bool(true)),
+            Some(b'f') => self.lit("false", JsonValue::Bool(false)),
+            Some(b'n') => self.lit("null", JsonValue::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| matches!(c, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(JsonValue::Number)
+            .map_err(|_| format!("invalid number `{text}` at offset {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.i += 1; // opening quote
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return String::from_utf8(out).map_err(|e| e.to_string()),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' => out.push(e),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'u' => {
+                            let end = self.i + 4;
+                            let hex = self.b.get(self.i..end).ok_or("short \\u escape")?;
+                            let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+                            let code =
+                                u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            self.i = end;
+                            let ch = char::from_u32(code).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(format!("bad escape at offset {}", self.i)),
+                    }
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.i += 1; // '{'
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(JsonValue::Object(out));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(format!("expected object key at offset {}", self.i));
+            }
+            let k = self.string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err(format!("expected ':' at offset {}", self.i));
+            }
+            self.i += 1;
+            self.skip_ws();
+            let v = self.value()?;
+            out.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Object(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.i += 1; // '['
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(JsonValue::Array(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Array(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &'static str, t: u64, dur: u64, it: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Span,
+            name,
+            detail: "",
+            t_ns: t,
+            dur_ns: dur,
+            iteration: it,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_parse() {
+        let mut ct = ChromeTrace::new();
+        ct.add_lane(
+            "rank 0",
+            vec![
+                span("superstep", 1_000, 2_500_500, 0),
+                span("step_local", 1_200, 2_000_000, 0),
+                TraceEvent {
+                    kind: EventKind::Instant,
+                    name: "supervisor_failure",
+                    detail: "heartbeat",
+                    t_ns: 3_000_000,
+                    dur_ns: 0,
+                    iteration: 7,
+                    arg: 2,
+                },
+            ],
+            3,
+        );
+        ct.add_lane("rank \"1\"\n", vec![span("superstep", 900, 100, 0)], 0);
+        let json = ct.render();
+        let doc = parse_json(&json).expect("exporter output must parse");
+        let events = doc
+            .get("traceEvents")
+            .and_then(|v| v.as_array())
+            .expect("traceEvents array");
+        // 2 process_name + 1 dropped counter + 4 events
+        assert_eq!(events.len(), 7);
+        let spans: Vec<&JsonValue> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3);
+        let ss = spans
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("superstep")
+                    && e.get("pid").and_then(|p| p.as_f64()) == Some(0.0)
+            })
+            .expect("rank 0 superstep span");
+        assert_eq!(ss.get("ts").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(ss.get("dur").and_then(|v| v.as_f64()), Some(2500.5));
+        let inst = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .expect("instant event");
+        assert_eq!(
+            inst.get("args").and_then(|a| a.get("detail")).and_then(|d| d.as_str()),
+            Some("heartbeat")
+        );
+        // the escaped lane label survives the round trip
+        let meta = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                    && e.get("pid").and_then(|p| p.as_f64()) == Some(1.0)
+            })
+            .expect("lane 1 metadata");
+        assert_eq!(
+            meta.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()),
+            Some("rank \"1\"\n")
+        );
+        // dropped-events counter carries the ring's loss count
+        let ctr = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .expect("counter event");
+        assert_eq!(
+            ctr.get("args").and_then(|a| a.get("dropped")).and_then(|d| d.as_f64()),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        assert!(parse_json("{\"a\":").is_err());
+        assert!(parse_json("[1,2,]").is_err());
+        assert!(parse_json("{\"a\":1} tail").is_err());
+        assert!(parse_json("\"unterminated").is_err());
+        assert!(parse_json("{a:1}").is_err());
+    }
+
+    #[test]
+    fn parser_handles_scalars_and_nesting() {
+        let doc = parse_json(" {\"a\": [1, -2.5e1, true, null, \"x\\u0041\"], \"b\": {}} ")
+            .expect("parses");
+        let arr = doc.get("a").and_then(|v| v.as_array()).expect("array");
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-25.0));
+        assert_eq!(arr[2], JsonValue::Bool(true));
+        assert_eq!(arr[3], JsonValue::Null);
+        assert_eq!(arr[4].as_str(), Some("xA"));
+        assert_eq!(doc.get("b"), Some(&JsonValue::Object(Vec::new())));
+    }
+}

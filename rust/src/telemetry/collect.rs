@@ -1,0 +1,153 @@
+//! The [`Collect`] trait: one export path for the platform's stats
+//! structs. Each implementation contributes its fields to a
+//! [`MetricsRegistry`] under a caller-chosen prefix, which is how the
+//! previously disconnected per-subsystem structs (`OpTimers`,
+//! `ExchangeStats`, `BalanceStats`, `GridUpdateStats`, `BackupStats`,
+//! `ServiceStats`, `SupervisorStats`) unify into one flat snapshot.
+//!
+//! The hot paths keep recording into their own typed structs — this
+//! trait runs at export time only, so collecting costs nothing during
+//! a simulation.
+
+use super::metrics::MetricsRegistry;
+
+pub trait Collect {
+    /// Contribute this struct's metrics under `prefix` (e.g.
+    /// `"rank0.sched"`); an empty prefix yields bare names.
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry);
+}
+
+fn key(prefix: &str, rest: &str) -> String {
+    if prefix.is_empty() {
+        rest.to_string()
+    } else {
+        format!("{prefix}.{rest}")
+    }
+}
+
+impl Collect for crate::core::scheduler::OpTimers {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        for (name, total, count) in self.breakdown() {
+            reg.counter_add(&key(prefix, &format!("op.{name}.nanos")), total.as_nanos() as u64);
+            reg.counter_add(&key(prefix, &format!("op.{name}.count")), count);
+        }
+    }
+}
+
+impl Collect for crate::distributed::engine::ExchangeStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "migration_bytes"), self.migration_bytes);
+        reg.counter_add(&key(prefix, "migrated_agents"), self.migrated_agents);
+        reg.counter_add(&key(prefix, "forwarded_agents"), self.forwarded_agents);
+        reg.counter_add(&key(prefix, "aura_bytes_raw"), self.aura_bytes_raw);
+        reg.counter_add(&key(prefix, "aura_bytes_sent"), self.aura_bytes_sent);
+        reg.counter_add(&key(prefix, "ghosts_received"), self.ghosts_received);
+        reg.counter_add(&key(prefix, "messages"), self.messages);
+        reg.counter_add(&key(prefix, "serialize_nanos"), self.serialize_time.as_nanos() as u64);
+        reg.counter_add(
+            &key(prefix, "deserialize_nanos"),
+            self.deserialize_time.as_nanos() as u64,
+        );
+    }
+}
+
+impl Collect for crate::distributed::balance::BalanceStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "rebalances"), self.rebalances);
+        reg.counter_add(&key(prefix, "cut_updates"), self.cut_updates);
+        reg.counter_add(&key(prefix, "rebalance_migrated"), self.rebalance_migrated);
+        reg.counter_add(&key(prefix, "rebalance_forwarded"), self.rebalance_forwarded);
+        reg.counter_add(&key(prefix, "migration_rounds"), self.migration_rounds);
+        reg.counter_add(&key(prefix, "stats_bytes"), self.stats_bytes);
+        reg.gauge_set(&key(prefix, "last_imbalance"), self.last_imbalance);
+        reg.counter_add(&key(prefix, "step_nanos"), self.step_time.as_nanos() as u64);
+    }
+}
+
+impl Collect for crate::env::uniform_grid::GridUpdateStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "full_rebuilds"), self.full_rebuilds);
+        reg.counter_add(&key(prefix, "incremental_updates"), self.incremental_updates);
+        reg.counter_add(&key(prefix, "rebinned_agents"), self.rebinned_agents);
+    }
+}
+
+impl Collect for crate::core::backup::BackupStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "attempts"), self.attempts);
+        reg.counter_add(&key(prefix, "failures"), self.failures);
+        reg.counter_add(&key(prefix, "bytes_written"), self.bytes_written);
+    }
+}
+
+impl Collect for crate::distributed::supervisor::SupervisorStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "supersteps"), self.supersteps);
+        reg.counter_add(&key(prefix, "failures"), self.failures);
+        reg.counter_add(&key(prefix, "recoveries"), self.recoveries);
+        reg.counter_add(&key(prefix, "supersteps_lost"), self.supersteps_lost);
+        reg.counter_add(&key(prefix, "epochs_skipped"), self.epochs_skipped);
+        reg.counter_add(&key(prefix, "threads_abandoned"), self.threads_abandoned);
+        reg.counter_add(
+            &key(prefix, "last_recovery_latency_nanos"),
+            self.last_recovery_latency.as_nanos() as u64,
+        );
+    }
+}
+
+impl Collect for crate::runtime::service::ServiceStats {
+    fn collect(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.counter_add(&key(prefix, "submitted"), self.submitted);
+        reg.counter_add(&key(prefix, "rejected"), self.rejected);
+        reg.counter_add(&key(prefix, "completed"), self.completed);
+        reg.counter_add(&key(prefix, "panics"), self.panics);
+        reg.counter_add(&key(prefix, "restarts"), self.restarts);
+        reg.counter_add(&key(prefix, "deadline_suspensions"), self.deadline_suspensions);
+        reg.counter_add(&key(prefix, "failed"), self.failed);
+        reg.counter_add(&key(prefix, "rounds"), self.rounds);
+        reg.counter_add(&key(prefix, "slices"), self.slices);
+        reg.merge_histogram(&key(prefix, "slice_nanos"), self.slice_histogram());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn optimers_collect_under_prefix() {
+        let mut timers = crate::core::scheduler::OpTimers::default();
+        timers.record("agent_ops", Duration::from_nanos(500));
+        timers.record("agent_ops", Duration::from_nanos(300));
+        timers.record("commit", Duration::from_nanos(100));
+        let mut reg = MetricsRegistry::new();
+        timers.collect("rank0.sched", &mut reg);
+        assert_eq!(reg.counter("rank0.sched.op.agent_ops.nanos"), 800);
+        assert_eq!(reg.counter("rank0.sched.op.agent_ops.count"), 2);
+        assert_eq!(reg.counter("rank0.sched.op.commit.count"), 1);
+    }
+
+    #[test]
+    fn stats_structs_unify_into_one_registry() {
+        let mut reg = MetricsRegistry::new();
+        crate::distributed::engine::ExchangeStats::default().collect("exchange", &mut reg);
+        crate::distributed::balance::BalanceStats::default().collect("balance", &mut reg);
+        crate::env::uniform_grid::GridUpdateStats::default().collect("grid", &mut reg);
+        crate::core::backup::BackupStats::default().collect("backup", &mut reg);
+        crate::distributed::supervisor::SupervisorStats::default().collect("sup", &mut reg);
+        crate::runtime::service::ServiceStats::default().collect("svc", &mut reg);
+        let snapshot = reg.render();
+        for want in [
+            "exchange.migration_bytes 0",
+            "balance.rebalances 0",
+            "grid.full_rebuilds 0",
+            "backup.attempts 0",
+            "sup.recoveries 0",
+            "svc.slices 0",
+            "svc.slice_nanos.p99 0",
+        ] {
+            assert!(snapshot.contains(want), "missing `{want}` in:\n{snapshot}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Deterministic metrics: fixed-bucket histograms and a BTreeMap-keyed
+//! registry of named counters, gauges and histograms.
+//!
+//! Everything here is a pure function of the observed samples: bucket
+//! boundaries are compile-time fixed (so cross-rank merges are exact),
+//! iteration order is the BTreeMap key order (detlint rule
+//! `hash-iter`), and percentiles come from a cumulative bucket walk —
+//! no sorting, no allocation, no data-dependent tie-breaks.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Fixed log2-bucket histogram over `u64` samples (nanoseconds in
+/// practice): bucket `i` counts samples in `[2^i, 2^(i+1))`, with
+/// bucket 0 also holding zeros. 64 buckets cover the whole `u64`
+/// range, so no sample is ever out of range and histograms with the
+/// same layout merge exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; 64],
+    total: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; 64],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        let b = if v == 0 { 0 } else { 63 - v.leading_zeros() as usize };
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile `q` in `(0, 1]`: the upper edge of the bucket holding
+    /// the `ceil(q * count)`-th smallest sample, clamped to the exact
+    /// observed `[min, max]` (which makes single-sample and tail
+    /// queries exact). Returns 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let edge = if b >= 63 { u64::MAX } else { (1u64 << (b + 1)) - 1 };
+                return edge.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Exact merge: both sides share the compile-time bucket layout.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Named metrics with deterministic iteration (BTreeMap keys). The
+/// registry is an export-time structure — hot paths record into their
+/// own typed stats (`OpTimers`, `ExchangeStats`, ...) and contribute
+/// here through the [`crate::telemetry::Collect`] trait when a
+/// snapshot is requested.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Flat text snapshot: one `name value` line per metric, counters
+    /// then gauges then histograms, each group in key order.
+    /// Histograms expand to `.count/.sum/.p50/.p90/.p99`. Identical
+    /// inputs render identical snapshots.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let _ = writeln!(out, "{k} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let _ = writeln!(out, "{k} {v}");
+        }
+        for (k, h) in &self.histograms {
+            let _ = writeln!(out, "{k}.count {}", h.count());
+            let _ = writeln!(out, "{k}.sum {}", h.sum());
+            let _ = writeln!(out, "{k}.p50 {}", h.percentile(0.50));
+            let _ = writeln!(out, "{k}.p90 {}", h.percentile(0.90));
+            let _ = writeln!(out, "{k}.p99 {}", h.percentile(0.99));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn single_sample_percentiles_are_exact() {
+        let mut h = Histogram::new();
+        h.observe(1234);
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 1234);
+        }
+        assert_eq!(h.min(), 1234);
+        assert_eq!(h.max(), 1234);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bucket_bounded() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.observe(v);
+        }
+        let (p50, p90, p99) = (h.percentile(0.5), h.percentile(0.9), h.percentile(0.99));
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= h.max());
+        // the true p50 is 500; the log2 bucket answer is its bucket's
+        // upper edge, within a factor of two
+        assert!((256..=1000).contains(&p50), "p50 = {p50}");
+        assert!(p99 >= 990 / 2, "p99 = {p99}");
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+    }
+
+    #[test]
+    fn zeros_land_in_bucket_zero() {
+        let mut h = Histogram::new();
+        h.observe(0);
+        h.observe(0);
+        h.observe(8);
+        assert!(h.percentile(0.5) <= 1, "p50 lands on bucket 0's upper edge");
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 8);
+    }
+
+    #[test]
+    fn merge_equals_combined_observation() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in [3u64, 17, 900, 4096] {
+            a.observe(v);
+            c.observe(v);
+        }
+        for v in [1u64, 70_000, 5] {
+            b.observe(v);
+            c.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn registry_render_is_sorted_and_stable() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_add("z.late", 1);
+        reg.counter_add("a.early", 2);
+        reg.counter_add("a.early", 3);
+        reg.gauge_set("mid.gauge", 1.5);
+        reg.observe("lat", 100);
+        reg.observe("lat", 200);
+        let r1 = reg.render();
+        let r2 = reg.render();
+        assert_eq!(r1, r2);
+        let a = r1.find("a.early 5").expect("summed counter");
+        let z = r1.find("z.late 1").expect("counter");
+        assert!(a < z, "counters render in key order");
+        assert!(r1.contains("lat.count 2"));
+        assert!(r1.contains("lat.p99 "));
+        assert_eq!(reg.counter("a.early"), 5);
+        assert_eq!(reg.gauge("mid.gauge"), Some(1.5));
+    }
+}

@@ -1,0 +1,436 @@
+//! PR 10: the unified telemetry subsystem — span tracing, a metrics
+//! registry, and Chrome-trace export across the scheduler, the
+//! distributed engine, and the multi-tenant service.
+//!
+//! Submodules:
+//! * [`tracer`]  — per-lane lock-free span ring buffer
+//! * [`metrics`] — fixed-bucket histograms + BTreeMap-keyed registry
+//! * [`collect`] — the [`Collect`] trait unifying the `*Stats` structs
+//! * [`chrome`]  — `chrome://tracing` JSON exporter + JSON reader
+//!
+//! Determinism rules (the module is designed around them):
+//!
+//! * Wall-clock reads live **only** here: [`Telemetry::begin`] /
+//!   [`Telemetry::end`] bracket a phase and *return* the measured
+//!   `Duration`, so the scheduler, engine and service feed their
+//!   `OpTimers`/stats from that return value instead of calling
+//!   `Instant::now` themselves. detlint rule 3 whitelists `telemetry/`
+//!   and keeps flagging clock reads anywhere else.
+//! * Telemetry never influences simulation state: spans are observed
+//!   durations, the ring is bounded (wraparound drops oldest, counted),
+//!   and the sampling stride keys on the iteration counter, not on
+//!   time. `tel_enabled` on ≡ off for agent state, bitwise, at any
+//!   thread or rank count — verified by the tests below.
+//! * One ring per execution lane (main / rank / tenant / supervisor),
+//!   owned `&mut` by its single writer: lock-free with zero atomics,
+//!   the same exclusive-writer protocol as the SoA columns.
+
+pub mod chrome;
+pub mod collect;
+pub mod metrics;
+pub mod tracer;
+
+pub use chrome::{parse_json, ChromeTrace, JsonValue};
+pub use collect::Collect;
+pub use metrics::{Histogram, MetricsRegistry};
+pub use tracer::{EventKind, SpanRing, TraceEvent};
+
+use crate::core::param::Param;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// The process-wide trace epoch: every lane's `t_ns` offsets are
+/// relative to this single `Instant`, so merged timelines (ranks,
+/// tenants, supervisor generations) align without any clock exchange.
+/// Fixed at the first call.
+pub fn clock_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Which timeline a [`Telemetry`] handle writes (one Chrome lane each).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Lane {
+    /// A plain shared-memory simulation.
+    Main,
+    /// A distributed-engine rank.
+    Rank(usize),
+    /// A multi-tenant service tenant.
+    Tenant(u64),
+    /// The self-healing supervisor's own timeline.
+    Supervisor,
+}
+
+impl Lane {
+    /// Human-readable lane label (the Chrome `process_name`).
+    pub fn label(&self) -> String {
+        match self {
+            Lane::Main => "main".to_string(),
+            Lane::Rank(r) => format!("rank {r}"),
+            Lane::Tenant(t) => format!("tenant {t}"),
+            Lane::Supervisor => "supervisor".to_string(),
+        }
+    }
+}
+
+/// An open span: [`Telemetry::begin`] captured the clock,
+/// [`Telemetry::end`] closes it. Plain data — holds no borrow of the
+/// tracer, so the measured region can freely use `&mut self`.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanId {
+    name: &'static str,
+    t0: Instant,
+}
+
+/// A contiguous phase timeline (see [`Telemetry::timeline`]):
+/// consecutive [`Telemetry::phase`] calls tile the interval with
+/// back-to-back spans, so the phase spans sum to the umbrella span by
+/// construction — the property the distributed superstep coverage
+/// check relies on.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimeline {
+    start: Instant,
+    prev: Instant,
+    live: bool,
+}
+
+/// Per-lane tracer handle (see the module docs for determinism rules).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    enabled: bool,
+    stride: u64,
+    lane: Lane,
+    epoch: Instant,
+    ring: SpanRing,
+}
+
+impl Telemetry {
+    /// Build from the `tel_*` Param knobs. Ring memory is reserved only
+    /// when tracing is enabled.
+    pub fn from_param(param: &Param) -> Telemetry {
+        let cap = if param.tel_enabled {
+            param.tel_ring_capacity.min(1 << 24) as usize
+        } else {
+            0
+        };
+        Telemetry {
+            enabled: param.tel_enabled,
+            stride: param.tel_sample_stride.max(1),
+            lane: Lane::Main,
+            epoch: clock_epoch(),
+            ring: SpanRing::new(cap),
+        }
+    }
+
+    /// A disabled tracer (no ring memory; spans still measure time).
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            enabled: false,
+            stride: 1,
+            lane: Lane::Main,
+            epoch: clock_epoch(),
+            ring: SpanRing::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn lane(&self) -> &Lane {
+        &self.lane
+    }
+
+    pub fn set_lane(&mut self, lane: Lane) {
+        self.lane = lane;
+    }
+
+    /// Is iteration `i` recorded under the configured sampling stride?
+    fn sampled(&self, iteration: u64) -> bool {
+        self.enabled && iteration % self.stride == 0
+    }
+
+    /// Open a span. Always reads the clock: the caller's own accounting
+    /// (`OpTimers`, the stats structs) consumes the `Duration` that
+    /// [`Telemetry::end`] returns whether or not tracing is on — this
+    /// is the one place the platform reads `Instant::now` for phase
+    /// timing.
+    pub fn begin(&self, name: &'static str) -> SpanId {
+        SpanId {
+            name,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Close a span and return its measured duration. When enabled and
+    /// `iteration` is on the sampling stride, the span is also pushed
+    /// onto the lane ring (never blocking, never allocating).
+    pub fn end(&mut self, span: SpanId, iteration: u64) -> Duration {
+        let elapsed = span.t0.elapsed();
+        if self.sampled(iteration) {
+            self.ring.push(TraceEvent {
+                kind: EventKind::Span,
+                name: span.name,
+                detail: "",
+                t_ns: self.offset_ns(span.t0),
+                dur_ns: elapsed.as_nanos() as u64,
+                iteration,
+                arg: 0,
+            });
+        }
+        elapsed
+    }
+
+    /// Emit a point event (supervisor transitions, service lifecycle).
+    /// Instants bypass the sampling stride — they are rare and each one
+    /// matters.
+    pub fn instant(&mut self, name: &'static str, detail: &'static str, iteration: u64, arg: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t_ns = self.offset_ns(Instant::now());
+        self.ring.push(TraceEvent {
+            kind: EventKind::Instant,
+            name,
+            detail,
+            t_ns,
+            dur_ns: 0,
+            iteration,
+            arg,
+        });
+    }
+
+    /// Start a contiguous phase timeline for iteration `iteration` (see
+    /// [`PhaseTimeline`]). When tracing is off or the iteration is not
+    /// sampled, the timeline is inert and costs no clock reads.
+    pub fn timeline(&self, iteration: u64) -> PhaseTimeline {
+        if self.sampled(iteration) {
+            let now = Instant::now();
+            PhaseTimeline {
+                start: now,
+                prev: now,
+                live: true,
+            }
+        } else {
+            PhaseTimeline {
+                start: self.epoch,
+                prev: self.epoch,
+                live: false,
+            }
+        }
+    }
+
+    /// Close the phase `name`: the span runs from the previous mark
+    /// (timeline start or the last `phase` call) to now.
+    pub fn phase(&mut self, tl: &mut PhaseTimeline, name: &'static str, iteration: u64) {
+        if !tl.live {
+            return;
+        }
+        let now = Instant::now();
+        self.ring.push(TraceEvent {
+            kind: EventKind::Span,
+            name,
+            detail: "",
+            t_ns: self.offset_ns(tl.prev),
+            dur_ns: now.saturating_duration_since(tl.prev).as_nanos() as u64,
+            iteration,
+            arg: 0,
+        });
+        tl.prev = now;
+    }
+
+    /// Close the umbrella span over the whole timeline (start to now).
+    pub fn finish(&mut self, tl: PhaseTimeline, name: &'static str, iteration: u64) {
+        if !tl.live {
+            return;
+        }
+        let now = Instant::now();
+        self.ring.push(TraceEvent {
+            kind: EventKind::Span,
+            name,
+            detail: "",
+            t_ns: self.offset_ns(tl.start),
+            dur_ns: now.saturating_duration_since(tl.start).as_nanos() as u64,
+            iteration,
+            arg: 0,
+        });
+    }
+
+    /// This lane's events, oldest first (export path).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring.events()
+    }
+
+    /// Events lost to ring wraparound.
+    pub fn dropped_events(&self) -> u64 {
+        self.ring.dropped_events()
+    }
+
+    pub fn clear(&mut self) {
+        self.ring.clear();
+    }
+
+    fn offset_ns(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::SphericalAgent;
+    use crate::core::behavior::FnBehavior;
+    use crate::core::math::Real3;
+    use crate::core::simulation::Simulation;
+    use crate::distributed::engine::DistributedEngine;
+
+    fn jiggle_sim(p: Param) -> Simulation {
+        let mut sim = Simulation::new(p);
+        sim.remove_agent_op("mechanical_forces"); // independent agents
+        for i in 0..24 {
+            let mut a = SphericalAgent::new(Real3::new(
+                (i % 8) as f64 * 12.0 - 40.0,
+                (i / 8) as f64 * 12.0 - 10.0,
+                0.0,
+            ));
+            a.base.behaviors.push(FnBehavior::new("jiggle", |a, ctx| {
+                let step = ctx.rng.uniform3(-1.0, 1.0);
+                let p = a.position();
+                a.set_position(p + step);
+            }));
+            sim.add_agent(Box::new(a));
+        }
+        sim
+    }
+
+    fn shared_mem_snapshot(threads: usize, tel: bool) -> Vec<(u64, [f64; 3])> {
+        let mut p = Param::default();
+        p.num_threads = threads;
+        p.seed = 99;
+        p.tel_enabled = tel;
+        p.tel_ring_capacity = 16; // tiny: exercises live wraparound too
+        let mut sim = jiggle_sim(p);
+        sim.simulate(8);
+        if tel {
+            assert!(!sim.tel.events().is_empty(), "enabled tracer must record spans");
+        } else {
+            assert!(sim.tel.events().is_empty(), "disabled tracer must stay empty");
+        }
+        let mut out: Vec<(u64, [f64; 3])> = Vec::new();
+        sim.rm
+            .for_each_agent(|_h, a| out.push((a.uid(), a.position().0)));
+        out.sort_by_key(|e| e.0);
+        out
+    }
+
+    #[test]
+    fn tracing_on_off_is_bitwise_identical_at_1_2_8_threads() {
+        let baseline = shared_mem_snapshot(1, false);
+        for threads in [1usize, 2, 8] {
+            let off = shared_mem_snapshot(threads, false);
+            let on = shared_mem_snapshot(threads, true);
+            assert_eq!(off, baseline, "[{threads}t] thread-count determinism");
+            assert_eq!(on, baseline, "[{threads}t] telemetry must not perturb state");
+        }
+    }
+
+    fn dist_snapshot(ranks: usize, tel: bool) -> Vec<(u64, [f64; 3], f64)> {
+        let mut p = Param::default();
+        p.seed = 41;
+        p.tel_enabled = tel;
+        p.tel_ring_capacity = 256;
+        let mut engine = DistributedEngine::new(&jiggle_sim, p, ranks, 1);
+        engine.simulate(6).expect("traced smoke run");
+        if tel {
+            assert!(
+                engine.workers.iter().all(|w| !w.sim.tel.events().is_empty()),
+                "every rank lane must record superstep spans"
+            );
+        }
+        engine.state_snapshot()
+    }
+
+    #[test]
+    fn tracing_on_off_is_bitwise_identical_at_1_2_4_ranks() {
+        let baseline = dist_snapshot(1, false);
+        for ranks in [1usize, 2, 4] {
+            let off = dist_snapshot(ranks, false);
+            let on = dist_snapshot(ranks, true);
+            assert_eq!(off, baseline, "[{ranks}r] rank-count determinism");
+            assert_eq!(on, baseline, "[{ranks}r] telemetry must not perturb state");
+        }
+    }
+
+    #[test]
+    fn sampling_stride_skips_iterations_but_still_times() {
+        let mut p = Param::default();
+        p.tel_enabled = true;
+        p.tel_sample_stride = 4;
+        let mut tel = Telemetry::from_param(&p);
+        for it in 0..8u64 {
+            let sp = tel.begin("op");
+            let _elapsed = tel.end(sp, it);
+        }
+        let evs = tel.events();
+        assert_eq!(evs.len(), 2, "iterations 0 and 4 only");
+        assert_eq!(evs[0].iteration, 0);
+        assert_eq!(evs[1].iteration, 4);
+    }
+
+    #[test]
+    fn disabled_tracer_measures_but_records_nothing() {
+        let mut tel = Telemetry::disabled();
+        let sp = tel.begin("op");
+        let _elapsed = tel.end(sp, 0); // duration still usable by OpTimers
+        tel.instant("x", "", 0, 0);
+        let mut tl = tel.timeline(0);
+        tel.phase(&mut tl, "p", 0);
+        tel.finish(tl, "total", 0);
+        assert!(tel.events().is_empty());
+        assert_eq!(tel.dropped_events(), 0);
+    }
+
+    #[test]
+    fn timeline_phases_tile_the_umbrella_span() {
+        let mut p = Param::default();
+        p.tel_enabled = true;
+        let mut tel = Telemetry::from_param(&p);
+        let mut tl = tel.timeline(0);
+        tel.phase(&mut tl, "a", 0);
+        tel.phase(&mut tl, "b", 0);
+        tel.finish(tl, "total", 0);
+        let evs = tel.events();
+        assert_eq!(evs.len(), 3);
+        let find = |n: &str| evs.iter().find(|e| e.name == n).expect("span present");
+        let (a, b, total) = (find("a"), find("b"), find("total"));
+        assert_eq!(a.t_ns + a.dur_ns, b.t_ns, "phases are contiguous");
+        assert_eq!(total.t_ns, a.t_ns, "umbrella starts with the first phase");
+        assert!(
+            a.dur_ns + b.dur_ns <= total.dur_ns,
+            "phases never exceed the umbrella"
+        );
+    }
+
+    #[test]
+    fn lane_labels_and_chrome_export() {
+        let mut p = Param::default();
+        p.tel_enabled = true;
+        let mut tel = Telemetry::from_param(&p);
+        tel.set_lane(Lane::Supervisor);
+        assert_eq!(tel.lane().label(), "supervisor");
+        assert_eq!(Lane::Rank(3).label(), "rank 3");
+        assert_eq!(Lane::Tenant(9).label(), "tenant 9");
+        let sp = tel.begin("recover");
+        let _elapsed = tel.end(sp, 1);
+        tel.instant("supervisor_failure", "heartbeat", 1, 2);
+        let mut ct = ChromeTrace::new();
+        ct.add_lane(&tel.lane().label(), tel.events(), tel.dropped_events());
+        let doc = parse_json(&ct.render()).expect("exported trace must parse");
+        let n = doc
+            .get("traceEvents")
+            .and_then(|v| v.as_array())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        assert_eq!(n, 3, "metadata + span + instant");
+    }
+}

@@ -1,0 +1,167 @@
+//! Per-lane span ring buffer.
+//!
+//! One [`SpanRing`] per execution lane (main simulation, distributed
+//! rank, service tenant, supervisor), owned `&mut` by exactly one
+//! writer — the same exclusive-writer discipline the SoA columns use,
+//! which makes the ring lock-free without a single atomic. The hot
+//! path never blocks and never reallocates: the buffer is preallocated
+//! at construction and wraparound overwrites the oldest event, counted
+//! in [`SpanRing::dropped_events`].
+
+/// Event kinds on a lane timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A duration span (`begin`/`end` pair), e.g. one scheduler phase.
+    Span,
+    /// A point event, e.g. a supervisor failure/recovery transition.
+    Instant,
+}
+
+/// One trace event. Every field is `Copy` (`&'static str` names, plain
+/// integers), so pushing an event allocates nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    /// Span/instant name (op name, superstep phase, transition).
+    pub name: &'static str,
+    /// Secondary static tag — the failure kind on supervisor instants;
+    /// `""` when unused.
+    pub detail: &'static str,
+    /// Start offset from the process trace epoch, nanoseconds.
+    pub t_ns: u64,
+    /// Span duration in nanoseconds; `0` for instants.
+    pub dur_ns: u64,
+    /// Iteration / superstep / round counter at emit time.
+    pub iteration: u64,
+    /// Free integer payload (backoff rounds, restored epoch, ...).
+    pub arg: u64,
+}
+
+/// Fixed-capacity ring of [`TraceEvent`]s.
+#[derive(Debug, Clone)]
+pub struct SpanRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        SpanRing {
+            buf: Vec::with_capacity(capacity),
+            cap: capacity,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append an event. On a full ring the oldest event is overwritten
+    /// and counted as dropped; a zero-capacity ring drops everything.
+    /// Never blocks, never reallocates (the buffer only ever grows up
+    /// to the capacity reserved at construction).
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest-to-newest (copies out; export path only).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// Events lost to wraparound (or refused by a zero-capacity ring).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Span,
+            name: "t",
+            detail: "",
+            t_ns: t,
+            dur_ns: 1,
+            iteration: 0,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_and_counts() {
+        let mut ring = SpanRing::new(4);
+        for t in 0..7 {
+            ring.push(ev(t));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped_events(), 3);
+        let ts: Vec<u64> = ring.events().iter().map(|e| e.t_ns).collect();
+        assert_eq!(ts, vec![3, 4, 5, 6], "oldest events dropped first");
+    }
+
+    #[test]
+    fn no_reallocation_past_capacity() {
+        let mut ring = SpanRing::new(8);
+        let cap_before = ring.buf.capacity();
+        for t in 0..1000 {
+            ring.push(ev(t));
+        }
+        assert_eq!(ring.buf.capacity(), cap_before, "hot path must not reallocate");
+        assert_eq!(ring.len(), 8);
+        assert_eq!(ring.dropped_events(), 992);
+    }
+
+    #[test]
+    fn zero_capacity_ring_drops_everything() {
+        let mut ring = SpanRing::new(0);
+        ring.push(ev(0));
+        ring.push(ev(1));
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped_events(), 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut ring = SpanRing::new(2);
+        for t in 0..5 {
+            ring.push(ev(t));
+        }
+        ring.clear();
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped_events(), 0);
+        ring.push(ev(9));
+        assert_eq!(ring.events()[0].t_ns, 9);
+    }
+}
